@@ -1,0 +1,101 @@
+//! Elasticity demo: a bursty workload drives the elastic worker service —
+//! watch task counts follow queue depth up and back down (§3.2.2).
+//!
+//! ```sh
+//! cargo run --release --example elastic_scaling
+//! ```
+
+use reactive_liquid::actor::system::ActorSystem;
+use reactive_liquid::config::{ElasticConfig, RouterPolicy};
+use reactive_liquid::messaging::{Broker, Producer};
+use reactive_liquid::metrics::PipelineMetrics;
+use reactive_liquid::processing::job::Job;
+use reactive_liquid::processing::reactive::ReactiveJob;
+use reactive_liquid::reactive::state::OffsetStore;
+use reactive_liquid::reactive::supervision::Supervisor;
+use reactive_liquid::util::clock::real_clock;
+use reactive_liquid::vml::virtual_topic::VirtualTopic;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let broker = Broker::new();
+    broker.create_topic("load", 3);
+    let clock = real_clock();
+    let metrics = PipelineMetrics::new(clock.clone());
+    let system = ActorSystem::new();
+    let supervisor = Supervisor::new(clock.clone(), Duration::from_millis(100));
+    let offsets = Arc::new(OffsetStore::in_memory());
+    let vt = VirtualTopic::new("load", &broker, &system, clock.clone(), metrics.clone(), offsets.clone(), (2, 1, 4));
+
+    // Each message takes ~2 ms to "process" — queues form fast.
+    let job = Job::from_fn("slow", "load", None, |_env| {
+        std::thread::sleep(Duration::from_millis(2));
+        vec![]
+    });
+    let elastic = ElasticConfig {
+        min_workers: 1,
+        max_workers: 10,
+        high_watermark: 32,
+        low_watermark: 4,
+        check_interval: Duration::from_millis(100),
+        cooldown: Duration::from_millis(200),
+    };
+    let rj = ReactiveJob::start(
+        &system, &broker, job, &vt, None, &supervisor, elastic,
+        RouterPolicy::ShortestQueue, 16, 1, clock.clone(), metrics.clone(), offsets,
+    );
+    supervisor.start();
+
+    let producer = Producer::new(&broker, "load", clock.clone());
+    println!("t(s)  phase     tasks  queued  processed");
+    let start = std::time::Instant::now();
+    let log = |phase: &str, rj: &ReactiveJob| {
+        println!(
+            "{:>4.1}  {:8}  {:>5}  {:>6}  {:>9}",
+            start.elapsed().as_secs_f64(),
+            phase,
+            rj.pool.task_count(),
+            rj.router.total_depth(),
+            rj.total_processed(),
+        );
+    };
+
+    // Phase 1: idle.
+    std::thread::sleep(Duration::from_millis(500));
+    log("idle", &rj);
+    let baseline_tasks = rj.pool.task_count();
+
+    // Phase 2: burst — 4000 messages at once.
+    for i in 0..4000u64 {
+        producer.send(None, i.to_le_bytes().to_vec());
+    }
+    let mut peak_tasks = 0;
+    for _ in 0..40 {
+        std::thread::sleep(Duration::from_millis(250));
+        peak_tasks = peak_tasks.max(rj.pool.task_count());
+        log("burst", &rj);
+        if rj.total_processed() >= 4000 {
+            break;
+        }
+    }
+
+    // Phase 3: drain back down.
+    for _ in 0..20 {
+        std::thread::sleep(Duration::from_millis(300));
+        log("drain", &rj);
+        if rj.pool.task_count() <= elastic.min_workers {
+            break;
+        }
+    }
+
+    println!("\nscale history: {:?}", rj.elastic.history().iter().map(|(_, n)| *n).collect::<Vec<_>>());
+    println!("baseline {} → peak {} → final {}", baseline_tasks, peak_tasks, rj.pool.task_count());
+    assert!(peak_tasks > baseline_tasks, "elastic service scaled out under load");
+
+    supervisor.stop();
+    rj.stop();
+    vt.stop();
+    system.shutdown();
+    println!("elastic_scaling OK");
+}

@@ -1,0 +1,92 @@
+"""Pallas kernel: one weighted Lloyd (k-means) step over micro-cluster
+centers — TCMM's macro-clustering inner loop.
+
+Grid sweeps point blocks; each step assigns its block to the nearest
+centroid (MXU-shaped distance tile, like `nearest.py`) and accumulates
+weighted one-hot partial sums into the output refs. Centroid count C is
+small (≤ a few dozen macro-clusters), so centroids and the accumulators sit
+in VMEM for the whole sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Points processed per grid step.
+P_BLK = 128
+
+
+def _kmeans_kernel(points_ref, weights_ref, centroids_ref, sums_ref, counts_ref):
+    pb = pl.program_id(0)
+
+    points = points_ref[...]  # [P_BLK, D]
+    weights = weights_ref[...]  # [P_BLK]
+    centroids = centroids_ref[...]  # [C, D]
+    c = centroids.shape[0]
+
+    p2 = jnp.sum(points * points, axis=1, keepdims=True)
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]
+    cross = jnp.dot(points, centroids.T, preferred_element_type=jnp.float32)
+    d2 = p2 - 2.0 * cross + c2  # [P_BLK, C]
+    assign = jnp.argmin(d2, axis=1)  # [P_BLK]
+
+    onehot = (assign[:, None] == jnp.arange(c)[None, :]).astype(jnp.float32)
+    w = weights[:, None] * onehot  # [P_BLK, C]
+    # MXU-shaped accumulation: [C, P_BLK] @ [P_BLK, D].
+    part_sums = jnp.dot(w.T, points, preferred_element_type=jnp.float32)  # [C, D]
+    part_counts = jnp.sum(w, axis=0)  # [C]
+
+    @pl.when(pb == 0)
+    def _init():
+        sums_ref[...] = part_sums
+        counts_ref[...] = part_counts
+
+    @pl.when(pb != 0)
+    def _acc():
+        sums_ref[...] += part_sums
+        counts_ref[...] += part_counts
+
+
+@jax.jit
+def kmeans_step(points, weights, centroids):
+    """One weighted Lloyd step.
+
+    points f32[K, D] (K % P_BLK == 0; padding rows must carry weight 0),
+    weights f32[K], centroids f32[C, D]. Returns (new_centroids f32[C, D],
+    counts f32[C]); empty centroids keep their previous position, matching
+    `ref.kmeans_step_ref`.
+    """
+    k, d = points.shape
+    c, _ = centroids.shape
+    assert k % P_BLK == 0, f"K={k} not a multiple of {P_BLK}"
+
+    # Mean-center (translation-invariant) to dodge f32 cancellation in the
+    # MXU distance expansion — see nearest.py.
+    shift = jnp.mean(centroids, axis=0, keepdims=True)
+    points = points - shift
+    centroids = centroids - shift
+
+    sums, counts = pl.pallas_call(
+        _kmeans_kernel,
+        grid=(k // P_BLK,),
+        in_specs=[
+            pl.BlockSpec((P_BLK, d), lambda pb: (pb, 0)),
+            pl.BlockSpec((P_BLK,), lambda pb: (pb,)),
+            pl.BlockSpec((c, d), lambda pb: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, d), lambda pb: (0, 0)),
+            pl.BlockSpec((c,), lambda pb: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, d), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, weights, centroids)
+
+    # Divide by the true counts (guarded against 0/0, not clamped — tiny
+    # weight sums must still normalize exactly).
+    safe = jnp.where(counts > 0, counts, 1.0)
+    new_centroids = jnp.where(counts[:, None] > 0, sums / safe[:, None], centroids)
+    return new_centroids + shift, counts

@@ -1,0 +1,116 @@
+"""Pallas kernel: nearest-valid-center search (TCMM's hot-spot).
+
+Layout strategy (see DESIGN.md §Hardware-Adaptation): the point block
+stays resident in VMEM while the kernel sweeps center blocks along the
+grid; the distance tile is a (B_BLK × K_BLK) matmul-shaped computation that
+targets the MXU via the `p·cᵀ` cross term, and the running (min, argmin)
+pair lives in the output refs — the classic streaming-argmin pattern that
+avoids materializing the full B×K distance matrix in HBM.
+
+Executed with `interpret=True` everywhere in this repo (CPU PJRT cannot
+run Mosaic custom-calls); on a real TPU the same BlockSpecs express the
+HBM↔VMEM schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INVALID_PENALTY
+
+#: Block sizes. B_BLK×K_BLK f32 distance tile = 128×128×4 B = 64 KiB —
+#: comfortably inside a TPU core's ~16 MiB VMEM together with the point
+#: and center blocks (128×2 f32 each) and double-buffering headroom.
+B_BLK = 128
+K_BLK = 128
+
+
+def _nearest_kernel(points_ref, centers_ref, valid_ref, idx_ref, dist_ref):
+    """Grid = (K // K_BLK,). One step: fold one center block into the
+    running argmin held in the output refs."""
+    kb = pl.program_id(0)
+
+    points = points_ref[...]  # [B_BLK, D] — same block every step
+    centers = centers_ref[...]  # [K_BLK, D] — this step's block
+    valid = valid_ref[...]  # [K_BLK]
+
+    # Squared distances for the tile, MXU-shaped: p·cᵀ is the matmul.
+    p2 = jnp.sum(points * points, axis=1, keepdims=True)  # [B_BLK, 1]
+    c2 = jnp.sum(centers * centers, axis=1)[None, :]  # [1, K_BLK]
+    cross = jnp.dot(points, centers.T, preferred_element_type=jnp.float32)
+    d2 = p2 - 2.0 * cross + c2
+    d2 = d2 + (1.0 - valid)[None, :] * INVALID_PENALTY
+
+    local_idx = jnp.argmin(d2, axis=1).astype(jnp.int32)  # [B_BLK]
+    local_min = jnp.min(d2, axis=1)  # [B_BLK]
+    global_idx = local_idx + kb * K_BLK
+
+    @pl.when(kb == 0)
+    def _init():
+        idx_ref[...] = global_idx
+        dist_ref[...] = local_min
+
+    @pl.when(kb != 0)
+    def _fold():
+        better = local_min < dist_ref[...]
+        idx_ref[...] = jnp.where(better, global_idx, idx_ref[...])
+        dist_ref[...] = jnp.where(better, local_min, dist_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def nearest(points, centers, valid):
+    """Nearest valid center per point via the Pallas kernel.
+
+    Shapes must be multiples of the block sizes (the AOT wrapper pads):
+    points f32[B, D], centers f32[K, D], valid f32[K] with B % B_BLK == 0
+    and K % K_BLK == 0. Returns (idx s32[B], dist f32[B]) with `dist` the
+    Euclidean (not squared) distance, matching `ref.nearest_ref`.
+    """
+    b, d = points.shape
+    k, _ = centers.shape
+    assert b % B_BLK == 0, f"B={b} not a multiple of {B_BLK}"
+    assert k % K_BLK == 0, f"K={k} not a multiple of {K_BLK}"
+    n_kb = k // K_BLK
+
+    # Mean-center both operands (translation-invariant): GPS coordinates
+    # carry a large common offset (~116°) that the ‖p‖²−2p·c+‖c‖² MXU
+    # formulation would otherwise cancel catastrophically in f32.
+    shift = jnp.mean(points, axis=0, keepdims=True)
+    points = points - shift
+    centers = centers - shift
+
+    def run_block(pts_block):
+        idx, d2min = pl.pallas_call(
+            _nearest_kernel,
+            grid=(n_kb,),
+            in_specs=[
+                # Point block: resident across the whole K sweep.
+                pl.BlockSpec((B_BLK, d), lambda kb: (0, 0)),
+                # Center block: marches along K with the grid.
+                pl.BlockSpec((K_BLK, d), lambda kb: (kb, 0)),
+                pl.BlockSpec((K_BLK,), lambda kb: (kb,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((B_BLK,), lambda kb: (0,)),
+                pl.BlockSpec((B_BLK,), lambda kb: (0,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((B_BLK,), jnp.int32),
+                jax.ShapeDtypeStruct((B_BLK,), jnp.float32),
+            ],
+            interpret=True,
+        )(pts_block, centers, valid)
+        return idx, jnp.sqrt(jnp.maximum(d2min, 0.0))
+
+    if b == B_BLK:
+        return run_block(points)
+    # Fold larger batches block-by-block (unrolled at trace time — B is
+    # static in the AOT artifact).
+    idxs, dists = [], []
+    for i in range(b // B_BLK):
+        idx, dist = run_block(jax.lax.dynamic_slice_in_dim(points, i * B_BLK, B_BLK))
+        idxs.append(idx)
+        dists.append(dist)
+    return jnp.concatenate(idxs), jnp.concatenate(dists)

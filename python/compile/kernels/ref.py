@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(`python/tests/`) sweeps shapes and dtypes with hypothesis and asserts the
+Pallas (interpret-mode) outputs match these to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+#: Additive penalty that excludes masked-out centers from the argmin.
+#: Large enough to dominate any squared distance between WGS84 coordinates
+#: (and any padded-zero center), small enough to stay exact in f32.
+INVALID_PENALTY = 1e30
+
+
+def nearest_ref(points, centers, valid):
+    """Nearest valid center per point.
+
+    Args:
+      points:  f32[B, D]
+      centers: f32[K, D]
+      valid:   f32[K] — 1.0 for live centers, 0.0 for padding.
+
+    Returns:
+      (idx s32[B], dist f32[B]): argmin index into `centers` and the
+      Euclidean distance to it. If no center is valid, idx is the argmin
+      of the penalty row (0) and dist is sqrt(INVALID_PENALTY)-ish; the
+      rust caller masks that case out before use.
+    """
+    # Exact (oracle) formulation: direct differences, no cancellation.
+    diff = points[:, None, :] - centers[None, :, :]  # [B, K, D]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [B, K]
+    d2 = d2 + (1.0 - valid)[None, :] * INVALID_PENALTY
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist = jnp.sqrt(jnp.maximum(jnp.min(d2, axis=1), 0.0))
+    return idx, dist
+
+
+def kmeans_step_ref(points, weights, centroids):
+    """One weighted Lloyd iteration.
+
+    Args:
+      points:    f32[K, D] — micro-cluster centers.
+      weights:   f32[K] — micro-cluster sizes (0 for padding).
+      centroids: f32[C, D] — current macro centroids.
+
+    Returns:
+      (new_centroids f32[C, D], counts f32[C]): weighted means of the
+      assigned points; centroids with no mass keep their old position.
+    """
+    diff = points[:, None, :] - centroids[None, :, :]  # [K, C, D]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [K, C]
+    assign = jnp.argmin(d2, axis=1)  # [K]
+    # Weighted scatter via one-hot matmul (fusable, MXU-friendly).
+    oh = (assign[:, None] == jnp.arange(centroids.shape[0])[None, :]).astype(points.dtype)
+    w = weights[:, None] * oh  # [K, C]
+    counts = jnp.sum(w, axis=0)  # [C]
+    sums = w.T @ points  # [C, D]
+    safe = jnp.where(counts > 0, counts, 1.0)
+    new_centroids = jnp.where(counts[:, None] > 0, sums / safe[:, None], centroids)
+    return new_centroids, counts

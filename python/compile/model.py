@@ -1,0 +1,36 @@
+"""L2 — the TCMM compute graph, composed from the L1 Pallas kernels.
+
+This is the layer `aot.py` lowers to HLO text. Two entry points:
+
+- ``tcmm_assign``: batched nearest-micro-cluster assignment (the
+  micro-clustering job's hot loop);
+- ``macro_kmeans_step``: one weighted Lloyd iteration over micro-cluster
+  centers (the macro-clustering job's hot loop).
+
+Both take *statically padded* shapes — the rust caller pads points/centers
+to the artifact's (B, K) and masks with ``valid``/zero weights.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import kmeans, nearest
+
+
+def tcmm_assign(points, centers, valid):
+    """(idx s32[B], dist f32[B]) — nearest valid center per point.
+
+    Wraps the Pallas kernel so additional graph-level logic (dtype
+    hygiene, future decay terms) lives above the kernel, not in it.
+    """
+    points = points.astype(jnp.float32)
+    centers = centers.astype(jnp.float32)
+    valid = valid.astype(jnp.float32)
+    return nearest.nearest(points, centers, valid)
+
+
+def macro_kmeans_step(points, weights, centroids):
+    """(new_centroids f32[C, D], counts f32[C]) — one weighted Lloyd step."""
+    points = points.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    centroids = centroids.astype(jnp.float32)
+    return kmeans.kmeans_step(points, weights, centroids)

@@ -1,0 +1,167 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps the padded shapes and data distributions; fixed cases
+pin down the edge behaviours (all-invalid masks, ties, padding rows).
+"""
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import kmeans, nearest
+from compile.kernels.ref import kmeans_step_ref, nearest_ref
+
+B_BLK = nearest.B_BLK
+K_BLK = nearest.K_BLK
+
+
+def coords(shape):
+    """Finite f32 coordinate arrays in the kernels' deployment envelope: a
+    large common offset (up to ±200, like GPS longitudes) plus a local
+    spread of a few degrees. The kernels mean-center internally, so the
+    offset cancels; testing unbounded spreads would only measure the f32
+    cancellation floor of the MXU distance expansion, not kernel bugs."""
+    return st.integers(-200, 200).flatmap(
+        lambda off: hnp.arrays(
+            np.float32,
+            shape,
+            elements=st.floats(
+                float(off) - 2.0, float(off) + 2.0, width=32, allow_nan=False
+            ),
+        )
+    )
+
+
+# --- nearest ---------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.data(),
+    b_mult=st.integers(1, 2),
+    k_mult=st.integers(1, 2),
+)
+def test_nearest_matches_ref(data, b_mult, k_mult):
+    b, k = B_BLK * b_mult, K_BLK * k_mult
+    pts = data.draw(coords((b, 2)))
+    ctr = data.draw(coords((k, 2)))
+    n_valid = data.draw(st.integers(1, k))
+    valid = np.zeros(k, np.float32)
+    valid[:n_valid] = 1.0
+
+    idx, dist = nearest.nearest(jnp.array(pts), jnp.array(ctr), jnp.array(valid))
+    ref_idx, ref_dist = nearest_ref(jnp.array(pts), jnp.array(ctr), jnp.array(valid))
+
+    # atol bounded by f32 cancellation of the MXU expansion at the test's
+    # local spread (±2°): worst case ≈ ulp(|c|²)/(2·dist) ≈ a few 1e-3.
+    np.testing.assert_allclose(dist, ref_dist, rtol=1e-4, atol=5e-3)
+    # Argmin indices may differ only on (near-)ties: compare by distance.
+    d_via_idx = np.linalg.norm(pts - ctr[np.asarray(idx)], axis=1)
+    d_via_ref = np.linalg.norm(pts - ctr[np.asarray(ref_idx)], axis=1)
+    np.testing.assert_allclose(d_via_idx, d_via_ref, rtol=1e-3, atol=5e-3)
+    # Chosen centers must be valid.
+    assert valid[np.asarray(idx)].all()
+
+
+def test_nearest_basic_exact():
+    pts = np.zeros((B_BLK, 2), np.float32)
+    pts[0] = [9.0, 1.0]
+    pts[1] = [0.1, 0.1]
+    ctr = np.zeros((K_BLK * 2, 2), np.float32)
+    ctr[0] = [0.0, 0.0]
+    ctr[1] = [10.0, 0.0]
+    # A closer but INVALID center — must be ignored.
+    ctr[2] = [9.0, 1.0]
+    valid = np.zeros(K_BLK * 2, np.float32)
+    valid[:2] = 1.0
+
+    idx, dist = nearest.nearest(jnp.array(pts), jnp.array(ctr), jnp.array(valid))
+    assert int(idx[0]) == 1
+    assert int(idx[1]) == 0
+    np.testing.assert_allclose(float(dist[0]), np.sqrt(2.0), rtol=1e-5)
+    np.testing.assert_allclose(float(dist[1]), np.sqrt(0.02), rtol=1e-4, atol=1e-6)
+
+
+def test_nearest_center_in_second_block():
+    """The argmin must fold across K blocks (global index offset)."""
+    pts = np.full((B_BLK, 2), 50.0, np.float32)
+    k = K_BLK * 2
+    ctr = np.zeros((k, 2), np.float32)
+    target = K_BLK + 7  # lives in the second block
+    ctr[target] = [50.0, 50.0]
+    valid = np.ones(k, np.float32)
+
+    idx, dist = nearest.nearest(jnp.array(pts), jnp.array(ctr), jnp.array(valid))
+    assert (np.asarray(idx) == target).all()
+    np.testing.assert_allclose(np.asarray(dist), 0.0, atol=1e-3)
+
+
+def test_nearest_matches_ref_on_clustered_data():
+    rng = np.random.default_rng(0)
+    hot = rng.uniform([116.0, 39.6], [116.8, 40.2], size=(8, 2)).astype(np.float32)
+    pts = (hot[rng.integers(0, 8, B_BLK)] + rng.normal(0, 0.005, (B_BLK, 2))).astype(
+        np.float32
+    )
+    ctr = np.zeros((K_BLK, 2), np.float32)
+    ctr[:8] = hot
+    valid = np.zeros(K_BLK, np.float32)
+    valid[:8] = 1.0
+    idx, dist = nearest.nearest(jnp.array(pts), jnp.array(ctr), jnp.array(valid))
+    ref_idx, ref_dist = nearest_ref(jnp.array(pts), jnp.array(ctr), jnp.array(valid))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+    np.testing.assert_allclose(dist, ref_dist, rtol=1e-4, atol=1e-5)
+
+
+# --- kmeans_step -----------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.data(),
+    k_mult=st.integers(1, 2),
+    c=st.integers(1, 16),
+)
+def test_kmeans_step_matches_ref(data, k_mult, c):
+    k = kmeans.P_BLK * k_mult
+    pts = data.draw(coords((k, 2)))
+    cen = data.draw(coords((c, 2)))
+    wts = data.draw(
+        hnp.arrays(np.float32, (k,), elements=st.floats(0.0, 100.0, width=32))
+    )
+
+    new_c, counts = kmeans.kmeans_step(jnp.array(pts), jnp.array(wts), jnp.array(cen))
+    ref_c, ref_counts = kmeans_step_ref(jnp.array(pts), jnp.array(wts), jnp.array(cen))
+
+    np.testing.assert_allclose(counts, ref_counts, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(new_c, ref_c, rtol=1e-3, atol=1e-3)
+
+
+def test_kmeans_step_two_blobs():
+    k = kmeans.P_BLK
+    pts = np.zeros((k, 2), np.float32)
+    wts = np.zeros(k, np.float32)
+    pts[0:4] = [[0.0, 0.0], [0.2, 0.0], [10.0, 10.0], [10.2, 10.0]]
+    wts[0:4] = [1.0, 1.0, 3.0, 1.0]
+    cen = np.array([[1.0, 1.0], [9.0, 9.0]], np.float32)
+
+    new_c, counts = kmeans.kmeans_step(jnp.array(pts), jnp.array(wts), jnp.array(cen))
+    # Counts are weighted: padding rows (weight 0) add no mass anywhere.
+    np.testing.assert_allclose(np.asarray(counts), [2.0, 4.0])
+    np.testing.assert_allclose(np.asarray(new_c)[1], [10.05, 10.0], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_c)[0], [0.1, 0.0], atol=1e-5)
+
+
+def test_kmeans_step_empty_centroid_keeps_position():
+    k = kmeans.P_BLK
+    pts = np.zeros((k, 2), np.float32)
+    wts = np.zeros(k, np.float32)
+    pts[0] = [0.0, 0.0]
+    wts[0] = 5.0
+    cen = np.array([[0.1, 0.0], [99.0, 99.0]], np.float32)
+    new_c, counts = kmeans.kmeans_step(jnp.array(pts), jnp.array(wts), jnp.array(cen))
+    assert float(counts[1]) == pytest.approx(0.0)
+    np.testing.assert_allclose(np.asarray(new_c)[1], [99.0, 99.0])
+    np.testing.assert_allclose(np.asarray(new_c)[0], [0.0, 0.0], atol=1e-6)

@@ -1,0 +1,93 @@
+"""L2 model + AOT lowering tests: shapes, dtypes, and HLO-text emission."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_tcmm_assign_shapes_and_dtypes():
+    b, k = aot.NEAREST_B, aot.NEAREST_K
+    pts = jnp.zeros((b, 2), jnp.float32)
+    ctr = jnp.ones((k, 2), jnp.float32)
+    valid = jnp.ones((k,), jnp.float32)
+    idx, dist = model.tcmm_assign(pts, ctr, valid)
+    assert idx.shape == (b,) and idx.dtype == jnp.int32
+    assert dist.shape == (b,) and dist.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(dist), np.sqrt(2.0), rtol=1e-5)
+
+
+def test_tcmm_assign_accepts_f64_inputs():
+    b, k = aot.NEAREST_B, aot.NEAREST_K
+    idx, dist = model.tcmm_assign(
+        jnp.zeros((b, 2), jnp.float64),
+        jnp.zeros((k, 2), jnp.float64),
+        jnp.ones((k,), jnp.float64),
+    )
+    assert idx.dtype == jnp.int32
+    assert dist.dtype == jnp.float32
+
+
+def test_macro_kmeans_step_shapes():
+    k, c = aot.MACRO_K, aot.MACRO_C
+    pts = jnp.zeros((k, 2), jnp.float32)
+    wts = jnp.zeros((k,), jnp.float32)
+    cen = jnp.arange(c * 2, dtype=jnp.float32).reshape(c, 2)
+    new_c, counts = model.macro_kmeans_step(pts, wts, cen)
+    assert new_c.shape == (c, 2)
+    assert counts.shape == (c,)
+    # All weights zero: centroids unchanged.
+    np.testing.assert_allclose(np.asarray(new_c), np.asarray(cen), atol=1e-6)
+
+
+def test_lowering_produces_hlo_text():
+    text = aot.to_hlo_text(aot.lower_nearest())
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Tuple return (rust side unwraps a tuple).
+    assert "tuple" in text.lower()
+
+    text2 = aot.to_hlo_text(aot.lower_kmeans())
+    assert "HloModule" in text2
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    import sys
+    from unittest import mock
+
+    out = tmp_path / "artifacts"
+    with mock.patch.object(sys, "argv", ["aot", "--out", str(out)]):
+        aot.main()
+    manifest = (out / "manifest.txt").read_text()
+    assert "nearest" in manifest and "kmeans" in manifest
+    for line in manifest.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        name, file, meta = line.split("\t")
+        assert (out / file).is_file(), f"missing artifact {file}"
+        assert "=" in meta
+
+
+def test_compiled_execution_matches_eager():
+    """The lowered computation must agree with eager execution — this is
+    the exact graph rust loads."""
+    b, k = aot.NEAREST_B, aot.NEAREST_K
+    rng = np.random.default_rng(1)
+    pts = (116.4 + rng.normal(0, 0.01, (b, 2))).astype(np.float32)
+    ctr = np.zeros((k, 2), np.float32)
+    ctr[:4] = 116.4 + rng.normal(0, 0.01, (4, 2))
+    valid = np.zeros(k, np.float32)
+    valid[:4] = 1.0
+
+    eager_idx, eager_dist = model.tcmm_assign(
+        jnp.array(pts), jnp.array(ctr), jnp.array(valid)
+    )
+    compiled = jax.jit(model.tcmm_assign).lower(
+        jax.ShapeDtypeStruct((b, 2), jnp.float32),
+        jax.ShapeDtypeStruct((k, 2), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+    ).compile()
+    comp_idx, comp_dist = compiled(jnp.array(pts), jnp.array(ctr), jnp.array(valid))
+    np.testing.assert_array_equal(np.asarray(eager_idx), np.asarray(comp_idx))
+    np.testing.assert_allclose(np.asarray(eager_dist), np.asarray(comp_dist), rtol=1e-6)

@@ -1,0 +1,31 @@
+//! §5 ablation — the future-work message distribution scheduler.
+//!
+//! The paper's conclusion: "the need for a message distribution scheduler
+//! algorithm which distributes the messages among the tasks is crucial to
+//! minimize the completion time of the messages." This bench compares the
+//! baseline round-robin with join-the-shortest-queue and the
+//! completion-time-aware policy, on the paper's own workload.
+
+use reactive_liquid::experiment::figures::{ablation_router, FigureOpts};
+
+fn main() {
+    let opts = FigureOpts::default();
+    std::fs::create_dir_all(&opts.out_dir).unwrap();
+    println!("== Ablation: VML router policy (the §5 scheduler) ==");
+    let results = ablation_router(&opts);
+
+    println!("\npolicy            total     mean        p95");
+    for (policy, r) in &results {
+        println!(
+            "{:16}  {:>7}  {:>8.2}ms  {:>8.2}ms",
+            policy.label(),
+            r.total_processed,
+            r.completion.mean().as_secs_f64() * 1e3,
+            r.completion.quantile(0.95).as_secs_f64() * 1e3,
+        );
+    }
+    let rr = results[0].1.completion.mean().as_secs_f64();
+    let ct = results[2].1.completion.mean().as_secs_f64();
+    println!("\ncompletion-time/round-robin mean completion ratio: {:.2}", ct / rr);
+    println!("CSV in {}/ablation_router.csv", opts.out_dir.display());
+}

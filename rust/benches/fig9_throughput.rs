@@ -1,0 +1,43 @@
+//! Fig. 9 — per-second throughput of Liquid (x) paired with Reactive
+//! Liquid (y), with the linear trendline and R².
+//!
+//! Expected shape (paper §4.4.1): trendline above y=x (reactive wins),
+//! R² > 0.9 for the paper's runs — our R² depends on scheduler noise at
+//! this compressed time scale, so we report it rather than gate on it.
+
+use reactive_liquid::config::Architecture;
+use reactive_liquid::experiment::figures::{fig9_pair, FigureOpts};
+use reactive_liquid::experiment::run_experiment;
+
+fn main() {
+    let opts = FigureOpts::default();
+    std::fs::create_dir_all(&opts.out_dir).unwrap();
+    println!("== Fig 9: throughput pairing + trendline ==");
+
+    let l3 = run_experiment(&opts.cfg(Architecture::Liquid { tasks_per_job: 3 }));
+    println!("fig9 {}", l3.summary());
+    let l6 = run_experiment(&opts.cfg(Architecture::Liquid { tasks_per_job: 6 }));
+    println!("fig9 {}", l6.summary());
+    let rl = run_experiment(&opts.cfg(Architecture::Reactive));
+    println!("fig9 {}", rl.summary());
+
+    for (name, base) in [("9a", &l3), ("9b", &l6)] {
+        let out = opts.out_dir.join(format!("fig{name}_{}_vs_reactive.csv", base.label));
+        let fit = fig9_pair(base, &rl, &out).expect("write fig9 csv");
+        println!(
+            "\nFig {name}: reactive ≈ {:.3}·{} + {:.1}   (R² = {:.3}, n = {})",
+            fit.slope, base.label, fit.intercept, fit.r_squared, fit.n
+        );
+        // Position vs y=x at the midpoint of the base series: above ⇒ the
+        // reactive total leads throughout the run.
+        let mid_x = base.total_processed as f64 / 2.0;
+        let trend_at_mid = fit.slope * mid_x + fit.intercept;
+        println!(
+            "  trendline at x={:.0}: y={:.0} ({}) — paper: above y=x, R² > 0.9",
+            mid_x,
+            trend_at_mid,
+            if trend_at_mid > mid_x { "ABOVE y=x ✓" } else { "below y=x ✗" }
+        );
+    }
+    println!("\nCSV series in {}/fig9*.csv", opts.out_dir.display());
+}

@@ -1,0 +1,141 @@
+//! L3 hot-path microbenchmarks (the §Perf baseline/after numbers in
+//! EXPERIMENTS.md come from here).
+//!
+//! Measures, per layer-3 component: broker publish + consume, router
+//! decision cost per policy, actor mailbox round-trip, TCMM CPU nearest
+//! scan, and the AOT kernel execution latency (when artifacts exist).
+
+use reactive_liquid::actor::mailbox::Mailbox;
+use reactive_liquid::config::RouterPolicy;
+use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::tcmm::backend::{CpuBackend, NearestBackend, XlaBackend};
+use reactive_liquid::util::prng::Pcg32;
+use reactive_liquid::vml::envelope::Envelope;
+use reactive_liquid::vml::router::{RouteTarget, TaskRouter};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+    // Warm-up.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = start.elapsed();
+    let per = dt.as_secs_f64() / iters as f64;
+    println!(
+        "{name:42} {:>10.0} ops/s   {:>9.3} µs/op",
+        1.0 / per,
+        per * 1e6
+    );
+}
+
+struct NullTarget {
+    depth: AtomicUsize,
+}
+
+impl RouteTarget for NullTarget {
+    fn deliver(
+        &self,
+        _env: Envelope,
+    ) -> Result<(), (reactive_liquid::actor::mailbox::SendError, Envelope)> {
+        Ok(())
+    }
+    fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+    fn est_proc_secs(&self) -> f64 {
+        0.0008
+    }
+}
+
+fn main() {
+    println!("== L3 hot-path microbenchmarks ==\n");
+
+    // Broker publish (keyless round-robin).
+    {
+        let broker = Broker::new();
+        broker.create_topic("b", 3);
+        let t = broker.topic("b").unwrap();
+        let payload = vec![0u8; 20];
+        bench("broker publish (20B, 3 partitions)", 200_000, || {
+            t.publish(Message::new(None, payload.clone(), 0));
+        });
+    }
+
+    // Broker poll throughput (batch 32).
+    {
+        let broker = Broker::new();
+        broker.create_topic("b", 3);
+        let t = broker.topic("b").unwrap();
+        // Enough for warm-up + measured iterations at batch 32.
+        for i in 0..3_600_000u64 {
+            t.publish(Message::new(None, vec![(i % 256) as u8], 0));
+        }
+        let consumer = broker.subscribe("b", "g");
+        bench("broker poll batch=32 (per message)", 100_000, || {
+            let got = consumer.poll(32);
+            assert!(!got.is_empty());
+        });
+    }
+
+    // Router decision + deliver per policy.
+    for policy in
+        [RouterPolicy::RoundRobin, RouterPolicy::ShortestQueue, RouterPolicy::CompletionTime]
+    {
+        let router = TaskRouter::new(policy);
+        let targets: Vec<Arc<dyn RouteTarget>> = (0..12)
+            .map(|i| Arc::new(NullTarget { depth: AtomicUsize::new(i * 3) }) as Arc<dyn RouteTarget>)
+            .collect();
+        router.set_targets(targets);
+        let msg = Message::new(None, vec![0u8; 20], 0);
+        bench(&format!("router route ({}, 12 targets)", policy.label()), 500_000, || {
+            router
+                .route(Envelope::new(msg.clone(), 0, 0, Duration::ZERO))
+                .unwrap();
+        });
+    }
+
+    // Mailbox send+recv round trip (same thread).
+    {
+        let mb: Mailbox<u64> = Mailbox::new(1024);
+        bench("mailbox send+recv (same thread)", 500_000, || {
+            mb.send(1).unwrap();
+            let _ = mb.recv_timeout(Duration::from_millis(1)).unwrap();
+        });
+    }
+
+    // TCMM nearest: CPU scan at K=64 and K=256, batch 128.
+    {
+        let mut rng = Pcg32::new(3);
+        let points: Vec<[f32; 2]> =
+            (0..128).map(|_| [116.0 + rng.f32() * 0.8, 39.6 + rng.f32() * 0.6]).collect();
+        for k in [64usize, 256] {
+            let centers: Vec<[f32; 2]> =
+                (0..k).map(|_| [116.0 + rng.f32() * 0.8, 39.6 + rng.f32() * 0.6]).collect();
+            bench(&format!("tcmm nearest CPU (B=128, K={k})"), 2_000, || {
+                let got = CpuBackend.nearest(&points, &centers);
+                assert_eq!(got.len(), 128);
+            });
+        }
+
+        // XLA kernel (AOT artifact) if present.
+        match XlaBackend::load() {
+            Ok(xla) => {
+                let centers: Vec<[f32; 2]> =
+                    (0..256).map(|_| [116.0 + rng.f32() * 0.8, 39.6 + rng.f32() * 0.6]).collect();
+                bench("tcmm nearest XLA (B=128, K=256)", 2_000, || {
+                    let got = xla.nearest(&points, &centers);
+                    assert_eq!(got.len(), 128);
+                });
+            }
+            Err(e) => println!("tcmm nearest XLA: skipped ({e})"),
+        }
+    }
+
+    println!("\nperf_hotpath done");
+}

@@ -1,0 +1,132 @@
+//! Request–reply over fire-and-forget messaging (the ask pattern).
+
+use super::system::ActorRef;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A one-shot reply slot the responder fills in.
+pub struct Reply<R> {
+    inner: Arc<(Mutex<Option<R>>, Condvar)>,
+}
+
+impl<R> Clone for Reply<R> {
+    fn clone(&self) -> Self {
+        Reply { inner: self.inner.clone() }
+    }
+}
+
+impl<R> Reply<R> {
+    pub fn new() -> Self {
+        Reply { inner: Arc::new((Mutex::new(None), Condvar::new())) }
+    }
+
+    /// Fulfil the reply (first write wins).
+    pub fn send(&self, value: R) {
+        let (slot, cv) = &*self.inner;
+        let mut s = slot.lock().unwrap();
+        if s.is_none() {
+            *s = Some(value);
+            cv.notify_all();
+        }
+    }
+
+    /// Block until fulfilled or timeout.
+    pub fn wait(&self, timeout: Duration) -> Option<R> {
+        let (slot, cv) = &*self.inner;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut s = slot.lock().unwrap();
+        loop {
+            if let Some(v) = s.take() {
+                return Some(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _r) = cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+}
+
+impl<R> Default for Reply<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Send a request built from a fresh [`Reply`] and wait for the answer.
+///
+/// ```ignore
+/// let depth = ask(&worker, |reply| WorkerMsg::GetDepth(reply), timeout);
+/// ```
+pub fn ask<M: Send + 'static, R>(
+    target: &ActorRef<M>,
+    make: impl FnOnce(Reply<R>) -> M,
+    timeout: Duration,
+) -> Option<R> {
+    let reply = Reply::new();
+    let msg = make(reply.clone());
+    if target.tell(msg).is_err() {
+        return None;
+    }
+    reply.wait(timeout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::system::{Actor, ActorSystem, Ctx};
+
+    enum Msg {
+        Add(u64),
+        Get(Reply<u64>),
+    }
+
+    struct Summer {
+        total: u64,
+    }
+
+    impl Actor for Summer {
+        type Msg = Msg;
+        fn receive(&mut self, msg: Msg, _ctx: &mut Ctx<Msg>) {
+            match msg {
+                Msg::Add(v) => self.total += v,
+                Msg::Get(reply) => reply.send(self.total),
+            }
+        }
+    }
+
+    #[test]
+    fn ask_round_trip() {
+        let sys = ActorSystem::new();
+        let r = sys.spawn("summer", 32, || Summer { total: 0 });
+        r.tell(Msg::Add(3)).unwrap();
+        r.tell(Msg::Add(4)).unwrap();
+        let total = ask(&r, Msg::Get, Duration::from_secs(2));
+        assert_eq!(total, Some(7));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let reply: Reply<u32> = Reply::new();
+        assert_eq!(reply.wait(Duration::from_millis(20)), None);
+    }
+
+    #[test]
+    fn first_write_wins() {
+        let reply = Reply::new();
+        reply.send(1);
+        reply.send(2);
+        assert_eq!(reply.wait(Duration::from_millis(10)), Some(1));
+    }
+
+    #[test]
+    fn ask_dead_actor_is_none() {
+        let sys = ActorSystem::new();
+        let r = sys.spawn("tmp", 8, || Summer { total: 0 });
+        sys.remove("tmp");
+        assert_eq!(ask(&r, Msg::Get, Duration::from_millis(50)), None);
+    }
+}

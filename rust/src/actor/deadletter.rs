@@ -1,0 +1,63 @@
+//! Dead-letter accounting.
+//!
+//! Messages sent to closed mailboxes are counted per destination so
+//! operators can see where flow is being dropped during failures. (The
+//! mailbox itself counts rejects; this registry aggregates across actors.)
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Aggregated dead-letter counts keyed by actor path.
+pub struct DeadLetters {
+    counts: Mutex<HashMap<String, u64>>,
+}
+
+impl DeadLetters {
+    pub fn new() -> Self {
+        DeadLetters { counts: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn record(&self, path: &str) {
+        *self.counts.lock().unwrap().entry(path.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn count(&self, path: &str) -> u64 {
+        self.counts.lock().unwrap().get(path).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.lock().unwrap().values().sum()
+    }
+
+    /// Snapshot sorted by count descending.
+    pub fn top(&self, n: usize) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> =
+            self.counts.lock().unwrap().iter().map(|(k, &c)| (k.clone(), c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+}
+
+impl Default for DeadLetters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_top() {
+        let dl = DeadLetters::new();
+        dl.record("a");
+        dl.record("a");
+        dl.record("b");
+        assert_eq!(dl.count("a"), 2);
+        assert_eq!(dl.count("missing"), 0);
+        assert_eq!(dl.total(), 3);
+        assert_eq!(dl.top(1), vec![("a".to_string(), 2)]);
+    }
+}

@@ -1,0 +1,267 @@
+//! Bounded, depth-instrumented MPSC mailbox.
+//!
+//! Built on `Mutex<VecDeque>` + two condvars (not-empty / not-full). The
+//! depth is mirrored into an atomic so the elastic-worker service and
+//! routers can read queue lengths without touching the lock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendError {
+    /// Mailbox closed (actor stopped): message went to dead letters.
+    Closed,
+    /// Mailbox full (only from `try_send`).
+    Full,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// Closed and drained.
+    Closed,
+    /// Timed out with no message.
+    Timeout,
+}
+
+pub struct Mailbox<M> {
+    queue: Mutex<VecDeque<M>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    depth: AtomicUsize,
+    closed: AtomicBool,
+    /// Messages rejected because the mailbox was closed.
+    dead: AtomicUsize,
+}
+
+impl<M> Mailbox<M> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Mailbox {
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+            depth: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            dead: AtomicUsize::new(0),
+        }
+    }
+
+    /// Current queue depth (lock-free).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Relaxed)
+    }
+
+    /// Messages dropped because the mailbox was closed.
+    pub fn dead_count(&self) -> usize {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Blocking send with backpressure; fails only if closed.
+    pub fn send(&self, msg: M) -> Result<(), SendError> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                self.dead.fetch_add(1, Ordering::Relaxed);
+                return Err(SendError::Closed);
+            }
+            if q.len() < self.capacity {
+                q.push_back(msg);
+                self.depth.store(q.len(), Ordering::Relaxed);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.not_full.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        }
+    }
+
+    /// Non-blocking send.
+    pub fn try_send(&self, msg: M) -> Result<(), SendError> {
+        let mut q = self.queue.lock().unwrap();
+        if self.is_closed() {
+            self.dead.fetch_add(1, Ordering::Relaxed);
+            return Err(SendError::Closed);
+        }
+        if q.len() >= self.capacity {
+            return Err(SendError::Full);
+        }
+        q.push_back(msg);
+        self.depth.store(q.len(), Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive with timeout. After close, drains remaining
+    /// messages before reporting `Closed`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<M, RecvError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(m) = q.pop_front() {
+                self.depth.store(q.len(), Ordering::Relaxed);
+                self.not_full.notify_one();
+                return Ok(m);
+            }
+            if self.is_closed() {
+                return Err(RecvError::Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Drain up to `max` queued messages without blocking.
+    pub fn drain(&self, max: usize) -> Vec<M> {
+        let mut q = self.queue.lock().unwrap();
+        let n = max.min(q.len());
+        let out: Vec<M> = q.drain(..n).collect();
+        self.depth.store(q.len(), Ordering::Relaxed);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Discard everything queued (crash semantics). Returns the number of
+    /// messages dropped.
+    pub fn purge(&self) -> usize {
+        let mut q = self.queue.lock().unwrap();
+        let n = q.len();
+        q.clear();
+        self.depth.store(0, Ordering::Relaxed);
+        self.not_full.notify_all();
+        n
+    }
+
+    /// Close: senders fail fast, receivers drain then stop.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Reopen a closed mailbox (used when restarting an actor in place).
+    pub fn reopen(&self) {
+        self.closed.store(false, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let mb = Mailbox::new(10);
+        for i in 0..5 {
+            mb.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(mb.recv_timeout(Duration::from_millis(10)), Ok(i));
+        }
+        assert_eq!(mb.recv_timeout(Duration::from_millis(1)), Err(RecvError::Timeout));
+    }
+
+    #[test]
+    fn try_send_full() {
+        let mb = Mailbox::new(2);
+        mb.try_send(1).unwrap();
+        mb.try_send(2).unwrap();
+        assert_eq!(mb.try_send(3), Err(SendError::Full));
+        assert_eq!(mb.depth(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let mb = Mailbox::new(4);
+        mb.send("a").unwrap();
+        mb.close();
+        assert_eq!(mb.send("b"), Err(SendError::Closed));
+        assert_eq!(mb.dead_count(), 1);
+        assert_eq!(mb.recv_timeout(Duration::from_millis(1)), Ok("a"));
+        assert_eq!(mb.recv_timeout(Duration::from_millis(1)), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn blocking_send_applies_backpressure() {
+        let mb = Arc::new(Mailbox::new(1));
+        mb.send(0u32).unwrap();
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            // Blocks until the consumer below makes room.
+            mb2.send(1u32).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(mb.depth(), 1, "producer still blocked");
+        assert_eq!(mb.recv_timeout(Duration::from_millis(100)), Ok(0));
+        t.join().unwrap();
+        assert_eq!(mb.recv_timeout(Duration::from_millis(100)), Ok(1));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let mb = Arc::new(Mailbox::new(128));
+        let mb2 = mb.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000u32 {
+                mb2.send(i).unwrap();
+            }
+        });
+        let mut got = vec![];
+        while got.len() < 1000 {
+            if let Ok(v) = mb.recv_timeout(Duration::from_millis(100)) {
+                got.push(v);
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_bulk() {
+        let mb = Mailbox::new(100);
+        for i in 0..10 {
+            mb.send(i).unwrap();
+        }
+        let d = mb.drain(4);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+        assert_eq!(mb.depth(), 6);
+        let rest = mb.drain(100);
+        assert_eq!(rest.len(), 6);
+    }
+
+    #[test]
+    fn purge_discards_queued() {
+        let mb = Mailbox::new(8);
+        mb.send(1).unwrap();
+        mb.send(2).unwrap();
+        assert_eq!(mb.purge(), 2);
+        assert_eq!(mb.depth(), 0);
+        assert_eq!(mb.recv_timeout(Duration::from_millis(1)), Err(RecvError::Timeout));
+    }
+
+    #[test]
+    fn reopen_after_close() {
+        let mb = Mailbox::new(2);
+        mb.close();
+        assert!(mb.send(1).is_err());
+        mb.reopen();
+        assert!(mb.send(1).is_ok());
+    }
+}

@@ -1,0 +1,29 @@
+//! Asynchronous messaging layer — a thread-backed actor runtime
+//! (the paper's §3.2.4; substitute for Akka).
+//!
+//! Provides exactly the reactive-manifesto properties the paper relies on:
+//!
+//! - **message-driven**: components communicate only through typed,
+//!   depth-instrumented [`Mailbox`]es (the elastic-worker service scales on
+//!   mailbox depth, §3.2.2);
+//! - **isolation**: each actor runs on its own thread; a panic is contained
+//!   to the actor, reported to failure hooks, and never unwinds into
+//!   neighbours (let-it-crash);
+//! - **location transparency**: [`ActorRef`] is a clonable address; senders
+//!   cannot tell where (which thread / simulated node) the actor runs, and
+//!   a restarted actor keeps its address *and* its unprocessed mailbox;
+//! - **flow control**: mailboxes are bounded; `tell` applies backpressure,
+//!   `try_tell` surfaces overload to the caller.
+//!
+//! Supervision *policy* lives in [`crate::reactive::supervision`]; this
+//! module only exposes the mechanism (failure hooks + [`ActorSystem::restart`]).
+
+pub mod ask;
+pub mod deadletter;
+pub mod mailbox;
+pub mod system;
+
+pub use ask::{ask, Reply};
+pub use deadletter::DeadLetters;
+pub use mailbox::{Mailbox, RecvError, SendError};
+pub use system::{Actor, ActorRef, ActorSystem, Ctx};

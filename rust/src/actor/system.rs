@@ -1,0 +1,469 @@
+//! Actor trait, references, and the system that hosts actor threads.
+
+use super::mailbox::{Mailbox, RecvError, SendError};
+use crate::log_debug;
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A typed actor. Implementations are plain structs; a fresh instance is
+/// built by the spawn factory on every (re)start — the let-it-crash pattern
+/// wipes in-memory state, and stateful actors recover via the state
+/// management service (event sourcing), exactly as §2.2 prescribes.
+pub trait Actor: Send + 'static {
+    type Msg: Send + 'static;
+
+    /// Called once per (re)start before the first message.
+    fn pre_start(&mut self, _ctx: &mut Ctx<Self::Msg>) {}
+
+    /// Handle one message. Panicking here marks the actor failed and
+    /// triggers the system's failure hooks (supervision).
+    fn receive(&mut self, msg: Self::Msg, ctx: &mut Ctx<Self::Msg>);
+
+    /// Called on graceful stop (not on panic).
+    fn post_stop(&mut self) {}
+}
+
+/// Execution context handed to the actor.
+pub struct Ctx<M: Send + 'static> {
+    /// This actor's own address.
+    pub self_ref: ActorRef<M>,
+    /// Restart count (0 on first incarnation).
+    pub incarnation: u64,
+    stop: bool,
+}
+
+impl<M: Send + 'static> Ctx<M> {
+    /// Ask the runtime to stop this actor after the current message.
+    pub fn stop(&mut self) {
+        self.stop = true;
+    }
+}
+
+/// Clonable, location-transparent actor address.
+pub struct ActorRef<M> {
+    pub path: Arc<String>,
+    mailbox: Arc<Mailbox<M>>,
+}
+
+impl<M> Clone for ActorRef<M> {
+    fn clone(&self) -> Self {
+        ActorRef { path: self.path.clone(), mailbox: self.mailbox.clone() }
+    }
+}
+
+impl<M: Send + 'static> ActorRef<M> {
+    /// Fire-and-forget with backpressure (blocks while the mailbox is full).
+    pub fn tell(&self, msg: M) -> Result<(), SendError> {
+        self.mailbox.send(msg)
+    }
+
+    /// Non-blocking send.
+    pub fn try_tell(&self, msg: M) -> Result<(), SendError> {
+        self.mailbox.try_send(msg)
+    }
+
+    /// Mailbox depth — the signal the elastic-worker service scales on.
+    pub fn mailbox_depth(&self) -> usize {
+        self.mailbox.depth()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.mailbox.is_closed()
+    }
+}
+
+/// Internal control handle for one hosted actor (type-erased).
+trait Cell: Send + Sync {
+    fn stop(&self);
+    /// Crash semantics: discard queued messages, then stop.
+    fn crash(&self);
+    fn join(&self);
+    fn is_running(&self) -> bool;
+    fn mailbox_depth(&self) -> usize;
+}
+
+struct TypedCell<A: Actor> {
+    path: Arc<String>,
+    mailbox: Arc<Mailbox<A::Msg>>,
+    factory: Box<dyn Fn() -> A + Send + Sync>,
+    running: Arc<AtomicBool>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    incarnation: AtomicU64,
+    hooks: FailureHooks,
+}
+
+type FailureHooks = Arc<RwLock<Vec<Box<dyn Fn(&str) + Send + Sync>>>>;
+
+impl<A: Actor> TypedCell<A> {
+    fn launch(self: &Arc<Self>) {
+        let cell = self.clone();
+        let incarnation = self.incarnation.fetch_add(1, Ordering::SeqCst);
+        self.running.store(true, Ordering::SeqCst);
+        self.mailbox.reopen();
+        let handle = std::thread::Builder::new()
+            .name(format!("actor:{}", self.path))
+            .spawn(move || cell.run(incarnation))
+            .expect("spawn actor thread");
+        *self.handle.lock().unwrap() = Some(handle);
+    }
+
+    fn run(self: Arc<Self>, incarnation: u64) {
+        let mut ctx = Ctx {
+            self_ref: ActorRef { path: self.path.clone(), mailbox: self.mailbox.clone() },
+            incarnation,
+            stop: false,
+        };
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut actor = (self.factory)();
+            actor.pre_start(&mut ctx);
+            loop {
+                if ctx.stop {
+                    actor.post_stop();
+                    return;
+                }
+                match self.mailbox.recv_timeout(Duration::from_millis(20)) {
+                    Ok(msg) => actor.receive(msg, &mut ctx),
+                    Err(RecvError::Timeout) => continue,
+                    Err(RecvError::Closed) => {
+                        actor.post_stop();
+                        return;
+                    }
+                }
+            }
+        }));
+        self.running.store(false, Ordering::SeqCst);
+        if result.is_err() {
+            log_debug!("actor", "'{}' crashed (incarnation {incarnation})", self.path);
+            // Notify supervision. The mailbox stays open so queued and
+            // in-flight messages survive the restart.
+            let hooks = self.hooks.read().unwrap();
+            for hook in hooks.iter() {
+                hook(&self.path);
+            }
+        }
+    }
+}
+
+impl<A: Actor> Cell for TypedCell<A> {
+    fn stop(&self) {
+        self.mailbox.close();
+    }
+
+    fn crash(&self) {
+        self.mailbox.close(); // stop accepting first…
+        self.mailbox.purge(); // …then drop what was queued
+    }
+
+    fn join(&self) {
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
+    fn mailbox_depth(&self) -> usize {
+        self.mailbox.depth()
+    }
+}
+
+/// The actor system: spawns actors on dedicated threads, tracks them by
+/// path, reports failures to registered hooks, and restarts failed actors
+/// in place (same path, same mailbox).
+pub struct ActorSystem {
+    cells: RwLock<HashMap<String, Arc<dyn Cell>>>,
+    restarters: RwLock<HashMap<String, Box<dyn Fn() + Send + Sync>>>,
+    hooks: FailureHooks,
+}
+
+impl ActorSystem {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ActorSystem {
+            cells: RwLock::new(HashMap::new()),
+            restarters: RwLock::new(HashMap::new()),
+            hooks: Arc::new(RwLock::new(Vec::new())),
+        })
+    }
+
+    /// Register a failure hook: called with the actor path whenever an
+    /// actor panics. The supervision service registers itself here.
+    pub fn on_failure(&self, hook: impl Fn(&str) + Send + Sync + 'static) {
+        self.hooks.write().unwrap().push(Box::new(hook));
+    }
+
+    /// Spawn an actor. `factory` builds a fresh instance per incarnation.
+    pub fn spawn<A: Actor>(
+        self: &Arc<Self>,
+        path: &str,
+        capacity: usize,
+        factory: impl Fn() -> A + Send + Sync + 'static,
+    ) -> ActorRef<A::Msg> {
+        let cell = Arc::new(TypedCell {
+            path: Arc::new(path.to_string()),
+            mailbox: Arc::new(Mailbox::new(capacity)),
+            factory: Box::new(factory),
+            running: Arc::new(AtomicBool::new(false)),
+            handle: Mutex::new(None),
+            incarnation: AtomicU64::new(0),
+            hooks: self.hooks.clone(),
+        });
+        cell.launch();
+        let r = ActorRef { path: cell.path.clone(), mailbox: cell.mailbox.clone() };
+        {
+            let c = cell.clone();
+            self.restarters
+                .write()
+                .unwrap()
+                .insert(path.to_string(), Box::new(move || c.launch()));
+        }
+        self.cells.write().unwrap().insert(path.to_string(), cell);
+        r
+    }
+
+    /// Restart a failed (or stopped) actor in place: fresh instance, same
+    /// path and mailbox. No-op if it is still running or unknown.
+    pub fn restart(&self, path: &str) -> bool {
+        let running = {
+            let cells = self.cells.read().unwrap();
+            match cells.get(path) {
+                Some(c) => c.is_running(),
+                None => return false,
+            }
+        };
+        if running {
+            return false;
+        }
+        if let Some(r) = self.restarters.read().unwrap().get(path) {
+            r();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// True if the actor exists and its thread is alive.
+    pub fn is_running(&self, path: &str) -> bool {
+        self.cells.read().unwrap().get(path).map(|c| c.is_running()).unwrap_or(false)
+    }
+
+    pub fn mailbox_depth(&self, path: &str) -> Option<usize> {
+        self.cells.read().unwrap().get(path).map(|c| c.mailbox_depth())
+    }
+
+    /// Stop one actor (graceful: drains mailbox, runs `post_stop`).
+    pub fn stop(&self, path: &str) {
+        let cell = self.cells.read().unwrap().get(path).cloned();
+        if let Some(c) = cell {
+            c.stop();
+            c.join();
+        }
+    }
+
+    /// Remove an actor entirely (graceful stop + forget: queued messages
+    /// are processed first). Its `ActorRef`s go dead.
+    pub fn remove(&self, path: &str) {
+        self.stop(path);
+        self.cells.write().unwrap().remove(path);
+        self.restarters.write().unwrap().remove(path);
+    }
+
+    /// Kill an actor as if its host died: queued messages are DROPPED,
+    /// the in-flight message (if any) finishes (a thread cannot be safely
+    /// torn mid-message), then the actor is forgotten.
+    pub fn kill(&self, path: &str) {
+        let cell = self.cells.read().unwrap().get(path).cloned();
+        if let Some(c) = cell {
+            c.crash();
+            c.join();
+        }
+        self.cells.write().unwrap().remove(path);
+        self.restarters.write().unwrap().remove(path);
+    }
+
+    /// All registered actor paths.
+    pub fn paths(&self) -> Vec<String> {
+        self.cells.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Stop every actor (graceful), in no particular order.
+    pub fn shutdown(&self) {
+        let cells: Vec<Arc<dyn Cell>> = self.cells.read().unwrap().values().cloned().collect();
+        for c in &cells {
+            c.stop();
+        }
+        for c in &cells {
+            c.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    struct Counter {
+        hits: Arc<AtomicUsize>,
+    }
+
+    impl Actor for Counter {
+        type Msg = u32;
+
+        fn receive(&mut self, msg: u32, ctx: &mut Ctx<u32>) {
+            if msg == u32::MAX {
+                ctx.stop();
+                return;
+            }
+            if msg == 666 {
+                panic!("poison message");
+            }
+            self.hits.fetch_add(msg as usize, Ordering::SeqCst);
+        }
+    }
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    #[test]
+    fn processes_messages() {
+        let sys = ActorSystem::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let r = sys.spawn("counter", 64, move || Counter { hits: h.clone() });
+        for _ in 0..10 {
+            r.tell(2).unwrap();
+        }
+        assert!(wait_until(Duration::from_secs(2), || hits.load(Ordering::SeqCst) == 20));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn panic_is_contained_and_hooked() {
+        let sys = ActorSystem::new();
+        let failed = Arc::new(Mutex::new(Vec::<String>::new()));
+        let f = failed.clone();
+        sys.on_failure(move |path| f.lock().unwrap().push(path.to_string()));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let r = sys.spawn("fragile", 64, move || Counter { hits: h.clone() });
+        r.tell(666).unwrap();
+        assert!(wait_until(Duration::from_secs(2), || !sys.is_running("fragile")));
+        assert_eq!(failed.lock().unwrap().as_slice(), &["fragile".to_string()]);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn restart_keeps_address_and_mailbox() {
+        let sys = ActorSystem::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let r = sys.spawn("phoenix", 64, move || Counter { hits: h.clone() });
+        r.tell(666).unwrap(); // crash
+        assert!(wait_until(Duration::from_secs(2), || !sys.is_running("phoenix")));
+        // Queue messages while down — the mailbox survives.
+        r.tell(5).unwrap();
+        r.tell(7).unwrap();
+        assert!(sys.restart("phoenix"));
+        assert!(wait_until(Duration::from_secs(2), || hits.load(Ordering::SeqCst) == 12));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn restart_noop_when_running() {
+        let sys = ActorSystem::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        sys.spawn("alive", 8, move || Counter { hits: h.clone() });
+        assert!(wait_until(Duration::from_secs(1), || sys.is_running("alive")));
+        assert!(!sys.restart("alive"));
+        assert!(!sys.restart("nonexistent"));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn ctx_stop_runs_post_stop_and_exits() {
+        struct Stopper {
+            stopped: Arc<AtomicUsize>,
+        }
+        impl Actor for Stopper {
+            type Msg = ();
+            fn receive(&mut self, _m: (), ctx: &mut Ctx<()>) {
+                ctx.stop();
+            }
+            fn post_stop(&mut self) {
+                self.stopped.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let sys = ActorSystem::new();
+        let stopped = Arc::new(AtomicUsize::new(0));
+        let s = stopped.clone();
+        let r = sys.spawn("stopper", 8, move || Stopper { stopped: s.clone() });
+        r.tell(()).unwrap();
+        assert!(wait_until(Duration::from_secs(2), || stopped.load(Ordering::SeqCst) == 1));
+        assert!(wait_until(Duration::from_secs(2), || !sys.is_running("stopper")));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn kill_drops_queued_messages_remove_drains_them() {
+        // Two identical slow actors with queued work: `remove` (graceful)
+        // processes the queue, `kill` (crash) drops it.
+        struct Slow {
+            hits: Arc<AtomicUsize>,
+        }
+        impl Actor for Slow {
+            type Msg = ();
+            fn receive(&mut self, _m: (), _ctx: &mut Ctx<()>) {
+                std::thread::sleep(Duration::from_millis(5));
+                self.hits.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let sys = ActorSystem::new();
+        let graceful_hits = Arc::new(AtomicUsize::new(0));
+        let crashed_hits = Arc::new(AtomicUsize::new(0));
+        let g = graceful_hits.clone();
+        let c = crashed_hits.clone();
+        let gr = sys.spawn("graceful", 64, move || Slow { hits: g.clone() });
+        let cr = sys.spawn("crashed", 64, move || Slow { hits: c.clone() });
+        for _ in 0..20 {
+            gr.tell(()).unwrap();
+            cr.tell(()).unwrap();
+        }
+        // Kill FIRST (before the graceful drain gives the other actor
+        // 100ms to chew through its queue on a small host).
+        sys.kill("crashed"); // drops the queue
+        sys.remove("graceful"); // drains all 20
+        assert_eq!(graceful_hits.load(Ordering::SeqCst), 20);
+        assert!(
+            crashed_hits.load(Ordering::SeqCst) < 20,
+            "crash must drop queued work, processed {}",
+            crashed_hits.load(Ordering::SeqCst)
+        );
+        sys.shutdown();
+    }
+
+    #[test]
+    fn remove_kills_address() {
+        let sys = ActorSystem::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let r = sys.spawn("gone", 8, move || Counter { hits: h.clone() });
+        sys.remove("gone");
+        assert!(r.tell(1).is_err());
+        assert!(sys.mailbox_depth("gone").is_none());
+    }
+}

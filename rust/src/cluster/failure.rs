@@ -1,0 +1,226 @@
+//! Failure injector: the experiment's fault model (§4.3).
+//!
+//! "Every node fails after every 10 minutes working with a probability of
+//! zero percent, 30 percent, 60 percent, and 90 percent. Furthermore,
+//! every failed node restarts after 5 minutes." The epoch is measured per
+//! node from when it (re)starts *working* — a restarted node gets a full
+//! epoch of work before its next roll, not an instant re-roll at a global
+//! boundary. Times are in paper minutes, compressed by `time_scale`.
+
+use super::node::Cluster;
+use crate::log_info;
+use crate::util::clock::SharedClock;
+use crate::util::prng::Pcg32;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Drives per-node epoch failures on a background thread.
+pub struct FailureInjector {
+    cluster: Arc<Cluster>,
+    clock: SharedClock,
+    epoch: Duration,
+    restart_delay: Duration,
+    prob: f64,
+    rng: Mutex<Pcg32>,
+    running: Arc<AtomicBool>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    /// (node, fail_time) log for reports.
+    events: Mutex<Vec<(usize, Duration)>>,
+    /// Per-node schedule: when the node's next roll is due (if up) or when
+    /// its restart is due (if down).
+    schedule: Mutex<Vec<NodeSchedule>>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum NodeSchedule {
+    /// Node is up; roll the failure dice at this instant.
+    RollAt(Duration),
+    /// Node is down; restart it at this instant.
+    RestartAt(Duration),
+}
+
+impl FailureInjector {
+    pub fn new(
+        cluster: Arc<Cluster>,
+        clock: SharedClock,
+        epoch: Duration,
+        restart_delay: Duration,
+        prob: f64,
+        seed: u64,
+    ) -> Arc<Self> {
+        assert!((0.0..=1.0).contains(&prob));
+        let n = cluster.len();
+        Arc::new(FailureInjector {
+            cluster,
+            clock: clock.clone(),
+            epoch,
+            restart_delay,
+            prob,
+            rng: Mutex::new(Pcg32::new(seed)),
+            running: Arc::new(AtomicBool::new(false)),
+            handle: Mutex::new(None),
+            events: Mutex::new(Vec::new()),
+            schedule: Mutex::new(vec![NodeSchedule::RollAt(clock.now() + epoch); n]),
+        })
+    }
+
+    /// One injector pass at the current clock. Deterministic; exposed for
+    /// tests, driven by the thread in production.
+    pub fn step(&self) {
+        let now = self.clock.now();
+        let mut schedule = self.schedule.lock().unwrap();
+        for (id, slot) in schedule.iter_mut().enumerate() {
+            match *slot {
+                NodeSchedule::RollAt(due) if now >= due => {
+                    let fail = self.rng.lock().unwrap().chance(self.prob);
+                    if fail {
+                        log_info!("failure", "node {id} failing (p={})", self.prob);
+                        self.cluster.node(id).fail();
+                        self.events.lock().unwrap().push((id, now));
+                        *slot = NodeSchedule::RestartAt(now + self.restart_delay);
+                    } else {
+                        // Survived this epoch: next roll one epoch later.
+                        *slot = NodeSchedule::RollAt(now + self.epoch);
+                    }
+                }
+                NodeSchedule::RestartAt(due) if now >= due => {
+                    log_info!("failure", "node {id} restarting");
+                    self.cluster.node(id).restart();
+                    // A full epoch of working time before the next roll.
+                    *slot = NodeSchedule::RollAt(now + self.epoch);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Total node failures injected.
+    pub fn failure_count(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn events(&self) -> Vec<(usize, Duration)> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn start(self: &Arc<Self>) {
+        if self.running.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let me = self.clone();
+        let handle = std::thread::Builder::new()
+            .name("failure-injector".into())
+            .spawn(move || {
+                while me.running.load(Ordering::SeqCst) {
+                    me.step();
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            })
+            .expect("spawn failure injector");
+        *self.handle.lock().unwrap() = Some(handle);
+    }
+
+    pub fn stop(&self) {
+        self.running.store(false, Ordering::SeqCst);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FailureInjector {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+
+    fn fixture(prob: f64) -> (Arc<ManualClock>, Arc<Cluster>, Arc<FailureInjector>) {
+        let clock = Arc::new(ManualClock::new());
+        let cluster = Cluster::new(3);
+        let inj = FailureInjector::new(
+            cluster.clone(),
+            clock.clone(),
+            Duration::from_secs(10),
+            Duration::from_secs(5),
+            prob,
+            7,
+        );
+        (clock, cluster, inj)
+    }
+
+    #[test]
+    fn zero_probability_never_fails() {
+        let (clock, cluster, inj) = fixture(0.0);
+        for _ in 0..20 {
+            clock.advance(Duration::from_secs(10));
+            inj.step();
+        }
+        assert_eq!(inj.failure_count(), 0);
+        assert_eq!(cluster.up_count(), 3);
+    }
+
+    #[test]
+    fn certain_probability_fails_then_restarts_with_working_window() {
+        let (clock, cluster, inj) = fixture(1.0);
+        clock.advance(Duration::from_secs(10));
+        inj.step();
+        assert_eq!(inj.failure_count(), 3, "all nodes down at their epoch");
+        assert_eq!(cluster.up_count(), 0);
+        // Before restart delay: still down.
+        clock.advance(Duration::from_secs(4));
+        inj.step();
+        assert_eq!(cluster.up_count(), 0);
+        // After restart delay: all back — and they STAY up for a full
+        // working epoch before the next roll (no instant re-fail).
+        clock.advance(Duration::from_secs(1));
+        inj.step();
+        assert_eq!(cluster.up_count(), 3);
+        clock.advance(Duration::from_secs(9)); // 9 < epoch since restart
+        inj.step();
+        assert_eq!(cluster.up_count(), 3, "full working epoch honoured");
+        clock.advance(Duration::from_secs(1)); // epoch complete
+        inj.step();
+        assert_eq!(cluster.up_count(), 0, "next roll fails again at p=1");
+        assert_eq!(inj.failure_count(), 6);
+    }
+
+    #[test]
+    fn mid_epoch_nothing_happens() {
+        let (clock, cluster, inj) = fixture(1.0);
+        clock.advance(Duration::from_secs(3));
+        inj.step();
+        assert_eq!(cluster.up_count(), 3, "mid-epoch: nothing happens");
+        assert_eq!(inj.failure_count(), 0);
+    }
+
+    #[test]
+    fn probabilistic_rate_reasonable() {
+        // ~30% per node per epoch over many epochs.
+        let (clock, _cluster, inj) = fixture(0.3);
+        let mut rolls = 0;
+        for _ in 0..400 {
+            clock.advance(Duration::from_secs(5));
+            inj.step();
+        }
+        // Count total roll opportunities: nodes alternate 10s-up epochs
+        // and (on failure) 5s downtime; lower-bound the rolls by the
+        // no-failure case and upper-bound via events.
+        // 400 * 5s = 2000s; per node: between 2000/15 and 2000/10 rolls.
+        let lo = 3.0 * 2000.0 / 15.0;
+        let hi = 3.0 * 2000.0 / 10.0;
+        rolls += inj.failure_count();
+        let rate_hi = rolls as f64 / lo;
+        let rate_lo = rolls as f64 / hi;
+        assert!(
+            rate_lo < 0.45 && rate_hi > 0.15,
+            "failure rate bracket [{rate_lo:.2}, {rate_hi:.2}] should straddle 0.3"
+        );
+    }
+}

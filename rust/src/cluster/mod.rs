@@ -1,0 +1,25 @@
+//! Simulated compute cluster with failure injection.
+//!
+//! Substitute for the paper's 3-node physical testbed (§4.3): components
+//! (Liquid tasks, virtual consumers, task-pool slices) are *placed* on
+//! simulated [`node`]s; the [`failure`] injector kills every node
+//! independently with probability `p` at each epoch boundary (paper: every
+//! 10 minutes) and brings it back after the restart delay (paper: 5
+//! minutes). Killing a node invokes the kill handle of every component
+//! placed on it.
+//!
+//! The two architectures react differently, which is exactly Fig. 10:
+//!
+//! - **Liquid** has no supervision — dead components return only when the
+//!   *node* returns (restart delay later).
+//! - **Reactive Liquid**'s supervision service detects the failures and
+//!   regenerates components on healthy nodes after its (much shorter)
+//!   detection delay.
+
+pub mod failure;
+pub mod node;
+pub mod placement;
+
+pub use failure::FailureInjector;
+pub use node::{Cluster, ComponentHandle, Node};
+pub use placement::Placement;

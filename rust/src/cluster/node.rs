@@ -1,0 +1,153 @@
+//! Nodes and the cluster: placement targets with up/down state.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A component placed on a node: closures to kill it (node failure) and to
+/// respawn it (node recovery — Liquid-style; Reactive Liquid components
+/// are *also* watched by the supervision service, which may heal them
+/// earlier onto healthy nodes).
+pub struct ComponentHandle {
+    pub name: String,
+    pub kill: Box<dyn Fn() + Send + Sync>,
+    pub respawn: Box<dyn Fn() + Send + Sync>,
+}
+
+/// One simulated compute node.
+pub struct Node {
+    pub id: usize,
+    up: AtomicBool,
+    components: Mutex<Vec<ComponentHandle>>,
+}
+
+impl Node {
+    pub fn new(id: usize) -> Arc<Self> {
+        Arc::new(Node { id, up: AtomicBool::new(true), components: Mutex::new(Vec::new()) })
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::SeqCst)
+    }
+
+    /// Place a component on this node.
+    pub fn host(&self, handle: ComponentHandle) {
+        self.components.lock().unwrap().push(handle);
+    }
+
+    pub fn component_count(&self) -> usize {
+        self.components.lock().unwrap().len()
+    }
+
+    /// Fail the node: mark down and kill all hosted components.
+    pub fn fail(&self) {
+        if !self.up.swap(false, Ordering::SeqCst) {
+            return; // already down
+        }
+        let comps = self.components.lock().unwrap();
+        for c in comps.iter() {
+            (c.kill)();
+        }
+    }
+
+    /// Restart the node: mark up and respawn hosted components that are
+    /// still placed here.
+    pub fn restart(&self) {
+        if self.up.swap(true, Ordering::SeqCst) {
+            return; // already up
+        }
+        let comps = self.components.lock().unwrap();
+        for c in comps.iter() {
+            (c.respawn)();
+        }
+    }
+}
+
+/// The cluster: a fixed set of nodes.
+pub struct Cluster {
+    nodes: Vec<Arc<Node>>,
+}
+
+impl Cluster {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Cluster { nodes: (0..n).map(Node::new).collect() })
+    }
+
+    pub fn nodes(&self) -> &[Arc<Node>] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: usize) -> Arc<Node> {
+        self.nodes[id].clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn up_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_up()).count()
+    }
+
+    pub fn any_up(&self) -> bool {
+        self.up_count() > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn counting_handle(
+        name: &str,
+        kills: &Arc<AtomicUsize>,
+        spawns: &Arc<AtomicUsize>,
+    ) -> ComponentHandle {
+        let k = kills.clone();
+        let s = spawns.clone();
+        ComponentHandle {
+            name: name.into(),
+            kill: Box::new(move || {
+                k.fetch_add(1, Ordering::SeqCst);
+            }),
+            respawn: Box::new(move || {
+                s.fetch_add(1, Ordering::SeqCst);
+            }),
+        }
+    }
+
+    #[test]
+    fn fail_kills_components_once() {
+        let kills = Arc::new(AtomicUsize::new(0));
+        let spawns = Arc::new(AtomicUsize::new(0));
+        let node = Node::new(0);
+        node.host(counting_handle("a", &kills, &spawns));
+        node.host(counting_handle("b", &kills, &spawns));
+        assert!(node.is_up());
+        node.fail();
+        node.fail(); // idempotent
+        assert!(!node.is_up());
+        assert_eq!(kills.load(Ordering::SeqCst), 2);
+        node.restart();
+        node.restart();
+        assert!(node.is_up());
+        assert_eq!(spawns.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn cluster_counts() {
+        let c = Cluster::new(3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.up_count(), 3);
+        c.node(1).fail();
+        assert_eq!(c.up_count(), 2);
+        assert!(c.any_up());
+        c.node(0).fail();
+        c.node(2).fail();
+        assert!(!c.any_up());
+    }
+}

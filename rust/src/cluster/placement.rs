@@ -1,0 +1,80 @@
+//! Component placement across nodes.
+
+use super::node::{Cluster, ComponentHandle};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Round-robin placer (the paper's prototype spreads jobs' tasks over the
+/// 3 nodes; nothing fancier is needed for the evaluation's shape).
+pub struct Placement {
+    cluster: Arc<Cluster>,
+    next: AtomicUsize,
+}
+
+impl Placement {
+    pub fn new(cluster: Arc<Cluster>) -> Self {
+        Placement { cluster, next: AtomicUsize::new(0) }
+    }
+
+    /// Place a component on the next node in rotation; returns the node id.
+    pub fn place(&self, handle: ComponentHandle) -> usize {
+        let id = self.next.fetch_add(1, Ordering::Relaxed) % self.cluster.len();
+        self.cluster.node(id).host(handle);
+        id
+    }
+
+    /// Place on a *healthy* node if any (what Reactive Liquid's
+    /// supervision does when regenerating); falls back to rotation.
+    pub fn place_healthy(&self, handle: ComponentHandle) -> usize {
+        let n = self.cluster.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for k in 0..n {
+            let id = (start + k) % n;
+            if self.cluster.node(id).is_up() {
+                self.cluster.node(id).host(handle);
+                return id;
+            }
+        }
+        let id = start % n;
+        self.cluster.node(id).host(handle);
+        id
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noop(name: &str) -> ComponentHandle {
+        ComponentHandle { name: name.into(), kill: Box::new(|| {}), respawn: Box::new(|| {}) }
+    }
+
+    #[test]
+    fn round_robin_balances() {
+        let c = Cluster::new(3);
+        let p = Placement::new(c.clone());
+        for i in 0..9 {
+            p.place(noop(&format!("c{i}")));
+        }
+        for n in c.nodes() {
+            assert_eq!(n.component_count(), 3);
+        }
+    }
+
+    #[test]
+    fn healthy_placement_skips_down_nodes() {
+        let c = Cluster::new(3);
+        let p = Placement::new(c.clone());
+        c.node(0).fail();
+        c.node(1).fail();
+        for i in 0..4 {
+            let id = p.place_healthy(noop(&format!("c{i}")));
+            assert_eq!(id, 2, "only node 2 is up");
+        }
+        assert_eq!(c.node(2).component_count(), 4);
+    }
+}

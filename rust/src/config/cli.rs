@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `binary <subcommand> [--key value]... [--flag]...` plus free
+//! positional arguments. Unknown keys are kept and can be rejected by the
+//! caller via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' unsupported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.options.get(name).cloned()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, name: &str) -> Result<Option<T>, String> {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse '{s}'")),
+        }
+    }
+
+    pub fn opt_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    /// Error on any option/flag the caller never consumed.
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown arguments: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let mut a = parse(&["run", "--seed", "7", "--fast", "--out=x.csv", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt_or("seed", 0u64).unwrap(), 7);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_str("out").as_deref(), Some("x.csv"));
+        assert_eq!(a.positional, vec!["extra"]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_args_rejected() {
+        let mut a = parse(&["run", "--mystery", "1"]);
+        let _ = a.flag("known");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn parse_errors() {
+        let mut a = parse(&["run", "--n", "abc"]);
+        assert!(a.opt_parse::<u32>("n").is_err());
+    }
+
+    #[test]
+    fn flag_before_end() {
+        let mut a = parse(&["bench", "--quick", "--n", "5"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt_or("n", 0u32).unwrap(), 5);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let mut a = parse(&["x"]);
+        assert_eq!(a.opt_or("n", 9u32).unwrap(), 9);
+        assert!(!a.flag("v"));
+    }
+}

@@ -1,0 +1,385 @@
+//! Typed configuration for the whole stack.
+//!
+//! [`ExperimentConfig`] mirrors the paper's experimental setup (§4.3):
+//! architecture variant (Liquid with a fixed task count vs. Reactive
+//! Liquid), partitions per topic, cluster size, failure probability per
+//! epoch, restart delay, and the consume batch size `n` of Equations 1–2.
+//! Wall-clock quantities are expressed in *paper minutes* and compressed by
+//! [`ExperimentConfig::time_scale`] (default: one paper minute → one
+//! second) so full experiment grids run in CI-scale time.
+//!
+//! Configs load from a TOML-subset file ([`toml`]), can be overridden from
+//! CLI flags ([`cli`]), and carry an explicit RNG seed for reproducibility.
+
+pub mod cli;
+pub mod toml;
+
+use std::time::Duration;
+
+/// Which architecture a run exercises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Architecture {
+    /// The Liquid baseline: each task *is* a consumer-group member, so at
+    /// most `partitions` tasks do useful work; `tasks_per_job` is fixed.
+    Liquid { tasks_per_job: usize },
+    /// Reactive Liquid: virtual messaging layer + elastic task pools.
+    Reactive,
+}
+
+impl Architecture {
+    pub fn label(&self) -> String {
+        match self {
+            Architecture::Liquid { tasks_per_job } => format!("liquid-{tasks_per_job}"),
+            Architecture::Reactive => "reactive".to_string(),
+        }
+    }
+}
+
+/// How the VML distributes messages to tasks (§5 names the scheduler as
+/// future work; `CompletionTime` implements it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    /// Join-the-shortest-queue on current mailbox depth.
+    ShortestQueue,
+    /// Least outstanding *work*: queue depth weighted by the task's
+    /// observed mean processing time — the completion-time-aware scheduler
+    /// the paper's conclusion calls for.
+    CompletionTime,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "round-robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            "shortest-queue" | "jsq" => Some(RouterPolicy::ShortestQueue),
+            "completion-time" | "ct" => Some(RouterPolicy::CompletionTime),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::ShortestQueue => "shortest-queue",
+            RouterPolicy::CompletionTime => "completion-time",
+        }
+    }
+}
+
+/// TCMM nearest-search backend for the micro-clustering hot loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TcmmBackend {
+    /// Pure-rust scalar implementation.
+    Cpu,
+    /// AOT-compiled JAX/Pallas kernel via PJRT (falls back to CPU when
+    /// artifacts are absent).
+    Xla,
+}
+
+/// Elastic-worker service tuning (reactive processing layer).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElasticConfig {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Scale *out* when mean mailbox depth per worker exceeds this.
+    pub high_watermark: usize,
+    /// Scale *in* when it drops below this.
+    pub low_watermark: usize,
+    /// How often the autoscaler evaluates (real time).
+    pub check_interval: Duration,
+    /// Minimum time between scaling actions.
+    pub cooldown: Duration,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            min_workers: 1,
+            max_workers: 16,
+            high_watermark: 64,
+            low_watermark: 8,
+            check_interval: Duration::from_millis(100),
+            cooldown: Duration::from_millis(300),
+        }
+    }
+}
+
+/// Synthetic T-Drive workload parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    pub taxis: usize,
+    /// GPS points generated per taxi.
+    pub points_per_taxi: usize,
+    /// Ingest rate into the messaging layer (points/sec); 0 = as fast as
+    /// possible.
+    pub ingest_rate: u64,
+    /// Spatial cluster hot-spots the taxis orbit (drives TCMM structure).
+    pub hotspots: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { taxis: 200, points_per_taxi: 100, ingest_rate: 0, hotspots: 8 }
+    }
+}
+
+/// Full experiment description (one run of one architecture).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub arch: Architecture,
+    /// Partitions per topic (paper: 3).
+    pub partitions: usize,
+    /// Compute nodes in the simulated cluster (paper: 3).
+    pub nodes: usize,
+    /// Run length in *paper minutes*.
+    pub duration_paper_min: f64,
+    /// Node failure probability per epoch (paper: 0/0.3/0.6/0.9).
+    pub failure_prob: f64,
+    /// Failure-epoch length in paper minutes (paper: 10).
+    pub failure_epoch_paper_min: f64,
+    /// Restart delay in paper minutes (paper: 5).
+    pub restart_paper_min: f64,
+    /// Seconds of real time per paper minute (default 1.0).
+    pub time_scale: f64,
+    /// Consume batch size `n` in Equations 1–2.
+    pub consume_batch: usize,
+    pub seed: u64,
+    pub elastic: ElasticConfig,
+    pub workload: WorkloadConfig,
+    pub backend: TcmmBackend,
+    pub router: RouterPolicy,
+    /// Micro-clustering distance threshold (degrees-ish units). Small
+    /// enough that hotspots splinter into many micro-clusters — the set
+    /// grows over the run, decelerating micro-clustering exactly as the
+    /// paper observes ("the micro-clusters size grows over time and
+    /// decelerates the micro-clustering").
+    pub tcmm_threshold: f32,
+    /// Macro-clustering period in paper minutes.
+    pub macro_period_paper_min: f64,
+    /// Per-task speed heterogeneity: task speed factors spread over
+    /// `[1, 1+spread]` (0 = homogeneous). Models heterogeneous nodes; the
+    /// §5 scheduler ablation uses it (a distribution scheduler only
+    /// matters when tasks differ).
+    pub task_speed_spread: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            arch: Architecture::Reactive,
+            partitions: 3,
+            nodes: 3,
+            duration_paper_min: 30.0,
+            failure_prob: 0.0,
+            failure_epoch_paper_min: 10.0,
+            restart_paper_min: 5.0,
+            time_scale: 1.0,
+            consume_batch: 32,
+            seed: 42,
+            elastic: ElasticConfig::default(),
+            workload: WorkloadConfig::default(),
+            backend: TcmmBackend::Cpu,
+            router: RouterPolicy::RoundRobin,
+            tcmm_threshold: 0.003,
+            macro_period_paper_min: 5.0,
+            task_speed_spread: 0.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Convert paper minutes to scaled wall-clock duration.
+    pub fn scaled(&self, paper_min: f64) -> Duration {
+        Duration::from_secs_f64(paper_min * self.time_scale)
+    }
+
+    pub fn duration(&self) -> Duration {
+        self.scaled(self.duration_paper_min)
+    }
+
+    pub fn failure_epoch(&self) -> Duration {
+        self.scaled(self.failure_epoch_paper_min)
+    }
+
+    pub fn restart_delay(&self) -> Duration {
+        self.scaled(self.restart_paper_min)
+    }
+
+    pub fn macro_period(&self) -> Duration {
+        self.scaled(self.macro_period_paper_min)
+    }
+
+    /// Sanity-check invariants; call after assembling from file/CLI.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.partitions == 0 {
+            return Err("partitions must be >= 1".into());
+        }
+        if self.nodes == 0 {
+            return Err("nodes must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.failure_prob) {
+            return Err(format!("failure_prob {} outside [0,1]", self.failure_prob));
+        }
+        if self.consume_batch == 0 {
+            return Err("consume_batch must be >= 1".into());
+        }
+        if let Architecture::Liquid { tasks_per_job } = self.arch {
+            if tasks_per_job == 0 {
+                return Err("liquid tasks_per_job must be >= 1".into());
+            }
+        }
+        if self.elastic.min_workers == 0 || self.elastic.min_workers > self.elastic.max_workers {
+            return Err("elastic worker bounds invalid".into());
+        }
+        if self.time_scale <= 0.0 {
+            return Err("time_scale must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file, falling back to defaults per key.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let doc = toml::parse(&text)?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Overlay parsed TOML keys onto this config.
+    pub fn apply(&mut self, doc: &toml::Doc) -> Result<(), String> {
+        if let Some(a) = doc.get_str("experiment", "arch") {
+            self.arch = match a.as_str() {
+                "reactive" => Architecture::Reactive,
+                "liquid" => Architecture::Liquid {
+                    tasks_per_job: doc.get_int("experiment", "tasks_per_job").unwrap_or(3) as usize,
+                },
+                other => return Err(format!("unknown arch '{other}'")),
+            };
+        }
+        if let Some(v) = doc.get_int("experiment", "partitions") {
+            self.partitions = v as usize;
+        }
+        if let Some(v) = doc.get_int("experiment", "nodes") {
+            self.nodes = v as usize;
+        }
+        if let Some(v) = doc.get_float("experiment", "duration_paper_min") {
+            self.duration_paper_min = v;
+        }
+        if let Some(v) = doc.get_float("experiment", "failure_prob") {
+            self.failure_prob = v;
+        }
+        if let Some(v) = doc.get_float("experiment", "failure_epoch_paper_min") {
+            self.failure_epoch_paper_min = v;
+        }
+        if let Some(v) = doc.get_float("experiment", "restart_paper_min") {
+            self.restart_paper_min = v;
+        }
+        if let Some(v) = doc.get_float("experiment", "time_scale") {
+            self.time_scale = v;
+        }
+        if let Some(v) = doc.get_int("experiment", "consume_batch") {
+            self.consume_batch = v as usize;
+        }
+        if let Some(v) = doc.get_int("experiment", "seed") {
+            self.seed = v as u64;
+        }
+        if let Some(v) = doc.get_str("experiment", "backend") {
+            self.backend = match v.as_str() {
+                "cpu" => TcmmBackend::Cpu,
+                "xla" => TcmmBackend::Xla,
+                other => return Err(format!("unknown backend '{other}'")),
+            };
+        }
+        if let Some(v) = doc.get_str("experiment", "router") {
+            self.router =
+                RouterPolicy::parse(&v).ok_or_else(|| format!("unknown router '{v}'"))?;
+        }
+        if let Some(v) = doc.get_int("elastic", "min_workers") {
+            self.elastic.min_workers = v as usize;
+        }
+        if let Some(v) = doc.get_int("elastic", "max_workers") {
+            self.elastic.max_workers = v as usize;
+        }
+        if let Some(v) = doc.get_int("elastic", "high_watermark") {
+            self.elastic.high_watermark = v as usize;
+        }
+        if let Some(v) = doc.get_int("elastic", "low_watermark") {
+            self.elastic.low_watermark = v as usize;
+        }
+        if let Some(v) = doc.get_int("workload", "taxis") {
+            self.workload.taxis = v as usize;
+        }
+        if let Some(v) = doc.get_int("workload", "points_per_taxi") {
+            self.workload.points_per_taxi = v as usize;
+        }
+        if let Some(v) = doc.get_int("workload", "ingest_rate") {
+            self.workload.ingest_rate = v as u64;
+        }
+        if let Some(v) = doc.get_int("workload", "hotspots") {
+            self.workload.hotspots = v as usize;
+        }
+        if let Some(v) = doc.get_float("tcmm", "threshold") {
+            self.tcmm_threshold = v as f32;
+        }
+        if let Some(v) = doc.get_float("tcmm", "macro_period_paper_min") {
+            self.macro_period_paper_min = v;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        assert!(ExperimentConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn scaled_durations() {
+        let mut c = ExperimentConfig::default();
+        c.time_scale = 2.0;
+        assert_eq!(c.failure_epoch(), Duration::from_secs(20));
+        assert_eq!(c.restart_delay(), Duration::from_secs(10));
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.failure_prob = 1.5;
+        assert!(c.validate().is_err());
+        c.failure_prob = 0.3;
+        c.partitions = 0;
+        assert!(c.validate().is_err());
+        c.partitions = 3;
+        c.arch = Architecture::Liquid { tasks_per_job: 0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn apply_from_toml() {
+        let doc = toml::parse(
+            "[experiment]\narch = \"liquid\"\ntasks_per_job = 6\npartitions = 4\n\
+             failure_prob = 0.6\nrouter = \"jsq\"\n[workload]\ntaxis = 10\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.arch, Architecture::Liquid { tasks_per_job: 6 });
+        assert_eq!(c.partitions, 4);
+        assert_eq!(c.failure_prob, 0.6);
+        assert_eq!(c.router, RouterPolicy::ShortestQueue);
+        assert_eq!(c.workload.taxis, 10);
+    }
+
+    #[test]
+    fn arch_labels() {
+        assert_eq!(Architecture::Liquid { tasks_per_job: 3 }.label(), "liquid-3");
+        assert_eq!(Architecture::Reactive.label(), "reactive");
+    }
+}

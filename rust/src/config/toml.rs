@@ -1,0 +1,186 @@
+//! TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported grammar — enough for experiment configs:
+//! `[section]` headers, `key = value` pairs where value is a quoted string,
+//! integer, float, or bool; `#` comments; blank lines. Keys before any
+//! section header land in the `""` section.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// A parsed document: `(section, key) → value`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`time_scale = 2`).
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value, String> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(format!("line {line_no}: empty value"));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {line_no}: unterminated string"))?;
+        if inner.contains('"') {
+            return Err(format!("line {line_no}: embedded quote unsupported"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("line {line_no}: cannot parse value '{raw}'"))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // Strip comments (not inside strings — our strings ban '#'-after-'"'
+        // edge cases by splitting on '#' only outside quotes).
+        let mut in_str = false;
+        let mut cut = line.len();
+        for (bi, ch) in line.char_indices() {
+            match ch {
+                '"' => in_str = !in_str,
+                '#' if !in_str => {
+                    cut = bi;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let line = line[..cut].trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {line_no}: malformed section header"))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {line_no}: expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {line_no}: empty key"));
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        doc.entries.insert((section.clone(), key.to_string()), value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "top = 1\n[a]\nname = \"x\" # trailing comment\nn = 42\nf = 2.5\nflag = true\n\n[b]\nn = -7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "name"), Some("x".into()));
+        assert_eq!(doc.get_int("a", "n"), Some(42));
+        assert_eq!(doc.get_float("a", "f"), Some(2.5));
+        assert_eq!(doc.get_bool("a", "flag"), Some(true));
+        assert_eq!(doc.get_int("b", "n"), Some(-7));
+        assert_eq!(doc.len(), 6);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("[s]\nx = 3\n").unwrap();
+        assert_eq!(doc.get_float("s", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn type_mismatch_is_none() {
+        let doc = parse("[s]\nx = \"str\"\n").unwrap();
+        assert_eq!(doc.get_int("s", "x"), None);
+        assert_eq!(doc.get_str("s", "x"), Some("str".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert!(parse("[unclosed\n").unwrap_err().contains("line 1"));
+        assert!(parse("[a]\nnoequals\n").unwrap_err().contains("line 2"));
+        assert!(parse("[a]\nk = \"open\n").unwrap_err().contains("line 2"));
+        assert!(parse("[a]\nk = what\n").unwrap_err().contains("line 2"));
+    }
+
+    #[test]
+    fn comment_with_hash_in_string() {
+        let doc = parse("[s]\npath = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s", "path"), Some("a#b".into()));
+    }
+}

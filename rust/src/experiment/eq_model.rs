@@ -1,0 +1,86 @@
+//! Equations 1–2: the paper's analytic completion-time model.
+//!
+//! Liquid (Eq. 1): a task consumes a batch of `n` messages, then processes
+//! them sequentially — the i-th message (1-based) completes at
+//! `T = n·t_c + i·t_p` after the batch consume started.
+//!
+//! Reactive Liquid (Eq. 2): a virtual consumer consumes `n`, forwards each
+//! to a task, and the i-th message waits `t_wi` in the task queue:
+//! `T = n·t_c + t_wi + t_p`. `t_wi` depends on queue depth — with `q`
+//! messages ahead on a task, `t_wi ≈ q·t_p`.
+//!
+//! `benches/eq_model.rs` validates measured completion times against
+//! these shapes.
+
+/// Eq. 1 — completion time of the `i`-th message (1-based) in a Liquid
+/// batch.
+pub fn liquid_completion(n: usize, i: usize, t_c: f64, t_p: f64) -> f64 {
+    assert!(i >= 1 && i <= n, "i must be in 1..=n");
+    n as f64 * t_c + i as f64 * t_p
+}
+
+/// Mean of Eq. 1 over a batch: `n·t_c + (n+1)/2·t_p`.
+pub fn liquid_mean_completion(n: usize, t_c: f64, t_p: f64) -> f64 {
+    n as f64 * t_c + (n as f64 + 1.0) / 2.0 * t_p
+}
+
+/// Eq. 2 — completion time of a Reactive Liquid message that found `q`
+/// messages queued ahead of it on its task.
+pub fn reactive_completion(n: usize, q: usize, t_c: f64, t_p: f64) -> f64 {
+    n as f64 * t_c + q as f64 * t_p + t_p
+}
+
+/// Mean of Eq. 2 given a mean queue depth.
+pub fn reactive_mean_completion(n: usize, mean_queue: f64, t_c: f64, t_p: f64) -> f64 {
+    n as f64 * t_c + mean_queue * t_p + t_p
+}
+
+/// The paper's §5 observation, as a predicate: with consuming much faster
+/// than processing and queues deeper than a batch, Reactive Liquid's mean
+/// completion exceeds Liquid's.
+pub fn reactive_worse_when(n: usize, mean_queue: f64, t_c: f64, t_p: f64) -> bool {
+    reactive_mean_completion(n, mean_queue, t_c, t_p) > liquid_mean_completion(n, t_c, t_p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_linear_in_i() {
+        let (n, tc, tp) = (10, 0.001, 0.01);
+        let t1 = liquid_completion(n, 1, tc, tp);
+        let t10 = liquid_completion(n, 10, tc, tp);
+        assert!((t1 - (0.01 + 0.01)).abs() < 1e-12);
+        assert!((t10 - (0.01 + 0.1)).abs() < 1e-12);
+        // Mean matches closed form.
+        let mean: f64 =
+            (1..=n).map(|i| liquid_completion(n, i, tc, tp)).sum::<f64>() / n as f64;
+        assert!((mean - liquid_mean_completion(n, tc, tp)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_grows_with_queue() {
+        let (n, tc, tp) = (10, 0.001, 0.01);
+        assert!(reactive_completion(n, 0, tc, tp) < reactive_completion(n, 50, tc, tp));
+        // Empty queue: reactive beats liquid's batch tail.
+        assert!(reactive_completion(n, 0, tc, tp) < liquid_completion(n, n, tc, tp));
+    }
+
+    #[test]
+    fn paper_regime_reactive_worse() {
+        // Consuming ≫ faster than processing, deep queues (the paper's
+        // observed regime): reactive completion is worse.
+        let (n, tc, tp) = (32, 0.0001, 0.001);
+        assert!(reactive_worse_when(n, 100.0, tc, tp));
+        // Shallow queues: reactive is NOT worse — exactly the lever the
+        // completion-time router pulls.
+        assert!(!reactive_worse_when(n, 5.0, tc, tp));
+    }
+
+    #[test]
+    #[should_panic]
+    fn eq1_rejects_bad_index() {
+        liquid_completion(5, 6, 0.1, 0.1);
+    }
+}

@@ -1,0 +1,19 @@
+//! Experiment harness: one call runs the paper's full evaluation pipeline
+//! under either architecture and returns figure-ready series.
+//!
+//! The workload is §4.1's TCMM pipeline: a trajectory topic feeds a
+//! micro-clustering job whose change events feed a macro-clustering job
+//! ([`tcmm_jobs`]). [`runner`] wires the architecture (Liquid with a fixed
+//! task count, or the five-layer Reactive Liquid), places components on
+//! the simulated cluster, starts the failure injector, ingests synthetic
+//! T-Drive trajectories, and samples the three §4.3 metrics. [`eq_model`]
+//! reproduces the analytic completion-time model (Equations 1–2).
+
+pub mod eq_model;
+pub mod figures;
+pub mod result;
+pub mod runner;
+pub mod tcmm_jobs;
+
+pub use result::ExperimentResult;
+pub use runner::run_experiment;

@@ -1,0 +1,135 @@
+//! Experiment results: the three §4.3 metrics plus run provenance,
+//! with CSV/JSONL emitters for the figure benches.
+
+use crate::util::histogram::Histogram;
+use crate::util::io::{CsvWriter, Json};
+use std::path::Path;
+
+/// Everything one run produces.
+pub struct ExperimentResult {
+    pub label: String,
+    pub seed: u64,
+    pub duration_secs: u64,
+    /// Cumulative processed messages per second (Fig. 8 / Fig. 10 series).
+    pub cumulative: Vec<(u64, u64)>,
+    /// Processed messages per second (Fig. 9 pairing series).
+    pub throughput: Vec<(u64, u64)>,
+    /// Completion-time distribution (Fig. 11).
+    pub completion: Histogram,
+    /// Reservoir of raw completion samples in seconds (scatter plots).
+    pub completion_samples: Vec<f64>,
+    pub total_processed: u64,
+    pub node_failures: usize,
+    pub supervisor_restarts: u64,
+    /// Named counter snapshot (consumed/produced/scale events/…).
+    pub counters: Vec<(String, u64)>,
+}
+
+impl ExperimentResult {
+    /// Mean throughput over the run (messages/second).
+    pub fn mean_throughput(&self) -> f64 {
+        if self.duration_secs == 0 {
+            return 0.0;
+        }
+        self.total_processed as f64 / self.duration_secs as f64
+    }
+
+    /// Throughput series as f64 padded to the run duration.
+    pub fn throughput_f64(&self) -> Vec<f64> {
+        let mut v = vec![0.0; self.duration_secs as usize];
+        for &(s, n) in &self.throughput {
+            if (s as usize) < v.len() {
+                v[s as usize] = n as f64;
+            }
+        }
+        v
+    }
+
+    /// Write the cumulative series as CSV (`second,total`).
+    pub fn write_cumulative_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(path, &["second", "total_processed"])?;
+        for &(s, n) in &self.cumulative {
+            w.row_f64(&[s as f64, n as f64])?;
+        }
+        w.flush()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} msgs in {}s ({:.0} msg/s), completion {}, failures={} restarts={}",
+            self.label,
+            self.total_processed,
+            self.duration_secs,
+            self.mean_throughput(),
+            self.completion.summary(),
+            self.node_failures,
+            self.supervisor_restarts,
+        )
+    }
+
+    /// JSON record for EXPERIMENTS.md bookkeeping / jsonl logs.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("duration_secs", Json::num(self.duration_secs as f64)),
+            ("total_processed", Json::num(self.total_processed as f64)),
+            ("mean_throughput", Json::num(self.mean_throughput())),
+            ("completion_mean_ms", Json::num(self.completion.mean().as_secs_f64() * 1e3)),
+            ("completion_p95_ms", Json::num(self.completion.quantile(0.95).as_secs_f64() * 1e3)),
+            ("node_failures", Json::num(self.node_failures as f64)),
+            ("supervisor_restarts", Json::num(self.supervisor_restarts as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn result() -> ExperimentResult {
+        let mut h = Histogram::new();
+        h.record(Duration::from_millis(5));
+        ExperimentResult {
+            label: "test".into(),
+            seed: 1,
+            duration_secs: 10,
+            cumulative: vec![(0, 5), (1, 12)],
+            throughput: vec![(0, 5), (1, 7)],
+            completion: h,
+            completion_samples: vec![0.005],
+            total_processed: 12,
+            node_failures: 0,
+            supervisor_restarts: 0,
+            counters: vec![],
+        }
+    }
+
+    #[test]
+    fn mean_throughput_and_padding() {
+        let r = result();
+        assert!((r.mean_throughput() - 1.2).abs() < 1e-9);
+        let tp = r.throughput_f64();
+        assert_eq!(tp.len(), 10);
+        assert_eq!(tp[0], 5.0);
+        assert_eq!(tp[1], 7.0);
+        assert_eq!(tp[9], 0.0);
+    }
+
+    #[test]
+    fn csv_and_json_emit() {
+        let r = result();
+        let dir = std::env::temp_dir().join(format!("rl_res_{}", std::process::id()));
+        let p = dir.join("cum.csv");
+        r.write_cumulative_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("second,total_processed\n0,5\n1,12\n"));
+        let json = r.to_json().render();
+        assert!(json.contains("\"label\":\"test\""));
+        assert!(json.contains("\"total_processed\":12"));
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(!r.summary().is_empty());
+    }
+}

@@ -1,0 +1,348 @@
+//! The experiment runner: config → full pipeline run → result.
+
+use super::result::ExperimentResult;
+use super::tcmm_jobs::{self, TOPIC_TRAJ};
+use crate::actor::system::ActorSystem;
+use crate::cluster::failure::FailureInjector;
+use crate::cluster::node::{Cluster, ComponentHandle};
+use crate::config::{Architecture, ExperimentConfig};
+use crate::log_info;
+use crate::messaging::{Broker, Producer};
+use crate::metrics::PipelineMetrics;
+use crate::processing::liquid::LiquidJob;
+use crate::processing::reactive::ReactiveJob;
+use crate::reactive::state::OffsetStore;
+use crate::reactive::supervision::{RestartPolicy, Supervisor};
+use crate::trajectory::TrajectoryGenerator;
+use crate::util::clock::real_clock;
+use crate::vml::virtual_topic::VirtualTopic;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Run one experiment to completion and collect the §4.3 metrics.
+pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    cfg.validate().expect("invalid experiment config");
+    let clock = real_clock();
+    let metrics = PipelineMetrics::new(clock.clone());
+    let broker = Broker::new();
+    let pipeline = tcmm_jobs::tcmm_pipeline(cfg);
+    pipeline.validate().expect("pipeline invalid");
+    pipeline.create_topics(&broker, cfg.partitions);
+    let cluster = Cluster::new(cfg.nodes);
+
+    // --- Ingest thread: synthetic T-Drive feed into the trajectory topic.
+    let stop_ingest = Arc::new(AtomicBool::new(false));
+    let ingest_handle = {
+        let broker = broker.clone();
+        let clock = clock.clone();
+        let stop = stop_ingest.clone();
+        let wl = cfg.workload;
+        let seed = cfg.seed;
+        std::thread::Builder::new()
+            .name("ingest".into())
+            .spawn(move || {
+                let mut gen = TrajectoryGenerator::new(wl.taxis, wl.hotspots, seed);
+                let dataset: Vec<Vec<u8>> =
+                    gen.generate(wl.points_per_taxi).iter().map(|p| p.encode()).collect();
+                let producer = Producer::new(&broker, TOPIC_TRAJ, clock.clone());
+                if wl.ingest_rate == 0 {
+                    // One full pass, unpaced (drain-style runs and tests).
+                    for payload in &dataset {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        producer.send(None, payload.clone());
+                    }
+                    return;
+                }
+                // Paced, cycling the dataset until stopped.
+                let per_msg = Duration::from_secs_f64(1.0 / wl.ingest_rate as f64);
+                let mut next = std::time::Instant::now();
+                for payload in dataset.iter().cycle() {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    producer.send(None, payload.clone());
+                    next += per_msg;
+                    let now = std::time::Instant::now();
+                    if next > now {
+                        std::thread::sleep(next - now);
+                    } else if now - next > Duration::from_millis(100) {
+                        next = now; // fell behind; don't burst-compensate
+                    }
+                }
+            })
+            .expect("spawn ingest")
+    };
+
+    // --- Architecture wiring.
+    enum Arch {
+        Liquid { jobs: Vec<Arc<LiquidJob>> },
+        Reactive {
+            system: Arc<ActorSystem>,
+            supervisor: Arc<Supervisor>,
+            jobs: Vec<Arc<ReactiveJob>>,
+            vts: Vec<Arc<VirtualTopic>>,
+        },
+    }
+
+    let arch = match cfg.arch {
+        Architecture::Liquid { tasks_per_job } => {
+            let mut jobs = Vec::new();
+            for job in &pipeline.jobs {
+                let lj = LiquidJob::start(
+                    &broker,
+                    job.clone(),
+                    tasks_per_job,
+                    cfg.consume_batch,
+                    clock.clone(),
+                    metrics.clone(),
+                    Duration::ZERO, // cost lives in the processors
+                );
+                // Placement: spread this job's tasks over the nodes. Node
+                // failure kills its share; node restart (after the paper's
+                // 5 minutes) brings exactly that share back — Liquid has
+                // no supervision service.
+                for (i, node) in cluster.nodes().iter().enumerate() {
+                    let share = tasks_per_job / cfg.nodes
+                        + usize::from(i < tasks_per_job % cfg.nodes);
+                    if share == 0 {
+                        continue;
+                    }
+                    let lj_kill = lj.clone();
+                    let lj_heal = lj.clone();
+                    node.host(ComponentHandle {
+                        name: format!("liquid:{}@n{}", job.name, node.id),
+                        kill: Box::new(move || {
+                            for _ in 0..share {
+                                lj_kill.kill_one();
+                            }
+                        }),
+                        respawn: Box::new(move || {
+                            lj_heal.heal_n(share);
+                        }),
+                    });
+                }
+                jobs.push(lj);
+            }
+            Arch::Liquid { jobs }
+        }
+        Architecture::Reactive => {
+            let system = ActorSystem::new();
+            let supervisor = Supervisor::new(clock.clone(), Duration::from_millis(100));
+            let offsets = Arc::new(OffsetStore::in_memory());
+            let mut vts = Vec::new();
+            for topic in pipeline.topics() {
+                vts.push(VirtualTopic::new(
+                    &topic,
+                    &broker,
+                    &system,
+                    clock.clone(),
+                    metrics.clone(),
+                    offsets.clone(),
+                    (2, 1, 8),
+                ));
+            }
+            let vt_of = |name: &str| {
+                vts.iter().find(|v| v.topic == name).cloned().expect("vt exists")
+            };
+            let mut jobs = Vec::new();
+            for job in &pipeline.jobs {
+                let rj = ReactiveJob::start(
+                    &system,
+                    &broker,
+                    job.clone(),
+                    &vt_of(&job.input_topic),
+                    job.output_topic.as_deref().map(vt_of).as_ref(),
+                    &supervisor,
+                    cfg.elastic,
+                    cfg.router,
+                    cfg.consume_batch,
+                    cfg.partitions, // start equal to Liquid; elastic takes over
+                    clock.clone(),
+                    metrics.clone(),
+                    offsets.clone(),
+                );
+                // Re-register supervision with the cluster gate: regeneration
+                // requires a healthy node (§4.4.2 — components are healed
+                // "in other healthy nodes"), and takes the configured
+                // detection+recovery delay.
+                // Detection + regeneration latency (§4.4.2: "the system
+                // takes time to detect the failure and heal itself") —
+                // half a paper-minute, an order faster than Liquid's
+                // 5-paper-minute node restart.
+                let detect_delay = Duration::from_secs_f64(0.5 * cfg.time_scale);
+                {
+                    let g = rj.consumers.clone();
+                    let g2 = rj.consumers.clone();
+                    let cl = cluster.clone();
+                    supervisor.supervise(
+                        &format!("vcg:{}:{}", job.input_topic, job.name),
+                        RestartPolicy { restart_delay: detect_delay, ..Default::default() },
+                        move || g.alive_count() == g.consumers().len(),
+                        move || cl.any_up() && g2.heal() > 0,
+                    );
+                }
+                {
+                    let p = rj.pool.clone();
+                    let p2 = rj.pool.clone();
+                    let cl = cluster.clone();
+                    // The supervised floor must match the elastic floor —
+                    // a higher floor here would make the supervisor and
+                    // the elastic scale-in fight each other (observed as
+                    // ~50 phantom "restarts" per healthy run).
+                    let min = cfg.elastic.min_workers;
+                    supervisor.supervise(
+                        &format!("pool:{}", job.name),
+                        RestartPolicy { restart_delay: detect_delay, ..Default::default() },
+                        move || p.task_count() >= min,
+                        move || {
+                            if cl.any_up() {
+                                p2.ensure(min);
+                                true
+                            } else {
+                                false
+                            }
+                        },
+                    );
+                }
+                // Placement for failure injection: each node hosts a share
+                // of the job's virtual consumers and tasks. Respawn is a
+                // no-op — the supervision service already healed them.
+                let n_consumers = rj.consumers.consumers().len();
+                for (i, node) in cluster.nodes().iter().enumerate() {
+                    let vc_share: Vec<usize> =
+                        (0..n_consumers).filter(|c| c % cfg.nodes == i).collect();
+                    let task_share = 1 + cfg.elastic.max_workers / cfg.nodes;
+                    let g = rj.consumers.clone();
+                    let p = rj.pool.clone();
+                    node.host(ComponentHandle {
+                        name: format!("reactive:{}@n{}", job.name, node.id),
+                        kill: Box::new(move || {
+                            for &c in &vc_share {
+                                g.kill_one(c);
+                            }
+                            p.kill(task_share);
+                        }),
+                        respawn: Box::new(|| {}),
+                    });
+                }
+                jobs.push(rj);
+            }
+            supervisor.start();
+            Arch::Reactive { system, supervisor, jobs, vts }
+        }
+    };
+
+    // --- Failure injection.
+    let injector = FailureInjector::new(
+        cluster.clone(),
+        clock.clone(),
+        cfg.failure_epoch(),
+        cfg.restart_delay(),
+        cfg.failure_prob,
+        cfg.seed ^ 0xFA11,
+    );
+    injector.start();
+
+    // --- Run.
+    log_info!("experiment", "running {} for {:?}", cfg.arch.label(), cfg.duration());
+    let deadline = std::time::Instant::now() + cfg.duration();
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // --- Teardown (order matters: stop failures first, then flow).
+    injector.stop();
+    stop_ingest.store(true, Ordering::SeqCst);
+    let _ = ingest_handle.join();
+    let supervisor_restarts = match &arch {
+        Arch::Liquid { jobs } => {
+            for j in jobs {
+                j.stop_all();
+            }
+            0
+        }
+        Arch::Reactive { system, supervisor, jobs, vts } => {
+            supervisor.stop();
+            let restarts = supervisor.restart_count();
+            for j in jobs {
+                j.stop();
+            }
+            for vt in vts {
+                vt.stop();
+            }
+            system.shutdown();
+            restarts
+        }
+    };
+
+    let duration_secs = cfg.duration().as_secs().max(1);
+    let mut cumulative = metrics.processed.cumulative_series();
+    cumulative.truncate(duration_secs as usize);
+    let mut throughput = metrics.processed.rate_series();
+    throughput.truncate(duration_secs as usize);
+    ExperimentResult {
+        label: cfg.arch.label(),
+        seed: cfg.seed,
+        duration_secs,
+        total_processed: metrics.processed.total(),
+        cumulative,
+        throughput,
+        completion: metrics.completion.histogram(),
+        completion_samples: metrics.completion.samples(),
+        node_failures: injector.failure_count(),
+        supervisor_restarts,
+        counters: metrics.counters.snapshot(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Architecture, TcmmBackend};
+
+    fn quick_cfg(arch: Architecture) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.arch = arch;
+        cfg.duration_paper_min = 4.0;
+        cfg.time_scale = 1.0; // 4 real seconds
+        cfg.workload.taxis = 20;
+        cfg.workload.points_per_taxi = 50;
+        cfg.workload.ingest_rate = 800;
+        cfg.backend = TcmmBackend::Cpu;
+        cfg.elastic.max_workers = 8;
+        cfg
+    }
+
+    #[test]
+    fn liquid_run_produces_metrics() {
+        let r = run_experiment(&quick_cfg(Architecture::Liquid { tasks_per_job: 3 }));
+        assert!(r.total_processed > 100, "processed {}", r.total_processed);
+        assert!(!r.cumulative.is_empty());
+        assert_eq!(r.label, "liquid-3");
+        assert_eq!(r.node_failures, 0);
+    }
+
+    #[test]
+    fn reactive_run_produces_metrics() {
+        let r = run_experiment(&quick_cfg(Architecture::Reactive));
+        assert!(r.total_processed > 100, "processed {}", r.total_processed);
+        assert_eq!(r.label, "reactive");
+        assert!(r.completion.count() > 0);
+    }
+
+    #[test]
+    fn reactive_survives_certain_failures() {
+        let mut cfg = quick_cfg(Architecture::Reactive);
+        cfg.failure_prob = 1.0;
+        cfg.failure_epoch_paper_min = 1.0; // every second at scale 1
+        cfg.restart_paper_min = 1.0;
+        cfg.duration_paper_min = 5.0;
+        let r = run_experiment(&cfg);
+        assert!(r.node_failures > 0, "failures injected");
+        assert!(r.supervisor_restarts > 0, "supervision healed something");
+        assert!(r.total_processed > 0);
+    }
+}

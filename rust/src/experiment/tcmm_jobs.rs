@@ -1,0 +1,243 @@
+//! The evaluation pipeline's two jobs as [`Processor`]s.
+//!
+//! Identical logic runs under both architectures — the comparison isolates
+//! the architecture, not the workload. A configurable per-message
+//! synthetic cost models the paper's much slower per-task testbed
+//! (1.5 GB dual-core nodes running Java): it is *sleep-based*, so task
+//! concurrency — the thing the architectures differ on — translates to
+//! throughput exactly as it does across the paper's cores, even when this
+//! host has fewer physical cores than the simulated cluster.
+
+use crate::config::{ExperimentConfig, TcmmBackend};
+use crate::messaging::Message;
+use crate::processing::job::{Job, Processor};
+use crate::processing::pipeline::Pipeline;
+use crate::tcmm::backend::{CpuBackend, NearestBackend, XlaBackend};
+use crate::tcmm::events::MicroEvent;
+use crate::tcmm::macro_clustering::MacroClusterer;
+use crate::tcmm::micro::MicroClusterer;
+use crate::trajectory::TrajPoint;
+use crate::vml::envelope::Envelope;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Topic names of the evaluation pipeline.
+pub const TOPIC_TRAJ: &str = "trajectories";
+pub const TOPIC_MICRO: &str = "micro-events";
+pub const TOPIC_MACRO: &str = "macro-events";
+
+/// Micro-cluster capacity per task (≤ the AOT artifact's K).
+pub const MICRO_CAPACITY: usize = 256;
+
+static REPLICA: AtomicU64 = AtomicU64::new(1);
+
+/// Deterministic per-task speed factor in `[1, 1+spread]` (replica id is
+/// the task incarnation counter — stable across both architectures).
+fn speed_factor(replica: u64, spread: f64) -> f64 {
+    1.0 + spread * ((replica % 5) as f64 / 4.0)
+}
+
+/// Micro-clustering job: trajectory points → cluster-change events.
+pub struct MicroProcessor {
+    clusterer: MicroClusterer,
+    base_cost: Duration,
+    speed: f64,
+}
+
+impl MicroProcessor {
+    pub fn new(
+        threshold: f32,
+        backend: Arc<dyn NearestBackend>,
+        cost: Duration,
+        spread: f64,
+    ) -> Self {
+        let replica = REPLICA.fetch_add(1, Ordering::Relaxed);
+        MicroProcessor {
+            clusterer: MicroClusterer::new(MICRO_CAPACITY, replica, threshold, backend),
+            base_cost: cost,
+            speed: speed_factor(replica, spread),
+        }
+    }
+
+    /// Per-message cost grows with the micro-cluster set: the nearest-
+    /// neighbour search is O(|set|), which is the deceleration the paper
+    /// reports in §4.4.1 (and the declining slope of Fig. 8). The factor
+    /// spans 0.4×–1.6× base as the set fills.
+    fn cost(&self) -> Duration {
+        let fill = self.clusterer.set().len() as f64 / MICRO_CAPACITY as f64;
+        self.base_cost.mul_f64(self.speed * (0.4 + 1.2 * fill))
+    }
+}
+
+impl Processor for MicroProcessor {
+    fn process(&mut self, env: &Envelope) -> Vec<Message> {
+        let point = match TrajPoint::decode(&env.message.payload) {
+            Some(p) => p,
+            None => return vec![], // non-point payloads are dropped
+        };
+        let cost = self.cost();
+        if !cost.is_zero() {
+            std::thread::sleep(cost);
+        }
+        let event = self.clusterer.observe(point.xy(), point.ts);
+        vec![event.to_message()]
+    }
+}
+
+/// Macro-clustering job: micro events → periodic macro snapshots.
+///
+/// "Periodic" is message-driven here: every `snapshot_every` observed
+/// events the job emits a fresh k-means snapshot (equivalent to the
+/// paper's wall-clock period under a steady event rate, and deterministic
+/// for tests).
+pub struct MacroProcessor {
+    clusterer: MacroClusterer,
+    observed: u64,
+    snapshot_every: u64,
+    cost: Duration,
+}
+
+impl MacroProcessor {
+    pub fn new(k: usize, snapshot_every: u64, seed: u64, cost: Duration, spread: f64) -> Self {
+        let replica = REPLICA.fetch_add(1, Ordering::Relaxed);
+        MacroProcessor {
+            clusterer: MacroClusterer::new(k, 8, seed),
+            observed: 0,
+            snapshot_every: snapshot_every.max(1),
+            cost: cost.mul_f64(speed_factor(replica, spread)),
+        }
+    }
+}
+
+impl Processor for MacroProcessor {
+    fn process(&mut self, env: &Envelope) -> Vec<Message> {
+        let event = match MicroEvent::decode(&env.message.payload) {
+            Some(e) => e,
+            None => return vec![],
+        };
+        if !self.cost.is_zero() {
+            std::thread::sleep(self.cost);
+        }
+        self.clusterer.observe(&event);
+        self.observed += 1;
+        if self.observed % self.snapshot_every == 0 {
+            let ts = match event {
+                MicroEvent::Created { ts, .. } | MicroEvent::Updated { ts, .. } => ts,
+            };
+            vec![self.clusterer.snapshot(ts).to_message()]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Per-message synthetic processing cost (paper-testbed emulation).
+/// Micro-clustering dominates (nearest-search over a growing set); the
+/// macro job is lighter.
+pub const MICRO_COST: Duration = Duration::from_micros(800);
+pub const MACRO_COST: Duration = Duration::from_micros(200);
+
+/// Build the backend the config asks for (XLA falls back to CPU with a
+/// warning when artifacts are missing — keeps tests runnable pre-build).
+pub fn make_backend(cfg: &ExperimentConfig) -> Arc<dyn NearestBackend> {
+    match cfg.backend {
+        TcmmBackend::Cpu => Arc::new(CpuBackend),
+        TcmmBackend::Xla => match XlaBackend::load() {
+            Ok(b) => b,
+            Err(e) => {
+                crate::log_warn!("experiment", "XLA backend unavailable ({e}); using CPU");
+                Arc::new(CpuBackend)
+            }
+        },
+    }
+}
+
+/// The full evaluation pipeline for a config.
+pub fn tcmm_pipeline(cfg: &ExperimentConfig) -> Pipeline {
+    let threshold = cfg.tcmm_threshold;
+    let backend = make_backend(cfg);
+    let seed = cfg.seed;
+    let spread = cfg.task_speed_spread;
+    let micro = Job::new(
+        "micro",
+        TOPIC_TRAJ,
+        Some(TOPIC_MICRO),
+        Arc::new(move || {
+            Box::new(MicroProcessor::new(threshold, backend.clone(), MICRO_COST, spread))
+                as Box<dyn Processor>
+        }),
+    );
+    let macro_ = Job::new(
+        "macro",
+        TOPIC_MICRO,
+        Some(TOPIC_MACRO),
+        Arc::new(move || {
+            Box::new(MacroProcessor::new(8, 200, seed, MACRO_COST, spread)) as Box<dyn Processor>
+        }),
+    );
+    Pipeline::new("tcmm", vec![micro, macro_])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tcmm::events::MacroEvent;
+
+    fn env_of(msg: Message) -> Envelope {
+        Envelope::new(msg, 0, 0, Duration::ZERO)
+    }
+
+    #[test]
+    fn speed_factor_spread() {
+        assert_eq!(speed_factor(0, 2.0), 1.0);
+        assert_eq!(speed_factor(4, 2.0), 3.0);
+        assert_eq!(speed_factor(7, 0.0), 1.0);
+    }
+
+    #[test]
+    fn micro_processor_emits_events() {
+        let mut p = MicroProcessor::new(0.02, Arc::new(CpuBackend), Duration::ZERO, 0.0);
+        let pt = TrajPoint { taxi_id: 1, ts: 10, lon: 116.4, lat: 39.9 };
+        let out = p.process(&env_of(Message::new(None, pt.encode(), 0)));
+        assert_eq!(out.len(), 1);
+        match MicroEvent::decode(&out[0].payload).unwrap() {
+            MicroEvent::Created { center, .. } => {
+                assert!((center[0] - 116.4).abs() < 1e-4);
+            }
+            e => panic!("expected Created, got {e:?}"),
+        }
+        // Same spot again: update.
+        let out = p.process(&env_of(Message::new(None, pt.encode(), 0)));
+        assert!(matches!(MicroEvent::decode(&out[0].payload).unwrap(), MicroEvent::Updated { n: 2, .. }));
+    }
+
+    #[test]
+    fn micro_processor_ignores_garbage() {
+        let mut p = MicroProcessor::new(0.02, Arc::new(CpuBackend), Duration::ZERO, 0.0);
+        assert!(p.process(&env_of(Message::from_str("junk"))).is_empty());
+    }
+
+    #[test]
+    fn macro_processor_snapshots_periodically() {
+        let mut p = MacroProcessor::new(2, 5, 7, Duration::ZERO, 0.0);
+        let mut snaps = 0;
+        for i in 0..20u64 {
+            let e = MicroEvent::Created { id: i, center: [i as f32, 0.0], ts: i };
+            let out = p.process(&env_of(Message::new(None, e.encode(), 0)));
+            snaps += out.len();
+            for m in out {
+                assert!(MacroEvent::decode(&m.payload).is_some());
+            }
+        }
+        assert_eq!(snaps, 4, "every 5th event");
+    }
+
+    #[test]
+    fn pipeline_is_valid() {
+        let cfg = ExperimentConfig::default();
+        let p = tcmm_pipeline(&cfg);
+        p.validate().unwrap();
+        assert_eq!(p.topics(), vec![TOPIC_MACRO, TOPIC_MICRO, TOPIC_TRAJ]);
+    }
+}

@@ -1,0 +1,40 @@
+//! # Reactive Liquid
+//!
+//! A reproduction of *"Reactive Liquid: Optimized Liquid Architecture for
+//! Elastic and Resilient Distributed Data Processing"* (Mirvakili, Fazli,
+//! Habibi — 2019) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The crate implements, from scratch:
+//!
+//! - a Kafka-semantics **messaging layer** ([`messaging`]): partitioned
+//!   append-only topic logs with consumer groups and rebalancing;
+//! - an actor-based **asynchronous messaging layer** ([`actor`]);
+//! - the **reactive processing layer** ([`reactive`]): elastic workers,
+//!   supervision (heartbeat + φ-accrual failure detection, let-it-crash),
+//!   and state management (event sourcing + CRDTs);
+//! - the paper's contribution, the **virtual messaging layer** ([`vml`]):
+//!   virtual topics whose consumer side is decoupled from the task count,
+//!   lifting Liquid's tasks-per-job ≤ partitions-per-topic cap;
+//! - the **processing layer** ([`processing`]): jobs/tasks/pipelines, with
+//!   both the Liquid baseline runner and the full Reactive Liquid runner;
+//! - a simulated **cluster** with failure injection ([`cluster`]);
+//! - the paper's evaluation workload, **TCMM** incremental trajectory
+//!   clustering ([`tcmm`]) over T-Drive-style GPS data ([`trajectory`]),
+//!   with its hot loop compiled ahead-of-time from JAX/Pallas and executed
+//!   through PJRT ([`runtime`]);
+//! - [`metrics`] and an [`experiment`] harness that regenerates every
+//!   figure in the paper's evaluation section.
+
+pub mod actor;
+pub mod cluster;
+pub mod config;
+pub mod experiment;
+pub mod messaging;
+pub mod metrics;
+pub mod processing;
+pub mod reactive;
+pub mod runtime;
+pub mod tcmm;
+pub mod trajectory;
+pub mod util;
+pub mod vml;

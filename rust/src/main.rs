@@ -1,0 +1,186 @@
+//! `reactive-liquid` CLI — the launcher.
+//!
+//! Subcommands:
+//!
+//! - `run [--config FILE] [--arch reactive|liquid] [...]` — run one
+//!   experiment and print the §4.3 metrics;
+//! - `figure <8|9|10|11|router>` — regenerate a paper figure's data;
+//! - `gen-data --out FILE [--taxis N] [--points N]` — write a synthetic
+//!   T-Drive-format dataset;
+//! - `info` — environment/report (artifacts, cores).
+
+use reactive_liquid::config::cli::Args;
+use reactive_liquid::config::{Architecture, ExperimentConfig, RouterPolicy, TcmmBackend};
+use reactive_liquid::experiment::figures::{self, FigureOpts};
+use reactive_liquid::experiment::run_experiment;
+use reactive_liquid::runtime::artifacts_dir;
+use reactive_liquid::trajectory::TrajectoryGenerator;
+use std::io::Write;
+
+fn main() {
+    let args = Args::from_env().unwrap_or_else(|e| {
+        eprintln!("argument error: {e}");
+        std::process::exit(2);
+    });
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let code = match sub.as_str() {
+        "run" => cmd_run(args),
+        "figure" => cmd_figure(args),
+        "gen-data" => cmd_gen_data(args),
+        "info" => cmd_info(),
+        _ => {
+            print!(
+                "reactive-liquid — elastic & resilient distributed data processing\n\n\
+                 usage: reactive-liquid <run|figure|gen-data|info> [options]\n\n\
+                 run       --config FILE | --arch reactive|liquid --tasks N --secs S\n\
+                 \x20         --failure-prob P --rate R --router rr|jsq|ct --backend cpu|xla\n\
+                 figure    8 | 9 | 10 | 11 | router   (writes results/*.csv)\n\
+                 gen-data  --out FILE --taxis N --points N --seed S\n\
+                 info      print environment report\n"
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_run(mut args: Args) -> i32 {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => match ExperimentConfig::from_file(&path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        },
+        None => ExperimentConfig::default(),
+    };
+    if let Some(arch) = args.opt_str("arch") {
+        cfg.arch = match arch.as_str() {
+            "reactive" => Architecture::Reactive,
+            "liquid" => Architecture::Liquid {
+                tasks_per_job: args.opt_or("tasks", 3).unwrap_or(3),
+            },
+            other => {
+                eprintln!("unknown --arch '{other}'");
+                return 2;
+            }
+        };
+    }
+    if let Ok(Some(secs)) = args.opt_parse::<f64>("secs") {
+        cfg.duration_paper_min = secs;
+    }
+    if let Ok(Some(p)) = args.opt_parse::<f64>("failure-prob") {
+        cfg.failure_prob = p;
+    }
+    if let Ok(Some(r)) = args.opt_parse::<u64>("rate") {
+        cfg.workload.ingest_rate = r;
+    }
+    if let Some(r) = args.opt_str("router") {
+        match RouterPolicy::parse(&r) {
+            Some(p) => cfg.router = p,
+            None => {
+                eprintln!("unknown --router '{r}'");
+                return 2;
+            }
+        }
+    }
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = if b == "xla" { TcmmBackend::Xla } else { TcmmBackend::Cpu };
+    }
+    if let Ok(Some(s)) = args.opt_parse::<u64>("seed") {
+        cfg.seed = s;
+    }
+    let _ = args.flag("quiet");
+    if let Err(e) = args.finish() {
+        eprintln!("{e}");
+        return 2;
+    }
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e}");
+        return 2;
+    }
+    let r = run_experiment(&cfg);
+    println!("{}", r.summary());
+    println!("{}", r.to_json().render());
+    0
+}
+
+fn cmd_figure(args: Args) -> i32 {
+    let which = args.positional.first().cloned().unwrap_or_default();
+    let opts = FigureOpts::default();
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    if let Err(e) = args.finish() {
+        eprintln!("{e}");
+        return 2;
+    }
+    match which.as_str() {
+        "8" => {
+            figures::fig8(&opts);
+        }
+        "9" => {
+            let l3 = run_experiment(&opts.cfg(Architecture::Liquid { tasks_per_job: 3 }));
+            let rl = run_experiment(&opts.cfg(Architecture::Reactive));
+            let fit = figures::fig9_pair(&l3, &rl, &opts.out_dir.join("fig9a.csv")).unwrap();
+            println!("fig9a fit: slope={:.3} R²={:.3}", fit.slope, fit.r_squared);
+        }
+        "10" => {
+            figures::fig10(&opts);
+        }
+        "11" => {
+            figures::fig11(&opts);
+        }
+        "router" => {
+            figures::ablation_router(&opts);
+        }
+        other => {
+            eprintln!("unknown figure '{other}' (expected 8|9|10|11|router)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_gen_data(mut args: Args) -> i32 {
+    let out = args.opt_str("out").unwrap_or_else(|| "tdrive_synth.txt".to_string());
+    let taxis: usize = args.opt_or("taxis", 100).unwrap_or(100);
+    let points: usize = args.opt_or("points", 100).unwrap_or(100);
+    let seed: u64 = args.opt_or("seed", 42).unwrap_or(42);
+    if let Err(e) = args.finish() {
+        eprintln!("{e}");
+        return 2;
+    }
+    let mut gen = TrajectoryGenerator::new(taxis, 8, seed);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&out).expect("create out"));
+    // T-Drive text format, timestamps inside the dataset's week.
+    let base = 1_201_910_400u64; // 2008-02-02 00:00:00
+    for p in gen.generate(points) {
+        let ts = base + p.ts;
+        let days_into_week = ((ts - base) / 86_400).min(6) as u32;
+        let rem = ts % 86_400;
+        writeln!(
+            f,
+            "{},2008-02-{:02} {:02}:{:02}:{:02},{:.5},{:.5}",
+            p.taxi_id,
+            2 + days_into_week,
+            rem / 3600,
+            (rem % 3600) / 60,
+            rem % 60,
+            p.lon,
+            p.lat
+        )
+        .unwrap();
+    }
+    println!("wrote {} points for {taxis} taxis to {out}", taxis * points);
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("reactive-liquid {}", env!("CARGO_PKG_VERSION"));
+    println!("cores: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0));
+    match artifacts_dir() {
+        Some(d) => println!("artifacts: {}", d.display()),
+        None => println!("artifacts: NOT FOUND (run `make artifacts`)"),
+    }
+    0
+}

@@ -1,0 +1,393 @@
+//! The broker: topics + consumer-group coordinator + consumer handles.
+
+use super::group::{GroupState, MemberId};
+use super::message::{Message, OffsetMessage};
+use super::partition::PartitionLog;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One topic: partition logs plus per-group coordination state.
+pub struct Topic {
+    pub name: String,
+    partitions: Vec<PartitionLog>,
+    groups: Mutex<HashMap<String, GroupState>>,
+    /// Round-robin cursor for keyless produces.
+    rr: AtomicUsize,
+}
+
+impl Topic {
+    fn new(name: &str, partitions: usize) -> Self {
+        assert!(partitions >= 1, "topic needs >= 1 partition");
+        Topic {
+            name: name.to_string(),
+            partitions: (0..partitions).map(|_| PartitionLog::new()).collect(),
+            groups: Mutex::new(HashMap::new()),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn partition_count(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Total messages across partitions.
+    pub fn end_offsets(&self) -> Vec<u64> {
+        self.partitions.iter().map(|p| p.end_offset()).collect()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.end_offsets().iter().sum()
+    }
+
+    /// Publish, choosing the partition from the key hash (or round-robin).
+    pub fn publish(&self, msg: Message) -> (usize, u64) {
+        let p = match msg.key {
+            Some(k) => (hash64(k) % self.partitions.len() as u64) as usize,
+            None => self.rr.fetch_add(1, Ordering::Relaxed) % self.partitions.len(),
+        };
+        let off = self.partitions[p].append(msg);
+        (p, off)
+    }
+
+    /// Read a raw window from one partition (offset-addressed, group-free).
+    pub fn read(&self, partition: usize, from: u64, max: usize) -> Vec<(u64, Message)> {
+        self.partitions[partition].read(from, max)
+    }
+}
+
+#[inline]
+fn hash64(mut x: u64) -> u64 {
+    // SplitMix64 finalizer as a cheap, well-mixed hash.
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// The in-process broker (the messaging layer).
+pub struct Broker {
+    topics: RwLock<HashMap<String, Arc<Topic>>>,
+    next_member: AtomicU64,
+}
+
+impl Broker {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Broker { topics: RwLock::new(HashMap::new()), next_member: AtomicU64::new(1) })
+    }
+
+    /// Create a topic (idempotent; partition count must match an existing
+    /// topic or the call panics — config error).
+    pub fn create_topic(self: &Arc<Self>, name: &str, partitions: usize) -> Arc<Topic> {
+        let mut t = self.topics.write().unwrap();
+        let topic = t
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Topic::new(name, partitions)))
+            .clone();
+        assert_eq!(
+            topic.partition_count(),
+            partitions,
+            "topic '{name}' exists with different partition count"
+        );
+        topic
+    }
+
+    pub fn topic(&self, name: &str) -> Option<Arc<Topic>> {
+        self.topics.read().unwrap().get(name).cloned()
+    }
+
+    fn expect_topic(&self, name: &str) -> Arc<Topic> {
+        self.topic(name).unwrap_or_else(|| panic!("unknown topic '{name}'"))
+    }
+
+    /// Join `group` on `topic`, returning a consumer handle. The handle
+    /// leaves the group on [`Consumer::close`] or drop (crash semantics:
+    /// dropping without commit rewinds the group to the committed offsets).
+    pub fn subscribe(self: &Arc<Self>, topic: &str, group: &str) -> Consumer {
+        let t = self.expect_topic(topic);
+        let member = self.next_member.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut groups = t.groups.lock().unwrap();
+            let g = groups
+                .entry(group.to_string())
+                .or_insert_with(|| GroupState::new(t.partition_count()));
+            g.join(member);
+        }
+        Consumer { topic: t, group: group.to_string(), member, open: true }
+    }
+
+    /// Number of members currently in `group` on `topic`.
+    pub fn group_members(&self, topic: &str, group: &str) -> usize {
+        let t = self.expect_topic(topic);
+        let groups = t.groups.lock().unwrap();
+        groups.get(group).map(|g| g.member_count()).unwrap_or(0)
+    }
+
+    /// Committed offset for `(topic, group, partition)`.
+    pub fn committed(&self, topic: &str, group: &str, partition: usize) -> u64 {
+        let t = self.expect_topic(topic);
+        let groups = t.groups.lock().unwrap();
+        groups.get(group).map(|g| g.committed(partition)).unwrap_or(0)
+    }
+
+    /// Sum of unconsumed (past committed) messages for a group — the lag
+    /// the elastic-worker service watches.
+    pub fn group_lag(&self, topic: &str, group: &str) -> u64 {
+        let t = self.expect_topic(topic);
+        let ends = t.end_offsets();
+        let groups = t.groups.lock().unwrap();
+        match groups.get(group) {
+            None => ends.iter().sum(),
+            Some(g) => ends
+                .iter()
+                .enumerate()
+                .map(|(p, &e)| e.saturating_sub(g.committed(p)))
+                .sum(),
+        }
+    }
+}
+
+/// A consumer-group member handle.
+///
+/// `poll` reads batches from the member's assigned partitions and advances
+/// the group's in-memory positions; `commit` durably records progress so a
+/// restarted member resumes there. Dropping without closing mimics a crash.
+pub struct Consumer {
+    topic: Arc<Topic>,
+    group: String,
+    member: MemberId,
+    open: bool,
+}
+
+impl Consumer {
+    pub fn member_id(&self) -> MemberId {
+        self.member
+    }
+
+    pub fn topic_name(&self) -> &str {
+        &self.topic.name
+    }
+
+    /// Partitions this member currently owns.
+    pub fn assignment(&self) -> Vec<usize> {
+        let groups = self.topic.groups.lock().unwrap();
+        groups.get(&self.group).map(|g| g.assigned(self.member).to_vec()).unwrap_or_default()
+    }
+
+    /// Poll up to `max` messages across owned partitions (round-robin over
+    /// partitions, batch per partition). Non-blocking: may return empty.
+    pub fn poll(&self, max: usize) -> Vec<OffsetMessage> {
+        let mut out = Vec::new();
+        let mut groups = self.topic.groups.lock().unwrap();
+        let g = match groups.get_mut(&self.group) {
+            Some(g) => g,
+            None => return out,
+        };
+        let parts = g.assigned(self.member).to_vec();
+        for p in parts {
+            if out.len() >= max {
+                break;
+            }
+            let from = g.position(p);
+            let batch = self.topic.partitions[p].read(from, max - out.len());
+            if let Some((last, _)) = batch.last() {
+                g.advance(p, last + 1);
+            }
+            out.extend(batch.into_iter().map(|(offset, message)| OffsetMessage {
+                partition: p,
+                offset,
+                message,
+            }));
+        }
+        out
+    }
+
+    /// Commit `next` (the next offset to read) for `partition`.
+    pub fn commit(&self, partition: usize, next: u64) {
+        let mut groups = self.topic.groups.lock().unwrap();
+        if let Some(g) = groups.get_mut(&self.group) {
+            g.commit(partition, next);
+        }
+    }
+
+    /// Commit everything consumed so far (positions → committed).
+    pub fn commit_all(&self) {
+        let mut groups = self.topic.groups.lock().unwrap();
+        if let Some(g) = groups.get_mut(&self.group) {
+            for p in g.assigned(self.member).to_vec() {
+                let pos = g.position(p);
+                g.commit(p, pos);
+            }
+        }
+    }
+
+    /// Leave the group gracefully.
+    pub fn close(mut self) {
+        self.leave();
+    }
+
+    fn leave(&mut self) {
+        if self.open {
+            self.open = false;
+            let mut groups = self.topic.groups.lock().unwrap();
+            if let Some(g) = groups.get_mut(&self.group) {
+                g.leave(self.member);
+            }
+        }
+    }
+}
+
+impl Drop for Consumer {
+    fn drop(&mut self) {
+        self.leave();
+    }
+}
+
+impl Default for Broker {
+    fn default() -> Self {
+        Broker { topics: RwLock::new(HashMap::new()), next_member: AtomicU64::new(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn broker_with_topic(partitions: usize) -> Arc<Broker> {
+        let b = Broker::new();
+        b.create_topic("t", partitions);
+        b
+    }
+
+    fn publish_n(b: &Arc<Broker>, n: usize) {
+        let t = b.topic("t").unwrap();
+        for i in 0..n {
+            t.publish(Message::new(None, vec![i as u8], 0));
+        }
+    }
+
+    #[test]
+    fn publish_round_robin_spreads() {
+        let b = broker_with_topic(3);
+        publish_n(&b, 9);
+        let t = b.topic("t").unwrap();
+        assert_eq!(t.end_offsets(), vec![3, 3, 3]);
+        assert_eq!(t.total_messages(), 9);
+    }
+
+    #[test]
+    fn keyed_publish_stable_partition() {
+        let b = broker_with_topic(4);
+        let t = b.topic("t").unwrap();
+        let (p1, _) = t.publish(Message::new(Some(77), vec![], 0));
+        let (p2, _) = t.publish(Message::new(Some(77), vec![], 0));
+        assert_eq!(p1, p2, "same key → same partition");
+    }
+
+    #[test]
+    fn single_consumer_sees_everything() {
+        let b = broker_with_topic(3);
+        publish_n(&b, 30);
+        let c = b.subscribe("t", "g");
+        let mut got = 0;
+        loop {
+            let batch = c.poll(7);
+            if batch.is_empty() {
+                break;
+            }
+            got += batch.len();
+        }
+        assert_eq!(got, 30);
+    }
+
+    #[test]
+    fn group_splits_partitions_exclusively() {
+        let b = broker_with_topic(3);
+        publish_n(&b, 30);
+        let c1 = b.subscribe("t", "g");
+        let c2 = b.subscribe("t", "g");
+        let mut parts = c1.assignment();
+        parts.extend(c2.assignment());
+        parts.sort_unstable();
+        assert_eq!(parts, vec![0, 1, 2], "all partitions covered exactly once");
+    }
+
+    #[test]
+    fn extra_consumers_idle() {
+        let b = broker_with_topic(2);
+        publish_n(&b, 10);
+        let consumers: Vec<Consumer> = (0..5).map(|_| b.subscribe("t", "g")).collect();
+        let active = consumers.iter().filter(|c| !c.assignment().is_empty()).count();
+        assert_eq!(active, 2, "Liquid's cap: active members = partitions");
+    }
+
+    #[test]
+    fn crash_without_commit_redelivers() {
+        let b = broker_with_topic(1);
+        publish_n(&b, 10);
+        let c1 = b.subscribe("t", "g");
+        let batch = c1.poll(5);
+        assert_eq!(batch.len(), 5);
+        drop(c1); // crash: no commit
+        let c2 = b.subscribe("t", "g");
+        let batch = c2.poll(10);
+        assert_eq!(batch.len(), 10, "uncommitted messages redelivered");
+        assert_eq!(batch[0].offset, 0);
+    }
+
+    #[test]
+    fn commit_then_crash_resumes_at_commit() {
+        let b = broker_with_topic(1);
+        publish_n(&b, 10);
+        let c1 = b.subscribe("t", "g");
+        let batch = c1.poll(4);
+        assert_eq!(batch.len(), 4);
+        c1.commit(0, 4);
+        drop(c1);
+        let c2 = b.subscribe("t", "g");
+        let batch = c2.poll(10);
+        assert_eq!(batch.len(), 6);
+        assert_eq!(batch[0].offset, 4);
+    }
+
+    #[test]
+    fn commit_all_commits_positions() {
+        let b = broker_with_topic(2);
+        publish_n(&b, 10);
+        let c = b.subscribe("t", "g");
+        let n = c.poll(10).len();
+        assert_eq!(n, 10);
+        c.commit_all();
+        assert_eq!(b.committed("t", "g", 0), 5);
+        assert_eq!(b.committed("t", "g", 1), 5);
+        assert_eq!(b.group_lag("t", "g"), 0);
+    }
+
+    #[test]
+    fn group_lag_counts_uncommitted() {
+        let b = broker_with_topic(2);
+        publish_n(&b, 10);
+        assert_eq!(b.group_lag("t", "g"), 10, "no group yet: everything is lag");
+        let c = b.subscribe("t", "g");
+        c.poll(10);
+        assert_eq!(b.group_lag("t", "g"), 10, "polled but uncommitted still lags");
+        c.commit_all();
+        assert_eq!(b.group_lag("t", "g"), 0);
+    }
+
+    #[test]
+    fn independent_groups_independent_progress() {
+        let b = broker_with_topic(1);
+        publish_n(&b, 6);
+        let ca = b.subscribe("t", "ga");
+        let cb = b.subscribe("t", "gb");
+        assert_eq!(ca.poll(10).len(), 6);
+        assert_eq!(cb.poll(10).len(), 6, "each group reads the full log");
+    }
+
+    #[test]
+    #[should_panic(expected = "different partition count")]
+    fn topic_recreation_with_mismatch_panics() {
+        let b = broker_with_topic(3);
+        b.create_topic("t", 4);
+    }
+}

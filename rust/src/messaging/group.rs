@@ -1,0 +1,205 @@
+//! Consumer-group coordination: membership, partition assignment,
+//! positions and committed offsets.
+//!
+//! Invariants (checked by property tests in `rust/tests/broker_semantics.rs`):
+//!
+//! 1. within a group, every partition is owned by **at most one** member;
+//! 2. when the group has ≥1 member, **every** partition is owned;
+//! 3. members beyond the partition count own nothing (they are idle — the
+//!    Liquid task cap);
+//! 4. positions only move forward between rebalances, and reset to the
+//!    committed offset on rebalance (at-least-once delivery).
+
+use std::collections::{BTreeSet, HashMap};
+
+/// Opaque consumer-group member identity.
+pub type MemberId = u64;
+
+/// State of one consumer group on one topic.
+pub struct GroupState {
+    members: BTreeSet<MemberId>,
+    /// member → owned partitions (round-robin over sorted members, so the
+    /// assignment is deterministic for a given membership).
+    assignment: HashMap<MemberId, Vec<usize>>,
+    /// Rebalance generation (bumped on every membership change).
+    generation: u64,
+    /// partition → next offset to read. Valid only between rebalances.
+    positions: Vec<u64>,
+    /// partition → committed offset (the next offset a recovering consumer
+    /// should read).
+    committed: Vec<u64>,
+    partitions: usize,
+}
+
+impl GroupState {
+    pub fn new(partitions: usize) -> Self {
+        GroupState {
+            members: BTreeSet::new(),
+            assignment: HashMap::new(),
+            generation: 0,
+            positions: vec![0; partitions],
+            committed: vec![0; partitions],
+            partitions,
+        }
+    }
+
+    /// Add a member and rebalance. Idempotent for an existing member.
+    pub fn join(&mut self, member: MemberId) {
+        if self.members.insert(member) {
+            self.rebalance();
+        }
+    }
+
+    /// Remove a member and rebalance. No-op for an unknown member.
+    pub fn leave(&mut self, member: MemberId) {
+        if self.members.remove(&member) {
+            self.rebalance();
+        }
+    }
+
+    fn rebalance(&mut self) {
+        self.generation += 1;
+        self.assignment.clear();
+        let members: Vec<MemberId> = self.members.iter().copied().collect();
+        if members.is_empty() {
+            // Nothing assigned; positions will be re-seeded on next join.
+            return;
+        }
+        for p in 0..self.partitions {
+            let owner = members[p % members.len()];
+            self.assignment.entry(owner).or_default().push(p);
+        }
+        // At-least-once: unread-but-uncommitted progress is discarded.
+        self.positions.copy_from_slice(&self.committed);
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Partitions owned by `member` (empty for idle/unknown members).
+    pub fn assigned(&self, member: MemberId) -> &[usize] {
+        self.assignment.get(&member).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Current read position of a partition.
+    pub fn position(&self, partition: usize) -> u64 {
+        self.positions[partition]
+    }
+
+    /// Advance the read position (monotonic between rebalances).
+    pub fn advance(&mut self, partition: usize, to: u64) {
+        debug_assert!(to >= self.positions[partition], "position must not regress");
+        self.positions[partition] = to;
+    }
+
+    /// Commit `next` as the restart offset for `partition`. Commits are
+    /// monotonic: a stale commit (lower than the current one) is ignored.
+    pub fn commit(&mut self, partition: usize, next: u64) {
+        if next > self.committed[partition] {
+            self.committed[partition] = next;
+        }
+    }
+
+    pub fn committed(&self, partition: usize) -> u64 {
+        self.committed[partition]
+    }
+
+    /// Check invariants 1–3 (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut owned = vec![0usize; self.partitions];
+        for (m, parts) in &self.assignment {
+            if !self.members.contains(m) {
+                return Err(format!("assignment for non-member {m}"));
+            }
+            for &p in parts {
+                owned[p] += 1;
+            }
+        }
+        for (p, &n) in owned.iter().enumerate() {
+            if n > 1 {
+                return Err(format!("partition {p} owned by {n} members"));
+            }
+            if n == 0 && !self.members.is_empty() {
+                return Err(format!("partition {p} unowned with {} members", self.members.len()));
+            }
+        }
+        let active = self.assignment.values().filter(|v| !v.is_empty()).count();
+        if active > self.partitions {
+            return Err(format!("{active} active members > {} partitions", self.partitions));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_member_owns_all() {
+        let mut g = GroupState::new(3);
+        g.join(10);
+        assert_eq!(g.assigned(10), &[0, 1, 2]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn members_beyond_partitions_idle() {
+        let mut g = GroupState::new(3);
+        for m in 0..6 {
+            g.join(m);
+        }
+        let active = (0..6).filter(|&m| !g.assigned(m).is_empty()).count();
+        assert_eq!(active, 3, "only as many active consumers as partitions");
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn leave_triggers_reassignment() {
+        let mut g = GroupState::new(4);
+        g.join(1);
+        g.join(2);
+        let gen = g.generation();
+        g.leave(1);
+        assert_eq!(g.generation(), gen + 1);
+        assert_eq!(g.assigned(2), &[0, 1, 2, 3]);
+        assert!(g.assigned(1).is_empty());
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rebalance_resets_position_to_committed() {
+        let mut g = GroupState::new(1);
+        g.join(1);
+        g.advance(0, 50);
+        g.commit(0, 30);
+        assert_eq!(g.position(0), 50);
+        g.join(2); // rebalance
+        assert_eq!(g.position(0), 30, "uncommitted progress discarded");
+    }
+
+    #[test]
+    fn commits_monotonic() {
+        let mut g = GroupState::new(1);
+        g.join(1);
+        g.commit(0, 10);
+        g.commit(0, 5);
+        assert_eq!(g.committed(0), 10);
+        g.commit(0, 20);
+        assert_eq!(g.committed(0), 20);
+    }
+
+    #[test]
+    fn idempotent_join() {
+        let mut g = GroupState::new(2);
+        g.join(1);
+        let gen = g.generation();
+        g.join(1);
+        assert_eq!(g.generation(), gen, "re-join of same member is a no-op");
+    }
+}

@@ -1,0 +1,71 @@
+//! Messages: immutable, cheaply clonable payloads.
+
+use std::sync::Arc;
+
+/// A message as stored in a partition log.
+///
+/// The payload is `Arc<[u8]>` so that fan-out through the virtual messaging
+/// layer and task pools never copies message bodies — only bumps a
+/// refcount. `produced_at_ms` is the broker-ingest timestamp (millis on the
+/// experiment clock) used by the metrics layer.
+#[derive(Clone, Debug)]
+pub struct Message {
+    /// Partitioning key (hashed to choose a partition when present).
+    pub key: Option<u64>,
+    pub payload: Arc<[u8]>,
+    /// Millis since the experiment clock epoch at produce time.
+    pub produced_at_ms: u64,
+}
+
+impl Message {
+    pub fn new(key: Option<u64>, payload: Vec<u8>, produced_at_ms: u64) -> Self {
+        Message { key, payload: payload.into(), produced_at_ms }
+    }
+
+    /// Convenience for tests and examples.
+    pub fn from_str(s: &str) -> Self {
+        Message::new(None, s.as_bytes().to_vec(), 0)
+    }
+
+    pub fn payload_str(&self) -> Option<&str> {
+        std::str::from_utf8(&self.payload).ok()
+    }
+
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+}
+
+/// A message paired with its position in a partition log.
+#[derive(Clone, Debug)]
+pub struct OffsetMessage {
+    pub partition: usize,
+    pub offset: u64,
+    pub message: Message,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_payload() {
+        let m = Message::new(Some(1), vec![1, 2, 3], 5);
+        let c = m.clone();
+        assert!(Arc::ptr_eq(&m.payload, &c.payload));
+        assert_eq!(c.key, Some(1));
+        assert_eq!(c.produced_at_ms, 5);
+    }
+
+    #[test]
+    fn str_round_trip() {
+        let m = Message::from_str("hello");
+        assert_eq!(m.payload_str(), Some("hello"));
+        assert_eq!(m.len(), 5);
+        assert!(!m.is_empty());
+    }
+}

@@ -1,0 +1,33 @@
+//! Messaging layer — an in-process message broker with Apache Kafka's
+//! semantics (the paper's messaging layer, §3.2.1).
+//!
+//! What matters for the paper's argument is reproduced exactly:
+//!
+//! - topics are split into **partitions**, each an append-only offset-indexed
+//!   log ([`partition`]);
+//! - producers publish to a partition chosen by key hash or round-robin
+//!   ([`producer`]);
+//! - consumers belong to **consumer groups**; within a group each partition
+//!   is assigned to *at most one* member ([`group`]), so a group can have at
+//!   most `partitions` active members — the precise limitation (Fig. 2 of
+//!   the paper) that caps Liquid's tasks-per-job and that the virtual
+//!   messaging layer lifts;
+//! - consumption is batch **polling** with positions and explicit offset
+//!   **commits**, giving at-least-once redelivery after a member failure.
+//!
+//! The broker is a plain in-process object behind `Arc`; all state is
+//! internally synchronized, so producers/consumers can live on any thread
+//! (or simulated cluster node).
+
+pub mod broker;
+pub mod group;
+pub mod message;
+pub mod partition;
+pub mod producer;
+
+pub use broker::Broker;
+pub use group::MemberId;
+pub use message::Message;
+pub use producer::Producer;
+
+pub use broker::Consumer;

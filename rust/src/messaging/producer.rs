@@ -1,0 +1,63 @@
+//! Producer handle: publishes messages stamped with the experiment clock.
+
+use super::broker::{Broker, Topic};
+use super::message::Message;
+use crate::util::clock::SharedClock;
+use std::sync::Arc;
+
+/// Publishes to one topic. Cheap to clone/create; holds the topic `Arc`
+/// directly so the hot path skips the broker's topic map.
+pub struct Producer {
+    topic: Arc<Topic>,
+    clock: SharedClock,
+}
+
+impl Producer {
+    pub fn new(broker: &Arc<Broker>, topic: &str, clock: SharedClock) -> Self {
+        let topic = broker.topic(topic).unwrap_or_else(|| panic!("unknown topic '{topic}'"));
+        Producer { topic, clock }
+    }
+
+    /// Publish a payload; returns `(partition, offset)`.
+    pub fn send(&self, key: Option<u64>, payload: Vec<u8>) -> (usize, u64) {
+        self.topic.publish(Message::new(key, payload, self.clock.now_millis()))
+    }
+
+    /// Publish a pre-built message, restamping its produce time.
+    pub fn send_message(&self, mut msg: Message) -> (usize, u64) {
+        msg.produced_at_ms = self.clock.now_millis();
+        self.topic.publish(msg)
+    }
+
+    pub fn topic_name(&self) -> &str {
+        &self.topic.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+    use std::time::Duration;
+
+    #[test]
+    fn stamps_produce_time() {
+        let b = Broker::new();
+        b.create_topic("t", 2);
+        let clock = Arc::new(ManualClock::new());
+        let p = Producer::new(&b, "t", clock.clone());
+        clock.advance(Duration::from_millis(123));
+        p.send(None, vec![1]);
+        let c = b.subscribe("t", "g");
+        let got = c.poll(1);
+        assert_eq!(got[0].message.produced_at_ms, 123);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown topic")]
+    fn unknown_topic_panics() {
+        let b = Broker::new();
+        let clock: SharedClock = Arc::new(ManualClock::new());
+        let _ = Producer::new(&b, "missing", clock);
+    }
+}

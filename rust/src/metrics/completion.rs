@@ -1,0 +1,100 @@
+//! Per-message completion-time recording (Figure 11 / Equations 1–2).
+//!
+//! Completion time is defined by the paper as: the time from when a message
+//! is consumed from the messaging layer until it is entirely processed in
+//! the processing layer. The recorder keeps a full [`Histogram`] plus a
+//! bounded reservoir of raw samples for the scatter plots.
+
+use crate::util::histogram::Histogram;
+use crate::util::prng::Pcg32;
+use std::sync::Mutex;
+use std::time::Duration;
+
+const RESERVOIR: usize = 65_536;
+
+struct Inner {
+    hist: Histogram,
+    samples: Vec<f64>, // seconds
+    seen: u64,
+    rng: Pcg32,
+}
+
+/// Thread-safe completion-time sink.
+pub struct CompletionRecorder {
+    inner: Mutex<Inner>,
+}
+
+impl CompletionRecorder {
+    pub fn new() -> Self {
+        CompletionRecorder {
+            inner: Mutex::new(Inner {
+                hist: Histogram::new(),
+                samples: Vec::new(),
+                seen: 0,
+                rng: Pcg32::new(0xF16_11),
+            }),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let mut i = self.inner.lock().unwrap();
+        i.hist.record(d);
+        i.seen += 1;
+        // Vitter's algorithm R reservoir so the raw-sample scatter stays
+        // unbiased even for long runs.
+        if i.samples.len() < RESERVOIR {
+            i.samples.push(d.as_secs_f64());
+        } else {
+            let seen = i.seen as usize;
+            let j = i.rng.gen_range(0, seen);
+            if j < RESERVOIR {
+                i.samples[j] = d.as_secs_f64();
+            }
+        }
+    }
+
+    pub fn histogram(&self) -> Histogram {
+        self.inner.lock().unwrap().hist.clone()
+    }
+
+    /// Raw samples (seconds), reservoir-bounded.
+    pub fn samples(&self) -> Vec<f64> {
+        self.inner.lock().unwrap().samples.clone()
+    }
+
+    /// Mean completion time in seconds.
+    pub fn mean_secs(&self) -> f64 {
+        self.inner.lock().unwrap().hist.mean().as_secs_f64()
+    }
+}
+
+impl Default for CompletionRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_into_both_sinks() {
+        let r = CompletionRecorder::new();
+        r.record(Duration::from_millis(10));
+        r.record(Duration::from_millis(20));
+        assert_eq!(r.histogram().count(), 2);
+        assert_eq!(r.samples().len(), 2);
+        assert!((r.mean_secs() - 0.015).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory() {
+        let r = CompletionRecorder::new();
+        for i in 0..(RESERVOIR + 1000) {
+            r.record(Duration::from_micros(i as u64 + 1));
+        }
+        assert_eq!(r.samples().len(), RESERVOIR);
+        assert_eq!(r.histogram().count() as usize, RESERVOIR + 1000);
+    }
+}

@@ -1,0 +1,71 @@
+//! Live metrics: counters, per-second time series, and per-message
+//! completion-time recording.
+//!
+//! The paper's evaluation monitors exactly three quantities (§4.3): system
+//! throughput (messages/second), the cumulative total of processed messages,
+//! and per-message completion time. [`PipelineMetrics`] captures all three
+//! with cheap atomic recording on the hot path; the [`experiment`] harness
+//! snapshots them into figure series.
+//!
+//! [`experiment`]: crate::experiment
+
+pub mod completion;
+pub mod registry;
+pub mod timeseries;
+
+pub use completion::CompletionRecorder;
+pub use registry::MetricsRegistry;
+pub use timeseries::TimeSeries;
+
+use crate::util::clock::SharedClock;
+use std::sync::Arc;
+
+/// The metric bundle every pipeline run carries.
+pub struct PipelineMetrics {
+    /// Count of fully processed messages, bucketed per second.
+    pub processed: TimeSeries,
+    /// Per-message completion time (consume → fully processed).
+    pub completion: CompletionRecorder,
+    /// Free-form named counters (consumed, produced, restarts, scale events…).
+    pub counters: MetricsRegistry,
+    pub clock: SharedClock,
+}
+
+impl PipelineMetrics {
+    pub fn new(clock: SharedClock) -> Arc<Self> {
+        Arc::new(PipelineMetrics {
+            processed: TimeSeries::new(clock.clone()),
+            completion: CompletionRecorder::new(),
+            counters: MetricsRegistry::new(),
+            clock,
+        })
+    }
+
+    /// Record one fully-processed message and its completion latency.
+    pub fn record_processed(&self, completion: std::time::Duration) {
+        self.processed.record(1);
+        self.completion.record(completion);
+        self.counters.inc("processed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+    use std::time::Duration;
+
+    #[test]
+    fn bundle_records_all_three() {
+        let clock = Arc::new(ManualClock::new());
+        let m = PipelineMetrics::new(clock.clone());
+        m.record_processed(Duration::from_millis(5));
+        clock.advance(Duration::from_secs(1));
+        m.record_processed(Duration::from_millis(15));
+        assert_eq!(m.counters.get("processed"), 2);
+        assert_eq!(m.processed.total(), 2);
+        assert_eq!(m.completion.histogram().count(), 2);
+        let cum = m.processed.cumulative_series();
+        assert_eq!(cum, vec![(0, 1), (1, 2)]);
+    }
+}

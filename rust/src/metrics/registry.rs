@@ -1,0 +1,131 @@
+//! Named atomic counters and gauges.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Concurrent registry of named counters (monotonic) and gauges (signed,
+/// set/add). Lookup takes a read lock; the counter bump itself is a single
+/// atomic add, so hot paths should cache the `&AtomicU64` via [`counter`].
+///
+/// [`counter`]: MetricsRegistry::counter
+pub struct MetricsRegistry {
+    counters: RwLock<HashMap<String, &'static AtomicU64>>,
+    gauges: RwLock<HashMap<String, &'static AtomicI64>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry { counters: RwLock::new(HashMap::new()), gauges: RwLock::new(HashMap::new()) }
+    }
+
+    /// Get (or create) a counter handle. The handle is `'static` (leaked
+    /// once per name) so hot loops can bump it without any lock.
+    pub fn counter(&self, name: &str) -> &'static AtomicU64 {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return c;
+        }
+        let mut w = self.counters.write().unwrap();
+        w.entry(name.to_string()).or_insert_with(|| Box::leak(Box::new(AtomicU64::new(0))))
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static AtomicI64 {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            return g;
+        }
+        let mut w = self.gauges.write().unwrap();
+        w.entry(name.to_string()).or_insert_with(|| Box::leak(Box::new(AtomicI64::new(0))))
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.counter(name).fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counter(name).load(Ordering::Relaxed)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: i64) {
+        self.gauge(name).store(v, Ordering::Relaxed);
+    }
+
+    pub fn get_gauge(&self, name: &str) -> i64 {
+        self.gauge(name).load(Ordering::Relaxed)
+    }
+
+    /// Snapshot all counters (sorted by name, for reports).
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = MetricsRegistry::new();
+        r.inc("a");
+        r.add("a", 4);
+        assert_eq!(r.get("a"), 5);
+        assert_eq!(r.get("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_set() {
+        let r = MetricsRegistry::new();
+        r.set_gauge("workers", 7);
+        assert_eq!(r.get_gauge("workers"), 7);
+        r.set_gauge("workers", 3);
+        assert_eq!(r.get_gauge("workers"), 3);
+    }
+
+    #[test]
+    fn concurrent_increments_all_land() {
+        let r = Arc::new(MetricsRegistry::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = r.counter("hot");
+                for _ in 0..10_000 {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.get("hot"), 80_000);
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let r = MetricsRegistry::new();
+        r.inc("zeta");
+        r.inc("alpha");
+        let s = r.snapshot();
+        assert_eq!(s[0].0, "alpha");
+        assert_eq!(s[1].0, "zeta");
+    }
+}

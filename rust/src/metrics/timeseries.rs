@@ -1,0 +1,106 @@
+//! Per-second event counting for the throughput / total-processed figures.
+
+use crate::util::clock::SharedClock;
+use std::sync::Mutex;
+
+/// Counts events into one-second buckets keyed by the shared clock.
+///
+/// Figures 8 and 10 plot the cumulative series; Figure 9 pairs the
+/// per-second (throughput) series of two runs.
+pub struct TimeSeries {
+    clock: SharedClock,
+    buckets: Mutex<Vec<u64>>,
+}
+
+impl TimeSeries {
+    pub fn new(clock: SharedClock) -> Self {
+        TimeSeries { clock, buckets: Mutex::new(Vec::new()) }
+    }
+
+    /// Record `n` events at the current clock second.
+    pub fn record(&self, n: u64) {
+        let sec = self.clock.now().as_secs() as usize;
+        let mut b = self.buckets.lock().unwrap();
+        if b.len() <= sec {
+            b.resize(sec + 1, 0);
+        }
+        b[sec] += n;
+    }
+
+    /// Total events recorded.
+    pub fn total(&self) -> u64 {
+        self.buckets.lock().unwrap().iter().sum()
+    }
+
+    /// `(second, events_in_that_second)` — the throughput series.
+    pub fn rate_series(&self) -> Vec<(u64, u64)> {
+        self.buckets.lock().unwrap().iter().enumerate().map(|(i, &c)| (i as u64, c)).collect()
+    }
+
+    /// `(second, cumulative_events)` — the total-processed series.
+    pub fn cumulative_series(&self) -> Vec<(u64, u64)> {
+        let b = self.buckets.lock().unwrap();
+        let mut acc = 0u64;
+        b.iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                acc += c;
+                (i as u64, acc)
+            })
+            .collect()
+    }
+
+    /// Throughput series padded/truncated to exactly `secs` entries, as f64
+    /// (what Figure 9 pairs across runs).
+    pub fn rate_series_f64(&self, secs: usize) -> Vec<f64> {
+        let b = self.buckets.lock().unwrap();
+        (0..secs).map(|i| b.get(i).copied().unwrap_or(0) as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn fixture() -> (Arc<ManualClock>, TimeSeries) {
+        let clock = Arc::new(ManualClock::new());
+        let ts = TimeSeries::new(clock.clone());
+        (clock, ts)
+    }
+
+    #[test]
+    fn buckets_by_second() {
+        let (clock, ts) = fixture();
+        ts.record(2);
+        clock.advance(Duration::from_millis(999));
+        ts.record(1); // still second 0
+        clock.advance(Duration::from_millis(2));
+        ts.record(5); // second 1
+        clock.advance(Duration::from_secs(2));
+        ts.record(1); // second 3
+        assert_eq!(ts.rate_series(), vec![(0, 3), (1, 5), (2, 0), (3, 1)]);
+        assert_eq!(ts.cumulative_series(), vec![(0, 3), (1, 8), (2, 8), (3, 9)]);
+        assert_eq!(ts.total(), 9);
+    }
+
+    #[test]
+    fn rate_series_f64_pads_and_truncates() {
+        let (clock, ts) = fixture();
+        ts.record(4);
+        clock.advance(Duration::from_secs(1));
+        ts.record(6);
+        assert_eq!(ts.rate_series_f64(4), vec![4.0, 6.0, 0.0, 0.0]);
+        assert_eq!(ts.rate_series_f64(1), vec![4.0]);
+    }
+
+    #[test]
+    fn empty_series() {
+        let (_c, ts) = fixture();
+        assert_eq!(ts.total(), 0);
+        assert!(ts.rate_series().is_empty());
+        assert!(ts.cumulative_series().is_empty());
+    }
+}

@@ -1,0 +1,98 @@
+//! Job definitions: processing logic + topology.
+
+use crate::messaging::Message;
+use crate::vml::envelope::Envelope;
+use std::sync::Arc;
+
+/// The processing logic of one job. A fresh instance is created per task
+/// incarnation (let-it-crash wipes in-memory state; durable state goes
+/// through the state-management service).
+pub trait Processor: Send + 'static {
+    /// Process one message; returned messages go to the job's output topic.
+    fn process(&mut self, env: &Envelope) -> Vec<Message>;
+}
+
+/// Builds processor instances for task (re)starts.
+pub type ProcessorFactory = Arc<dyn Fn() -> Box<dyn Processor> + Send + Sync>;
+
+/// Where a task's output messages go (virtual producer pool in Reactive
+/// Liquid, a direct broker producer in Liquid, nothing for terminal jobs).
+pub trait OutputSink: Send + Sync {
+    fn publish(&self, msg: Message);
+}
+
+/// Terminal jobs produce nothing.
+pub struct NoOutput;
+
+impl OutputSink for NoOutput {
+    fn publish(&self, _msg: Message) {}
+}
+
+/// A job: name, input/output topics, logic.
+#[derive(Clone)]
+pub struct Job {
+    pub name: String,
+    pub input_topic: String,
+    /// `None` for terminal jobs.
+    pub output_topic: Option<String>,
+    pub factory: ProcessorFactory,
+}
+
+impl Job {
+    pub fn new(
+        name: &str,
+        input_topic: &str,
+        output_topic: Option<&str>,
+        factory: ProcessorFactory,
+    ) -> Self {
+        Job {
+            name: name.to_string(),
+            input_topic: input_topic.to_string(),
+            output_topic: output_topic.map(|s| s.to_string()),
+            factory,
+        }
+    }
+
+    /// Convenience: job from a plain function (stateless processors).
+    pub fn from_fn(
+        name: &str,
+        input_topic: &str,
+        output_topic: Option<&str>,
+        f: impl Fn(&Envelope) -> Vec<Message> + Send + Sync + Clone + 'static,
+    ) -> Self {
+        struct FnProcessor<F>(F);
+        impl<F: Fn(&Envelope) -> Vec<Message> + Send + 'static> Processor for FnProcessor<F> {
+            fn process(&mut self, env: &Envelope) -> Vec<Message> {
+                (self.0)(env)
+            }
+        }
+        Job::new(
+            name,
+            input_topic,
+            output_topic,
+            Arc::new(move || Box::new(FnProcessor(f.clone())) as Box<dyn Processor>),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn from_fn_builds_fresh_processors() {
+        let job = Job::from_fn("echo", "in", Some("out"), |env| vec![env.message.clone()]);
+        let mut p1 = (job.factory)();
+        let mut p2 = (job.factory)();
+        let env = Envelope::new(Message::from_str("x"), 0, 0, Duration::ZERO);
+        assert_eq!(p1.process(&env).len(), 1);
+        assert_eq!(p2.process(&env)[0].payload_str(), Some("x"));
+        assert_eq!(job.output_topic.as_deref(), Some("out"));
+    }
+
+    #[test]
+    fn no_output_swallow() {
+        NoOutput.publish(Message::from_str("gone")); // must not panic
+    }
+}

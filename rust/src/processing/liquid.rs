@@ -1,0 +1,297 @@
+//! The Liquid baseline (Fernandez et al., CIDR'15) as the paper's §4.1
+//! implements it: processing layer in plain code directly on the
+//! messaging layer.
+//!
+//! Each task is a thread that *is* a consumer-group member: it polls a
+//! batch of `n` messages, processes all of them sequentially, publishes
+//! outputs with its own producer, commits, then polls the next batch —
+//! exactly the consume/process cycle behind Equation 1
+//! (`T = n·t_c + i·t_p`). Tasks beyond the topic's partition count receive
+//! no assignment and idle, which is the scalability cap the Reactive
+//! Liquid lifts.
+
+use super::job::Job;
+use crate::messaging::{Broker, Producer};
+use crate::metrics::PipelineMetrics;
+use crate::util::clock::SharedClock;
+use crate::vml::envelope::Envelope;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+struct LiquidTask {
+    name: String,
+    stop: Arc<AtomicBool>,
+    alive: Arc<AtomicBool>,
+    processed: Arc<AtomicU64>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// One job executed Liquid-style with a fixed task count.
+pub struct LiquidJob {
+    pub job: Job,
+    broker: Arc<Broker>,
+    clock: SharedClock,
+    metrics: Arc<PipelineMetrics>,
+    batch: usize,
+    tasks: Mutex<Vec<Arc<LiquidTask>>>,
+    /// Job-lifetime processed count (survives task replacement on heal).
+    processed_total: AtomicU64,
+    /// Simulated extra per-message processing cost (models the paper's
+    /// slower testbed; 0 in production use).
+    synthetic_cost: Duration,
+}
+
+impl LiquidJob {
+    /// Start `task_count` tasks for `job`.
+    pub fn start(
+        broker: &Arc<Broker>,
+        job: Job,
+        task_count: usize,
+        batch: usize,
+        clock: SharedClock,
+        metrics: Arc<PipelineMetrics>,
+        synthetic_cost: Duration,
+    ) -> Arc<Self> {
+        let lj = Arc::new(LiquidJob {
+            job,
+            broker: broker.clone(),
+            clock,
+            metrics,
+            batch,
+            tasks: Mutex::new(Vec::new()),
+            processed_total: AtomicU64::new(0),
+            synthetic_cost,
+        });
+        for i in 0..task_count {
+            lj.spawn_task(i);
+        }
+        lj
+    }
+
+    fn spawn_task(self: &Arc<Self>, id: usize) {
+        let me = self.clone();
+        let task = Arc::new(LiquidTask {
+            name: format!("liquid:{}:{id}", self.job.name),
+            stop: Arc::new(AtomicBool::new(false)),
+            alive: Arc::new(AtomicBool::new(true)),
+            processed: Arc::new(AtomicU64::new(0)),
+            handle: Mutex::new(None),
+        });
+        let t = task.clone();
+        let handle = std::thread::Builder::new()
+            .name(task.name.clone())
+            .spawn(move || me.run_task(t))
+            .expect("spawn liquid task");
+        *task.handle.lock().unwrap() = Some(handle);
+        self.tasks.lock().unwrap().push(task);
+    }
+
+    fn run_task(self: Arc<Self>, task: Arc<LiquidTask>) {
+        // The task IS the consumer — this membership is what caps Liquid.
+        let group = format!("liquid-{}", self.job.name);
+        let consumer = self.broker.subscribe(&self.job.input_topic, &group);
+        let producer = self
+            .job
+            .output_topic
+            .as_ref()
+            .map(|t| Producer::new(&self.broker, t, self.clock.clone()));
+        let mut processor = (self.job.factory)();
+        while !task.stop.load(Ordering::SeqCst) {
+            // Consume n messages…
+            let batch = consumer.poll(self.batch);
+            if batch.is_empty() {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            let consumed_at = self.clock.now();
+            // …then process all n before consuming again (Eq. 1).
+            let mut max_next: Vec<(usize, u64)> = Vec::new();
+            for om in batch {
+                let env = Envelope::new(om.message, om.partition, om.offset, consumed_at);
+                if !self.synthetic_cost.is_zero() {
+                    std::thread::sleep(self.synthetic_cost);
+                }
+                let outputs = processor.process(&env);
+                if let Some(p) = &producer {
+                    for m in outputs {
+                        p.send_message(m);
+                    }
+                }
+                let done = self.clock.now();
+                self.metrics.record_processed(done.saturating_sub(consumed_at));
+                task.processed.fetch_add(1, Ordering::Relaxed);
+                self.processed_total.fetch_add(1, Ordering::Relaxed);
+                if let Some(e) = max_next.iter_mut().find(|(p, _)| *p == om.partition) {
+                    e.1 = e.1.max(om.offset + 1);
+                } else {
+                    max_next.push((om.partition, om.offset + 1));
+                }
+            }
+            for (p, next) in max_next {
+                consumer.commit(p, next);
+            }
+        }
+        consumer.close();
+        task.alive.store(false, Ordering::SeqCst);
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.tasks.lock().unwrap().len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.tasks.lock().unwrap().iter().filter(|t| t.alive.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn total_processed(&self) -> u64 {
+        self.processed_total.load(Ordering::Relaxed)
+    }
+
+    /// Kill one live task (failure injection). Returns true if one died.
+    pub fn kill_one(&self) -> bool {
+        let tasks = self.tasks.lock().unwrap();
+        for t in tasks.iter() {
+            if t.alive.load(Ordering::SeqCst) {
+                t.stop.store(true, Ordering::SeqCst);
+                if let Some(h) = t.handle.lock().unwrap().take() {
+                    let _ = h.join();
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Restart all dead tasks (the node hosting them came back). In
+    /// Liquid there is no supervision service: recovery waits for the
+    /// node restart, which is why its healing is slower in Fig. 10.
+    pub fn heal(self: &Arc<Self>) -> usize {
+        self.heal_n(usize::MAX)
+    }
+
+    /// Restart up to `n` dead tasks (one node's share coming back while
+    /// other nodes stay down).
+    pub fn heal_n(self: &Arc<Self>, n: usize) -> usize {
+        let dead: Vec<usize> = {
+            let tasks = self.tasks.lock().unwrap();
+            tasks
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !t.alive.load(Ordering::SeqCst))
+                .map(|(i, _)| i)
+                .take(n)
+                .collect()
+        };
+        // Replace dead task slots with fresh threads.
+        let mut healed = 0;
+        {
+            let mut tasks = self.tasks.lock().unwrap();
+            // Remove dead entries (descending index).
+            for &i in dead.iter().rev() {
+                tasks.remove(i);
+                healed += 1;
+            }
+        }
+        for i in 0..healed {
+            self.spawn_task(1000 + i); // fresh ids; names only matter for debugging
+        }
+        healed
+    }
+
+    pub fn stop_all(&self) {
+        let tasks = self.tasks.lock().unwrap();
+        for t in tasks.iter() {
+            t.stop.store(true, Ordering::SeqCst);
+        }
+        for t in tasks.iter() {
+            if let Some(h) = t.handle.lock().unwrap().take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::messaging::Message;
+    use crate::util::clock::real_clock;
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    fn fixture(partitions: usize, tasks: usize) -> (Arc<Broker>, Arc<LiquidJob>, Arc<PipelineMetrics>) {
+        let broker = Broker::new();
+        broker.create_topic("in", partitions);
+        broker.create_topic("out", partitions);
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let job = Job::from_fn("j", "in", Some("out"), |env| vec![env.message.clone()]);
+        let lj = LiquidJob::start(&broker, job, tasks, 8, clock, metrics.clone(), Duration::ZERO);
+        (broker, lj, metrics)
+    }
+
+    #[test]
+    fn processes_and_forwards() {
+        let (broker, lj, metrics) = fixture(3, 3);
+        let t = broker.topic("in").unwrap();
+        for i in 0..30u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() == 30));
+        let out = broker.topic("out").unwrap();
+        assert!(wait_until(Duration::from_secs(2), || out.total_messages() == 30));
+        assert_eq!(metrics.counters.get("processed"), 30);
+        lj.stop_all();
+    }
+
+    #[test]
+    fn six_tasks_only_three_effective() {
+        // The Liquid cap: with 3 partitions, 6 tasks exist but only 3 get
+        // partitions. Throughput-wise the extra three contribute nothing.
+        let (broker, lj, _m) = fixture(3, 6);
+        let t = broker.topic("in").unwrap();
+        for i in 0..60u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() == 60));
+        let per_task: Vec<u64> = lj
+            .tasks
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|t| t.processed.load(Ordering::Relaxed))
+            .collect();
+        let active = per_task.iter().filter(|&&n| n > 0).count();
+        assert!(active <= 3, "at most partition-count tasks active, got {per_task:?}");
+        lj.stop_all();
+    }
+
+    #[test]
+    fn kill_then_heal_resumes() {
+        let (broker, lj, _m) = fixture(1, 1);
+        let t = broker.topic("in").unwrap();
+        for i in 0..10u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() >= 10));
+        assert!(lj.kill_one());
+        assert_eq!(lj.alive_count(), 0);
+        for i in 10..20u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        assert_eq!(lj.heal(), 1);
+        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() >= 20));
+        lj.stop_all();
+    }
+}

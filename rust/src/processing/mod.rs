@@ -1,0 +1,29 @@
+//! Processing layer (§3.2.5): jobs, tasks, task pools, and the two
+//! architecture runners the evaluation compares.
+//!
+//! A [`Job`] is a unit of processing logic ([`Processor`]) reading one
+//! topic and optionally writing another; jobs chain into incremental
+//! pipelines through the messaging layer (the Liquid property that Lambda
+//! and Kappa lack). A job executes as some number of **tasks**:
+//!
+//! - [`liquid`] — the baseline: each task *is* a consumer-group member
+//!   polling the messaging layer directly, so at most `partitions` tasks
+//!   make progress and extra tasks idle (Fig. 2);
+//! - [`reactive`] — the paper's architecture: tasks are actors fed by the
+//!   virtual messaging layer through a router, pooled ([`task_pool`]) and
+//!   scaled by the elastic worker service, with completion metrics and
+//!   per-task processing-time estimates feeding the routing policies.
+
+pub mod job;
+pub mod liquid;
+pub mod pipeline;
+pub mod reactive;
+pub mod task;
+pub mod task_pool;
+
+pub use job::{Job, NoOutput, OutputSink, Processor, ProcessorFactory};
+pub use liquid::LiquidJob;
+pub use pipeline::Pipeline;
+pub use reactive::ReactiveJob;
+pub use task::{TaskHandle, TaskStats};
+pub use task_pool::TaskPool;

@@ -1,0 +1,112 @@
+//! Pipelines: jobs chained through messaging-layer topics.
+//!
+//! Liquid's incremental processing (§2): "a set of multiple jobs connected
+//! in series, where the output of one job is the input of the next". A
+//! [`Pipeline`] is the static description; the experiment harness
+//! instantiates it under either architecture.
+
+use super::job::Job;
+use crate::messaging::Broker;
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+/// An ordered set of jobs forming an incremental processing pipeline.
+#[derive(Clone)]
+pub struct Pipeline {
+    pub name: String,
+    pub jobs: Vec<Job>,
+}
+
+impl Pipeline {
+    pub fn new(name: &str, jobs: Vec<Job>) -> Self {
+        Pipeline { name: name.to_string(), jobs }
+    }
+
+    /// All topics the pipeline touches (inputs + outputs, deduped, ordered).
+    pub fn topics(&self) -> Vec<String> {
+        let mut set = BTreeSet::new();
+        for j in &self.jobs {
+            set.insert(j.input_topic.clone());
+            if let Some(o) = &j.output_topic {
+                set.insert(o.clone());
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Create every topic on the broker with `partitions` each (§4.3:
+    /// "every topic of Apache Kafka in the messaging layer has three
+    /// partitions in all of the implementations").
+    pub fn create_topics(&self, broker: &Arc<Broker>, partitions: usize) {
+        for t in self.topics() {
+            broker.create_topic(&t, partitions);
+        }
+    }
+
+    /// Validate the chain: each job's input must be either the pipeline
+    /// source or some other job's output; names must be unique.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.jobs.is_empty() {
+            return Err("pipeline has no jobs".into());
+        }
+        let mut names = BTreeSet::new();
+        for j in &self.jobs {
+            if !names.insert(j.name.clone()) {
+                return Err(format!("duplicate job name '{}'", j.name));
+            }
+            if Some(&j.input_topic) == j.output_topic.as_ref() {
+                return Err(format!("job '{}' reads and writes topic '{}'", j.name, j.input_topic));
+            }
+        }
+        let outputs: BTreeSet<&String> =
+            self.jobs.iter().filter_map(|j| j.output_topic.as_ref()).collect();
+        let sources: Vec<&Job> =
+            self.jobs.iter().filter(|j| !outputs.contains(&j.input_topic)).collect();
+        if sources.is_empty() {
+            return Err("pipeline has a topic cycle (no source job)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(name: &str, input: &str, output: Option<&str>) -> Job {
+        Job::from_fn(name, input, output, |_e| vec![])
+    }
+
+    #[test]
+    fn topics_deduped_sorted() {
+        let p = Pipeline::new(
+            "tcmm",
+            vec![job("micro", "traj", Some("micro-events")), job("macro", "micro-events", Some("macro-events"))],
+        );
+        assert_eq!(p.topics(), vec!["macro-events", "micro-events", "traj"]);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn create_topics_on_broker() {
+        let p = Pipeline::new("p", vec![job("a", "in", Some("out"))]);
+        let b = Broker::new();
+        p.create_topics(&b, 3);
+        assert_eq!(b.topic("in").unwrap().partition_count(), 3);
+        assert_eq!(b.topic("out").unwrap().partition_count(), 3);
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(Pipeline::new("e", vec![]).validate().is_err());
+        let dup = Pipeline::new("d", vec![job("x", "a", None), job("x", "b", None)]);
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+        let self_loop = Pipeline::new("s", vec![job("x", "a", Some("a"))]);
+        assert!(self_loop.validate().is_err());
+        let cycle = Pipeline::new(
+            "c",
+            vec![job("x", "a", Some("b")), job("y", "b", Some("a"))],
+        );
+        assert!(cycle.validate().unwrap_err().contains("cycle"));
+    }
+}

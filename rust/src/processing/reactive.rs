@@ -1,0 +1,279 @@
+//! The Reactive Liquid job runner: full five-layer wiring for one job.
+//!
+//! messaging layer (broker topic) → virtual consumer group → asynchronous
+//! messaging layer (actor mailboxes) → task pool → virtual producer pool →
+//! messaging layer (output topic). The reactive processing layer drives
+//! it: the elastic worker service scales the task pool, and the
+//! supervision service watches the virtual consumers and the task pool.
+
+use super::job::{Job, NoOutput, OutputSink};
+use super::task_pool::TaskPool;
+use crate::actor::system::ActorSystem;
+use crate::config::{ElasticConfig, RouterPolicy};
+use crate::messaging::{Broker, Message};
+use crate::metrics::PipelineMetrics;
+use crate::reactive::elastic::ElasticController;
+use crate::reactive::state::OffsetStore;
+use crate::reactive::supervision::{RestartPolicy, Supervisor};
+use crate::util::clock::SharedClock;
+use crate::vml::router::TaskRouter;
+use crate::vml::virtual_consumer::VirtualConsumerGroup;
+use crate::vml::virtual_topic::VirtualTopic;
+use std::sync::Arc;
+
+/// Adapter: task outputs go through the virtual producer pool of the
+/// job's *output* virtual topic.
+struct VtOutput {
+    vt: Arc<VirtualTopic>,
+}
+
+impl OutputSink for VtOutput {
+    fn publish(&self, msg: Message) {
+        self.vt.publish(msg);
+    }
+}
+
+/// One job running under the Reactive Liquid architecture.
+pub struct ReactiveJob {
+    pub job: Job,
+    pub router: Arc<TaskRouter>,
+    pub pool: Arc<TaskPool>,
+    pub consumers: Arc<VirtualConsumerGroup>,
+    pub elastic: Arc<ElasticController>,
+}
+
+impl ReactiveJob {
+    /// Wire and start everything for `job`.
+    ///
+    /// `input_vt` is the virtual topic of the job's input; `output_vt` the
+    /// one for its output (None for terminal jobs). `initial_tasks` seeds
+    /// the pool; the elastic controller takes it from there.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        system: &Arc<ActorSystem>,
+        broker: &Arc<Broker>,
+        job: Job,
+        input_vt: &Arc<VirtualTopic>,
+        output_vt: Option<&Arc<VirtualTopic>>,
+        supervisor: &Arc<Supervisor>,
+        elastic_cfg: ElasticConfig,
+        router_policy: RouterPolicy,
+        batch: usize,
+        initial_tasks: usize,
+        clock: SharedClock,
+        metrics: Arc<PipelineMetrics>,
+        _offsets: Arc<OffsetStore>,
+    ) -> Arc<Self> {
+        let router = TaskRouter::new(router_policy);
+        let output: Arc<dyn OutputSink> = match output_vt {
+            Some(vt) => Arc::new(VtOutput { vt: vt.clone() }),
+            None => Arc::new(NoOutput),
+        };
+        let pool = TaskPool::start(
+            system,
+            job.clone(),
+            output,
+            router.clone(),
+            metrics.clone(),
+            clock.clone(),
+            initial_tasks,
+            elastic_cfg.min_workers,
+            elastic_cfg.max_workers,
+            1024,
+        );
+        // Virtual consumer group: as many consumers as partitions.
+        let partitions = broker
+            .topic(&job.input_topic)
+            .map(|t| t.partition_count())
+            .unwrap_or(1);
+        let consumers = input_vt.subscribe(&job.name, partitions, batch, router.clone());
+
+        // Elastic worker service drives the task pool.
+        let elastic = ElasticController::new(
+            &format!("tasks:{}", job.name),
+            elastic_cfg,
+            clock.clone(),
+            pool.clone(),
+        );
+        elastic.start();
+
+        // Supervision: virtual consumers heal via the group, the pool
+        // heals to its minimum size.
+        {
+            let g = consumers.clone();
+            let g2 = consumers.clone();
+            supervisor.supervise(
+                &format!("vcg:{}:{}", job.input_topic, job.name),
+                RestartPolicy::default(),
+                move || g.alive_count() == g.consumers().len(),
+                move || g2.heal() > 0,
+            );
+        }
+        {
+            let p = pool.clone();
+            let p2 = pool.clone();
+            let min = elastic_cfg.min_workers;
+            supervisor.supervise(
+                &format!("pool:{}", job.name),
+                RestartPolicy::default(),
+                move || p.task_count() >= min,
+                move || {
+                    p2.ensure(min);
+                    true
+                },
+            );
+        }
+
+        Arc::new(ReactiveJob { job, router, pool, consumers, elastic })
+    }
+
+    pub fn total_processed(&self) -> u64 {
+        self.pool.total_processed()
+    }
+
+    pub fn stop(&self) {
+        self.elastic.stop();
+        self.consumers.stop_all();
+        self.pool.stop_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::real_clock;
+    use std::time::Duration;
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    #[test]
+    fn five_layer_round_trip_with_more_tasks_than_partitions() {
+        let broker = Broker::new();
+        broker.create_topic("in", 3);
+        broker.create_topic("mid", 3);
+        let system = ActorSystem::new();
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let offsets = Arc::new(OffsetStore::in_memory());
+        let supervisor = Supervisor::new(clock.clone(), Duration::from_millis(20));
+
+        let vt_in = VirtualTopic::new(
+            "in",
+            &broker,
+            &system,
+            clock.clone(),
+            metrics.clone(),
+            offsets.clone(),
+            (1, 1, 2),
+        );
+        let vt_mid = VirtualTopic::new(
+            "mid",
+            &broker,
+            &system,
+            clock.clone(),
+            metrics.clone(),
+            offsets.clone(),
+            (1, 1, 2),
+        );
+
+        let job = Job::from_fn("echo", "in", Some("mid"), |env| vec![env.message.clone()]);
+        let cfg = ElasticConfig { min_workers: 6, max_workers: 12, ..Default::default() };
+        let rj = ReactiveJob::start(
+            &system,
+            &broker,
+            job,
+            &vt_in,
+            Some(&vt_mid),
+            &supervisor,
+            cfg,
+            RouterPolicy::RoundRobin,
+            8,
+            6, // 6 tasks > 3 partitions: impossible in Liquid
+            clock.clone(),
+            metrics.clone(),
+            offsets,
+        );
+        assert_eq!(rj.pool.task_count(), 6, "task count independent of partitions");
+
+        let t = broker.topic("in").unwrap();
+        for i in 0..60u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        assert!(
+            wait_until(Duration::from_secs(5), || rj.total_processed() == 60),
+            "processed {}",
+            rj.total_processed()
+        );
+        // Outputs forwarded through the mid virtual topic's producer pool.
+        let mid = broker.topic("mid").unwrap();
+        assert!(wait_until(Duration::from_secs(3), || mid.total_messages() == 60));
+        // More than 3 tasks actually did work (the whole point):
+        let worked = rj.pool.tasks().iter().filter(|t| t.stats.processed() > 0).count();
+        assert!(worked > 3, "only {worked} tasks worked");
+
+        rj.stop();
+        vt_in.stop();
+        vt_mid.stop();
+        system.shutdown();
+    }
+
+    #[test]
+    fn supervisor_heals_killed_consumers_and_tasks() {
+        let broker = Broker::new();
+        broker.create_topic("in", 2);
+        let system = ActorSystem::new();
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let offsets = Arc::new(OffsetStore::in_memory());
+        let supervisor = Supervisor::new(clock.clone(), Duration::from_millis(10));
+        let vt_in = VirtualTopic::new(
+            "in",
+            &broker,
+            &system,
+            clock.clone(),
+            metrics.clone(),
+            offsets.clone(),
+            (1, 1, 2),
+        );
+        let job = Job::from_fn("sink", "in", None, |_e| vec![]);
+        let rj = ReactiveJob::start(
+            &system,
+            &broker,
+            job,
+            &vt_in,
+            None,
+            &supervisor,
+            ElasticConfig { min_workers: 2, max_workers: 4, ..Default::default() },
+            RouterPolicy::ShortestQueue,
+            4,
+            2,
+            clock.clone(),
+            metrics.clone(),
+            offsets,
+        );
+        // Kill a consumer and a task; sweeps must heal both.
+        rj.consumers.kill_one(0);
+        rj.pool.kill(1);
+        assert!(rj.consumers.alive_count() < rj.consumers.consumers().len()
+            || rj.pool.task_count() < 2);
+        for _ in 0..10 {
+            supervisor.sweep();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(rj.consumers.alive_count(), rj.consumers.consumers().len());
+        assert_eq!(rj.pool.task_count(), 2);
+        assert!(supervisor.restart_count() >= 2);
+        rj.stop();
+        vt_in.stop();
+        system.shutdown();
+    }
+}

@@ -1,0 +1,237 @@
+//! Tasks: actor workers executing a job's processor, instrumented for
+//! completion time and per-task processing-rate estimates.
+
+use super::job::{OutputSink, ProcessorFactory};
+use crate::actor::mailbox::SendError;
+use crate::actor::system::{Actor, ActorRef, ActorSystem, Ctx};
+use crate::metrics::PipelineMetrics;
+use crate::util::clock::SharedClock;
+use crate::vml::envelope::Envelope;
+use crate::vml::router::RouteTarget;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Lock-free EWMA of a task's per-message processing seconds (f64 bits in
+/// an AtomicU64). Routers read this for the completion-time policy.
+pub struct TaskStats {
+    ewma_bits: AtomicU64,
+    processed: AtomicU64,
+}
+
+const EWMA_ALPHA: f64 = 0.2;
+
+impl TaskStats {
+    pub fn new() -> Arc<Self> {
+        Arc::new(TaskStats { ewma_bits: AtomicU64::new(0f64.to_bits()), processed: AtomicU64::new(0) })
+    }
+
+    pub fn record(&self, secs: f64) {
+        self.processed.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.ewma_bits.load(Ordering::Relaxed);
+        loop {
+            let old = f64::from_bits(cur);
+            let new = if old == 0.0 { secs } else { old + EWMA_ALPHA * (secs - old) };
+            match self.ewma_bits.compare_exchange_weak(
+                cur,
+                new.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Mean seconds per message (0 until the first sample).
+    pub fn est_secs(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed.load(Ordering::Relaxed)
+    }
+}
+
+/// The task actor: processes envelopes, publishes outputs, records
+/// completion time (consume → fully processed — the paper's §4.3 metric).
+pub struct TaskActor {
+    processor: Box<dyn super::job::Processor>,
+    output: Arc<dyn OutputSink>,
+    stats: Arc<TaskStats>,
+    metrics: Arc<PipelineMetrics>,
+    clock: SharedClock,
+}
+
+impl Actor for TaskActor {
+    type Msg = Envelope;
+
+    fn receive(&mut self, env: Envelope, _ctx: &mut Ctx<Envelope>) {
+        let start = self.clock.now();
+        let outputs = self.processor.process(&env);
+        for m in outputs {
+            self.output.publish(m);
+        }
+        let end = self.clock.now();
+        self.stats.record(end.saturating_sub(start).as_secs_f64());
+        self.metrics.record_processed(end.saturating_sub(env.consumed_at));
+    }
+}
+
+/// Routable handle to one task (actor ref + live stats).
+pub struct TaskHandle {
+    pub actor: ActorRef<Envelope>,
+    pub stats: Arc<TaskStats>,
+    pub path: String,
+}
+
+impl TaskHandle {
+    /// Spawn a task actor for `job` with the given id.
+    pub fn spawn(
+        system: &Arc<ActorSystem>,
+        job_name: &str,
+        task_id: usize,
+        mailbox_capacity: usize,
+        factory: ProcessorFactory,
+        output: Arc<dyn OutputSink>,
+        metrics: Arc<PipelineMetrics>,
+        clock: SharedClock,
+    ) -> Arc<Self> {
+        let stats = TaskStats::new();
+        let path = format!("task:{job_name}:{task_id}");
+        let st = stats.clone();
+        let actor = system.spawn(&path, mailbox_capacity, move || TaskActor {
+            processor: (factory)(),
+            output: output.clone(),
+            stats: st.clone(),
+            metrics: metrics.clone(),
+            clock: clock.clone(),
+        });
+        Arc::new(TaskHandle { actor, stats, path })
+    }
+}
+
+impl RouteTarget for TaskHandle {
+    fn deliver(&self, env: Envelope) -> Result<(), (SendError, Envelope)> {
+        // Non-blocking so routers can spill to other tasks; reconstruct the
+        // envelope on failure from the clone we must take anyway (Arc bump).
+        let backup = env.clone();
+        match self.actor.try_tell(env) {
+            Ok(()) => Ok(()),
+            Err(e) => Err((e, backup)),
+        }
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.actor.mailbox_depth()
+    }
+
+    fn est_proc_secs(&self) -> f64 {
+        self.stats.est_secs()
+    }
+
+    fn is_alive(&self) -> bool {
+        !self.actor.is_closed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::messaging::Message;
+    use crate::processing::job::{Job, NoOutput};
+    use crate::util::clock::real_clock;
+    use std::time::Duration;
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let s = TaskStats::new();
+        for _ in 0..100 {
+            s.record(0.01);
+        }
+        assert!((s.est_secs() - 0.01).abs() < 1e-9);
+        assert_eq!(s.processed(), 100);
+        // Shift regime; ewma follows.
+        for _ in 0..100 {
+            s.record(0.05);
+        }
+        assert!((s.est_secs() - 0.05).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ewma_concurrent_updates_stay_bounded() {
+        let s = TaskStats::new();
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    s.record(0.02);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((s.est_secs() - 0.02).abs() < 1e-9);
+        assert_eq!(s.processed(), 40_000);
+    }
+
+    #[test]
+    fn task_processes_and_records() {
+        let system = ActorSystem::new();
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let job = Job::from_fn("t", "in", None, |_env| vec![]);
+        let task = TaskHandle::spawn(
+            &system,
+            "t",
+            0,
+            64,
+            job.factory.clone(),
+            Arc::new(NoOutput),
+            metrics.clone(),
+            clock.clone(),
+        );
+        let env = Envelope::new(Message::from_str("hi"), 0, 0, clock.now());
+        task.deliver(env).unwrap();
+        assert!(wait_until(Duration::from_secs(2), || task.stats.processed() == 1));
+        assert_eq!(metrics.counters.get("processed"), 1);
+        assert!(task.est_proc_secs() >= 0.0);
+        system.shutdown();
+    }
+
+    #[test]
+    fn dead_task_rejects_delivery() {
+        let system = ActorSystem::new();
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let job = Job::from_fn("t", "in", None, |_env| vec![]);
+        let task = TaskHandle::spawn(
+            &system,
+            "t",
+            1,
+            8,
+            job.factory.clone(),
+            Arc::new(NoOutput),
+            metrics,
+            clock.clone(),
+        );
+        system.remove("task:t:1");
+        let env = Envelope::new(Message::from_str("x"), 0, 0, Duration::ZERO);
+        assert!(task.deliver(env).is_err());
+        assert!(!task.is_alive());
+        system.shutdown();
+    }
+}

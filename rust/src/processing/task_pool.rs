@@ -1,0 +1,283 @@
+//! Task pool: the elastic set of tasks executing one job.
+//!
+//! §3.2.5: "every job consists of a number of tasks, which is based on the
+//! workload of the job" — the pool implements [`ScalableTarget`] so the
+//! elastic worker service resizes it, and it keeps the job's [`TaskRouter`]
+//! target list in sync on every resize. The task pool *is* the paper's
+//! "task pool [that] distributes the messages and balances the load among
+//! the tasks" — distribution itself happens in the router.
+
+use super::job::{Job, OutputSink};
+use super::task::TaskHandle;
+use crate::actor::system::ActorSystem;
+use crate::metrics::PipelineMetrics;
+use crate::reactive::elastic::ScalableTarget;
+use crate::util::clock::SharedClock;
+use crate::vml::router::{RouteTarget, TaskRouter};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Elastic pool of task actors for one job.
+pub struct TaskPool {
+    system: Arc<ActorSystem>,
+    job: Job,
+    output: Arc<dyn OutputSink>,
+    router: Arc<TaskRouter>,
+    metrics: Arc<PipelineMetrics>,
+    clock: SharedClock,
+    tasks: RwLock<Vec<Arc<TaskHandle>>>,
+    next_id: AtomicUsize,
+    bounds: Mutex<(usize, usize)>,
+    mailbox_capacity: usize,
+    /// Messages processed by tasks that have since been retired (scale-in
+    /// or kill) — keeps `total_processed` monotone across resizes.
+    retired: std::sync::atomic::AtomicU64,
+}
+
+impl TaskPool {
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        system: &Arc<ActorSystem>,
+        job: Job,
+        output: Arc<dyn OutputSink>,
+        router: Arc<TaskRouter>,
+        metrics: Arc<PipelineMetrics>,
+        clock: SharedClock,
+        initial: usize,
+        min: usize,
+        max: usize,
+        mailbox_capacity: usize,
+    ) -> Arc<Self> {
+        let pool = Arc::new(TaskPool {
+            system: system.clone(),
+            job,
+            output,
+            router,
+            metrics,
+            clock,
+            tasks: RwLock::new(Vec::new()),
+            next_id: AtomicUsize::new(0),
+            bounds: Mutex::new((min.max(1), max.max(1))),
+            mailbox_capacity,
+            retired: std::sync::atomic::AtomicU64::new(0),
+        });
+        pool.scale_to(initial);
+        pool
+    }
+
+    fn sync_router(&self, tasks: &[Arc<TaskHandle>]) {
+        self.router
+            .set_targets(tasks.iter().map(|t| t.clone() as Arc<dyn RouteTarget>).collect());
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.tasks.read().unwrap().len()
+    }
+
+    pub fn tasks(&self) -> Vec<Arc<TaskHandle>> {
+        self.tasks.read().unwrap().clone()
+    }
+
+    /// Total processed over the pool's lifetime (live + retired tasks).
+    pub fn total_processed(&self) -> u64 {
+        let live: u64 = self.tasks.read().unwrap().iter().map(|t| t.stats.processed()).sum();
+        live + self.retired.load(Ordering::Relaxed)
+    }
+
+    fn retire(&self, t: &Arc<TaskHandle>) {
+        self.retired.fetch_add(t.stats.processed(), Ordering::Relaxed);
+    }
+
+    /// Kill `count` tasks (failure injection): their actors are removed
+    /// and messages queued in their mailboxes are *lost* — the virtual
+    /// consumer already committed them after routing. This is exactly the
+    /// paper's failure cost ("not only does the computing power decrease
+    /// but also the system takes time to detect the failure and heal
+    /// itself", §4.4.2): delivery to tasks is at-most-once past the
+    /// commit point, and Fig. 10's Reactive curves dip accordingly.
+    pub fn kill(&self, count: usize) -> usize {
+        let mut tasks = self.tasks.write().unwrap();
+        let n = count.min(tasks.len());
+        for _ in 0..n {
+            if let Some(t) = tasks.pop() {
+                // Crash, not graceful remove: queued work must die with
+                // the node, or "failed" runs would transiently exceed the
+                // pool's capacity by draining doomed mailboxes.
+                self.system.kill(&t.path);
+                self.retire(&t);
+            }
+        }
+        self.sync_router(&tasks);
+        self.metrics.counters.add("tasks.killed", n as u64);
+        n
+    }
+
+    /// Ensure at least `n` live tasks (supervision's heal action).
+    pub fn ensure(&self, n: usize) {
+        let (min, max) = *self.bounds.lock().unwrap();
+        let n = n.clamp(min, max);
+        if self.task_count() < n {
+            self.scale_to(n);
+        }
+    }
+
+    pub fn stop_all(&self) {
+        let mut tasks = self.tasks.write().unwrap();
+        for t in tasks.drain(..) {
+            self.system.remove(&t.path);
+            self.retire(&t);
+        }
+        self.sync_router(&[]);
+    }
+}
+
+impl ScalableTarget for TaskPool {
+    fn worker_count(&self) -> usize {
+        self.task_count()
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.router.total_depth()
+    }
+
+    fn scale_to(&self, n: usize) {
+        let (min, max) = *self.bounds.lock().unwrap();
+        let n = n.clamp(min, max);
+        let mut tasks = self.tasks.write().unwrap();
+        while tasks.len() < n {
+            let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+            tasks.push(TaskHandle::spawn(
+                &self.system,
+                &self.job.name,
+                id,
+                self.mailbox_capacity,
+                self.job.factory.clone(),
+                self.output.clone(),
+                self.metrics.clone(),
+                self.clock.clone(),
+            ));
+        }
+        while tasks.len() > n {
+            if let Some(t) = tasks.pop() {
+                // Graceful: scale-in drains the task's queue first, then
+                // folds its lifetime count into the retired total.
+                self.system.remove(&t.path);
+                self.retire(&t);
+            }
+        }
+        self.sync_router(&tasks);
+        self.metrics.counters.inc("tasks.scale_events");
+        self.metrics.counters.set_gauge(&format!("tasks.{}", self.job.name), tasks.len() as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RouterPolicy;
+    use crate::messaging::Message;
+    use crate::processing::job::NoOutput;
+    use crate::util::clock::real_clock;
+    use crate::vml::envelope::Envelope;
+    use std::time::Duration;
+
+    fn fixture(initial: usize, max: usize) -> (Arc<ActorSystem>, Arc<TaskRouter>, Arc<TaskPool>, Arc<PipelineMetrics>) {
+        let system = ActorSystem::new();
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let job = Job::from_fn("j", "in", None, |_e| vec![]);
+        let pool = TaskPool::start(
+            &system,
+            job,
+            Arc::new(NoOutput),
+            router.clone(),
+            metrics.clone(),
+            clock,
+            initial,
+            1,
+            max,
+            256,
+        );
+        (system, router, pool, metrics)
+    }
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    #[test]
+    fn scale_out_and_in_syncs_router() {
+        let (system, router, pool, _m) = fixture(2, 8);
+        assert_eq!(pool.task_count(), 2);
+        assert_eq!(router.target_count(), 2);
+        pool.scale_to(5);
+        assert_eq!(router.target_count(), 5);
+        pool.scale_to(1);
+        assert_eq!(pool.task_count(), 1);
+        assert_eq!(router.target_count(), 1);
+        pool.stop_all();
+        system.shutdown();
+    }
+
+    #[test]
+    fn pool_processes_through_router() {
+        let (system, router, pool, metrics) = fixture(3, 8);
+        for i in 0..30 {
+            router
+                .route(Envelope::new(Message::from_str("m"), 0, i, Duration::ZERO))
+                .unwrap();
+        }
+        assert!(wait_until(Duration::from_secs(3), || pool.total_processed() == 30));
+        assert_eq!(metrics.counters.get("processed"), 30);
+        pool.stop_all();
+        system.shutdown();
+    }
+
+    #[test]
+    fn kill_and_ensure_heal() {
+        let (system, router, pool, metrics) = fixture(4, 8);
+        assert_eq!(pool.kill(2), 2);
+        assert_eq!(pool.task_count(), 2);
+        assert_eq!(router.target_count(), 2);
+        assert_eq!(metrics.counters.get("tasks.killed"), 2);
+        pool.ensure(4);
+        assert_eq!(pool.task_count(), 4);
+        pool.stop_all();
+        system.shutdown();
+    }
+
+    #[test]
+    fn total_processed_survives_scale_in() {
+        let (system, router, pool, _m) = fixture(4, 8);
+        for i in 0..40 {
+            router
+                .route(Envelope::new(Message::from_str("m"), 0, i, Duration::ZERO))
+                .unwrap();
+        }
+        assert!(wait_until(Duration::from_secs(3), || pool.total_processed() == 40));
+        pool.scale_to(1); // graceful: drains + retires counts
+        assert_eq!(pool.total_processed(), 40, "retired counts preserved");
+        pool.stop_all();
+        assert_eq!(pool.total_processed(), 40);
+        system.shutdown();
+    }
+
+    #[test]
+    fn bounds_clamped() {
+        let (system, _r, pool, _m) = fixture(2, 4);
+        pool.scale_to(100);
+        assert_eq!(pool.task_count(), 4);
+        pool.scale_to(0);
+        assert_eq!(pool.task_count(), 1);
+        pool.stop_all();
+        system.shutdown();
+    }
+}

@@ -1,0 +1,240 @@
+//! Elastic worker service (§3.2.2): queue-watermark autoscaling.
+//!
+//! The service monitors the message queues of a worker pool and changes the
+//! number of instances when load crosses the agreed upper/lower limits. It
+//! is deliberately *mechanism-agnostic*: anything that implements
+//! [`ScalableTarget`] (virtual producer pools, task pools) can be driven by
+//! an [`ElasticController`].
+
+use crate::config::ElasticConfig;
+use crate::log_debug;
+use crate::util::clock::SharedClock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A pool the elastic service can observe and resize.
+pub trait ScalableTarget: Send + Sync {
+    /// Current number of worker instances.
+    fn worker_count(&self) -> usize;
+    /// Total queued messages across the pool's mailboxes.
+    fn queue_depth(&self) -> usize;
+    /// Resize to exactly `n` workers (the pool clamps internally if needed).
+    fn scale_to(&self, n: usize);
+}
+
+/// Scaling decision (exposed separately so the policy is unit-testable
+/// without threads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    Out(usize),
+    In(usize),
+}
+
+/// Pure policy: given depth and worker count, decide the next size.
+///
+/// Scale out when mean depth per worker exceeds the high watermark — by
+/// enough workers to bring it back under (reactive, proportional). Scale in
+/// one step at a time when under the low watermark (conservative, avoids
+/// oscillation).
+pub fn decide(cfg: &ElasticConfig, depth: usize, workers: usize) -> ScaleDecision {
+    let workers = workers.max(1);
+    let per_worker = depth / workers;
+    if per_worker > cfg.high_watermark && workers < cfg.max_workers {
+        let desired = depth.div_ceil(cfg.high_watermark.max(1));
+        let target = desired.clamp(workers + 1, cfg.max_workers);
+        return ScaleDecision::Out(target);
+    }
+    if per_worker < cfg.low_watermark && workers > cfg.min_workers {
+        return ScaleDecision::In(workers - 1);
+    }
+    ScaleDecision::Hold
+}
+
+/// Drives one [`ScalableTarget`] from a monitor thread.
+pub struct ElasticController {
+    cfg: ElasticConfig,
+    clock: SharedClock,
+    target: Arc<dyn ScalableTarget>,
+    name: String,
+    last_action: Mutex<Option<Duration>>,
+    running: Arc<AtomicBool>,
+    monitor: Mutex<Option<JoinHandle<()>>>,
+    /// (time, new_size) history for the scaling-behaviour figures.
+    history: Mutex<Vec<(Duration, usize)>>,
+}
+
+impl ElasticController {
+    pub fn new(
+        name: &str,
+        cfg: ElasticConfig,
+        clock: SharedClock,
+        target: Arc<dyn ScalableTarget>,
+    ) -> Arc<Self> {
+        Arc::new(ElasticController {
+            cfg,
+            clock,
+            target,
+            name: name.to_string(),
+            last_action: Mutex::new(None),
+            running: Arc::new(AtomicBool::new(false)),
+            monitor: Mutex::new(None),
+            history: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// One evaluation step (deterministic; the monitor thread calls this).
+    /// Returns the applied decision.
+    pub fn step(&self) -> ScaleDecision {
+        let now = self.clock.now();
+        {
+            let last = self.last_action.lock().unwrap();
+            if let Some(t) = *last {
+                if now.saturating_sub(t) < self.cfg.cooldown {
+                    return ScaleDecision::Hold;
+                }
+            }
+        }
+        let depth = self.target.queue_depth();
+        let workers = self.target.worker_count();
+        let decision = decide(&self.cfg, depth, workers);
+        match decision {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Out(n) | ScaleDecision::In(n) => {
+                log_debug!("elastic", "'{}' depth={depth} workers={workers} -> {n}", self.name);
+                self.target.scale_to(n);
+                *self.last_action.lock().unwrap() = Some(now);
+                self.history.lock().unwrap().push((now, n));
+            }
+        }
+        decision
+    }
+
+    /// Scaling actions taken so far (`(time, new_size)`).
+    pub fn history(&self) -> Vec<(Duration, usize)> {
+        self.history.lock().unwrap().clone()
+    }
+
+    pub fn start(self: &Arc<Self>) {
+        if self.running.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let me = self.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("elastic:{}", self.name))
+            .spawn(move || {
+                while me.running.load(Ordering::SeqCst) {
+                    me.step();
+                    std::thread::sleep(me.cfg.check_interval);
+                }
+            })
+            .expect("spawn elastic monitor");
+        *self.monitor.lock().unwrap() = Some(handle);
+    }
+
+    pub fn stop(&self) {
+        self.running.store(false, Ordering::SeqCst);
+        if let Some(h) = self.monitor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ElasticController {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+    use std::sync::atomic::AtomicUsize;
+
+    fn cfg() -> ElasticConfig {
+        ElasticConfig {
+            min_workers: 1,
+            max_workers: 8,
+            high_watermark: 10,
+            low_watermark: 2,
+            check_interval: Duration::from_millis(5),
+            cooldown: Duration::from_millis(50),
+        }
+    }
+
+    #[test]
+    fn decide_out_proportional() {
+        let c = cfg();
+        // 100 queued over 2 workers = 50/worker > 10 → need ceil(100/10)=10, clamp to 8.
+        assert_eq!(decide(&c, 100, 2), ScaleDecision::Out(8));
+        // 33 queued over 1 worker → ceil(33/10)=4.
+        assert_eq!(decide(&c, 33, 1), ScaleDecision::Out(4));
+    }
+
+    #[test]
+    fn decide_in_one_step() {
+        let c = cfg();
+        assert_eq!(decide(&c, 0, 4), ScaleDecision::In(3));
+        assert_eq!(decide(&c, 0, 1), ScaleDecision::Hold, "respects min");
+    }
+
+    #[test]
+    fn decide_hold_in_band() {
+        let c = cfg();
+        assert_eq!(decide(&c, 5 * 4, 4), ScaleDecision::Hold); // 5/worker in [2,10]
+        assert_eq!(decide(&c, 100, 8), ScaleDecision::Hold, "respects max");
+    }
+
+    struct FakePool {
+        workers: AtomicUsize,
+        depth: AtomicUsize,
+    }
+
+    impl ScalableTarget for FakePool {
+        fn worker_count(&self) -> usize {
+            self.workers.load(Ordering::SeqCst)
+        }
+        fn queue_depth(&self) -> usize {
+            self.depth.load(Ordering::SeqCst)
+        }
+        fn scale_to(&self, n: usize) {
+            self.workers.store(n, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn controller_scales_out_then_in_with_cooldown() {
+        let clock = Arc::new(ManualClock::new());
+        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(95) });
+        let ctl = ElasticController::new("t", cfg(), clock.clone(), pool.clone());
+
+        assert_eq!(ctl.step(), ScaleDecision::Out(8));
+        assert_eq!(pool.worker_count(), 8);
+
+        // Cooldown blocks immediate follow-up.
+        pool.depth.store(0, Ordering::SeqCst);
+        assert_eq!(ctl.step(), ScaleDecision::Hold);
+
+        clock.advance(Duration::from_millis(60));
+        assert_eq!(ctl.step(), ScaleDecision::In(7));
+        assert_eq!(pool.worker_count(), 7);
+        assert_eq!(ctl.history().len(), 2);
+    }
+
+    #[test]
+    fn monitor_thread_reacts() {
+        let clock = crate::util::clock::real_clock();
+        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(500) });
+        let ctl = ElasticController::new("bg", cfg(), clock, pool.clone());
+        ctl.start();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while std::time::Instant::now() < deadline && pool.worker_count() == 1 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        ctl.stop();
+        assert!(pool.worker_count() > 1, "scaled out in background");
+    }
+}

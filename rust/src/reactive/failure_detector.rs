@@ -1,0 +1,213 @@
+//! Failure detectors (§2.2): simple heartbeat timeout and the φ accrual
+//! detector of Hayashibara et al.
+//!
+//! Both consume heartbeat arrival times from a [`Clock`] so they are fully
+//! deterministic under test.
+//!
+//! [`Clock`]: crate::util::clock::Clock
+
+use crate::util::clock::SharedClock;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Timeout-based detector: a monitored component is suspected once no
+/// heartbeat has arrived for `timeout`.
+pub struct HeartbeatDetector {
+    clock: SharedClock,
+    timeout: Duration,
+    last_seen: Mutex<HashMap<String, Duration>>,
+}
+
+impl HeartbeatDetector {
+    pub fn new(clock: SharedClock, timeout: Duration) -> Self {
+        HeartbeatDetector { clock, timeout, last_seen: Mutex::new(HashMap::new()) }
+    }
+
+    /// Record a heartbeat from `id` (registers it on first call).
+    pub fn heartbeat(&self, id: &str) {
+        self.last_seen.lock().unwrap().insert(id.to_string(), self.clock.now());
+    }
+
+    /// Forget a component (deregistered / intentionally stopped).
+    pub fn forget(&self, id: &str) {
+        self.last_seen.lock().unwrap().remove(id);
+    }
+
+    /// True if `id` is known and silent for longer than the timeout.
+    pub fn is_suspected(&self, id: &str) -> bool {
+        let seen = self.last_seen.lock().unwrap();
+        match seen.get(id) {
+            None => false,
+            Some(&t) => self.clock.now().saturating_sub(t) > self.timeout,
+        }
+    }
+
+    /// All currently suspected components.
+    pub fn suspects(&self) -> Vec<String> {
+        let now = self.clock.now();
+        self.last_seen
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, &t)| now.saturating_sub(t) > self.timeout)
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+}
+
+/// The φ accrual failure detector: instead of a binary verdict it outputs a
+/// suspicion level φ = −log₁₀ P(heartbeat still pending | history), where
+/// the inter-arrival distribution is estimated as a normal over a sliding
+/// window. Callers threshold φ (8 is a common production value).
+pub struct PhiAccrualDetector {
+    clock: SharedClock,
+    window: usize,
+    /// Floor on the standard deviation (guards the cold-start and
+    /// perfectly-regular-heartbeat cases).
+    min_stddev: Duration,
+    state: Mutex<HashMap<String, PhiState>>,
+}
+
+struct PhiState {
+    last: Duration,
+    intervals: Vec<f64>, // seconds, ring-buffered to `window`
+    next: usize,
+}
+
+impl PhiAccrualDetector {
+    pub fn new(clock: SharedClock, window: usize, min_stddev: Duration) -> Self {
+        assert!(window >= 2);
+        PhiAccrualDetector { clock, window, min_stddev, state: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn heartbeat(&self, id: &str) {
+        let now = self.clock.now();
+        let mut s = self.state.lock().unwrap();
+        match s.get_mut(id) {
+            None => {
+                s.insert(
+                    id.to_string(),
+                    PhiState { last: now, intervals: Vec::new(), next: 0 },
+                );
+            }
+            Some(st) => {
+                let dt = now.saturating_sub(st.last).as_secs_f64();
+                st.last = now;
+                if st.intervals.len() < self.window {
+                    st.intervals.push(dt);
+                } else {
+                    st.intervals[st.next] = dt;
+                    st.next = (st.next + 1) % self.window;
+                }
+            }
+        }
+    }
+
+    /// Current suspicion level for `id`; 0.0 for unknown components or
+    /// before two heartbeats have been observed.
+    pub fn phi(&self, id: &str) -> f64 {
+        let s = self.state.lock().unwrap();
+        let st = match s.get(id) {
+            Some(st) if !st.intervals.is_empty() => st,
+            _ => return 0.0,
+        };
+        let n = st.intervals.len() as f64;
+        let mean = st.intervals.iter().sum::<f64>() / n;
+        let var = st.intervals.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let std = var.sqrt().max(self.min_stddev.as_secs_f64());
+        let since = self.clock.now().saturating_sub(st.last).as_secs_f64();
+        // P(next heartbeat later than `since`) under N(mean, std²), via the
+        // logistic approximation of the normal CDF tail (as in the Akka
+        // implementation lineage).
+        let y = (since - mean) / std;
+        let e = (-y * (1.5976 + 0.070566 * y * y)).exp();
+        let p_later = if since > mean { e / (1.0 + e) } else { 1.0 - 1.0 / (1.0 + e) };
+        -p_later.max(1e-300).log10()
+    }
+
+    /// Convenience threshold check.
+    pub fn is_suspected(&self, id: &str, threshold: f64) -> bool {
+        self.phi(id) > threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+    use std::sync::Arc;
+
+    #[test]
+    fn heartbeat_detector_suspects_after_timeout() {
+        let clock = Arc::new(ManualClock::new());
+        let d = HeartbeatDetector::new(clock.clone(), Duration::from_secs(2));
+        d.heartbeat("n1");
+        assert!(!d.is_suspected("n1"));
+        clock.advance(Duration::from_secs(1));
+        assert!(!d.is_suspected("n1"));
+        clock.advance(Duration::from_secs(2));
+        assert!(d.is_suspected("n1"));
+        assert_eq!(d.suspects(), vec!["n1".to_string()]);
+        d.heartbeat("n1"); // recovery
+        assert!(!d.is_suspected("n1"));
+    }
+
+    #[test]
+    fn unknown_components_not_suspected() {
+        let clock = Arc::new(ManualClock::new());
+        let d = HeartbeatDetector::new(clock, Duration::from_secs(1));
+        assert!(!d.is_suspected("ghost"));
+        assert!(d.suspects().is_empty());
+    }
+
+    #[test]
+    fn forget_clears() {
+        let clock = Arc::new(ManualClock::new());
+        let d = HeartbeatDetector::new(clock.clone(), Duration::from_millis(10));
+        d.heartbeat("x");
+        clock.advance(Duration::from_secs(1));
+        assert!(d.is_suspected("x"));
+        d.forget("x");
+        assert!(!d.is_suspected("x"));
+    }
+
+    #[test]
+    fn phi_grows_with_silence() {
+        let clock = Arc::new(ManualClock::new());
+        let d = PhiAccrualDetector::new(clock.clone(), 16, Duration::from_millis(50));
+        // Regular 1s heartbeats.
+        for _ in 0..10 {
+            d.heartbeat("n");
+            clock.advance(Duration::from_secs(1));
+        }
+        let phi_on_time = d.phi("n");
+        clock.advance(Duration::from_secs(5));
+        let phi_late = d.phi("n");
+        assert!(phi_on_time < 3.0, "on-time phi small, got {phi_on_time}");
+        assert!(phi_late > 8.0, "silent phi large, got {phi_late}");
+        assert!(d.is_suspected("n", 8.0));
+    }
+
+    #[test]
+    fn phi_zero_before_history() {
+        let clock = Arc::new(ManualClock::new());
+        let d = PhiAccrualDetector::new(clock.clone(), 8, Duration::from_millis(50));
+        assert_eq!(d.phi("n"), 0.0);
+        d.heartbeat("n");
+        assert_eq!(d.phi("n"), 0.0, "one heartbeat, no intervals yet");
+    }
+
+    #[test]
+    fn phi_tolerates_jittery_heartbeats() {
+        let clock = Arc::new(ManualClock::new());
+        let d = PhiAccrualDetector::new(clock.clone(), 32, Duration::from_millis(50));
+        let periods = [900u64, 1100, 950, 1050, 1000, 980, 1020, 990];
+        for &ms in periods.iter().cycle().take(32) {
+            d.heartbeat("n");
+            clock.advance(Duration::from_millis(ms));
+        }
+        // Just after a normal period: low suspicion.
+        assert!(d.phi("n") < 4.0, "phi {}", d.phi("n"));
+    }
+}

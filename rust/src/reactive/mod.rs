@@ -1,0 +1,26 @@
+//! Reactive processing layer (paper §3.2.2).
+//!
+//! The platform services the Reactive Liquid architecture provides to the
+//! processing and virtual messaging layers:
+//!
+//! - **Elastic worker service** ([`elastic`]): watches queue depths and
+//!   scales worker pools between configured bounds (the paper's
+//!   "agreed upper and lower limit") with cooldown, so jobs react to
+//!   workload without human intervention.
+//! - **Supervision service** ([`supervision`]): failure detection
+//!   ([`failure_detector`]: heartbeat timeouts and the φ accrual detector)
+//!   plus the let-it-crash recovery pattern — restart the failed component
+//!   from a clean state, on a healthy node.
+//! - **State management** ([`state`]): event sourcing for persistent,
+//!   immutable state (components replay their event stream after a
+//!   restart) and CRDTs for coordination-free state sharing between
+//!   distributed task instances.
+
+pub mod elastic;
+pub mod failure_detector;
+pub mod state;
+pub mod supervision;
+
+pub use elastic::{ElasticController, ScalableTarget};
+pub use failure_detector::{HeartbeatDetector, PhiAccrualDetector};
+pub use supervision::{RestartPolicy, Supervisor};

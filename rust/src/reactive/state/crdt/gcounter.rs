@@ -1,0 +1,96 @@
+//! Grow-only counter: per-replica counts, merge = pointwise max.
+
+use super::Crdt;
+use std::collections::BTreeMap;
+
+/// G-Counter keyed by replica id.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GCounter {
+    counts: BTreeMap<u64, u64>,
+}
+
+impl GCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment this replica's slot.
+    pub fn inc(&mut self, replica: u64, by: u64) {
+        *self.counts.entry(replica).or_insert(0) += by;
+    }
+
+    /// Total across replicas.
+    pub fn value(&self) -> u64 {
+        self.counts.values().sum()
+    }
+}
+
+impl Crdt for GCounter {
+    fn merge(&mut self, other: &Self) {
+        for (&r, &c) in &other.counts {
+            let e = self.counts.entry(r).or_insert(0);
+            if c > *e {
+                *e = c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reactive::state::crdt::check_merge_laws;
+    use crate::util::propcheck::{check, Gen};
+
+    fn arb(g: &mut Gen) -> GCounter {
+        let mut c = GCounter::new();
+        for _ in 0..g.usize(0, 8) {
+            c.inc(g.usize(0, 4) as u64, g.usize(1, 10) as u64);
+        }
+        c
+    }
+
+    #[test]
+    fn concurrent_increments_converge() {
+        let mut a = GCounter::new();
+        let mut b = GCounter::new();
+        a.inc(1, 5);
+        b.inc(2, 3);
+        let b_snapshot = b.clone();
+        b.merge(&a);
+        a.merge(&b_snapshot);
+        assert_eq!(a.value(), 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_is_max_not_sum() {
+        let mut a = GCounter::new();
+        a.inc(1, 5);
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.value(), 5, "idempotent: re-merge must not double");
+    }
+
+    #[test]
+    fn merge_laws_property() {
+        check("gcounter-laws", 100, |g| {
+            let (a, b, c) = (arb(g), arb(g), arb(g));
+            check_merge_laws(&a, &b, &c);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn value_monotone_under_merge_property() {
+        check("gcounter-monotone", 100, |g| {
+            let mut a = arb(g);
+            let b = arb(g);
+            let before = a.value();
+            a.merge(&b);
+            crate::prop_assert!(a.value() >= before, "merge shrank value");
+            crate::prop_assert!(a.value() >= b.value(), "merge below peer");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! Conflict-free replicated data types (§3.2.2).
+//!
+//! Distributed task instances of a stateful job share state without
+//! coordination: each instance mutates its own replica and replicas merge
+//! pairwise. All types here are state-based CRDTs (CvRDTs): `merge` is
+//! commutative, associative, and idempotent, so replicas converge under
+//! any delivery order — the merge laws are enforced by property tests in
+//! `rust/tests/` and each type's unit tests.
+//!
+//! Provided: [`GCounter`] (grow-only counter), [`PnCounter`]
+//! (increment/decrement), [`LwwRegister`] (last-writer-wins register), and
+//! [`OrSet`] (observed-remove set). The TCMM micro-cluster state
+//! ([`crate::tcmm::MicroClusterSet`]) implements the same [`Crdt`] trait
+//! by CF-vector addition.
+
+pub mod gcounter;
+pub mod lww;
+pub mod orset;
+pub mod pncounter;
+
+pub use gcounter::GCounter;
+pub use lww::LwwRegister;
+pub use orset::OrSet;
+pub use pncounter::PnCounter;
+
+/// A state-based CRDT. `merge` must be commutative, associative, and
+/// idempotent.
+pub trait Crdt: Clone {
+    fn merge(&mut self, other: &Self);
+}
+
+/// Check the three merge laws for concrete instances (test helper used by
+/// every CRDT's property tests).
+#[cfg(test)]
+pub fn check_merge_laws<T: Crdt + PartialEq + std::fmt::Debug>(a: &T, b: &T, c: &T) {
+    // Commutativity: a ⊔ b == b ⊔ a
+    let mut ab = a.clone();
+    ab.merge(b);
+    let mut ba = b.clone();
+    ba.merge(a);
+    assert_eq!(ab, ba, "merge not commutative");
+
+    // Associativity: (a ⊔ b) ⊔ c == a ⊔ (b ⊔ c)
+    let mut ab_c = ab.clone();
+    ab_c.merge(c);
+    let mut bc = b.clone();
+    bc.merge(c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+    assert_eq!(ab_c, a_bc, "merge not associative");
+
+    // Idempotence: a ⊔ a == a
+    let mut aa = a.clone();
+    aa.merge(a);
+    assert_eq!(&aa, a, "merge not idempotent");
+}

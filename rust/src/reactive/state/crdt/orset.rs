@@ -1,0 +1,167 @@
+//! Observed-remove set: add wins over concurrent remove.
+//!
+//! Every add is tagged with a unique (replica, counter) pair; removing an
+//! element tombstones exactly the tags the remover has *observed*, so a
+//! concurrent re-add (new tag) survives the merge.
+
+use super::Crdt;
+use std::collections::{BTreeMap, BTreeSet};
+
+type Tag = (u64, u64); // (replica, per-replica counter)
+
+/// OR-Set over ordered, clonable elements.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OrSet<T: Ord + Clone> {
+    /// element → live tags
+    adds: BTreeMap<T, BTreeSet<Tag>>,
+    /// element → tombstoned tags
+    removes: BTreeMap<T, BTreeSet<Tag>>,
+    /// per-replica add counter (this replica's tag source)
+    counters: BTreeMap<u64, u64>,
+}
+
+impl<T: Ord + Clone> OrSet<T> {
+    pub fn new() -> Self {
+        OrSet { adds: BTreeMap::new(), removes: BTreeMap::new(), counters: BTreeMap::new() }
+    }
+
+    /// Add `value` from `replica`.
+    pub fn add(&mut self, replica: u64, value: T) {
+        let c = self.counters.entry(replica).or_insert(0);
+        *c += 1;
+        let tag = (replica, *c);
+        self.adds.entry(value).or_default().insert(tag);
+    }
+
+    /// Remove `value`: tombstone all currently observed tags.
+    pub fn remove(&mut self, value: &T) {
+        if let Some(tags) = self.adds.get(value) {
+            let observed: BTreeSet<Tag> = tags.clone();
+            self.removes.entry(value.clone()).or_default().extend(observed);
+        }
+    }
+
+    /// Membership: any live (non-tombstoned) tag remains.
+    pub fn contains(&self, value: &T) -> bool {
+        match self.adds.get(value) {
+            None => false,
+            Some(tags) => {
+                let dead = self.removes.get(value);
+                tags.iter().any(|t| dead.map(|d| !d.contains(t)).unwrap_or(true))
+            }
+        }
+    }
+
+    /// Live elements, ordered.
+    pub fn elements(&self) -> Vec<T> {
+        self.adds.keys().filter(|k| self.contains(k)).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.adds.keys().filter(|k| self.contains(k)).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T: Ord + Clone> Crdt for OrSet<T> {
+    fn merge(&mut self, other: &Self) {
+        for (v, tags) in &other.adds {
+            self.adds.entry(v.clone()).or_default().extend(tags.iter().copied());
+        }
+        for (v, tags) in &other.removes {
+            self.removes.entry(v.clone()).or_default().extend(tags.iter().copied());
+        }
+        for (&r, &c) in &other.counters {
+            let e = self.counters.entry(r).or_insert(0);
+            if c > *e {
+                *e = c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reactive::state::crdt::check_merge_laws;
+    use crate::util::propcheck::{check, Gen};
+
+    fn arb(g: &mut Gen) -> OrSet<u8> {
+        let mut s = OrSet::new();
+        let replica = g.usize(0, 3) as u64;
+        for _ in 0..g.usize(0, 10) {
+            let v = g.usize(0, 6) as u8;
+            if g.bool() {
+                s.add(replica, v);
+            } else {
+                s.remove(&v);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn add_remove_contains() {
+        let mut s = OrSet::new();
+        s.add(1, "x");
+        assert!(s.contains(&"x"));
+        s.remove(&"x");
+        assert!(!s.contains(&"x"));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn add_wins_over_concurrent_remove() {
+        let mut a = OrSet::new();
+        a.add(1, "k");
+        let mut b = a.clone();
+        // Replica A removes; replica B concurrently re-adds.
+        a.remove(&"k");
+        b.add(2, "k");
+        let snap = b.clone();
+        b.merge(&a);
+        a.merge(&snap);
+        assert_eq!(a, b);
+        assert!(a.contains(&"k"), "concurrent add survives remove");
+    }
+
+    #[test]
+    fn re_add_after_remove() {
+        let mut s = OrSet::new();
+        s.add(1, 7u8);
+        s.remove(&7);
+        s.add(1, 7);
+        assert!(s.contains(&7), "fresh tag revives element");
+        assert_eq!(s.elements(), vec![7]);
+    }
+
+    #[test]
+    fn merge_laws_property() {
+        check("orset-laws", 100, |g| {
+            let (a, b, c) = (arb(g), arb(g), arb(g));
+            check_merge_laws(&a, &b, &c);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merged_set_contains_union_of_live_elements_property() {
+        check("orset-union", 100, |g| {
+            let a = arb(g);
+            let b = arb(g);
+            let mut m = a.clone();
+            m.merge(&b);
+            // An element live in BOTH replicas must be live in the merge
+            // (removes only cover observed tags).
+            for v in a.elements() {
+                if b.contains(&v) {
+                    crate::prop_assert!(m.contains(&v), "live-in-both lost by merge");
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Increment/decrement counter: two G-Counters (P and N).
+
+use super::gcounter::GCounter;
+use super::Crdt;
+
+/// PN-Counter: `value = P − N`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PnCounter {
+    p: GCounter,
+    n: GCounter,
+}
+
+impl PnCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, replica: u64, by: u64) {
+        self.p.inc(replica, by);
+    }
+
+    pub fn dec(&mut self, replica: u64, by: u64) {
+        self.n.inc(replica, by);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.p.value() as i64 - self.n.value() as i64
+    }
+}
+
+impl Crdt for PnCounter {
+    fn merge(&mut self, other: &Self) {
+        self.p.merge(&other.p);
+        self.n.merge(&other.n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reactive::state::crdt::check_merge_laws;
+    use crate::util::propcheck::{check, Gen};
+
+    fn arb(g: &mut Gen) -> PnCounter {
+        let mut c = PnCounter::new();
+        for _ in 0..g.usize(0, 8) {
+            let r = g.usize(0, 4) as u64;
+            let v = g.usize(1, 10) as u64;
+            if g.bool() {
+                c.inc(r, v);
+            } else {
+                c.dec(r, v);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn inc_dec_value() {
+        let mut c = PnCounter::new();
+        c.inc(1, 10);
+        c.dec(1, 3);
+        c.dec(2, 2);
+        assert_eq!(c.value(), 5);
+    }
+
+    #[test]
+    fn replicas_converge() {
+        let mut a = PnCounter::new();
+        let mut b = PnCounter::new();
+        a.inc(1, 4);
+        b.dec(2, 6);
+        let snap = b.clone();
+        b.merge(&a);
+        a.merge(&snap);
+        assert_eq!(a, b);
+        assert_eq!(a.value(), -2);
+    }
+
+    #[test]
+    fn merge_laws_property() {
+        check("pncounter-laws", 100, |g| {
+            let (a, b, c) = (arb(g), arb(g), arb(g));
+            check_merge_laws(&a, &b, &c);
+            Ok(())
+        });
+    }
+}

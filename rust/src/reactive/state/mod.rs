@@ -1,0 +1,16 @@
+//! State management service (§3.2.2): event sourcing + CRDTs.
+//!
+//! Stateful components must survive let-it-crash restarts, so their state
+//! is kept as an immutable, append-only stream of events ([`event_log`])
+//! that a fresh incarnation replays ([`EventLog::replay`]); snapshots bound
+//! replay cost. Distributed instances of a component share state without
+//! coordination through conflict-free replicated data types ([`crdt`]).
+//! [`offsets`] applies event sourcing to the virtual consumers' committed
+//! offsets — the state that makes them resume where they stopped.
+
+pub mod crdt;
+pub mod event_log;
+pub mod offsets;
+
+pub use event_log::{DurableLog, EventLog};
+pub use offsets::OffsetStore;

@@ -1,0 +1,155 @@
+//! Event-sourced offset store for stateful virtual consumers.
+//!
+//! §3.2.3: "Virtual consumers are stateful workers which persist the offset
+//! of the last consumed message. As a result, they can start consuming
+//! where they were stopped in case of a failure." Each commit is an
+//! immutable event `(topic-hash, partition, offset)` appended to a
+//! [`DurableLog`] (or held in memory when no path is given — fast mode for
+//! tests and benches); recovery replays the stream and keeps the max
+//! offset per key.
+
+use super::event_log::DurableLog;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Key: (topic, partition).
+type Key = (String, usize);
+
+/// Offset store with optional file durability.
+pub struct OffsetStore {
+    mem: Mutex<HashMap<Key, u64>>,
+    durable: Option<DurableLog>,
+}
+
+impl OffsetStore {
+    /// Purely in-memory store.
+    pub fn in_memory() -> Self {
+        OffsetStore { mem: Mutex::new(HashMap::new()), durable: None }
+    }
+
+    /// File-backed store; replays existing events on open.
+    pub fn open<P: AsRef<std::path::Path>>(path: P) -> std::io::Result<Self> {
+        let log = DurableLog::open(path)?;
+        let mut mem: HashMap<Key, u64> = HashMap::new();
+        for rec in log.read_all()? {
+            if let Some((key, off)) = decode(&rec) {
+                let e = mem.entry(key).or_insert(0);
+                if off > *e {
+                    *e = off;
+                }
+            }
+        }
+        Ok(OffsetStore { mem: Mutex::new(mem), durable: Some(log) })
+    }
+
+    /// Record a committed offset (monotonic per key).
+    pub fn commit(&self, topic: &str, partition: usize, next_offset: u64) {
+        {
+            let mut m = self.mem.lock().unwrap();
+            let e = m.entry((topic.to_string(), partition)).or_insert(0);
+            if next_offset <= *e {
+                return;
+            }
+            *e = next_offset;
+        }
+        if let Some(log) = &self.durable {
+            let _ = log.append(&encode(topic, partition, next_offset));
+        }
+    }
+
+    /// Offset a recovering consumer should resume from (0 if unknown).
+    pub fn committed(&self, topic: &str, partition: usize) -> u64 {
+        self.mem.lock().unwrap().get(&(topic.to_string(), partition)).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct (topic, partition) keys tracked.
+    pub fn keys(&self) -> usize {
+        self.mem.lock().unwrap().len()
+    }
+}
+
+fn encode(topic: &str, partition: usize, offset: u64) -> Vec<u8> {
+    let tb = topic.as_bytes();
+    let mut out = Vec::with_capacity(2 + tb.len() + 4 + 8);
+    out.extend_from_slice(&(tb.len() as u16).to_le_bytes());
+    out.extend_from_slice(tb);
+    out.extend_from_slice(&(partition as u32).to_le_bytes());
+    out.extend_from_slice(&offset.to_le_bytes());
+    out
+}
+
+fn decode(rec: &[u8]) -> Option<(Key, u64)> {
+    if rec.len() < 2 {
+        return None;
+    }
+    let tlen = u16::from_le_bytes(rec[0..2].try_into().ok()?) as usize;
+    if rec.len() != 2 + tlen + 4 + 8 {
+        return None;
+    }
+    let topic = std::str::from_utf8(&rec[2..2 + tlen]).ok()?.to_string();
+    let partition = u32::from_le_bytes(rec[2 + tlen..2 + tlen + 4].try_into().ok()?) as usize;
+    let offset = u64::from_le_bytes(rec[2 + tlen + 4..].try_into().ok()?);
+    Some(((topic, partition), offset))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_memory_commit_and_query() {
+        let s = OffsetStore::in_memory();
+        assert_eq!(s.committed("t", 0), 0);
+        s.commit("t", 0, 5);
+        s.commit("t", 1, 9);
+        assert_eq!(s.committed("t", 0), 5);
+        assert_eq!(s.committed("t", 1), 9);
+        assert_eq!(s.keys(), 2);
+    }
+
+    #[test]
+    fn commits_are_monotonic() {
+        let s = OffsetStore::in_memory();
+        s.commit("t", 0, 10);
+        s.commit("t", 0, 4); // stale
+        assert_eq!(s.committed("t", 0), 10);
+    }
+
+    #[test]
+    fn survives_restart_via_file() {
+        let dir = std::env::temp_dir().join(format!("rl_offsets_{}", std::process::id()));
+        let path = dir.join("offsets.log");
+        {
+            let s = OffsetStore::open(&path).unwrap();
+            s.commit("traj", 0, 100);
+            s.commit("traj", 2, 7);
+            s.commit("micro", 0, 3);
+        }
+        let s = OffsetStore::open(&path).unwrap();
+        assert_eq!(s.committed("traj", 0), 100);
+        assert_eq!(s.committed("traj", 2), 7);
+        assert_eq!(s.committed("micro", 0), 3);
+        assert_eq!(s.committed("traj", 1), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn encode_decode_round_trip_property() {
+        crate::util::propcheck::check("offset-codec", 100, |g| {
+            let tlen = g.usize(0, 20);
+            let topic: String = (0..tlen).map(|_| (b'a' + g.usize(0, 26) as u8) as char).collect();
+            let partition = g.usize(0, 1000);
+            let offset = g.u64();
+            let rec = encode(&topic, partition, offset);
+            let ((t, p), o) = decode(&rec).ok_or("decode failed")?;
+            crate::prop_assert!(t == topic && p == partition && o == offset, "round trip mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(&[]).is_none());
+        assert!(decode(&[5, 0, b'a']).is_none());
+    }
+}

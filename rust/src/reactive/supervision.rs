@@ -1,0 +1,353 @@
+//! Supervision service: detect failed components and regenerate them
+//! (let-it-crash + delegation, §2.2 / §3.2.2).
+//!
+//! A [`Supervisor`] owns a set of supervised entries. Each entry exposes
+//! two closures: a health probe and a restart action (how to regenerate
+//! the component — e.g. [`ActorSystem::restart`], or re-place it on a
+//! healthy cluster node). A background sweeper thread probes on an
+//! interval; failed entries are restarted subject to a [`RestartPolicy`]
+//! (max restarts within a window, plus a fixed detection-to-restart delay
+//! that models the paper's "the system takes time to detect the failure
+//! and heal itself").
+//!
+//! Failures can also be *pushed* (from [`ActorSystem::on_failure`] hooks or
+//! the cluster failure injector) via [`Supervisor::notify_failure`], which
+//! marks the entry for the next sweep without waiting for a probe.
+//!
+//! [`ActorSystem::restart`]: crate::actor::ActorSystem::restart
+//! [`ActorSystem::on_failure`]: crate::actor::ActorSystem::on_failure
+
+use crate::log_info;
+use crate::util::clock::SharedClock;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Restart budget for one supervised component.
+#[derive(Clone, Copy, Debug)]
+pub struct RestartPolicy {
+    /// Max restarts within `window` before the supervisor gives up
+    /// (escalation: the component stays down and is counted).
+    pub max_restarts: usize,
+    pub window: Duration,
+    /// Delay between detecting a failure and restarting (detection +
+    /// recovery latency in the paper's healing story).
+    pub restart_delay: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 1000,
+            window: Duration::from_secs(3600),
+            restart_delay: Duration::ZERO,
+        }
+    }
+}
+
+type Probe = Box<dyn Fn() -> bool + Send + Sync>;
+type Restart = Box<dyn Fn() -> bool + Send + Sync>;
+
+struct Entry {
+    probe: Probe,
+    restart: Restart,
+    policy: RestartPolicy,
+    /// Probe-independent failure mark (set by `notify_failure`).
+    flagged: bool,
+    /// When the failure was first observed (for restart_delay).
+    failed_at: Option<Duration>,
+    restart_times: Vec<Duration>,
+    restarts: u64,
+}
+
+/// The supervision service.
+pub struct Supervisor {
+    clock: SharedClock,
+    entries: Arc<Mutex<HashMap<String, Entry>>>,
+    sweep_interval: Duration,
+    running: Arc<AtomicBool>,
+    sweeper: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Supervisor {
+    pub fn new(clock: SharedClock, sweep_interval: Duration) -> Arc<Self> {
+        Arc::new(Supervisor {
+            clock,
+            entries: Arc::new(Mutex::new(HashMap::new())),
+            sweep_interval,
+            running: Arc::new(AtomicBool::new(false)),
+            sweeper: Mutex::new(None),
+        })
+    }
+
+    /// Supervise `name`. `probe` returns true while healthy; `restart`
+    /// regenerates the component and returns success.
+    pub fn supervise(
+        &self,
+        name: &str,
+        policy: RestartPolicy,
+        probe: impl Fn() -> bool + Send + Sync + 'static,
+        restart: impl Fn() -> bool + Send + Sync + 'static,
+    ) {
+        self.entries.lock().unwrap().insert(
+            name.to_string(),
+            Entry {
+                probe: Box::new(probe),
+                restart: Box::new(restart),
+                policy,
+                flagged: false,
+                failed_at: None,
+                restart_times: Vec::new(),
+                restarts: 0,
+            },
+        );
+    }
+
+    /// Stop supervising `name`.
+    pub fn unsupervise(&self, name: &str) {
+        self.entries.lock().unwrap().remove(name);
+    }
+
+    /// Push-style failure notification (e.g. from actor panic hooks).
+    pub fn notify_failure(&self, name: &str) {
+        if let Some(e) = self.entries.lock().unwrap().get_mut(name) {
+            e.flagged = true;
+        }
+    }
+
+    /// Total successful restarts across all entries.
+    pub fn restart_count(&self) -> u64 {
+        self.entries.lock().unwrap().values().map(|e| e.restarts).sum()
+    }
+
+    /// Names whose restart budget is currently exhausted (they stay down
+    /// until the policy window slides past old restarts).
+    pub fn abandoned(&self) -> Vec<String> {
+        let now = self.clock.now();
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| {
+                let window_start = now.saturating_sub(e.policy.window);
+                e.restart_times.iter().filter(|&&t| t >= window_start).count()
+                    >= e.policy.max_restarts
+            })
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// One supervision pass: probe everything, restart what failed and is
+    /// past its restart delay. Returns the number of restarts performed.
+    /// Exposed for deterministic tests; the sweeper thread calls this.
+    pub fn sweep(&self) -> usize {
+        let now = self.clock.now();
+        let mut restarted = 0;
+        let mut entries = self.entries.lock().unwrap();
+        for (name, e) in entries.iter_mut() {
+            let healthy = !e.flagged && (e.probe)();
+            if healthy {
+                e.failed_at = None;
+                continue;
+            }
+            let failed_at = *e.failed_at.get_or_insert(now);
+            if now.saturating_sub(failed_at) < e.policy.restart_delay {
+                continue; // still inside the detection/recovery window
+            }
+            // Enforce the restart budget.
+            let window_start = now.saturating_sub(e.policy.window);
+            e.restart_times.retain(|&t| t >= window_start);
+            if e.restart_times.len() >= e.policy.max_restarts {
+                // Budget exhausted: stay down until the window slides.
+                crate::log_debug!("supervisor", "budget exhausted for '{name}'");
+                continue;
+            }
+            if (e.restart)() {
+                e.restarts += 1;
+                e.restart_times.push(now);
+                e.flagged = false;
+                e.failed_at = None;
+                restarted += 1;
+                log_info!("supervisor", "restarted '{name}' (total {})", e.restarts);
+            }
+        }
+        restarted
+    }
+
+    /// Start the background sweeper thread.
+    pub fn start(self: &Arc<Self>) {
+        if self.running.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let me = self.clone();
+        let handle = std::thread::Builder::new()
+            .name("supervisor".into())
+            .spawn(move || {
+                while me.running.load(Ordering::SeqCst) {
+                    me.sweep();
+                    std::thread::sleep(me.sweep_interval);
+                }
+            })
+            .expect("spawn supervisor");
+        *self.sweeper.lock().unwrap() = Some(handle);
+    }
+
+    /// Stop the sweeper thread.
+    pub fn stop(&self) {
+        self.running.store(false, Ordering::SeqCst);
+        if let Some(h) = self.sweeper.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+    use std::sync::atomic::AtomicUsize;
+
+    fn fixture() -> (Arc<ManualClock>, Arc<Supervisor>) {
+        let clock = Arc::new(ManualClock::new());
+        let sup = Supervisor::new(clock.clone(), Duration::from_millis(10));
+        (clock, sup)
+    }
+
+    #[test]
+    fn healthy_components_untouched() {
+        let (_clock, sup) = fixture();
+        let restarts = Arc::new(AtomicUsize::new(0));
+        let r = restarts.clone();
+        sup.supervise(
+            "ok",
+            RestartPolicy::default(),
+            || true,
+            move || {
+                r.fetch_add(1, Ordering::SeqCst);
+                true
+            },
+        );
+        assert_eq!(sup.sweep(), 0);
+        assert_eq!(restarts.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn failed_probe_triggers_restart() {
+        let (_clock, sup) = fixture();
+        let healthy = Arc::new(AtomicBool::new(false));
+        let restarts = Arc::new(AtomicUsize::new(0));
+        let h = healthy.clone();
+        let r = restarts.clone();
+        sup.supervise(
+            "comp",
+            RestartPolicy::default(),
+            move || h.load(Ordering::SeqCst),
+            move || {
+                r.fetch_add(1, Ordering::SeqCst);
+                true
+            },
+        );
+        assert_eq!(sup.sweep(), 1);
+        assert_eq!(restarts.load(Ordering::SeqCst), 1);
+        assert_eq!(sup.restart_count(), 1);
+    }
+
+    #[test]
+    fn notify_failure_overrides_probe() {
+        let (_clock, sup) = fixture();
+        let restarts = Arc::new(AtomicUsize::new(0));
+        let r = restarts.clone();
+        sup.supervise("pushed", RestartPolicy::default(), || true, move || {
+            r.fetch_add(1, Ordering::SeqCst);
+            true
+        });
+        sup.notify_failure("pushed");
+        assert_eq!(sup.sweep(), 1);
+        // Flag cleared after successful restart.
+        assert_eq!(sup.sweep(), 0);
+    }
+
+    #[test]
+    fn restart_delay_postpones_recovery() {
+        let (clock, sup) = fixture();
+        let restarts = Arc::new(AtomicUsize::new(0));
+        let r = restarts.clone();
+        sup.supervise(
+            "slow",
+            RestartPolicy { restart_delay: Duration::from_secs(5), ..Default::default() },
+            || false,
+            move || {
+                r.fetch_add(1, Ordering::SeqCst);
+                true
+            },
+        );
+        assert_eq!(sup.sweep(), 0, "within delay: no restart");
+        clock.advance(Duration::from_secs(3));
+        assert_eq!(sup.sweep(), 0);
+        clock.advance(Duration::from_secs(3));
+        assert_eq!(sup.sweep(), 1, "past delay: restarted");
+    }
+
+    #[test]
+    fn budget_exhaustion_abandons() {
+        let (_clock, sup) = fixture();
+        sup.supervise(
+            "flappy",
+            RestartPolicy { max_restarts: 2, window: Duration::from_secs(60), restart_delay: Duration::ZERO },
+            || false, // never healthy
+            || true,
+        );
+        assert_eq!(sup.sweep(), 1);
+        assert_eq!(sup.sweep(), 1);
+        assert_eq!(sup.sweep(), 0, "budget exhausted");
+        assert_eq!(sup.abandoned(), vec!["flappy".to_string()]);
+    }
+
+    #[test]
+    fn budget_window_slides() {
+        let (clock, sup) = fixture();
+        sup.supervise(
+            "slowflap",
+            RestartPolicy { max_restarts: 1, window: Duration::from_secs(10), restart_delay: Duration::ZERO },
+            || false,
+            || true,
+        );
+        assert_eq!(sup.sweep(), 1);
+        assert_eq!(sup.sweep(), 0, "budget used");
+        clock.advance(Duration::from_secs(11));
+        assert_eq!(sup.sweep(), 1, "window slid: budget refreshed");
+    }
+
+    #[test]
+    fn sweeper_thread_restarts_automatically() {
+        let clock = crate::util::clock::real_clock();
+        let sup = Supervisor::new(clock, Duration::from_millis(5));
+        let healthy = Arc::new(AtomicBool::new(false));
+        let h = healthy.clone();
+        let h2 = healthy.clone();
+        sup.supervise(
+            "auto",
+            RestartPolicy::default(),
+            move || h.load(Ordering::SeqCst),
+            move || {
+                h2.store(true, Ordering::SeqCst);
+                true
+            },
+        );
+        sup.start();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while std::time::Instant::now() < deadline && !healthy.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        sup.stop();
+        assert!(healthy.load(Ordering::SeqCst), "sweeper healed the component");
+    }
+}

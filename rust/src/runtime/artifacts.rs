@@ -1,0 +1,125 @@
+//! Artifact discovery: the manifest written by `python/compile/aot.py`.
+//!
+//! `artifacts/manifest.txt` has one line per compiled kernel:
+//! `name<TAB>file<TAB>key=value,key=value,...` (shape metadata the rust
+//! side needs to pad its inputs to the AOT shapes).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$RL_ARTIFACTS` if set, else
+/// `./artifacts`, else walk up from the executable (so tests and benches
+/// find it from any working directory).
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("RL_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").is_file() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub meta: HashMap<String, i64>,
+}
+
+impl ArtifactEntry {
+    pub fn dim(&self, key: &str) -> Option<i64> {
+        self.meta.get(key).copied()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactEntry>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let name = parts.next().ok_or(format!("line {}: missing name", i + 1))?;
+            let file = parts.next().ok_or(format!("line {}: missing file", i + 1))?;
+            let mut meta = HashMap::new();
+            if let Some(kvs) = parts.next() {
+                for kv in kvs.split(',').filter(|s| !s.is_empty()) {
+                    let (k, v) =
+                        kv.split_once('=').ok_or(format!("line {}: bad meta '{kv}'", i + 1))?;
+                    let v: i64 =
+                        v.parse().map_err(|_| format!("line {}: bad int '{v}'", i + 1))?;
+                    meta.insert(k.to_string(), v);
+                }
+            }
+            entries.push(ArtifactEntry { name: name.to_string(), file: dir.join(file), meta });
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(
+            "# comment\nnearest\tnearest_b64_k256.hlo.txt\tB=64,K=256,D=2\nkmeans\tkm.hlo.txt\tK=32\n\n",
+            Path::new("/tmp/a"),
+        )
+        .unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let n = m.get("nearest").unwrap();
+        assert_eq!(n.dim("B"), Some(64));
+        assert_eq!(n.dim("K"), Some(256));
+        assert_eq!(n.file, PathBuf::from("/tmp/a/nearest_b64_k256.hlo.txt"));
+        assert!(m.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Manifest::parse("name-without-file", Path::new("/")).is_err());
+        assert!(Manifest::parse("n\tf\tB=notint", Path::new("/")).is_err());
+        assert!(Manifest::parse("n\tf\tnoequals", Path::new("/")).is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT execution service.
+//!
+//! The `xla` crate's client/executable wrappers are `Rc`-based (neither
+//! `Send` nor `Sync`), so the runtime hosts them on one dedicated service
+//! thread. Callers hold cheap [`LoadedKernel`] handles and exchange
+//! requests/replies over channels; execution is serialized on the service
+//! thread, which is also what a `Mutex` around the executable would give —
+//! the experiment harness shows task-side compute dominates end-to-end.
+
+use crate::actor::ask::Reply;
+use crate::log_info;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Output buffer from a kernel execution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OutputBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutputBuf {
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            OutputBuf::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            OutputBuf::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+enum Req {
+    Load { path: PathBuf, reply: Reply<std::result::Result<usize, String>> },
+    Run { kernel: usize, inputs: Vec<(Vec<f32>, Vec<i64>)>, reply: Reply<std::result::Result<Vec<OutputBuf>, String>> },
+}
+
+/// Handle to the PJRT service thread.
+pub struct XlaRuntime {
+    tx: Mutex<Sender<Req>>,
+}
+
+static GLOBAL: OnceLock<std::result::Result<Arc<XlaRuntime>, String>> = OnceLock::new();
+
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+impl XlaRuntime {
+    fn start() -> Result<Arc<Self>> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("PjRtClient::cpu: {e:?}")));
+                        return;
+                    }
+                };
+                log_info!(
+                    "runtime",
+                    "PJRT service up: platform={} devices={}",
+                    client.platform_name(),
+                    client.device_count()
+                );
+                let mut kernels: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Load { path, reply } => {
+                            reply.send(Self::do_load(&client, &path, &mut kernels));
+                        }
+                        Req::Run { kernel, inputs, reply } => {
+                            reply.send(Self::do_run(&kernels, kernel, inputs));
+                        }
+                    }
+                }
+            })
+            .context("spawn xla service")?;
+        ready_rx
+            .recv_timeout(REPLY_TIMEOUT)
+            .context("xla service never became ready")?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Arc::new(XlaRuntime { tx: Mutex::new(tx) }))
+    }
+
+    fn do_load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        kernels: &mut Vec<xla::PjRtLoadedExecutable>,
+    ) -> std::result::Result<usize, String> {
+        let path_str = path.to_str().ok_or("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| format!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| format!("compile {path:?}: {e:?}"))?;
+        kernels.push(exe);
+        Ok(kernels.len() - 1)
+    }
+
+    fn do_run(
+        kernels: &[xla::PjRtLoadedExecutable],
+        kernel: usize,
+        inputs: Vec<(Vec<f32>, Vec<i64>)>,
+    ) -> std::result::Result<Vec<OutputBuf>, String> {
+        let exe = kernels.get(kernel).ok_or(format!("unknown kernel id {kernel}"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in &inputs {
+            let expected: i64 = dims.iter().product();
+            if expected != data.len() as i64 {
+                return Err(format!(
+                    "input shape {dims:?} wants {expected} elems, got {}",
+                    data.len()
+                ));
+            }
+            literals.push(
+                xla::Literal::vec1(data).reshape(dims).map_err(|e| format!("reshape: {e:?}"))?,
+            );
+        }
+        let result =
+            exe.execute::<xla::Literal>(&literals).map_err(|e| format!("execute: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| format!("to_literal: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| format!("to_tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let ty = p.element_type().map_err(|e| format!("element_type: {e:?}"))?;
+            match ty {
+                xla::ElementType::F32 => out.push(OutputBuf::F32(
+                    p.to_vec::<f32>().map_err(|e| format!("to_vec<f32>: {e:?}"))?,
+                )),
+                xla::ElementType::S32 => out.push(OutputBuf::I32(
+                    p.to_vec::<i32>().map_err(|e| format!("to_vec<i32>: {e:?}"))?,
+                )),
+                other => return Err(format!("unsupported output dtype {other:?}")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Get (or start) the shared service.
+    pub fn global() -> Result<Arc<XlaRuntime>> {
+        GLOBAL
+            .get_or_init(|| XlaRuntime::start().map_err(|e| e.to_string()))
+            .clone()
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Load an HLO-text artifact; compile happens on the service thread.
+    pub fn load_hlo_text(self: &Arc<Self>, path: &Path) -> Result<LoadedKernel> {
+        let reply = Reply::new();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Req::Load { path: path.to_path_buf(), reply: reply.clone() })
+            .map_err(|_| anyhow!("xla service down"))?;
+        let id = reply
+            .wait(REPLY_TIMEOUT)
+            .context("xla load timed out")?
+            .map_err(|e| anyhow!(e))?;
+        Ok(LoadedKernel { rt: self.clone(), id, name: path.display().to_string() })
+    }
+}
+
+/// Handle to one compiled executable (clonable, thread-safe).
+#[derive(Clone)]
+pub struct LoadedKernel {
+    rt: Arc<XlaRuntime>,
+    id: usize,
+    pub name: String,
+}
+
+impl LoadedKernel {
+    /// Execute with f32 inputs (`(data, dims)` per argument). The kernel
+    /// was lowered with `return_tuple=True`, so outputs always arrive as a
+    /// tuple; each element is returned as an [`OutputBuf`] by dtype.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<OutputBuf>> {
+        let reply = Reply::new();
+        let owned: Vec<(Vec<f32>, Vec<i64>)> =
+            inputs.iter().map(|(d, s)| (d.to_vec(), s.to_vec())).collect();
+        self.rt
+            .tx
+            .lock()
+            .unwrap()
+            .send(Req::Run { kernel: self.id, inputs: owned, reply: reply.clone() })
+            .map_err(|_| anyhow!("xla service down"))?;
+        reply
+            .wait(REPLY_TIMEOUT)
+            .context("xla run timed out")?
+            .map_err(|e| anyhow!("{}: {e}", self.name))
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_artifacts.rs
+// (they require `make artifacts` to have run). Unit tests here cover the
+// pure parts only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_buf_accessors() {
+        let f = OutputBuf::F32(vec![1.0, 2.0]);
+        assert_eq!(f.as_f32(), Some(&[1.0f32, 2.0][..]));
+        assert!(f.as_i32().is_none());
+        let i = OutputBuf::I32(vec![3]);
+        assert_eq!(i.as_i32(), Some(&[3][..]));
+        assert!(i.as_f32().is_none());
+    }
+}

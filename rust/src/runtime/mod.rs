@@ -1,0 +1,14 @@
+//! PJRT runtime: loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs only at build time (`make artifacts` → `python -m
+//! compile.aot`), emitting HLO **text** (the interchange format this
+//! image's xla_extension 0.5.1 accepts — serialized protos from jax ≥ 0.5
+//! carry 64-bit instruction ids it rejects). This module loads those
+//! files, compiles them once on the PJRT CPU client, and exposes typed
+//! entry points the L3 hot path calls. No Python on the request path.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{artifacts_dir, Manifest};
+pub use client::{LoadedKernel, XlaRuntime};

@@ -1,0 +1,224 @@
+//! Nearest-center backends: the micro-clustering hot-spot.
+//!
+//! `nearest(points[B], centers[K]) → (argmin index, min distance)[B]` is
+//! where micro-clustering spends its time (the paper: "TCMM searches
+//! through the micro-clusters for the nearest one… the micro-cluster size
+//! grows over time and decelerates the micro-clustering"). Two
+//! implementations:
+//!
+//! - [`CpuBackend`] — scalar rust (also the correctness oracle);
+//! - [`XlaBackend`] — the AOT-compiled JAX/Pallas kernel through PJRT,
+//!   with inputs padded to the artifact's static `(B, K)` shape.
+
+use crate::runtime::{artifacts_dir, LoadedKernel, Manifest, XlaRuntime};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Batch nearest-neighbour search over cluster centers.
+pub trait NearestBackend: Send + Sync {
+    /// For each point, the index of the nearest center and the Euclidean
+    /// distance to it. `centers` may be empty → all results `None`.
+    fn nearest(&self, points: &[[f32; 2]], centers: &[[f32; 2]]) -> Vec<Option<(usize, f32)>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Scalar CPU implementation.
+pub struct CpuBackend;
+
+impl NearestBackend for CpuBackend {
+    fn nearest(&self, points: &[[f32; 2]], centers: &[[f32; 2]]) -> Vec<Option<(usize, f32)>> {
+        points
+            .iter()
+            .map(|p| {
+                let mut best: Option<(usize, f32)> = None;
+                for (i, c) in centers.iter().enumerate() {
+                    let dx = c[0] - p[0];
+                    let dy = c[1] - p[1];
+                    let d2 = dx * dx + dy * dy;
+                    if best.map(|(_, bd)| d2 < bd).unwrap_or(true) {
+                        best = Some((i, d2));
+                    }
+                }
+                best.map(|(i, d2)| (i, d2.sqrt()))
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+/// PJRT-backed implementation using the `nearest` artifact.
+///
+/// The artifact has static shapes `points f32[B,2]`, `centers f32[K,2]`,
+/// `valid f32[K]`; it returns `(idx s32[B], dist f32[B])`. Larger point
+/// batches are chunked; larger center sets fall back to CPU (the
+/// experiment configures the micro-cluster capacity ≤ K so this only
+/// happens on misconfiguration).
+pub struct XlaBackend {
+    kernel: LoadedKernel,
+    b: usize,
+    k: usize,
+    fallback: CpuBackend,
+}
+
+impl XlaBackend {
+    /// Load from the artifacts directory (env `RL_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load() -> Result<Arc<Self>> {
+        let dir = artifacts_dir().context("artifacts directory not found (run `make artifacts`)")?;
+        let manifest = Manifest::load(&dir).map_err(|e| anyhow::anyhow!(e))?;
+        let entry = manifest.get("nearest").context("manifest lacks 'nearest'")?;
+        let b = entry.dim("B").context("nearest: missing B")? as usize;
+        let k = entry.dim("K").context("nearest: missing K")? as usize;
+        let rt = XlaRuntime::global()?;
+        let kernel = rt.load_hlo_text(&entry.file)?;
+        Ok(Arc::new(XlaBackend { kernel, b, k, fallback: CpuBackend }))
+    }
+
+    /// The artifact's static shapes.
+    pub fn shapes(&self) -> (usize, usize) {
+        (self.b, self.k)
+    }
+
+    fn run_chunk(
+        &self,
+        chunk: &[[f32; 2]],
+        centers: &[[f32; 2]],
+    ) -> Result<Vec<Option<(usize, f32)>>> {
+        let b = self.b;
+        let k = self.k;
+        // Pad points to B and centers to K; `valid` masks padded centers.
+        // Point padding repeats the first real point (NOT zeros): the
+        // kernel mean-centers the batch in-graph, and zero padding would
+        // drag the mean far from the data, reintroducing the f32
+        // cancellation the centering exists to avoid.
+        let pad = chunk.first().copied().unwrap_or([0.0, 0.0]);
+        let mut pts = vec![0f32; b * 2];
+        for i in 0..b {
+            let p = chunk.get(i).unwrap_or(&pad);
+            pts[i * 2] = p[0];
+            pts[i * 2 + 1] = p[1];
+        }
+        let mut ctr = vec![0f32; k * 2];
+        let mut valid = vec![0f32; k];
+        for (i, c) in centers.iter().enumerate() {
+            ctr[i * 2] = c[0];
+            ctr[i * 2 + 1] = c[1];
+            valid[i] = 1.0;
+        }
+        let outs = self.kernel.run_f32(&[
+            (&pts, &[b as i64, 2]),
+            (&ctr, &[k as i64, 2]),
+            (&valid, &[k as i64]),
+        ])?;
+        let idx = outs
+            .first()
+            .and_then(|o| o.as_i32())
+            .context("nearest output 0 not i32")?
+            .to_vec();
+        let dist = outs
+            .get(1)
+            .and_then(|o| o.as_f32())
+            .context("nearest output 1 not f32")?
+            .to_vec();
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let j = idx[i];
+                if j < 0 || j as usize >= centers.len() {
+                    None
+                } else {
+                    Some((j as usize, dist[i]))
+                }
+            })
+            .collect())
+    }
+}
+
+impl NearestBackend for XlaBackend {
+    fn nearest(&self, points: &[[f32; 2]], centers: &[[f32; 2]]) -> Vec<Option<(usize, f32)>> {
+        if centers.is_empty() {
+            return vec![None; points.len()];
+        }
+        if centers.len() > self.k {
+            // Artifact too small for this center set: stay correct.
+            return self.fallback.nearest(points, centers);
+        }
+        let mut out = Vec::with_capacity(points.len());
+        for chunk in points.chunks(self.b) {
+            match self.run_chunk(chunk, centers) {
+                Ok(mut v) => out.append(&mut v),
+                Err(e) => {
+                    crate::log_warn!("xla-backend", "kernel failed ({e}); CPU fallback");
+                    out.extend(self.fallback.nearest(chunk, centers));
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_backend_finds_nearest() {
+        let centers = vec![[0.0f32, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let points = vec![[9.0f32, 1.0], [0.1, 0.1], [1.0, 9.0]];
+        let got = CpuBackend.nearest(&points, &centers);
+        assert_eq!(got[0].unwrap().0, 1);
+        assert_eq!(got[1].unwrap().0, 0);
+        assert_eq!(got[2].unwrap().0, 2);
+        let d = got[1].unwrap().1;
+        assert!((d - (0.02f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_backend_empty_centers() {
+        let got = CpuBackend.nearest(&[[1.0, 2.0]], &[]);
+        assert_eq!(got, vec![None]);
+    }
+
+    #[test]
+    fn cpu_matches_microclusterset_scan() {
+        crate::util::propcheck::check("backend≡set-scan", 50, |g| {
+            let mut set = crate::tcmm::MicroClusterSet::new(32, 0);
+            for i in 0..g.usize(1, 20) {
+                set.insert([g.f64() as f32 * 5.0, g.f64() as f32 * 5.0], i as u64, 0.1);
+            }
+            let centers = set.centers();
+            let p = [g.f64() as f32 * 5.0, g.f64() as f32 * 5.0];
+            let scan = set.nearest(p);
+            let backend = CpuBackend.nearest(&[p], &centers)[0];
+            match (scan, backend) {
+                (Some((i, d)), Some((j, e))) => {
+                    crate::prop_assert!((d - e).abs() < 1e-5, "dist mismatch {d} {e}");
+                    // Indices may differ only on exact ties.
+                    if i != j {
+                        let di = {
+                            let c = centers[i];
+                            ((c[0] - p[0]).powi(2) + (c[1] - p[1]).powi(2)).sqrt()
+                        };
+                        let dj = {
+                            let c = centers[j];
+                            ((c[0] - p[0]).powi(2) + (c[1] - p[1]).powi(2)).sqrt()
+                        };
+                        crate::prop_assert!((di - dj).abs() < 1e-6, "non-tie index mismatch");
+                    }
+                }
+                (None, None) => {}
+                other => return Err(format!("one empty: {other:?}")),
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,174 @@
+//! Cluster-change events: the event-sourced output streams of the two
+//! TCMM jobs (§4.1: jobs publish "the micro-clusters changes as an event
+//! source to a topic").
+
+use crate::messaging::Message;
+
+/// Micro-clustering job output events.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MicroEvent {
+    /// A new micro-cluster was created at `center`.
+    Created { id: u64, center: [f32; 2], ts: u64 },
+    /// A point merged into cluster `id`, moving its center.
+    Updated { id: u64, center: [f32; 2], n: u32, ts: u64 },
+}
+
+const TAG_CREATED: u8 = 1;
+const TAG_UPDATED: u8 = 2;
+
+impl MicroEvent {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(1 + 8 + 8 + 8 + 4);
+        match self {
+            MicroEvent::Created { id, center, ts } => {
+                out.push(TAG_CREATED);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&center[0].to_le_bytes());
+                out.extend_from_slice(&center[1].to_le_bytes());
+                out.extend_from_slice(&ts.to_le_bytes());
+            }
+            MicroEvent::Updated { id, center, n, ts } => {
+                out.push(TAG_UPDATED);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&center[0].to_le_bytes());
+                out.extend_from_slice(&center[1].to_le_bytes());
+                out.extend_from_slice(&ts.to_le_bytes());
+                out.extend_from_slice(&n.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Option<MicroEvent> {
+        let tag = *b.first()?;
+        let id = u64::from_le_bytes(b.get(1..9)?.try_into().ok()?);
+        let cx = f32::from_le_bytes(b.get(9..13)?.try_into().ok()?);
+        let cy = f32::from_le_bytes(b.get(13..17)?.try_into().ok()?);
+        let ts = u64::from_le_bytes(b.get(17..25)?.try_into().ok()?);
+        match tag {
+            TAG_CREATED if b.len() == 25 => Some(MicroEvent::Created { id, center: [cx, cy], ts }),
+            TAG_UPDATED if b.len() == 29 => {
+                let n = u32::from_le_bytes(b.get(25..29)?.try_into().ok()?);
+                Some(MicroEvent::Updated { id, center: [cx, cy], n, ts })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn to_message(&self) -> Message {
+        // Key by cluster id so one cluster's event stream is ordered
+        // within a partition.
+        let id = match self {
+            MicroEvent::Created { id, .. } | MicroEvent::Updated { id, .. } => *id,
+        };
+        Message::new(Some(id), self.encode(), 0)
+    }
+}
+
+/// Macro-clustering job output: a full snapshot of the evolving macro-
+/// clusters (k centroids + member weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MacroEvent {
+    pub ts: u64,
+    pub centroids: Vec<[f32; 2]>,
+    pub weights: Vec<f64>,
+}
+
+impl MacroEvent {
+    pub fn encode(&self) -> Vec<u8> {
+        let k = self.centroids.len();
+        let mut out = Vec::with_capacity(8 + 4 + k * 16);
+        out.extend_from_slice(&self.ts.to_le_bytes());
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        for (c, w) in self.centroids.iter().zip(&self.weights) {
+            out.extend_from_slice(&c[0].to_le_bytes());
+            out.extend_from_slice(&c[1].to_le_bytes());
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Option<MacroEvent> {
+        let ts = u64::from_le_bytes(b.get(0..8)?.try_into().ok()?);
+        let k = u32::from_le_bytes(b.get(8..12)?.try_into().ok()?) as usize;
+        if b.len() != 12 + k * 16 {
+            return None;
+        }
+        let mut centroids = Vec::with_capacity(k);
+        let mut weights = Vec::with_capacity(k);
+        for i in 0..k {
+            let o = 12 + i * 16;
+            centroids.push([
+                f32::from_le_bytes(b.get(o..o + 4)?.try_into().ok()?),
+                f32::from_le_bytes(b.get(o + 4..o + 8)?.try_into().ok()?),
+            ]);
+            weights.push(f64::from_le_bytes(b.get(o + 8..o + 16)?.try_into().ok()?));
+        }
+        Some(MacroEvent { ts, centroids, weights })
+    }
+
+    pub fn to_message(&self) -> Message {
+        Message::new(None, self.encode(), 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_event_round_trip() {
+        let e = MicroEvent::Created { id: 9, center: [116.3, 39.9], ts: 1234 };
+        assert_eq!(MicroEvent::decode(&e.encode()), Some(e));
+        let e = MicroEvent::Updated { id: 7, center: [116.1, 40.0], n: 55, ts: 999 };
+        assert_eq!(MicroEvent::decode(&e.encode()), Some(e));
+    }
+
+    #[test]
+    fn micro_event_rejects_garbage() {
+        assert_eq!(MicroEvent::decode(&[]), None);
+        assert_eq!(MicroEvent::decode(&[3; 25]), None); // bad tag
+        assert_eq!(MicroEvent::decode(&[1; 10]), None); // truncated
+    }
+
+    #[test]
+    fn macro_event_round_trip() {
+        let e = MacroEvent {
+            ts: 42,
+            centroids: vec![[1.0, 2.0], [3.0, 4.0]],
+            weights: vec![10.0, 20.0],
+        };
+        assert_eq!(MacroEvent::decode(&e.encode()), Some(e));
+        // Empty snapshot is legal.
+        let e = MacroEvent { ts: 0, centroids: vec![], weights: vec![] };
+        assert_eq!(MacroEvent::decode(&e.encode()), Some(e));
+    }
+
+    #[test]
+    fn messages_keyed_by_cluster() {
+        let e = MicroEvent::Created { id: 5, center: [0.0, 0.0], ts: 0 };
+        assert_eq!(e.to_message().key, Some(5));
+    }
+
+    #[test]
+    fn micro_round_trip_property() {
+        crate::util::propcheck::check("micro-event-codec", 100, |g| {
+            let e = if g.bool() {
+                MicroEvent::Created {
+                    id: g.u64(),
+                    center: [g.f64() as f32, g.f64() as f32],
+                    ts: g.u64(),
+                }
+            } else {
+                MicroEvent::Updated {
+                    id: g.u64(),
+                    center: [g.f64() as f32, g.f64() as f32],
+                    n: g.u64() as u32,
+                    ts: g.u64(),
+                }
+            };
+            crate::prop_assert!(MicroEvent::decode(&e.encode()) == Some(e), "round trip");
+            Ok(())
+        });
+    }
+}

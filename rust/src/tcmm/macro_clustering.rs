@@ -1,0 +1,221 @@
+//! Macro-clustering: periodic weighted k-means over micro-cluster centers
+//! (TCMM step 2).
+
+use crate::util::prng::Pcg32;
+
+/// Weighted k-means. Returns `(centroids, assignment)`; deterministic for
+/// a given seed (k-means++ style seeding by weight, then Lloyd
+/// iterations). `k` is clamped to the number of points.
+pub fn kmeans(
+    points: &[[f32; 2]],
+    weights: &[f64],
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> (Vec<[f32; 2]>, Vec<usize>) {
+    assert_eq!(points.len(), weights.len());
+    let n = points.len();
+    if n == 0 || k == 0 {
+        return (vec![], vec![]);
+    }
+    let k = k.min(n);
+    let mut rng = Pcg32::new(seed);
+
+    // k-means++ seeding (weighted).
+    let mut centroids: Vec<[f32; 2]> = Vec::with_capacity(k);
+    let first = pick_weighted(&mut rng, weights);
+    centroids.push(points[first]);
+    let mut d2: Vec<f64> = points.iter().map(|p| dist2(*p, centroids[0]) as f64).collect();
+    while centroids.len() < k {
+        let scores: Vec<f64> = d2.iter().zip(weights).map(|(d, w)| d * w).collect();
+        let total: f64 = scores.iter().sum();
+        let next = if total <= 0.0 {
+            rng.gen_range(0, n)
+        } else {
+            pick_weighted(&mut rng, &scores)
+        };
+        centroids.push(points[next]);
+        for (i, p) in points.iter().enumerate() {
+            let nd = dist2(*p, points[next]) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+
+    // Lloyd iterations (weighted means).
+    let mut assignment = vec![0usize; n];
+    for _ in 0..iters.max(1) {
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0;
+            let mut best_d = f32::INFINITY;
+            for (c, ct) in centroids.iter().enumerate() {
+                let d = dist2(*p, *ct);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        let mut sums = vec![[0.0f64; 2]; k];
+        let mut wsum = vec![0.0f64; k];
+        for (i, p) in points.iter().enumerate() {
+            let a = assignment[i];
+            sums[a][0] += p[0] as f64 * weights[i];
+            sums[a][1] += p[1] as f64 * weights[i];
+            wsum[a] += weights[i];
+        }
+        for c in 0..k {
+            if wsum[c] > 0.0 {
+                centroids[c] = [(sums[c][0] / wsum[c]) as f32, (sums[c][1] / wsum[c]) as f32];
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    (centroids, assignment)
+}
+
+#[inline]
+fn dist2(a: [f32; 2], b: [f32; 2]) -> f32 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    dx * dx + dy * dy
+}
+
+fn pick_weighted(rng: &mut Pcg32, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return rng.gen_range(0, weights.len());
+    }
+    let mut target = rng.f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        target -= w;
+        if target <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// The macro-clustering job state: consumes micro-cluster events,
+/// maintains the latest center/weight per micro-cluster id, and
+/// periodically emits a k-means snapshot.
+pub struct MacroClusterer {
+    pub k: usize,
+    pub iters: usize,
+    seed: u64,
+    /// Latest known (center, n) per micro-cluster id.
+    micro: std::collections::HashMap<u64, ([f32; 2], u32)>,
+}
+
+impl MacroClusterer {
+    pub fn new(k: usize, iters: usize, seed: u64) -> Self {
+        MacroClusterer { k, iters, seed, micro: std::collections::HashMap::new() }
+    }
+
+    /// Ingest one micro-cluster event.
+    pub fn observe(&mut self, event: &super::events::MicroEvent) {
+        match *event {
+            super::events::MicroEvent::Created { id, center, .. } => {
+                self.micro.insert(id, (center, 1));
+            }
+            super::events::MicroEvent::Updated { id, center, n, .. } => {
+                self.micro.insert(id, (center, n));
+            }
+        }
+    }
+
+    pub fn micro_count(&self) -> usize {
+        self.micro.len()
+    }
+
+    /// Produce the current macro-clusters.
+    pub fn snapshot(&self, ts: u64) -> super::events::MacroEvent {
+        let mut ids: Vec<&u64> = self.micro.keys().collect();
+        ids.sort_unstable(); // deterministic order
+        let points: Vec<[f32; 2]> = ids.iter().map(|id| self.micro[id].0).collect();
+        let weights: Vec<f64> = ids.iter().map(|id| self.micro[id].1 as f64).collect();
+        let (centroids, assignment) = kmeans(&points, &weights, self.k, self.iters, self.seed);
+        let mut cluster_weights = vec![0.0f64; centroids.len()];
+        for (i, a) in assignment.iter().enumerate() {
+            cluster_weights[*a] += weights[i];
+        }
+        super::events::MacroEvent { ts, centroids, weights: cluster_weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_degenerate() {
+        let (c, a) = kmeans(&[], &[], 3, 5, 0);
+        assert!(c.is_empty() && a.is_empty());
+        let (c, a) = kmeans(&[[1.0, 1.0]], &[1.0], 5, 5, 0);
+        assert_eq!(c.len(), 1, "k clamped to n");
+        assert_eq!(a, vec![0]);
+    }
+
+    #[test]
+    fn separates_obvious_clusters() {
+        // Two tight blobs far apart.
+        let mut pts = vec![];
+        for i in 0..10 {
+            pts.push([0.0 + i as f32 * 0.01, 0.0]);
+            pts.push([10.0 + i as f32 * 0.01, 10.0]);
+        }
+        let w = vec![1.0; pts.len()];
+        let (centroids, assignment) = kmeans(&pts, &w, 2, 20, 42);
+        assert_eq!(centroids.len(), 2);
+        // All even-index points together, all odd together.
+        let a0 = assignment[0];
+        for i in (0..pts.len()).step_by(2) {
+            assert_eq!(assignment[i], a0);
+        }
+        assert_ne!(assignment[1], a0);
+        // Centroids near blob centers.
+        let mut cs = centroids.clone();
+        cs.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+        assert!((cs[0][0] - 0.045).abs() < 0.1);
+        assert!((cs[1][0] - 10.045).abs() < 0.1);
+    }
+
+    #[test]
+    fn weights_pull_centroids() {
+        let pts = vec![[0.0f32, 0.0], [1.0, 0.0]];
+        let (c, _) = kmeans(&pts, &[100.0, 1.0], 1, 10, 1);
+        assert!(c[0][0] < 0.05, "heavy point dominates: {:?}", c);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let pts: Vec<[f32; 2]> = (0..50).map(|i| [(i % 7) as f32, (i % 5) as f32]).collect();
+        let w = vec![1.0; 50];
+        let a = kmeans(&pts, &w, 4, 10, 9);
+        let b = kmeans(&pts, &w, 4, 10, 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn macro_clusterer_tracks_events() {
+        use crate::tcmm::events::MicroEvent;
+        let mut mc = MacroClusterer::new(2, 10, 3);
+        mc.observe(&MicroEvent::Created { id: 1, center: [0.0, 0.0], ts: 0 });
+        mc.observe(&MicroEvent::Created { id: 2, center: [10.0, 10.0], ts: 1 });
+        mc.observe(&MicroEvent::Updated { id: 1, center: [0.5, 0.0], n: 50, ts: 2 });
+        assert_eq!(mc.micro_count(), 2);
+        let snap = mc.snapshot(99);
+        assert_eq!(snap.ts, 99);
+        assert_eq!(snap.centroids.len(), 2);
+        let total_weight: f64 = snap.weights.iter().sum();
+        assert_eq!(total_weight, 51.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! The micro-clustering job logic: points in, cluster-change events out.
+
+use super::backend::NearestBackend;
+use super::events::MicroEvent;
+use super::microcluster::MicroClusterSet;
+use std::sync::Arc;
+
+/// Stateful micro-clusterer (one per task incarnation; distributed tasks
+/// share state via the [`MicroClusterSet`] CRDT through the state
+/// management service).
+pub struct MicroClusterer {
+    set: MicroClusterSet,
+    threshold: f32,
+    backend: Arc<dyn NearestBackend>,
+}
+
+impl MicroClusterer {
+    pub fn new(
+        capacity: usize,
+        replica: u64,
+        threshold: f32,
+        backend: Arc<dyn NearestBackend>,
+    ) -> Self {
+        MicroClusterer { set: MicroClusterSet::new(capacity, replica), threshold, backend }
+    }
+
+    pub fn set(&self) -> &MicroClusterSet {
+        &self.set
+    }
+
+    pub fn set_mut(&mut self) -> &mut MicroClusterSet {
+        &mut self.set
+    }
+
+    /// Process one point; returns the resulting change event.
+    pub fn observe(&mut self, xy: [f32; 2], ts: u64) -> MicroEvent {
+        let hint = self
+            .backend
+            .nearest(&[xy], &self.set.centers())
+            .into_iter()
+            .next()
+            .flatten();
+        self.apply(xy, ts, hint)
+    }
+
+    /// Process a batch of points through one backend call (the hot path:
+    /// one kernel execution computes every point's nearest center; the
+    /// serial insert that follows is cheap CF arithmetic).
+    ///
+    /// Note the hint can go stale *within* the batch (an insert changes
+    /// the center set); stale hints are re-validated against the
+    /// threshold on insert, so correctness holds — at worst a point seeds
+    /// a cluster it could have joined, which incremental TCMM tolerates by
+    /// construction (its result is order-dependent anyway).
+    pub fn observe_batch(&mut self, points: &[([f32; 2], u64)]) -> Vec<MicroEvent> {
+        let xys: Vec<[f32; 2]> = points.iter().map(|(p, _)| *p).collect();
+        let hints = self.backend.nearest(&xys, &self.set.centers());
+        points
+            .iter()
+            .zip(hints)
+            .map(|(&(xy, ts), hint)| self.apply(xy, ts, hint))
+            .collect()
+    }
+
+    fn apply(&mut self, xy: [f32; 2], ts: u64, hint: Option<(usize, f32)>) -> MicroEvent {
+        let (id, created) = self.set.insert_with_hint(xy, ts, self.threshold, hint);
+        let cluster = self
+            .set
+            .clusters()
+            .iter()
+            .find(|c| c.id == id)
+            .expect("cluster just touched must exist");
+        if created {
+            MicroEvent::Created { id, center: cluster.center(), ts }
+        } else {
+            MicroEvent::Updated { id, center: cluster.center(), n: cluster.n, ts }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tcmm::backend::CpuBackend;
+
+    fn clusterer(threshold: f32) -> MicroClusterer {
+        MicroClusterer::new(64, 0, threshold, Arc::new(CpuBackend))
+    }
+
+    #[test]
+    fn first_point_creates() {
+        let mut mc = clusterer(0.1);
+        match mc.observe([1.0, 1.0], 5) {
+            MicroEvent::Created { center, ts, .. } => {
+                assert_eq!(center, [1.0, 1.0]);
+                assert_eq!(ts, 5);
+            }
+            e => panic!("expected Created, got {e:?}"),
+        }
+    }
+
+    #[test]
+    fn close_point_updates() {
+        let mut mc = clusterer(0.5);
+        mc.observe([1.0, 1.0], 0);
+        match mc.observe([1.2, 1.0], 1) {
+            MicroEvent::Updated { n, center, .. } => {
+                assert_eq!(n, 2);
+                assert!((center[0] - 1.1).abs() < 1e-6);
+            }
+            e => panic!("expected Updated, got {e:?}"),
+        }
+        assert_eq!(mc.set().len(), 1);
+    }
+
+    #[test]
+    fn batch_equals_sequential_for_stable_hints() {
+        // When all points are far apart (every one creates), batch and
+        // sequential agree exactly; when they interleave, counts still
+        // match because stale hints re-validate.
+        let pts: Vec<([f32; 2], u64)> =
+            (0..20).map(|i| ([i as f32 * 10.0, 0.0], i as u64)).collect();
+        let mut a = clusterer(0.5);
+        let events_batch = a.observe_batch(&pts);
+        let mut b = clusterer(0.5);
+        let events_seq: Vec<MicroEvent> = pts.iter().map(|&(p, t)| b.observe(p, t)).collect();
+        assert_eq!(events_batch, events_seq);
+        assert_eq!(a.set().len(), 20);
+    }
+
+    #[test]
+    fn batch_conserves_points_property() {
+        crate::util::propcheck::check("batch-conserves", 30, |g| {
+            let mut mc = clusterer(0.2);
+            let mut total = 0u64;
+            for _ in 0..g.usize(1, 6) {
+                let batch: Vec<([f32; 2], u64)> = (0..g.usize(1, 50))
+                    .map(|i| {
+                        ([g.f64() as f32 * 3.0, g.f64() as f32 * 3.0], i as u64)
+                    })
+                    .collect();
+                total += batch.len() as u64;
+                mc.observe_batch(&batch);
+            }
+            crate::prop_assert!(
+                mc.set().total_points() == total,
+                "points {} != {}",
+                mc.set().total_points(),
+                total
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn discovers_hotspot_structure() {
+        // Points from 3 tight blobs → ≈3 micro-clusters.
+        let mut mc = clusterer(0.05);
+        let blobs = [[0.0f32, 0.0], [1.0, 1.0], [2.0, 0.0]];
+        let mut rng = crate::util::prng::Pcg32::new(5);
+        for i in 0..300 {
+            let b = blobs[i % 3];
+            let xy = [b[0] + (rng.f32() - 0.5) * 0.02, b[1] + (rng.f32() - 0.5) * 0.02];
+            mc.observe(xy, i as u64);
+        }
+        assert_eq!(mc.set().len(), 3, "got {} clusters", mc.set().len());
+        assert_eq!(mc.set().total_points(), 300);
+    }
+}

@@ -1,0 +1,366 @@
+//! Micro-clusters: temporal cluster-feature vectors.
+//!
+//! TCMM defines a micro-cluster as `(N, LS, SS, LS_t, SS_t)` — point
+//! count, linear & square sums of positions, and linear & square sums of
+//! timestamps. CF vectors are additive, which gives O(1) point insertion
+//! and O(1) micro-cluster merging, and makes a *set* of micro-clusters a
+//! natural replicated state: merging two replicas' sets is CF addition of
+//! matching clusters plus union of the rest (used by the state-management
+//! service when distributed tasks share clustering state).
+
+use crate::reactive::state::crdt::Crdt;
+
+/// One micro-cluster (2-D spatial + temporal CF vector).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MicroCluster {
+    pub id: u64,
+    pub n: u32,
+    /// Linear sum of positions.
+    pub ls: [f64; 2],
+    /// Sum of squared coordinates.
+    pub ss: [f64; 2],
+    /// Linear and square sums of timestamps.
+    pub ls_t: f64,
+    pub ss_t: f64,
+}
+
+impl MicroCluster {
+    /// Seed a micro-cluster from one point.
+    pub fn seed(id: u64, xy: [f32; 2], ts: u64) -> Self {
+        let (x, y, t) = (xy[0] as f64, xy[1] as f64, ts as f64);
+        MicroCluster { id, n: 1, ls: [x, y], ss: [x * x, y * y], ls_t: t, ss_t: t * t }
+    }
+
+    /// Absorb one point.
+    pub fn add(&mut self, xy: [f32; 2], ts: u64) {
+        let (x, y, t) = (xy[0] as f64, xy[1] as f64, ts as f64);
+        self.n += 1;
+        self.ls[0] += x;
+        self.ls[1] += y;
+        self.ss[0] += x * x;
+        self.ss[1] += y * y;
+        self.ls_t += t;
+        self.ss_t += t * t;
+    }
+
+    /// CF additivity: absorb another micro-cluster.
+    pub fn absorb(&mut self, other: &MicroCluster) {
+        self.n += other.n;
+        self.ls[0] += other.ls[0];
+        self.ls[1] += other.ls[1];
+        self.ss[0] += other.ss[0];
+        self.ss[1] += other.ss[1];
+        self.ls_t += other.ls_t;
+        self.ss_t += other.ss_t;
+    }
+
+    pub fn center(&self) -> [f32; 2] {
+        let n = self.n as f64;
+        [(self.ls[0] / n) as f32, (self.ls[1] / n) as f32]
+    }
+
+    /// RMS radius (0 for singletons).
+    pub fn radius(&self) -> f32 {
+        let n = self.n as f64;
+        let vx = (self.ss[0] / n - (self.ls[0] / n).powi(2)).max(0.0);
+        let vy = (self.ss[1] / n - (self.ls[1] / n).powi(2)).max(0.0);
+        ((vx + vy).sqrt()) as f32
+    }
+
+    /// Mean timestamp (the temporal component TCMM uses for recency).
+    pub fn mean_ts(&self) -> f64 {
+        self.ls_t / self.n as f64
+    }
+}
+
+/// A bounded set of micro-clusters.
+///
+/// When full, inserting a new cluster first merges the closest existing
+/// pair (TCMM's maintenance step), keeping the set size ≤ `capacity`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MicroClusterSet {
+    clusters: Vec<MicroCluster>,
+    capacity: usize,
+    next_id: u64,
+    /// Replica tag for id allocation when used as shared state.
+    replica: u64,
+}
+
+impl MicroClusterSet {
+    pub fn new(capacity: usize, replica: u64) -> Self {
+        assert!(capacity >= 2);
+        MicroClusterSet { clusters: Vec::new(), capacity, next_id: 0, replica }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clusters.is_empty()
+    }
+
+    pub fn clusters(&self) -> &[MicroCluster] {
+        &self.clusters
+    }
+
+    pub fn centers(&self) -> Vec<[f32; 2]> {
+        self.clusters.iter().map(|c| c.center()).collect()
+    }
+
+    pub fn weights(&self) -> Vec<f64> {
+        self.clusters.iter().map(|c| c.n as f64).collect()
+    }
+
+    /// Total points absorbed.
+    pub fn total_points(&self) -> u64 {
+        self.clusters.iter().map(|c| c.n as u64).sum()
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = (self.replica << 40) | self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Linear nearest-center scan (the CPU fallback; the XLA backend
+    /// replaces exactly this loop for batches).
+    pub fn nearest(&self, xy: [f32; 2]) -> Option<(usize, f32)> {
+        let mut best = None;
+        let mut best_d = f32::INFINITY;
+        for (i, c) in self.clusters.iter().enumerate() {
+            let ct = c.center();
+            let dx = ct[0] - xy[0];
+            let dy = ct[1] - xy[1];
+            let d = (dx * dx + dy * dy).sqrt();
+            if d < best_d {
+                best_d = d;
+                best = Some((i, d));
+            }
+        }
+        best
+    }
+
+    /// TCMM insertion: merge into the nearest cluster within `threshold`,
+    /// else create a new micro-cluster (merging the closest pair first if
+    /// at capacity). Returns `(cluster_id, created)`.
+    pub fn insert(&mut self, xy: [f32; 2], ts: u64, threshold: f32) -> (u64, bool) {
+        if let Some((idx, d)) = self.nearest(xy) {
+            if d <= threshold {
+                self.clusters[idx].add(xy, ts);
+                return (self.clusters[idx].id, false);
+            }
+        }
+        if self.clusters.len() >= self.capacity {
+            self.merge_closest_pair();
+        }
+        let id = self.alloc_id();
+        self.clusters.push(MicroCluster::seed(id, xy, ts));
+        (id, true)
+    }
+
+    /// Insertion when the nearest index/distance was already computed by a
+    /// batch backend (avoids rescanning).
+    pub fn insert_with_hint(
+        &mut self,
+        xy: [f32; 2],
+        ts: u64,
+        threshold: f32,
+        hint: Option<(usize, f32)>,
+    ) -> (u64, bool) {
+        if let Some((idx, d)) = hint {
+            if d <= threshold && idx < self.clusters.len() {
+                self.clusters[idx].add(xy, ts);
+                return (self.clusters[idx].id, false);
+            }
+        }
+        if self.clusters.len() >= self.capacity {
+            self.merge_closest_pair();
+        }
+        let id = self.alloc_id();
+        self.clusters.push(MicroCluster::seed(id, xy, ts));
+        (id, true)
+    }
+
+    /// Merge the two closest micro-clusters (capacity maintenance).
+    pub fn merge_closest_pair(&mut self) {
+        if self.clusters.len() < 2 {
+            return;
+        }
+        let mut best = (0, 1);
+        let mut best_d = f32::INFINITY;
+        for i in 0..self.clusters.len() {
+            let ci = self.clusters[i].center();
+            for j in (i + 1)..self.clusters.len() {
+                let cj = self.clusters[j].center();
+                let dx = ci[0] - cj[0];
+                let dy = ci[1] - cj[1];
+                let d = dx * dx + dy * dy;
+                if d < best_d {
+                    best_d = d;
+                    best = (i, j);
+                }
+            }
+        }
+        let absorbed = self.clusters.swap_remove(best.1);
+        self.clusters[best.0].absorb(&absorbed);
+    }
+}
+
+impl Crdt for MicroClusterSet {
+    /// Replica merge: CF-add clusters with matching ids, union the rest,
+    /// then compact to capacity. Point counts are conserved, which is the
+    /// invariant the property tests check (the clustering itself is
+    /// order-sensitive, as all incremental clusterings are — TCMM §3).
+    fn merge(&mut self, other: &Self) {
+        for oc in &other.clusters {
+            if let Some(mine) = self.clusters.iter_mut().find(|c| c.id == oc.id) {
+                // Same lineage: keep the larger CF (replicas only ever
+                // grow a cluster, so max-by-n is the join).
+                if oc.n > mine.n {
+                    *mine = *oc;
+                }
+            } else {
+                self.clusters.push(*oc);
+            }
+        }
+        while self.clusters.len() > self.capacity {
+            self.merge_closest_pair();
+        }
+        self.next_id = self.next_id.max(other.next_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_add_center_radius() {
+        let mut c = MicroCluster::seed(1, [10.0, 20.0], 100);
+        assert_eq!(c.center(), [10.0, 20.0]);
+        assert_eq!(c.radius(), 0.0);
+        c.add([12.0, 20.0], 200);
+        assert_eq!(c.n, 2);
+        assert_eq!(c.center(), [11.0, 20.0]);
+        assert!((c.radius() - 1.0).abs() < 1e-6);
+        assert_eq!(c.mean_ts(), 150.0);
+    }
+
+    #[test]
+    fn absorb_is_cf_addition() {
+        let mut a = MicroCluster::seed(1, [0.0, 0.0], 0);
+        a.add([2.0, 0.0], 10);
+        let mut b = MicroCluster::seed(2, [10.0, 10.0], 20);
+        b.add([12.0, 10.0], 30);
+        let mut ab = a;
+        ab.absorb(&b);
+        // Equivalent to adding all four points to one cluster.
+        let mut direct = MicroCluster::seed(1, [0.0, 0.0], 0);
+        direct.add([2.0, 0.0], 10);
+        direct.add([10.0, 10.0], 20);
+        direct.add([12.0, 10.0], 30);
+        assert_eq!(ab.n, direct.n);
+        assert_eq!(ab.ls, direct.ls);
+        assert_eq!(ab.ss, direct.ss);
+        assert_eq!(ab.ls_t, direct.ls_t);
+    }
+
+    #[test]
+    fn insert_merges_within_threshold() {
+        let mut set = MicroClusterSet::new(10, 0);
+        let (id1, created1) = set.insert([1.0, 1.0], 0, 0.5);
+        assert!(created1);
+        let (id2, created2) = set.insert([1.1, 1.0], 1, 0.5);
+        assert!(!created2, "within threshold: merged");
+        assert_eq!(id1, id2);
+        let (_, created3) = set.insert([5.0, 5.0], 2, 0.5);
+        assert!(created3, "far: new cluster");
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.total_points(), 3);
+    }
+
+    #[test]
+    fn capacity_forces_pair_merge() {
+        let mut set = MicroClusterSet::new(3, 0);
+        set.insert([0.0, 0.0], 0, 0.1);
+        set.insert([10.0, 0.0], 0, 0.1);
+        set.insert([10.2, 0.0], 0, 0.1); // close to #2 but > threshold
+        assert_eq!(set.len(), 3);
+        set.insert([50.0, 50.0], 0, 0.1); // forces merge of closest pair
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.total_points(), 4, "no points lost in maintenance");
+    }
+
+    #[test]
+    fn nearest_finds_argmin() {
+        let mut set = MicroClusterSet::new(10, 0);
+        set.insert([0.0, 0.0], 0, 0.01);
+        set.insert([10.0, 0.0], 0, 0.01);
+        set.insert([0.0, 10.0], 0, 0.01);
+        let (idx, d) = set.nearest([9.0, 1.0]).unwrap();
+        assert_eq!(set.clusters()[idx].center(), [10.0, 0.0]);
+        assert!((d - (1.0f32 + 1.0).sqrt()).abs() < 1e-6);
+        assert!(MicroClusterSet::new(2, 0).nearest([0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn insert_with_hint_matches_insert() {
+        crate::util::propcheck::check("hint≡scan", 50, |g| {
+            let threshold = 0.3;
+            let mut a = MicroClusterSet::new(16, 0);
+            let mut b = MicroClusterSet::new(16, 0);
+            for i in 0..g.usize(1, 60) {
+                let xy = [g.f64() as f32 * 4.0, g.f64() as f32 * 4.0];
+                let (ida, ca) = a.insert(xy, i as u64, threshold);
+                let hint = b.nearest(xy);
+                let (idb, cb) = b.insert_with_hint(xy, i as u64, threshold, hint);
+                crate::prop_assert!(ida == idb && ca == cb, "divergence at point {i}");
+            }
+            crate::prop_assert!(a == b, "final sets differ");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replica_merge_conserves_points() {
+        crate::util::propcheck::check("crdt-points-conserved", 50, |g| {
+            let mut a = MicroClusterSet::new(8, 1);
+            let mut b = MicroClusterSet::new(8, 2);
+            let na = g.usize(0, 30);
+            let nb = g.usize(0, 30);
+            for i in 0..na {
+                a.insert([g.f64() as f32, g.f64() as f32], i as u64, 0.2);
+            }
+            for i in 0..nb {
+                b.insert([g.f64() as f32, g.f64() as f32], i as u64, 0.2);
+            }
+            let mut merged = a.clone();
+            merged.merge(&b);
+            crate::prop_assert!(
+                merged.total_points() == a.total_points() + b.total_points(),
+                "points not conserved: {} vs {} + {}",
+                merged.total_points(),
+                a.total_points(),
+                b.total_points()
+            );
+            crate::prop_assert!(merged.len() <= 8, "capacity violated");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replica_merge_commutes_on_point_count() {
+        let mut a = MicroClusterSet::new(8, 1);
+        let mut b = MicroClusterSet::new(8, 2);
+        for i in 0..20 {
+            a.insert([i as f32 * 0.01, 0.0], i, 0.05);
+            b.insert([1.0 + i as f32 * 0.01, 1.0], i, 0.05);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.total_points(), ba.total_points());
+    }
+}

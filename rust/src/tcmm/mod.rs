@@ -1,0 +1,31 @@
+//! TCMM — incremental clustering for trajectories (Li, Lee, Li, Han,
+//! DASFAA'10), the paper's evaluation workload (§4.1).
+//!
+//! TCMM splits clustering into two incremental steps:
+//!
+//! 1. **Micro-clustering** ([`micro`]): every incoming point merges into
+//!    the nearest existing micro-cluster (a temporal extension of the
+//!    BIRCH cluster-feature vector, [`microcluster`]) if it is within a
+//!    distance threshold, else it seeds a new micro-cluster; at capacity,
+//!    the two closest micro-clusters merge. Nearest-neighbour search over
+//!    the micro-cluster centers is the pipeline's compute hot-spot — it
+//!    runs either on a scalar CPU backend or through the AOT-compiled
+//!    JAX/Pallas kernel ([`backend`]).
+//! 2. **Macro-clustering** ([`macro_clustering`]): periodically, weighted
+//!    k-means over the micro-cluster centers yields the evolving macro-
+//!    clusters.
+//!
+//! Both jobs publish their cluster *changes* as event streams to topics
+//! ([`events`]), exactly as §4.1 describes.
+
+pub mod backend;
+pub mod events;
+pub mod macro_clustering;
+pub mod micro;
+pub mod microcluster;
+
+pub use backend::{CpuBackend, NearestBackend, XlaBackend};
+pub use events::{MacroEvent, MicroEvent};
+pub use macro_clustering::{kmeans, MacroClusterer};
+pub use micro::MicroClusterer;
+pub use microcluster::{MicroCluster, MicroClusterSet};

@@ -1,0 +1,147 @@
+//! Loader for the real T-Drive text format.
+//!
+//! Lines look like `1,2008-02-02 15:36:08,116.51172,39.92123`. If a local
+//! copy of the dataset exists, point the experiment at its directory and
+//! the pipeline replays real trajectories instead of synthetic ones.
+
+use super::point::TrajPoint;
+use std::io::BufRead;
+use std::path::Path;
+
+/// Parse `YYYY-MM-DD HH:MM:SS` to seconds since 1970-01-01 (UTC, no leap
+/// seconds — standard civil arithmetic; the dataset spans one week so only
+/// monotonic correctness matters).
+pub fn parse_datetime(s: &str) -> Option<u64> {
+    let b = s.as_bytes();
+    if b.len() != 19 || b[4] != b'-' || b[7] != b'-' || b[10] != b' ' || b[13] != b':' || b[16] != b':'
+    {
+        return None;
+    }
+    let num = |r: std::ops::Range<usize>| -> Option<u64> { s.get(r)?.parse().ok() };
+    let (y, mo, d) = (num(0..4)?, num(5..7)?, num(8..10)?);
+    let (h, mi, sec) = (num(11..13)?, num(14..16)?, num(17..19)?);
+    if !(1970..=2100).contains(&y) || !(1..=12).contains(&mo) || !(1..=31).contains(&d) {
+        return None;
+    }
+    if h > 23 || mi > 59 || sec > 59 {
+        return None;
+    }
+    // Days since epoch (civil-from-days inverse, Howard Hinnant's algorithm).
+    let y_adj = if mo <= 2 { y - 1 } else { y };
+    let era = y_adj / 400;
+    let yoe = y_adj - era * 400;
+    let mp = (mo + 9) % 12;
+    let doy = (153 * mp + 2) / 5 + d - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    let days = era * 146_097 + doe - 719_468;
+    Some(days * 86_400 + h * 3_600 + mi * 60 + sec)
+}
+
+/// Parse one T-Drive CSV line.
+pub fn parse_tdrive_line(line: &str) -> Option<TrajPoint> {
+    let mut parts = line.trim().split(',');
+    let taxi_id: u32 = parts.next()?.parse().ok()?;
+    let ts = parse_datetime(parts.next()?)?;
+    let lon: f32 = parts.next()?.parse().ok()?;
+    let lat: f32 = parts.next()?.parse().ok()?;
+    if parts.next().is_some() {
+        return None; // trailing fields: not T-Drive
+    }
+    Some(TrajPoint { taxi_id, ts, lon, lat })
+}
+
+/// Load every parseable point from a T-Drive file (one taxi per file in
+/// the original release). Unparseable lines are skipped with a count.
+pub fn load_file(path: &Path) -> std::io::Result<(Vec<TrajPoint>, usize)> {
+    let f = std::fs::File::open(path)?;
+    let mut points = Vec::new();
+    let mut skipped = 0;
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_tdrive_line(&line) {
+            Some(p) => points.push(p),
+            None => skipped += 1,
+        }
+    }
+    Ok((points, skipped))
+}
+
+/// Load all `*.txt` files under a T-Drive directory.
+pub fn load_dir(dir: &Path) -> std::io::Result<Vec<TrajPoint>> {
+    let mut all = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.filter_map(|e| e.ok()).collect();
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.extension().map(|x| x == "txt").unwrap_or(false) {
+            let (mut pts, _skipped) = load_file(&p)?;
+            all.append(&mut pts);
+        }
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_paper_era_datetime() {
+        // 2008-02-02 00:00:00 UTC == 1201910400.
+        assert_eq!(parse_datetime("2008-02-02 00:00:00"), Some(1_201_910_400));
+        assert_eq!(parse_datetime("1970-01-01 00:00:00"), Some(0));
+        assert_eq!(parse_datetime("1970-01-02 00:00:01"), Some(86_401));
+    }
+
+    #[test]
+    fn datetime_ordering_is_monotonic() {
+        let a = parse_datetime("2008-02-02 15:36:08").unwrap();
+        let b = parse_datetime("2008-02-02 15:46:08").unwrap();
+        assert_eq!(b - a, 600);
+        let c = parse_datetime("2008-02-03 15:36:08").unwrap();
+        assert_eq!(c - a, 86_400);
+        // Month boundary (Feb 2008 is a leap year: 29 days).
+        let feb29 = parse_datetime("2008-02-29 00:00:00").unwrap();
+        let mar01 = parse_datetime("2008-03-01 00:00:00").unwrap();
+        assert_eq!(mar01 - feb29, 86_400);
+    }
+
+    #[test]
+    fn rejects_malformed_datetimes() {
+        assert!(parse_datetime("2008-13-02 00:00:00").is_none());
+        assert!(parse_datetime("2008-02-02 25:00:00").is_none());
+        assert!(parse_datetime("2008-02-02T00:00:00").is_none());
+        assert!(parse_datetime("garbage").is_none());
+    }
+
+    #[test]
+    fn parses_tdrive_line() {
+        let p = parse_tdrive_line("1,2008-02-02 15:36:08,116.51172,39.92123").unwrap();
+        assert_eq!(p.taxi_id, 1);
+        assert_eq!(p.lon, 116.51172);
+        assert_eq!(p.lat, 39.92123);
+        assert!(parse_tdrive_line("bad,line").is_none());
+        assert!(parse_tdrive_line("1,2008-02-02 15:36:08,116.5,39.9,extra").is_none());
+    }
+
+    #[test]
+    fn loads_file_skipping_garbage() {
+        let dir = std::env::temp_dir().join(format!("rl_tdrive_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("1.txt");
+        std::fs::write(
+            &f,
+            "1,2008-02-02 15:36:08,116.51172,39.92123\nnot a line\n1,2008-02-02 15:46:08,116.52,39.93\n",
+        )
+        .unwrap();
+        let (pts, skipped) = load_file(&f).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(skipped, 1);
+        let all = load_dir(&dir).unwrap();
+        assert_eq!(all.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

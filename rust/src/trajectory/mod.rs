@@ -1,0 +1,18 @@
+//! Trajectory workload: T-Drive-style GPS points.
+//!
+//! The paper evaluates on the T-Drive Beijing taxi dataset (Yuan et al.,
+//! 10,357 taxis, Feb 2–8 2008). That dataset is not redistributable here,
+//! so [`generator`] synthesizes trajectories with the same schema, spatial
+//! extent (Beijing bounding box) and *clustered* structure (taxis orbit
+//! hot-spots — what makes TCMM's micro-clusters meaningful), while
+//! [`loader`] parses the real T-Drive text format
+//! (`taxi_id,YYYY-MM-DD HH:MM:SS,longitude,latitude`) if a copy is
+//! available locally. Either source yields the same [`TrajPoint`]s.
+
+pub mod generator;
+pub mod loader;
+pub mod point;
+
+pub use generator::TrajectoryGenerator;
+pub use loader::parse_tdrive_line;
+pub use point::TrajPoint;

@@ -1,0 +1,77 @@
+//! GPS points and their wire format.
+
+/// One GPS fix. Coordinates are WGS84 degrees; `ts` is seconds since the
+/// dataset epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrajPoint {
+    pub taxi_id: u32,
+    pub ts: u64,
+    pub lon: f32,
+    pub lat: f32,
+}
+
+/// Wire size of an encoded point.
+pub const POINT_BYTES: usize = 4 + 8 + 4 + 4;
+
+impl TrajPoint {
+    /// Encode to the 20-byte wire format used as message payloads.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(POINT_BYTES);
+        out.extend_from_slice(&self.taxi_id.to_le_bytes());
+        out.extend_from_slice(&self.ts.to_le_bytes());
+        out.extend_from_slice(&self.lon.to_le_bytes());
+        out.extend_from_slice(&self.lat.to_le_bytes());
+        out
+    }
+
+    /// Decode from the wire format.
+    pub fn decode(b: &[u8]) -> Option<TrajPoint> {
+        if b.len() != POINT_BYTES {
+            return None;
+        }
+        Some(TrajPoint {
+            taxi_id: u32::from_le_bytes(b[0..4].try_into().ok()?),
+            ts: u64::from_le_bytes(b[4..12].try_into().ok()?),
+            lon: f32::from_le_bytes(b[12..16].try_into().ok()?),
+            lat: f32::from_le_bytes(b[16..20].try_into().ok()?),
+        })
+    }
+
+    /// Position as the `[lon, lat]` pair TCMM clusters on.
+    pub fn xy(&self) -> [f32; 2] {
+        [self.lon, self.lat]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let p = TrajPoint { taxi_id: 42, ts: 1_202_000_000, lon: 116.51172, lat: 39.92123 };
+        let enc = p.encode();
+        assert_eq!(enc.len(), POINT_BYTES);
+        assert_eq!(TrajPoint::decode(&enc), Some(p));
+    }
+
+    #[test]
+    fn decode_wrong_len_none() {
+        assert_eq!(TrajPoint::decode(&[0u8; 5]), None);
+        assert_eq!(TrajPoint::decode(&[]), None);
+    }
+
+    #[test]
+    fn round_trip_property() {
+        crate::util::propcheck::check("point-codec", 100, |g| {
+            let p = TrajPoint {
+                taxi_id: g.u64() as u32,
+                ts: g.u64(),
+                lon: (g.f64() * 360.0 - 180.0) as f32,
+                lat: (g.f64() * 180.0 - 90.0) as f32,
+            };
+            crate::prop_assert!(TrajPoint::decode(&p.encode()) == Some(p), "round trip");
+            Ok(())
+        });
+    }
+}

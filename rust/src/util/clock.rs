@@ -1,0 +1,116 @@
+//! Time sources.
+//!
+//! Experiments compress the paper's wall-clock scale (10-minute failure
+//! epochs over multi-hour runs) into seconds. Components take a [`Clock`]
+//! so the same code runs against real time in examples/benches and against
+//! a [`ManualClock`] in deterministic unit tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source measured from an arbitrary epoch.
+pub trait Clock: Send + Sync {
+    /// Time elapsed since the clock's epoch.
+    fn now(&self) -> Duration;
+
+    /// Milliseconds since the clock's epoch (convenience for metrics keys).
+    fn now_millis(&self) -> u64 {
+        self.now().as_millis() as u64
+    }
+}
+
+/// Real wall-clock time, epoch = construction instant.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Manually advanced clock for deterministic tests.
+pub struct ManualClock {
+    nanos: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        ManualClock { nanos: AtomicU64::new(0) }
+    }
+
+    /// Advance the clock by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute offset from the epoch.
+    pub fn set(&self, d: Duration) {
+        self.nanos.store(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Default for ManualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+}
+
+/// Shared handle used throughout the stack.
+pub type SharedClock = Arc<dyn Clock>;
+
+/// A real clock wrapped in the shared handle.
+pub fn real_clock() -> SharedClock {
+    Arc::new(RealClock::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now(), Duration::from_millis(250));
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now_millis(), 500);
+        c.set(Duration::from_secs(2));
+        assert_eq!(c.now(), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn shared_clock_through_trait_object() {
+        let c: SharedClock = Arc::new(ManualClock::new());
+        assert_eq!(c.now_millis(), 0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Log-bucketed latency histogram.
+//!
+//! Completion times (Fig. 11) span microseconds to seconds, so buckets grow
+//! geometrically: bucket `i` covers `[base·g^i, base·g^(i+1))` microseconds.
+//! Recording is lock-free-cheap (a vector index + increment) and quantile
+//! queries interpolate within the winning bucket.
+
+use std::time::Duration;
+
+const BASE_US: f64 = 1.0;
+const GROWTH: f64 = 1.15;
+const BUCKETS: usize = 256; // covers ~1us .. ~10^15 us
+
+/// A fixed-size geometric histogram of durations.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(us: f64) -> usize {
+        if us < BASE_US {
+            return 0;
+        }
+        let b = (us / BASE_US).ln() / GROWTH.ln();
+        (b as usize).min(BUCKETS - 1)
+    }
+
+    /// Lower bound (µs) of bucket `i`.
+    fn bucket_lo(i: usize) -> f64 {
+        BASE_US * GROWTH.powi(i as i32)
+    }
+
+    /// Record one duration.
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.counts[Self::bucket_of(us)] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us < self.min_us {
+            self.min_us = us;
+        }
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(self.sum_us / self.total as f64 / 1e6)
+    }
+
+    pub fn min(&self) -> Duration {
+        if self.total == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(self.min_us / 1e6)
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_secs_f64(self.max_us / 1e6)
+    }
+
+    /// Quantile (`q` in `[0,1]`) with intra-bucket linear interpolation.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let frac = (target - seen) as f64 / c as f64;
+                let lo = Self::bucket_lo(i).min(self.max_us);
+                let hi = Self::bucket_lo(i + 1).min(self.max_us.max(lo));
+                let us = lo + frac * (hi - lo);
+                return Duration::from_secs_f64(us / 1e6);
+            }
+            seen += c;
+        }
+        self.max()
+    }
+
+    /// One-line summary for logs/reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.total,
+            self.mean().as_secs_f64() * 1e3,
+            self.quantile(0.50).as_secs_f64() * 1e3,
+            self.quantile(0.95).as_secs_f64() * 1e3,
+            self.quantile(0.99).as_secs_f64() * 1e3,
+            self.max().as_secs_f64() * 1e3,
+        )
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert_eq!(h.mean(), Duration::from_millis(20));
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn quantiles_ordered_and_bounded() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p99 <= h.max());
+        // log-bucket resolution is 15%, allow that.
+        let p50us = p50.as_secs_f64() * 1e6;
+        assert!((p50us - 500.0).abs() / 500.0 < 0.2, "p50 ~500us, got {p50us}");
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(Duration::from_millis(1));
+        b.record(Duration::from_millis(100));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max() >= Duration::from_millis(99));
+        assert!(a.min() <= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn huge_values_saturate_last_bucket() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_secs(1_000_000));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(1.0) > Duration::ZERO);
+    }
+}

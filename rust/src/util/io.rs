@@ -1,0 +1,201 @@
+//! Result writers: CSV (figure series) and JSONL (experiment records).
+//!
+//! No serde is available offline, so JSON encoding is a small hand-rolled
+//! emitter over an explicit value enum — enough for flat experiment records
+//! and nested figure metadata.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// A JSON value (ordered maps so output is deterministic).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num<T: Into<f64>>(v: T) -> Json {
+        Json::Num(v.into())
+    }
+
+    pub fn str<S: Into<String>>(s: S) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    if n.fract() == 0.0 && n.abs() < 9e15 {
+                        let _ = write!(out, "{}", *n as i64);
+                    } else {
+                        let _ = write!(out, "{n}");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append one JSON object per line to `path` (creating parents).
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(JsonlWriter { w: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn write(&mut self, v: &Json) -> std::io::Result<()> {
+        writeln!(self.w, "{}", v.render())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// CSV writer with a fixed header (figure data series).
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "CSV row width mismatch");
+        writeln!(self.w, "{}", fields.join(","))
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| format!("{f}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_render_scalars() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::num(3.0).render(), "3");
+        assert_eq!(Json::num(3.5).render(), "3.5");
+        assert_eq!(Json::str("a\"b\n").render(), "\"a\\\"b\\n\"");
+    }
+
+    #[test]
+    fn json_render_nested() {
+        let v = Json::obj(vec![
+            ("name", Json::str("fig8")),
+            ("series", Json::Arr(vec![Json::num(1.0), Json::num(2.0)])),
+        ]);
+        assert_eq!(v.render(), r#"{"name":"fig8","series":[1,2]}"#);
+    }
+
+    #[test]
+    fn jsonl_and_csv_files() {
+        let dir = std::env::temp_dir().join(format!("rl_io_test_{}", std::process::id()));
+        let jl = dir.join("x.jsonl");
+        let mut w = JsonlWriter::create(&jl).unwrap();
+        w.write(&Json::obj(vec![("a", Json::num(1.0))])).unwrap();
+        w.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(&jl).unwrap(), "{\"a\":1}\n");
+
+        let cs = dir.join("y.csv");
+        let mut c = CsvWriter::create(&cs, &["t", "v"]).unwrap();
+        c.row_f64(&[0.0, 10.5]).unwrap();
+        c.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(&cs).unwrap(), "t,v\n0,10.5\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_width_mismatch_panics() {
+        let dir = std::env::temp_dir().join(format!("rl_io_test2_{}", std::process::id()));
+        let mut c = CsvWriter::create(dir.join("z.csv"), &["a", "b"]).unwrap();
+        c.row(&["1".into()]).unwrap();
+    }
+}

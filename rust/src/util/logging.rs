@@ -1,0 +1,124 @@
+//! Minimal leveled logger.
+//!
+//! Level comes from `RL_LOG` (`error|warn|info|debug|trace`, default
+//! `warn` so tests and benches stay quiet). Output goes to stderr with a
+//! monotonic timestamp, level and component tag.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Warn,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != u8::MAX {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lvl = std::env::var("RL_LOG").map(|v| Level::parse(&v)).unwrap_or(Level::Warn);
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the log level programmatically (examples use this).
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// True if `lvl` would be emitted.
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Core log call — prefer the `log_*!` macros.
+pub fn log(lvl: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let epoch = EPOCH.get_or_init(Instant::now);
+    let t = epoch.elapsed().as_secs_f64();
+    eprintln!("[{t:10.4}s {} {component}] {msg}", lvl.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $comp, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("INFO"), Level::Info);
+        assert_eq!(Level::parse("garbage"), Level::Warn);
+    }
+
+    #[test]
+    fn ordering_gates() {
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Warn);
+    }
+}

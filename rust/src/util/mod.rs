@@ -1,0 +1,21 @@
+//! Foundation utilities shared by every layer.
+//!
+//! The offline build environment carries no third-party utility crates, so
+//! this module provides from scratch what the rest of the stack needs:
+//! a seedable PRNG ([`prng`]), wall/simulated clocks ([`clock`]), statistics
+//! for the evaluation figures ([`stats`]), a latency histogram
+//! ([`histogram`]), a leveled logger ([`logging`]), CSV/JSONL result writers
+//! ([`io`]), and a randomized property-testing harness ([`propcheck`]).
+
+pub mod clock;
+pub mod histogram;
+pub mod io;
+pub mod logging;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+
+pub use clock::{Clock, ManualClock, RealClock, SharedClock};
+pub use histogram::Histogram;
+pub use prng::Pcg32;
+pub use stats::{linear_fit, mean, percentile, stddev, LinearFit};

@@ -1,0 +1,130 @@
+//! Randomized property-testing harness (in-repo stand-in for `proptest`,
+//! which is unavailable in the offline registry).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! convenience constructors). [`check`] runs it for `cases` iterations; on
+//! the first failure it retries with the same seed to confirm, then panics
+//! with the reproducing seed. `RL_PROPCHECK_SEED` pins the base seed,
+//! `RL_PROPCHECK_CASES` overrides the case count.
+
+use super::prng::Pcg32;
+
+/// Random input source handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// Case index (0..cases); properties can use it to scale sizes.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    /// Integer in `[lo, hi)`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range(lo, hi)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of `n ∈ [0, max_len]` elements drawn from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(0, max_len + 1);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the given choices.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize(0, xs.len());
+        &xs[i]
+    }
+}
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+fn base_seed() -> u64 {
+    std::env::var("RL_PROPCHECK_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+fn case_count(default_cases: usize) -> usize {
+    std::env::var("RL_PROPCHECK_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default_cases)
+}
+
+/// Run `prop` for `cases` randomized cases. Panics with the seed of the
+/// first failing case.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let base = base_seed();
+    let cases = case_count(cases);
+    for case in 0..cases {
+        let seed = base ^ ((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen { rng: Pcg32::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            // Confirm deterministically before reporting.
+            let mut g2 = Gen { rng: Pcg32::new(seed), case };
+            let confirmed = prop(&mut g2).is_err();
+            panic!(
+                "property '{name}' failed at case {case} (seed={seed:#x}, confirmed={confirmed}): {msg}\n\
+                 reproduce with RL_PROPCHECK_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 50, |_g| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 20, |g| {
+            let v = g.usize(0, 100);
+            if g.case >= 5 {
+                Err(format!("deterministic failure at case {} (v={v})", g.case))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_max_len() {
+        check("vec-len", 30, |g| {
+            let v = g.vec(17, |g| g.bool());
+            prop_assert!(v.len() <= 17, "len {}", v.len());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! The unit of flow between virtual consumers and tasks.
+
+use crate::messaging::Message;
+use std::time::Duration;
+
+/// A message in flight from the messaging layer to a task, carrying the
+/// provenance the metrics layer needs: completion time is measured from
+/// `consumed_at` (the instant the virtual consumer — or Liquid task —
+/// pulled it from the messaging layer) until the task finishes processing.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub message: Message,
+    /// Source partition / offset (for commit bookkeeping and tracing).
+    pub partition: usize,
+    pub offset: u64,
+    /// Experiment-clock instant the message left the messaging layer.
+    pub consumed_at: Duration,
+}
+
+impl Envelope {
+    pub fn new(message: Message, partition: usize, offset: u64, consumed_at: Duration) -> Self {
+        Envelope { message, partition, offset, consumed_at }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carries_provenance() {
+        let e = Envelope::new(Message::from_str("x"), 2, 40, Duration::from_millis(17));
+        assert_eq!(e.partition, 2);
+        assert_eq!(e.offset, 40);
+        assert_eq!(e.consumed_at, Duration::from_millis(17));
+        assert_eq!(e.message.payload_str(), Some("x"));
+    }
+}

@@ -1,0 +1,41 @@
+//! Virtual messaging layer — the paper's contribution (§3.1, §3.2.3).
+//!
+//! Liquid's flaw: a job's tasks *are* consumer-group members, so at most
+//! `partitions` tasks can work. The VML separates the **consumer role**
+//! from the **processing role**:
+//!
+//! - a [`VirtualTopic`] mediates between one messaging-layer topic and the
+//!   processing layer;
+//! - per subscribing job, a **virtual consumer group**
+//!   ([`virtual_consumer`]) runs up to `partitions` virtual consumers —
+//!   still capped by Kafka semantics, but consuming is cheap ("consuming a
+//!   message and sending it to a task is much simpler than processing
+//!   it"), so the cap no longer binds throughput;
+//! - each virtual consumer forwards messages through the asynchronous
+//!   messaging layer to the job's tasks via a [`router`] — the task count
+//!   is now **independent of the partition count** and elastically scaled;
+//! - virtual consumers are *stateful* (offsets persisted through the state
+//!   management service) and *supervised* (restart resumes from the last
+//!   committed offset);
+//! - a **virtual producer pool** ([`virtual_producer`]) receives the
+//!   tasks' output messages and publishes them to the messaging layer,
+//!   elastically sized by the elastic worker service.
+//!
+//! The router also hosts the paper's stated *future work*: a
+//! completion-time-aware message distribution scheduler
+//! ([`RouterPolicy::CompletionTime`]) that closes the Fig. 11 gap — see
+//! `benches/ablation_router.rs`.
+//!
+//! [`RouterPolicy::CompletionTime`]: crate::config::RouterPolicy::CompletionTime
+
+pub mod envelope;
+pub mod router;
+pub mod virtual_consumer;
+pub mod virtual_producer;
+pub mod virtual_topic;
+
+pub use envelope::Envelope;
+pub use router::{RouteTarget, TaskRouter};
+pub use virtual_consumer::{VirtualConsumer, VirtualConsumerGroup};
+pub use virtual_producer::VirtualProducerPool;
+pub use virtual_topic::VirtualTopic;

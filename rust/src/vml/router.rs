@@ -1,0 +1,299 @@
+//! Message distribution: virtual consumer → task.
+//!
+//! Three policies (see [`RouterPolicy`]):
+//!
+//! - **RoundRobin** — the baseline the paper's prototype uses (its task
+//!   pool "distributes the messages and balances the load among tasks");
+//! - **ShortestQueue** — join-the-shortest-queue on mailbox depth;
+//! - **CompletionTime** — the scheduler the paper's conclusion calls for:
+//!   route to the task minimizing *expected wait* = queue depth × the
+//!   task's observed mean per-message processing time, directly
+//!   minimizing the `t_wi` term of Equation 2.
+
+use super::envelope::Envelope;
+use crate::actor::mailbox::SendError;
+use crate::config::RouterPolicy;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Anything a router can deliver to (implemented by processing-layer
+/// tasks; faked in tests).
+pub trait RouteTarget: Send + Sync {
+    /// Non-blocking delivery. On failure the envelope is handed back so
+    /// the router can spill to the next-best target (`Full`) or skip a
+    /// dead one (`Closed`).
+    fn deliver(&self, env: Envelope) -> Result<(), (SendError, Envelope)>;
+    /// Queued messages at this target.
+    fn queue_depth(&self) -> usize;
+    /// Observed mean seconds to process one message (0 if unknown).
+    fn est_proc_secs(&self) -> f64 {
+        0.0
+    }
+    fn is_alive(&self) -> bool {
+        true
+    }
+}
+
+/// Routing error after exhausting all targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteError {
+    NoTargets,
+    AllBusy,
+}
+
+/// Routes envelopes to a dynamic set of targets.
+///
+/// The target list is RwLock'd because the elastic worker service resizes
+/// it at runtime; the hot path takes the read lock only.
+pub struct TaskRouter {
+    policy: RouterPolicy,
+    targets: RwLock<Vec<Arc<dyn RouteTarget>>>,
+    rr: AtomicUsize,
+}
+
+impl TaskRouter {
+    pub fn new(policy: RouterPolicy) -> Arc<Self> {
+        Arc::new(TaskRouter { policy, targets: RwLock::new(Vec::new()), rr: AtomicUsize::new(0) })
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Replace the target set (called by the task pool on scale events).
+    pub fn set_targets(&self, targets: Vec<Arc<dyn RouteTarget>>) {
+        *self.targets.write().unwrap() = targets;
+    }
+
+    pub fn target_count(&self) -> usize {
+        self.targets.read().unwrap().len()
+    }
+
+    /// Total queued across targets (the elastic service's load signal).
+    pub fn total_depth(&self) -> usize {
+        self.targets.read().unwrap().iter().map(|t| t.queue_depth()).sum()
+    }
+
+    /// Route one envelope. Tries the policy's preferred target first, then
+    /// falls back over the remaining live targets; blocks nowhere (overload
+    /// surfaces as `AllBusy`, which virtual consumers turn into retry —
+    /// i.e. backpressure up to the messaging layer).
+    pub fn route(&self, env: Envelope) -> Result<(), RouteError> {
+        let targets = self.targets.read().unwrap();
+        let n = targets.len();
+        if n == 0 {
+            return Err(RouteError::NoTargets);
+        }
+        let start = match self.policy {
+            RouterPolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RouterPolicy::ShortestQueue => {
+                let mut best = 0;
+                let mut best_depth = usize::MAX;
+                for (i, t) in targets.iter().enumerate() {
+                    if !t.is_alive() {
+                        continue;
+                    }
+                    let d = t.queue_depth();
+                    if d < best_depth {
+                        best_depth = d;
+                        best = i;
+                    }
+                }
+                best
+            }
+            RouterPolicy::CompletionTime => {
+                // Expected wait ≈ (depth + 1) × mean processing seconds.
+                // Unknown-speed tasks (est 0) win ties via depth alone,
+                // which makes the policy degrade to JSQ at cold start.
+                let mut best = 0;
+                let mut best_cost = f64::INFINITY;
+                for (i, t) in targets.iter().enumerate() {
+                    if !t.is_alive() {
+                        continue;
+                    }
+                    let est = t.est_proc_secs();
+                    let depth = t.queue_depth() as f64;
+                    let cost = if est > 0.0 { (depth + 1.0) * est } else { depth };
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        // Preferred target, then linear fallback (skipping dead/full).
+        let mut env = env;
+        for k in 0..n {
+            let t = &targets[(start + k) % n];
+            if !t.is_alive() {
+                continue;
+            }
+            match t.deliver(env) {
+                Ok(()) => return Ok(()),
+                Err((_err, returned)) => env = returned,
+            }
+        }
+        Err(RouteError::AllBusy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::messaging::Message;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    struct FakeTarget {
+        got: Mutex<Vec<u64>>,
+        depth: AtomicUsize,
+        est: f64,
+        alive: bool,
+        capacity: usize,
+    }
+
+    impl FakeTarget {
+        fn new(depth: usize, est: f64) -> Arc<Self> {
+            Self::with_capacity(depth, est, usize::MAX)
+        }
+
+        fn with_capacity(depth: usize, est: f64, capacity: usize) -> Arc<Self> {
+            Arc::new(FakeTarget {
+                got: Mutex::new(vec![]),
+                depth: AtomicUsize::new(depth),
+                est,
+                alive: true,
+                capacity,
+            })
+        }
+    }
+
+    impl RouteTarget for FakeTarget {
+        fn deliver(&self, env: Envelope) -> Result<(), (SendError, Envelope)> {
+            if !self.alive {
+                return Err((SendError::Closed, env));
+            }
+            if self.depth.load(Ordering::SeqCst) >= self.capacity {
+                return Err((SendError::Full, env));
+            }
+            self.got.lock().unwrap().push(env.offset);
+            self.depth.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+        fn queue_depth(&self) -> usize {
+            self.depth.load(Ordering::SeqCst)
+        }
+        fn est_proc_secs(&self) -> f64 {
+            self.est
+        }
+        fn is_alive(&self) -> bool {
+            self.alive
+        }
+    }
+
+    fn env(offset: u64) -> Envelope {
+        Envelope::new(Message::from_str("m"), 0, offset, Duration::ZERO)
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let a = FakeTarget::new(0, 0.0);
+        let b = FakeTarget::new(0, 0.0);
+        router.set_targets(vec![a.clone(), b.clone()]);
+        for i in 0..10 {
+            router.route(env(i)).unwrap();
+        }
+        assert_eq!(a.got.lock().unwrap().len(), 5);
+        assert_eq!(b.got.lock().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn jsq_prefers_shallow_queue() {
+        let router = TaskRouter::new(RouterPolicy::ShortestQueue);
+        let deep = FakeTarget::new(100, 0.0);
+        let shallow = FakeTarget::new(0, 0.0);
+        router.set_targets(vec![deep.clone(), shallow.clone()]);
+        for i in 0..5 {
+            router.route(env(i)).unwrap();
+        }
+        assert_eq!(shallow.got.lock().unwrap().len(), 5);
+        assert!(deep.got.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn completion_time_weighs_speed() {
+        let router = TaskRouter::new(RouterPolicy::CompletionTime);
+        // Fast task with deeper queue beats slow task with shorter queue:
+        // fast: (4+1)*0.01 = 0.05 ; slow: (0+1)*1.0 = 1.0
+        let fast = FakeTarget::new(4, 0.01);
+        let slow = FakeTarget::new(0, 1.0);
+        router.set_targets(vec![slow.clone(), fast.clone()]);
+        router.route(env(0)).unwrap();
+        assert_eq!(fast.got.lock().unwrap().len(), 1);
+        assert!(slow.got.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn completion_time_cold_start_degrades_to_jsq() {
+        let router = TaskRouter::new(RouterPolicy::CompletionTime);
+        let deep = FakeTarget::new(10, 0.0);
+        let shallow = FakeTarget::new(1, 0.0);
+        router.set_targets(vec![deep.clone(), shallow.clone()]);
+        router.route(env(0)).unwrap();
+        assert_eq!(shallow.got.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn full_target_spills_to_next() {
+        let router = TaskRouter::new(RouterPolicy::ShortestQueue);
+        // Capacity 0: always rejects with Full, but looks shallowest.
+        let full = FakeTarget::with_capacity(0, 0.0, 0);
+        let open = FakeTarget::new(5, 0.0);
+        router.set_targets(vec![full.clone(), open.clone()]);
+        router.route(env(1)).unwrap();
+        assert!(full.got.lock().unwrap().is_empty());
+        assert_eq!(open.got.lock().unwrap().len(), 1, "spilled to non-full target");
+    }
+
+    #[test]
+    fn all_full_reports_busy() {
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        router.set_targets(vec![FakeTarget::with_capacity(0, 0.0, 0)]);
+        assert_eq!(router.route(env(0)), Err(RouteError::AllBusy));
+    }
+
+    #[test]
+    fn no_targets_errors() {
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        assert_eq!(router.route(env(0)), Err(RouteError::NoTargets));
+    }
+
+    #[test]
+    fn total_depth_sums() {
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        router.set_targets(vec![FakeTarget::new(3, 0.0), FakeTarget::new(4, 0.0)]);
+        assert_eq!(router.total_depth(), 7);
+        assert_eq!(router.target_count(), 2);
+    }
+
+    #[test]
+    fn fairness_property_round_robin() {
+        crate::util::propcheck::check("rr-fairness", 20, |g| {
+            let router = TaskRouter::new(RouterPolicy::RoundRobin);
+            let n = g.usize(1, 8);
+            let targets: Vec<Arc<FakeTarget>> = (0..n).map(|_| FakeTarget::new(0, 0.0)).collect();
+            router.set_targets(targets.iter().map(|t| t.clone() as Arc<dyn RouteTarget>).collect());
+            let m = g.usize(0, 200);
+            for i in 0..m {
+                router.route(env(i as u64)).unwrap();
+            }
+            let counts: Vec<usize> = targets.iter().map(|t| t.got.lock().unwrap().len()).collect();
+            let max = counts.iter().max().copied().unwrap_or(0);
+            let min = counts.iter().min().copied().unwrap_or(0);
+            crate::prop_assert!(max - min <= 1, "uneven RR: {counts:?}");
+            Ok(())
+        });
+    }
+}

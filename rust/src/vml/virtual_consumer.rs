@@ -1,0 +1,371 @@
+//! Virtual consumers: the consuming half of a virtual topic.
+//!
+//! One virtual consumer is a thread owning one messaging-layer
+//! consumer-group membership. It polls batches of `n` messages, stamps
+//! their consume time, pushes each through the job's [`TaskRouter`], and
+//! then commits the batch — to the broker *and* to the event-sourced
+//! [`OffsetStore`], so a restarted consumer resumes where it stopped
+//! (§3.2.3). A [`VirtualConsumerGroup`] runs up to `partitions` of them
+//! and knows how to kill (crash) and respawn members, which is what the
+//! supervision service and the cluster failure injector drive.
+
+use super::router::{RouteError, TaskRouter};
+use crate::log_debug;
+use crate::messaging::Broker;
+use crate::metrics::PipelineMetrics;
+use crate::reactive::state::OffsetStore;
+use crate::util::clock::SharedClock;
+use crate::vml::envelope::Envelope;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Shared wiring a consumer thread needs.
+#[derive(Clone)]
+pub struct ConsumerWiring {
+    pub broker: Arc<Broker>,
+    pub topic: String,
+    pub group: String,
+    /// Consume batch size (the `n` of Equations 1–2).
+    pub batch: usize,
+    pub router: Arc<TaskRouter>,
+    pub offsets: Arc<OffsetStore>,
+    pub clock: SharedClock,
+    pub metrics: Arc<PipelineMetrics>,
+}
+
+/// A single supervised, stateful virtual consumer.
+pub struct VirtualConsumer {
+    pub name: String,
+    wiring: ConsumerWiring,
+    stop: Arc<AtomicBool>,
+    alive: Arc<AtomicBool>,
+    consumed: Arc<AtomicU64>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl VirtualConsumer {
+    /// Spawn the consumer thread. It joins the group immediately; offsets
+    /// resume from the offset store via the broker's committed offsets
+    /// (both are written on every batch).
+    pub fn spawn(name: &str, wiring: ConsumerWiring) -> Arc<Self> {
+        let vc = Arc::new(VirtualConsumer {
+            name: name.to_string(),
+            wiring,
+            stop: Arc::new(AtomicBool::new(false)),
+            alive: Arc::new(AtomicBool::new(true)),
+            consumed: Arc::new(AtomicU64::new(0)),
+            handle: Mutex::new(None),
+        });
+        vc.launch();
+        vc
+    }
+
+    fn launch(self: &Arc<Self>) {
+        let me = self.clone();
+        self.stop.store(false, Ordering::SeqCst);
+        self.alive.store(true, Ordering::SeqCst);
+        let handle = std::thread::Builder::new()
+            .name(format!("vc:{}", self.name))
+            .spawn(move || me.run())
+            .expect("spawn virtual consumer");
+        *self.handle.lock().unwrap() = Some(handle);
+    }
+
+    fn run(self: Arc<Self>) {
+        let w = &self.wiring;
+        // Seed the broker's committed offsets from the durable store (a
+        // fresh broker group starts at 0; after a full-system restart the
+        // store is the source of truth).
+        let consumer = w.broker.subscribe(&w.topic, &w.group);
+        for p in consumer.assignment() {
+            let committed = w.offsets.committed(&w.topic, p);
+            consumer.commit(p, committed);
+        }
+        log_debug!("vc", "'{}' consuming {}/{}", self.name, w.topic, w.group);
+        while !self.stop.load(Ordering::SeqCst) {
+            let batch = consumer.poll(w.batch);
+            if batch.is_empty() {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            let consumed_at = w.clock.now();
+            let mut max_next: Vec<(usize, u64)> = Vec::new();
+            for om in batch {
+                let env = Envelope::new(om.message, om.partition, om.offset, consumed_at);
+                // Route with retry: AllBusy = every task mailbox full →
+                // backpressure by waiting; NoTargets = job still starting.
+                // Envelope clones are refcount bumps, so retrying with a
+                // clone costs nothing on the happy path.
+                loop {
+                    match w.router.route(env.clone()) {
+                        Ok(()) => break,
+                        Err(RouteError::NoTargets) | Err(RouteError::AllBusy) => {
+                            if self.stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                    }
+                }
+                self.consumed.fetch_add(1, Ordering::Relaxed);
+                w.metrics.counters.inc("vml.consumed");
+                if let Some(e) = max_next.iter_mut().find(|(p, _)| *p == om.partition) {
+                    e.1 = e.1.max(om.offset + 1);
+                } else {
+                    max_next.push((om.partition, om.offset + 1));
+                }
+            }
+            // Commit the batch: broker (group progress) + durable store
+            // (restart state). Committing *after* routing is at-least-once.
+            for (p, next) in max_next {
+                consumer.commit(p, next);
+                w.offsets.commit(&w.topic, p, next);
+            }
+        }
+        consumer.close();
+        self.alive.store(false, Ordering::SeqCst);
+    }
+
+    /// Messages this incarnation has consumed.
+    pub fn consumed(&self) -> u64 {
+        self.consumed.load(Ordering::Relaxed)
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Graceful stop (commits what was already committed; in-flight batch
+    /// finishes routing).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Crash: stop the thread *as if the node died*. Uncommitted progress
+    /// is lost; the group rebalances when the consumer drops.
+    pub fn kill(&self) {
+        self.stop();
+    }
+
+    /// Restart after a kill (supervision's let-it-crash action). Resumes
+    /// from committed offsets.
+    pub fn restart(self: &Arc<Self>) {
+        if self.is_alive() {
+            return;
+        }
+        self.launch();
+    }
+}
+
+/// The virtual consumer group of one (topic, job) pair.
+pub struct VirtualConsumerGroup {
+    pub topic: String,
+    pub job: String,
+    consumers: Mutex<Vec<Arc<VirtualConsumer>>>,
+    wiring: ConsumerWiring,
+}
+
+impl VirtualConsumerGroup {
+    /// Start `count` virtual consumers (callers should pass
+    /// `min(count, partitions)` — extra members would idle, exactly like
+    /// Kafka; we cap defensively as the paper's §3.1 specifies).
+    pub fn start(topic: &str, job: &str, count: usize, wiring: ConsumerWiring) -> Self {
+        let partitions = wiring
+            .broker
+            .topic(topic)
+            .map(|t| t.partition_count())
+            .unwrap_or(count.max(1));
+        let count = count.min(partitions).max(1);
+        let consumers = (0..count)
+            .map(|i| VirtualConsumer::spawn(&format!("{topic}/{job}/vc-{i}"), wiring.clone()))
+            .collect();
+        VirtualConsumerGroup {
+            topic: topic.to_string(),
+            job: job.to_string(),
+            consumers: Mutex::new(consumers),
+            wiring,
+        }
+    }
+
+    pub fn consumers(&self) -> Vec<Arc<VirtualConsumer>> {
+        self.consumers.lock().unwrap().clone()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.consumers.lock().unwrap().iter().filter(|c| c.is_alive()).count()
+    }
+
+    pub fn total_consumed(&self) -> u64 {
+        self.consumers.lock().unwrap().iter().map(|c| c.consumed()).sum()
+    }
+
+    /// Kill one consumer by index (failure injection).
+    pub fn kill_one(&self, idx: usize) {
+        let cs = self.consumers.lock().unwrap();
+        if let Some(c) = cs.get(idx) {
+            c.kill();
+        }
+    }
+
+    /// Restart all dead consumers; returns how many were revived. This is
+    /// the restart action the supervision service registers.
+    pub fn heal(&self) -> usize {
+        let cs = self.consumers.lock().unwrap();
+        let mut healed = 0;
+        for c in cs.iter() {
+            if !c.is_alive() {
+                c.restart();
+                healed += 1;
+            }
+        }
+        healed
+    }
+
+    pub fn stop_all(&self) {
+        for c in self.consumers.lock().unwrap().iter() {
+            c.stop();
+        }
+    }
+
+    /// Group lag on the underlying topic (elastic signal).
+    pub fn lag(&self) -> u64 {
+        self.wiring.broker.group_lag(&self.topic, &self.wiring.group)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::mailbox::SendError;
+    use crate::config::RouterPolicy;
+    use crate::messaging::Message;
+    use crate::util::clock::real_clock;
+    use crate::vml::router::RouteTarget;
+    use std::sync::atomic::AtomicUsize;
+
+    struct Sink {
+        seen: Mutex<Vec<u64>>,
+        depth: AtomicUsize,
+    }
+
+    impl Sink {
+        fn new() -> Arc<Self> {
+            Arc::new(Sink { seen: Mutex::new(vec![]), depth: AtomicUsize::new(0) })
+        }
+    }
+
+    impl RouteTarget for Sink {
+        fn deliver(&self, env: Envelope) -> Result<(), (SendError, Envelope)> {
+            self.seen.lock().unwrap().push(env.offset);
+            Ok(())
+        }
+        fn queue_depth(&self) -> usize {
+            self.depth.load(Ordering::SeqCst)
+        }
+    }
+
+    fn wiring(broker: &Arc<Broker>, router: Arc<TaskRouter>, batch: usize) -> ConsumerWiring {
+        let clock = real_clock();
+        ConsumerWiring {
+            broker: broker.clone(),
+            topic: "t".into(),
+            group: "vt-t-job".into(),
+            batch,
+            router,
+            offsets: Arc::new(OffsetStore::in_memory()),
+            clock: clock.clone(),
+            metrics: PipelineMetrics::new(clock),
+        }
+    }
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    #[test]
+    fn consumes_and_routes_everything() {
+        let broker = Broker::new();
+        broker.create_topic("t", 3);
+        let t = broker.topic("t").unwrap();
+        for i in 0..50u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let sink = Sink::new();
+        router.set_targets(vec![sink.clone()]);
+        let group = VirtualConsumerGroup::start("t", "job", 3, wiring(&broker, router, 8));
+        assert!(wait_until(Duration::from_secs(3), || sink.seen.lock().unwrap().len() == 50));
+        assert_eq!(group.total_consumed(), 50);
+        assert!(wait_until(Duration::from_secs(1), || group.lag() == 0));
+        group.stop_all();
+    }
+
+    #[test]
+    fn consumer_count_capped_by_partitions() {
+        let broker = Broker::new();
+        broker.create_topic("t", 2);
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        router.set_targets(vec![Sink::new()]);
+        let group = VirtualConsumerGroup::start("t", "job", 6, wiring(&broker, router, 8));
+        assert_eq!(group.consumers().len(), 2, "virtual consumers ≤ partitions (§3.1)");
+        group.stop_all();
+    }
+
+    #[test]
+    fn kill_and_heal_resumes_from_committed() {
+        let broker = Broker::new();
+        broker.create_topic("t", 1);
+        let t = broker.topic("t").unwrap();
+        for i in 0..20u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let sink = Sink::new();
+        router.set_targets(vec![sink.clone()]);
+        let group = VirtualConsumerGroup::start("t", "job", 1, wiring(&broker, router, 5));
+        assert!(wait_until(Duration::from_secs(3), || sink.seen.lock().unwrap().len() >= 20));
+        group.kill_one(0);
+        assert_eq!(group.alive_count(), 0);
+        // More traffic arrives while down.
+        for i in 20..30u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        assert_eq!(group.heal(), 1);
+        assert!(wait_until(Duration::from_secs(3), || sink.seen.lock().unwrap().len() >= 30));
+        // At-least-once: no *gaps* — every offset 0..30 seen at least once.
+        let seen = sink.seen.lock().unwrap().clone();
+        for off in 0..30u64 {
+            assert!(seen.contains(&off), "offset {off} missing");
+        }
+        group.stop_all();
+    }
+
+    #[test]
+    fn offsets_survive_into_store() {
+        let broker = Broker::new();
+        broker.create_topic("t", 1);
+        let t = broker.topic("t").unwrap();
+        for i in 0..7u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        router.set_targets(vec![Sink::new()]);
+        let w = wiring(&broker, router, 4);
+        let offsets = w.offsets.clone();
+        let group = VirtualConsumerGroup::start("t", "job", 1, w);
+        assert!(wait_until(Duration::from_secs(3), || offsets.committed("t", 0) == 7));
+        group.stop_all();
+    }
+}

@@ -1,0 +1,233 @@
+//! Virtual producer pool: the publishing half of a virtual topic.
+//!
+//! Tasks never touch the messaging layer directly — they hand output
+//! messages to the virtual producer group, which balances them over a set
+//! of producer workers (actors) that publish to the broker (§3.2.3: "the
+//! virtual producer group tries to balance the load of messages on
+//! producers"; "virtual producers use the elastic worker service to react
+//! to the incoming messages"). The pool implements [`ScalableTarget`] so
+//! an [`ElasticController`] can resize it.
+//!
+//! [`ElasticController`]: crate::reactive::elastic::ElasticController
+
+use crate::actor::system::{Actor, ActorRef, ActorSystem, Ctx};
+use crate::messaging::{Broker, Message, Producer};
+use crate::metrics::PipelineMetrics;
+use crate::reactive::elastic::ScalableTarget;
+use crate::util::clock::SharedClock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Actor that owns one broker producer.
+struct ProducerWorker {
+    producer: Producer,
+    metrics: Arc<PipelineMetrics>,
+}
+
+impl Actor for ProducerWorker {
+    type Msg = Message;
+
+    fn receive(&mut self, msg: Message, _ctx: &mut Ctx<Message>) {
+        self.producer.send_message(msg);
+        self.metrics.counters.inc("vml.produced");
+    }
+}
+
+/// Elastic pool of producer workers for one topic.
+pub struct VirtualProducerPool {
+    system: Arc<ActorSystem>,
+    broker: Arc<Broker>,
+    topic: String,
+    clock: SharedClock,
+    metrics: Arc<PipelineMetrics>,
+    workers: RwLock<Vec<ActorRef<Message>>>,
+    rr: AtomicUsize,
+    next_id: AtomicUsize,
+    bounds: Mutex<(usize, usize)>, // (min, max)
+    mailbox_capacity: usize,
+}
+
+impl VirtualProducerPool {
+    pub fn start(
+        system: &Arc<ActorSystem>,
+        broker: &Arc<Broker>,
+        topic: &str,
+        clock: SharedClock,
+        metrics: Arc<PipelineMetrics>,
+        initial: usize,
+        min: usize,
+        max: usize,
+    ) -> Arc<Self> {
+        let pool = Arc::new(VirtualProducerPool {
+            system: system.clone(),
+            broker: broker.clone(),
+            topic: topic.to_string(),
+            clock,
+            metrics,
+            workers: RwLock::new(Vec::new()),
+            rr: AtomicUsize::new(0),
+            next_id: AtomicUsize::new(0),
+            bounds: Mutex::new((min.max(1), max.max(1))),
+            mailbox_capacity: 1024,
+        });
+        pool.scale_to(initial.clamp(min.max(1), max.max(1)));
+        pool
+    }
+
+    fn spawn_worker(&self) -> ActorRef<Message> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let path = format!("vp:{}:{}", self.topic, id);
+        let broker = self.broker.clone();
+        let topic = self.topic.clone();
+        let clock = self.clock.clone();
+        let metrics = self.metrics.clone();
+        self.system.spawn(&path, self.mailbox_capacity, move || ProducerWorker {
+            producer: Producer::new(&broker, &topic, clock.clone()),
+            metrics: metrics.clone(),
+        })
+    }
+
+    /// Hand a message to the pool: round-robin over workers, spilling to
+    /// the next worker when one is at capacity. If every worker is full
+    /// (or the pool is momentarily empty during a resize), blocks until
+    /// capacity frees up — backpressure toward the tasks. Message clones
+    /// are refcount bumps.
+    pub fn publish(&self, msg: Message) {
+        loop {
+            {
+                let workers = self.workers.read().unwrap();
+                let n = workers.len();
+                if n > 0 {
+                    let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                    for k in 0..n {
+                        if workers[(start + k) % n].try_tell(msg.clone()).is_ok() {
+                            return;
+                        }
+                    }
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Total messages queued at the workers (elastic signal).
+    pub fn depth(&self) -> usize {
+        self.workers.read().unwrap().iter().map(|w| w.mailbox_depth()).sum()
+    }
+
+    pub fn stop_all(&self) {
+        let workers = self.workers.write().unwrap();
+        for w in workers.iter() {
+            self.system.remove(&w.path);
+        }
+    }
+}
+
+impl ScalableTarget for VirtualProducerPool {
+    fn worker_count(&self) -> usize {
+        self.workers.read().unwrap().len()
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.depth()
+    }
+
+    fn scale_to(&self, n: usize) {
+        let (min, max) = *self.bounds.lock().unwrap();
+        let n = n.clamp(min, max);
+        let mut workers = self.workers.write().unwrap();
+        while workers.len() < n {
+            workers.push(self.spawn_worker());
+        }
+        while workers.len() > n {
+            // Remove the newest worker; its queued messages drain first
+            // (graceful stop processes the mailbox before exiting).
+            if let Some(w) = workers.pop() {
+                self.system.remove(&w.path);
+            }
+        }
+        self.metrics.counters.inc("vml.scale_events");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::real_clock;
+    use std::time::Duration;
+
+    fn fixture(partitions: usize) -> (Arc<ActorSystem>, Arc<Broker>, Arc<PipelineMetrics>) {
+        let system = ActorSystem::new();
+        let broker = Broker::new();
+        broker.create_topic("out", partitions);
+        let metrics = PipelineMetrics::new(real_clock());
+        (system, broker, metrics)
+    }
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    #[test]
+    fn publishes_through_workers() {
+        let (system, broker, metrics) = fixture(2);
+        let pool = VirtualProducerPool::start(
+            &system,
+            &broker,
+            "out",
+            real_clock(),
+            metrics.clone(),
+            2,
+            1,
+            4,
+        );
+        for i in 0..20u8 {
+            pool.publish(Message::new(None, vec![i], 0));
+        }
+        let topic = broker.topic("out").unwrap();
+        assert!(wait_until(Duration::from_secs(3), || topic.total_messages() == 20));
+        assert_eq!(metrics.counters.get("vml.produced"), 20);
+        pool.stop_all();
+        system.shutdown();
+    }
+
+    #[test]
+    fn scale_to_respects_bounds() {
+        let (system, broker, metrics) = fixture(1);
+        let pool =
+            VirtualProducerPool::start(&system, &broker, "out", real_clock(), metrics, 2, 1, 4);
+        assert_eq!(pool.worker_count(), 2);
+        pool.scale_to(100);
+        assert_eq!(pool.worker_count(), 4, "clamped to max");
+        pool.scale_to(0);
+        assert_eq!(pool.worker_count(), 1, "clamped to min");
+        pool.stop_all();
+        system.shutdown();
+    }
+
+    #[test]
+    fn scale_in_does_not_lose_messages() {
+        let (system, broker, metrics) = fixture(1);
+        let pool =
+            VirtualProducerPool::start(&system, &broker, "out", real_clock(), metrics, 4, 1, 4);
+        for i in 0..100u8 {
+            pool.publish(Message::new(None, vec![i], 0));
+        }
+        pool.scale_to(1);
+        let topic = broker.topic("out").unwrap();
+        assert!(
+            wait_until(Duration::from_secs(3), || topic.total_messages() == 100),
+            "got {}",
+            topic.total_messages()
+        );
+        pool.stop_all();
+        system.shutdown();
+    }
+}

@@ -1,0 +1,199 @@
+//! A virtual topic: the per-topic unit of the virtual messaging layer.
+//!
+//! One [`VirtualTopic`] corresponds to one messaging-layer topic (§3.1:
+//! "there is a virtual topic in the virtual messaging layer corresponding
+//! to each topic in the messaging layer"). It owns:
+//!
+//! - one **virtual producer group** (an elastic [`VirtualProducerPool`])
+//!   that publishes the tasks' output messages, and
+//! - zero or more **virtual consumer groups**, one per subscribing job,
+//!   each fanning messages out to that job's task router.
+
+use super::virtual_consumer::{ConsumerWiring, VirtualConsumerGroup};
+use super::virtual_producer::VirtualProducerPool;
+use super::router::TaskRouter;
+use crate::actor::system::ActorSystem;
+use crate::messaging::{Broker, Message};
+use crate::metrics::PipelineMetrics;
+use crate::reactive::state::OffsetStore;
+use crate::util::clock::SharedClock;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Per-topic mediator between the messaging layer and the processing layer.
+pub struct VirtualTopic {
+    pub topic: String,
+    broker: Arc<Broker>,
+    system: Arc<ActorSystem>,
+    clock: SharedClock,
+    metrics: Arc<PipelineMetrics>,
+    offsets: Arc<OffsetStore>,
+    producer_pool: Arc<VirtualProducerPool>,
+    consumer_groups: Mutex<HashMap<String, Arc<VirtualConsumerGroup>>>,
+}
+
+impl VirtualTopic {
+    /// Create the virtual topic (and its producer pool) for `topic`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        topic: &str,
+        broker: &Arc<Broker>,
+        system: &Arc<ActorSystem>,
+        clock: SharedClock,
+        metrics: Arc<PipelineMetrics>,
+        offsets: Arc<OffsetStore>,
+        producer_workers: (usize, usize, usize), // (initial, min, max)
+    ) -> Arc<Self> {
+        let (initial, min, max) = producer_workers;
+        let producer_pool = VirtualProducerPool::start(
+            system,
+            broker,
+            topic,
+            clock.clone(),
+            metrics.clone(),
+            initial,
+            min,
+            max,
+        );
+        Arc::new(VirtualTopic {
+            topic: topic.to_string(),
+            broker: broker.clone(),
+            system: system.clone(),
+            clock,
+            metrics,
+            offsets,
+            producer_pool,
+            consumer_groups: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Subscribe `job`: start its virtual consumer group feeding `router`.
+    /// `consumers` is capped at the topic's partition count.
+    pub fn subscribe(
+        &self,
+        job: &str,
+        consumers: usize,
+        batch: usize,
+        router: Arc<TaskRouter>,
+    ) -> Arc<VirtualConsumerGroup> {
+        let wiring = ConsumerWiring {
+            broker: self.broker.clone(),
+            topic: self.topic.clone(),
+            group: format!("vt-{}-{}", self.topic, job),
+            batch,
+            router,
+            offsets: self.offsets.clone(),
+            clock: self.clock.clone(),
+            metrics: self.metrics.clone(),
+        };
+        let group = Arc::new_cyclic(|_| {
+            VirtualConsumerGroup::start(&self.topic, job, consumers, wiring)
+        });
+        self.consumer_groups.lock().unwrap().insert(job.to_string(), group.clone());
+        group
+    }
+
+    /// The virtual producer group (tasks publish through this).
+    pub fn producers(&self) -> Arc<VirtualProducerPool> {
+        self.producer_pool.clone()
+    }
+
+    /// Publish one message via the virtual producer group.
+    pub fn publish(&self, msg: Message) {
+        self.producer_pool.publish(msg);
+    }
+
+    pub fn consumer_group(&self, job: &str) -> Option<Arc<VirtualConsumerGroup>> {
+        self.consumer_groups.lock().unwrap().get(job).cloned()
+    }
+
+    pub fn consumer_groups(&self) -> Vec<Arc<VirtualConsumerGroup>> {
+        self.consumer_groups.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Tear down consumer groups and the producer pool.
+    pub fn stop(&self) {
+        for g in self.consumer_groups.lock().unwrap().values() {
+            g.stop_all();
+        }
+        self.producer_pool.stop_all();
+        let _ = &self.system; // lifetime anchor; actors removed via pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::mailbox::SendError;
+    use crate::config::RouterPolicy;
+    use crate::util::clock::real_clock;
+    use crate::vml::envelope::Envelope;
+    use crate::vml::router::RouteTarget;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    struct CountSink {
+        n: AtomicUsize,
+    }
+
+    impl RouteTarget for CountSink {
+        fn deliver(&self, _env: Envelope) -> Result<(), (SendError, Envelope)> {
+            self.n.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+        fn queue_depth(&self) -> usize {
+            0
+        }
+    }
+
+    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f()
+    }
+
+    #[test]
+    fn full_virtual_topic_round_trip() {
+        let broker = Broker::new();
+        broker.create_topic("in", 3);
+        let system = ActorSystem::new();
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let offsets = Arc::new(OffsetStore::in_memory());
+        let vt = VirtualTopic::new(
+            "in",
+            &broker,
+            &system,
+            clock,
+            metrics.clone(),
+            offsets,
+            (2, 1, 4),
+        );
+
+        // Tasks publish *into* the topic through the producer pool…
+        for i in 0..30u8 {
+            vt.publish(Message::new(None, vec![i], 0));
+        }
+        // …and a job subscribes out of it through a consumer group.
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let sink = Arc::new(CountSink { n: AtomicUsize::new(0) });
+        router.set_targets(vec![sink.clone()]);
+        let group = vt.subscribe("job", 3, 8, router);
+
+        assert!(
+            wait_until(Duration::from_secs(3), || sink.n.load(Ordering::SeqCst) == 30),
+            "routed {}",
+            sink.n.load(Ordering::SeqCst)
+        );
+        assert_eq!(group.consumers().len(), 3);
+        assert_eq!(metrics.counters.get("vml.produced"), 30);
+        assert_eq!(metrics.counters.get("vml.consumed"), 30);
+        vt.stop();
+        system.shutdown();
+    }
+}

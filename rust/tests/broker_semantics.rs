@@ -1,0 +1,158 @@
+//! Property-based integration tests over the messaging layer: the Kafka
+//! semantics the paper's whole argument rests on.
+
+use reactive_liquid::messaging::{Broker, Consumer, Message};
+use reactive_liquid::util::propcheck::{check, Gen};
+use reactive_liquid::prop_assert;
+
+/// Random consumer churn never violates the group invariants:
+/// every partition owned exactly once (while members exist), no partition
+/// owned twice, idle members beyond partition count.
+#[test]
+fn prop_group_invariants_under_churn() {
+    check("group-invariants-churn", 60, |g: &mut Gen| {
+        let partitions = g.usize(1, 8);
+        let broker = Broker::new();
+        broker.create_topic("t", partitions);
+        let mut consumers: Vec<Consumer> = Vec::new();
+        for _ in 0..g.usize(1, 30) {
+            if g.bool() || consumers.is_empty() {
+                consumers.push(broker.subscribe("t", "g"));
+            } else {
+                let i = g.usize(0, consumers.len());
+                consumers.swap_remove(i).close();
+            }
+            // Invariants after every membership change.
+            let mut owned: Vec<usize> = consumers.iter().flat_map(|c| c.assignment()).collect();
+            owned.sort_unstable();
+            if consumers.is_empty() {
+                prop_assert!(owned.is_empty(), "ownership without members");
+            } else {
+                let expect: Vec<usize> = (0..partitions).collect();
+                prop_assert!(owned == expect, "partitions {owned:?} != {expect:?}");
+            }
+            let active = consumers.iter().filter(|c| !c.assignment().is_empty()).count();
+            prop_assert!(active <= partitions, "{active} active > {partitions} partitions");
+        }
+        Ok(())
+    });
+}
+
+/// Under arbitrary publish/poll/commit/crash interleavings, a group never
+/// loses a committed-past message and never sees an offset gap per
+/// partition (at-least-once + order within partition).
+#[test]
+fn prop_at_least_once_under_crashes() {
+    check("at-least-once", 40, |g: &mut Gen| {
+        let partitions = g.usize(1, 4);
+        let broker = Broker::new();
+        broker.create_topic("t", partitions);
+        let topic = broker.topic("t").unwrap();
+        let total = g.usize(1, 120);
+        for i in 0..total {
+            topic.publish(Message::new(None, vec![i as u8], 0));
+        }
+        // Consume with random crashes; track per-partition seen offsets.
+        let mut seen: Vec<Vec<u64>> = vec![Vec::new(); partitions];
+        let mut rounds = 0;
+        loop {
+            rounds += 1;
+            if rounds > 200 {
+                return Err("did not drain in 200 rounds".into());
+            }
+            let consumer = broker.subscribe("t", "g");
+            let crash_after = g.usize(0, 6);
+            let mut polls = 0;
+            loop {
+                let batch = consumer.poll(g.usize(1, 17));
+                if batch.is_empty() {
+                    break;
+                }
+                for om in &batch {
+                    seen[om.partition].push(om.offset);
+                }
+                consumer.commit_all();
+                polls += 1;
+                if polls >= crash_after {
+                    break;
+                }
+            }
+            let crashed = g.bool();
+            if crashed {
+                drop(consumer); // crash (commit_all already ran — clean)
+            } else {
+                consumer.close();
+            }
+            if broker.group_lag("t", "g") == 0 {
+                break;
+            }
+        }
+        // Every partition's seen offsets, deduped, must be the exact dense
+        // range (no gaps, no losses).
+        for (p, s) in seen.iter().enumerate() {
+            let mut d: Vec<u64> = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            let end = topic.end_offsets()[p];
+            let expect: Vec<u64> = (0..end).collect();
+            prop_assert!(d == expect, "partition {p}: {d:?} != 0..{end}");
+        }
+        Ok(())
+    });
+}
+
+/// Per-partition order is preserved for a single consumer.
+#[test]
+fn prop_partition_order_preserved() {
+    check("partition-order", 40, |g: &mut Gen| {
+        let partitions = g.usize(1, 4);
+        let broker = Broker::new();
+        broker.create_topic("t", partitions);
+        let topic = broker.topic("t").unwrap();
+        for i in 0..g.usize(1, 100) {
+            topic.publish(Message::new(Some(g.u64()), vec![(i % 256) as u8], 0));
+        }
+        let consumer = broker.subscribe("t", "g");
+        let mut last: Vec<Option<u64>> = vec![None; partitions];
+        loop {
+            let batch = consumer.poll(g.usize(1, 9));
+            if batch.is_empty() {
+                break;
+            }
+            for om in batch {
+                if let Some(prev) = last[om.partition] {
+                    prop_assert!(
+                        om.offset == prev + 1,
+                        "partition {} jumped {} -> {}",
+                        om.partition,
+                        prev,
+                        om.offset
+                    );
+                } else {
+                    prop_assert!(om.offset == 0, "first offset {} != 0", om.offset);
+                }
+                last[om.partition] = Some(om.offset);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Keyed messages always land in the same partition (stable hashing).
+#[test]
+fn prop_keyed_routing_stable() {
+    check("keyed-routing", 40, |g: &mut Gen| {
+        let partitions = g.usize(1, 8);
+        let broker = Broker::new();
+        broker.create_topic("t", partitions);
+        let topic = broker.topic("t").unwrap();
+        let key = g.u64();
+        let mut parts = std::collections::BTreeSet::new();
+        for _ in 0..10 {
+            let (p, _) = topic.publish(Message::new(Some(key), vec![], 0));
+            parts.insert(p);
+        }
+        prop_assert!(parts.len() == 1, "key spread over {parts:?}");
+        Ok(())
+    });
+}

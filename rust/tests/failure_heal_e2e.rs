@@ -1,0 +1,80 @@
+//! Failure injection end-to-end: nodes die, the two architectures heal
+//! differently (supervision vs node-restart), nothing is lost for good.
+
+use reactive_liquid::config::{Architecture, ExperimentConfig, TcmmBackend};
+use reactive_liquid::experiment::run_experiment;
+
+/// Experiments are timing-sensitive; serialize them so parallel tests in
+/// this binary don't contend for the (single-core) host while one run's
+/// baseline is being measured.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+
+fn failing_cfg(arch: Architecture) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.arch = arch;
+    cfg.duration_paper_min = 8.0;
+    cfg.time_scale = 1.0;
+    cfg.failure_prob = 1.0; // every node, every epoch
+    cfg.failure_epoch_paper_min = 2.0;
+    cfg.restart_paper_min = 1.0;
+    cfg.workload.taxis = 20;
+    cfg.workload.points_per_taxi = 50;
+    // Saturating rate: both architectures run at capacity, so lost compute
+    // shows up as lost throughput (below capacity they would just catch up
+    // after healing and the totals would converge).
+    cfg.workload.ingest_rate = 4000;
+    cfg.backend = TcmmBackend::Cpu;
+    cfg.elastic.max_workers = 8;
+    cfg
+}
+
+#[test]
+fn reactive_heals_through_supervision() {
+    let _guard = serial();
+    let r = run_experiment(&failing_cfg(Architecture::Reactive));
+    assert!(r.node_failures >= 3, "epochs fired: {}", r.node_failures);
+    assert!(r.supervisor_restarts > 0, "supervision regenerated components");
+    assert!(r.total_processed > 200, "kept processing through failures: {}", r.total_processed);
+}
+
+#[test]
+fn liquid_recovers_only_on_node_restart() {
+    let _guard = serial();
+    let r = run_experiment(&failing_cfg(Architecture::Liquid { tasks_per_job: 3 }));
+    assert!(r.node_failures >= 3);
+    assert_eq!(r.supervisor_restarts, 0, "liquid has no supervision service");
+    // Still processes: tasks return when nodes restart.
+    assert!(r.total_processed > 100, "processed {}", r.total_processed);
+}
+
+#[test]
+fn failures_cost_throughput_for_both() {
+    let _guard = serial();
+    // p=1.0 runs process less than p=0.0 runs, for both architectures
+    // (Fig. 10's premise), yet neither collapses to zero. Both sides must
+    // run *saturated* (capacity-bound, not ingest-bound), so cap the
+    // elastic pool below what the ingest rate needs.
+    for arch in [Architecture::Reactive, Architecture::Liquid { tasks_per_job: 3 }] {
+        let mut healthy = failing_cfg(arch);
+        healthy.failure_prob = 0.0;
+        healthy.elastic.max_workers = 4;
+        healthy.workload.ingest_rate = 8000;
+        let mut failing = healthy.clone();
+        failing.failure_prob = 1.0;
+        let h = run_experiment(&healthy);
+        let f = run_experiment(&failing);
+        eprintln!("{}: healthy={} failing={}", h.label, h.total_processed, f.total_processed);
+        assert!(
+            (f.total_processed as f64) < h.total_processed as f64 * 0.95,
+            "{}: failing {} not clearly below healthy {}",
+            h.label,
+            f.total_processed,
+            h.total_processed
+        );
+        assert!(f.total_processed > 0);
+    }
+}

@@ -1,0 +1,74 @@
+//! The paper's headline comparison, as assertions (Fig. 8's ordering):
+//! Reactive Liquid out-processes Liquid at equal resources, because task
+//! count is no longer capped by partitions; Liquid-6 ≈ Liquid-3 because
+//! the extra three tasks idle.
+
+use reactive_liquid::config::{Architecture, ExperimentConfig, TcmmBackend};
+use reactive_liquid::experiment::run_experiment;
+
+/// Experiments are timing-sensitive; serialize them so parallel tests in
+/// this binary don't contend for the (single-core) host while one run's
+/// baseline is being measured.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+
+fn cfg(arch: Architecture) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.arch = arch;
+    cfg.partitions = 3;
+    cfg.duration_paper_min = 8.0;
+    cfg.time_scale = 1.0;
+    cfg.workload.taxis = 50;
+    cfg.workload.points_per_taxi = 100;
+    cfg.workload.ingest_rate = 4000; // above either architecture's capacity
+    cfg.backend = TcmmBackend::Cpu;
+    cfg.elastic.max_workers = 12;
+    cfg.seed = 7;
+    cfg
+}
+
+#[test]
+fn reactive_outprocesses_liquid_and_liquid6_matches_liquid3() {
+    let _guard = serial();
+    let l3 = run_experiment(&cfg(Architecture::Liquid { tasks_per_job: 3 }));
+    let l6 = run_experiment(&cfg(Architecture::Liquid { tasks_per_job: 6 }));
+    let rl = run_experiment(&cfg(Architecture::Reactive));
+
+    eprintln!("{}\n{}\n{}", l3.summary(), l6.summary(), rl.summary());
+
+    // Fig. 8: RL strictly ahead (generous 15% margin for scheduling noise).
+    assert!(
+        rl.total_processed as f64 > l3.total_processed as f64 * 1.15,
+        "reactive {} !>> liquid-3 {}",
+        rl.total_processed,
+        l3.total_processed
+    );
+    assert!(
+        rl.total_processed as f64 > l6.total_processed as f64 * 1.15,
+        "reactive {} !>> liquid-6 {}",
+        rl.total_processed,
+        l6.total_processed
+    );
+    // Liquid-6 ≈ Liquid-3 (±25%): extra tasks idle on 3 partitions.
+    let ratio = l6.total_processed as f64 / l3.total_processed as f64;
+    assert!((0.75..1.25).contains(&ratio), "liquid-6/liquid-3 = {ratio}");
+}
+
+#[test]
+fn completion_time_tradeoff_exists() {
+    let _guard = serial();
+    // Fig. 11 / §5: under saturation, Reactive Liquid's mean completion
+    // time exceeds Liquid's (deep task queues add t_wi).
+    let l3 = run_experiment(&cfg(Architecture::Liquid { tasks_per_job: 3 }));
+    let rl = run_experiment(&cfg(Architecture::Reactive));
+    let l3_mean = l3.completion.mean().as_secs_f64();
+    let rl_mean = rl.completion.mean().as_secs_f64();
+    eprintln!("completion: liquid-3 {:.4}s reactive {:.4}s", l3_mean, rl_mean);
+    assert!(
+        rl_mean > l3_mean,
+        "expected reactive completion ({rl_mean}) worse than liquid ({l3_mean}) under saturation"
+    );
+}

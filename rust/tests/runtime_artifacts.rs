@@ -1,0 +1,138 @@
+//! Integration: load the real AOT artifacts and execute them via PJRT.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+
+use reactive_liquid::runtime::{artifacts_dir, Manifest, XlaRuntime};
+use reactive_liquid::tcmm::{CpuBackend, NearestBackend, XlaBackend};
+
+fn manifest() -> Manifest {
+    let dir = artifacts_dir().expect("artifacts dir missing — run `make artifacts`");
+    Manifest::load(&dir).expect("manifest parses")
+}
+
+#[test]
+fn manifest_lists_both_kernels() {
+    let m = manifest();
+    assert!(m.get("nearest").is_some());
+    assert!(m.get("kmeans").is_some());
+    let n = m.get("nearest").unwrap();
+    assert!(n.dim("B").unwrap() > 0);
+    assert!(n.dim("K").unwrap() > 0);
+    assert!(n.file.is_file(), "artifact file exists: {:?}", n.file);
+}
+
+#[test]
+fn nearest_kernel_executes_and_matches_cpu() {
+    let m = manifest();
+    let entry = m.get("nearest").unwrap();
+    let b = entry.dim("B").unwrap() as usize;
+    let k = entry.dim("K").unwrap() as usize;
+    let rt = XlaRuntime::global().expect("pjrt client");
+    let kernel = rt.load_hlo_text(&entry.file).expect("compile artifact");
+
+    // Beijing-ish clustered data, padded to (B, K).
+    let centers_live = [[116.30f32, 39.90], [116.45, 39.95], [116.60, 40.05]];
+    let mut pts = vec![0f32; b * 2];
+    for i in 0..b {
+        let c = centers_live[i % 3];
+        pts[i * 2] = c[0] + ((i % 7) as f32) * 1e-3;
+        pts[i * 2 + 1] = c[1] - ((i % 5) as f32) * 1e-3;
+    }
+    let mut ctr = vec![0f32; k * 2];
+    let mut valid = vec![0f32; k];
+    for (i, c) in centers_live.iter().enumerate() {
+        ctr[i * 2] = c[0];
+        ctr[i * 2 + 1] = c[1];
+        valid[i] = 1.0;
+    }
+    let out = kernel
+        .run_f32(&[(&pts, &[b as i64, 2]), (&ctr, &[k as i64, 2]), (&valid, &[k as i64])])
+        .expect("execute");
+    assert_eq!(out.len(), 2, "tuple of (idx, dist)");
+    let idx = out[0].as_i32().expect("idx i32");
+    let dist = out[1].as_f32().expect("dist f32");
+    assert_eq!(idx.len(), b);
+    assert_eq!(dist.len(), b);
+
+    // Compare against the scalar CPU oracle.
+    let points_arr: Vec<[f32; 2]> = (0..b).map(|i| [pts[i * 2], pts[i * 2 + 1]]).collect();
+    let cpu = CpuBackend.nearest(&points_arr, &centers_live);
+    for i in 0..b {
+        let (ci, cd) = cpu[i].unwrap();
+        assert_eq!(idx[i] as usize, ci, "point {i} argmin");
+        assert!((dist[i] - cd).abs() < 1e-3, "point {i}: {} vs {}", dist[i], cd);
+    }
+}
+
+#[test]
+fn xla_backend_end_to_end_matches_cpu_backend() {
+    let xla = match XlaBackend::load() {
+        Ok(b) => b,
+        Err(e) => panic!("XlaBackend::load: {e}"),
+    };
+    let (b, k) = xla.shapes();
+    assert!(b > 0 && k > 0);
+
+    let centers: Vec<[f32; 2]> =
+        (0..10).map(|i| [116.0 + i as f32 * 0.05, 39.6 + i as f32 * 0.03]).collect();
+    // More points than one artifact batch → exercises chunking.
+    let points: Vec<[f32; 2]> = (0..(b * 2 + 17))
+        .map(|i| [116.0 + (i % 13) as f32 * 0.04, 39.6 + (i % 11) as f32 * 0.025])
+        .collect();
+
+    let got = xla.nearest(&points, &centers);
+    let want = CpuBackend.nearest(&points, &centers);
+    assert_eq!(got.len(), want.len());
+    let dist = |p: [f32; 2], c: [f32; 2]| ((p[0] - c[0]).powi(2) + (p[1] - c[1]).powi(2)).sqrt();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let (gi, gd) = g.expect("some");
+        let (wi, wd) = w.expect("some");
+        // Argmin may differ on exact/near ties (f32 expansion vs scalar
+        // loop); compare through the distances, like the kernel oracle
+        // tests do.
+        let via_g = dist(points[i], centers[gi]);
+        let via_w = dist(points[i], centers[wi]);
+        assert!(
+            (via_g - via_w).abs() < 1e-3,
+            "point {i}: non-tie index mismatch {gi} vs {wi} ({via_g} vs {via_w})"
+        );
+        assert!((gd - wd).abs() < 1e-3, "point {i}: {gd} vs {wd}");
+    }
+}
+
+#[test]
+fn kmeans_kernel_executes() {
+    let m = manifest();
+    let entry = m.get("kmeans").unwrap();
+    let k = entry.dim("K").unwrap() as usize;
+    let c = entry.dim("C").unwrap() as usize;
+    let rt = XlaRuntime::global().unwrap();
+    let kernel = rt.load_hlo_text(&entry.file).expect("compile kmeans");
+
+    // Two blobs of micro-centers; two live centroids among C.
+    let mut pts = vec![0f32; k * 2];
+    let mut wts = vec![0f32; k];
+    for i in 0..8 {
+        let blob = if i < 4 { [116.2f32, 39.8] } else { [116.6, 40.1] };
+        pts[i * 2] = blob[0];
+        pts[i * 2 + 1] = blob[1];
+        wts[i] = 2.0;
+    }
+    let mut cen = vec![0f32; c * 2];
+    cen[0] = 116.25;
+    cen[1] = 39.85;
+    cen[2] = 116.55;
+    cen[3] = 40.05;
+    let out = kernel
+        .run_f32(&[(&pts, &[k as i64, 2]), (&wts, &[k as i64]), (&cen, &[c as i64, 2])])
+        .expect("execute kmeans");
+    let new_c = out[0].as_f32().unwrap();
+    let counts = out[1].as_f32().unwrap();
+    assert_eq!(new_c.len(), c * 2);
+    assert_eq!(counts.len(), c);
+    // Blob mass: 4 points × weight 2 each.
+    assert!((counts[0] - 8.0).abs() < 1e-3, "counts[0]={}", counts[0]);
+    assert!((counts[1] - 8.0).abs() < 1e-3, "counts[1]={}", counts[1]);
+    assert!((new_c[0] - 116.2).abs() < 1e-3);
+    assert!((new_c[3] - 40.1).abs() < 1e-3);
+}
