@@ -16,7 +16,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+/// Run `f` `iters` times (after a warm-up) and report+return ops/s.
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     // Warm-up.
     for _ in 0..iters / 10 + 1 {
         f();
@@ -32,6 +33,22 @@ fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
         1.0 / per,
         per * 1e6
     );
+    1.0 / per
+}
+
+/// Messages/sec of a publish→consume cycle whose two stages run at
+/// `publish` and `consume` msgs/sec (series composition: the cycle pays
+/// both costs for every message).
+fn cycle_rate(publish: f64, consume: f64) -> f64 {
+    1.0 / (1.0 / publish + 1.0 / consume)
+}
+
+/// Load `n` messages into a topic (batched, so setup stays fast).
+fn prefill(t: &reactive_liquid::messaging::broker::Topic, n: usize) {
+    for start in (0..n).step_by(1024) {
+        let m = 1024.min(n - start);
+        t.publish_batch((0..m).map(|i| Message::new(None, vec![(i % 256) as u8], 0)).collect());
+    }
 }
 
 struct NullTarget {
@@ -53,35 +70,86 @@ impl RouteTarget for NullTarget {
     }
 }
 
+/// The batch size for the batched broker benchmarks (the `n` of Eq. 1).
+const BATCH: usize = 64;
+
 fn main() {
     println!("== L3 hot-path microbenchmarks ==\n");
 
-    // Broker publish (keyless round-robin).
+    // --- Broker publish + consume: per-message vs batch-first paths.
+    // The acceptance bar for the batch-first messaging layer: batched
+    // publish+consume ≥ 2× the per-message path, measured in one run.
+    let publish_single;
+    let publish_batch;
+    let consume_single;
+    let consume_batch;
+
+    // Publish, one lock per message (keyless round-robin).
     {
         let broker = Broker::new();
         broker.create_topic("b", 3);
         let t = broker.topic("b").unwrap();
         let payload = vec![0u8; 20];
-        bench("broker publish (20B, 3 partitions)", 200_000, || {
+        publish_single = bench("broker publish (20B, 3 partitions)", 200_000, || {
             t.publish(Message::new(None, payload.clone(), 0));
         });
     }
 
-    // Broker poll throughput (batch 32).
+    // Publish, one lock per touched partition per batch.
     {
         let broker = Broker::new();
         broker.create_topic("b", 3);
         let t = broker.topic("b").unwrap();
-        // Enough for warm-up + measured iterations at batch 32.
-        for i in 0..3_600_000u64 {
-            t.publish(Message::new(None, vec![(i % 256) as u8], 0));
-        }
+        let payload = vec![0u8; 20];
+        let per_call = bench(&format!("broker publish_batch={BATCH} (per batch)"), 4_000, || {
+            let batch: Vec<Message> =
+                (0..BATCH).map(|_| Message::new(None, payload.clone(), 0)).collect();
+            t.publish_batch(batch);
+        });
+        publish_batch = per_call * BATCH as f64;
+        println!("{:42} {:>10.0} msgs/s", "  → per message", publish_batch);
+    }
+
+    // Consume, one coordinator lock + one commit per message.
+    {
+        let broker = Broker::new();
+        broker.create_topic("b", 3);
+        let t = broker.topic("b").unwrap();
+        prefill(&t, 300_000);
         let consumer = broker.subscribe("b", "g");
-        bench("broker poll batch=32 (per message)", 100_000, || {
-            let got = consumer.poll(32);
-            assert!(!got.is_empty());
+        consume_single = bench("broker poll(1)+commit (per message)", 200_000, || {
+            let got = consumer.poll(1);
+            let om = got.first().expect("prefilled");
+            consumer.commit(om.partition, om.offset + 1);
         });
     }
+
+    // Consume, one coordinator lock + one commit per batch.
+    {
+        let broker = Broker::new();
+        broker.create_topic("b", 3);
+        let t = broker.topic("b").unwrap();
+        prefill(&t, 300_000);
+        let consumer = broker.subscribe("b", "g");
+        let per_call =
+            bench(&format!("broker poll_batch={BATCH}+commit_batch"), 4_000, || {
+                let batch = consumer.poll_batch(BATCH);
+                assert!(!batch.is_empty(), "prefilled");
+                assert!(consumer.commit_batch(&batch));
+            });
+        consume_batch = per_call * BATCH as f64;
+        println!("{:42} {:>10.0} msgs/s", "  → per message", consume_batch);
+    }
+
+    // The combined cycle (publish then consume every message).
+    let cycle_single = cycle_rate(publish_single, consume_single);
+    let cycle_batched = cycle_rate(publish_batch, consume_batch);
+    println!(
+        "\nbatch speedup @ n={BATCH}: publish {:.2}x, consume {:.2}x, publish+consume {:.2}x (target ≥ 2.00x)\n",
+        publish_batch / publish_single,
+        consume_batch / consume_single,
+        cycle_batched / cycle_single,
+    );
 
     // Router decision + deliver per policy.
     for policy in

@@ -88,13 +88,20 @@ impl<M> Mailbox<M> {
 
     /// Non-blocking send.
     pub fn try_send(&self, msg: M) -> Result<(), SendError> {
+        self.try_send_back(msg).map_err(|(err, _msg)| err)
+    }
+
+    /// Non-blocking send that hands the message back on failure, so
+    /// callers (routers, batch publishers) can spill it to another target
+    /// without cloning it up front.
+    pub fn try_send_back(&self, msg: M) -> Result<(), (SendError, M)> {
         let mut q = self.queue.lock().unwrap();
         if self.is_closed() {
             self.dead.fetch_add(1, Ordering::Relaxed);
-            return Err(SendError::Closed);
+            return Err((SendError::Closed, msg));
         }
         if q.len() >= self.capacity {
-            return Err(SendError::Full);
+            return Err((SendError::Full, msg));
         }
         q.push_back(msg);
         self.depth.store(q.len(), Ordering::Relaxed);
@@ -185,6 +192,19 @@ mod tests {
         mb.try_send(2).unwrap();
         assert_eq!(mb.try_send(3), Err(SendError::Full));
         assert_eq!(mb.depth(), 2);
+    }
+
+    #[test]
+    fn try_send_back_returns_message_on_failure() {
+        let mb = Mailbox::new(1);
+        mb.try_send_back("a").unwrap();
+        let (err, msg) = mb.try_send_back("b").unwrap_err();
+        assert_eq!(err, SendError::Full);
+        assert_eq!(msg, "b", "rejected message handed back");
+        mb.close();
+        let (err, msg) = mb.try_send_back("c").unwrap_err();
+        assert_eq!(err, SendError::Closed);
+        assert_eq!(msg, "c");
     }
 
     #[test]

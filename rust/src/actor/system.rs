@@ -66,6 +66,12 @@ impl<M: Send + 'static> ActorRef<M> {
         self.mailbox.try_send(msg)
     }
 
+    /// Non-blocking send that returns the message on failure (no clone
+    /// needed by callers that want to redirect it).
+    pub fn try_tell_back(&self, msg: M) -> Result<(), (SendError, M)> {
+        self.mailbox.try_send_back(msg)
+    }
+
     /// Mailbox depth — the signal the elastic-worker service scales on.
     pub fn mailbox_depth(&self) -> usize {
         self.mailbox.depth()

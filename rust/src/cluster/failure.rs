@@ -105,6 +105,12 @@ impl FailureInjector {
         self.events.lock().unwrap().clone()
     }
 
+    /// Whether the injector thread is live (start/stop are idempotent and
+    /// an injector can be restarted after a stop).
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
     pub fn start(self: &Arc<Self>) {
         if self.running.swap(true, Ordering::SeqCst) {
             return;
@@ -132,6 +138,10 @@ impl FailureInjector {
 
 impl Drop for FailureInjector {
     fn drop(&mut self) {
+        // The injector thread holds its own `Arc<Self>`, so this drop can
+        // only run once that thread has exited (or was never started);
+        // clearing the flag here is a belt-and-braces guard for the
+        // never-started case, not a substitute for `stop()`.
         self.running.store(false, Ordering::SeqCst);
     }
 }
@@ -198,6 +208,20 @@ mod tests {
         inj.step();
         assert_eq!(cluster.up_count(), 3, "mid-epoch: nothing happens");
         assert_eq!(inj.failure_count(), 0);
+    }
+
+    #[test]
+    fn start_stop_idempotent_and_restartable() {
+        let (_clock, _cluster, inj) = fixture(0.0);
+        assert!(!inj.is_running());
+        inj.start();
+        inj.start(); // idempotent
+        assert!(inj.is_running());
+        inj.stop();
+        assert!(!inj.is_running());
+        inj.start(); // restartable after stop
+        assert!(inj.is_running());
+        inj.stop();
     }
 
     #[test]

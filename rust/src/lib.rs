@@ -24,6 +24,37 @@
 //!   through PJRT ([`runtime`]);
 //! - [`metrics`] and an [`experiment`] harness that regenerates every
 //!   figure in the paper's evaluation section.
+//!
+//! # Batch-first data plane
+//!
+//! Every layer that touches the messaging hot path exposes a batched form
+//! of its per-message API and uses it internally, so the lock, clock, and
+//! commit costs of Eq. 1's `n`-message consume cycle are paid once per
+//! batch: [`messaging::broker::Topic::publish_batch`] /
+//! [`messaging::Producer::send_batch`] on the write side,
+//! [`messaging::broker::Consumer::poll_batch`] +
+//! [`messaging::broker::Consumer::commit_batch`] (with rebalance fencing)
+//! on the read side, [`vml::router::TaskRouter::route_batch`] for task
+//! fan-out, and [`processing::job::OutputSink::publish_batch`] through the
+//! virtual producer pool back into the broker. The ordering and commit
+//! guarantees are spelled out in the [`messaging`] module docs;
+//! `benches/perf_hotpath.rs` measures the speedup over the per-message
+//! path in the same run.
+//!
+//! # Building and testing
+//!
+//! ```sh
+//! cargo build --release          # library, CLI, examples
+//! cargo test -q                  # unit + integration + property tests
+//! cargo bench --bench perf_hotpath
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The build is fully offline: the two external crates (`anyhow`, `xla`)
+//! are vendored under `rust/vendor/`. The `xla` vendor is a stub whose
+//! PJRT client reports unavailable, so all XLA call sites fall back to
+//! their scalar CPU paths; swap the real `xla-rs` crate into `Cargo.toml`
+//! to execute the AOT JAX/Pallas artifacts.
 
 pub mod actor;
 pub mod cluster;

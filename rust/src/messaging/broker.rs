@@ -1,4 +1,16 @@
 //! The broker: topics + consumer-group coordinator + consumer handles.
+//!
+//! Two structural choices keep the hot path fast under many concurrent
+//! producers/consumers (the elastic swings of §4):
+//!
+//! - the topic registry is **sharded**: topic names hash to one of
+//!   [`TOPIC_SHARDS`] independent `RwLock<HashMap>` shards, so topic
+//!   lookups from different pipelines never contend on one global lock;
+//! - every data-plane operation has a **batch-first** variant
+//!   ([`Topic::publish_batch`], [`Consumer::poll_batch`],
+//!   [`Consumer::commit_batch`]) that pays each lock/commit cost once per
+//!   batch instead of once per message — the `n`-message consume cycle of
+//!   Eq. 1 (`T = n·t_c + i·t_p`) made explicit in the API.
 
 use super::group::{GroupState, MemberId};
 use super::message::{Message, OffsetMessage};
@@ -40,14 +52,69 @@ impl Topic {
         self.end_offsets().iter().sum()
     }
 
-    /// Publish, choosing the partition from the key hash (or round-robin).
-    pub fn publish(&self, msg: Message) -> (usize, u64) {
-        let p = match msg.key {
+    /// Partition a message lands in: key hash when keyed, else the next
+    /// round-robin slot.
+    fn pick_partition(&self, key: Option<u64>) -> usize {
+        match key {
             Some(k) => (hash64(k) % self.partitions.len() as u64) as usize,
             None => self.rr.fetch_add(1, Ordering::Relaxed) % self.partitions.len(),
-        };
+        }
+    }
+
+    /// Publish, choosing the partition from the key hash (or round-robin).
+    pub fn publish(&self, msg: Message) -> (usize, u64) {
+        let p = self.pick_partition(msg.key);
         let off = self.partitions[p].append(msg);
         (p, off)
+    }
+
+    /// Publish a batch, paying each partition's append lock once.
+    ///
+    /// Semantics match a sequence of [`Topic::publish`] calls exactly:
+    /// keyed messages go to their key's partition, keyless messages
+    /// round-robin, and *input order is preserved within every partition*
+    /// (so per-key ordering holds across batch boundaries). Returns the
+    /// `(partition, offset)` of every message, in input order.
+    pub fn publish_batch(&self, msgs: Vec<Message>) -> Vec<(usize, u64)> {
+        let n = self.partitions.len();
+        if msgs.is_empty() {
+            return Vec::new();
+        }
+        // Reserve one contiguous run of round-robin slots for the batch's
+        // keyless messages, then bucket per partition in input order.
+        let keyless = msgs.iter().filter(|m| m.key.is_none()).count();
+        let mut rr = if keyless > 0 { self.rr.fetch_add(keyless, Ordering::Relaxed) } else { 0 };
+        let mut which = Vec::with_capacity(msgs.len());
+        for m in &msgs {
+            let p = match m.key {
+                Some(k) => (hash64(k) % n as u64) as usize,
+                None => {
+                    let p = rr % n;
+                    rr += 1;
+                    p
+                }
+            };
+            which.push(p);
+        }
+        let mut buckets: Vec<Vec<Message>> = (0..n).map(|_| Vec::new()).collect();
+        for (m, &p) in msgs.into_iter().zip(which.iter()) {
+            buckets[p].push(m);
+        }
+        // One append (one write lock) per touched partition.
+        let mut next = vec![0u64; n];
+        for (p, bucket) in buckets.into_iter().enumerate() {
+            if !bucket.is_empty() {
+                next[p] = self.partitions[p].append_batch(bucket);
+            }
+        }
+        which
+            .into_iter()
+            .map(|p| {
+                let off = next[p];
+                next[p] += 1;
+                (p, off)
+            })
+            .collect()
     }
 
     /// Read a raw window from one partition (offset-addressed, group-free).
@@ -64,21 +131,46 @@ fn hash64(mut x: u64) -> u64 {
     x ^ (x >> 31)
 }
 
+/// Number of independent topic-registry shards. Power of two so the name
+/// hash folds with a mask; 16 is comfortably above the topic-touching
+/// thread counts the experiment grid produces.
+const TOPIC_SHARDS: usize = 16;
+
+#[inline]
+fn shard_of(name: &str) -> usize {
+    // FNV-1a over the name bytes, folded into the shard mask.
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    (h as usize) & (TOPIC_SHARDS - 1)
+}
+
 /// The in-process broker (the messaging layer).
+///
+/// The topic map is split into [`TOPIC_SHARDS`] lock shards keyed by the
+/// topic-name hash: producers and consumer groups on different topics take
+/// different locks, so registry lookups scale with the pipeline width
+/// instead of serializing on one `RwLock`.
 pub struct Broker {
-    topics: RwLock<HashMap<String, Arc<Topic>>>,
+    shards: [RwLock<HashMap<String, Arc<Topic>>>; TOPIC_SHARDS],
     next_member: AtomicU64,
 }
 
 impl Broker {
     pub fn new() -> Arc<Self> {
-        Arc::new(Broker { topics: RwLock::new(HashMap::new()), next_member: AtomicU64::new(1) })
+        Arc::new(Self::default())
+    }
+
+    fn shard(&self, name: &str) -> &RwLock<HashMap<String, Arc<Topic>>> {
+        &self.shards[shard_of(name)]
     }
 
     /// Create a topic (idempotent; partition count must match an existing
     /// topic or the call panics — config error).
     pub fn create_topic(self: &Arc<Self>, name: &str, partitions: usize) -> Arc<Topic> {
-        let mut t = self.topics.write().unwrap();
+        let mut t = self.shard(name).write().unwrap();
         let topic = t
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(Topic::new(name, partitions)))
@@ -92,7 +184,18 @@ impl Broker {
     }
 
     pub fn topic(&self, name: &str) -> Option<Arc<Topic>> {
-        self.topics.read().unwrap().get(name).cloned()
+        self.shard(name).read().unwrap().get(name).cloned()
+    }
+
+    /// Names of all topics, across shards (sorted; for reports/debugging).
+    pub fn topic_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.read().unwrap().keys().cloned().collect::<Vec<_>>())
+            .collect();
+        names.sort();
+        names
     }
 
     fn expect_topic(&self, name: &str) -> Arc<Topic> {
@@ -146,11 +249,37 @@ impl Broker {
     }
 }
 
+/// One poll's worth of messages plus the commit bookkeeping for it.
+///
+/// `next_offsets` is the per-partition high-watermark (`partition`,
+/// `next offset to read`) covering everything in `messages`;
+/// [`Consumer::commit_batch`] applies all of them under a single
+/// coordinator lock. `generation` is the group's rebalance generation at
+/// poll time — a commit from a batch polled *before* a rebalance is
+/// fenced (dropped), so ownership changes always rewind to the committed
+/// offset and redeliver, keeping delivery at-least-once.
+pub struct PolledBatch {
+    pub messages: Vec<OffsetMessage>,
+    pub next_offsets: Vec<(usize, u64)>,
+    pub generation: u64,
+}
+
+impl PolledBatch {
+    pub fn len(&self) -> usize {
+        self.messages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.messages.is_empty()
+    }
+}
+
 /// A consumer-group member handle.
 ///
-/// `poll` reads batches from the member's assigned partitions and advances
-/// the group's in-memory positions; `commit` durably records progress so a
-/// restarted member resumes there. Dropping without closing mimics a crash.
+/// `poll`/`poll_batch` read batches from the member's assigned partitions
+/// and advance the group's in-memory positions; `commit`/`commit_batch`
+/// durably record progress so a restarted member resumes there. Dropping
+/// without closing mimics a crash.
 pub struct Consumer {
     topic: Arc<Topic>,
     group: String,
@@ -175,6 +304,9 @@ impl Consumer {
 
     /// Poll up to `max` messages across owned partitions (round-robin over
     /// partitions, batch per partition). Non-blocking: may return empty.
+    /// This is the plain per-message-commit path; it skips
+    /// [`Consumer::poll_batch`]'s watermark/generation bookkeeping so
+    /// per-message and batched consumption stay separately measurable.
     pub fn poll(&self, max: usize) -> Vec<OffsetMessage> {
         let mut out = Vec::new();
         let mut groups = self.topic.groups.lock().unwrap();
@@ -201,11 +333,68 @@ impl Consumer {
         out
     }
 
+    /// Poll up to `max` messages and return them together with the
+    /// per-partition commit watermarks and the group generation — the
+    /// batch-first consume path. One coordinator lock covers position
+    /// reads and advances for every owned partition; pair with
+    /// [`Consumer::commit_batch`] to also pay the commit lock once per
+    /// batch. Within each partition, messages are in offset order.
+    pub fn poll_batch(&self, max: usize) -> PolledBatch {
+        let mut messages = Vec::new();
+        let mut next_offsets: Vec<(usize, u64)> = Vec::new();
+        let mut generation = 0;
+        let mut groups = self.topic.groups.lock().unwrap();
+        if let Some(g) = groups.get_mut(&self.group) {
+            generation = g.generation();
+            let parts = g.assigned(self.member).to_vec();
+            for p in parts {
+                if messages.len() >= max {
+                    break;
+                }
+                let from = g.position(p);
+                let batch = self.topic.partitions[p].read(from, max - messages.len());
+                if let Some((last, _)) = batch.last() {
+                    g.advance(p, last + 1);
+                    next_offsets.push((p, last + 1));
+                }
+                messages.extend(batch.into_iter().map(|(offset, message)| OffsetMessage {
+                    partition: p,
+                    offset,
+                    message,
+                }));
+            }
+        }
+        PolledBatch { messages, next_offsets, generation }
+    }
+
     /// Commit `next` (the next offset to read) for `partition`.
     pub fn commit(&self, partition: usize, next: u64) {
         let mut groups = self.topic.groups.lock().unwrap();
         if let Some(g) = groups.get_mut(&self.group) {
             g.commit(partition, next);
+        }
+    }
+
+    /// Commit every watermark of `batch` under one coordinator lock.
+    ///
+    /// Returns `false` — and commits **nothing** — when the group has
+    /// rebalanced since the batch was polled (the member is fenced, like
+    /// a Kafka commit with a stale generation). The messages will be
+    /// redelivered to their new owner from the last committed offset;
+    /// callers that processed them simply see at-least-once duplicates.
+    pub fn commit_batch(&self, batch: &PolledBatch) -> bool {
+        if batch.next_offsets.is_empty() {
+            return true;
+        }
+        let mut groups = self.topic.groups.lock().unwrap();
+        match groups.get_mut(&self.group) {
+            Some(g) if g.generation() == batch.generation => {
+                for &(p, next) in &batch.next_offsets {
+                    g.commit(p, next);
+                }
+                true
+            }
+            _ => false,
         }
     }
 
@@ -244,7 +433,10 @@ impl Drop for Consumer {
 
 impl Default for Broker {
     fn default() -> Self {
-        Broker { topics: RwLock::new(HashMap::new()), next_member: AtomicU64::new(1) }
+        Broker {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            next_member: AtomicU64::new(1),
+        }
     }
 }
 
@@ -284,6 +476,66 @@ mod tests {
     }
 
     #[test]
+    fn publish_batch_round_robin_spreads() {
+        let b = broker_with_topic(3);
+        let t = b.topic("t").unwrap();
+        let placed = t.publish_batch((0..9).map(|i| Message::new(None, vec![i], 0)).collect());
+        assert_eq!(placed.len(), 9);
+        assert_eq!(t.end_offsets(), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn publish_batch_keyed_matches_single_publish() {
+        let b = broker_with_topic(4);
+        let t = b.topic("t").unwrap();
+        let (p_single, _) = t.publish(Message::new(Some(42), vec![], 0));
+        let placed = t.publish_batch(vec![
+            Message::new(Some(42), vec![1], 0),
+            Message::new(Some(42), vec![2], 0),
+        ]);
+        assert_eq!(placed[0].0, p_single, "batch and single publish agree on the partition");
+        assert_eq!(placed[1].0, p_single);
+        assert_eq!(placed[1].1, placed[0].1 + 1, "same-key offsets dense and ordered");
+    }
+
+    #[test]
+    fn publish_batch_preserves_input_order_per_partition() {
+        let b = broker_with_topic(2);
+        let t = b.topic("t").unwrap();
+        // Keys 0 and 1 hash to some partitions; interleave and check each
+        // partition replays its subsequence in input order.
+        let msgs: Vec<Message> =
+            (0..20u8).map(|i| Message::new(Some((i % 2) as u64), vec![i], 0)).collect();
+        let placed = t.publish_batch(msgs);
+        for p in 0..2 {
+            let replay = t.read(p, 0, 100);
+            let expected: Vec<u8> = placed
+                .iter()
+                .enumerate()
+                .filter(|(_, (part, _))| *part == p)
+                .map(|(i, _)| i as u8)
+                .collect();
+            let got: Vec<u8> = replay.iter().map(|(_, m)| m.payload[0]).collect();
+            assert_eq!(got, expected, "partition {p} order");
+        }
+    }
+
+    #[test]
+    fn sharded_registry_finds_every_topic() {
+        let b = Broker::new();
+        // Enough names to land on many different shards.
+        for i in 0..50usize {
+            b.create_topic(&format!("topic-{i}"), 1 + i % 4);
+        }
+        for i in 0..50usize {
+            let t = b.topic(&format!("topic-{i}")).expect("topic resolvable");
+            assert_eq!(t.partition_count(), 1 + i % 4);
+        }
+        assert!(b.topic("missing").is_none());
+        assert_eq!(b.topic_names().len(), 50);
+    }
+
+    #[test]
     fn single_consumer_sees_everything() {
         let b = broker_with_topic(3);
         publish_n(&b, 30);
@@ -297,6 +549,45 @@ mod tests {
             got += batch.len();
         }
         assert_eq!(got, 30);
+    }
+
+    #[test]
+    fn poll_batch_watermarks_cover_messages() {
+        let b = broker_with_topic(2);
+        publish_n(&b, 10);
+        let c = b.subscribe("t", "g");
+        let batch = c.poll_batch(10);
+        assert_eq!(batch.len(), 10);
+        let mut next = batch.next_offsets.clone();
+        next.sort_unstable();
+        assert_eq!(next, vec![(0, 5), (1, 5)]);
+        assert!(c.commit_batch(&batch), "same generation: commit applies");
+        assert_eq!(b.committed("t", "g", 0), 5);
+        assert_eq!(b.committed("t", "g", 1), 5);
+        assert_eq!(b.group_lag("t", "g"), 0);
+    }
+
+    #[test]
+    fn commit_batch_fenced_after_rebalance() {
+        let b = broker_with_topic(2);
+        publish_n(&b, 10);
+        let c1 = b.subscribe("t", "g");
+        let batch = c1.poll_batch(10);
+        assert_eq!(batch.len(), 10);
+        let _c2 = b.subscribe("t", "g"); // rebalance bumps the generation
+        assert!(!c1.commit_batch(&batch), "stale-generation commit is fenced");
+        assert_eq!(b.committed("t", "g", 0), 0);
+        assert_eq!(b.committed("t", "g", 1), 0);
+        assert_eq!(b.group_lag("t", "g"), 10, "everything will be redelivered");
+    }
+
+    #[test]
+    fn empty_poll_batch_commits_trivially() {
+        let b = broker_with_topic(1);
+        let c = b.subscribe("t", "g");
+        let batch = c.poll_batch(5);
+        assert!(batch.is_empty());
+        assert!(c.commit_batch(&batch));
     }
 
     #[test]

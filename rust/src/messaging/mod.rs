@@ -15,8 +15,35 @@
 //! - consumption is batch **polling** with positions and explicit offset
 //!   **commits**, giving at-least-once redelivery after a member failure.
 //!
+//! # Batch-first API
+//!
+//! Every data-plane operation has a batched form that amortizes lock and
+//! commit costs over the `n`-message cycle of Eq. 1 (`T = n·t_c + i·t_p`):
+//!
+//! | per-message                  | batched                         | cost paid once per batch |
+//! |------------------------------|---------------------------------|--------------------------|
+//! | [`broker::Topic::publish`]   | [`broker::Topic::publish_batch`]| partition-log write lock (per touched partition) |
+//! | [`Producer::send`]           | [`Producer::send_batch`]        | clock stamp + the above  |
+//! | [`broker::Consumer::poll`]   | [`broker::Consumer::poll_batch`]| group-coordinator lock   |
+//! | [`broker::Consumer::commit`] | [`broker::Consumer::commit_batch`]| group-coordinator lock |
+//!
+//! **Ordering.** A batch publish is equivalent to publishing its messages
+//! one by one: keyed messages land on their key's partition and every
+//! partition preserves batch input order, so per-key ordering holds within
+//! and across batches. `poll_batch` returns each partition's messages in
+//! offset order.
+//!
+//! **Commit semantics.** [`broker::PolledBatch`] carries per-partition
+//! `next_offsets` watermarks plus the group's rebalance `generation` at
+//! poll time. [`broker::Consumer::commit_batch`] applies all watermarks
+//! atomically under one coordinator lock *iff* the generation still
+//! matches; a commit from before a rebalance is fenced (returns `false`,
+//! commits nothing), so ownership hand-offs always resume from the last
+//! committed offset and delivery stays at-least-once.
+//!
 //! The broker is a plain in-process object behind `Arc`; all state is
-//! internally synchronized, so producers/consumers can live on any thread
+//! internally synchronized (the topic registry itself is sharded — see
+//! [`broker::Broker`]), so producers/consumers can live on any thread
 //! (or simulated cluster node).
 
 pub mod broker;
@@ -30,4 +57,4 @@ pub use group::MemberId;
 pub use message::Message;
 pub use producer::Producer;
 
-pub use broker::Consumer;
+pub use broker::{Consumer, PolledBatch};

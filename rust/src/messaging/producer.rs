@@ -29,6 +29,27 @@ impl Producer {
         self.topic.publish(msg)
     }
 
+    /// Publish a batch of `(key, payload)` pairs in one shot — one clock
+    /// read and one partition-log lock per touched partition, instead of
+    /// one of each per message. Returns `(partition, offset)` per input,
+    /// in input order; per-key order is preserved (see
+    /// [`Topic::publish_batch`]).
+    pub fn send_batch(&self, batch: Vec<(Option<u64>, Vec<u8>)>) -> Vec<(usize, u64)> {
+        let now = self.clock.now_millis();
+        self.topic
+            .publish_batch(batch.into_iter().map(|(k, p)| Message::new(k, p, now)).collect())
+    }
+
+    /// Publish pre-built messages as one batch, restamping all of their
+    /// produce times with a single clock read.
+    pub fn send_messages(&self, mut msgs: Vec<Message>) -> Vec<(usize, u64)> {
+        let now = self.clock.now_millis();
+        for m in &mut msgs {
+            m.produced_at_ms = now;
+        }
+        self.topic.publish_batch(msgs)
+    }
+
     pub fn topic_name(&self) -> &str {
         &self.topic.name
     }
@@ -51,6 +72,23 @@ mod tests {
         let c = b.subscribe("t", "g");
         let got = c.poll(1);
         assert_eq!(got[0].message.produced_at_ms, 123);
+    }
+
+    #[test]
+    fn send_batch_stamps_once_and_places_all() {
+        let b = Broker::new();
+        b.create_topic("t", 3);
+        let clock = Arc::new(ManualClock::new());
+        let p = Producer::new(&b, "t", clock.clone());
+        clock.advance(Duration::from_millis(77));
+        let placed = p.send_batch((0..9u8).map(|i| (None, vec![i])).collect());
+        assert_eq!(placed.len(), 9);
+        let t = b.topic("t").unwrap();
+        assert_eq!(t.total_messages(), 9);
+        let c = b.subscribe("t", "g");
+        for om in c.poll(9) {
+            assert_eq!(om.message.produced_at_ms, 77, "one clock stamp for the whole batch");
+        }
     }
 
     #[test]

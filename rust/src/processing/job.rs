@@ -19,6 +19,15 @@ pub type ProcessorFactory = Arc<dyn Fn() -> Box<dyn Processor> + Send + Sync>;
 /// Liquid, a direct broker producer in Liquid, nothing for terminal jobs).
 pub trait OutputSink: Send + Sync {
     fn publish(&self, msg: Message);
+
+    /// Publish a batch. Sinks backed by a batch-capable producer override
+    /// this to pay their per-publish costs once per batch; the default
+    /// falls back to per-message [`OutputSink::publish`].
+    fn publish_batch(&self, msgs: Vec<Message>) {
+        for m in msgs {
+            self.publish(m);
+        }
+    }
 }
 
 /// Terminal jobs produce nothing.
@@ -26,6 +35,8 @@ pub struct NoOutput;
 
 impl OutputSink for NoOutput {
     fn publish(&self, _msg: Message) {}
+
+    fn publish_batch(&self, _msgs: Vec<Message>) {}
 }
 
 /// A job: name, input/output topics, logic.

@@ -31,6 +31,11 @@ impl OutputSink for VtOutput {
     fn publish(&self, msg: Message) {
         self.vt.publish(msg);
     }
+
+    fn publish_batch(&self, msgs: Vec<Message>) {
+        // Batch stays intact through the producer pool to the broker.
+        self.vt.publish_batch(msgs);
+    }
 }
 
 /// One job running under the Reactive Liquid architecture.

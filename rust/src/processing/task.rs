@@ -69,8 +69,8 @@ impl Actor for TaskActor {
     fn receive(&mut self, env: Envelope, _ctx: &mut Ctx<Envelope>) {
         let start = self.clock.now();
         let outputs = self.processor.process(&env);
-        for m in outputs {
-            self.output.publish(m);
+        if !outputs.is_empty() {
+            self.output.publish_batch(outputs);
         }
         let end = self.clock.now();
         self.stats.record(end.saturating_sub(start).as_secs_f64());
@@ -113,13 +113,9 @@ impl TaskHandle {
 
 impl RouteTarget for TaskHandle {
     fn deliver(&self, env: Envelope) -> Result<(), (SendError, Envelope)> {
-        // Non-blocking so routers can spill to other tasks; reconstruct the
-        // envelope on failure from the clone we must take anyway (Arc bump).
-        let backup = env.clone();
-        match self.actor.try_tell(env) {
-            Ok(()) => Ok(()),
-            Err(e) => Err((e, backup)),
-        }
+        // Non-blocking so routers can spill to other tasks; the mailbox
+        // hands the envelope back on rejection, so no clone is needed.
+        self.actor.try_tell_back(env)
     }
 
     fn queue_depth(&self) -> usize {

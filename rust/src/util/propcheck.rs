@@ -44,8 +44,10 @@ impl Gen {
         (0..n).map(|_| f(self)).collect()
     }
 
-    /// Pick one of the given choices.
+    /// Pick one of the given choices. Panics (with a property-friendly
+    /// message, not the PRNG's opaque range assert) on an empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "Gen::pick on empty slice — generate a non-empty input first");
         let i = self.usize(0, xs.len());
         &xs[i]
     }
@@ -63,7 +65,8 @@ fn case_count(default_cases: usize) -> usize {
 }
 
 /// Run `prop` for `cases` randomized cases. Panics with the seed of the
-/// first failing case.
+/// first failing case. `RL_PROPCHECK_CASES=0` skips the property entirely
+/// (useful for bisecting a flaky suite without editing tests).
 pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
     let base = base_seed();
     let cases = case_count(cases);
@@ -116,6 +119,16 @@ mod tests {
             } else {
                 Ok(())
             }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "empty slice")]
+    fn pick_empty_slice_panics_clearly() {
+        check("pick-empty", 1, |g| {
+            let xs: [u8; 0] = [];
+            let _ = g.pick(&xs);
+            Ok(())
         });
     }
 

@@ -80,11 +80,45 @@ impl TaskRouter {
     /// i.e. backpressure up to the messaging layer).
     pub fn route(&self, env: Envelope) -> Result<(), RouteError> {
         let targets = self.targets.read().unwrap();
-        let n = targets.len();
-        if n == 0 {
+        if targets.is_empty() {
             return Err(RouteError::NoTargets);
         }
-        let start = match self.policy {
+        let start = self.pick_start(&targets);
+        match Self::try_deliver(&targets, start, env) {
+            None => Ok(()),
+            Some(_undelivered) => Err(RouteError::AllBusy),
+        }
+    }
+
+    /// Route a whole batch under a single target-list read lock, returning
+    /// the envelopes that could not be delivered (empty = all routed).
+    /// Callers retry the remainder after a backoff — the same backpressure
+    /// loop as [`TaskRouter::route`], amortized over the batch. Each
+    /// envelope still gets its own policy decision, so shortest-queue and
+    /// completion-time spread a batch over several tasks instead of
+    /// dumping it on one.
+    pub fn route_batch(&self, envs: Vec<Envelope>) -> Vec<Envelope> {
+        if envs.is_empty() {
+            return envs;
+        }
+        let targets = self.targets.read().unwrap();
+        if targets.is_empty() {
+            return envs;
+        }
+        let mut leftover = Vec::new();
+        for env in envs {
+            let start = self.pick_start(&targets);
+            if let Some(undelivered) = Self::try_deliver(&targets, start, env) {
+                leftover.push(undelivered);
+            }
+        }
+        leftover
+    }
+
+    /// Preferred target index for the next envelope, per policy.
+    fn pick_start(&self, targets: &[Arc<dyn RouteTarget>]) -> usize {
+        let n = targets.len();
+        match self.policy {
             RouterPolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
             RouterPolicy::ShortestQueue => {
                 let mut best = 0;
@@ -121,20 +155,28 @@ impl TaskRouter {
                 }
                 best
             }
-        };
-        // Preferred target, then linear fallback (skipping dead/full).
-        let mut env = env;
+        }
+    }
+
+    /// Preferred target, then linear fallback (skipping dead/full).
+    /// Returns the envelope when every target rejected it.
+    fn try_deliver(
+        targets: &[Arc<dyn RouteTarget>],
+        start: usize,
+        mut env: Envelope,
+    ) -> Option<Envelope> {
+        let n = targets.len();
         for k in 0..n {
             let t = &targets[(start + k) % n];
             if !t.is_alive() {
                 continue;
             }
             match t.deliver(env) {
-                Ok(()) => return Ok(()),
+                Ok(()) => return None,
                 Err((_err, returned)) => env = returned,
             }
         }
-        Err(RouteError::AllBusy)
+        Some(env)
     }
 }
 
@@ -276,6 +318,33 @@ mod tests {
         router.set_targets(vec![FakeTarget::new(3, 0.0), FakeTarget::new(4, 0.0)]);
         assert_eq!(router.total_depth(), 7);
         assert_eq!(router.target_count(), 2);
+    }
+
+    #[test]
+    fn route_batch_spreads_and_returns_leftovers() {
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let a = FakeTarget::with_capacity(0, 0.0, 3);
+        let b = FakeTarget::with_capacity(0, 0.0, 3);
+        router.set_targets(vec![a.clone(), b.clone()]);
+        // 8 envelopes into 6 total capacity: 6 delivered, 2 back.
+        let leftover = router.route_batch((0..8).map(env).collect());
+        assert_eq!(leftover.len(), 2);
+        assert_eq!(a.got.lock().unwrap().len() + b.got.lock().unwrap().len(), 6);
+        // The leftover envelopes are the undelivered ones, intact.
+        let mut offs: Vec<u64> = leftover.iter().map(|e| e.offset).collect();
+        offs.sort_unstable();
+        let mut seen: Vec<u64> = a.got.lock().unwrap().clone();
+        seen.extend(b.got.lock().unwrap().iter().copied());
+        seen.extend(offs.iter().copied());
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<u64>>(), "no envelope lost or duplicated");
+    }
+
+    #[test]
+    fn route_batch_no_targets_returns_everything() {
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let back = router.route_batch((0..4).map(env).collect());
+        assert_eq!(back.len(), 4);
     }
 
     #[test]

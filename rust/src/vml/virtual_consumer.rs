@@ -9,7 +9,7 @@
 //! and knows how to kill (crash) and respawn members, which is what the
 //! supervision service and the cluster failure injector drive.
 
-use super::router::{RouteError, TaskRouter};
+use super::router::TaskRouter;
 use crate::log_debug;
 use crate::messaging::Broker;
 use crate::metrics::PipelineMetrics;
@@ -85,43 +85,50 @@ impl VirtualConsumer {
         }
         log_debug!("vc", "'{}' consuming {}/{}", self.name, w.topic, w.group);
         while !self.stop.load(Ordering::SeqCst) {
-            let batch = consumer.poll(w.batch);
+            // Batch-first consume cycle: one poll_batch (one coordinator
+            // lock), one route_batch per retry round (one router lock),
+            // one commit_batch (one coordinator lock) — the per-message
+            // costs of Eq. 1's `n`-message cycle paid once per batch.
+            let mut batch = consumer.poll_batch(w.batch);
             if batch.is_empty() {
                 std::thread::sleep(Duration::from_millis(2));
                 continue;
             }
             let consumed_at = w.clock.now();
-            let mut max_next: Vec<(usize, u64)> = Vec::new();
-            for om in batch {
-                let env = Envelope::new(om.message, om.partition, om.offset, consumed_at);
-                // Route with retry: AllBusy = every task mailbox full →
-                // backpressure by waiting; NoTargets = job still starting.
-                // Envelope clones are refcount bumps, so retrying with a
-                // clone costs nothing on the happy path.
-                loop {
-                    match w.router.route(env.clone()) {
-                        Ok(()) => break,
-                        Err(RouteError::NoTargets) | Err(RouteError::AllBusy) => {
-                            if self.stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                    }
+            let n = batch.len() as u64;
+            let mut pending: Vec<Envelope> = std::mem::take(&mut batch.messages)
+                .into_iter()
+                .map(|om| Envelope::new(om.message, om.partition, om.offset, consumed_at))
+                .collect();
+            // Route with retry: a non-empty remainder means every task
+            // mailbox was full (backpressure by waiting) or the job is
+            // still starting (no targets yet). Undelivered envelopes come
+            // back by value, so nothing is cloned on any path.
+            loop {
+                pending = w.router.route_batch(pending);
+                if pending.is_empty() {
+                    break;
                 }
-                self.consumed.fetch_add(1, Ordering::Relaxed);
-                w.metrics.counters.inc("vml.consumed");
-                if let Some(e) = max_next.iter_mut().find(|(p, _)| *p == om.partition) {
-                    e.1 = e.1.max(om.offset + 1);
-                } else {
-                    max_next.push((om.partition, om.offset + 1));
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
                 }
+                std::thread::sleep(Duration::from_millis(2));
             }
+            if !pending.is_empty() {
+                // Stopping with unrouted messages: don't commit the batch;
+                // the next incarnation redelivers it (at-least-once).
+                break;
+            }
+            self.consumed.fetch_add(n, Ordering::Relaxed);
+            w.metrics.counters.add("vml.consumed", n);
             // Commit the batch: broker (group progress) + durable store
-            // (restart state). Committing *after* routing is at-least-once.
-            for (p, next) in max_next {
-                consumer.commit(p, next);
-                w.offsets.commit(&w.topic, p, next);
+            // (restart state). Committing *after* routing is at-least-once;
+            // a commit fenced by a concurrent rebalance is dropped and the
+            // batch's offsets are redelivered to their new owner.
+            if consumer.commit_batch(&batch) {
+                for &(p, next) in &batch.next_offsets {
+                    w.offsets.commit(&w.topic, p, next);
+                }
             }
         }
         consumer.close();

@@ -15,21 +15,28 @@ use crate::messaging::{Broker, Message, Producer};
 use crate::metrics::PipelineMetrics;
 use crate::reactive::elastic::ScalableTarget;
 use crate::util::clock::SharedClock;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-/// Actor that owns one broker producer.
+/// Actor that owns one broker producer. The mailbox unit is a *batch* of
+/// messages: one dequeue publishes the whole batch through
+/// [`Producer::send_messages`], so the broker-side lock costs are paid per
+/// batch, not per message.
 struct ProducerWorker {
     producer: Producer,
     metrics: Arc<PipelineMetrics>,
+    /// Pool-wide queued-*message* count (mailbox depths count batches).
+    queued: Arc<AtomicI64>,
 }
 
 impl Actor for ProducerWorker {
-    type Msg = Message;
+    type Msg = Vec<Message>;
 
-    fn receive(&mut self, msg: Message, _ctx: &mut Ctx<Message>) {
-        self.producer.send_message(msg);
-        self.metrics.counters.inc("vml.produced");
+    fn receive(&mut self, batch: Vec<Message>, _ctx: &mut Ctx<Vec<Message>>) {
+        let n = batch.len() as u64;
+        self.queued.fetch_sub(n as i64, Ordering::Relaxed);
+        self.producer.send_messages(batch);
+        self.metrics.counters.add("vml.produced", n);
     }
 }
 
@@ -40,11 +47,16 @@ pub struct VirtualProducerPool {
     topic: String,
     clock: SharedClock,
     metrics: Arc<PipelineMetrics>,
-    workers: RwLock<Vec<ActorRef<Message>>>,
+    workers: RwLock<Vec<ActorRef<Vec<Message>>>>,
     rr: AtomicUsize,
     next_id: AtomicUsize,
     bounds: Mutex<(usize, usize)>, // (min, max)
     mailbox_capacity: usize,
+    /// Queued messages across all workers. Mailbox depths count *batches*
+    /// since the batch-first refactor, so the elastic signal tracks
+    /// message counts here instead (transient small negatives are possible
+    /// in the enqueue/dequeue race; `depth` clamps them to 0).
+    queued: Arc<AtomicI64>,
 }
 
 impl VirtualProducerPool {
@@ -68,51 +80,76 @@ impl VirtualProducerPool {
             rr: AtomicUsize::new(0),
             next_id: AtomicUsize::new(0),
             bounds: Mutex::new((min.max(1), max.max(1))),
-            mailbox_capacity: 1024,
+            // Entries are batches, not messages; 256 queued batches per
+            // worker bounds buffering before publish_batch blocks.
+            mailbox_capacity: 256,
+            queued: Arc::new(AtomicI64::new(0)),
         });
         pool.scale_to(initial.clamp(min.max(1), max.max(1)));
         pool
     }
 
-    fn spawn_worker(&self) -> ActorRef<Message> {
+    fn spawn_worker(&self) -> ActorRef<Vec<Message>> {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let path = format!("vp:{}:{}", self.topic, id);
         let broker = self.broker.clone();
         let topic = self.topic.clone();
         let clock = self.clock.clone();
         let metrics = self.metrics.clone();
+        let queued = self.queued.clone();
         self.system.spawn(&path, self.mailbox_capacity, move || ProducerWorker {
             producer: Producer::new(&broker, &topic, clock.clone()),
             metrics: metrics.clone(),
+            queued: queued.clone(),
         })
     }
 
-    /// Hand a message to the pool: round-robin over workers, spilling to
+    /// Hand one message to the pool (a one-element batch — see
+    /// [`VirtualProducerPool::publish_batch`]).
+    pub fn publish(&self, msg: Message) {
+        self.publish_batch(vec![msg]);
+    }
+
+    /// Hand a batch to the pool: round-robin over workers, spilling to
     /// the next worker when one is at capacity. If every worker is full
     /// (or the pool is momentarily empty during a resize), blocks until
-    /// capacity frees up — backpressure toward the tasks. Message clones
-    /// are refcount bumps.
-    pub fn publish(&self, msg: Message) {
+    /// capacity frees up — backpressure toward the tasks. The batch stays
+    /// together through one worker's mailbox so the broker publish is a
+    /// single [`Producer::send_messages`] call; no message is cloned on
+    /// any path (rejected sends hand the batch back).
+    pub fn publish_batch(&self, batch: Vec<Message>) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut pending = Some(batch);
         loop {
             {
                 let workers = self.workers.read().unwrap();
                 let n = workers.len();
                 if n > 0 {
                     let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                    let mut batch = pending.take().expect("pending batch present");
                     for k in 0..n {
-                        if workers[(start + k) % n].try_tell(msg.clone()).is_ok() {
-                            return;
+                        let len = batch.len() as i64;
+                        match workers[(start + k) % n].try_tell_back(batch) {
+                            Ok(()) => {
+                                self.queued.fetch_add(len, Ordering::Relaxed);
+                                return;
+                            }
+                            Err((_err, back)) => batch = back,
                         }
                     }
+                    pending = Some(batch);
                 }
             }
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
     }
 
-    /// Total messages queued at the workers (elastic signal).
+    /// Total messages queued at the workers (elastic signal) — message
+    /// units, even though each mailbox entry is a whole batch.
     pub fn depth(&self) -> usize {
-        self.workers.read().unwrap().iter().map(|w| w.mailbox_depth()).sum()
+        self.queued.load(Ordering::Relaxed).max(0) as usize
     }
 
     pub fn stop_all(&self) {
@@ -194,6 +231,33 @@ mod tests {
         let topic = broker.topic("out").unwrap();
         assert!(wait_until(Duration::from_secs(3), || topic.total_messages() == 20));
         assert_eq!(metrics.counters.get("vml.produced"), 20);
+        pool.stop_all();
+        system.shutdown();
+    }
+
+    #[test]
+    fn publish_batch_lands_everything() {
+        let (system, broker, metrics) = fixture(3);
+        let pool = VirtualProducerPool::start(
+            &system,
+            &broker,
+            "out",
+            real_clock(),
+            metrics.clone(),
+            2,
+            1,
+            4,
+        );
+        pool.publish_batch((0..50u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        pool.publish_batch(Vec::new()); // no-op
+        let topic = broker.topic("out").unwrap();
+        assert!(wait_until(Duration::from_secs(3), || topic.total_messages() == 50));
+        assert_eq!(metrics.counters.get("vml.produced"), 50);
+        assert!(
+            wait_until(Duration::from_secs(1), || pool.depth() == 0),
+            "queued-message gauge drains to 0, got {}",
+            pool.depth()
+        );
         pool.stop_all();
         system.shutdown();
     }

@@ -103,6 +103,13 @@ impl VirtualTopic {
         self.producer_pool.publish(msg);
     }
 
+    /// Publish a whole batch via the virtual producer group — the batch
+    /// travels intact to one producer worker and hits the broker as a
+    /// single [`publish_batch`](crate::messaging::broker::Topic::publish_batch).
+    pub fn publish_batch(&self, msgs: Vec<Message>) {
+        self.producer_pool.publish_batch(msgs);
+    }
+
     pub fn consumer_group(&self, job: &str) -> Option<Arc<VirtualConsumerGroup>> {
         self.consumer_groups.lock().unwrap().get(job).cloned()
     }

@@ -138,6 +138,139 @@ fn prop_partition_order_preserved() {
     });
 }
 
+/// Batched publish is observably equivalent to per-message publish: a key
+/// never changes partition (within or across batches), and every
+/// partition's log replays its share of each batch in input order.
+#[test]
+fn prop_publish_batch_preserves_key_partition_and_order() {
+    check("publish-batch-order", 40, |g: &mut Gen| {
+        let partitions = g.usize(1, 6);
+        let broker = Broker::new();
+        broker.create_topic("t", partitions);
+        let topic = broker.topic("t").unwrap();
+        // A few sequential batches of mixed keyed/keyless messages; the
+        // payload byte is a global input sequence number.
+        let mut seq = 0u8;
+        let mut key_partition: std::collections::HashMap<u64, usize> =
+            std::collections::HashMap::new();
+        let mut expected: Vec<Vec<u8>> = vec![Vec::new(); partitions];
+        for _ in 0..g.usize(1, 5) {
+            let len = g.usize(0, 40);
+            let msgs: Vec<Message> = (0..len)
+                .map(|_| {
+                    let key = if g.bool() { Some(g.u64() % 5) } else { None };
+                    let m = Message::new(key, vec![seq], 0);
+                    seq = seq.wrapping_add(1);
+                    m
+                })
+                .collect();
+            let placed = topic.publish_batch(msgs.clone());
+            prop_assert!(placed.len() == msgs.len(), "one placement per message");
+            for (m, &(p, _off)) in msgs.iter().zip(&placed) {
+                if let Some(k) = m.key {
+                    if let Some(prev) = key_partition.insert(k, p) {
+                        prop_assert!(prev == p, "key {k} moved partition {prev} → {p}");
+                    }
+                }
+                expected[p].push(m.payload[0]);
+            }
+        }
+        for (p, want) in expected.iter().enumerate() {
+            let got: Vec<u8> =
+                topic.read(p, 0, 10_000).into_iter().map(|(_, m)| m.payload[0]).collect();
+            prop_assert!(&got == want, "partition {p}: {got:?} != {want:?}");
+        }
+        Ok(())
+    });
+}
+
+/// Batched consume under random mid-batch rebalances: a commit from a
+/// stale generation is always fenced, a fresh one always applies, and the
+/// group still drains every offset of every partition (at-least-once,
+/// no gaps) through poll_batch/commit_batch alone.
+#[test]
+fn prop_batched_consume_at_least_once_with_fencing() {
+    check("batched-at-least-once", 30, |g: &mut Gen| {
+        let partitions = g.usize(1, 4);
+        let broker = Broker::new();
+        broker.create_topic("t", partitions);
+        let topic = broker.topic("t").unwrap();
+        let total = g.usize(1, 150);
+        topic.publish_batch(
+            (0..total).map(|i| Message::new(None, vec![(i % 256) as u8], 0)).collect(),
+        );
+        let mut seen: Vec<Vec<u64>> = vec![Vec::new(); partitions];
+        let mut rounds = 0;
+        loop {
+            rounds += 1;
+            if rounds > 300 {
+                return Err("did not drain in 300 rounds".into());
+            }
+            let consumer = broker.subscribe("t", "g");
+            for _ in 0..g.usize(1, 6) {
+                let batch = consumer.poll_batch(g.usize(1, 33));
+                if batch.is_empty() {
+                    break;
+                }
+                for om in &batch.messages {
+                    seen[om.partition].push(om.offset);
+                }
+                if g.bool() {
+                    // Churn between poll and commit: the commit must be
+                    // fenced, now and after any further rebalance.
+                    let other = broker.subscribe("t", "g");
+                    prop_assert!(!consumer.commit_batch(&batch), "stale commit not fenced");
+                    other.close();
+                    prop_assert!(!consumer.commit_batch(&batch), "fenced again after re-churn");
+                } else {
+                    prop_assert!(consumer.commit_batch(&batch), "fresh commit must apply");
+                }
+            }
+            consumer.close();
+            if broker.group_lag("t", "g") == 0 {
+                break;
+            }
+        }
+        for (p, s) in seen.iter().enumerate() {
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            let end = topic.end_offsets()[p];
+            let expect: Vec<u64> = (0..end).collect();
+            prop_assert!(d == expect, "partition {p}: {d:?} != 0..{end}");
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic rebalance walk-through: committed batches stick, the
+/// fenced batch is redelivered from the committed offset once the group
+/// settles.
+#[test]
+fn poll_batch_rebalance_redelivers_fenced_messages() {
+    let broker = Broker::new();
+    broker.create_topic("t", 1);
+    let topic = broker.topic("t").unwrap();
+    topic.publish_batch((0..10u8).map(|i| Message::new(None, vec![i], 0)).collect());
+
+    let c1 = broker.subscribe("t", "g");
+    let b1 = c1.poll_batch(4);
+    assert_eq!(b1.len(), 4);
+    assert!(c1.commit_batch(&b1), "no rebalance yet: commit applies");
+
+    let b2 = c1.poll_batch(4);
+    assert_eq!(b2.len(), 4);
+    let c2 = broker.subscribe("t", "g"); // rebalance before the commit
+    assert!(!c1.commit_batch(&b2), "stale-generation commit fenced");
+    c2.close(); // c1 owns the partition again (generation bumps again)
+
+    let b3 = c1.poll_batch(10);
+    assert_eq!(b3.messages[0].offset, 4, "redelivery resumes at the committed offset");
+    assert_eq!(b3.len(), 6);
+    assert!(c1.commit_batch(&b3));
+    assert_eq!(broker.group_lag("t", "g"), 0);
+}
+
 /// Keyed messages always land in the same partition (stable hashing).
 #[test]
 fn prop_keyed_routing_stable() {

@@ -1,0 +1,116 @@
+//! Minimal, API-compatible subset of the `anyhow` crate for the offline
+//! build environment (no registry access — see the workspace README).
+//!
+//! Provides exactly what `reactive_liquid` uses: [`Error`], the
+//! [`Result`] alias, the [`anyhow!`] macro, and the [`Context`] extension
+//! trait on `Result` and `Option`. Errors are plain message strings;
+//! context is prepended `"{context}: {cause}"`, matching how the real
+//! crate renders its chains with `{:#}`.
+
+use std::fmt;
+
+/// A string-backed error value.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(message.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// `Result` defaulted to [`Error`], as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a displayable value, or format
+/// arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Attach context to failures, turning them into [`Error`]s.
+pub trait Context<T> {
+    /// Wrap the failure with `context`.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the context lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Debug> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{context}: {e:?}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e:?}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("boom"))
+    }
+
+    #[test]
+    fn macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+        assert_eq!(anyhow!("{} {}", 1, "two").to_string(), "1 two");
+        assert!(fails().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io"));
+        let e = r.context("reading file").unwrap_err();
+        assert!(e.to_string().starts_with("reading file: "));
+
+        let o: Option<u32> = None;
+        let e = o.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("k={}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "k=3");
+    }
+}

@@ -1,0 +1,178 @@
+//! Stub of the `xla-rs` PJRT bindings for the offline build environment.
+//!
+//! The real crate links `libxla_extension`; this container has neither the
+//! shared library nor registry access, so this in-tree stand-in exposes the
+//! same type/method surface and fails fast at the only entry point —
+//! [`PjRtClient::cpu`] — with a recognizable error. Every caller in
+//! `reactive_liquid` already handles that error by falling back to the
+//! scalar CPU path (see `tcmm::backend::XlaBackend`), so the stack runs
+//! end-to-end without PJRT; swapping the real crate back in via
+//! `Cargo.toml` re-enables the AOT kernels with no source changes.
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Stub error: every operation reports the runtime as unavailable.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(op: &str) -> Self {
+        Error(format!("{op}: xla stub (PJRT unavailable in this build)"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtype of a literal/buffer (subset of the real enum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    U64,
+    F32,
+    F64,
+}
+
+/// Types extractable from a [`Literal`] with [`Literal::to_vec`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Host-side tensor value.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn element_type(&self) -> Result<ElementType> {
+        Err(Error::unavailable("Literal::element_type"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-side buffer returned by [`PjRtLoadedExecutable::execute`].
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// The generic parameter mirrors the real API (`execute::<Literal>`);
+    /// the stub ignores it.
+    pub fn execute<L>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = PhantomData::<fn() -> L>;
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client. The stub cannot create one — [`PjRtClient::cpu`] is the
+/// single failure point the rest of the stack gates on.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = format!("{err}");
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("PjRtClient::cpu"), "{msg}");
+    }
+
+    #[test]
+    fn literal_ops_fail_gracefully() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(lit.element_type().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
