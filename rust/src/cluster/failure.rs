@@ -9,14 +9,16 @@
 
 use super::node::Cluster;
 use crate::log_info;
+use crate::sim::runtime::{ThreadTicker, TickHandle, Ticker};
 use crate::util::clock::SharedClock;
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// Drives per-node epoch failures on a background thread.
+/// Drives per-node epoch failures from a periodic tick — a background
+/// thread in production, a discrete virtual-time event when attached to a
+/// [`SimScheduler`](crate::sim::SimScheduler).
 pub struct FailureInjector {
     cluster: Arc<Cluster>,
     clock: SharedClock,
@@ -25,7 +27,7 @@ pub struct FailureInjector {
     prob: f64,
     rng: Mutex<Pcg32>,
     running: Arc<AtomicBool>,
-    handle: Mutex<Option<JoinHandle<()>>>,
+    tick: Mutex<Option<TickHandle>>,
     /// (node, fail_time) log for reports.
     events: Mutex<Vec<(usize, Duration)>>,
     /// Per-node schedule: when the node's next roll is due (if up) or when
@@ -60,7 +62,7 @@ impl FailureInjector {
             prob,
             rng: Mutex::new(Pcg32::new(seed)),
             running: Arc::new(AtomicBool::new(false)),
-            handle: Mutex::new(None),
+            tick: Mutex::new(None),
             events: Mutex::new(Vec::new()),
             schedule: Mutex::new(vec![NodeSchedule::RollAt(clock.now() + epoch); n]),
         })
@@ -111,27 +113,40 @@ impl FailureInjector {
         self.running.load(Ordering::SeqCst)
     }
 
+    /// Polling granularity of the real-time injector thread.
+    pub const DEFAULT_POLL: Duration = Duration::from_millis(20);
+
+    /// Start the injector against real time (a background thread).
     pub fn start(self: &Arc<Self>) {
+        self.start_on(&ThreadTicker, Self::DEFAULT_POLL);
+    }
+
+    /// Register the injector's pass with any [`Ticker`] at the given
+    /// granularity — a [`ThreadTicker`] for production, a
+    /// [`SimScheduler`](crate::sim::SimScheduler) for deterministic
+    /// virtual-time runs. Idempotent until [`FailureInjector::stop`].
+    pub fn start_on(self: &Arc<Self>, ticker: &dyn Ticker, period: Duration) {
+        // The slot lock spans flag + registration so a concurrent stop()
+        // either runs before this start (a no-op) or sees the handle.
+        let mut slot = self.tick.lock().unwrap();
         if self.running.swap(true, Ordering::SeqCst) {
             return;
         }
         let me = self.clone();
-        let handle = std::thread::Builder::new()
-            .name("failure-injector".into())
-            .spawn(move || {
-                while me.running.load(Ordering::SeqCst) {
-                    me.step();
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-            })
-            .expect("spawn failure injector");
-        *self.handle.lock().unwrap() = Some(handle);
+        *slot = Some(ticker.every(
+            "failure-injector",
+            period,
+            Box::new(move || {
+                me.step();
+            }),
+        ));
     }
 
     pub fn stop(&self) {
+        let mut slot = self.tick.lock().unwrap();
         self.running.store(false, Ordering::SeqCst);
-        if let Some(h) = self.handle.lock().unwrap().take() {
-            let _ = h.join();
+        if let Some(h) = slot.take() {
+            h.cancel();
         }
     }
 }
@@ -222,6 +237,29 @@ mod tests {
         inj.start(); // restartable after stop
         assert!(inj.is_running());
         inj.stop();
+    }
+
+    #[test]
+    fn injector_on_sim_scheduler_is_deterministic() {
+        let run = || {
+            let sched = crate::sim::SimScheduler::new(1);
+            let cluster = Cluster::new(3);
+            let inj = FailureInjector::new(
+                cluster,
+                sched.clock(),
+                Duration::from_secs(10),
+                Duration::from_secs(5),
+                0.5,
+                99,
+            );
+            inj.start_on(&sched, Duration::from_secs(1));
+            sched.run_until(Duration::from_secs(200));
+            inj.stop();
+            inj.events()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same seed, same virtual-time failure schedule");
+        assert!(!a.is_empty(), "p=0.5 over ~20 epochs × 3 nodes fires");
     }
 
     #[test]

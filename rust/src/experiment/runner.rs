@@ -20,6 +20,46 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Paces fixed-size bursts at a target average message rate against real
+/// time. High rates (≥ 500 msg/s) are fed as multi-message bursts on a
+/// proportional interval — same average rate, one broker publish per
+/// burst. After a stall (> 100 ms behind schedule) the pacer re-anchors
+/// instead of burst-compensating.
+pub struct BurstPacer {
+    /// Messages per burst.
+    pub burst: usize,
+    per_burst: Duration,
+    next: std::time::Instant,
+}
+
+impl BurstPacer {
+    pub fn new(rate: u64) -> Self {
+        assert!(rate > 0, "BurstPacer needs a positive rate");
+        let burst = (rate / 500).max(1) as usize;
+        BurstPacer {
+            burst,
+            per_burst: Duration::from_secs_f64(burst as f64 / rate as f64),
+            next: std::time::Instant::now(),
+        }
+    }
+
+    /// Interval between bursts at the target rate.
+    pub fn interval(&self) -> Duration {
+        self.per_burst
+    }
+
+    /// Sleep until the next burst is due.
+    pub fn pace(&mut self) {
+        self.next += self.per_burst;
+        let now = std::time::Instant::now();
+        if self.next > now {
+            std::thread::sleep(self.next - now);
+        } else if now - self.next > Duration::from_millis(100) {
+            self.next = now; // fell behind; don't burst-compensate
+        }
+    }
+}
+
 /// Run one experiment to completion and collect the §4.3 metrics.
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
     cfg.validate().expect("invalid experiment config");
@@ -33,10 +73,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
 
     // --- Ingest thread: synthetic T-Drive feed into the trajectory topic.
     let stop_ingest = Arc::new(AtomicBool::new(false));
+    // Set once the drain-mode pass has published everything (the run loop's
+    // watermark gate waits for it before checking lags).
+    let ingest_done = Arc::new(AtomicBool::new(false));
     let ingest_handle = {
         let broker = broker.clone();
         let clock = clock.clone();
         let stop = stop_ingest.clone();
+        let done = ingest_done.clone();
         let wl = cfg.workload;
         let seed = cfg.seed;
         std::thread::Builder::new()
@@ -57,34 +101,25 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                         }
                         producer.send_batch(chunk.iter().map(|p| (None, p.clone())).collect());
                     }
+                    done.store(true, Ordering::SeqCst);
                     return;
                 }
                 if dataset.is_empty() {
+                    done.store(true, Ordering::SeqCst);
                     return;
                 }
-                // Paced, cycling the dataset until stopped. High rates
-                // (≥ 500 msg/s) are fed as small bursts on a proportional
-                // interval — same average rate, one broker publish per
-                // burst instead of per message.
-                let burst = (wl.ingest_rate / 500).max(1);
-                let per_burst = Duration::from_secs_f64(burst as f64 / wl.ingest_rate as f64);
-                let mut next = std::time::Instant::now();
+                // Paced, cycling the dataset until stopped.
+                let mut pacer = BurstPacer::new(wl.ingest_rate);
                 let mut payloads = dataset.iter().cycle();
                 loop {
                     if stop.load(Ordering::Relaxed) {
                         return;
                     }
-                    let batch: Vec<(Option<u64>, Vec<u8>)> = (0..burst)
+                    let batch: Vec<(Option<u64>, Vec<u8>)> = (0..pacer.burst)
                         .map(|_| (None, payloads.next().expect("cycle non-empty").clone()))
                         .collect();
                     producer.send_batch(batch);
-                    next += per_burst;
-                    let now = std::time::Instant::now();
-                    if next > now {
-                        std::thread::sleep(next - now);
-                    } else if now - next > Duration::from_millis(100) {
-                        next = now; // fell behind; don't burst-compensate
-                    }
+                    pacer.pace();
                 }
             })
             .expect("spawn ingest")
@@ -260,11 +295,49 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
     );
     injector.start();
 
-    // --- Run.
+    // --- Run. Paced runs hold the full experiment window (throughput is
+    // measured against it). Drain runs (ingest_rate == 0) gate on
+    // watermarks instead of sleeping out the clock: once the ingest pass
+    // has finished, every consumer group's lag is zero, and the processed
+    // count has been stable for a settle window, the pipeline is quiescent
+    // and the run ends early — the configured duration stays as a hard
+    // upper bound, so a stall can never make this slower than before.
     log_info!("experiment", "running {} for {:?}", cfg.arch.label(), cfg.duration());
     let deadline = std::time::Instant::now() + cfg.duration();
+    let drain_mode = cfg.workload.ingest_rate == 0;
+    let mut stable_checks = 0u32;
+    let mut last_processed = 0u64;
     while std::time::Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(50));
+        if !drain_mode || !ingest_done.load(Ordering::SeqCst) {
+            continue;
+        }
+        // Committed-but-unprocessed work hides from the lag watermark
+        // (virtual consumers commit after *routing*, not processing), so
+        // also require the task mailboxes and producer pools to be empty.
+        let pipeline_idle = match &arch {
+            // Liquid tasks commit only after processing; lag covers them.
+            Arch::Liquid { .. } => true,
+            Arch::Reactive { jobs, vts, .. } => {
+                use crate::reactive::elastic::ScalableTarget;
+                jobs.iter().all(|j| j.pool.queue_depth() == 0)
+                    && vts.iter().all(|vt| vt.producer_depth() == 0)
+            }
+        };
+        let processed = metrics.processed.total();
+        if processed > 0
+            && processed == last_processed
+            && pipeline_idle
+            && broker.total_lag() == 0
+        {
+            stable_checks += 1;
+            if stable_checks >= 10 {
+                break; // ~500 ms fully quiet: drained
+            }
+        } else {
+            stable_checks = 0;
+            last_processed = processed;
+        }
     }
 
     // --- Teardown (order matters: stop failures first, then flow).
@@ -328,6 +401,16 @@ mod tests {
         cfg.backend = TcmmBackend::Cpu;
         cfg.elastic.max_workers = 8;
         cfg
+    }
+
+    #[test]
+    fn burst_pacer_sizes_bursts_proportionally() {
+        let p = BurstPacer::new(100);
+        assert_eq!(p.burst, 1, "below 500 msg/s: single-message bursts");
+        assert!((p.interval().as_secs_f64() - 0.01).abs() < 1e-9);
+        let p = BurstPacer::new(4000);
+        assert_eq!(p.burst, 8);
+        assert!((p.interval().as_secs_f64() - 8.0 / 4000.0).abs() < 1e-9);
     }
 
     #[test]

@@ -23,7 +23,12 @@
 //!   with its hot loop compiled ahead-of-time from JAX/Pallas and executed
 //!   through PJRT ([`runtime`]);
 //! - [`metrics`] and an [`experiment`] harness that regenerates every
-//!   figure in the paper's evaluation section.
+//!   figure in the paper's evaluation section;
+//! - a deterministic **virtual-time simulation runtime** ([`sim`]): a
+//!   seeded discrete-event scheduler that drives the elastic controller,
+//!   failure detector, and failure injector on simulated time, plus a
+//!   scenario DSL and a 13-entry chaos matrix that replays the Fig. 8–11
+//!   settings in milliseconds with byte-identical traces per seed.
 //!
 //! # Batch-first data plane
 //!
@@ -65,6 +70,7 @@ pub mod metrics;
 pub mod processing;
 pub mod reactive;
 pub mod runtime;
+pub mod sim;
 pub mod tcmm;
 pub mod trajectory;
 pub mod util;

@@ -52,6 +52,13 @@ impl Topic {
         self.end_offsets().iter().sum()
     }
 
+    /// Names of consumer groups coordinated on this topic (sorted).
+    pub fn group_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.groups.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
     /// Partition a message lands in: key hash when keyed, else the next
     /// round-robin slot.
     fn pick_partition(&self, key: Option<u64>) -> usize {
@@ -246,6 +253,22 @@ impl Broker {
                 .map(|(p, &e)| e.saturating_sub(g.committed(p)))
                 .sum(),
         }
+    }
+
+    /// Sum of [`Broker::group_lag`] over every (topic, group) pair — zero
+    /// means every group has consumed and committed everything published.
+    /// This is the drain watermark the experiment runner gates on.
+    pub fn total_lag(&self) -> u64 {
+        self.topic_names()
+            .iter()
+            .map(|t| {
+                self.topic(t)
+                    .map(|topic| {
+                        topic.group_names().iter().map(|g| self.group_lag(t, g)).sum::<u64>()
+                    })
+                    .unwrap_or(0)
+            })
+            .sum()
     }
 }
 

@@ -8,10 +8,10 @@
 
 use crate::config::ElasticConfig;
 use crate::log_debug;
+use crate::sim::runtime::{ThreadTicker, TickHandle, Ticker};
 use crate::util::clock::SharedClock;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// A pool the elastic service can observe and resize.
@@ -53,7 +53,11 @@ pub fn decide(cfg: &ElasticConfig, depth: usize, workers: usize) -> ScaleDecisio
     ScaleDecision::Hold
 }
 
-/// Drives one [`ScalableTarget`] from a monitor thread.
+/// Drives one [`ScalableTarget`] from a periodic tick: a monitor thread in
+/// production ([`ThreadTicker`]), a discrete event on virtual time when
+/// attached to a [`SimScheduler`].
+///
+/// [`SimScheduler`]: crate::sim::SimScheduler
 pub struct ElasticController {
     cfg: ElasticConfig,
     clock: SharedClock,
@@ -61,7 +65,7 @@ pub struct ElasticController {
     name: String,
     last_action: Mutex<Option<Duration>>,
     running: Arc<AtomicBool>,
-    monitor: Mutex<Option<JoinHandle<()>>>,
+    tick: Mutex<Option<TickHandle>>,
     /// (time, new_size) history for the scaling-behaviour figures.
     history: Mutex<Vec<(Duration, usize)>>,
 }
@@ -80,7 +84,7 @@ impl ElasticController {
             name: name.to_string(),
             last_action: Mutex::new(None),
             running: Arc::new(AtomicBool::new(false)),
-            monitor: Mutex::new(None),
+            tick: Mutex::new(None),
             history: Mutex::new(Vec::new()),
         })
     }
@@ -117,27 +121,38 @@ impl ElasticController {
         self.history.lock().unwrap().clone()
     }
 
+    /// Start the monitor against real time (a background thread).
     pub fn start(self: &Arc<Self>) {
+        self.start_on(&ThreadTicker);
+    }
+
+    /// Register the monitor tick with any [`Ticker`] — a [`ThreadTicker`]
+    /// for production, a [`SimScheduler`] for deterministic virtual-time
+    /// runs. Idempotent until [`ElasticController::stop`].
+    ///
+    /// [`SimScheduler`]: crate::sim::SimScheduler
+    pub fn start_on(self: &Arc<Self>, ticker: &dyn Ticker) {
+        // The slot lock spans flag + registration so a concurrent stop()
+        // either runs before this start (a no-op) or sees the handle.
+        let mut slot = self.tick.lock().unwrap();
         if self.running.swap(true, Ordering::SeqCst) {
             return;
         }
         let me = self.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("elastic:{}", self.name))
-            .spawn(move || {
-                while me.running.load(Ordering::SeqCst) {
-                    me.step();
-                    std::thread::sleep(me.cfg.check_interval);
-                }
-            })
-            .expect("spawn elastic monitor");
-        *self.monitor.lock().unwrap() = Some(handle);
+        *slot = Some(ticker.every(
+            &format!("elastic:{}", self.name),
+            self.cfg.check_interval,
+            Box::new(move || {
+                me.step();
+            }),
+        ));
     }
 
     pub fn stop(&self) {
+        let mut slot = self.tick.lock().unwrap();
         self.running.store(false, Ordering::SeqCst);
-        if let Some(h) = self.monitor.lock().unwrap().take() {
-            let _ = h.join();
+        if let Some(h) = slot.take() {
+            h.cancel();
         }
     }
 }
@@ -151,6 +166,7 @@ impl Drop for ElasticController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::SimScheduler;
     use crate::util::clock::ManualClock;
     use std::sync::atomic::AtomicUsize;
 
@@ -222,6 +238,85 @@ mod tests {
         assert_eq!(ctl.step(), ScaleDecision::In(7));
         assert_eq!(pool.worker_count(), 7);
         assert_eq!(ctl.history().len(), 2);
+    }
+
+    #[test]
+    fn hysteresis_band_boundaries_hold_exactly() {
+        let c = cfg(); // high 10, low 2
+        // per_worker == high watermark exactly: Hold (scale-out is strict).
+        assert_eq!(decide(&c, 10 * 4, 4), ScaleDecision::Hold);
+        // One notch above the high watermark: Out.
+        assert_eq!(decide(&c, 11 * 4, 4), ScaleDecision::Out(5));
+        // per_worker == low watermark exactly: Hold (scale-in is strict).
+        assert_eq!(decide(&c, 2 * 4, 4), ScaleDecision::Hold);
+        // Just below the low watermark: In one step.
+        assert_eq!(decide(&c, 2 * 4 - 1, 4), ScaleDecision::In(3));
+    }
+
+    #[test]
+    fn zero_worker_floor_scale_in_and_recovery() {
+        let mut c = cfg();
+        c.min_workers = 0;
+        let clock = Arc::new(ManualClock::new());
+        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(0) });
+        let ctl = ElasticController::new("floor", c, clock.clone(), pool.clone());
+        assert_eq!(ctl.step(), ScaleDecision::In(0));
+        assert_eq!(pool.worker_count(), 0, "zero-worker floor reached");
+        // Load arrives while parked at zero: scale-out resumes from nothing.
+        clock.advance(Duration::from_millis(60));
+        pool.depth.store(25, Ordering::SeqCst);
+        assert_eq!(ctl.step(), ScaleDecision::Out(3), "ceil(25/10) from a cold pool");
+        assert_eq!(pool.worker_count(), 3);
+    }
+
+    #[test]
+    fn cooldown_holds_pending_scale_on_sim_scheduler() {
+        let sched = SimScheduler::new(11);
+        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(95) });
+        let ctl = ElasticController::new("sim-cooldown", cfg(), sched.clock(), pool.clone());
+        ctl.start_on(&sched);
+        // First evaluation at t = 5 ms (one check interval) scales out.
+        sched.run_until(Duration::from_millis(5));
+        assert_eq!(pool.worker_count(), 8);
+        // Load vanishes immediately, but scale-in is held by the cooldown
+        // (50 ms from the action at t = 5 ms).
+        pool.depth.store(0, Ordering::SeqCst);
+        sched.run_until(Duration::from_millis(54));
+        assert_eq!(pool.worker_count(), 8, "held during cooldown");
+        sched.run_until(Duration::from_millis(60));
+        assert_eq!(pool.worker_count(), 7, "released once the cooldown expires");
+        ctl.stop();
+        let h = ctl.history();
+        assert_eq!(h.len(), 2);
+        assert!(
+            h[1].0.saturating_sub(h[0].0) >= cfg().cooldown,
+            "actions separated by at least the cooldown: {h:?}"
+        );
+    }
+
+    #[test]
+    fn sim_scheduler_histories_are_deterministic() {
+        let run = || {
+            let sched = SimScheduler::new(5);
+            let pool =
+                Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(95) });
+            let ctl = ElasticController::new("det", cfg(), sched.clock(), pool.clone());
+            ctl.start_on(&sched);
+            let p = pool.clone();
+            sched.schedule_at(Duration::from_millis(100), move |_| {
+                p.depth.store(0, Ordering::SeqCst);
+            });
+            let p = pool.clone();
+            sched.schedule_at(Duration::from_millis(200), move |_| {
+                p.depth.store(300, Ordering::SeqCst);
+            });
+            sched.run_until(Duration::from_millis(400));
+            ctl.stop();
+            ctl.history()
+        };
+        let a = run();
+        assert_eq!(a, run(), "identical virtual-time scaling histories");
+        assert!(a.len() >= 3, "out, in, out again across the phases: {a:?}");
     }
 
     #[test]

@@ -199,6 +199,76 @@ mod tests {
     }
 
     #[test]
+    fn suspect_threshold_crossing_is_exact_on_sim_clock() {
+        let clock = Arc::new(crate::sim::SimClock::new());
+        let d = HeartbeatDetector::new(clock.clone(), Duration::from_secs(2));
+        d.heartbeat("n");
+        clock.advance_to(Duration::from_secs(2));
+        assert!(!d.is_suspected("n"), "exactly at the timeout: not yet suspected");
+        clock.advance_to(Duration::from_secs(2) + Duration::from_nanos(1));
+        assert!(d.is_suspected("n"), "one tick past the timeout: suspected");
+        d.heartbeat("n"); // heartbeat recovery clears suspicion
+        assert!(!d.is_suspected("n"));
+    }
+
+    #[test]
+    fn no_false_suspects_under_jittered_but_alive_heartbeats() {
+        use crate::sim::SimScheduler;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let sched = SimScheduler::new(7);
+        let d = Arc::new(HeartbeatDetector::new(sched.clock(), Duration::from_secs(3)));
+        d.heartbeat("n0");
+        // Heartbeats every 1 s ± 20 % (seeded jitter): never past the 3 s
+        // timeout, so two minutes of virtual time must produce zero
+        // suspicion at any sampling instant.
+        let det = d.clone();
+        let beats = sched.schedule_every_jittered(Duration::from_secs(1), 0.2, move |_| {
+            det.heartbeat("n0");
+        });
+        let det = d.clone();
+        let ever_suspected = Arc::new(AtomicBool::new(false));
+        let flag = ever_suspected.clone();
+        sched.schedule_every(Duration::from_millis(500), move |_| {
+            if det.is_suspected("n0") {
+                flag.store(true, Ordering::SeqCst);
+            }
+        });
+        sched.run_for(Duration::from_secs(120));
+        assert!(
+            !ever_suspected.load(Ordering::SeqCst),
+            "jittered-but-alive heartbeats must never be suspected"
+        );
+        // Silence the component: the threshold crossing fires.
+        beats.cancel();
+        sched.run_for(Duration::from_secs(10));
+        assert!(d.is_suspected("n0"), "silent past the timeout");
+        // Recovery heals it.
+        d.heartbeat("n0");
+        assert!(!d.is_suspected("n0"));
+    }
+
+    #[test]
+    fn phi_accrual_under_sim_scheduler_grows_on_silence() {
+        use crate::sim::SimScheduler;
+        let sched = SimScheduler::new(13);
+        let d = Arc::new(PhiAccrualDetector::new(
+            sched.clock(),
+            16,
+            Duration::from_millis(50),
+        ));
+        let det = d.clone();
+        let beats = sched.schedule_every(Duration::from_secs(1), move |_| {
+            det.heartbeat("n");
+        });
+        sched.run_for(Duration::from_secs(30));
+        assert!(d.phi("n") < 3.0, "regular beats keep phi low, got {}", d.phi("n"));
+        beats.cancel();
+        sched.run_for(Duration::from_secs(8));
+        assert!(d.phi("n") > 8.0, "silence drives phi up, got {}", d.phi("n"));
+        assert!(d.is_suspected("n", 8.0));
+    }
+
+    #[test]
     fn phi_tolerates_jittery_heartbeats() {
         let clock = Arc::new(ManualClock::new());
         let d = PhiAccrualDetector::new(clock.clone(), 32, Duration::from_millis(50));

@@ -18,11 +18,11 @@
 //! [`ActorSystem::on_failure`]: crate::actor::ActorSystem::on_failure
 
 use crate::log_info;
+use crate::sim::runtime::{ThreadTicker, TickHandle, Ticker};
 use crate::util::clock::SharedClock;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Restart budget for one supervised component.
@@ -68,7 +68,7 @@ pub struct Supervisor {
     entries: Arc<Mutex<HashMap<String, Entry>>>,
     sweep_interval: Duration,
     running: Arc<AtomicBool>,
-    sweeper: Mutex<Option<JoinHandle<()>>>,
+    sweeper: Mutex<Option<TickHandle>>,
 }
 
 impl Supervisor {
@@ -176,29 +176,37 @@ impl Supervisor {
         restarted
     }
 
-    /// Start the background sweeper thread.
+    /// Start the sweeper against real time (a background thread).
     pub fn start(self: &Arc<Self>) {
+        self.start_on(&ThreadTicker);
+    }
+
+    /// Register the sweep with any [`Ticker`] — a [`ThreadTicker`] for
+    /// production, a [`SimScheduler`](crate::sim::SimScheduler) for
+    /// deterministic virtual-time runs.
+    pub fn start_on(self: &Arc<Self>, ticker: &dyn Ticker) {
+        // The slot lock spans flag + registration so a concurrent stop()
+        // either runs before this start (a no-op) or sees the handle.
+        let mut slot = self.sweeper.lock().unwrap();
         if self.running.swap(true, Ordering::SeqCst) {
             return;
         }
         let me = self.clone();
-        let handle = std::thread::Builder::new()
-            .name("supervisor".into())
-            .spawn(move || {
-                while me.running.load(Ordering::SeqCst) {
-                    me.sweep();
-                    std::thread::sleep(me.sweep_interval);
-                }
-            })
-            .expect("spawn supervisor");
-        *self.sweeper.lock().unwrap() = Some(handle);
+        *slot = Some(ticker.every(
+            "supervisor",
+            self.sweep_interval,
+            Box::new(move || {
+                me.sweep();
+            }),
+        ));
     }
 
-    /// Stop the sweeper thread.
+    /// Stop the sweeper.
     pub fn stop(&self) {
+        let mut slot = self.sweeper.lock().unwrap();
         self.running.store(false, Ordering::SeqCst);
-        if let Some(h) = self.sweeper.lock().unwrap().take() {
-            let _ = h.join();
+        if let Some(h) = slot.take() {
+            h.cancel();
         }
     }
 }
@@ -324,6 +332,30 @@ mod tests {
         assert_eq!(sup.sweep(), 0, "budget used");
         clock.advance(Duration::from_secs(11));
         assert_eq!(sup.sweep(), 1, "window slid: budget refreshed");
+    }
+
+    #[test]
+    fn sweeper_on_sim_scheduler_honours_restart_delay() {
+        let sched = crate::sim::SimScheduler::new(2);
+        let sup = Supervisor::new(sched.clock(), Duration::from_millis(100));
+        let healthy = Arc::new(AtomicBool::new(false));
+        let h = healthy.clone();
+        let h2 = healthy.clone();
+        sup.supervise(
+            "comp",
+            RestartPolicy { restart_delay: Duration::from_millis(250), ..Default::default() },
+            move || h.load(Ordering::SeqCst),
+            move || {
+                h2.store(true, Ordering::SeqCst);
+                true
+            },
+        );
+        sup.start_on(&sched);
+        sched.run_until(Duration::from_millis(200));
+        assert!(!healthy.load(Ordering::SeqCst), "inside the detection/recovery window");
+        sched.run_until(Duration::from_millis(400));
+        assert!(healthy.load(Ordering::SeqCst), "healed once the delay elapsed");
+        sup.stop();
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! The chaos scenario matrix: the paper's Fig. 8–11 evaluation settings
+//! ported onto the deterministic simulation runtime.
+//!
+//! Each entry composes one workload shape with one fault script and the
+//! probes that encode the figure's claim. The epoch faults use the
+//! paper's §4.3 fault model — "every node fails after every 10 minutes
+//! working with a probability of 0/30/60/90 percent … every failed node
+//! restarts after 5 minutes" — compressed 10× (60 s epochs, 30 s
+//! restarts) exactly like the real-time experiment harness compresses
+//! paper minutes. The whole matrix runs in well under ten seconds of wall
+//! time under `cargo test -q`, and two runs with the same seeds produce
+//! identical traces (`tests/sim_chaos_matrix.rs` asserts both).
+
+use super::scenario::{Fault, Probes, Scenario, WorkloadShape};
+use crate::config::ElasticConfig;
+use std::time::Duration;
+
+/// Elastic tuning shared by the matrix (virtual-time intervals).
+fn elastic() -> ElasticConfig {
+    ElasticConfig {
+        min_workers: 1,
+        max_workers: 16,
+        high_watermark: 50,
+        low_watermark: 5,
+        check_interval: Duration::from_secs(1),
+        cooldown: Duration::from_secs(5),
+    }
+}
+
+/// The paper's fault model at probability `prob`, 10×-compressed.
+fn paper_epochs(prob: f64) -> Fault {
+    Fault::EpochFailures {
+        prob,
+        epoch: Duration::from_secs(60),
+        restart: Duration::from_secs(30),
+    }
+}
+
+fn scenario(name: &str, seed: u64, workload: WorkloadShape, fault: Fault) -> Scenario {
+    Scenario {
+        name: name.into(),
+        seed,
+        duration: Duration::from_secs(300),
+        drain: Duration::from_secs(200),
+        tick: Duration::from_millis(500),
+        nodes: 3,
+        per_worker_rate: 40.0,
+        elastic: elastic(),
+        workload,
+        fault,
+        probes: Probes::default(),
+    }
+}
+
+/// The full matrix: 13 workload × fault combinations.
+pub fn chaos_matrix() -> Vec<Scenario> {
+    let constant = WorkloadShape::Constant { rate: 300.0 };
+    let spike = WorkloadShape::Spike { base: 100.0, peak: 800.0, start_frac: 0.3, end_frac: 0.5 };
+    let ramp = WorkloadShape::Ramp { from: 50.0, to: 600.0 };
+    let sawtooth = WorkloadShape::Sawtooth { low: 50.0, high: 400.0, cycles: 4 };
+    let mut m = Vec::new();
+
+    // Fig. 8/9 — elastic scaling under healthy load: the worker count must
+    // follow the workload and everything must be processed.
+    let mut s = scenario("fig8-steady", 42, constant, Fault::None);
+    s.probes.min_peak_workers = Some(4);
+    s.probes.max_outstanding = Some(20_000);
+    s.probes.forbid_suspects = true;
+    m.push(s);
+
+    let mut s = scenario("fig8-spike", 42, spike, Fault::None);
+    s.probes.min_peak_workers = Some(12);
+    s.probes.forbid_suspects = true;
+    m.push(s);
+
+    let mut s = scenario("fig9-ramp", 42, ramp, Fault::None);
+    s.probes.min_peak_workers = Some(8);
+    s.probes.forbid_suspects = true;
+    m.push(s);
+
+    let mut s = scenario("fig8-sawtooth", 42, sawtooth, Fault::None);
+    s.probes.forbid_suspects = true;
+    m.push(s);
+
+    // Elastic floor: with no traffic the pool must settle at min_workers.
+    let mut s = scenario("elastic-floor-silence", 42, WorkloadShape::Silence, Fault::None);
+    s.probes.max_final_workers = Some(1);
+    s.probes.forbid_suspects = true;
+    m.push(s);
+
+    // Single-node failure and recovery: the detector must notice, the
+    // in-flight window must be redelivered, nothing may be lost.
+    let mut s = scenario(
+        "resilient-kill",
+        42,
+        constant,
+        Fault::KillRestart { node: 1, kill_frac: 0.4, restart_frac: 0.6 },
+    );
+    s.probes.expect_redelivery = true;
+    s.probes.expect_suspects = true;
+    m.push(s);
+
+    let mut s = scenario(
+        "spike-kill",
+        42,
+        spike,
+        Fault::KillRestart { node: 0, kill_frac: 0.35, restart_frac: 0.55 },
+    );
+    s.probes.expect_redelivery = true;
+    s.probes.expect_suspects = true;
+    m.push(s);
+
+    // Fig. 10 — the failure-probability grid. At p = 1.0 failure is
+    // certain, so redelivery and suspicion are asserted; the probabilistic
+    // rows assert conservation (redelivery-only-never-loss) and rely on
+    // the trace fingerprint for everything else. Failures keep firing
+    // through the drain window, so these don't require a full drain.
+    let mut s = scenario("fig10-certain", 42, constant, paper_epochs(1.0));
+    s.probes.require_drained = false;
+    s.probes.expect_redelivery = true;
+    s.probes.expect_suspects = true;
+    m.push(s);
+
+    let mut s = scenario("fig10-p30", 42, constant, paper_epochs(0.3));
+    s.probes.require_drained = false;
+    m.push(s);
+
+    let mut s = scenario("fig10-p60", 42, constant, paper_epochs(0.6));
+    s.probes.require_drained = false;
+    m.push(s);
+
+    let mut s = scenario("fig10-p90-ramp", 42, ramp, paper_epochs(0.9));
+    s.probes.require_drained = false;
+    m.push(s);
+
+    // Detector false positive: a healthy node's heartbeats are suppressed
+    // for a window — suspicion must fire and then clear, with no effect on
+    // processing (the node never actually went down).
+    let mut s = scenario(
+        "false-suspect-ramp",
+        42,
+        ramp,
+        Fault::FalseSuspect { node: 1, start_frac: 0.4, end_frac: 0.55 },
+    );
+    s.probes.expect_suspects = true;
+    m.push(s);
+
+    // Rebalance storm: rapid kill/restart cycles each force a redelivery
+    // of the in-flight window; the system must absorb all of them.
+    let mut s = scenario(
+        "rebalance-storm",
+        42,
+        sawtooth,
+        Fault::RebalanceStorm {
+            node: 2,
+            start_frac: 0.3,
+            kills: 4,
+            gap: Duration::from_secs(3),
+        },
+    );
+    s.probes.expect_redelivery = true;
+    s.probes.expect_suspects = true;
+    m.push(s);
+
+    m
+}
+
+// The matrix's breadth gate (size, distinct combos, unique names) lives in
+// `tests/sim_chaos_matrix.rs` next to the determinism gate.

@@ -1,0 +1,40 @@
+//! Deterministic virtual-time simulation runtime.
+//!
+//! The paper's headline claims (Figs. 8–11) are about behaviour *over
+//! time*: elastic scale-out under workload spikes, resilient recovery
+//! across failure epochs. Exercising them against the real clock costs
+//! wall-clock seconds per scenario and is timing-flaky. This module runs
+//! the same control plane on **virtual time** instead:
+//!
+//! - [`clock::SimClock`] — a [`Clock`] that only moves when an event runs;
+//! - [`scheduler::SimScheduler`] — a seeded discrete-event scheduler
+//!   (`schedule_at` / `schedule_every` / `run_until`) whose event order is
+//!   a pure function of the schedule and the seed;
+//! - [`runtime`] — the [`Ticker`] seam: the elastic monitor, supervision
+//!   sweeper, and failure injector register periodic ticks that run on a
+//!   real thread ([`ThreadTicker`]) in production and as discrete events
+//!   in simulation;
+//! - [`model`] — a fluid-model worker pool ([`SimPool`]) with an explicit
+//!   at-least-once in-flight window, driven by the *real*
+//!   [`ElasticController`];
+//! - [`scenario`] — the scenario DSL: workload shapes × fault scripts ×
+//!   assertion probes, producing a byte-comparable [`Trace`];
+//! - [`chaos`] — the Fig. 8–11 configurations as a 13-entry deterministic
+//!   chaos matrix (`tests/sim_chaos_matrix.rs` runs it twice and demands
+//!   identical traces).
+//!
+//! [`Clock`]: crate::util::clock::Clock
+//! [`ElasticController`]: crate::reactive::elastic::ElasticController
+
+pub mod chaos;
+pub mod clock;
+pub mod model;
+pub mod runtime;
+pub mod scenario;
+pub mod scheduler;
+
+pub use clock::SimClock;
+pub use model::{SimPool, Trace};
+pub use runtime::{ThreadTicker, TickHandle, Ticker};
+pub use scenario::{Fault, Probes, Scenario, ScenarioReport, WorkloadShape};
+pub use scheduler::SimScheduler;

@@ -1,0 +1,306 @@
+//! The simulated data plane a chaos scenario drives.
+//!
+//! [`SimPool`] is a fluid-model worker pool: a broker-side queue, an
+//! in-flight window (delivered but uncommitted — the at-least-once
+//! exposure), and a completed count. Each scheduler tick commits the
+//! previous tick's in-flight work and takes up to `workers ×
+//! per_worker_per_tick` new messages. A node crash requeues the in-flight
+//! window (redelivery, never loss) and removes that node's worker share;
+//! the elastic controller — the *real*
+//! [`ElasticController`](crate::reactive::elastic::ElasticController), not
+//! a model of it — observes `queue_depth` and resizes the pool through
+//! [`ScalableTarget`].
+//!
+//! Conservation invariant (checked by every scenario): `offered == queue +
+//! in_flight + done` at all times. `redelivered` counts messages that
+//! re-entered the queue after a crash — duplicates are allowed, loss is
+//! not.
+
+use crate::reactive::elastic::ScalableTarget;
+use crate::util::clock::SharedClock;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Timestamped, append-only event log shared by everything in a scenario.
+/// Lines are the scenario's observable behaviour — two runs of the same
+/// seeded scenario must produce identical traces.
+pub struct Trace {
+    clock: SharedClock,
+    events: Mutex<Vec<String>>,
+}
+
+impl Trace {
+    pub fn new(clock: SharedClock) -> Arc<Self> {
+        Arc::new(Trace { clock, events: Mutex::new(Vec::new()) })
+    }
+
+    /// Append one event, stamped with virtual milliseconds.
+    pub fn push(&self, event: impl AsRef<str>) {
+        let mut ev = self.events.lock().unwrap();
+        ev.push(format!("{:>9}ms {}", self.clock.now_millis(), event.as_ref()));
+    }
+
+    pub fn lines(&self) -> Vec<String> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Count of lines whose event text starts with `prefix`.
+    pub fn count_matching(&self, prefix: &str) -> usize {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|l| l.split_once("ms ").map(|(_, e)| e.starts_with(prefix)).unwrap_or(false))
+            .count()
+    }
+}
+
+/// Fluid-model elastic worker pool (see module docs).
+pub struct SimPool {
+    name: String,
+    min: usize,
+    max: usize,
+    /// Messages one worker completes per scheduler tick.
+    per_worker_per_tick: u64,
+    workers: AtomicUsize,
+    queue: AtomicU64,
+    in_flight: AtomicU64,
+    done: AtomicU64,
+    offered: AtomicU64,
+    redelivered: AtomicU64,
+    peak_workers: AtomicUsize,
+    max_outstanding: AtomicU64,
+    trace: Arc<Trace>,
+}
+
+impl SimPool {
+    pub fn new(
+        name: &str,
+        min: usize,
+        max: usize,
+        per_worker_per_tick: u64,
+        initial_workers: usize,
+        trace: Arc<Trace>,
+    ) -> Arc<Self> {
+        assert!(max >= min.max(1), "SimPool bounds: max {max} < min {min}");
+        assert!(per_worker_per_tick > 0);
+        let initial = initial_workers.clamp(min.max(1), max);
+        Arc::new(SimPool {
+            name: name.to_string(),
+            min,
+            max,
+            per_worker_per_tick,
+            workers: AtomicUsize::new(initial),
+            queue: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            offered: AtomicU64::new(0),
+            redelivered: AtomicU64::new(0),
+            peak_workers: AtomicUsize::new(initial),
+            max_outstanding: AtomicU64::new(0),
+            trace,
+        })
+    }
+
+    /// Enqueue `n` new messages (workload arrivals).
+    pub fn offer(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.offered.fetch_add(n, Ordering::SeqCst);
+        self.queue.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// One processing tick: commit last tick's in-flight batch, then take
+    /// up to capacity into flight. Driven by the scenario's scheduler.
+    pub fn tick(&self) {
+        let finished = self.in_flight.swap(0, Ordering::SeqCst);
+        self.done.fetch_add(finished, Ordering::SeqCst);
+        let cap = self.workers.load(Ordering::SeqCst) as u64 * self.per_worker_per_tick;
+        let take = self.queue.load(Ordering::SeqCst).min(cap);
+        if take > 0 {
+            self.queue.fetch_sub(take, Ordering::SeqCst);
+            self.in_flight.store(take, Ordering::SeqCst);
+        }
+        self.max_outstanding.fetch_max(self.outstanding(), Ordering::SeqCst);
+    }
+
+    /// Node crash touching this pool: the in-flight window is uncommitted,
+    /// so it goes *back to the queue* (redelivery), and the node's worker
+    /// share disappears until healed or re-scaled.
+    pub fn crash_workers(&self, share: usize) {
+        let lost = self.in_flight.swap(0, Ordering::SeqCst);
+        if lost > 0 {
+            self.queue.fetch_add(lost, Ordering::SeqCst);
+            self.redelivered.fetch_add(lost, Ordering::SeqCst);
+            self.trace.push(format!("redeliver {lost} ({})", self.name));
+        }
+        let _ = self.workers.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |w| {
+            Some(w.saturating_sub(share))
+        });
+    }
+
+    /// Node recovery: restore up to `share` workers (bounded by `max`).
+    pub fn heal_workers(&self, share: usize) {
+        let _ = self.workers.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |w| {
+            Some((w + share).min(self.max))
+        });
+        self.peak_workers.fetch_max(self.workers.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    pub fn queue(&self) -> u64 {
+        self.queue.load(Ordering::SeqCst)
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    pub fn done(&self) -> u64 {
+        self.done.load(Ordering::SeqCst)
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.offered.load(Ordering::SeqCst)
+    }
+
+    pub fn redelivered(&self) -> u64 {
+        self.redelivered.load(Ordering::SeqCst)
+    }
+
+    /// Messages not yet completed (broker queue + in-flight window).
+    pub fn outstanding(&self) -> u64 {
+        self.queue.load(Ordering::SeqCst) + self.in_flight.load(Ordering::SeqCst)
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.outstanding() == 0
+    }
+
+    pub fn peak_workers(&self) -> usize {
+        self.peak_workers.load(Ordering::SeqCst)
+    }
+
+    pub fn max_outstanding(&self) -> u64 {
+        self.max_outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Conservation residue: nonzero means the model lost or invented
+    /// messages — always a bug.
+    pub fn conservation_residue(&self) -> i64 {
+        self.offered.load(Ordering::SeqCst) as i64
+            - (self.outstanding() + self.done.load(Ordering::SeqCst)) as i64
+    }
+}
+
+impl ScalableTarget for SimPool {
+    fn worker_count(&self) -> usize {
+        self.workers.load(Ordering::SeqCst)
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.outstanding() as usize
+    }
+
+    fn scale_to(&self, n: usize) {
+        let n = n.clamp(self.min.max(1), self.max);
+        let before = self.workers.swap(n, Ordering::SeqCst);
+        if n != before {
+            self.peak_workers.fetch_max(n, Ordering::SeqCst);
+            self.trace.push(format!("scale {} {before}->{n}", self.name));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::SimClock;
+    use std::time::Duration;
+
+    fn fixture() -> (Arc<SimClock>, Arc<Trace>, Arc<SimPool>) {
+        let clock = Arc::new(SimClock::new());
+        let trace = Trace::new(clock.clone());
+        let pool = SimPool::new("p", 1, 8, 10, 2, trace.clone());
+        (clock, trace, pool)
+    }
+
+    #[test]
+    fn tick_commits_with_one_tick_lag() {
+        let (_c, _t, pool) = fixture();
+        pool.offer(25);
+        pool.tick(); // takes 20 (2 workers × 10) into flight
+        assert_eq!(pool.queue(), 5);
+        assert_eq!(pool.in_flight(), 20);
+        assert_eq!(pool.done(), 0, "not committed until the next tick");
+        pool.tick(); // commits 20, takes remaining 5
+        assert_eq!(pool.done(), 20);
+        assert_eq!(pool.in_flight(), 5);
+        pool.tick();
+        assert_eq!(pool.done(), 25);
+        assert!(pool.is_drained());
+        assert_eq!(pool.conservation_residue(), 0);
+    }
+
+    #[test]
+    fn crash_redelivers_in_flight_never_loses() {
+        let (_c, trace, pool) = fixture();
+        pool.offer(100);
+        pool.tick(); // 20 in flight
+        pool.crash_workers(1);
+        assert_eq!(pool.in_flight(), 0);
+        assert_eq!(pool.queue(), 100, "in-flight went back to the queue");
+        assert_eq!(pool.redelivered(), 20);
+        assert_eq!(pool.worker_count(), 1);
+        assert_eq!(pool.conservation_residue(), 0);
+        assert_eq!(trace.count_matching("redeliver"), 1);
+        // Drain the rest: done counts unique completions.
+        pool.heal_workers(1);
+        for _ in 0..20 {
+            pool.tick();
+        }
+        assert_eq!(pool.done(), 100);
+        assert_eq!(pool.conservation_residue(), 0);
+    }
+
+    #[test]
+    fn scale_to_clamps_and_traces() {
+        let (_c, trace, pool) = fixture();
+        pool.scale_to(100);
+        assert_eq!(pool.worker_count(), 8, "clamped to max");
+        pool.scale_to(0);
+        assert_eq!(pool.worker_count(), 1, "clamped to min floor");
+        pool.scale_to(1); // no change: no trace line
+        assert_eq!(trace.count_matching("scale"), 2);
+        assert_eq!(pool.peak_workers(), 8);
+    }
+
+    #[test]
+    fn crash_can_empty_the_pool_heal_restores() {
+        let (_c, _t, pool) = fixture();
+        pool.crash_workers(5);
+        assert_eq!(pool.worker_count(), 0, "crash may drop below the elastic floor");
+        pool.heal_workers(3);
+        assert_eq!(pool.worker_count(), 3);
+        pool.heal_workers(100);
+        assert_eq!(pool.worker_count(), 8, "heal bounded by max");
+    }
+
+    #[test]
+    fn trace_stamps_virtual_time() {
+        let (clock, trace, _p) = fixture();
+        clock.advance_to(Duration::from_millis(1234));
+        trace.push("hello");
+        let lines = trace.lines();
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("1234ms hello"), "got: {}", lines[0]);
+    }
+}

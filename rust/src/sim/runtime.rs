@@ -1,0 +1,146 @@
+//! The tick runtime: one registration API, two backends.
+//!
+//! Every periodic control loop in the stack (elastic monitor, supervision
+//! sweeper, failure injector) registers a *tick* — a closure plus a period
+//! — against a [`Ticker`] instead of hand-rolling a `thread::sleep` loop:
+//!
+//! - [`ThreadTicker`] drives ticks from a named background thread against
+//!   real time — production/example behaviour, identical to the old
+//!   sleep-loops;
+//! - [`SimScheduler`] implements [`Ticker`] by scheduling the tick as a
+//!   repeating discrete event on **virtual** time, so the same component
+//!   runs deterministically inside a simulation scenario.
+//!
+//! A [`TickHandle`] stops the tick: cooperative flag for scheduler-driven
+//! ticks, flag + join for thread-driven ones. Dropping a handle does *not*
+//! cancel (components own their handle and cancel in `stop()`).
+//!
+//! [`SimScheduler`]: super::scheduler::SimScheduler
+
+use super::scheduler::SimScheduler;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Stops a registered tick.
+pub struct TickHandle {
+    cancelled: Arc<AtomicBool>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl TickHandle {
+    /// Handle with no backing thread (scheduler-driven ticks).
+    pub(crate) fn detached(cancelled: Arc<AtomicBool>) -> Self {
+        TickHandle { cancelled, thread: Mutex::new(None) }
+    }
+
+    /// Handle owning the driving thread.
+    pub(crate) fn threaded(cancelled: Arc<AtomicBool>, thread: JoinHandle<()>) -> Self {
+        TickHandle { cancelled, thread: Mutex::new(Some(thread)) }
+    }
+
+    /// Cancel the tick; joins the driving thread if there is one (bounded
+    /// by one period, since the thread re-checks the flag after each
+    /// sleep). Idempotent.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+}
+
+/// Source of periodic ticks. `f` runs once per `period` until the handle
+/// is cancelled. First-run timing is backend-defined: [`ThreadTicker`]
+/// ticks immediately on registration (like the sleep-loops it replaced);
+/// a [`SimScheduler`] fires at the first period boundary, the discrete-
+/// event convention.
+pub trait Ticker: Send + Sync {
+    fn every(&self, name: &str, period: Duration, f: Box<dyn FnMut() + Send>) -> TickHandle;
+}
+
+/// Real-time backend: one named thread per tick, tick-then-`sleep(period)`
+/// — exactly the sleep-loop the components used to spawn by hand,
+/// factored behind the [`Ticker`] seam.
+pub struct ThreadTicker;
+
+impl Ticker for ThreadTicker {
+    fn every(&self, name: &str, period: Duration, mut f: Box<dyn FnMut() + Send>) -> TickHandle {
+        assert!(period > Duration::ZERO, "ThreadTicker: zero period would spin");
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let flag = cancelled.clone();
+        let thread = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || loop {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                f();
+                std::thread::sleep(period);
+            })
+            .expect("spawn ticker thread");
+        TickHandle::threaded(cancelled, thread)
+    }
+}
+
+/// Virtual-time backend: the tick becomes a repeating discrete event.
+impl Ticker for SimScheduler {
+    fn every(&self, _name: &str, period: Duration, mut f: Box<dyn FnMut() + Send>) -> TickHandle {
+        self.schedule_every(period, move |_| f())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn thread_ticker_ticks_and_cancels() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let handle = ThreadTicker.every(
+            "test-tick",
+            Duration::from_millis(2),
+            Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while std::time::Instant::now() < deadline && count.load(Ordering::SeqCst) < 3 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        handle.cancel();
+        let at_cancel = count.load(Ordering::SeqCst);
+        assert!(at_cancel >= 3, "ticked at least 3 times, got {at_cancel}");
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(count.load(Ordering::SeqCst), at_cancel, "no ticks after cancel");
+        assert!(handle.is_cancelled());
+        handle.cancel(); // idempotent
+    }
+
+    #[test]
+    fn sim_scheduler_is_a_ticker() {
+        let sched = SimScheduler::new(9);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let ticker: &dyn Ticker = &sched;
+        let handle = ticker.every(
+            "sim-tick",
+            Duration::from_secs(1),
+            Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        sched.run_until(Duration::from_secs(10));
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+        handle.cancel();
+        sched.run_until(Duration::from_secs(20));
+        assert_eq!(count.load(Ordering::SeqCst), 10, "cancelled on virtual time too");
+    }
+}

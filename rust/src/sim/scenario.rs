@@ -1,0 +1,542 @@
+//! Scenario DSL: workload shapes × fault scripts × assertion probes.
+//!
+//! A [`Scenario`] wires the *real* control plane — [`ElasticController`],
+//! [`HeartbeatDetector`], [`FailureInjector`], [`Cluster`] — to the
+//! fluid-model data plane ([`SimPool`]) on a seeded [`SimScheduler`], then
+//! runs minutes of virtual time in milliseconds. Everything observable
+//! lands in a [`Trace`]; [`ScenarioReport::fingerprint`] makes two runs of
+//! the same seeded scenario byte-comparable, which is how the chaos matrix
+//! proves determinism.
+//!
+//! The shapes and fault scripts mirror the paper's evaluation (§4.3): the
+//! Fig. 8/9 elastic-scaling runs become workload shapes with no faults;
+//! the Fig. 10 failure grid becomes [`Fault::EpochFailures`] at the
+//! paper's 0/30/60/90 % probabilities with epoch/restart windows; and the
+//! probes encode the claims the figures make — bounded queues, a sensible
+//! worker-count trajectory, and redelivery-but-never-loss.
+
+use super::model::{SimPool, Trace};
+use super::scheduler::SimScheduler;
+use crate::cluster::failure::FailureInjector;
+use crate::cluster::node::{Cluster, ComponentHandle};
+use crate::config::ElasticConfig;
+use crate::reactive::elastic::ElasticController;
+use crate::reactive::failure_detector::HeartbeatDetector;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Arrival-rate shape over the workload window. `frac` is elapsed time as
+/// a fraction of the window; rates are messages per virtual second.
+#[derive(Clone, Copy, Debug)]
+pub enum WorkloadShape {
+    /// No traffic at all (scale-in-to-floor scenarios).
+    Silence,
+    Constant { rate: f64 },
+    /// `base` outside `[start_frac, end_frac)`, `peak` inside.
+    Spike { base: f64, peak: f64, start_frac: f64, end_frac: f64 },
+    /// Linear from `from` to `to` across the window.
+    Ramp { from: f64, to: f64 },
+    /// `cycles` rising teeth between `low` and `high`.
+    Sawtooth { low: f64, high: f64, cycles: u32 },
+}
+
+impl WorkloadShape {
+    pub fn rate_at(&self, frac: f64) -> f64 {
+        let frac = frac.clamp(0.0, 1.0);
+        match *self {
+            WorkloadShape::Silence => 0.0,
+            WorkloadShape::Constant { rate } => rate,
+            WorkloadShape::Spike { base, peak, start_frac, end_frac } => {
+                if frac >= start_frac && frac < end_frac {
+                    peak
+                } else {
+                    base
+                }
+            }
+            WorkloadShape::Ramp { from, to } => from + (to - from) * frac,
+            WorkloadShape::Sawtooth { low, high, cycles } => {
+                let pos = (frac * cycles.max(1) as f64).fract();
+                low + (high - low) * pos
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadShape::Silence => "silence",
+            WorkloadShape::Constant { .. } => "constant",
+            WorkloadShape::Spike { .. } => "spike",
+            WorkloadShape::Ramp { .. } => "ramp",
+            WorkloadShape::Sawtooth { .. } => "sawtooth",
+        }
+    }
+}
+
+/// Fault script composed over the scenario window.
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    None,
+    /// Kill one node at `kill_frac` of the window, restart it at
+    /// `restart_frac`.
+    KillRestart { node: usize, kill_frac: f64, restart_frac: f64 },
+    /// The paper's §4.3 fault model, driven by the real
+    /// [`FailureInjector`] on virtual time: every node rolls failure dice
+    /// with probability `prob` after each `epoch` of working time and
+    /// restarts `restart` after going down.
+    EpochFailures { prob: f64, epoch: Duration, restart: Duration },
+    /// Suppress one healthy node's heartbeats over a window — the
+    /// detector must suspect it (false positive) and clear it afterwards.
+    FalseSuspect { node: usize, start_frac: f64, end_frac: f64 },
+    /// Repeated quick kill/restart cycles on one node: each cycle forces
+    /// a redelivery of the in-flight window (a rebalance storm).
+    RebalanceStorm { node: usize, start_frac: f64, kills: usize, gap: Duration },
+}
+
+impl Fault {
+    pub fn label(&self) -> String {
+        match self {
+            Fault::None => "none".into(),
+            Fault::KillRestart { .. } => "kill-restart".into(),
+            Fault::EpochFailures { prob, .. } => format!("epoch-p{}", (prob * 100.0) as u32),
+            Fault::FalseSuspect { .. } => "false-suspect".into(),
+            Fault::RebalanceStorm { .. } => "rebalance-storm".into(),
+        }
+    }
+}
+
+/// Assertions evaluated after the run. Every failed probe becomes a
+/// violation string in the report (the chaos matrix requires zero).
+#[derive(Clone, Copy, Debug)]
+pub struct Probes {
+    /// Queue + in-flight must be zero at the end of the run.
+    pub require_drained: bool,
+    /// Upper bound on `queue + in_flight` ever observed at a tick.
+    pub max_outstanding: Option<u64>,
+    /// The worker count must reach at least this at some point.
+    pub min_peak_workers: Option<usize>,
+    /// The worker count must end at or below this (scale-in happened).
+    pub max_final_workers: Option<usize>,
+    /// The fault script must have caused at least one redelivery.
+    pub expect_redelivery: bool,
+    /// The detector must have suspected someone at some point.
+    pub expect_suspects: bool,
+    /// The detector must never have suspected anyone.
+    pub forbid_suspects: bool,
+}
+
+impl Default for Probes {
+    fn default() -> Self {
+        Probes {
+            require_drained: true,
+            max_outstanding: None,
+            min_peak_workers: None,
+            max_final_workers: None,
+            expect_redelivery: false,
+            expect_suspects: false,
+            forbid_suspects: false,
+        }
+    }
+}
+
+/// One deterministic chaos scenario (see module docs).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    /// Workload window in virtual time.
+    pub duration: Duration,
+    /// Extra settle window after the workload ends (backlog drains,
+    /// elastic scales back in). Faults keep running during it.
+    pub drain: Duration,
+    /// Model tick: arrivals, pool processing, heartbeats, probe sampling.
+    pub tick: Duration,
+    pub nodes: usize,
+    /// Per-worker service rate, messages per virtual second.
+    pub per_worker_rate: f64,
+    pub elastic: ElasticConfig,
+    pub workload: WorkloadShape,
+    pub fault: Fault,
+    pub probes: Probes,
+}
+
+/// Everything a scenario run produced.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub seed: u64,
+    pub offered: u64,
+    pub done: u64,
+    pub redelivered: u64,
+    pub outstanding: u64,
+    pub max_outstanding: u64,
+    pub peak_workers: usize,
+    pub final_workers: usize,
+    pub scale_changes: usize,
+    pub suspect_events: usize,
+    pub trace: Vec<String>,
+    pub violations: Vec<String>,
+}
+
+impl ScenarioReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Canonical byte-comparable digest of the run: totals plus the full
+    /// event trace. Identical fingerprints ⇒ identical scale/failure
+    /// event sequences.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{} seed={} offered={} done={} redelivered={} outstanding={} \
+             peak={} final={} scales={} suspects={}\n{}",
+            self.name,
+            self.seed,
+            self.offered,
+            self.done,
+            self.redelivered,
+            self.outstanding,
+            self.peak_workers,
+            self.final_workers,
+            self.scale_changes,
+            self.suspect_events,
+            self.trace.join("\n")
+        )
+    }
+}
+
+impl Scenario {
+    /// Execute the scenario to its horizon and evaluate the probes.
+    pub fn run(&self) -> ScenarioReport {
+        assert!(self.nodes > 0, "scenario needs at least one node");
+        assert!(self.tick > Duration::ZERO);
+        let sched = SimScheduler::new(self.seed);
+        let clock = sched.clock();
+        let trace = Trace::new(clock.clone());
+        let tick_secs = self.tick.as_secs_f64();
+        let per_tick = ((self.per_worker_rate * tick_secs).round() as u64).max(1);
+        let pool = SimPool::new(
+            "workers",
+            self.elastic.min_workers,
+            self.elastic.max_workers,
+            per_tick,
+            self.elastic.min_workers.max(1),
+            trace.clone(),
+        );
+
+        // --- Cluster: each node hosts an equal share of the worker pool.
+        let cluster = Cluster::new(self.nodes);
+        let share = (self.elastic.max_workers / self.nodes).max(1);
+        for node in cluster.nodes() {
+            let id = node.id;
+            let (p_kill, p_heal) = (pool.clone(), pool.clone());
+            let (t_kill, t_heal) = (trace.clone(), trace.clone());
+            node.host(ComponentHandle {
+                name: format!("sim-workers@n{id}"),
+                kill: Box::new(move || {
+                    t_kill.push(format!("node n{id} down"));
+                    p_kill.crash_workers(share);
+                }),
+                respawn: Box::new(move || {
+                    t_heal.push(format!("node n{id} up"));
+                    p_heal.heal_workers(share);
+                }),
+            });
+        }
+
+        // --- Heartbeats + failure detector (suspicion is part of the trace).
+        let detector =
+            Arc::new(HeartbeatDetector::new(clock.clone(), self.tick * 7 / 2));
+        let silenced: Arc<Vec<AtomicBool>> =
+            Arc::new((0..self.nodes).map(|_| AtomicBool::new(false)).collect());
+        for i in 0..self.nodes {
+            detector.heartbeat(&format!("n{i}"));
+        }
+        {
+            let (det, cl, sil) = (detector.clone(), cluster.clone(), silenced.clone());
+            sched.schedule_every(self.tick, move |_| {
+                for i in 0..cl.len() {
+                    if cl.node(i).is_up() && !sil[i].load(Ordering::Relaxed) {
+                        det.heartbeat(&format!("n{i}"));
+                    }
+                }
+            });
+        }
+        {
+            let (det, tr) = (detector.clone(), trace.clone());
+            let prev: Mutex<Vec<String>> = Mutex::new(Vec::new());
+            sched.schedule_every(self.tick, move |_| {
+                let mut cur = det.suspects();
+                cur.sort(); // HashMap iteration order is not deterministic
+                let mut prev = prev.lock().unwrap();
+                for s in cur.iter().filter(|s| !prev.contains(s)) {
+                    tr.push(format!("suspect {s}"));
+                }
+                for s in prev.iter().filter(|s| !cur.contains(s)) {
+                    tr.push(format!("clear {s}"));
+                }
+                *prev = cur;
+            });
+        }
+
+        // --- Workload arrivals (fractional rates carry across ticks).
+        {
+            let pool = pool.clone();
+            let shape = self.workload;
+            let window = self.duration;
+            let mut carry = 0.0f64;
+            sched.schedule_every(self.tick, move |s| {
+                let now = s.now();
+                if now > window {
+                    return;
+                }
+                let frac = now.as_secs_f64() / window.as_secs_f64();
+                let amount = shape.rate_at(frac) * tick_secs + carry;
+                let n = amount.floor() as u64;
+                carry = amount - n as f64;
+                pool.offer(n);
+            });
+        }
+
+        // --- Data-plane processing tick.
+        {
+            let pool = pool.clone();
+            sched.schedule_every(self.tick, move |_| pool.tick());
+        }
+
+        // --- The real elastic controller, on virtual time.
+        let controller = ElasticController::new(
+            &format!("sim:{}", self.name),
+            self.elastic,
+            clock.clone(),
+            pool.clone(),
+        );
+        controller.start_on(&sched);
+
+        // --- Fault script.
+        let mut injector: Option<Arc<FailureInjector>> = None;
+        match self.fault {
+            Fault::None => {}
+            Fault::KillRestart { node, kill_frac, restart_frac } => {
+                let cl = cluster.clone();
+                sched.schedule_at(self.duration.mul_f64(kill_frac), move |_| {
+                    cl.node(node).fail();
+                });
+                let cl = cluster.clone();
+                sched.schedule_at(self.duration.mul_f64(restart_frac), move |_| {
+                    cl.node(node).restart();
+                });
+            }
+            Fault::EpochFailures { prob, epoch, restart } => {
+                let inj = FailureInjector::new(
+                    cluster.clone(),
+                    clock.clone(),
+                    epoch,
+                    restart,
+                    prob,
+                    self.seed ^ 0xFA11,
+                );
+                inj.start_on(&sched, self.tick);
+                injector = Some(inj);
+            }
+            Fault::FalseSuspect { node, start_frac, end_frac } => {
+                let sil = silenced.clone();
+                sched.schedule_at(self.duration.mul_f64(start_frac), move |_| {
+                    sil[node].store(true, Ordering::Relaxed);
+                });
+                let sil = silenced.clone();
+                sched.schedule_at(self.duration.mul_f64(end_frac), move |_| {
+                    sil[node].store(false, Ordering::Relaxed);
+                });
+            }
+            Fault::RebalanceStorm { node, start_frac, kills, gap } => {
+                let start = self.duration.mul_f64(start_frac);
+                for k in 0..kills as u32 {
+                    let cl = cluster.clone();
+                    sched.schedule_at(start + gap * (2 * k), move |_| {
+                        cl.node(node).fail();
+                    });
+                    let cl = cluster.clone();
+                    sched.schedule_at(start + gap * (2 * k + 1), move |_| {
+                        cl.node(node).restart();
+                    });
+                }
+            }
+        }
+
+        // --- Run to the horizon.
+        sched.run_until(self.duration + self.drain);
+        controller.stop();
+        if let Some(inj) = &injector {
+            inj.stop();
+        }
+
+        // --- Report + probes.
+        let suspect_events = trace.count_matching("suspect ");
+        let report = ScenarioReport {
+            name: self.name.clone(),
+            seed: self.seed,
+            offered: pool.offered(),
+            done: pool.done(),
+            redelivered: pool.redelivered(),
+            outstanding: pool.outstanding(),
+            max_outstanding: pool.max_outstanding(),
+            peak_workers: pool.peak_workers(),
+            final_workers: pool.worker_count(),
+            scale_changes: trace.count_matching("scale "),
+            suspect_events,
+            trace: trace.lines(),
+            violations: Vec::new(),
+        };
+        self.evaluate(report, &pool)
+    }
+
+    fn evaluate(&self, mut report: ScenarioReport, pool: &SimPool) -> ScenarioReport {
+        let mut v = Vec::new();
+        let residue = pool.conservation_residue();
+        if residue != 0 {
+            v.push(format!("message loss: conservation residue {residue}"));
+        }
+        if self.probes.require_drained && report.outstanding > 0 {
+            v.push(format!("not drained: {} outstanding", report.outstanding));
+        }
+        if let Some(bound) = self.probes.max_outstanding {
+            if report.max_outstanding > bound {
+                v.push(format!(
+                    "queue bound exceeded: {} > {bound}",
+                    report.max_outstanding
+                ));
+            }
+        }
+        if let Some(floor) = self.probes.min_peak_workers {
+            if report.peak_workers < floor {
+                v.push(format!("never scaled out: peak {} < {floor}", report.peak_workers));
+            }
+        }
+        if let Some(ceil) = self.probes.max_final_workers {
+            if report.final_workers > ceil {
+                v.push(format!("never scaled in: final {} > {ceil}", report.final_workers));
+            }
+        }
+        if self.probes.expect_redelivery && report.redelivered == 0 {
+            v.push("expected redelivery, saw none".into());
+        }
+        if self.probes.expect_suspects && report.suspect_events == 0 {
+            v.push("expected the detector to suspect someone, it never did".into());
+        }
+        if self.probes.forbid_suspects && report.suspect_events > 0 {
+            v.push(format!("false suspicion: {} suspect events", report.suspect_events));
+        }
+        report.violations = v;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elastic() -> ElasticConfig {
+        ElasticConfig {
+            min_workers: 1,
+            max_workers: 16,
+            high_watermark: 50,
+            low_watermark: 5,
+            check_interval: Duration::from_secs(1),
+            cooldown: Duration::from_secs(5),
+        }
+    }
+
+    fn base(name: &str, workload: WorkloadShape, fault: Fault) -> Scenario {
+        Scenario {
+            name: name.into(),
+            seed: 42,
+            duration: Duration::from_secs(300),
+            drain: Duration::from_secs(200),
+            tick: Duration::from_millis(500),
+            nodes: 3,
+            per_worker_rate: 40.0,
+            elastic: elastic(),
+            workload,
+            fault,
+            probes: Probes::default(),
+        }
+    }
+
+    #[test]
+    fn constant_load_scales_out_and_drains() {
+        let mut sc = base("unit-constant", WorkloadShape::Constant { rate: 300.0 }, Fault::None);
+        sc.probes.min_peak_workers = Some(4);
+        sc.probes.forbid_suspects = true;
+        let r = sc.run();
+        assert!(r.ok(), "violations: {:?}\n{}", r.violations, r.trace.join("\n"));
+        assert_eq!(r.done, r.offered);
+        assert!(r.offered > 10_000, "offered {}", r.offered);
+        assert_eq!(r.redelivered, 0);
+    }
+
+    #[test]
+    fn node_kill_redelivers_and_recovers() {
+        let mut sc = base(
+            "unit-kill",
+            WorkloadShape::Constant { rate: 300.0 },
+            Fault::KillRestart { node: 1, kill_frac: 0.4, restart_frac: 0.6 },
+        );
+        sc.probes.expect_redelivery = true;
+        sc.probes.expect_suspects = true;
+        let r = sc.run();
+        assert!(r.ok(), "violations: {:?}\n{}", r.violations, r.trace.join("\n"));
+        assert!(r.redelivered > 0);
+        assert_eq!(r.done, r.offered, "everything still processed exactly-once-or-more");
+    }
+
+    #[test]
+    fn scenario_runs_are_reproducible() {
+        let sc = base(
+            "unit-repro",
+            WorkloadShape::Spike { base: 50.0, peak: 600.0, start_frac: 0.3, end_frac: 0.5 },
+            Fault::EpochFailures {
+                prob: 0.6,
+                epoch: Duration::from_secs(60),
+                restart: Duration::from_secs(30),
+            },
+        );
+        let mut sc = sc;
+        sc.probes.require_drained = false; // failures continue through drain
+        let a = sc.run();
+        let b = sc.run();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // A different seed steers the dice elsewhere but conserves messages.
+        sc.seed = 7;
+        let c = sc.run();
+        assert!(c.violations.is_empty(), "violations: {:?}", c.violations);
+    }
+
+    #[test]
+    fn silence_scales_in_to_the_floor() {
+        let mut sc = base("unit-silence", WorkloadShape::Silence, Fault::None);
+        sc.probes.max_final_workers = Some(1);
+        sc.probes.forbid_suspects = true;
+        let r = sc.run();
+        assert!(r.ok(), "violations: {:?}", r.violations);
+        assert_eq!(r.offered, 0);
+        assert_eq!(r.peak_workers, 1, "nothing to do: never scaled");
+    }
+
+    #[test]
+    fn shapes_produce_expected_rates() {
+        let spike =
+            WorkloadShape::Spike { base: 10.0, peak: 100.0, start_frac: 0.4, end_frac: 0.6 };
+        assert_eq!(spike.rate_at(0.2), 10.0);
+        assert_eq!(spike.rate_at(0.5), 100.0);
+        assert_eq!(spike.rate_at(0.7), 10.0);
+        let ramp = WorkloadShape::Ramp { from: 0.0, to: 100.0 };
+        assert_eq!(ramp.rate_at(0.0), 0.0);
+        assert!((ramp.rate_at(0.5) - 50.0).abs() < 1e-9);
+        let saw = WorkloadShape::Sawtooth { low: 0.0, high: 80.0, cycles: 4 };
+        assert_eq!(saw.rate_at(0.0), 0.0);
+        assert!(saw.rate_at(0.124) > 30.0, "rising within the first tooth");
+        assert!(saw.rate_at(0.26) < 20.0, "reset at the second tooth");
+        assert_eq!(WorkloadShape::Silence.rate_at(0.5), 0.0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Discrete-event scheduler over [`SimClock`] virtual time.
+//!
+//! Events are closures ordered by `(due, sequence)`: ties at the same
+//! virtual instant execute in registration order, so a run is a pure
+//! function of the schedule and the seed — two runs with the same seed
+//! produce byte-identical event traces. The seeded [`Pcg32`] stream is
+//! shared by every stochastic participant (jittered tick periods, the
+//! failure injector's dice), which is what makes chaos scenarios
+//! reproducible and their interleavings explorable seed-by-seed.
+
+use super::clock::SimClock;
+use super::runtime::TickHandle;
+use crate::util::clock::SharedClock;
+use crate::util::prng::Pcg32;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Repeating event state: the callback plus its reschedule rule.
+struct EveryState {
+    tick: Box<dyn FnMut(&SimScheduler) + Send>,
+    period: Duration,
+    /// Fractional period jitter in `[0, 1)`; each reschedule perturbs the
+    /// period by a factor in `[1 − jitter, 1 + jitter]` drawn from the
+    /// scheduler's seeded stream.
+    jitter: f64,
+    cancelled: Arc<AtomicBool>,
+}
+
+enum EventKind {
+    Once(Box<dyn FnOnce(&SimScheduler) + Send>),
+    Every(EveryState),
+}
+
+struct EventEntry {
+    due: Duration,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for EventEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+
+impl Eq for EventEntry {}
+
+impl PartialOrd for EventEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventEntry {
+    /// Reversed so the std max-heap pops the *earliest* `(due, seq)`.
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        other.due.cmp(&self.due).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The discrete-event scheduler.
+///
+/// Single ownership, interior mutability: callbacks receive `&SimScheduler`
+/// and may schedule further events re-entrantly (the queue lock is released
+/// while a callback runs).
+pub struct SimScheduler {
+    clock: Arc<SimClock>,
+    queue: Mutex<BinaryHeap<EventEntry>>,
+    seq: AtomicU64,
+    rng: Mutex<Pcg32>,
+}
+
+impl SimScheduler {
+    pub fn new(seed: u64) -> Self {
+        SimScheduler {
+            clock: Arc::new(SimClock::new()),
+            queue: Mutex::new(BinaryHeap::new()),
+            seq: AtomicU64::new(0),
+            rng: Mutex::new(Pcg32::new(seed)),
+        }
+    }
+
+    /// The virtual clock as the stack-wide shared handle.
+    pub fn clock(&self) -> SharedClock {
+        self.clock.clone()
+    }
+
+    /// The virtual clock with its concrete type (tests advance it by hand).
+    pub fn sim_clock(&self) -> Arc<SimClock> {
+        self.clock.clone()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Duration {
+        use crate::util::clock::Clock;
+        self.clock.now()
+    }
+
+    /// Fork an independent RNG stream off the scheduler's seed (for
+    /// scenario components that draw their own randomness).
+    pub fn fork_rng(&self) -> Pcg32 {
+        self.rng.lock().unwrap().fork()
+    }
+
+    /// Events currently queued (repeating events count once).
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    fn push(&self, due: Duration, kind: EventKind) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.queue.lock().unwrap().push(EventEntry { due, seq, kind });
+    }
+
+    /// Run `f` once at absolute virtual time `at` (clamped to now).
+    pub fn schedule_at(&self, at: Duration, f: impl FnOnce(&SimScheduler) + Send + 'static) {
+        let due = at.max(self.now());
+        self.push(due, EventKind::Once(Box::new(f)));
+    }
+
+    /// Run `f` once after `d` of virtual time.
+    pub fn schedule_after(&self, d: Duration, f: impl FnOnce(&SimScheduler) + Send + 'static) {
+        self.schedule_at(self.now() + d, f);
+    }
+
+    /// Run `f` every `period` of virtual time (first fire one period from
+    /// now) until the returned handle is cancelled.
+    pub fn schedule_every(
+        &self,
+        period: Duration,
+        f: impl FnMut(&SimScheduler) + Send + 'static,
+    ) -> TickHandle {
+        self.schedule_every_jittered(period, 0.0, f)
+    }
+
+    /// [`SimScheduler::schedule_every`] with a seeded period perturbation:
+    /// each interval is `period × [1 − jitter, 1 + jitter]`. Deterministic
+    /// per seed; use it to explore timing interleavings reproducibly.
+    pub fn schedule_every_jittered(
+        &self,
+        period: Duration,
+        jitter: f64,
+        f: impl FnMut(&SimScheduler) + Send + 'static,
+    ) -> TickHandle {
+        assert!(period > Duration::ZERO, "schedule_every: zero period");
+        assert!((0.0..1.0).contains(&jitter), "jitter must be in [0, 1)");
+        let cancelled = Arc::new(AtomicBool::new(false));
+        self.push(
+            self.now() + period,
+            EventKind::Every(EveryState {
+                tick: Box::new(f),
+                period,
+                jitter,
+                cancelled: cancelled.clone(),
+            }),
+        );
+        TickHandle::detached(cancelled)
+    }
+
+    /// Execute every event due up to and including `until`, advancing the
+    /// virtual clock event-by-event, then settle the clock at `until`.
+    /// Returns the number of callbacks executed.
+    pub fn run_until(&self, until: Duration) -> usize {
+        let mut executed = 0usize;
+        loop {
+            let entry = {
+                let mut q = self.queue.lock().unwrap();
+                match q.peek() {
+                    Some(e) if e.due <= until => q.pop(),
+                    _ => None,
+                }
+            };
+            let Some(entry) = entry else { break };
+            self.clock.advance_to(entry.due);
+            match entry.kind {
+                EventKind::Once(f) => {
+                    executed += 1;
+                    f(self);
+                }
+                EventKind::Every(mut st) => {
+                    if st.cancelled.load(Ordering::SeqCst) {
+                        continue; // cancelled while queued: drop silently
+                    }
+                    executed += 1;
+                    (st.tick)(self);
+                    if st.cancelled.load(Ordering::SeqCst) {
+                        continue; // cancelled itself: don't reschedule
+                    }
+                    let step = if st.jitter > 0.0 {
+                        let r = self.rng.lock().unwrap().f64();
+                        st.period.mul_f64(1.0 + st.jitter * (2.0 * r - 1.0))
+                    } else {
+                        st.period
+                    };
+                    let due = entry.due + step.max(Duration::from_nanos(1));
+                    self.push(due, EventKind::Every(st));
+                }
+            }
+        }
+        self.clock.advance_to(until);
+        executed
+    }
+
+    /// Run for `d` more virtual time.
+    pub fn run_for(&self, d: Duration) -> usize {
+        self.run_until(self.now() + d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recorder() -> Arc<Mutex<Vec<u64>>> {
+        Arc::new(Mutex::new(Vec::new()))
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let s = SimScheduler::new(1);
+        let log = recorder();
+        let (l1, l2, l3) = (log.clone(), log.clone(), log.clone());
+        s.schedule_at(Duration::from_secs(3), move |_| l1.lock().unwrap().push(3));
+        s.schedule_at(Duration::from_secs(1), move |_| l2.lock().unwrap().push(1));
+        s.schedule_at(Duration::from_secs(2), move |_| l3.lock().unwrap().push(2));
+        assert_eq!(s.run_until(Duration::from_secs(10)), 3);
+        assert_eq!(*log.lock().unwrap(), vec![1, 2, 3]);
+        assert_eq!(s.now(), Duration::from_secs(10), "clock settles at the horizon");
+    }
+
+    #[test]
+    fn same_instant_ties_break_by_registration_order() {
+        let s = SimScheduler::new(1);
+        let log = recorder();
+        for i in 0..5u64 {
+            let l = log.clone();
+            s.schedule_at(Duration::from_secs(1), move |_| l.lock().unwrap().push(i));
+        }
+        s.run_until(Duration::from_secs(1));
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn callbacks_schedule_reentrantly() {
+        let s = SimScheduler::new(1);
+        let log = recorder();
+        let l = log.clone();
+        s.schedule_at(Duration::from_secs(1), move |sch| {
+            l.lock().unwrap().push(1);
+            let l2 = l.clone();
+            sch.schedule_after(Duration::from_secs(1), move |_| l2.lock().unwrap().push(2));
+        });
+        s.run_until(Duration::from_secs(5));
+        assert_eq!(*log.lock().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn every_fires_periodically_until_cancelled() {
+        let s = SimScheduler::new(1);
+        let log = recorder();
+        let l = log.clone();
+        let handle = s.schedule_every(Duration::from_secs(1), move |sch| {
+            l.lock().unwrap().push(sch.now().as_secs());
+        });
+        s.run_until(Duration::from_secs(4));
+        assert_eq!(*log.lock().unwrap(), vec![1, 2, 3, 4]);
+        handle.cancel();
+        s.run_until(Duration::from_secs(8));
+        assert_eq!(log.lock().unwrap().len(), 4, "no fires after cancel");
+    }
+
+    #[test]
+    fn run_until_does_not_execute_future_events() {
+        let s = SimScheduler::new(1);
+        let log = recorder();
+        let l = log.clone();
+        s.schedule_at(Duration::from_secs(5), move |_| l.lock().unwrap().push(5));
+        assert_eq!(s.run_until(Duration::from_secs(4)), 0);
+        assert!(log.lock().unwrap().is_empty());
+        assert_eq!(s.pending(), 1);
+        assert_eq!(s.run_until(Duration::from_secs(5)), 1);
+    }
+
+    #[test]
+    fn jittered_ticks_are_deterministic_per_seed() {
+        let fire_times = |seed: u64| {
+            let s = SimScheduler::new(seed);
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let l = log.clone();
+            s.schedule_every_jittered(Duration::from_secs(1), 0.3, move |sch| {
+                l.lock().unwrap().push(sch.now().as_millis() as u64);
+            });
+            s.run_until(Duration::from_secs(60));
+            let v = log.lock().unwrap().clone();
+            v
+        };
+        let a = fire_times(42);
+        let b = fire_times(42);
+        assert_eq!(a, b, "same seed, same virtual fire times");
+        assert!(a.len() > 40, "roughly one fire per second, got {}", a.len());
+    }
+
+    #[test]
+    fn scheduling_in_the_past_clamps_to_now() {
+        let s = SimScheduler::new(1);
+        s.run_until(Duration::from_secs(10));
+        let log = recorder();
+        let l = log.clone();
+        s.schedule_at(Duration::from_secs(2), move |sch| {
+            l.lock().unwrap().push(sch.now().as_secs());
+        });
+        s.run_until(Duration::from_secs(11));
+        assert_eq!(*log.lock().unwrap(), vec![10], "clamped to now, not the past");
+    }
+}

@@ -106,7 +106,10 @@ mod tests {
             n += 1;
             Ok(())
         });
-        assert_eq!(n, 50);
+        // RL_PROPCHECK_CASES legitimately overrides the passed count (the
+        // nightly CI job raises it), so the expectation must track it.
+        let expected = case_count(50);
+        assert_eq!(n, expected);
     }
 
     #[test]

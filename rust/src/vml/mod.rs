@@ -29,6 +29,7 @@
 //! [`RouterPolicy::CompletionTime`]: crate::config::RouterPolicy::CompletionTime
 
 pub mod envelope;
+pub mod pacing;
 pub mod router;
 pub mod virtual_consumer;
 pub mod virtual_producer;

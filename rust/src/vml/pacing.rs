@@ -1,0 +1,23 @@
+//! Pacing policy for the virtual messaging layer's polling loops.
+//!
+//! The VML's real-time threads (virtual consumers, the producer pool's
+//! backpressure path) briefly yield when they find nothing to do or no
+//! capacity to do it with. Those waits used to be magic numbers scattered
+//! through the loops; they are named here so the pacing is one policy,
+//! tunable in one place, and visible to the simulation layer — scenario
+//! models in [`crate::sim`] represent the same consume/route/publish
+//! cycle as discrete ticks, with these constants as the real-time
+//! equivalents of one idle tick.
+
+use std::time::Duration;
+
+/// Wait between polls when a consumer's `poll_batch` returns empty.
+pub const CONSUMER_IDLE: Duration = Duration::from_millis(2);
+
+/// Wait between routing retries while every task mailbox is full
+/// (backpressure toward the broker).
+pub const ROUTE_RETRY: Duration = Duration::from_millis(2);
+
+/// Wait between publish retries while every producer worker's mailbox is
+/// full (backpressure toward the tasks).
+pub const PUBLISH_RETRY: Duration = Duration::from_millis(1);

@@ -19,7 +19,6 @@ use crate::vml::envelope::Envelope;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
 
 /// Shared wiring a consumer thread needs.
 #[derive(Clone)]
@@ -91,7 +90,7 @@ impl VirtualConsumer {
             // costs of Eq. 1's `n`-message cycle paid once per batch.
             let mut batch = consumer.poll_batch(w.batch);
             if batch.is_empty() {
-                std::thread::sleep(Duration::from_millis(2));
+                std::thread::sleep(super::pacing::CONSUMER_IDLE);
                 continue;
             }
             let consumed_at = w.clock.now();
@@ -112,7 +111,7 @@ impl VirtualConsumer {
                 if self.stop.load(Ordering::SeqCst) {
                     break;
                 }
-                std::thread::sleep(Duration::from_millis(2));
+                std::thread::sleep(super::pacing::ROUTE_RETRY);
             }
             if !pending.is_empty() {
                 // Stopping with unrouted messages: don't commit the batch;
@@ -254,6 +253,7 @@ mod tests {
     use crate::util::clock::real_clock;
     use crate::vml::router::RouteTarget;
     use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
 
     struct Sink {
         seen: Mutex<Vec<u64>>,

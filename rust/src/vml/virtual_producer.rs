@@ -142,7 +142,7 @@ impl VirtualProducerPool {
                     pending = Some(batch);
                 }
             }
-            std::thread::sleep(std::time::Duration::from_millis(1));
+            std::thread::sleep(super::pacing::PUBLISH_RETRY);
         }
     }
 

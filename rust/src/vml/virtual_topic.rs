@@ -67,6 +67,13 @@ impl VirtualTopic {
         })
     }
 
+    /// Messages queued at the producer pool's workers, not yet published
+    /// to the broker (drain-watermark signal: nonzero means output is
+    /// still in transit toward the messaging layer).
+    pub fn producer_depth(&self) -> usize {
+        self.producer_pool.depth()
+    }
+
     /// Subscribe `job`: start its virtual consumer group feeding `router`.
     /// `consumers` is capped at the topic's partition count.
     pub fn subscribe(

@@ -1,0 +1,187 @@
+//! Property tests for the CRDT suite through the public API: the three
+//! merge laws (commutativity, associativity, idempotence) and replica
+//! convergence for every provided type. Cases are randomized through
+//! `util::propcheck` (seed pinned by `RL_PROPCHECK_SEED`, case count
+//! raised in CI's nightly job via `RL_PROPCHECK_CASES`).
+
+use reactive_liquid::prop_assert;
+use reactive_liquid::reactive::state::crdt::{Crdt, GCounter, LwwRegister, OrSet, PnCounter};
+use reactive_liquid::util::propcheck::{check, Gen};
+
+const CASES: usize = 150;
+
+/// Assert the three CvRDT merge laws for concrete instances.
+fn assert_merge_laws<T: Crdt + PartialEq + std::fmt::Debug>(
+    a: &T,
+    b: &T,
+    c: &T,
+) -> Result<(), String> {
+    // Commutativity: a ⊔ b == b ⊔ a.
+    let mut ab = a.clone();
+    ab.merge(b);
+    let mut ba = b.clone();
+    ba.merge(a);
+    prop_assert!(ab == ba, "merge not commutative: {ab:?} vs {ba:?}");
+
+    // Associativity: (a ⊔ b) ⊔ c == a ⊔ (b ⊔ c).
+    let mut ab_c = ab.clone();
+    ab_c.merge(c);
+    let mut bc = b.clone();
+    bc.merge(c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+    prop_assert!(ab_c == a_bc, "merge not associative: {ab_c:?} vs {a_bc:?}");
+
+    // Idempotence: a ⊔ a == a.
+    let mut aa = a.clone();
+    aa.merge(a);
+    prop_assert!(&aa == a, "merge not idempotent: {aa:?} vs {a:?}");
+    Ok(())
+}
+
+/// Full-mesh exchange: after every replica merges every other, all
+/// replicas must be equal (strong eventual consistency).
+fn assert_converges<T: Crdt + PartialEq + std::fmt::Debug>(replicas: &[T]) -> Result<(), String> {
+    let mut merged: Vec<T> = replicas.to_vec();
+    for m in merged.iter_mut() {
+        for r in replicas {
+            m.merge(r);
+        }
+    }
+    for w in merged.windows(2) {
+        prop_assert!(w[0] == w[1], "replicas diverged: {:?} vs {:?}", w[0], w[1]);
+    }
+    Ok(())
+}
+
+fn arb_gcounter(g: &mut Gen, replica_base: u64) -> GCounter {
+    let mut c = GCounter::new();
+    for _ in 0..g.usize(0, 8) {
+        c.inc(replica_base + g.usize(0, 4) as u64, g.usize(1, 10) as u64);
+    }
+    c
+}
+
+fn arb_pncounter(g: &mut Gen, replica_base: u64) -> PnCounter {
+    let mut c = PnCounter::new();
+    for _ in 0..g.usize(0, 8) {
+        let r = replica_base + g.usize(0, 4) as u64;
+        let v = g.usize(1, 10) as u64;
+        if g.bool() {
+            c.inc(r, v);
+        } else {
+            c.dec(r, v);
+        }
+    }
+    c
+}
+
+fn arb_orset(g: &mut Gen, replica: u64) -> OrSet<u8> {
+    let mut s = OrSet::new();
+    for _ in 0..g.usize(0, 10) {
+        let v = g.usize(0, 6) as u8;
+        if g.bool() {
+            s.add(replica, v);
+        } else {
+            s.remove(&v);
+        }
+    }
+    s
+}
+
+/// LWW stamps must be unique system-wide, so each replica writes from a
+/// disjoint replica-id block.
+fn arb_lww(g: &mut Gen, replica_base: u64) -> LwwRegister<u32> {
+    let mut r = LwwRegister::new();
+    for _ in 0..g.usize(0, 5) {
+        r.set(
+            g.usize(0, 100) as u32,
+            g.usize(0, 20) as u64,
+            replica_base + g.usize(0, 4) as u64,
+        );
+    }
+    r
+}
+
+#[test]
+fn gcounter_merge_laws_and_convergence() {
+    check("gcounter-laws", CASES, |g| {
+        let (a, b, c) = (arb_gcounter(g, 0), arb_gcounter(g, 10), arb_gcounter(g, 20));
+        assert_merge_laws(&a, &b, &c)?;
+        assert_converges(&[a.clone(), b.clone(), c.clone()])?;
+        // Disjoint replica blocks: the merged total is the sum of parts.
+        let mut all = a.clone();
+        all.merge(&b);
+        all.merge(&c);
+        prop_assert!(
+            all.value() == a.value() + b.value() + c.value(),
+            "disjoint-replica merge should sum: {} vs {}+{}+{}",
+            all.value(),
+            a.value(),
+            b.value(),
+            c.value()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn pncounter_merge_laws_and_convergence() {
+    check("pncounter-laws", CASES, |g| {
+        let (a, b, c) = (arb_pncounter(g, 0), arb_pncounter(g, 10), arb_pncounter(g, 20));
+        assert_merge_laws(&a, &b, &c)?;
+        assert_converges(&[a.clone(), b.clone(), c.clone()])?;
+        let mut all = a.clone();
+        all.merge(&b);
+        all.merge(&c);
+        prop_assert!(
+            all.value() == a.value() + b.value() + c.value(),
+            "disjoint-replica merge should sum"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn orset_merge_laws_and_convergence() {
+    check("orset-laws", CASES, |g| {
+        let (a, b, c) = (arb_orset(g, 0), arb_orset(g, 1), arb_orset(g, 2));
+        assert_merge_laws(&a, &b, &c)?;
+        assert_converges(&[a, b, c])?;
+        Ok(())
+    });
+}
+
+#[test]
+fn orset_add_wins_over_concurrent_remove() {
+    check("orset-add-wins", CASES, |g| {
+        let v = g.usize(0, 6) as u8;
+        let mut a = arb_orset(g, 0);
+        a.add(0, v);
+        let mut b = a.clone();
+        // Concurrently: replica A removes, replica B re-adds (fresh tag).
+        a.remove(&v);
+        b.add(1, v);
+        a.merge(&b);
+        b.merge(&a);
+        prop_assert!(a.contains(&v), "concurrent re-add must survive the remove");
+        prop_assert!(a == b, "both orders converge");
+        Ok(())
+    });
+}
+
+#[test]
+fn lww_merge_laws_and_convergence() {
+    check("lww-laws", CASES, |g| {
+        let (a, b, c) = (arb_lww(g, 0), arb_lww(g, 10), arb_lww(g, 20));
+        assert_merge_laws(&a, &b, &c)?;
+        assert_converges(&[a.clone(), b.clone(), c.clone()])?;
+        // The converged value carries the globally largest stamp.
+        let mut all = a.clone();
+        all.merge(&b);
+        all.merge(&c);
+        let best = [a.stamp(), b.stamp(), c.stamp()].into_iter().max().unwrap();
+        prop_assert!(all.stamp() == best, "winner stamp {:?} != max {:?}", all.stamp(), best);
+        Ok(())
+    });
+}

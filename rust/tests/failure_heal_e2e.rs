@@ -1,5 +1,11 @@
 //! Failure injection end-to-end: nodes die, the two architectures heal
 //! differently (supervision vs node-restart), nothing is lost for good.
+//!
+//! These runs pace ingest against real time on purpose — throughput under
+//! failures is the quantity being compared, so the experiment window must
+//! be wall-clock. The deterministic equivalents (same fault model on
+//! virtual time, millisecond runtimes) are in `sim_chaos_matrix.rs`; keep
+//! new failure scenarios there unless they need the real pipeline.
 
 use reactive_liquid::config::{Architecture, ExperimentConfig, TcmmBackend};
 use reactive_liquid::experiment::run_experiment;

@@ -1,12 +1,20 @@
 //! End-to-end: the full TCMM pipeline under the Reactive Liquid stack,
 //! drain-mode (ingest the dataset once, verify every layer's effect).
+//!
+//! Drain-mode runs are *watermark-gated*, not sleep-timed: the runner ends
+//! the run as soon as the ingest pass has finished, every consumer group's
+//! lag is zero, and the processed count has been quiet for a settle
+//! window. The configured duration below is only a hard upper bound, so
+//! these tests are condition-synchronized rather than timing-sensitive.
+//! (Deterministic virtual-time coverage of the same elastic/failure
+//! behaviour lives in `sim_chaos_matrix.rs`.)
 
 use reactive_liquid::config::{Architecture, ExperimentConfig, RouterPolicy, TcmmBackend};
 use reactive_liquid::experiment::run_experiment;
 
-/// Experiments are timing-sensitive; serialize them so parallel tests in
-/// this binary don't contend for the (single-core) host while one run's
-/// baseline is being measured.
+/// Experiments contend for cores; serialize them so parallel tests in
+/// this binary don't starve one run's pipeline threads while another
+/// drains.
 static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
 fn serial() -> std::sync::MutexGuard<'static, ()> {
     SERIAL.lock().unwrap_or_else(|e| e.into_inner())
