@@ -1,0 +1,79 @@
+//! Actor-executor throughput: messages/second for 100 / 1k / 10k actors
+//! multiplexed over the fixed work-stealing worker pool.
+//!
+//! The printed `actors/os-thread` column is the point of the executor
+//! refactor: before it, 10k actors meant 10k OS threads; now the OS
+//! thread count is `available_parallelism` workers + 1 timer thread no
+//! matter how many actors are spawned.
+//!
+//! Run: `cargo bench --bench actor_throughput`
+//! Smoke (CI): `RL_BENCH_SMOKE=1 cargo bench --bench actor_throughput`
+
+use reactive_liquid::actor::system::{Actor, ActorSystem, Ctx};
+use reactive_liquid::util::wait_until;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct CountActor {
+    hits: Arc<AtomicU64>,
+}
+
+impl Actor for CountActor {
+    type Msg = u64;
+
+    fn receive(&mut self, msg: u64, _ctx: &mut Ctx<u64>) {
+        self.hits.fetch_add(msg, Ordering::Relaxed);
+    }
+}
+
+fn run_scale(actors: usize, total_msgs: u64) {
+    let sys = ActorSystem::new();
+    let workers = sys.executor().worker_count();
+    let os_threads = workers + 1; // worker pool + timer thread
+    let hits = Arc::new(AtomicU64::new(0));
+    let refs: Vec<_> = (0..actors)
+        .map(|i| {
+            let h = hits.clone();
+            sys.spawn(&format!("bench:{i}"), 128, move || CountActor { hits: h.clone() })
+        })
+        .collect();
+
+    let per_actor = (total_msgs / actors as u64).max(1);
+    let sent = per_actor * actors as u64;
+    let start = Instant::now();
+    for _ in 0..per_actor {
+        for r in &refs {
+            // Blocking tell: backpressure instead of unbounded queues.
+            r.tell(1).expect("live actor");
+        }
+    }
+    let delivered = wait_until(
+        || hits.load(Ordering::Relaxed) == sent,
+        Duration::from_secs(120),
+    );
+    let elapsed = start.elapsed();
+    assert!(delivered, "only {}/{} messages processed", hits.load(Ordering::Relaxed), sent);
+    let rate = sent as f64 / elapsed.as_secs_f64();
+    println!(
+        "actors={actors:>6}  msgs={sent:>8}  os_threads={os_threads:>3}  \
+         actors/os-thread={:>8.1}  throughput={rate:>12.0} msg/s  elapsed={elapsed:?}",
+        actors as f64 / os_threads as f64
+    );
+    sys.shutdown();
+}
+
+fn main() {
+    let smoke = std::env::var("RL_BENCH_SMOKE").is_ok();
+    println!("# actor_throughput: msgs/sec over the fixed work-stealing pool");
+    if smoke {
+        // Tiny CI smoke: prove 10k actors activate on the bounded pool
+        // without measuring steady-state throughput.
+        run_scale(100, 20_000);
+        run_scale(10_000, 20_000);
+        return;
+    }
+    for &actors in &[100usize, 1_000, 10_000] {
+        run_scale(actors, 1_000_000);
+    }
+}

@@ -1,24 +1,62 @@
 //! Dead-letter accounting.
 //!
 //! Messages sent to closed mailboxes are counted per destination so
-//! operators can see where flow is being dropped during failures. (The
-//! mailbox itself counts rejects; this registry aggregates across actors.)
+//! operators can see where flow is being dropped during failures. The
+//! mailbox itself counts rejects; this registry aggregates across actors:
+//! [`ActorSystem`] owns one instance and every [`ActorRef`] records its
+//! closed-mailbox `tell`/`try_tell` rejects here. Bind a metrics gauge
+//! with [`DeadLetters::bind_gauge`] to surface the running total in a
+//! [`MetricsRegistry`].
+//!
+//! [`ActorSystem`]: super::system::ActorSystem
+//! [`ActorRef`]: super::system::ActorRef
+//! [`MetricsRegistry`]: crate::metrics::MetricsRegistry
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Aggregated dead-letter counts keyed by actor path.
 pub struct DeadLetters {
     counts: Mutex<HashMap<String, u64>>,
+    total: AtomicU64,
+    /// Optional metrics gauge mirroring `total` (from
+    /// [`MetricsRegistry::gauge`](crate::metrics::MetricsRegistry::gauge),
+    /// whose handles are `'static`). Write-once so the reject hot path
+    /// reads it lock-free.
+    gauge: OnceLock<&'static AtomicI64>,
 }
 
 impl DeadLetters {
     pub fn new() -> Self {
-        DeadLetters { counts: Mutex::new(HashMap::new()) }
+        DeadLetters {
+            counts: Mutex::new(HashMap::new()),
+            total: AtomicU64::new(0),
+            gauge: OnceLock::new(),
+        }
+    }
+
+    /// Mirror the running total into a metrics gauge (e.g.
+    /// `registry.gauge("actor.dead_letters")`). First binding wins;
+    /// re-binding the same handle (the common idempotent case) is a
+    /// no-op.
+    pub fn bind_gauge(&self, gauge: &'static AtomicI64) {
+        let _ = self.gauge.set(gauge);
+        if let Some(g) = self.gauge.get() {
+            g.fetch_max(self.total() as i64, Ordering::Relaxed);
+        }
     }
 
     pub fn record(&self, path: &str) {
         *self.counts.lock().unwrap().entry(path.to_string()).or_insert(0) += 1;
+        self.total.fetch_add(1, Ordering::Relaxed);
+        // fetch_max of a freshly-loaded total: the gauge only moves
+        // forward and converges to the true total even when records race
+        // each other or the initial bind (an increment- or store-based
+        // mirror could double-count or go backwards across those races).
+        if let Some(g) = self.gauge.get() {
+            g.fetch_max(self.total.load(Ordering::Relaxed) as i64, Ordering::Relaxed);
+        }
     }
 
     pub fn count(&self, path: &str) -> u64 {
@@ -26,7 +64,7 @@ impl DeadLetters {
     }
 
     pub fn total(&self) -> u64 {
-        self.counts.lock().unwrap().values().sum()
+        self.total.load(Ordering::Relaxed)
     }
 
     /// Snapshot sorted by count descending.
@@ -48,6 +86,7 @@ impl Default for DeadLetters {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::MetricsRegistry;
 
     #[test]
     fn counts_and_top() {
@@ -59,5 +98,18 @@ mod tests {
         assert_eq!(dl.count("missing"), 0);
         assert_eq!(dl.total(), 3);
         assert_eq!(dl.top(1), vec![("a".to_string(), 2)]);
+    }
+
+    #[test]
+    fn bound_gauge_tracks_total() {
+        let registry = MetricsRegistry::new();
+        let dl = DeadLetters::new();
+        dl.record("early"); // before binding
+        dl.bind_gauge(registry.gauge("actor.dead_letters"));
+        assert_eq!(registry.get_gauge("actor.dead_letters"), 1, "bind seeds current total");
+        dl.record("late");
+        dl.record("late");
+        assert_eq!(registry.get_gauge("actor.dead_letters"), 3);
+        assert_eq!(dl.total(), 3);
     }
 }

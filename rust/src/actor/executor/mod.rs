@@ -1,0 +1,471 @@
+//! The actor executor: logical actors multiplexed over a fixed worker pool.
+//!
+//! Before this subsystem every actor owned a dedicated OS thread, so the
+//! elastic worker service's scale-up signal translated into thread
+//! creation and realistic scale capped at hundreds of actors. The
+//! executor decouples the two: actors are **poll-driven state machines**
+//! scheduled onto a small fixed pool of carrier threads, so 10k+ logical
+//! actors run on `available_parallelism` OS threads (plus one timer
+//! thread).
+//!
+//! The pieces:
+//!
+//! - [`Poller`] — one unit of schedulable work (an actor cell, a virtual
+//!   consumer, a Liquid task). `poll(budget)` runs one *activation*:
+//!   process up to `budget` messages, then report what should happen next
+//!   via [`Poll`].
+//! - [`Activation`] — the per-poller schedule handle. It carries one
+//!   atomic schedule flag (a four-state machine: idle / scheduled /
+//!   running / notified) so message arrival costs one CAS on the hot
+//!   path — no condvar wait, no thread wakeup unless a worker is parked.
+//!   [`Activation::notify`] is what mailboxes call on enqueue.
+//! - [`Executor`] — the scheduling backend. [`ThreadedExecutor`] runs
+//!   activations on a work-stealing worker pool against real time;
+//!   [`crate::sim::SimExecutor`] runs them as discrete events on virtual
+//!   time, single-threaded and deterministic, so chaos scenarios keep
+//!   byte-identical fingerprints.
+//! - [`TimerWheel`] (threaded backend only) — deadline re-activation for
+//!   idle and backpressure waits: a poller returns [`Poll::After`] and is
+//!   re-notified when the deadline expires (or sooner, if a message
+//!   arrives first). This is what retired the `thread::sleep` pacing
+//!   loops in the VML and processing layers.
+//!
+//! # Fairness
+//!
+//! Every activation is bounded by a message budget. A poller that still
+//! has work after spending its budget returns [`Poll::Ready`] and goes to
+//! the *back* of the shared injector queue, so a flooded actor cannot
+//! starve its siblings beyond one budget's worth of messages.
+//!
+//! # Lifetime
+//!
+//! The executor holds only a [`Weak`] reference to each poller — the
+//! owner (actor system, consumer group, job) keeps it alive; dropping the
+//! owner's `Arc` quiesces the activation without explicit deregistration.
+
+pub mod threaded;
+pub mod timer;
+
+pub use threaded::ThreadedExecutor;
+pub use timer::TimerWheel;
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Duration;
+
+/// Default per-activation message budget (fairness quantum).
+pub const DEFAULT_BUDGET: usize = 64;
+
+/// What a poller wants after one activation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Poll {
+    /// Nothing left to do: wait for an external [`Activation::notify`]
+    /// (e.g. a message arriving in the mailbox).
+    Idle,
+    /// More work is queued (budget exhausted): re-activate as soon as a
+    /// worker is free, behind already-scheduled peers.
+    Ready,
+    /// Idle poll or backpressure: re-activate after the given deadline on
+    /// the executor's timer (or sooner if a notify arrives first).
+    After(Duration),
+}
+
+/// A schedulable unit: one logical actor (or actor-like loop).
+///
+/// `poll` runs one activation. It is never invoked concurrently with
+/// itself — the [`Activation`] state machine guarantees mutual exclusion —
+/// so implementations may keep interior state behind an uncontended lock.
+pub trait Poller: Send + Sync + 'static {
+    /// Run one activation, processing at most `budget` messages.
+    fn poll(&self, budget: usize) -> Poll;
+
+    /// Stable identifier for logs and traces.
+    fn path(&self) -> &str;
+}
+
+// Activation schedule states. The transitions:
+//
+//   notify:  IDLE -> SCHEDULED (enqueue) ; RUNNING -> NOTIFIED ; else no-op
+//   run:     SCHEDULED -> RUNNING -> { SCHEDULED (Ready / notified-while-
+//            running: re-enqueue), IDLE (Idle / After: timer re-notifies) }
+const IDLE: u8 = 0;
+const SCHEDULED: u8 = 1;
+const RUNNING: u8 = 2;
+const NOTIFIED: u8 = 3;
+
+/// Scheduling backend an [`Activation`] pushes itself onto. Implemented
+/// by the threaded core and the sim core.
+pub(crate) trait ExecCore: Send + Sync {
+    /// Queue an activation for execution (notify path: locality-friendly).
+    fn enqueue(&self, act: Arc<Activation>);
+    /// Queue a budget-exhausted activation behind all scheduled peers
+    /// (fairness path).
+    fn enqueue_yield(&self, act: Arc<Activation>);
+    /// Re-notify an activation once `delay` has elapsed.
+    fn enqueue_after(&self, delay: Duration, act: Arc<Activation>);
+}
+
+/// The per-poller schedule handle: one atomic flag + the executor hook.
+///
+/// Mailboxes (and anything else that makes a poller runnable) call
+/// [`Activation::notify`]; the executor calls [`Activation::run`].
+pub struct Activation {
+    poller: Weak<dyn Poller>,
+    path: String,
+    state: AtomicU8,
+    budget: usize,
+    core: Weak<dyn ExecCore>,
+    activations: AtomicU64,
+}
+
+impl Activation {
+    pub(crate) fn new(
+        poller: &Arc<dyn Poller>,
+        budget: usize,
+        core: Weak<dyn ExecCore>,
+    ) -> Arc<Self> {
+        Arc::new(Activation {
+            path: poller.path().to_string(),
+            poller: Arc::downgrade(poller),
+            state: AtomicU8::new(IDLE),
+            budget: budget.max(1),
+            core,
+            activations: AtomicU64::new(0),
+        })
+    }
+
+    /// The registered poller's path.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Activations executed so far (observability).
+    pub fn activations(&self) -> u64 {
+        self.activations.load(Ordering::Relaxed)
+    }
+
+    /// Make the poller runnable: one CAS on the hot path. Idempotent —
+    /// notifying an already-scheduled or running activation coalesces
+    /// into (at most) one extra run.
+    pub fn notify(self: &Arc<Self>) {
+        loop {
+            match self.state.compare_exchange(
+                IDLE,
+                SCHEDULED,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    match self.core.upgrade() {
+                        Some(core) => core.enqueue(self.clone()),
+                        None => self.state.store(IDLE, Ordering::Release),
+                    }
+                    return;
+                }
+                Err(RUNNING) => {
+                    if self
+                        .state
+                        .compare_exchange(RUNNING, NOTIFIED, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        return;
+                    }
+                    // State moved under us (run finished or a racing
+                    // notify won); retry from the top.
+                }
+                Err(_) => return, // SCHEDULED or NOTIFIED: already pending
+            }
+        }
+    }
+
+    /// Execute one activation. Called only by executor backends, only on
+    /// activations they popped from their queues (state == SCHEDULED).
+    pub(crate) fn run(self: &Arc<Self>) {
+        self.state.store(RUNNING, Ordering::Release);
+        self.activations.fetch_add(1, Ordering::Relaxed);
+        let verdict = match self.poller.upgrade() {
+            // A panic that escapes a poller is contained here; pollers
+            // hosting user code catch panics themselves to run their
+            // failure hooks first.
+            Some(p) => std::panic::catch_unwind(AssertUnwindSafe(|| p.poll(self.budget)))
+                .unwrap_or(Poll::Idle),
+            None => Poll::Idle, // owner dropped the poller: quiesce
+        };
+        match verdict {
+            Poll::Ready => {
+                self.state.store(SCHEDULED, Ordering::Release);
+                match self.core.upgrade() {
+                    Some(core) => core.enqueue_yield(self.clone()),
+                    None => self.state.store(IDLE, Ordering::Release),
+                }
+            }
+            Poll::Idle | Poll::After(_) => {
+                match self.state.compare_exchange(
+                    RUNNING,
+                    IDLE,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        if let Poll::After(delay) = verdict {
+                            if let Some(core) = self.core.upgrade() {
+                                core.enqueue_after(delay, self.clone());
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        // NOTIFIED while running: go again immediately —
+                        // new input trumps both Idle and the After delay.
+                        self.state.store(SCHEDULED, Ordering::Release);
+                        match self.core.upgrade() {
+                            Some(core) => core.enqueue(self.clone()),
+                            None => self.state.store(IDLE, Ordering::Release),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Shared wind-down plumbing for executor-hosted components (actor
+/// cells, virtual consumers, Liquid tasks): the registered activation
+/// plus the latch their stop paths wait on. One implementation instead
+/// of three hand-rolled copies.
+pub struct Registration {
+    activation: Mutex<Option<Arc<Activation>>>,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Registration {
+    pub fn new() -> Self {
+        Registration {
+            activation: Mutex::new(None),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Install the activation handle (once, right after `register`).
+    pub fn arm(&self, act: Arc<Activation>) {
+        *self.activation.lock().unwrap() = Some(act);
+    }
+
+    /// Notify the registered activation (no-op before `arm`).
+    pub fn notify(&self) {
+        if let Some(act) = self.activation.lock().unwrap().as_ref() {
+            act.notify();
+        }
+    }
+
+    /// Wake every `join_while` waiter (call after flipping the
+    /// component's down flag).
+    pub fn wake_joiners(&self) {
+        let _g = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Wait (bounded) while `still_up` holds. Returns the final negated
+    /// condition — true when the component wound down in time. A zero
+    /// timeout returns immediately (cooperative executors like the sim
+    /// backend drain only when their scheduler is pumped).
+    pub fn join_while(&self, still_up: impl Fn() -> bool, timeout: Duration) -> bool {
+        if timeout.is_zero() {
+            return !still_up();
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.lock.lock().unwrap();
+        while still_up() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return !still_up();
+            }
+            g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
+        }
+        true
+    }
+}
+
+impl Default for Registration {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A scheduling backend for actor activations.
+pub trait Executor: Send + Sync {
+    /// Register a poller; returns its activation handle (initially idle —
+    /// call [`Activation::notify`] to schedule the first activation).
+    ///
+    /// The executor keeps only a weak reference: the caller owns the
+    /// poller, and dropping it quiesces the activation.
+    fn register(&self, poller: Arc<dyn Poller>, budget: usize) -> Arc<Activation>;
+
+    /// Carrier threads executing activations (1 for the sim executor).
+    fn worker_count(&self) -> usize;
+
+    /// True when activations make progress only while the caller pumps
+    /// the executor (the sim backend). Stop paths must not block waiting
+    /// for a cooperative executor's wind-down — nothing would drive it.
+    fn is_cooperative(&self) -> bool {
+        false
+    }
+
+    /// Stop executing. Threaded: joins workers and the timer thread;
+    /// pending activations are dropped. Sim: no-op (the scheduler owns
+    /// the event loop).
+    fn shutdown(&self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    /// Core that records enqueues without running anything.
+    struct RecordingCore {
+        enqueued: Mutex<Vec<Arc<Activation>>>,
+        yields: AtomicUsize,
+        timers: Mutex<Vec<Duration>>,
+    }
+
+    impl RecordingCore {
+        fn new() -> Arc<Self> {
+            Arc::new(RecordingCore {
+                enqueued: Mutex::new(Vec::new()),
+                yields: AtomicUsize::new(0),
+                timers: Mutex::new(Vec::new()),
+            })
+        }
+    }
+
+    impl ExecCore for RecordingCore {
+        fn enqueue(&self, act: Arc<Activation>) {
+            self.enqueued.lock().unwrap().push(act);
+        }
+        fn enqueue_yield(&self, act: Arc<Activation>) {
+            self.yields.fetch_add(1, Ordering::SeqCst);
+            self.enqueued.lock().unwrap().push(act);
+        }
+        fn enqueue_after(&self, delay: Duration, _act: Arc<Activation>) {
+            self.timers.lock().unwrap().push(delay);
+        }
+    }
+
+    struct StubPoller {
+        verdict: Mutex<Poll>,
+        polls: AtomicUsize,
+    }
+
+    impl StubPoller {
+        fn new(verdict: Poll) -> Arc<Self> {
+            Arc::new(StubPoller { verdict: Mutex::new(verdict), polls: AtomicUsize::new(0) })
+        }
+    }
+
+    impl Poller for StubPoller {
+        fn poll(&self, _budget: usize) -> Poll {
+            self.polls.fetch_add(1, Ordering::SeqCst);
+            *self.verdict.lock().unwrap()
+        }
+        fn path(&self) -> &str {
+            "stub"
+        }
+    }
+
+    fn activation(
+        poller: &Arc<StubPoller>,
+        core: &Arc<RecordingCore>,
+    ) -> Arc<Activation> {
+        let p: Arc<dyn Poller> = poller.clone();
+        let c: Weak<dyn ExecCore> = Arc::downgrade(core);
+        Activation::new(&p, DEFAULT_BUDGET, c)
+    }
+
+    #[test]
+    fn notify_enqueues_once() {
+        let core = RecordingCore::new();
+        let poller = StubPoller::new(Poll::Idle);
+        let act = activation(&poller, &core);
+        act.notify();
+        act.notify(); // coalesced: already scheduled
+        assert_eq!(core.enqueued.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn run_idle_returns_to_idle_and_renotifies() {
+        let core = RecordingCore::new();
+        let poller = StubPoller::new(Poll::Idle);
+        let act = activation(&poller, &core);
+        act.notify();
+        let queued = core.enqueued.lock().unwrap().pop().unwrap();
+        queued.run();
+        assert_eq!(poller.polls.load(Ordering::SeqCst), 1);
+        assert_eq!(act.activations(), 1);
+        // Back to idle: a new notify schedules again.
+        act.notify();
+        assert_eq!(core.enqueued.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn ready_goes_through_yield_queue() {
+        let core = RecordingCore::new();
+        let poller = StubPoller::new(Poll::Ready);
+        let act = activation(&poller, &core);
+        act.notify();
+        let queued = core.enqueued.lock().unwrap().pop().unwrap();
+        queued.run();
+        assert_eq!(core.yields.load(Ordering::SeqCst), 1, "Ready re-enqueues via yield");
+        assert_eq!(core.enqueued.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn after_schedules_timer() {
+        let core = RecordingCore::new();
+        let poller = StubPoller::new(Poll::After(Duration::from_millis(7)));
+        let act = activation(&poller, &core);
+        act.notify();
+        let queued = core.enqueued.lock().unwrap().pop().unwrap();
+        queued.run();
+        assert_eq!(core.timers.lock().unwrap().as_slice(), &[Duration::from_millis(7)]);
+        // Idle again: notify re-schedules immediately (message beats timer).
+        act.notify();
+        assert_eq!(core.enqueued.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn poller_panic_is_contained() {
+        struct Bomb;
+        impl Poller for Bomb {
+            fn poll(&self, _b: usize) -> Poll {
+                panic!("boom");
+            }
+            fn path(&self) -> &str {
+                "bomb"
+            }
+        }
+        let core = RecordingCore::new();
+        let p: Arc<dyn Poller> = Arc::new(Bomb);
+        let c: Weak<dyn ExecCore> = Arc::downgrade(&core);
+        let act = Activation::new(&p, 1, c);
+        act.notify();
+        let queued = core.enqueued.lock().unwrap().pop().unwrap();
+        queued.run(); // must not unwind
+        assert_eq!(act.activations(), 1);
+    }
+
+    #[test]
+    fn dropped_poller_quiesces() {
+        let core = RecordingCore::new();
+        let poller = StubPoller::new(Poll::Ready);
+        let act = activation(&poller, &core);
+        drop(poller);
+        act.notify();
+        let queued = core.enqueued.lock().unwrap().pop().unwrap();
+        queued.run(); // upgrade fails: treated as Idle, no re-enqueue
+        assert!(core.enqueued.lock().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,146 @@
+//! Deadline re-activation for the threaded executor.
+//!
+//! A poller that returns [`Poll::After`] parks until its deadline — the
+//! timer then calls [`Activation::notify`], which goes through the normal
+//! schedule flag (so a message arriving *before* the deadline wins, and a
+//! deadline firing after the poller was already re-scheduled coalesces
+//! into a no-op). One timer thread serves the whole executor: it fills
+//! the classic timer-wheel role with a deadline-ordered heap, sleeping on
+//! a condvar until the earliest due time (never polling).
+//!
+//! [`Poll::After`]: super::Poll::After
+
+use super::Activation;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+struct TimerEntry {
+    due: Instant,
+    seq: u64,
+    act: Arc<Activation>,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+
+impl Eq for TimerEntry {}
+
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimerEntry {
+    /// Reversed so the std max-heap pops the *earliest* `(due, seq)`.
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        other.due.cmp(&self.due).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct TimerInner {
+    heap: Mutex<BinaryHeap<TimerEntry>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    seq: AtomicU64,
+}
+
+/// The executor's timer: deadline-ordered re-notification.
+pub struct TimerWheel {
+    inner: Arc<TimerInner>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl TimerWheel {
+    /// Start the timer thread.
+    pub fn start() -> Self {
+        let inner = Arc::new(TimerInner {
+            heap: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+        });
+        let i = inner.clone();
+        let thread = std::thread::Builder::new()
+            .name("executor-timer".to_string())
+            .spawn(move || Self::drive(&i))
+            .expect("spawn executor timer thread");
+        TimerWheel { inner, thread: Mutex::new(Some(thread)) }
+    }
+
+    /// Notify `act` once `delay` has elapsed.
+    pub fn schedule(&self, delay: Duration, act: Arc<Activation>) {
+        let entry = TimerEntry {
+            due: Instant::now() + delay,
+            seq: self.inner.seq.fetch_add(1, Ordering::Relaxed),
+            act,
+        };
+        let mut heap = self.inner.heap.lock().unwrap();
+        let preempts = heap.peek().map(|head| entry.due < head.due).unwrap_or(true);
+        heap.push(entry);
+        drop(heap);
+        if preempts {
+            // New earliest deadline: wake the thread to re-arm its wait.
+            self.inner.cv.notify_one();
+        }
+    }
+
+    /// Entries currently pending (observability / tests).
+    pub fn pending(&self) -> usize {
+        self.inner.heap.lock().unwrap().len()
+    }
+
+    /// Stop the timer thread; pending entries are dropped.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    fn drive(inner: &TimerInner) {
+        let mut heap = inner.heap.lock().unwrap();
+        loop {
+            if inner.shutdown.load(Ordering::SeqCst) {
+                heap.clear();
+                return;
+            }
+            let now = Instant::now();
+            let mut due = Vec::new();
+            while heap.peek().map(|e| e.due <= now).unwrap_or(false) {
+                due.push(heap.pop().expect("peeked entry"));
+            }
+            if !due.is_empty() {
+                // Fire outside the lock: notify goes through the schedule
+                // flag and may enqueue onto the executor.
+                drop(heap);
+                for e in due {
+                    e.act.notify();
+                }
+                heap = inner.heap.lock().unwrap();
+                continue;
+            }
+            heap = match heap.peek().map(|e| e.due) {
+                Some(next) => {
+                    let wait = next.saturating_duration_since(now);
+                    inner.cv.wait_timeout(heap, wait).unwrap().0
+                }
+                None => inner.cv.wait(heap).unwrap(),
+            };
+        }
+    }
+}
+
+impl Drop for TimerWheel {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -3,10 +3,20 @@
 //! Built on `Mutex<VecDeque>` + two condvars (not-empty / not-full). The
 //! depth is mirrored into an atomic so the elastic-worker service and
 //! routers can read queue lengths without touching the lock.
+//!
+//! Since the executor refactor the receiving side is **poll-driven**: the
+//! hosting actor is activated by the executor and drains via
+//! [`Mailbox::try_recv`], never blocking a worker thread. Message arrival
+//! reaches the executor through the mailbox's *signal* — a callback
+//! (wired to [`Activation::notify`]) invoked after every successful
+//! enqueue and on close. The blocking [`Mailbox::recv_timeout`] remains
+//! for non-actor consumers (tests, the ask pattern's reply side).
+//!
+//! [`Activation::notify`]: super::executor::Activation::notify
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,7 +33,11 @@ pub enum RecvError {
     Closed,
     /// Timed out with no message.
     Timeout,
+    /// Nothing queued right now (only from [`Mailbox::try_recv`]).
+    Empty,
 }
+
+type Signal = Box<dyn Fn() + Send + Sync>;
 
 pub struct Mailbox<M> {
     queue: Mutex<VecDeque<M>>,
@@ -34,6 +48,9 @@ pub struct Mailbox<M> {
     closed: AtomicBool,
     /// Messages rejected because the mailbox was closed.
     dead: AtomicUsize,
+    /// Enqueue/close callback (the owning actor's activation notify).
+    /// Write-once so the send hot path reads it without a lock.
+    signal: OnceLock<Signal>,
 }
 
 impl<M> Mailbox<M> {
@@ -47,6 +64,22 @@ impl<M> Mailbox<M> {
             depth: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
             dead: AtomicUsize::new(0),
+            signal: OnceLock::new(),
+        }
+    }
+
+    /// Install the enqueue signal (first installation wins — the actor
+    /// system sets it exactly once, before any sender exists). The
+    /// executor-hosted actor system points this at the actor's
+    /// activation so message arrival schedules an activation.
+    pub fn set_signal(&self, f: impl Fn() + Send + Sync + 'static) {
+        let _ = self.signal.set(Box::new(f));
+    }
+
+    /// Fire the enqueue signal (called outside the queue lock).
+    fn ping(&self) {
+        if let Some(s) = self.signal.get() {
+            s();
         }
     }
 
@@ -70,19 +103,57 @@ impl<M> Mailbox<M> {
 
     /// Blocking send with backpressure; fails only if closed.
     pub fn send(&self, msg: M) -> Result<(), SendError> {
+        self.send_back(msg).map_err(|(err, _msg)| err)
+    }
+
+    /// Blocking send that hands the message back on failure, so callers
+    /// that spill to another target keep ownership without cloning.
+    pub fn send_back(&self, msg: M) -> Result<(), (SendError, M)> {
         let mut q = self.queue.lock().unwrap();
+        let mut msg = Some(msg);
         loop {
             if self.is_closed() {
                 self.dead.fetch_add(1, Ordering::Relaxed);
-                return Err(SendError::Closed);
+                return Err((SendError::Closed, msg.take().expect("message present")));
             }
             if q.len() < self.capacity {
-                q.push_back(msg);
+                q.push_back(msg.take().expect("message present"));
                 self.depth.store(q.len(), Ordering::Relaxed);
                 self.not_empty.notify_one();
+                drop(q);
+                self.ping();
                 return Ok(());
             }
             q = self.not_full.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        }
+    }
+
+    /// Bounded-blocking send: waits on the not-full condvar up to
+    /// `timeout`, then hands the message back with `Full` so the caller
+    /// can re-sweep other targets (no head-of-line blocking on one
+    /// mailbox).
+    pub fn send_back_timeout(&self, msg: M, timeout: Duration) -> Result<(), (SendError, M)> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.queue.lock().unwrap();
+        let mut msg = Some(msg);
+        loop {
+            if self.is_closed() {
+                self.dead.fetch_add(1, Ordering::Relaxed);
+                return Err((SendError::Closed, msg.take().expect("message present")));
+            }
+            if q.len() < self.capacity {
+                q.push_back(msg.take().expect("message present"));
+                self.depth.store(q.len(), Ordering::Relaxed);
+                self.not_empty.notify_one();
+                drop(q);
+                self.ping();
+                return Ok(());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err((SendError::Full, msg.take().expect("message present")));
+            }
+            q = self.not_full.wait_timeout(q, deadline - now).unwrap().0;
         }
     }
 
@@ -106,7 +177,25 @@ impl<M> Mailbox<M> {
         q.push_back(msg);
         self.depth.store(q.len(), Ordering::Relaxed);
         self.not_empty.notify_one();
+        drop(q);
+        self.ping();
         Ok(())
+    }
+
+    /// Non-blocking receive: the executor's activation path. After close,
+    /// drains remaining messages before reporting `Closed`.
+    pub fn try_recv(&self) -> Result<M, RecvError> {
+        let mut q = self.queue.lock().unwrap();
+        if let Some(m) = q.pop_front() {
+            self.depth.store(q.len(), Ordering::Relaxed);
+            self.not_full.notify_one();
+            return Ok(m);
+        }
+        if self.is_closed() {
+            Err(RecvError::Closed)
+        } else {
+            Err(RecvError::Empty)
+        }
     }
 
     /// Blocking receive with timeout. After close, drains remaining
@@ -155,11 +244,13 @@ impl<M> Mailbox<M> {
         n
     }
 
-    /// Close: senders fail fast, receivers drain then stop.
+    /// Close: senders fail fast, receivers drain then stop. Signals the
+    /// activation so a poll-driven actor wakes to drain and exit.
     pub fn close(&self) {
         self.closed.store(true, Ordering::Relaxed);
         self.not_empty.notify_all();
         self.not_full.notify_all();
+        self.ping();
     }
 
     /// Reopen a closed mailbox (used when restarting an actor in place).
@@ -171,6 +262,7 @@ impl<M> Mailbox<M> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize as TestCounter;
     use std::sync::Arc;
 
     #[test]
@@ -195,6 +287,34 @@ mod tests {
     }
 
     #[test]
+    fn try_recv_reports_empty_then_closed() {
+        let mb = Mailbox::new(4);
+        assert_eq!(mb.try_recv(), Err(RecvError::Empty));
+        mb.send("a").unwrap();
+        assert_eq!(mb.try_recv(), Ok("a"));
+        mb.close();
+        assert_eq!(mb.try_recv(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn signal_fires_on_send_and_close() {
+        let mb = Mailbox::new(4);
+        let pings = Arc::new(TestCounter::new(0));
+        let p = pings.clone();
+        mb.set_signal(move || {
+            p.fetch_add(1, Ordering::SeqCst);
+        });
+        mb.send(1).unwrap();
+        mb.try_send(2).unwrap();
+        assert_eq!(pings.load(Ordering::SeqCst), 2);
+        mb.close();
+        assert_eq!(pings.load(Ordering::SeqCst), 3, "close signals too");
+        // Rejected sends do not signal.
+        let _ = mb.send(3);
+        assert_eq!(pings.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
     fn try_send_back_returns_message_on_failure() {
         let mb = Mailbox::new(1);
         mb.try_send_back("a").unwrap();
@@ -205,6 +325,29 @@ mod tests {
         let (err, msg) = mb.try_send_back("c").unwrap_err();
         assert_eq!(err, SendError::Closed);
         assert_eq!(msg, "c");
+    }
+
+    #[test]
+    fn send_back_timeout_returns_full_after_deadline() {
+        let mb = Mailbox::new(1);
+        mb.send(1u32).unwrap();
+        let start = std::time::Instant::now();
+        let (err, msg) = mb.send_back_timeout(2u32, Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, SendError::Full);
+        assert_eq!(msg, 2);
+        assert!(start.elapsed() >= Duration::from_millis(20));
+        // Space frees up: the bounded send succeeds.
+        assert_eq!(mb.try_recv(), Ok(1));
+        mb.send_back_timeout(2u32, Duration::from_millis(20)).unwrap();
+    }
+
+    #[test]
+    fn send_back_returns_message_when_closed() {
+        let mb = Mailbox::new(1);
+        mb.close();
+        let (err, msg) = mb.send_back("x").unwrap_err();
+        assert_eq!(err, SendError::Closed);
+        assert_eq!(msg, "x");
     }
 
     #[test]

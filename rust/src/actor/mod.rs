@@ -1,4 +1,4 @@
-//! Asynchronous messaging layer — a thread-backed actor runtime
+//! Asynchronous messaging layer — an executor-backed actor runtime
 //! (the paper's §3.2.4; substitute for Akka).
 //!
 //! Provides exactly the reactive-manifesto properties the paper relies on:
@@ -6,24 +6,34 @@
 //! - **message-driven**: components communicate only through typed,
 //!   depth-instrumented [`Mailbox`]es (the elastic-worker service scales on
 //!   mailbox depth, §3.2.2);
-//! - **isolation**: each actor runs on its own thread; a panic is contained
-//!   to the actor, reported to failure hooks, and never unwinds into
-//!   neighbours (let-it-crash);
+//! - **isolation**: each actor is a poll-driven state machine multiplexed
+//!   over the [`executor`]'s fixed worker pool; a panic is contained to
+//!   the actor, reported to failure hooks, and never unwinds into
+//!   neighbours (let-it-crash). Actor count is decoupled from OS threads:
+//!   10k actors run on `available_parallelism` workers plus one timer
+//!   thread;
 //! - **location transparency**: [`ActorRef`] is a clonable address; senders
-//!   cannot tell where (which thread / simulated node) the actor runs, and
+//!   cannot tell where (which worker / simulated node) the actor runs, and
 //!   a restarted actor keeps its address *and* its unprocessed mailbox;
 //! - **flow control**: mailboxes are bounded; `tell` applies backpressure,
-//!   `try_tell` surfaces overload to the caller.
+//!   `try_tell` surfaces overload to the caller, and a backpressured actor
+//!   parks via [`Ctx::defer`] + the executor timer instead of blocking a
+//!   worker thread. Closed-mailbox rejects aggregate into the system's
+//!   [`DeadLetters`].
 //!
 //! Supervision *policy* lives in [`crate::reactive::supervision`]; this
-//! module only exposes the mechanism (failure hooks + [`ActorSystem::restart`]).
+//! module only exposes the mechanism (failure hooks + [`ActorSystem::restart`],
+//! which re-arms the actor's existing executor registration instead of
+//! respawning a thread).
 
 pub mod ask;
 pub mod deadletter;
+pub mod executor;
 pub mod mailbox;
 pub mod system;
 
 pub use ask::{ask, Reply};
 pub use deadletter::DeadLetters;
+pub use executor::{Activation, Executor, Poll, Poller, ThreadedExecutor};
 pub use mailbox::{Mailbox, RecvError, SendError};
 pub use system::{Actor, ActorRef, ActorSystem, Ctx};

@@ -1,12 +1,24 @@
-//! Actor trait, references, and the system that hosts actor threads.
+//! Actor trait, references, and the system that hosts actors on the
+//! executor's worker pool.
+//!
+//! Since the executor refactor an actor no longer owns an OS thread: each
+//! spawned actor is a [`TypedCell`]-backed [`Poller`] registered with the
+//! system's [`Executor`]. Message arrival flips the cell's activation
+//! flag (one CAS) and a pool worker drives the actor for up to one
+//! message budget; restarts re-register nothing — the same activation is
+//! re-armed with a fresh actor instance, so the let-it-crash cycle costs
+//! an allocation instead of a thread spawn/join.
 
+use super::deadletter::DeadLetters;
+use super::executor::{
+    Executor, Poll, Poller, Registration, ThreadedExecutor, DEFAULT_BUDGET,
+};
 use super::mailbox::{Mailbox, RecvError, SendError};
 use crate::log_debug;
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// A typed actor. Implementations are plain structs; a fresh instance is
@@ -18,6 +30,12 @@ pub trait Actor: Send + 'static {
 
     /// Called once per (re)start before the first message.
     fn pre_start(&mut self, _ctx: &mut Ctx<Self::Msg>) {}
+
+    /// Called at the start of every activation, before any message is
+    /// consumed. Actors holding internal buffers (e.g. unflushed output
+    /// under downstream backpressure) flush here and may
+    /// [`Ctx::defer`] without consuming their mailbox.
+    fn on_activate(&mut self, _ctx: &mut Ctx<Self::Msg>) {}
 
     /// Handle one message. Panicking here marks the actor failed and
     /// triggers the system's failure hooks (supervision).
@@ -34,6 +52,7 @@ pub struct Ctx<M: Send + 'static> {
     /// Restart count (0 on first incarnation).
     pub incarnation: u64,
     stop: bool,
+    defer: Option<Duration>,
 }
 
 impl<M: Send + 'static> Ctx<M> {
@@ -41,33 +60,89 @@ impl<M: Send + 'static> Ctx<M> {
     pub fn stop(&mut self) {
         self.stop = true;
     }
+
+    /// Pause this actor: end the activation now and re-activate after
+    /// `delay` (or sooner, if a new message arrives). Used for
+    /// backpressure — the mailbox is left untouched and no worker thread
+    /// blocks while waiting.
+    pub fn defer(&mut self, delay: Duration) {
+        self.defer = Some(delay);
+    }
 }
 
 /// Clonable, location-transparent actor address.
 pub struct ActorRef<M> {
     pub path: Arc<String>,
     mailbox: Arc<Mailbox<M>>,
+    dead: Option<Arc<DeadLetters>>,
 }
 
 impl<M> Clone for ActorRef<M> {
     fn clone(&self) -> Self {
-        ActorRef { path: self.path.clone(), mailbox: self.mailbox.clone() }
+        ActorRef {
+            path: self.path.clone(),
+            mailbox: self.mailbox.clone(),
+            dead: self.dead.clone(),
+        }
     }
 }
 
 impl<M: Send + 'static> ActorRef<M> {
-    /// Fire-and-forget with backpressure (blocks while the mailbox is full).
-    pub fn tell(&self, msg: M) -> Result<(), SendError> {
-        self.mailbox.send(msg)
+    fn record_dead(&self) {
+        if let Some(dl) = &self.dead {
+            dl.record(&self.path);
+        }
     }
 
-    /// Non-blocking send.
+    /// Fire-and-forget with backpressure (blocks while the mailbox is
+    /// full). A closed-mailbox reject loses the message and is recorded
+    /// in the system's [`DeadLetters`].
+    ///
+    /// **Do not call from inside an actor toward a possibly-saturated
+    /// target**: blocking parks a carrier thread, and if every worker
+    /// blocks this way the fixed pool livelocks (the thread-per-actor
+    /// model could not deadlock like this). Actors should use
+    /// [`ActorRef::try_tell_back`] plus [`Ctx::defer`] instead; blocking
+    /// sends are for code running outside the executor (ingest, tests,
+    /// examples).
+    pub fn tell(&self, msg: M) -> Result<(), SendError> {
+        let r = self.mailbox.send(msg);
+        if r == Err(SendError::Closed) {
+            self.record_dead();
+        }
+        r
+    }
+
+    /// Blocking send that returns the message on failure (closed
+    /// mailbox). Not counted as a dead letter: the caller keeps the
+    /// message and decides its fate (re-route, buffer, or drop). The
+    /// same carrier-thread warning as [`ActorRef::tell`] applies.
+    pub fn tell_back(&self, msg: M) -> Result<(), (SendError, M)> {
+        self.mailbox.send_back(msg)
+    }
+
+    /// Bounded-blocking send: waits up to `timeout` for mailbox space,
+    /// then hands the message back with `Full` so the caller can re-try
+    /// other targets. Not counted as a dead letter.
+    pub fn tell_back_timeout(&self, msg: M, timeout: Duration) -> Result<(), (SendError, M)> {
+        self.mailbox.send_back_timeout(msg, timeout)
+    }
+
+    /// Non-blocking send. A closed-mailbox reject loses the message and
+    /// is recorded in the system's [`DeadLetters`].
     pub fn try_tell(&self, msg: M) -> Result<(), SendError> {
-        self.mailbox.try_send(msg)
+        let r = self.mailbox.try_send(msg);
+        if r == Err(SendError::Closed) {
+            self.record_dead();
+        }
+        r
     }
 
     /// Non-blocking send that returns the message on failure (no clone
-    /// needed by callers that want to redirect it).
+    /// needed by callers that want to redirect it). Not counted as a
+    /// dead letter — routers and batch publishers spill rejected
+    /// messages to their next live target, so only a sender that *loses*
+    /// a message (the non-`_back` variants) marks a drop.
     pub fn try_tell_back(&self, msg: M) -> Result<(), (SendError, M)> {
         self.mailbox.try_send_back(msg)
     }
@@ -87,75 +162,216 @@ trait Cell: Send + Sync {
     fn stop(&self);
     /// Crash semantics: discard queued messages, then stop.
     fn crash(&self);
-    fn join(&self);
+    /// Wait up to `timeout` until the actor has wound down (executor
+    /// workers drive the drain — including deferred flush retries toward
+    /// a backpressured downstream; a zero timeout — cooperative
+    /// executors — returns immediately).
+    fn join(&self, timeout: Duration);
     fn is_running(&self) -> bool;
     fn mailbox_depth(&self) -> usize;
+    /// (Re)arm the cell: fresh instance on next activation, same path,
+    /// same mailbox, same executor registration.
+    fn launch(&self);
+}
+
+/// Actor lifecycle within its cell. `Fresh` builds a new instance on the
+/// next activation; `Stopped` stays inert until `launch` re-arms it.
+enum CellState<A: Actor> {
+    Fresh,
+    Live { actor: A, incarnation: u64 },
+    Stopped,
+}
+
+/// What one activation decided (computed under the state lock, applied
+/// and reported after it is released).
+enum Outcome {
+    Poll(Poll),
+    Stopped,
+    Crashed,
 }
 
 struct TypedCell<A: Actor> {
     path: Arc<String>,
     mailbox: Arc<Mailbox<A::Msg>>,
     factory: Box<dyn Fn() -> A + Send + Sync>,
-    running: Arc<AtomicBool>,
-    handle: Mutex<Option<JoinHandle<()>>>,
+    running: AtomicBool,
     incarnation: AtomicU64,
     hooks: FailureHooks,
+    dead: Arc<DeadLetters>,
+    state: Mutex<CellState<A>>,
+    registration: Registration,
 }
 
 type FailureHooks = Arc<RwLock<Vec<Box<dyn Fn(&str) + Send + Sync>>>>;
 
 impl<A: Actor> TypedCell<A> {
-    fn launch(self: &Arc<Self>) {
-        let cell = self.clone();
-        let incarnation = self.incarnation.fetch_add(1, Ordering::SeqCst);
-        self.running.store(true, Ordering::SeqCst);
-        self.mailbox.reopen();
-        let handle = std::thread::Builder::new()
-            .name(format!("actor:{}", self.path))
-            .spawn(move || cell.run(incarnation))
-            .expect("spawn actor thread");
-        *self.handle.lock().unwrap() = Some(handle);
+    fn self_ref(&self) -> ActorRef<A::Msg> {
+        ActorRef {
+            path: self.path.clone(),
+            mailbox: self.mailbox.clone(),
+            dead: Some(self.dead.clone()),
+        }
     }
 
-    fn run(self: Arc<Self>, incarnation: u64) {
+    /// Flip `running` off and wake joiners.
+    fn mark_down(&self) {
+        self.running.store(false, Ordering::SeqCst);
+        self.registration.wake_joiners();
+    }
+
+    /// Drive one live actor instance for up to `budget` messages.
+    fn drive(&self, actor: &mut A, incarnation: u64, budget: usize) -> Outcome {
         let mut ctx = Ctx {
-            self_ref: ActorRef { path: self.path.clone(), mailbox: self.mailbox.clone() },
+            self_ref: self.self_ref(),
             incarnation,
             stop: false,
+            defer: None,
         };
-        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            let mut actor = (self.factory)();
-            actor.pre_start(&mut ctx);
-            loop {
-                if ctx.stop {
-                    actor.post_stop();
-                    return;
-                }
-                match self.mailbox.recv_timeout(Duration::from_millis(20)) {
-                    Ok(msg) => actor.receive(msg, &mut ctx),
-                    Err(RecvError::Timeout) => continue,
-                    Err(RecvError::Closed) => {
-                        actor.post_stop();
-                        return;
+        if std::panic::catch_unwind(AssertUnwindSafe(|| actor.on_activate(&mut ctx))).is_err() {
+            return Outcome::Crashed;
+        }
+        if ctx.stop {
+            let _ = std::panic::catch_unwind(AssertUnwindSafe(|| actor.post_stop()));
+            return Outcome::Stopped;
+        }
+        if let Some(d) = ctx.defer {
+            return Outcome::Poll(Poll::After(d));
+        }
+        let mut used = 0;
+        while used < budget {
+            match self.mailbox.try_recv() {
+                Ok(msg) => {
+                    used += 1;
+                    if std::panic::catch_unwind(AssertUnwindSafe(|| actor.receive(msg, &mut ctx)))
+                        .is_err()
+                    {
+                        return Outcome::Crashed;
+                    }
+                    if ctx.stop {
+                        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| actor.post_stop()));
+                        return Outcome::Stopped;
+                    }
+                    if let Some(d) = ctx.defer {
+                        return Outcome::Poll(Poll::After(d));
                     }
                 }
+                Err(RecvError::Empty) | Err(RecvError::Timeout) => {
+                    return Outcome::Poll(Poll::Idle);
+                }
+                Err(RecvError::Closed) => {
+                    let _ = std::panic::catch_unwind(AssertUnwindSafe(|| actor.post_stop()));
+                    return Outcome::Stopped;
+                }
             }
-        }));
-        self.running.store(false, Ordering::SeqCst);
-        if result.is_err() {
-            log_debug!("actor", "'{}' crashed (incarnation {incarnation})", self.path);
-            // Notify supervision. The mailbox stays open so queued and
-            // in-flight messages survive the restart.
-            let hooks = self.hooks.read().unwrap();
-            for hook in hooks.iter() {
-                hook(&self.path);
+        }
+        // Budget exhausted with (possibly) more queued: yield fairly.
+        Outcome::Poll(Poll::Ready)
+    }
+}
+
+impl<A: Actor> Poller for TypedCell<A> {
+    fn poll(&self, budget: usize) -> Poll {
+        if !self.running.load(Ordering::SeqCst) {
+            return Poll::Idle; // crashed/stopped: inert until launch()
+        }
+        let outcome = {
+            let mut state = self.state.lock().unwrap();
+            if let CellState::Fresh = &*state {
+                let incarnation = self.incarnation.fetch_add(1, Ordering::SeqCst);
+                let mut actor = match std::panic::catch_unwind(AssertUnwindSafe(|| (self.factory)())) {
+                    Ok(a) => a,
+                    Err(_) => {
+                        drop(state);
+                        self.mark_down();
+                        self.fire_hooks();
+                        return Poll::Idle;
+                    }
+                };
+                let mut ctx = Ctx {
+                    self_ref: self.self_ref(),
+                    incarnation,
+                    stop: false,
+                    defer: None,
+                };
+                if std::panic::catch_unwind(AssertUnwindSafe(|| actor.pre_start(&mut ctx)))
+                    .is_err()
+                {
+                    drop(state);
+                    self.mark_down();
+                    self.fire_hooks();
+                    return Poll::Idle;
+                }
+                if ctx.stop {
+                    let _ = std::panic::catch_unwind(AssertUnwindSafe(|| actor.post_stop()));
+                    *state = CellState::Stopped;
+                    drop(state);
+                    self.mark_down();
+                    return Poll::Idle;
+                }
+                let deferred = ctx.defer;
+                *state = CellState::Live { actor, incarnation };
+                if let Some(d) = deferred {
+                    // pre_start deferred: pause before the first message,
+                    // same contract as defer from on_activate/receive.
+                    return Poll::After(d);
+                }
             }
+            match &mut *state {
+                CellState::Live { actor, incarnation } => {
+                    let incarnation = *incarnation;
+                    let outcome = self.drive(actor, incarnation, budget);
+                    match &outcome {
+                        Outcome::Stopped => *state = CellState::Stopped,
+                        // Let-it-crash: drop the instance; a later
+                        // launch() builds a fresh one.
+                        Outcome::Crashed => *state = CellState::Fresh,
+                        Outcome::Poll(_) => {}
+                    }
+                    outcome
+                }
+                CellState::Stopped => Outcome::Poll(Poll::Idle),
+                CellState::Fresh => unreachable!("Fresh handled above"),
+            }
+        };
+        match outcome {
+            Outcome::Poll(p) => p,
+            Outcome::Stopped => {
+                self.mark_down();
+                Poll::Idle
+            }
+            Outcome::Crashed => {
+                log_debug!(
+                    "actor",
+                    "'{}' crashed (incarnation {})",
+                    self.path,
+                    self.incarnation.load(Ordering::SeqCst).saturating_sub(1)
+                );
+                // The mailbox stays open so queued and in-flight messages
+                // survive the restart.
+                self.mark_down();
+                self.fire_hooks();
+                Poll::Idle
+            }
+        }
+    }
+
+    fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+impl<A: Actor> TypedCell<A> {
+    fn fire_hooks(&self) {
+        let hooks = self.hooks.read().unwrap();
+        for hook in hooks.iter() {
+            hook(&self.path);
         }
     }
 }
 
 impl<A: Actor> Cell for TypedCell<A> {
     fn stop(&self) {
+        // close() signals the activation, which drains then stops.
         self.mailbox.close();
     }
 
@@ -164,10 +380,9 @@ impl<A: Actor> Cell for TypedCell<A> {
         self.mailbox.purge(); // …then drop what was queued
     }
 
-    fn join(&self) {
-        if let Some(h) = self.handle.lock().unwrap().take() {
-            let _ = h.join();
-        }
+    fn join(&self, timeout: Duration) {
+        self.registration
+            .join_while(|| self.running.load(Ordering::SeqCst), timeout);
     }
 
     fn is_running(&self) -> bool {
@@ -177,24 +392,100 @@ impl<A: Actor> Cell for TypedCell<A> {
     fn mailbox_depth(&self) -> usize {
         self.mailbox.depth()
     }
+
+    fn launch(&self) {
+        *self.state.lock().unwrap() = CellState::Fresh;
+        self.mailbox.reopen();
+        self.running.store(true, Ordering::SeqCst);
+        self.registration.notify();
+    }
 }
 
-/// The actor system: spawns actors on dedicated threads, tracks them by
-/// path, reports failures to registered hooks, and restarts failed actors
-/// in place (same path, same mailbox).
+/// The actor system: spawns actors onto the executor's worker pool,
+/// tracks them by path, reports failures to registered hooks, and
+/// restarts failed actors in place (same path, same mailbox, same
+/// executor registration).
 pub struct ActorSystem {
+    executor: Arc<dyn Executor>,
+    owns_executor: bool,
+    /// How long stop/remove/kill wait for a cell to wind down. Zero for
+    /// cooperative executors: the sim backend only makes progress when
+    /// its scheduler is pumped, so waiting would stall.
+    join_wait: Duration,
     cells: RwLock<HashMap<String, Arc<dyn Cell>>>,
-    restarters: RwLock<HashMap<String, Box<dyn Fn() + Send + Sync>>>,
+    /// Cells removed (or replaced) before their drain finished. The
+    /// executor holds only weak refs, so something must keep a
+    /// mid-drain cell alive until its close-drain activation completes —
+    /// without this, `remove` on a cooperative executor (or after a
+    /// join timeout) would drop queued messages and skip `post_stop`.
+    graveyard: Mutex<Vec<Arc<dyn Cell>>>,
     hooks: FailureHooks,
+    dead: Arc<DeadLetters>,
 }
 
 impl ActorSystem {
+    /// System on its own work-stealing executor sized to the host
+    /// (one worker per core).
     pub fn new() -> Arc<Self> {
+        Self::build(ThreadedExecutor::with_default_parallelism(), true)
+    }
+
+    /// System on its own executor with an explicit worker count — size
+    /// this for workloads whose actors *block* (e.g. synthetic
+    /// processing-cost sleeps in the experiment harness).
+    pub fn with_workers(workers: usize) -> Arc<Self> {
+        Self::build(ThreadedExecutor::new(workers), true)
+    }
+
+    /// System on a shared executor (e.g. the deterministic
+    /// [`SimExecutor`](crate::sim::SimExecutor)). The executor is not
+    /// shut down by [`ActorSystem::shutdown`], and stop/remove/kill do
+    /// **not** wait for the wind-down — drive the executor (pump the
+    /// scheduler) to complete drains.
+    pub fn with_executor(executor: Arc<dyn Executor>) -> Arc<Self> {
+        Self::build(executor, false)
+    }
+
+    fn build(executor: Arc<dyn Executor>, owns_executor: bool) -> Arc<Self> {
+        // Graceful drains must complete: the bound covers the worst
+        // legitimate drain (a full mailbox of the slowest synthetic-cost
+        // processors, ~13 s) with an order of magnitude of headroom. It
+        // exists only as a safety valve for a pathologically dead
+        // downstream — a case where the pre-executor thread join hung
+        // forever.
+        let join_wait =
+            if executor.is_cooperative() { Duration::ZERO } else { Duration::from_secs(120) };
         Arc::new(ActorSystem {
+            executor,
+            owns_executor,
+            join_wait,
             cells: RwLock::new(HashMap::new()),
-            restarters: RwLock::new(HashMap::new()),
+            graveyard: Mutex::new(Vec::new()),
             hooks: Arc::new(RwLock::new(Vec::new())),
+            dead: Arc::new(DeadLetters::new()),
         })
+    }
+
+    /// Keep a forgotten-but-still-draining cell alive until its
+    /// wind-down activation runs; already-drained graveyard entries are
+    /// swept opportunistically.
+    fn bury(&self, cell: Arc<dyn Cell>) {
+        let mut g = self.graveyard.lock().unwrap();
+        g.retain(|c| c.is_running());
+        if cell.is_running() {
+            g.push(cell);
+        }
+    }
+
+    /// The executor this system schedules actors on.
+    pub fn executor(&self) -> Arc<dyn Executor> {
+        self.executor.clone()
+    }
+
+    /// System-wide dead-letter aggregation: every closed-mailbox
+    /// `tell`/`try_tell` reject is recorded here by actor path.
+    pub fn dead_letters(&self) -> Arc<DeadLetters> {
+        self.dead.clone()
     }
 
     /// Register a failure hook: called with the actor path whenever an
@@ -214,46 +505,49 @@ impl ActorSystem {
             path: Arc::new(path.to_string()),
             mailbox: Arc::new(Mailbox::new(capacity)),
             factory: Box::new(factory),
-            running: Arc::new(AtomicBool::new(false)),
-            handle: Mutex::new(None),
+            running: AtomicBool::new(false),
             incarnation: AtomicU64::new(0),
             hooks: self.hooks.clone(),
+            dead: self.dead.clone(),
+            state: Mutex::new(CellState::Fresh),
+            registration: Registration::new(),
         });
+        let act = self.executor.register(cell.clone(), DEFAULT_BUDGET);
+        cell.registration.arm(act.clone());
+        // Message arrival (and close) schedules an activation: one CAS on
+        // the schedule flag, no condvar in the hot path. The signal holds
+        // the activation strongly — no cycle, since the activation only
+        // holds a Weak back to the cell.
+        cell.mailbox.set_signal(move || act.notify());
         cell.launch();
-        let r = ActorRef { path: cell.path.clone(), mailbox: cell.mailbox.clone() };
-        {
-            let c = cell.clone();
-            self.restarters
-                .write()
-                .unwrap()
-                .insert(path.to_string(), Box::new(move || c.launch()));
+        let r = cell.self_ref();
+        let replaced = self.cells.write().unwrap().insert(path.to_string(), cell);
+        if let Some(old) = replaced {
+            // Re-spawning an existing path orphans the old actor: close
+            // its mailbox so stale refs fail fast instead of filling a
+            // never-drained queue, and keep it alive until its drain
+            // completes.
+            old.stop();
+            self.bury(old);
         }
-        self.cells.write().unwrap().insert(path.to_string(), cell);
         r
     }
 
     /// Restart a failed (or stopped) actor in place: fresh instance, same
-    /// path and mailbox. No-op if it is still running or unknown.
+    /// path, same mailbox, same executor registration. No-op if it is
+    /// still running or unknown.
     pub fn restart(&self, path: &str) -> bool {
-        let running = {
-            let cells = self.cells.read().unwrap();
-            match cells.get(path) {
-                Some(c) => c.is_running(),
-                None => return false,
+        let cell = self.cells.read().unwrap().get(path).cloned();
+        match cell {
+            Some(c) if !c.is_running() => {
+                c.launch();
+                true
             }
-        };
-        if running {
-            return false;
-        }
-        if let Some(r) = self.restarters.read().unwrap().get(path) {
-            r();
-            true
-        } else {
-            false
+            _ => false,
         }
     }
 
-    /// True if the actor exists and its thread is alive.
+    /// True if the actor exists and is live on the executor.
     pub fn is_running(&self, path: &str) -> bool {
         self.cells.read().unwrap().get(path).map(|c| c.is_running()).unwrap_or(false)
     }
@@ -267,29 +561,33 @@ impl ActorSystem {
         let cell = self.cells.read().unwrap().get(path).cloned();
         if let Some(c) = cell {
             c.stop();
-            c.join();
+            c.join(self.join_wait);
         }
     }
 
     /// Remove an actor entirely (graceful stop + forget: queued messages
-    /// are processed first). Its `ActorRef`s go dead.
+    /// are processed first — a cell still draining when the bounded join
+    /// returns is kept alive off-map until its drain completes). Its
+    /// `ActorRef`s go dead.
     pub fn remove(&self, path: &str) {
         self.stop(path);
-        self.cells.write().unwrap().remove(path);
-        self.restarters.write().unwrap().remove(path);
+        if let Some(c) = self.cells.write().unwrap().remove(path) {
+            self.bury(c);
+        }
     }
 
     /// Kill an actor as if its host died: queued messages are DROPPED,
-    /// the in-flight message (if any) finishes (a thread cannot be safely
+    /// the in-flight message (if any) finishes (an activation cannot be
     /// torn mid-message), then the actor is forgotten.
     pub fn kill(&self, path: &str) {
         let cell = self.cells.read().unwrap().get(path).cloned();
         if let Some(c) = cell {
             c.crash();
-            c.join();
+            c.join(self.join_wait);
         }
-        self.cells.write().unwrap().remove(path);
-        self.restarters.write().unwrap().remove(path);
+        if let Some(c) = self.cells.write().unwrap().remove(path) {
+            self.bury(c);
+        }
     }
 
     /// All registered actor paths.
@@ -297,14 +595,19 @@ impl ActorSystem {
         self.cells.read().unwrap().keys().cloned().collect()
     }
 
-    /// Stop every actor (graceful), in no particular order.
+    /// Stop every actor (graceful), then the executor if this system owns
+    /// it.
     pub fn shutdown(&self) {
-        let cells: Vec<Arc<dyn Cell>> = self.cells.read().unwrap().values().cloned().collect();
+        let mut cells: Vec<Arc<dyn Cell>> = self.cells.read().unwrap().values().cloned().collect();
+        cells.extend(self.graveyard.lock().unwrap().iter().cloned());
         for c in &cells {
             c.stop();
         }
         for c in &cells {
-            c.join();
+            c.join(self.join_wait);
+        }
+        if self.owns_executor {
+            self.executor.shutdown();
         }
     }
 }
@@ -312,6 +615,7 @@ impl ActorSystem {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::wait_until;
     use std::sync::atomic::AtomicUsize;
 
     struct Counter {
@@ -333,17 +637,6 @@ mod tests {
         }
     }
 
-    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
-        let deadline = std::time::Instant::now() + timeout;
-        while std::time::Instant::now() < deadline {
-            if f() {
-                return true;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        f()
-    }
-
     #[test]
     fn processes_messages() {
         let sys = ActorSystem::new();
@@ -353,7 +646,7 @@ mod tests {
         for _ in 0..10 {
             r.tell(2).unwrap();
         }
-        assert!(wait_until(Duration::from_secs(2), || hits.load(Ordering::SeqCst) == 20));
+        assert!(wait_until(|| hits.load(Ordering::SeqCst) == 20, Duration::from_secs(2)));
         sys.shutdown();
     }
 
@@ -367,7 +660,7 @@ mod tests {
         let h = hits.clone();
         let r = sys.spawn("fragile", 64, move || Counter { hits: h.clone() });
         r.tell(666).unwrap();
-        assert!(wait_until(Duration::from_secs(2), || !sys.is_running("fragile")));
+        assert!(wait_until(|| !sys.is_running("fragile"), Duration::from_secs(2)));
         assert_eq!(failed.lock().unwrap().as_slice(), &["fragile".to_string()]);
         sys.shutdown();
     }
@@ -379,12 +672,35 @@ mod tests {
         let h = hits.clone();
         let r = sys.spawn("phoenix", 64, move || Counter { hits: h.clone() });
         r.tell(666).unwrap(); // crash
-        assert!(wait_until(Duration::from_secs(2), || !sys.is_running("phoenix")));
+        assert!(wait_until(|| !sys.is_running("phoenix"), Duration::from_secs(2)));
         // Queue messages while down — the mailbox survives.
         r.tell(5).unwrap();
         r.tell(7).unwrap();
         assert!(sys.restart("phoenix"));
-        assert!(wait_until(Duration::from_secs(2), || hits.load(Ordering::SeqCst) == 12));
+        assert!(wait_until(|| hits.load(Ordering::SeqCst) == 12, Duration::from_secs(2)));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn repeated_crash_restart_cycles_rearm_the_same_registration() {
+        // The executor-era restart path: no thread respawn, the same
+        // activation is re-armed. Crash and heal several times in a row.
+        let sys = ActorSystem::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let r = sys.spawn("cycler", 64, move || Counter { hits: h.clone() });
+        for round in 1..=3 {
+            r.tell(666).unwrap();
+            assert!(wait_until(|| !sys.is_running("cycler"), Duration::from_secs(2)));
+            assert!(sys.restart("cycler"));
+            assert!(wait_until(|| sys.is_running("cycler"), Duration::from_secs(2)));
+            r.tell(1).unwrap();
+            assert!(
+                wait_until(|| hits.load(Ordering::SeqCst) == round, Duration::from_secs(2)),
+                "round {round}: hits {}",
+                hits.load(Ordering::SeqCst)
+            );
+        }
         sys.shutdown();
     }
 
@@ -394,7 +710,7 @@ mod tests {
         let hits = Arc::new(AtomicUsize::new(0));
         let h = hits.clone();
         sys.spawn("alive", 8, move || Counter { hits: h.clone() });
-        assert!(wait_until(Duration::from_secs(1), || sys.is_running("alive")));
+        assert!(wait_until(|| sys.is_running("alive"), Duration::from_secs(1)));
         assert!(!sys.restart("alive"));
         assert!(!sys.restart("nonexistent"));
         sys.shutdown();
@@ -419,8 +735,8 @@ mod tests {
         let s = stopped.clone();
         let r = sys.spawn("stopper", 8, move || Stopper { stopped: s.clone() });
         r.tell(()).unwrap();
-        assert!(wait_until(Duration::from_secs(2), || stopped.load(Ordering::SeqCst) == 1));
-        assert!(wait_until(Duration::from_secs(2), || !sys.is_running("stopper")));
+        assert!(wait_until(|| stopped.load(Ordering::SeqCst) == 1, Duration::from_secs(2)));
+        assert!(wait_until(|| !sys.is_running("stopper"), Duration::from_secs(2)));
         sys.shutdown();
     }
 
@@ -471,5 +787,56 @@ mod tests {
         sys.remove("gone");
         assert!(r.tell(1).is_err());
         assert!(sys.mailbox_depth("gone").is_none());
+    }
+
+    #[test]
+    fn closed_mailbox_rejects_feed_dead_letters() {
+        let sys = ActorSystem::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let r = sys.spawn("dl", 8, move || Counter { hits: h.clone() });
+        sys.remove("dl");
+        assert!(r.tell(1).is_err());
+        assert!(r.try_tell(2).is_err());
+        assert_eq!(sys.dead_letters().count("dl"), 2);
+        assert_eq!(sys.dead_letters().total(), 2);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn deferred_actor_resumes_after_deadline_without_consuming() {
+        // An actor that defers on activation until released: its queued
+        // message stays in the mailbox (backpressure without blocking a
+        // worker), then is consumed after release.
+        struct Deferring {
+            release: Arc<AtomicBool>,
+            hits: Arc<AtomicUsize>,
+        }
+        impl Actor for Deferring {
+            type Msg = u32;
+            fn on_activate(&mut self, ctx: &mut Ctx<u32>) {
+                if !self.release.load(Ordering::SeqCst) {
+                    ctx.defer(Duration::from_millis(2));
+                }
+            }
+            fn receive(&mut self, _m: u32, _ctx: &mut Ctx<u32>) {
+                self.hits.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let sys = ActorSystem::new();
+        let release = Arc::new(AtomicBool::new(false));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (rel, h) = (release.clone(), hits.clone());
+        let r = sys.spawn("deferring", 8, move || Deferring {
+            release: rel.clone(),
+            hits: h.clone(),
+        });
+        r.tell(1).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(hits.load(Ordering::SeqCst), 0, "deferred: nothing consumed");
+        assert_eq!(r.mailbox_depth(), 1, "message still queued");
+        release.store(true, Ordering::SeqCst);
+        assert!(wait_until(|| hits.load(Ordering::SeqCst) == 1, Duration::from_secs(2)));
+        sys.shutdown();
     }
 }

@@ -2,6 +2,7 @@
 
 use super::result::ExperimentResult;
 use super::tcmm_jobs::{self, TOPIC_TRAJ};
+use crate::actor::executor::{Executor, ThreadedExecutor};
 use crate::actor::system::ActorSystem;
 use crate::cluster::failure::FailureInjector;
 use crate::cluster::node::{Cluster, ComponentHandle};
@@ -126,8 +127,15 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
     };
 
     // --- Architecture wiring.
+    //
+    // Executor sizing: actors are decoupled from OS threads, but the TCMM
+    // processors model the paper's per-message cost with *blocking*
+    // sleeps, so the worker pool must cover the maximum number of
+    // concurrently-blocking tasks (like any blocking-workload thread
+    // pool). Non-blocking workloads use the default pool of one worker
+    // per core.
     enum Arch {
-        Liquid { jobs: Vec<Arc<LiquidJob>> },
+        Liquid { jobs: Vec<Arc<LiquidJob>>, executor: Arc<dyn Executor> },
         Reactive {
             system: Arc<ActorSystem>,
             supervisor: Arc<Supervisor>,
@@ -138,9 +146,12 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
 
     let arch = match cfg.arch {
         Architecture::Liquid { tasks_per_job } => {
+            let executor: Arc<dyn Executor> =
+                ThreadedExecutor::new(pipeline.jobs.len() * tasks_per_job + 2);
             let mut jobs = Vec::new();
             for job in &pipeline.jobs {
                 let lj = LiquidJob::start(
+                    &executor,
                     &broker,
                     job.clone(),
                     tasks_per_job,
@@ -175,10 +186,18 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 }
                 jobs.push(lj);
             }
-            Arch::Liquid { jobs }
+            Arch::Liquid { jobs, executor }
         }
         Architecture::Reactive => {
-            let system = ActorSystem::new();
+            // Tasks (elastic, up to max_workers per job) block in the
+            // synthetic processors; consumers and producer workers do
+            // not, but still deserve headroom so routing keeps flowing
+            // while every task slot sleeps.
+            let worker_budget = pipeline.jobs.len() * cfg.elastic.max_workers
+                + pipeline.jobs.len() * cfg.partitions
+                + pipeline.topics().len() * 2
+                + 4;
+            let system = ActorSystem::with_workers(worker_budget);
             let supervisor = Supervisor::new(clock.clone(), Duration::from_millis(100));
             let offsets = Arc::new(OffsetStore::in_memory());
             let mut vts = Vec::new();
@@ -345,10 +364,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
     stop_ingest.store(true, Ordering::SeqCst);
     let _ = ingest_handle.join();
     let supervisor_restarts = match &arch {
-        Arch::Liquid { jobs } => {
+        Arch::Liquid { jobs, executor } => {
             for j in jobs {
                 j.stop_all();
             }
+            executor.shutdown();
             0
         }
         Arch::Reactive { system, supervisor, jobs, vts } => {

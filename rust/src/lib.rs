@@ -30,6 +30,19 @@
 //!   scenario DSL and a 13-entry chaos matrix that replays the Fig. 8–11
 //!   settings in milliseconds with byte-identical traces per seed.
 //!
+//! # Execution model
+//!
+//! Every actor, virtual consumer, and Liquid task is a poll-driven state
+//! machine multiplexed over a fixed work-stealing worker pool
+//! ([`actor::executor`]): message arrival flips one atomic schedule flag
+//! and a carrier thread runs the actor for up to one fairness budget, so
+//! actor count is decoupled from OS threads (10k+ actors on
+//! `available_parallelism` workers + one timer thread — measured by
+//! `benches/actor_throughput.rs`). Idle and backpressure waits are timer
+//! deadlines ([`vml::pacing`]), not sleeps, and the simulation layer
+//! substitutes a single-threaded deterministic executor
+//! ([`sim::SimExecutor`]) behind the same trait.
+//!
 //! # Batch-first data plane
 //!
 //! Every layer that touches the messaging hot path exposes a batched form

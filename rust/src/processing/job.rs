@@ -28,6 +28,17 @@ pub trait OutputSink: Send + Sync {
             self.publish(m);
         }
     }
+
+    /// Non-blocking batch publish: on backpressure the whole batch is
+    /// handed back, so executor-hosted callers (task actors) can buffer
+    /// it and re-activate after a deadline instead of blocking a worker
+    /// thread. The default delegates to [`OutputSink::publish_batch`] —
+    /// correct for sinks that never exert backpressure (`NoOutput`,
+    /// direct broker producers).
+    fn try_publish_batch(&self, msgs: Vec<Message>) -> Result<(), Vec<Message>> {
+        self.publish_batch(msgs);
+        Ok(())
+    }
 }
 
 /// Terminal jobs produce nothing.

@@ -2,30 +2,206 @@
 //! implements it: processing layer in plain code directly on the
 //! messaging layer.
 //!
-//! Each task is a thread that *is* a consumer-group member: it polls a
-//! batch of `n` messages, processes all of them sequentially, publishes
-//! outputs with its own producer, commits, then polls the next batch —
-//! exactly the consume/process cycle behind Equation 1
-//! (`T = n·t_c + i·t_p`). Tasks beyond the topic's partition count receive
-//! no assignment and idle, which is the scalability cap the Reactive
-//! Liquid lifts.
+//! Each task *is* a consumer-group member: it polls a batch of `n`
+//! messages, processes all of them sequentially, publishes outputs with
+//! its own producer, commits, then polls the next batch — exactly the
+//! consume/process cycle behind Equation 1 (`T = n·t_c + i·t_p`). Tasks
+//! beyond the topic's partition count receive no assignment and idle,
+//! which is the scalability cap the Reactive Liquid lifts.
+//!
+//! Since the executor refactor a Liquid task is a [`Poller`] on the
+//! shared worker pool rather than a dedicated thread: one activation is
+//! one consume/process/publish/commit cycle, and an empty poll
+//! re-schedules the task after [`pacing::CONSUMER_IDLE`] on the executor
+//! timer instead of sleep-looping. (The optional `synthetic_cost` sleep
+//! *inside* processing models the paper's slower testbed — that is
+//! simulated work occupying a worker, not pacing.)
+//!
+//! [`pacing::CONSUMER_IDLE`]: crate::vml::pacing::CONSUMER_IDLE
 
 use super::job::Job;
+use crate::actor::executor::{Executor, Poll, Poller, Registration};
+use crate::messaging::broker::Consumer;
 use crate::messaging::{Broker, Producer};
 use crate::metrics::PipelineMetrics;
 use crate::util::clock::SharedClock;
 use crate::vml::envelope::Envelope;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
+
+/// Per-task consume-cycle state (touched only inside activations).
+struct LtInner {
+    consumer: Option<Consumer>,
+    producer: Option<Producer>,
+    processor: Option<Box<dyn super::job::Processor>>,
+}
 
 struct LiquidTask {
     name: String,
-    stop: Arc<AtomicBool>,
-    alive: Arc<AtomicBool>,
-    processed: Arc<AtomicU64>,
-    handle: Mutex<Option<JoinHandle<()>>>,
+    job: Weak<LiquidJob>,
+    stop: AtomicBool,
+    alive: AtomicBool,
+    processed: AtomicU64,
+    inner: Mutex<LtInner>,
+    registration: Registration,
+}
+
+impl LiquidTask {
+    /// Lock the cycle state, recovering from poisoning (a panic that
+    /// escaped a cycle must not wedge cleanup).
+    fn lock_inner(&self) -> std::sync::MutexGuard<'_, LtInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Let-it-crash reset after a processor panic: close the membership
+    /// (the group rebalances; uncommitted offsets redeliver) and drop
+    /// the processor so the next activation builds a fresh one. The task
+    /// stays alive — it heals itself on the next activation.
+    fn crash_reset(&self) {
+        let mut inner = self.lock_inner();
+        if let Some(c) = inner.consumer.take() {
+            c.close();
+        }
+        inner.producer = None;
+        inner.processor = None;
+    }
+
+    fn finalize(&self) {
+        self.crash_reset();
+        if self.alive.swap(false, Ordering::SeqCst) {
+            self.registration.wake_joiners();
+        }
+    }
+
+    /// Flag the task down and wait (bounded) for its wind-down. On a
+    /// cooperative executor (sim) the join is skipped — nothing would
+    /// pump the drain while we wait.
+    fn stop_and_join(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.registration.notify();
+        let cooperative =
+            self.job.upgrade().map(|j| j.executor.is_cooperative()).unwrap_or(true);
+        let wait = if cooperative { Duration::ZERO } else { Duration::from_secs(5) };
+        self.registration.join_while(|| self.alive.load(Ordering::SeqCst), wait);
+    }
+}
+
+impl Poller for LiquidTask {
+    fn poll(&self, _budget: usize) -> Poll {
+        // Contain panics that escape a cycle outside the processor guard
+        // (broker poll/publish/commit): mark the task dead so `heal`
+        // replaces it instead of leaving a silently wedged member.
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.cycle())) {
+            Ok(verdict) => verdict,
+            Err(_) => {
+                crate::log_debug!("liquid", "'{}' crashed mid-cycle; awaiting heal", self.name);
+                self.finalize();
+                Poll::Idle
+            }
+        }
+    }
+
+    fn path(&self) -> &str {
+        &self.name
+    }
+}
+
+impl LiquidTask {
+    /// One consume/process/publish/commit cycle (one activation).
+    fn cycle(&self) -> Poll {
+        if self.stop.load(Ordering::SeqCst) || !self.alive.load(Ordering::SeqCst) {
+            self.finalize();
+            return Poll::Idle;
+        }
+        let Some(job) = self.job.upgrade() else {
+            self.finalize();
+            return Poll::Idle;
+        };
+        let mut guard = self.lock_inner();
+        let inner = &mut *guard;
+        if inner.consumer.is_none() {
+            // The task IS the consumer — this membership is what caps
+            // Liquid.
+            let group = format!("liquid-{}", job.job.name);
+            inner.consumer = Some(job.broker.subscribe(&job.job.input_topic, &group));
+            inner.producer = job
+                .job
+                .output_topic
+                .as_ref()
+                .map(|t| Producer::new(&job.broker, t, job.clock.clone()));
+            inner.processor = Some((job.job.factory)());
+        }
+        let consumer = inner.consumer.as_ref().expect("consumer joined above");
+        let processor = inner.processor.as_mut().expect("processor built above");
+        // Consume n messages in one batched poll…
+        let mut batch = consumer.poll_batch(job.batch);
+        if batch.is_empty() {
+            return Poll::After(crate::vml::pacing::CONSUMER_IDLE);
+        }
+        let consumed_at = job.clock.now();
+        // …process all n before consuming again (Eq. 1), collecting
+        // the outputs so the publish is one batched send…
+        let mut outputs: Vec<crate::messaging::Message> = Vec::new();
+        let mut processing_done: Vec<Duration> = Vec::new();
+        let mut crashed = false;
+        for om in std::mem::take(&mut batch.messages) {
+            let env = Envelope::new(om.message, om.partition, om.offset, consumed_at);
+            if !job.synthetic_cost.is_zero() {
+                std::thread::sleep(job.synthetic_cost);
+            }
+            // Catch processor panics *here*, before they poison the
+            // state lock: let-it-crash drops the membership and builds a
+            // fresh processor on the next activation, and the
+            // uncommitted batch is redelivered.
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                processor.process(&env)
+            })) {
+                Ok(out) => outputs.extend(out),
+                Err(_) => {
+                    crashed = true;
+                    break;
+                }
+            }
+            let done = job.clock.now();
+            processing_done.push(done.saturating_sub(consumed_at));
+            self.processed.fetch_add(1, Ordering::Relaxed);
+            job.processed_total.fetch_add(1, Ordering::Relaxed);
+        }
+        if crashed {
+            crate::log_debug!("liquid", "'{}' processor crashed; resubscribing", self.name);
+            drop(guard);
+            self.crash_reset();
+            // Paced restart so a deterministically-panicking processor
+            // cannot hot-loop the resubscribe cycle.
+            return Poll::After(crate::vml::pacing::CONSUMER_IDLE);
+        }
+        let pre_publish = job.clock.now();
+        if let Some(p) = &inner.producer {
+            if !outputs.is_empty() {
+                p.send_messages(outputs);
+            }
+        }
+        // Completion time per message: its processing span plus a
+        // proportional share of the batched publish — the i-th message
+        // would have paid i+1 of the n per-message publishes in the
+        // unbatched cycle, so the metric stays comparable to the
+        // per-message baseline (and to the Reactive task path, which
+        // stamps completion when its outputs hand off to the producer
+        // pool, publish wait included).
+        let publish_span = job.clock.now().saturating_sub(pre_publish);
+        let n = processing_done.len() as f64;
+        for (i, d) in processing_done.into_iter().enumerate() {
+            let share = publish_span.mul_f64((i + 1) as f64 / n);
+            job.metrics.record_processed(d + share);
+        }
+        // …then commit the whole batch under one coordinator lock
+        // (publish-before-commit keeps delivery at-least-once; a
+        // commit fenced by a rebalance is dropped and redelivered).
+        consumer.commit_batch(&batch);
+        // Consume again as soon as a worker is free.
+        Poll::Ready
+    }
 }
 
 /// One job executed Liquid-style with a fixed task count.
@@ -35,6 +211,7 @@ pub struct LiquidJob {
     clock: SharedClock,
     metrics: Arc<PipelineMetrics>,
     batch: usize,
+    executor: Arc<dyn Executor>,
     tasks: Mutex<Vec<Arc<LiquidTask>>>,
     /// Job-lifetime processed count (survives task replacement on heal).
     processed_total: AtomicU64,
@@ -44,8 +221,12 @@ pub struct LiquidJob {
 }
 
 impl LiquidJob {
-    /// Start `task_count` tasks for `job`.
+    /// Start `task_count` tasks for `job` on `executor`. Size the
+    /// executor for the blocking synthetic cost: each Liquid task may
+    /// occupy one worker for a full batch.
+    #[allow(clippy::too_many_arguments)]
     pub fn start(
+        executor: &Arc<dyn Executor>,
         broker: &Arc<Broker>,
         job: Job,
         task_count: usize,
@@ -60,6 +241,7 @@ impl LiquidJob {
             clock,
             metrics,
             batch,
+            executor: executor.clone(),
             tasks: Mutex::new(Vec::new()),
             processed_total: AtomicU64::new(0),
             synthetic_cost,
@@ -71,81 +253,19 @@ impl LiquidJob {
     }
 
     fn spawn_task(self: &Arc<Self>, id: usize) {
-        let me = self.clone();
         let task = Arc::new(LiquidTask {
             name: format!("liquid:{}:{id}", self.job.name),
-            stop: Arc::new(AtomicBool::new(false)),
-            alive: Arc::new(AtomicBool::new(true)),
-            processed: Arc::new(AtomicU64::new(0)),
-            handle: Mutex::new(None),
+            job: Arc::downgrade(self),
+            stop: AtomicBool::new(false),
+            alive: AtomicBool::new(true),
+            processed: AtomicU64::new(0),
+            inner: Mutex::new(LtInner { consumer: None, producer: None, processor: None }),
+            registration: Registration::new(),
         });
-        let t = task.clone();
-        let handle = std::thread::Builder::new()
-            .name(task.name.clone())
-            .spawn(move || me.run_task(t))
-            .expect("spawn liquid task");
-        *task.handle.lock().unwrap() = Some(handle);
+        let act = self.executor.register(task.clone(), 1);
+        task.registration.arm(act);
+        task.registration.notify();
         self.tasks.lock().unwrap().push(task);
-    }
-
-    fn run_task(self: Arc<Self>, task: Arc<LiquidTask>) {
-        // The task IS the consumer — this membership is what caps Liquid.
-        let group = format!("liquid-{}", self.job.name);
-        let consumer = self.broker.subscribe(&self.job.input_topic, &group);
-        let producer = self
-            .job
-            .output_topic
-            .as_ref()
-            .map(|t| Producer::new(&self.broker, t, self.clock.clone()));
-        let mut processor = (self.job.factory)();
-        while !task.stop.load(Ordering::SeqCst) {
-            // Consume n messages in one batched poll…
-            let mut batch = consumer.poll_batch(self.batch);
-            if batch.is_empty() {
-                std::thread::sleep(Duration::from_millis(2));
-                continue;
-            }
-            let consumed_at = self.clock.now();
-            // …process all n before consuming again (Eq. 1), collecting
-            // the outputs so the publish is one batched send…
-            let mut outputs: Vec<crate::messaging::Message> = Vec::new();
-            let mut processing_done: Vec<Duration> = Vec::new();
-            for om in std::mem::take(&mut batch.messages) {
-                let env = Envelope::new(om.message, om.partition, om.offset, consumed_at);
-                if !self.synthetic_cost.is_zero() {
-                    std::thread::sleep(self.synthetic_cost);
-                }
-                outputs.extend(processor.process(&env));
-                let done = self.clock.now();
-                processing_done.push(done.saturating_sub(consumed_at));
-                task.processed.fetch_add(1, Ordering::Relaxed);
-                self.processed_total.fetch_add(1, Ordering::Relaxed);
-            }
-            let pre_publish = self.clock.now();
-            if let Some(p) = &producer {
-                if !outputs.is_empty() {
-                    p.send_messages(outputs);
-                }
-            }
-            // Completion time per message: its processing span plus a
-            // proportional share of the batched publish — the i-th message
-            // would have paid i+1 of the n per-message publishes in the
-            // unbatched cycle, so the metric stays comparable to the
-            // per-message baseline (and to the Reactive task path, which
-            // times its own publish inline).
-            let publish_span = self.clock.now().saturating_sub(pre_publish);
-            let n = processing_done.len() as f64;
-            for (i, d) in processing_done.into_iter().enumerate() {
-                let share = publish_span.mul_f64((i + 1) as f64 / n);
-                self.metrics.record_processed(d + share);
-            }
-            // …then commit the whole batch under one coordinator lock
-            // (publish-before-commit keeps delivery at-least-once; a
-            // commit fenced by a rebalance is dropped and redelivered).
-            consumer.commit_batch(&batch);
-        }
-        consumer.close();
-        task.alive.store(false, Ordering::SeqCst);
     }
 
     pub fn task_count(&self) -> usize {
@@ -162,13 +282,10 @@ impl LiquidJob {
 
     /// Kill one live task (failure injection). Returns true if one died.
     pub fn kill_one(&self) -> bool {
-        let tasks = self.tasks.lock().unwrap();
-        for t in tasks.iter() {
+        let tasks: Vec<Arc<LiquidTask>> = self.tasks.lock().unwrap().clone();
+        for t in tasks {
             if t.alive.load(Ordering::SeqCst) {
-                t.stop.store(true, Ordering::SeqCst);
-                if let Some(h) = t.handle.lock().unwrap().take() {
-                    let _ = h.join();
-                }
+                t.stop_and_join();
                 return true;
             }
         }
@@ -195,7 +312,7 @@ impl LiquidJob {
                 .take(n)
                 .collect()
         };
-        // Replace dead task slots with fresh threads.
+        // Replace dead task slots with fresh registrations.
         let mut healed = 0;
         {
             let mut tasks = self.tasks.lock().unwrap();
@@ -212,14 +329,13 @@ impl LiquidJob {
     }
 
     pub fn stop_all(&self) {
-        let tasks = self.tasks.lock().unwrap();
-        for t in tasks.iter() {
+        let tasks: Vec<Arc<LiquidTask>> = self.tasks.lock().unwrap().clone();
+        for t in &tasks {
             t.stop.store(true, Ordering::SeqCst);
+            t.registration.notify();
         }
-        for t in tasks.iter() {
-            if let Some(h) = t.handle.lock().unwrap().take() {
-                let _ = h.join();
-            }
+        for t in &tasks {
+            t.stop_and_join();
         }
     }
 }
@@ -227,28 +343,32 @@ impl LiquidJob {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::actor::executor::ThreadedExecutor;
     use crate::messaging::Message;
     use crate::util::clock::real_clock;
+    use crate::util::wait_until;
 
-    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
-        let deadline = std::time::Instant::now() + timeout;
-        while std::time::Instant::now() < deadline {
-            if f() {
-                return true;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        f()
-    }
-
-    fn fixture(partitions: usize, tasks: usize) -> (Arc<Broker>, Arc<LiquidJob>, Arc<PipelineMetrics>) {
+    fn fixture(
+        partitions: usize,
+        tasks: usize,
+    ) -> (Arc<Broker>, Arc<LiquidJob>, Arc<PipelineMetrics>) {
         let broker = Broker::new();
         broker.create_topic("in", partitions);
         broker.create_topic("out", partitions);
         let clock = real_clock();
         let metrics = PipelineMetrics::new(clock.clone());
         let job = Job::from_fn("j", "in", Some("out"), |env| vec![env.message.clone()]);
-        let lj = LiquidJob::start(&broker, job, tasks, 8, clock, metrics.clone(), Duration::ZERO);
+        let executor: Arc<dyn Executor> = ThreadedExecutor::new(tasks.max(2));
+        let lj = LiquidJob::start(
+            &executor,
+            &broker,
+            job,
+            tasks,
+            8,
+            clock,
+            metrics.clone(),
+            Duration::ZERO,
+        );
         (broker, lj, metrics)
     }
 
@@ -259,9 +379,9 @@ mod tests {
         for i in 0..30u8 {
             t.publish(Message::new(None, vec![i], 0));
         }
-        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() == 30));
+        assert!(wait_until(|| lj.total_processed() == 30, Duration::from_secs(3)));
         let out = broker.topic("out").unwrap();
-        assert!(wait_until(Duration::from_secs(2), || out.total_messages() == 30));
+        assert!(wait_until(|| out.total_messages() == 30, Duration::from_secs(2)));
         assert_eq!(metrics.counters.get("processed"), 30);
         lj.stop_all();
     }
@@ -275,7 +395,7 @@ mod tests {
         for i in 0..60u8 {
             t.publish(Message::new(None, vec![i], 0));
         }
-        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() == 60));
+        assert!(wait_until(|| lj.total_processed() == 60, Duration::from_secs(3)));
         let per_task: Vec<u64> = lj
             .tasks
             .lock()
@@ -295,14 +415,14 @@ mod tests {
         for i in 0..10u8 {
             t.publish(Message::new(None, vec![i], 0));
         }
-        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() >= 10));
+        assert!(wait_until(|| lj.total_processed() >= 10, Duration::from_secs(3)));
         assert!(lj.kill_one());
         assert_eq!(lj.alive_count(), 0);
         for i in 10..20u8 {
             t.publish(Message::new(None, vec![i], 0));
         }
         assert_eq!(lj.heal(), 1);
-        assert!(wait_until(Duration::from_secs(3), || lj.total_processed() >= 20));
+        assert!(wait_until(|| lj.total_processed() >= 20, Duration::from_secs(3)));
         lj.stop_all();
     }
 }

@@ -9,7 +9,8 @@ use crate::util::clock::SharedClock;
 use crate::vml::envelope::Envelope;
 use crate::vml::router::RouteTarget;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Lock-free EWMA of a task's per-message processing seconds (f64 bits in
 /// an AtomicU64). Routers read this for the completion-time policy.
@@ -55,26 +56,92 @@ impl TaskStats {
 
 /// The task actor: processes envelopes, publishes outputs, records
 /// completion time (consume → fully processed — the paper's §4.3 metric).
+///
+/// Output backpressure never blocks an executor worker: a rejected batch
+/// is buffered in `pending_out` and the actor defers (executor-timer
+/// re-activation) until the producer pool has room, leaving its own
+/// mailbox untouched so the pressure propagates cleanly back to the
+/// router and the virtual consumers.
+///
+/// A message counts as *fully processed* only once its outputs are handed
+/// to the producer pool, so completion time and the per-task EWMA both
+/// include any backpressure wait — exactly what the pre-executor blocking
+/// publish measured, and what keeps the metric comparable to the Liquid
+/// baseline's inline publish accounting.
 pub struct TaskActor {
     processor: Box<dyn super::job::Processor>,
     output: Arc<dyn OutputSink>,
     stats: Arc<TaskStats>,
     metrics: Arc<PipelineMetrics>,
     clock: SharedClock,
+    /// Buffered outputs + completion stamps, shared across incarnations:
+    /// a processor panic must not drop the already-processed outputs of
+    /// *earlier* messages (their input offsets are committed upstream),
+    /// so the buffer lives outside the let-it-crash instance.
+    pending: Arc<Mutex<PendingOutput>>,
+}
+
+/// Outputs awaiting downstream capacity, plus the `(consumed_at,
+/// processing_start)` stamps of the envelopes that produced them;
+/// metrics are stamped when the outputs hand off.
+#[derive(Default)]
+pub struct PendingOutput {
+    out: Vec<crate::messaging::Message>,
+    done: Vec<(Duration, Duration)>,
+}
+
+impl TaskActor {
+    /// The buffer is touched only by this actor's own (serialized)
+    /// activations; poison recovery covers a panic unwinding a prior
+    /// incarnation mid-flush.
+    fn pending(&self) -> std::sync::MutexGuard<'_, PendingOutput> {
+        self.pending.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Try to flush buffered outputs; on success stamp the deferred
+    /// completions, on rejection keep everything and defer.
+    fn flush(&mut self, ctx: &mut Ctx<Envelope>) {
+        let mut pending = self.pending();
+        if !pending.out.is_empty() {
+            match self.output.try_publish_batch(std::mem::take(&mut pending.out)) {
+                Ok(()) => {}
+                Err(back) => {
+                    pending.out = back;
+                    ctx.defer(crate::vml::pacing::PUBLISH_RETRY);
+                    return;
+                }
+            }
+        }
+        if pending.done.is_empty() {
+            return;
+        }
+        let done_at = self.clock.now();
+        for (consumed_at, started_at) in pending.done.drain(..) {
+            self.stats.record(done_at.saturating_sub(started_at).as_secs_f64());
+            self.metrics.record_processed(done_at.saturating_sub(consumed_at));
+        }
+    }
 }
 
 impl Actor for TaskActor {
     type Msg = Envelope;
 
-    fn receive(&mut self, env: Envelope, _ctx: &mut Ctx<Envelope>) {
+    fn on_activate(&mut self, ctx: &mut Ctx<Envelope>) {
+        // Backpressured outputs flush before any new envelope is consumed.
+        self.flush(ctx);
+    }
+
+    fn receive(&mut self, env: Envelope, ctx: &mut Ctx<Envelope>) {
         let start = self.clock.now();
         let outputs = self.processor.process(&env);
-        if !outputs.is_empty() {
-            self.output.publish_batch(outputs);
+        {
+            let mut pending = self.pending();
+            if !outputs.is_empty() {
+                pending.out.extend(outputs);
+            }
+            pending.done.push((env.consumed_at, start));
         }
-        let end = self.clock.now();
-        self.stats.record(end.saturating_sub(start).as_secs_f64());
-        self.metrics.record_processed(end.saturating_sub(env.consumed_at));
+        self.flush(ctx);
     }
 }
 
@@ -100,12 +167,16 @@ impl TaskHandle {
         let stats = TaskStats::new();
         let path = format!("task:{job_name}:{task_id}");
         let st = stats.clone();
+        // One pending-output buffer per task *path*, shared by every
+        // incarnation the factory builds (survives let-it-crash).
+        let pending = Arc::new(Mutex::new(PendingOutput::default()));
         let actor = system.spawn(&path, mailbox_capacity, move || TaskActor {
             processor: (factory)(),
             output: output.clone(),
             stats: st.clone(),
             metrics: metrics.clone(),
             clock: clock.clone(),
+            pending: pending.clone(),
         });
         Arc::new(TaskHandle { actor, stats, path })
     }
@@ -139,16 +210,7 @@ mod tests {
     use crate::util::clock::real_clock;
     use std::time::Duration;
 
-    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
-        let deadline = std::time::Instant::now() + timeout;
-        while std::time::Instant::now() < deadline {
-            if f() {
-                return true;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        f()
-    }
+    use crate::util::wait_until;
 
     #[test]
     fn ewma_converges() {
@@ -202,9 +264,67 @@ mod tests {
         );
         let env = Envelope::new(Message::from_str("hi"), 0, 0, clock.now());
         task.deliver(env).unwrap();
-        assert!(wait_until(Duration::from_secs(2), || task.stats.processed() == 1));
+        assert!(wait_until(|| task.stats.processed() == 1, Duration::from_secs(2)));
         assert_eq!(metrics.counters.get("processed"), 1);
         assert!(task.est_proc_secs() >= 0.0);
+        system.shutdown();
+    }
+
+    #[test]
+    fn backpressured_output_buffers_then_flushes() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Mutex;
+        // Sink that rejects until opened: outputs must buffer in the task
+        // (deferred re-activation), then land once capacity appears.
+        struct GatedSink {
+            open: AtomicBool,
+            got: Mutex<Vec<Message>>,
+        }
+        impl super::super::job::OutputSink for GatedSink {
+            fn publish(&self, msg: Message) {
+                self.got.lock().unwrap().push(msg);
+            }
+            fn try_publish_batch(&self, msgs: Vec<Message>) -> Result<(), Vec<Message>> {
+                if self.open.load(Ordering::SeqCst) {
+                    self.got.lock().unwrap().extend(msgs);
+                    Ok(())
+                } else {
+                    Err(msgs)
+                }
+            }
+        }
+        let system = ActorSystem::new();
+        let clock = real_clock();
+        let metrics = PipelineMetrics::new(clock.clone());
+        let sink = Arc::new(GatedSink { open: AtomicBool::new(false), got: Mutex::new(vec![]) });
+        let job = Job::from_fn("g", "in", Some("out"), |env| vec![env.message.clone()]);
+        let task = TaskHandle::spawn(
+            &system,
+            "g",
+            0,
+            64,
+            job.factory.clone(),
+            sink.clone(),
+            metrics,
+            clock.clone(),
+        );
+        task.deliver(Envelope::new(Message::from_str("m"), 0, 0, clock.now())).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(sink.got.lock().unwrap().is_empty(), "gate closed: output buffered");
+        assert_eq!(
+            task.stats.processed(),
+            0,
+            "completion not recorded until the output hands off"
+        );
+        sink.open.store(true, Ordering::SeqCst);
+        assert!(
+            wait_until(|| sink.got.lock().unwrap().len() == 1, Duration::from_secs(2)),
+            "buffered output flushed after the gate opened"
+        );
+        assert!(
+            wait_until(|| task.stats.processed() == 1, Duration::from_secs(2)),
+            "completion stamped at flush time"
+        );
         system.shutdown();
     }
 

@@ -202,16 +202,7 @@ mod tests {
         (system, router, pool, metrics)
     }
 
-    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
-        let deadline = std::time::Instant::now() + timeout;
-        while std::time::Instant::now() < deadline {
-            if f() {
-                return true;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        f()
-    }
+    use crate::util::wait_until;
 
     #[test]
     fn scale_out_and_in_syncs_router() {
@@ -235,7 +226,7 @@ mod tests {
                 .route(Envelope::new(Message::from_str("m"), 0, i, Duration::ZERO))
                 .unwrap();
         }
-        assert!(wait_until(Duration::from_secs(3), || pool.total_processed() == 30));
+        assert!(wait_until(|| pool.total_processed() == 30, Duration::from_secs(3)));
         assert_eq!(metrics.counters.get("processed"), 30);
         pool.stop_all();
         system.shutdown();
@@ -262,7 +253,7 @@ mod tests {
                 .route(Envelope::new(Message::from_str("m"), 0, i, Duration::ZERO))
                 .unwrap();
         }
-        assert!(wait_until(Duration::from_secs(3), || pool.total_processed() == 40));
+        assert!(wait_until(|| pool.total_processed() == 40, Duration::from_secs(3)));
         pool.scale_to(1); // graceful: drains + retires counts
         assert_eq!(pool.total_processed(), 40, "retired counts preserved");
         pool.stop_all();

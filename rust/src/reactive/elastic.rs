@@ -325,11 +325,9 @@ mod tests {
         let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(500) });
         let ctl = ElasticController::new("bg", cfg(), clock, pool.clone());
         ctl.start();
-        let deadline = std::time::Instant::now() + Duration::from_secs(2);
-        while std::time::Instant::now() < deadline && pool.worker_count() == 1 {
-            std::thread::sleep(Duration::from_millis(5));
-        }
+        let scaled =
+            crate::util::wait_until(|| pool.worker_count() > 1, Duration::from_secs(2));
         ctl.stop();
-        assert!(pool.worker_count() > 1, "scaled out in background");
+        assert!(scaled, "scaled out in background");
     }
 }

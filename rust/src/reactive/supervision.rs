@@ -375,11 +375,9 @@ mod tests {
             },
         );
         sup.start();
-        let deadline = std::time::Instant::now() + Duration::from_secs(2);
-        while std::time::Instant::now() < deadline && !healthy.load(Ordering::SeqCst) {
-            std::thread::sleep(Duration::from_millis(5));
-        }
+        let healed =
+            crate::util::wait_until(|| healthy.load(Ordering::SeqCst), Duration::from_secs(2));
         sup.stop();
-        assert!(healthy.load(Ordering::SeqCst), "sweeper healed the component");
+        assert!(healed, "sweeper healed the component");
     }
 }

@@ -28,12 +28,14 @@
 
 pub mod chaos;
 pub mod clock;
+pub mod executor;
 pub mod model;
 pub mod runtime;
 pub mod scenario;
 pub mod scheduler;
 
 pub use clock::SimClock;
+pub use executor::SimExecutor;
 pub use model::{SimPool, Trace};
 pub use runtime::{ThreadTicker, TickHandle, Ticker};
 pub use scenario::{Fault, Probes, Scenario, ScenarioReport, WorkloadShape};

@@ -111,10 +111,10 @@ mod tests {
                 c.fetch_add(1, Ordering::SeqCst);
             }),
         );
-        let deadline = std::time::Instant::now() + Duration::from_secs(2);
-        while std::time::Instant::now() < deadline && count.load(Ordering::SeqCst) < 3 {
-            std::thread::sleep(Duration::from_millis(2));
-        }
+        assert!(crate::util::wait_until(
+            || count.load(Ordering::SeqCst) >= 3,
+            Duration::from_secs(2)
+        ));
         handle.cancel();
         let at_cancel = count.load(Ordering::SeqCst);
         assert!(at_cancel >= 3, "ticked at least 3 times, got {at_cancel}");

@@ -5,7 +5,8 @@
 //! a seedable PRNG ([`prng`]), wall/simulated clocks ([`clock`]), statistics
 //! for the evaluation figures ([`stats`]), a latency histogram
 //! ([`histogram`]), a leveled logger ([`logging`]), CSV/JSONL result writers
-//! ([`io`]), and a randomized property-testing harness ([`propcheck`]).
+//! ([`io`]), a randomized property-testing harness ([`propcheck`]), and
+//! condition waits for concurrency tests ([`wait`]).
 
 pub mod clock;
 pub mod histogram;
@@ -14,8 +15,10 @@ pub mod logging;
 pub mod prng;
 pub mod propcheck;
 pub mod stats;
+pub mod wait;
 
 pub use clock::{Clock, ManualClock, RealClock, SharedClock};
 pub use histogram::Histogram;
 pub use prng::Pcg32;
 pub use stats::{linear_fit, mean, percentile, stddev, LinearFit};
+pub use wait::wait_until;

@@ -1,0 +1,60 @@
+//! Condition waits.
+//!
+//! Replaces the bare `thread::sleep(5ms)` polling loops that used to be
+//! copy-pasted into every concurrency test: one shared predicate wait
+//! with exponential backoff and a hard deadline, so tests synchronize on
+//! *conditions* instead of timings. (A generic predicate cannot park on a
+//! condvar — the backoff keeps the re-check cheap while staying prompt:
+//! the first checks are microseconds apart.)
+
+use std::time::{Duration, Instant};
+
+/// Wait until `pred` returns true, up to `timeout`. Returns the final
+/// predicate value, so callers can `assert!(wait_until(..))`.
+pub fn wait_until(pred: impl Fn() -> bool, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_micros(50);
+    loop {
+        if pred() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return pred();
+        }
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_millis(5));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn immediate_truth_returns_fast() {
+        let start = Instant::now();
+        assert!(wait_until(|| true, Duration::from_secs(5)));
+        assert!(start.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn waits_for_late_condition() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let f = flag.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            f.store(true, Ordering::SeqCst);
+        });
+        assert!(wait_until(|| flag.load(Ordering::SeqCst), Duration::from_secs(2)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn times_out_on_false() {
+        let start = Instant::now();
+        assert!(!wait_until(|| false, Duration::from_millis(30)));
+        assert!(start.elapsed() >= Duration::from_millis(30));
+    }
+}

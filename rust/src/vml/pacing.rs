@@ -1,23 +1,28 @@
-//! Pacing policy for the virtual messaging layer's polling loops.
+//! Pacing policy for the virtual messaging layer's re-activation
+//! deadlines.
 //!
-//! The VML's real-time threads (virtual consumers, the producer pool's
-//! backpressure path) briefly yield when they find nothing to do or no
-//! capacity to do it with. Those waits used to be magic numbers scattered
-//! through the loops; they are named here so the pacing is one policy,
-//! tunable in one place, and visible to the simulation layer — scenario
-//! models in [`crate::sim`] represent the same consume/route/publish
-//! cycle as discrete ticks, with these constants as the real-time
-//! equivalents of one idle tick.
+//! Before the executor refactor these constants paced `thread::sleep`
+//! polling loops. They are now **timer deadlines**: a virtual consumer
+//! (or producer-pool caller) that finds nothing to do — or no capacity to
+//! do it with — returns [`Poll::After`] with one of these durations and
+//! releases its worker thread; the executor's timer wheel re-activates it
+//! at the deadline, or earlier if new input arrives. The names stay in
+//! one place so the pacing is one policy, tunable in one spot, and
+//! visible to the simulation layer — scenario models in [`crate::sim`]
+//! represent the same consume/route/publish cycle as discrete ticks, with
+//! these constants as the virtual-time equivalents of one idle tick.
+//!
+//! [`Poll::After`]: crate::actor::executor::Poll::After
 
 use std::time::Duration;
 
-/// Wait between polls when a consumer's `poll_batch` returns empty.
+/// Re-activation deadline after a consumer's `poll_batch` returns empty.
 pub const CONSUMER_IDLE: Duration = Duration::from_millis(2);
 
-/// Wait between routing retries while every task mailbox is full
-/// (backpressure toward the broker).
+/// Re-activation deadline between routing retries while every task
+/// mailbox is full (backpressure toward the broker).
 pub const ROUTE_RETRY: Duration = Duration::from_millis(2);
 
-/// Wait between publish retries while every producer worker's mailbox is
-/// full (backpressure toward the tasks).
+/// Re-activation deadline between publish retries while every producer
+/// worker's mailbox is full (backpressure toward the tasks).
 pub const PUBLISH_RETRY: Duration = Duration::from_millis(1);

@@ -1,16 +1,28 @@
 //! Virtual consumers: the consuming half of a virtual topic.
 //!
-//! One virtual consumer is a thread owning one messaging-layer
-//! consumer-group membership. It polls batches of `n` messages, stamps
-//! their consume time, pushes each through the job's [`TaskRouter`], and
-//! then commits the batch — to the broker *and* to the event-sourced
-//! [`OffsetStore`], so a restarted consumer resumes where it stopped
-//! (§3.2.3). A [`VirtualConsumerGroup`] runs up to `partitions` of them
-//! and knows how to kill (crash) and respawn members, which is what the
-//! supervision service and the cluster failure injector drive.
+//! One virtual consumer owns one messaging-layer consumer-group
+//! membership and runs as a poll-driven state machine on the actor
+//! executor (no dedicated thread). Each activation is one consume cycle:
+//! poll a batch of `n` messages, stamp their consume time, push them
+//! through the job's [`TaskRouter`], and commit the batch — to the broker
+//! *and* to the event-sourced [`OffsetStore`], so a restarted consumer
+//! resumes where it stopped (§3.2.3). An empty poll re-schedules the
+//! consumer after [`pacing::CONSUMER_IDLE`] on the executor timer; a
+//! backpressured route keeps the undelivered remainder and retries after
+//! [`pacing::ROUTE_RETRY`] — in both cases the worker thread is released
+//! immediately instead of sleeping.
+//!
+//! A [`VirtualConsumerGroup`] runs up to `partitions` of them and knows
+//! how to kill (crash) and respawn members, which is what the supervision
+//! service and the cluster failure injector drive.
+//!
+//! [`pacing::CONSUMER_IDLE`]: super::pacing::CONSUMER_IDLE
+//! [`pacing::ROUTE_RETRY`]: super::pacing::ROUTE_RETRY
 
 use super::router::TaskRouter;
+use crate::actor::executor::{Executor, Poll, Poller, Registration};
 use crate::log_debug;
+use crate::messaging::broker::{Consumer, PolledBatch};
 use crate::messaging::Broker;
 use crate::metrics::PipelineMetrics;
 use crate::reactive::state::OffsetStore;
@@ -18,9 +30,9 @@ use crate::util::clock::SharedClock;
 use crate::vml::envelope::Envelope;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::time::Duration;
 
-/// Shared wiring a consumer thread needs.
+/// Shared wiring a virtual consumer needs.
 #[derive(Clone)]
 pub struct ConsumerWiring {
     pub broker: Arc<Broker>,
@@ -32,106 +44,84 @@ pub struct ConsumerWiring {
     pub offsets: Arc<OffsetStore>,
     pub clock: SharedClock,
     pub metrics: Arc<PipelineMetrics>,
+    /// Executor the consumer's activations run on.
+    pub executor: Arc<dyn Executor>,
+}
+
+/// Interior consume-cycle state (touched only inside activations, which
+/// the executor serializes per consumer).
+struct VcInner {
+    consumer: Option<Consumer>,
+    /// Batch polled but not yet committed (commit happens only after the
+    /// whole batch routed).
+    batch: Option<PolledBatch>,
+    /// Message count of `batch` (its `messages` vec is consumed into
+    /// envelopes up front).
+    batch_n: u64,
+    /// Envelopes of `batch` still awaiting a task mailbox slot.
+    pending: Vec<Envelope>,
 }
 
 /// A single supervised, stateful virtual consumer.
 pub struct VirtualConsumer {
     pub name: String,
     wiring: ConsumerWiring,
-    stop: Arc<AtomicBool>,
-    alive: Arc<AtomicBool>,
-    consumed: Arc<AtomicU64>,
-    handle: Mutex<Option<JoinHandle<()>>>,
+    stop: AtomicBool,
+    alive: AtomicBool,
+    consumed: AtomicU64,
+    inner: Mutex<VcInner>,
+    registration: Registration,
 }
 
 impl VirtualConsumer {
-    /// Spawn the consumer thread. It joins the group immediately; offsets
+    /// Register the consumer on the executor and schedule its first
+    /// activation. It joins the group on that first activation; offsets
     /// resume from the offset store via the broker's committed offsets
     /// (both are written on every batch).
     pub fn spawn(name: &str, wiring: ConsumerWiring) -> Arc<Self> {
+        let executor = wiring.executor.clone();
         let vc = Arc::new(VirtualConsumer {
             name: name.to_string(),
             wiring,
-            stop: Arc::new(AtomicBool::new(false)),
-            alive: Arc::new(AtomicBool::new(true)),
-            consumed: Arc::new(AtomicU64::new(0)),
-            handle: Mutex::new(None),
+            stop: AtomicBool::new(false),
+            alive: AtomicBool::new(true),
+            consumed: AtomicU64::new(0),
+            inner: Mutex::new(VcInner {
+                consumer: None,
+                batch: None,
+                batch_n: 0,
+                pending: Vec::new(),
+            }),
+            registration: Registration::new(),
         });
-        vc.launch();
+        let act = executor.register(vc.clone(), 1);
+        vc.registration.arm(act);
+        vc.registration.notify();
         vc
     }
 
-    fn launch(self: &Arc<Self>) {
-        let me = self.clone();
-        self.stop.store(false, Ordering::SeqCst);
-        self.alive.store(true, Ordering::SeqCst);
-        let handle = std::thread::Builder::new()
-            .name(format!("vc:{}", self.name))
-            .spawn(move || me.run())
-            .expect("spawn virtual consumer");
-        *self.handle.lock().unwrap() = Some(handle);
+    /// Lock the cycle state, recovering from poisoning: a panic that
+    /// escaped a cycle only interrupted one consume cycle, and finalize/
+    /// restart must still be able to clean up.
+    fn lock_inner(&self) -> std::sync::MutexGuard<'_, VcInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
-    fn run(self: Arc<Self>) {
-        let w = &self.wiring;
-        // Seed the broker's committed offsets from the durable store (a
-        // fresh broker group starts at 0; after a full-system restart the
-        // store is the source of truth).
-        let consumer = w.broker.subscribe(&w.topic, &w.group);
-        for p in consumer.assignment() {
-            let committed = w.offsets.committed(&w.topic, p);
-            consumer.commit(p, committed);
-        }
-        log_debug!("vc", "'{}' consuming {}/{}", self.name, w.topic, w.group);
-        while !self.stop.load(Ordering::SeqCst) {
-            // Batch-first consume cycle: one poll_batch (one coordinator
-            // lock), one route_batch per retry round (one router lock),
-            // one commit_batch (one coordinator lock) — the per-message
-            // costs of Eq. 1's `n`-message cycle paid once per batch.
-            let mut batch = consumer.poll_batch(w.batch);
-            if batch.is_empty() {
-                std::thread::sleep(super::pacing::CONSUMER_IDLE);
-                continue;
-            }
-            let consumed_at = w.clock.now();
-            let n = batch.len() as u64;
-            let mut pending: Vec<Envelope> = std::mem::take(&mut batch.messages)
-                .into_iter()
-                .map(|om| Envelope::new(om.message, om.partition, om.offset, consumed_at))
-                .collect();
-            // Route with retry: a non-empty remainder means every task
-            // mailbox was full (backpressure by waiting) or the job is
-            // still starting (no targets yet). Undelivered envelopes come
-            // back by value, so nothing is cloned on any path.
-            loop {
-                pending = w.router.route_batch(pending);
-                if pending.is_empty() {
-                    break;
-                }
-                if self.stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                std::thread::sleep(super::pacing::ROUTE_RETRY);
-            }
-            if !pending.is_empty() {
-                // Stopping with unrouted messages: don't commit the batch;
-                // the next incarnation redelivers it (at-least-once).
-                break;
-            }
-            self.consumed.fetch_add(n, Ordering::Relaxed);
-            w.metrics.counters.add("vml.consumed", n);
-            // Commit the batch: broker (group progress) + durable store
-            // (restart state). Committing *after* routing is at-least-once;
-            // a commit fenced by a concurrent rebalance is dropped and the
-            // batch's offsets are redelivered to their new owner.
-            if consumer.commit_batch(&batch) {
-                for &(p, next) in &batch.next_offsets {
-                    w.offsets.commit(&w.topic, p, next);
-                }
+    /// Close the membership and drop uncommitted work: the next
+    /// incarnation redelivers it (at-least-once).
+    fn finalize(&self) {
+        {
+            let mut inner = self.lock_inner();
+            inner.pending.clear();
+            inner.batch = None;
+            inner.batch_n = 0;
+            if let Some(c) = inner.consumer.take() {
+                c.close();
             }
         }
-        consumer.close();
-        self.alive.store(false, Ordering::SeqCst);
+        if self.alive.swap(false, Ordering::SeqCst) {
+            self.registration.wake_joiners();
+        }
     }
 
     /// Messages this incarnation has consumed.
@@ -143,28 +133,135 @@ impl VirtualConsumer {
         self.alive.load(Ordering::SeqCst)
     }
 
-    /// Graceful stop (commits what was already committed; in-flight batch
-    /// finishes routing).
+    /// Graceful stop: the in-flight activation finishes, uncommitted work
+    /// is left for redelivery, and the group membership closes. Waits
+    /// (bounded) for the wind-down.
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.handle.lock().unwrap().take() {
-            let _ = h.join();
-        }
+        self.registration.notify();
+        // A cooperative executor (sim) only drains when its scheduler is
+        // pumped — waiting here would stall, so skip the join.
+        let wait = if self.wiring.executor.is_cooperative() {
+            Duration::ZERO
+        } else {
+            Duration::from_secs(5)
+        };
+        self.registration.join_while(|| self.alive.load(Ordering::SeqCst), wait);
     }
 
-    /// Crash: stop the thread *as if the node died*. Uncommitted progress
-    /// is lost; the group rebalances when the consumer drops.
+    /// Crash: stop *as if the node died*. Uncommitted progress is lost;
+    /// the group rebalances when the consumer drops.
     pub fn kill(&self) {
         self.stop();
     }
 
-    /// Restart after a kill (supervision's let-it-crash action). Resumes
-    /// from committed offsets.
+    /// Restart after a kill (supervision's let-it-crash action). Re-arms
+    /// the existing executor registration — no thread is spawned — and
+    /// resumes from committed offsets with a fresh group membership.
+    /// Also cancels a stop that was requested but not yet pumped (the
+    /// cooperative-executor wind-down window), so restart-after-kill can
+    /// never be silently dropped.
     pub fn restart(self: &Arc<Self>) {
-        if self.is_alive() {
+        let stop_pending = self.stop.swap(false, Ordering::SeqCst);
+        if self.is_alive() && !stop_pending {
             return;
         }
-        self.launch();
+        self.alive.store(true, Ordering::SeqCst);
+        self.registration.notify();
+    }
+}
+
+impl Poller for VirtualConsumer {
+    fn poll(&self, budget: usize) -> Poll {
+        // Contain panics that escape a consume cycle (broker, router, or
+        // store code): mark the consumer dead so supervision's heal path
+        // (`restart` keys on `!is_alive`) regenerates it — let-it-crash,
+        // not a silent wedge.
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.cycle(budget))) {
+            Ok(verdict) => verdict,
+            Err(_) => {
+                log_debug!("vc", "'{}' crashed mid-cycle; awaiting heal", self.name);
+                self.finalize();
+                Poll::Idle
+            }
+        }
+    }
+
+    fn path(&self) -> &str {
+        &self.name
+    }
+}
+
+impl VirtualConsumer {
+    /// One consume cycle (one activation).
+    fn cycle(&self, _budget: usize) -> Poll {
+        if self.stop.load(Ordering::SeqCst) || !self.alive.load(Ordering::SeqCst) {
+            self.finalize();
+            return Poll::Idle;
+        }
+        let w = &self.wiring;
+        let mut guard = self.lock_inner();
+        let inner = &mut *guard;
+        if inner.consumer.is_none() {
+            // Fresh incarnation: join the group and seed the broker's
+            // committed offsets from the durable store (a fresh broker
+            // group starts at 0; after a full-system restart the store is
+            // the source of truth).
+            let consumer = w.broker.subscribe(&w.topic, &w.group);
+            for p in consumer.assignment() {
+                consumer.commit(p, w.offsets.committed(&w.topic, p));
+            }
+            log_debug!("vc", "'{}' consuming {}/{}", self.name, w.topic, w.group);
+            inner.consumer = Some(consumer);
+        }
+        if inner.batch.is_none() {
+            // Batch-first consume cycle: one poll_batch (one coordinator
+            // lock), one route_batch per retry round (one router lock),
+            // one commit_batch (one coordinator lock) — the per-message
+            // costs of Eq. 1's `n`-message cycle paid once per batch.
+            let consumer = inner.consumer.as_ref().expect("consumer joined above");
+            let mut batch = consumer.poll_batch(w.batch);
+            if batch.is_empty() {
+                // Nothing to consume: release the worker and re-activate
+                // after the idle deadline (executor timer, no sleep).
+                return Poll::After(super::pacing::CONSUMER_IDLE);
+            }
+            let consumed_at = w.clock.now();
+            let msgs = std::mem::take(&mut batch.messages);
+            inner.batch_n = msgs.len() as u64;
+            inner.pending = msgs
+                .into_iter()
+                .map(|om| Envelope::new(om.message, om.partition, om.offset, consumed_at))
+                .collect();
+            inner.batch = Some(batch);
+        }
+        // Route (first attempt or retry): a non-empty remainder means
+        // every task mailbox was full or the job is still starting (no
+        // targets yet). Undelivered envelopes come back by value, so
+        // nothing is cloned on any path.
+        inner.pending = w.router.route_batch(std::mem::take(&mut inner.pending));
+        if !inner.pending.is_empty() {
+            // Backpressure: hold the uncommitted batch and retry after
+            // the route-retry deadline.
+            return Poll::After(super::pacing::ROUTE_RETRY);
+        }
+        // Fully routed: commit the batch — broker (group progress) +
+        // durable store (restart state). Committing *after* routing is
+        // at-least-once; a commit fenced by a concurrent rebalance is
+        // dropped and the batch's offsets are redelivered to their new
+        // owner.
+        let batch = inner.batch.take().expect("uncommitted batch present");
+        let n = std::mem::take(&mut inner.batch_n);
+        self.consumed.fetch_add(n, Ordering::Relaxed);
+        w.metrics.counters.add("vml.consumed", n);
+        if inner.consumer.as_ref().expect("consumer live").commit_batch(&batch) {
+            for &(p, next) in &batch.next_offsets {
+                w.offsets.commit(&w.topic, p, next);
+            }
+        }
+        // More may be waiting: run another cycle as soon as a worker is
+        // free (fair: behind already-scheduled peers).
+        Poll::Ready
     }
 }
 
@@ -247,13 +344,14 @@ impl VirtualConsumerGroup {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::actor::executor::ThreadedExecutor;
     use crate::actor::mailbox::SendError;
     use crate::config::RouterPolicy;
     use crate::messaging::Message;
     use crate::util::clock::real_clock;
+    use crate::util::wait_until;
     use crate::vml::router::RouteTarget;
     use std::sync::atomic::AtomicUsize;
-    use std::time::Duration;
 
     struct Sink {
         seen: Mutex<Vec<u64>>,
@@ -287,18 +385,8 @@ mod tests {
             offsets: Arc::new(OffsetStore::in_memory()),
             clock: clock.clone(),
             metrics: PipelineMetrics::new(clock),
+            executor: ThreadedExecutor::new(2),
         }
-    }
-
-    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
-        let deadline = std::time::Instant::now() + timeout;
-        while std::time::Instant::now() < deadline {
-            if f() {
-                return true;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        f()
     }
 
     #[test]
@@ -313,9 +401,9 @@ mod tests {
         let sink = Sink::new();
         router.set_targets(vec![sink.clone()]);
         let group = VirtualConsumerGroup::start("t", "job", 3, wiring(&broker, router, 8));
-        assert!(wait_until(Duration::from_secs(3), || sink.seen.lock().unwrap().len() == 50));
+        assert!(wait_until(|| sink.seen.lock().unwrap().len() == 50, Duration::from_secs(3)));
         assert_eq!(group.total_consumed(), 50);
-        assert!(wait_until(Duration::from_secs(1), || group.lag() == 0));
+        assert!(wait_until(|| group.lag() == 0, Duration::from_secs(1)));
         group.stop_all();
     }
 
@@ -342,7 +430,7 @@ mod tests {
         let sink = Sink::new();
         router.set_targets(vec![sink.clone()]);
         let group = VirtualConsumerGroup::start("t", "job", 1, wiring(&broker, router, 5));
-        assert!(wait_until(Duration::from_secs(3), || sink.seen.lock().unwrap().len() >= 20));
+        assert!(wait_until(|| sink.seen.lock().unwrap().len() >= 20, Duration::from_secs(3)));
         group.kill_one(0);
         assert_eq!(group.alive_count(), 0);
         // More traffic arrives while down.
@@ -350,12 +438,55 @@ mod tests {
             t.publish(Message::new(None, vec![i], 0));
         }
         assert_eq!(group.heal(), 1);
-        assert!(wait_until(Duration::from_secs(3), || sink.seen.lock().unwrap().len() >= 30));
+        assert!(wait_until(|| sink.seen.lock().unwrap().len() >= 30, Duration::from_secs(3)));
         // At-least-once: no *gaps* — every offset 0..30 seen at least once.
         let seen = sink.seen.lock().unwrap().clone();
         for off in 0..30u64 {
             assert!(seen.contains(&off), "offset {off} missing");
         }
+        group.stop_all();
+    }
+
+    #[test]
+    fn backpressured_route_holds_batch_uncommitted_then_delivers() {
+        // A target that rejects until released: the consumer must keep
+        // retrying via timer re-activation (holding the batch uncommitted)
+        // and deliver everything once capacity appears.
+        struct Gated {
+            open: AtomicBool,
+            seen: Mutex<Vec<u64>>,
+        }
+        impl RouteTarget for Gated {
+            fn deliver(&self, env: Envelope) -> Result<(), (SendError, Envelope)> {
+                if self.open.load(Ordering::SeqCst) {
+                    self.seen.lock().unwrap().push(env.offset);
+                    Ok(())
+                } else {
+                    Err((SendError::Full, env))
+                }
+            }
+            fn queue_depth(&self) -> usize {
+                0
+            }
+        }
+        let broker = Broker::new();
+        broker.create_topic("t", 1);
+        let t = broker.topic("t").unwrap();
+        for i in 0..10u8 {
+            t.publish(Message::new(None, vec![i], 0));
+        }
+        let router = TaskRouter::new(RouterPolicy::RoundRobin);
+        let gated = Arc::new(Gated { open: AtomicBool::new(false), seen: Mutex::new(vec![]) });
+        router.set_targets(vec![gated.clone()]);
+        let w = wiring(&broker, router, 4);
+        let offsets = w.offsets.clone();
+        let group = VirtualConsumerGroup::start("t", "job", 1, w);
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(gated.seen.lock().unwrap().is_empty(), "gate closed: nothing routed");
+        assert_eq!(offsets.committed("t", 0), 0, "backpressured batch not committed");
+        gated.open.store(true, Ordering::SeqCst);
+        assert!(wait_until(|| gated.seen.lock().unwrap().len() >= 10, Duration::from_secs(3)));
+        assert!(wait_until(|| offsets.committed("t", 0) == 10, Duration::from_secs(3)));
         group.stop_all();
     }
 
@@ -372,7 +503,7 @@ mod tests {
         let w = wiring(&broker, router, 4);
         let offsets = w.offsets.clone();
         let group = VirtualConsumerGroup::start("t", "job", 1, w);
-        assert!(wait_until(Duration::from_secs(3), || offsets.committed("t", 0) == 7));
+        assert!(wait_until(|| offsets.committed("t", 0) == 7, Duration::from_secs(3)));
         group.stop_all();
     }
 }

@@ -8,8 +8,16 @@
 //! to the incoming messages"). The pool implements [`ScalableTarget`] so
 //! an [`ElasticController`] can resize it.
 //!
+//! Backpressure comes in two flavours since the executor refactor:
+//! executor-hosted callers (task actors) use
+//! [`VirtualProducerPool::try_publish_batch`] and re-schedule themselves
+//! on rejection (never blocking a worker thread), while external threads
+//! use the blocking [`VirtualProducerPool::publish_batch`], which waits on
+//! a worker mailbox's condvar — no sleep-polling on either path.
+//!
 //! [`ElasticController`]: crate::reactive::elastic::ElasticController
 
+use crate::actor::mailbox::SendError;
 use crate::actor::system::{Actor, ActorRef, ActorSystem, Ctx};
 use crate::messaging::{Broker, Message, Producer};
 use crate::metrics::PipelineMetrics;
@@ -110,39 +118,91 @@ impl VirtualProducerPool {
         self.publish_batch(vec![msg]);
     }
 
-    /// Hand a batch to the pool: round-robin over workers, spilling to
-    /// the next worker when one is at capacity. If every worker is full
-    /// (or the pool is momentarily empty during a resize), blocks until
-    /// capacity frees up — backpressure toward the tasks. The batch stays
-    /// together through one worker's mailbox so the broker publish is a
-    /// single [`Producer::send_messages`] call; no message is cloned on
-    /// any path (rejected sends hand the batch back).
+    /// Non-blocking batch hand-off: one round-robin sweep over the
+    /// workers, spilling to the next when one is at capacity. If every
+    /// worker rejects (or the pool is momentarily empty during a resize),
+    /// the batch comes back unchanged — executor-hosted callers store it
+    /// and re-activate after a deadline instead of blocking their worker
+    /// thread. No message is cloned on any path.
+    pub fn try_publish_batch(&self, batch: Vec<Message>) -> Result<(), Vec<Message>> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let workers = self.workers.read().unwrap();
+        let n = workers.len();
+        if n == 0 {
+            return Err(batch);
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut batch = batch;
+        for k in 0..n {
+            let len = batch.len() as i64;
+            match workers[(start + k) % n].try_tell_back(batch) {
+                Ok(()) => {
+                    self.queued.fetch_add(len, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err((_err, back)) => batch = back,
+            }
+        }
+        Err(batch)
+    }
+
+    /// Blocking batch hand-off for callers *outside* the executor
+    /// (ingest, examples, tests): tries the non-blocking sweep first,
+    /// then waits on a worker mailbox's not-full condvar — backpressure
+    /// toward the caller without sleep-polling. The batch stays together
+    /// through one worker's mailbox so the broker publish is a single
+    /// [`Producer::send_messages`] call.
     pub fn publish_batch(&self, batch: Vec<Message>) {
         if batch.is_empty() {
             return;
         }
-        let mut pending = Some(batch);
+        let mut pending = batch;
         loop {
-            {
+            pending = match self.try_publish_batch(pending) {
+                Ok(()) => return,
+                Err(back) => back,
+            };
+            // Every worker full: wait on one worker's not-full condvar,
+            // bounded by PUBLISH_RETRY so the next iteration re-sweeps
+            // the whole pool — a single slow (or crashed-and-unrestarted)
+            // worker cannot head-of-line-block the batch while siblings
+            // have capacity.
+            let target = {
                 let workers = self.workers.read().unwrap();
-                let n = workers.len();
-                if n > 0 {
-                    let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
-                    let mut batch = pending.take().expect("pending batch present");
-                    for k in 0..n {
-                        let len = batch.len() as i64;
-                        match workers[(start + k) % n].try_tell_back(batch) {
-                            Ok(()) => {
-                                self.queued.fetch_add(len, Ordering::Relaxed);
-                                return;
-                            }
-                            Err((_err, back)) => batch = back,
+                if workers.is_empty() {
+                    None
+                } else {
+                    let i = self.rr.fetch_add(1, Ordering::Relaxed) % workers.len();
+                    Some(workers[i].clone())
+                }
+            };
+            match target {
+                Some(w) => {
+                    let len = pending.len() as i64;
+                    match w.tell_back_timeout(pending, super::pacing::PUBLISH_RETRY) {
+                        Ok(()) => {
+                            self.queued.fetch_add(len, Ordering::Relaxed);
+                            return;
+                        }
+                        Err((SendError::Full, back)) => pending = back, // re-sweep
+                        Err((_closed, back)) => {
+                            // Worker retired — or the whole pool stopped
+                            // under us. Bounded park before re-sweeping so
+                            // a racing shutdown cannot spin this caller
+                            // hot (cold post-stop path, not flow pacing).
+                            pending = back;
+                            std::thread::park_timeout(super::pacing::PUBLISH_RETRY);
                         }
                     }
-                    pending = Some(batch);
+                }
+                None => {
+                    // Pool momentarily empty (resize in flight): bounded
+                    // park, then re-check — same cold path as above.
+                    std::thread::park_timeout(super::pacing::PUBLISH_RETRY);
                 }
             }
-            std::thread::sleep(super::pacing::PUBLISH_RETRY);
         }
     }
 
@@ -191,6 +251,7 @@ impl ScalableTarget for VirtualProducerPool {
 mod tests {
     use super::*;
     use crate::util::clock::real_clock;
+    use crate::util::wait_until;
     use std::time::Duration;
 
     fn fixture(partitions: usize) -> (Arc<ActorSystem>, Arc<Broker>, Arc<PipelineMetrics>) {
@@ -199,17 +260,6 @@ mod tests {
         broker.create_topic("out", partitions);
         let metrics = PipelineMetrics::new(real_clock());
         (system, broker, metrics)
-    }
-
-    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
-        let deadline = std::time::Instant::now() + timeout;
-        while std::time::Instant::now() < deadline {
-            if f() {
-                return true;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        f()
     }
 
     #[test]
@@ -229,7 +279,7 @@ mod tests {
             pool.publish(Message::new(None, vec![i], 0));
         }
         let topic = broker.topic("out").unwrap();
-        assert!(wait_until(Duration::from_secs(3), || topic.total_messages() == 20));
+        assert!(wait_until(|| topic.total_messages() == 20, Duration::from_secs(3)));
         assert_eq!(metrics.counters.get("vml.produced"), 20);
         pool.stop_all();
         system.shutdown();
@@ -251,14 +301,26 @@ mod tests {
         pool.publish_batch((0..50u8).map(|i| Message::new(None, vec![i], 0)).collect());
         pool.publish_batch(Vec::new()); // no-op
         let topic = broker.topic("out").unwrap();
-        assert!(wait_until(Duration::from_secs(3), || topic.total_messages() == 50));
+        assert!(wait_until(|| topic.total_messages() == 50, Duration::from_secs(3)));
         assert_eq!(metrics.counters.get("vml.produced"), 50);
         assert!(
-            wait_until(Duration::from_secs(1), || pool.depth() == 0),
+            wait_until(|| pool.depth() == 0, Duration::from_secs(1)),
             "queued-message gauge drains to 0, got {}",
             pool.depth()
         );
         pool.stop_all();
+        system.shutdown();
+    }
+
+    #[test]
+    fn try_publish_batch_hands_back_when_saturated() {
+        let (system, broker, metrics) = fixture(1);
+        let pool =
+            VirtualProducerPool::start(&system, &broker, "out", real_clock(), metrics, 1, 1, 1);
+        pool.stop_all(); // no live workers: every mailbox rejects as closed
+        let batch: Vec<Message> = (0..4u8).map(|i| Message::new(None, vec![i], 0)).collect();
+        let back = pool.try_publish_batch(batch).unwrap_err();
+        assert_eq!(back.len(), 4, "rejected batch handed back intact");
         system.shutdown();
     }
 
@@ -287,7 +349,7 @@ mod tests {
         pool.scale_to(1);
         let topic = broker.topic("out").unwrap();
         assert!(
-            wait_until(Duration::from_secs(3), || topic.total_messages() == 100),
+            wait_until(|| topic.total_messages() == 100, Duration::from_secs(3)),
             "got {}",
             topic.total_messages()
         );

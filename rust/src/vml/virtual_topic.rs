@@ -92,6 +92,8 @@ impl VirtualTopic {
             offsets: self.offsets.clone(),
             clock: self.clock.clone(),
             metrics: self.metrics.clone(),
+            // Consumers activate on the same executor as the actors.
+            executor: self.system.executor(),
         };
         let group = Arc::new_cyclic(|_| {
             VirtualConsumerGroup::start(&self.topic, job, consumers, wiring)
@@ -115,6 +117,13 @@ impl VirtualTopic {
     /// single [`publish_batch`](crate::messaging::broker::Topic::publish_batch).
     pub fn publish_batch(&self, msgs: Vec<Message>) {
         self.producer_pool.publish_batch(msgs);
+    }
+
+    /// Non-blocking batch publish: the whole batch comes back on
+    /// backpressure so executor-hosted callers (task actors) can defer
+    /// and retry instead of blocking a worker thread.
+    pub fn try_publish_batch(&self, msgs: Vec<Message>) -> Result<(), Vec<Message>> {
+        self.producer_pool.try_publish_batch(msgs)
     }
 
     pub fn consumer_group(&self, job: &str) -> Option<Arc<VirtualConsumerGroup>> {
@@ -160,16 +169,7 @@ mod tests {
         }
     }
 
-    fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
-        let deadline = std::time::Instant::now() + timeout;
-        while std::time::Instant::now() < deadline {
-            if f() {
-                return true;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        f()
-    }
+    use crate::util::wait_until;
 
     #[test]
     fn full_virtual_topic_round_trip() {
@@ -200,7 +200,7 @@ mod tests {
         let group = vt.subscribe("job", 3, 8, router);
 
         assert!(
-            wait_until(Duration::from_secs(3), || sink.n.load(Ordering::SeqCst) == 30),
+            wait_until(|| sink.n.load(Ordering::SeqCst) == 30, Duration::from_secs(3)),
             "routed {}",
             sink.n.load(Ordering::SeqCst)
         );
