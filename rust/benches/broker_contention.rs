@@ -1,0 +1,116 @@
+//! Broker contention sweep: N producer threads × M consumer threads (one
+//! consumer group each) hammering one topic, printing delivered msgs/sec
+//! and the scaling ratio vs the single producer–consumer pair.
+//!
+//! This is the acceptance bench for the coordinator/data-plane lock
+//! split: with one `RwLock<Vec<_>>` per partition and one groups mutex
+//! per topic, every extra consumer group serialized on the same two
+//! locks and the sweep stayed flat; with lock-free segmented reads and
+//! per-group coordinator locks, delivered throughput scales with the
+//! thread count (bounded by the machine's cores).
+//!
+//! Each cell is fixed-work: every producer publishes `per_producer`
+//! messages in 64-message batches, every consumer (its own group) drains
+//! all `N × per_producer` of them with `poll_batch`/`commit_batch`. Rate
+//! = total messages delivered across consumers / wall time.
+//!
+//! Run: `cargo bench --bench broker_contention`
+//! Smoke (CI): `RL_BENCH_SMOKE=1 cargo bench --bench broker_contention`
+
+use reactive_liquid::messaging::{Broker, Message};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Batch size on both the publish and the poll side (the `n` of Eq. 1).
+const BATCH: usize = 64;
+/// Partition count — fixed across cells so only the thread count varies.
+const PARTITIONS: usize = 4;
+
+fn run_cell(producers: usize, consumers: usize, per_producer: usize) -> f64 {
+    let broker = Broker::new();
+    broker.create_topic("t", PARTITIONS);
+    let total_published = (producers * per_producer) as u64;
+    let delivered = Arc::new(AtomicU64::new(0));
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..producers {
+        let b = broker.clone();
+        handles.push(std::thread::spawn(move || {
+            let t = b.topic("t").unwrap();
+            let payload = vec![0u8; 20];
+            let mut sent = 0usize;
+            while sent < per_producer {
+                let m = BATCH.min(per_producer - sent);
+                t.publish_batch((0..m).map(|_| Message::new(None, payload.clone(), 0)).collect());
+                sent += m;
+            }
+        }));
+    }
+    for c in 0..consumers {
+        let b = broker.clone();
+        let delivered = delivered.clone();
+        handles.push(std::thread::spawn(move || {
+            let consumer = b.subscribe("t", &format!("g{c}"));
+            let mut got = 0u64;
+            while got < total_published {
+                let batch = consumer.poll_batch(BATCH);
+                if batch.is_empty() {
+                    std::thread::yield_now();
+                    continue;
+                }
+                got += batch.len() as u64;
+                assert!(consumer.commit_batch(&batch), "single-member group is never fenced");
+            }
+            delivered.fetch_add(got, Ordering::Relaxed);
+        }));
+    }
+    for h in handles {
+        h.join().expect("bench thread panicked");
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let total = delivered.load(Ordering::Relaxed);
+    assert_eq!(total, total_published * consumers as u64, "every group drains everything");
+    total as f64 / elapsed
+}
+
+fn main() {
+    let smoke = std::env::var("RL_BENCH_SMOKE").is_ok();
+    let per_producer = if smoke { 4_000 } else { 120_000 };
+    let sweep: &[(usize, usize)] =
+        if smoke { &[(1, 1), (2, 2), (4, 4)] } else { &[(1, 1), (2, 2), (4, 4), (8, 8)] };
+
+    println!("== broker contention sweep (topic: {PARTITIONS} partitions, batch={BATCH}) ==\n");
+    println!(
+        "{:>10} {:>10} {:>12} {:>15} {:>10}",
+        "producers", "consumers", "published", "delivered/s", "vs 1x1"
+    );
+    let mut base = 0.0f64;
+    let mut four_by_four = 0.0f64;
+    for &(p, c) in sweep {
+        // Warm-up pass at a fraction of the work, then the measured pass.
+        run_cell(p, c, per_producer / 10 + 1);
+        let rate = run_cell(p, c, per_producer);
+        if (p, c) == (1, 1) {
+            base = rate;
+        }
+        if (p, c) == (4, 4) {
+            four_by_four = rate;
+        }
+        println!(
+            "{:>10} {:>10} {:>12} {:>15.0} {:>9.2}x",
+            p,
+            c,
+            p * per_producer,
+            rate,
+            rate / base
+        );
+    }
+    println!(
+        "\n4x4 scaling vs single pair: {:.2}x (target ≥ 2.00x on ≥4 cores; \
+         {} cores here)",
+        four_by_four / base,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    println!("\nbroker_contention done");
+}

@@ -1,16 +1,29 @@
 //! The broker: topics + consumer-group coordinator + consumer handles.
 //!
-//! Two structural choices keep the hot path fast under many concurrent
+//! Three structural choices keep the hot path fast under many concurrent
 //! producers/consumers (the elastic swings of §4):
 //!
 //! - the topic registry is **sharded**: topic names hash to one of
 //!   [`TOPIC_SHARDS`] independent `RwLock<HashMap>` shards, so topic
 //!   lookups from different pipelines never contend on one global lock;
+//! - the **data plane and the coordinator are locked separately**:
+//!   partition logs are lock-free to read ([`PartitionLog`]), and each
+//!   consumer group has its *own* coordinator mutex — `poll`/`poll_batch`
+//!   snapshot assignment + positions under the group lock, read the logs
+//!   with **no lock held**, then re-acquire (generation-checked) to
+//!   advance, so consumers of different groups on one topic never
+//!   serialize on each other and a slow partition read blocks nobody;
 //! - every data-plane operation has a **batch-first** variant
 //!   ([`Topic::publish_batch`], [`Consumer::poll_batch`],
-//!   [`Consumer::commit_batch`]) that pays each lock/commit cost once per
+//!   [`Consumer::commit_batch`]) that pays each coordination cost once per
 //!   batch instead of once per message — the `n`-message consume cycle of
 //!   Eq. 1 (`T = n·t_c + i·t_p`) made explicit in the API.
+//!
+//! Lag probes ([`Broker::group_lag`], [`Broker::total_lag`]) are polled
+//! every controller tick and every drain-watermark check, so they bypass
+//! the coordinator entirely: each topic counts messages `published` and
+//! each group mirrors its `committed` total into an atomic, making a lag
+//! probe O(groups) atomic loads.
 
 use super::group::{GroupState, MemberId};
 use super::message::{Message, OffsetMessage};
@@ -19,13 +32,39 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+/// Coordination state of one consumer group, individually locked. The
+/// committed-offset total is mirrored outside the mutex so lag probes are
+/// atomic loads, never coordinator acquisitions.
+struct GroupHandle {
+    state: Mutex<GroupState>,
+    /// Sum of committed offsets across partitions (monotonic — commits
+    /// never regress). `published - committed_total` is the group's lag.
+    committed_total: AtomicU64,
+}
+
+impl GroupHandle {
+    fn new(partitions: usize) -> Self {
+        GroupHandle {
+            state: Mutex::new(GroupState::new(partitions)),
+            committed_total: AtomicU64::new(0),
+        }
+    }
+}
+
 /// One topic: partition logs plus per-group coordination state.
 pub struct Topic {
     pub name: String,
     partitions: Vec<PartitionLog>,
-    groups: Mutex<HashMap<String, GroupState>>,
+    /// group name → its coordinator. The registry lock covers only
+    /// lookup/insert; all coordination runs under the per-group mutex, so
+    /// groups on the same topic never contend with each other.
+    groups: RwLock<HashMap<String, Arc<GroupHandle>>>,
     /// Round-robin cursor for keyless produces.
     rr: AtomicUsize,
+    /// Messages ever published to this topic (all partitions). Paired
+    /// with each group's `committed_total` this makes lag a subtraction
+    /// of two atomic loads.
+    published: AtomicU64,
 }
 
 impl Topic {
@@ -34,8 +73,9 @@ impl Topic {
         Topic {
             name: name.to_string(),
             partitions: (0..partitions).map(|_| PartitionLog::new()).collect(),
-            groups: Mutex::new(HashMap::new()),
+            groups: RwLock::new(HashMap::new()),
             rr: AtomicUsize::new(0),
+            published: AtomicU64::new(0),
         }
     }
 
@@ -54,9 +94,28 @@ impl Topic {
 
     /// Names of consumer groups coordinated on this topic (sorted).
     pub fn group_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.groups.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = self.groups.read().unwrap().keys().cloned().collect();
         names.sort();
         names
+    }
+
+    /// Existing coordinator for `group`, if any.
+    fn group(&self, group: &str) -> Option<Arc<GroupHandle>> {
+        self.groups.read().unwrap().get(group).cloned()
+    }
+
+    /// Coordinator for `group`, created on first use. Registry write lock
+    /// is taken only on the miss path (group creation is rare; joins to
+    /// an existing group stay on the read lock).
+    fn group_or_create(&self, group: &str) -> Arc<GroupHandle> {
+        if let Some(h) = self.group(group) {
+            return h;
+        }
+        let mut groups = self.groups.write().unwrap();
+        groups
+            .entry(group.to_string())
+            .or_insert_with(|| Arc::new(GroupHandle::new(self.partition_count())))
+            .clone()
     }
 
     /// Partition a message lands in: key hash when keyed, else the next
@@ -71,27 +130,46 @@ impl Topic {
     /// Publish, choosing the partition from the key hash (or round-robin).
     pub fn publish(&self, msg: Message) -> (usize, u64) {
         let p = self.pick_partition(msg.key);
+        // Count before the append publishes the message: a racing lag
+        // probe may transiently over-report (safe — it re-polls), but can
+        // never read "drained" while an appended message is unconsumed.
+        self.published.fetch_add(1, Ordering::Relaxed);
         let off = self.partitions[p].append(msg);
         (p, off)
     }
 
-    /// Publish a batch, paying each partition's append lock once.
+    /// Publish a batch, paying each partition's append cost once.
     ///
     /// Semantics match a sequence of [`Topic::publish`] calls exactly:
     /// keyed messages go to their key's partition, keyless messages
     /// round-robin, and *input order is preserved within every partition*
     /// (so per-key ordering holds across batch boundaries). Returns the
     /// `(partition, offset)` of every message, in input order.
+    ///
+    /// Batches that touch a single partition (1-partition topics, hot
+    /// keyed batches) skip bucketing entirely and append the input vector
+    /// as-is; the general path sizes each partition's bucket exactly, so
+    /// untouched partitions never allocate.
     pub fn publish_batch(&self, msgs: Vec<Message>) -> Vec<(usize, u64)> {
         let n = self.partitions.len();
-        if msgs.is_empty() {
+        let len = msgs.len();
+        if len == 0 {
             return Vec::new();
         }
+        // Count the whole batch before any append publishes a message
+        // (see `publish`: lag may transiently over-report, never read
+        // "drained" while appended messages are unconsumed).
+        self.published.fetch_add(len as u64, Ordering::Relaxed);
+        // Fast path: a 1-partition topic is one dense append, no routing.
+        if n == 1 {
+            let base = self.partitions[0].append_batch(msgs);
+            return (0..len as u64).map(|i| (0, base + i)).collect();
+        }
         // Reserve one contiguous run of round-robin slots for the batch's
-        // keyless messages, then bucket per partition in input order.
+        // keyless messages, then route each message in input order.
         let keyless = msgs.iter().filter(|m| m.key.is_none()).count();
         let mut rr = if keyless > 0 { self.rr.fetch_add(keyless, Ordering::Relaxed) } else { 0 };
-        let mut which = Vec::with_capacity(msgs.len());
+        let mut which = Vec::with_capacity(len);
         for m in &msgs {
             let p = match m.key {
                 Some(k) => (hash64(k) % n as u64) as usize,
@@ -103,11 +181,24 @@ impl Topic {
             };
             which.push(p);
         }
-        let mut buckets: Vec<Vec<Message>> = (0..n).map(|_| Vec::new()).collect();
+        // Fast path: every message landed on one partition (same-key hot
+        // batches) — append the input vector directly, no buckets.
+        let first = which[0];
+        if which.iter().all(|&p| p == first) {
+            let base = self.partitions[first].append_batch(msgs);
+            return (0..len as u64).map(|i| (first, base + i)).collect();
+        }
+        // General path: bucket per partition in input order. Exact-size
+        // buckets — only touched partitions allocate, and never regrow.
+        let mut counts = vec![0usize; n];
+        for &p in &which {
+            counts[p] += 1;
+        }
+        let mut buckets: Vec<Vec<Message>> = counts.into_iter().map(Vec::with_capacity).collect();
         for (m, &p) in msgs.into_iter().zip(which.iter()) {
             buckets[p].push(m);
         }
-        // One append (one write lock) per touched partition.
+        // One append (one tail publish) per touched partition.
         let mut next = vec![0u64; n];
         for (p, bucket) in buckets.into_iter().enumerate() {
             if !bucket.is_empty() {
@@ -127,6 +218,41 @@ impl Topic {
     /// Read a raw window from one partition (offset-addressed, group-free).
     pub fn read(&self, partition: usize, from: u64, max: usize) -> Vec<(u64, Message)> {
         self.partitions[partition].read(from, max)
+    }
+
+    /// Lag of one group: published minus committed, two atomic loads. A
+    /// group that was never created lags by everything published.
+    ///
+    /// Load order matters: `committed_total` is read *first* (acquire,
+    /// pairing with the release fetch_add on the commit paths). A commit
+    /// can only cover messages whose publish was counted first, so a
+    /// `published` value loaded afterwards includes every publish behind
+    /// the observed commits — lag may transiently over-report while a
+    /// probe races producers, but can never read 0 with an appended
+    /// message unconsumed.
+    fn group_lag(&self, group: &str) -> u64 {
+        match self.group(group) {
+            None => self.published.load(Ordering::Relaxed),
+            Some(h) => {
+                let committed = h.committed_total.load(Ordering::Acquire);
+                self.published.load(Ordering::Relaxed).saturating_sub(committed)
+            }
+        }
+    }
+
+    /// Sum of every group's lag on this topic — O(groups) atomic loads
+    /// under one registry read lock. A topic with no groups contributes 0
+    /// (nobody is behind). Same load order as [`Topic::group_lag`]:
+    /// committed before published, per group.
+    fn lag_sum(&self) -> u64 {
+        let groups = self.groups.read().unwrap();
+        groups
+            .values()
+            .map(|h| {
+                let committed = h.committed_total.load(Ordering::Acquire);
+                self.published.load(Ordering::Relaxed).saturating_sub(committed)
+            })
+            .sum()
     }
 }
 
@@ -210,65 +336,66 @@ impl Broker {
     }
 
     /// Join `group` on `topic`, returning a consumer handle. The handle
-    /// leaves the group on [`Consumer::close`] or drop (crash semantics:
-    /// dropping without commit rewinds the group to the committed offsets).
+    /// caches the group's coordinator `Arc`, so its whole data plane —
+    /// poll, commit, leave — never touches the topic's group registry
+    /// again. It leaves the group on [`Consumer::close`] or drop (crash
+    /// semantics: dropping without commit rewinds the group to the
+    /// committed offsets).
     pub fn subscribe(self: &Arc<Self>, topic: &str, group: &str) -> Consumer {
         let t = self.expect_topic(topic);
         let member = self.next_member.fetch_add(1, Ordering::Relaxed);
-        {
-            let mut groups = t.groups.lock().unwrap();
-            let g = groups
-                .entry(group.to_string())
-                .or_insert_with(|| GroupState::new(t.partition_count()));
-            g.join(member);
+        let handle = t.group_or_create(group);
+        handle.state.lock().unwrap().join(member);
+        Consumer {
+            topic: t,
+            group: handle,
+            member,
+            open: true,
+            cursor: AtomicUsize::new(0),
         }
-        Consumer { topic: t, group: group.to_string(), member, open: true }
     }
 
     /// Number of members currently in `group` on `topic`.
     pub fn group_members(&self, topic: &str, group: &str) -> usize {
         let t = self.expect_topic(topic);
-        let groups = t.groups.lock().unwrap();
-        groups.get(group).map(|g| g.member_count()).unwrap_or(0)
+        t.group(group).map(|h| h.state.lock().unwrap().member_count()).unwrap_or(0)
     }
 
     /// Committed offset for `(topic, group, partition)`.
     pub fn committed(&self, topic: &str, group: &str, partition: usize) -> u64 {
         let t = self.expect_topic(topic);
-        let groups = t.groups.lock().unwrap();
-        groups.get(group).map(|g| g.committed(partition)).unwrap_or(0)
+        t.group(group).map(|h| h.state.lock().unwrap().committed(partition)).unwrap_or(0)
     }
 
     /// Sum of unconsumed (past committed) messages for a group — the lag
-    /// the elastic-worker service watches.
+    /// the elastic-worker service watches every tick. Two atomic loads;
+    /// no coordinator lock, so even a poll-heavy group can be probed at
+    /// any frequency without slowing its consumers.
     pub fn group_lag(&self, topic: &str, group: &str) -> u64 {
-        let t = self.expect_topic(topic);
-        let ends = t.end_offsets();
-        let groups = t.groups.lock().unwrap();
-        match groups.get(group) {
-            None => ends.iter().sum(),
-            Some(g) => ends
-                .iter()
-                .enumerate()
-                .map(|(p, &e)| e.saturating_sub(g.committed(p)))
-                .sum(),
-        }
+        self.expect_topic(topic).group_lag(group)
     }
 
     /// Sum of [`Broker::group_lag`] over every (topic, group) pair — zero
     /// means every group has consumed and committed everything published.
-    /// This is the drain watermark the experiment runner gates on.
+    /// This is the drain watermark the experiment runner gates on: one
+    /// registry read-lock sweep per shard, O(groups) atomic loads per
+    /// topic, no per-topic name re-resolution and no coordinator locks.
     pub fn total_lag(&self) -> u64 {
-        self.topic_names()
+        self.shards
             .iter()
-            .map(|t| {
-                self.topic(t)
-                    .map(|topic| {
-                        topic.group_names().iter().map(|g| self.group_lag(t, g)).sum::<u64>()
-                    })
-                    .unwrap_or(0)
-            })
+            .map(|s| s.read().unwrap().values().map(|t| t.lag_sum()).sum::<u64>())
             .sum()
+    }
+
+    /// Run [`GroupState::check_invariants`] for `(topic, group)`. Test
+    /// hook for the concurrent-churn property suite; a group that does
+    /// not exist yet trivially holds.
+    pub fn check_group_invariants(&self, topic: &str, group: &str) -> Result<(), String> {
+        let t = self.expect_topic(topic);
+        match t.group(group) {
+            None => Ok(()),
+            Some(h) => h.state.lock().unwrap().check_invariants(),
+        }
     }
 }
 
@@ -303,11 +430,25 @@ impl PolledBatch {
 /// and advance the group's in-memory positions; `commit`/`commit_batch`
 /// durably record progress so a restarted member resumes there. Dropping
 /// without closing mimics a crash.
+///
+/// Both poll paths follow the snapshot / read / advance protocol: the
+/// group lock is held only to copy assignment + positions and (again,
+/// generation-checked) to advance them afterwards — **the partition-log
+/// reads in between run with no lock held**, so members of one group, and
+/// entire other groups, proceed in parallel with them. A rebalance that
+/// lands between snapshot and advance fences the advance (positions
+/// re-seeded from committed offsets win), and the already-returned batch
+/// is fenced at commit time by its stale generation — exactly the
+/// at-least-once redelivery the single-lock implementation had.
 pub struct Consumer {
     topic: Arc<Topic>,
-    group: String,
+    group: Arc<GroupHandle>,
     member: MemberId,
     open: bool,
+    /// Rotates which owned partition each poll visits first, so a small
+    /// `max` drains all partitions fairly instead of starving the
+    /// highest-numbered ones behind partition 0.
+    cursor: AtomicUsize,
 }
 
 impl Consumer {
@@ -321,80 +462,101 @@ impl Consumer {
 
     /// Partitions this member currently owns.
     pub fn assignment(&self) -> Vec<usize> {
-        let groups = self.topic.groups.lock().unwrap();
-        groups.get(&self.group).map(|g| g.assigned(self.member).to_vec()).unwrap_or_default()
+        self.group.state.lock().unwrap().assigned(self.member).to_vec()
     }
 
-    /// Poll up to `max` messages across owned partitions (round-robin over
-    /// partitions, batch per partition). Non-blocking: may return empty.
-    /// This is the plain per-message-commit path; it skips
-    /// [`Consumer::poll_batch`]'s watermark/generation bookkeeping so
-    /// per-message and batched consumption stay separately measurable.
-    pub fn poll(&self, max: usize) -> Vec<OffsetMessage> {
-        let mut out = Vec::new();
-        let mut groups = self.topic.groups.lock().unwrap();
-        let g = match groups.get_mut(&self.group) {
-            Some(g) => g,
-            None => return out,
-        };
+    /// Copy generation + assignment + positions under the group lock —
+    /// everything a poll needs before it lets go of the coordinator.
+    fn snapshot(&self) -> (u64, Vec<usize>, Vec<u64>) {
+        let g = self.group.state.lock().unwrap();
         let parts = g.assigned(self.member).to_vec();
-        for p in parts {
-            if out.len() >= max {
+        let positions = parts.iter().map(|&p| g.position(p)).collect();
+        (g.generation(), parts, positions)
+    }
+
+    /// Re-acquire the coordinator and advance positions, unless the group
+    /// rebalanced since `generation` was snapshotted (the re-seeded
+    /// positions then stand, and the caller's batch commit will be
+    /// fenced).
+    fn advance_if_current(&self, generation: u64, advances: &[(usize, u64)]) {
+        if advances.is_empty() {
+            return;
+        }
+        let mut g = self.group.state.lock().unwrap();
+        if g.generation() == generation {
+            for &(p, next) in advances {
+                g.advance(p, next);
+            }
+        }
+    }
+
+    /// The shared snapshot → lock-free read → fenced advance cycle behind
+    /// both poll flavors. Returns the polled batch with its watermarks
+    /// and generation; `poll` discards the bookkeeping, `poll_batch`
+    /// returns it for fenced commits.
+    fn poll_inner(&self, max: usize) -> PolledBatch {
+        let mut messages = Vec::new();
+        let mut next_offsets: Vec<(usize, u64)> = Vec::new();
+        let (generation, parts, positions) = self.snapshot();
+        if parts.is_empty() || max == 0 {
+            return PolledBatch { messages, next_offsets, generation };
+        }
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed) % parts.len();
+        for k in 0..parts.len() {
+            if messages.len() >= max {
                 break;
             }
-            let from = g.position(p);
-            let batch = self.topic.partitions[p].read(from, max - out.len());
+            let i = (start + k) % parts.len();
+            let (p, from) = (parts[i], positions[i]);
+            let batch = self.topic.partitions[p].read(from, max - messages.len());
             if let Some((last, _)) = batch.last() {
-                g.advance(p, last + 1);
+                next_offsets.push((p, last + 1));
             }
-            out.extend(batch.into_iter().map(|(offset, message)| OffsetMessage {
+            messages.extend(batch.into_iter().map(|(offset, message)| OffsetMessage {
                 partition: p,
                 offset,
                 message,
             }));
         }
-        out
+        self.advance_if_current(generation, &next_offsets);
+        PolledBatch { messages, next_offsets, generation }
+    }
+
+    /// Poll up to `max` messages across owned partitions (rotating the
+    /// starting partition per poll, batch per partition). Non-blocking:
+    /// may return empty. Shares [`Consumer::poll_batch`]'s snapshot →
+    /// read → advance cycle and simply discards the watermark/generation
+    /// bookkeeping; the paths differ only in their *commit* side — pair
+    /// this one with per-message [`Consumer::commit`] calls, which is
+    /// what `perf_hotpath` measures against the batched pair.
+    pub fn poll(&self, max: usize) -> Vec<OffsetMessage> {
+        self.poll_inner(max).messages
     }
 
     /// Poll up to `max` messages and return them together with the
     /// per-partition commit watermarks and the group generation — the
-    /// batch-first consume path. One coordinator lock covers position
-    /// reads and advances for every owned partition; pair with
-    /// [`Consumer::commit_batch`] to also pay the commit lock once per
-    /// batch. Within each partition, messages are in offset order.
+    /// batch-first consume path. The coordinator is held only for the
+    /// position snapshot and the final advance; every partition read runs
+    /// lock-free in between. Pair with [`Consumer::commit_batch`] to also
+    /// pay the commit lock once per batch. Within each partition,
+    /// messages are in offset order.
     pub fn poll_batch(&self, max: usize) -> PolledBatch {
-        let mut messages = Vec::new();
-        let mut next_offsets: Vec<(usize, u64)> = Vec::new();
-        let mut generation = 0;
-        let mut groups = self.topic.groups.lock().unwrap();
-        if let Some(g) = groups.get_mut(&self.group) {
-            generation = g.generation();
-            let parts = g.assigned(self.member).to_vec();
-            for p in parts {
-                if messages.len() >= max {
-                    break;
-                }
-                let from = g.position(p);
-                let batch = self.topic.partitions[p].read(from, max - messages.len());
-                if let Some((last, _)) = batch.last() {
-                    g.advance(p, last + 1);
-                    next_offsets.push((p, last + 1));
-                }
-                messages.extend(batch.into_iter().map(|(offset, message)| OffsetMessage {
-                    partition: p,
-                    offset,
-                    message,
-                }));
-            }
-        }
-        PolledBatch { messages, next_offsets, generation }
+        self.poll_inner(max)
     }
 
     /// Commit `next` (the next offset to read) for `partition`.
+    ///
+    /// `next` is clamped to the partition's current end: committing past
+    /// the log (possible only by seeding stale durable offsets into a
+    /// fresh broker) would otherwise inflate the group's committed total
+    /// and mask real lag on other partitions. Against a reset log, old
+    /// offsets are meaningless — clamping re-delivers from what actually
+    /// exists, which is the at-least-once answer.
     pub fn commit(&self, partition: usize, next: u64) {
-        let mut groups = self.topic.groups.lock().unwrap();
-        if let Some(g) = groups.get_mut(&self.group) {
-            g.commit(partition, next);
+        let next = next.min(self.topic.partitions[partition].end_offset());
+        let delta = self.group.state.lock().unwrap().commit(partition, next);
+        if delta > 0 {
+            self.group.committed_total.fetch_add(delta, Ordering::Release);
         }
     }
 
@@ -409,26 +571,34 @@ impl Consumer {
         if batch.next_offsets.is_empty() {
             return true;
         }
-        let mut groups = self.topic.groups.lock().unwrap();
-        match groups.get_mut(&self.group) {
-            Some(g) if g.generation() == batch.generation => {
-                for &(p, next) in &batch.next_offsets {
-                    g.commit(p, next);
-                }
-                true
+        let mut delta = 0;
+        {
+            let mut g = self.group.state.lock().unwrap();
+            if g.generation() != batch.generation {
+                return false;
             }
-            _ => false,
+            for &(p, next) in &batch.next_offsets {
+                delta += g.commit(p, next);
+            }
         }
+        if delta > 0 {
+            self.group.committed_total.fetch_add(delta, Ordering::Release);
+        }
+        true
     }
 
     /// Commit everything consumed so far (positions → committed).
     pub fn commit_all(&self) {
-        let mut groups = self.topic.groups.lock().unwrap();
-        if let Some(g) = groups.get_mut(&self.group) {
+        let mut delta = 0;
+        {
+            let mut g = self.group.state.lock().unwrap();
             for p in g.assigned(self.member).to_vec() {
                 let pos = g.position(p);
-                g.commit(p, pos);
+                delta += g.commit(p, pos);
             }
+        }
+        if delta > 0 {
+            self.group.committed_total.fetch_add(delta, Ordering::Release);
         }
     }
 
@@ -440,10 +610,7 @@ impl Consumer {
     fn leave(&mut self) {
         if self.open {
             self.open = false;
-            let mut groups = self.topic.groups.lock().unwrap();
-            if let Some(g) = groups.get_mut(&self.group) {
-                g.leave(self.member);
-            }
+            self.group.state.lock().unwrap().leave(self.member);
         }
     }
 }
@@ -544,6 +711,31 @@ mod tests {
     }
 
     #[test]
+    fn publish_batch_single_partition_fast_paths() {
+        // 1-partition topic: whole batch appends densely, in order.
+        let b = broker_with_topic(1);
+        let t = b.topic("t").unwrap();
+        let placed = t.publish_batch((0..5u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        assert_eq!(placed, (0..5).map(|i| (0, i)).collect::<Vec<_>>());
+        assert_eq!(b.group_lag("t", "nobody"), 5, "fast path still counts published");
+
+        // Multi-partition topic, single-key batch: one partition, dense
+        // offsets, identical placement to per-message publishes.
+        let b = broker_with_topic(4);
+        let t = b.topic("t").unwrap();
+        let (p_single, _) = t.publish(Message::new(Some(9), vec![], 0));
+        let placed =
+            t.publish_batch((0..6u8).map(|i| Message::new(Some(9), vec![i], 0)).collect());
+        for (i, &(p, off)) in placed.iter().enumerate() {
+            assert_eq!(p, p_single, "same key stays on its partition");
+            assert_eq!(off, 1 + i as u64, "dense continuation after the single publish");
+        }
+        let replay: Vec<u8> =
+            t.read(p_single, 1, 10).into_iter().map(|(_, m)| m.payload[0]).collect();
+        assert_eq!(replay, (0..6u8).collect::<Vec<_>>(), "input order preserved");
+    }
+
+    #[test]
     fn sharded_registry_finds_every_topic() {
         let b = Broker::new();
         // Enough names to land on many different shards.
@@ -572,6 +764,23 @@ mod tests {
             got += batch.len();
         }
         assert_eq!(got, 30);
+    }
+
+    #[test]
+    fn poll_rotates_start_partition() {
+        let b = broker_with_topic(3);
+        publish_n(&b, 30);
+        let c = b.subscribe("t", "g");
+        // With max=1 the old assignment-order walk would drain partition 0
+        // completely before ever visiting 1 and 2; rotation must touch all
+        // three within the first three polls.
+        let mut first_three = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            let got = c.poll(1);
+            assert_eq!(got.len(), 1);
+            first_three.insert(got[0].partition);
+        }
+        assert_eq!(first_three.len(), 3, "each poll starts at the next partition");
     }
 
     #[test]
@@ -686,6 +895,31 @@ mod tests {
         assert_eq!(b.group_lag("t", "g"), 10, "polled but uncommitted still lags");
         c.commit_all();
         assert_eq!(b.group_lag("t", "g"), 0);
+    }
+
+    #[test]
+    fn total_lag_sums_topics_and_groups() {
+        let b = Broker::new();
+        b.create_topic("a", 2);
+        b.create_topic("b", 1);
+        let ta = b.topic("a").unwrap();
+        let tb = b.topic("b").unwrap();
+        ta.publish_batch((0..6u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        tb.publish_batch((0..4u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        // No groups anywhere: nobody is behind.
+        assert_eq!(b.total_lag(), 0);
+        let ca = b.subscribe("a", "g1");
+        let ca2 = b.subscribe("a", "g2");
+        let cb = b.subscribe("b", "g1");
+        assert_eq!(b.total_lag(), 6 + 6 + 4, "each group lags independently");
+        let batch = ca.poll_batch(10);
+        assert!(ca.commit_batch(&batch));
+        assert_eq!(b.total_lag(), 6 + 4);
+        let batch = ca2.poll_batch(10);
+        assert!(ca2.commit_batch(&batch));
+        let batch = cb.poll_batch(10);
+        assert!(cb.commit_batch(&batch));
+        assert_eq!(b.total_lag(), 0);
     }
 
     #[test]

@@ -91,17 +91,28 @@ impl GroupState {
         self.positions[partition]
     }
 
-    /// Advance the read position (monotonic between rebalances).
+    /// Advance the read position. Positions are monotonic between
+    /// rebalances: a stale advance (at or below the current position, as
+    /// a racing poll of the same member can produce now that partition
+    /// reads happen outside the coordinator lock) is ignored — the racer
+    /// merely redelivers, which at-least-once allows.
     pub fn advance(&mut self, partition: usize, to: u64) {
-        debug_assert!(to >= self.positions[partition], "position must not regress");
-        self.positions[partition] = to;
+        if to > self.positions[partition] {
+            self.positions[partition] = to;
+        }
     }
 
     /// Commit `next` as the restart offset for `partition`. Commits are
     /// monotonic: a stale commit (lower than the current one) is ignored.
-    pub fn commit(&mut self, partition: usize, next: u64) {
-        if next > self.committed[partition] {
+    /// Returns how far the committed offset moved, so the broker can
+    /// mirror the total into its lock-free lag counter.
+    pub fn commit(&mut self, partition: usize, next: u64) -> u64 {
+        let cur = self.committed[partition];
+        if next > cur {
             self.committed[partition] = next;
+            next - cur
+        } else {
+            0
         }
     }
 

@@ -30,9 +30,9 @@ impl Producer {
     }
 
     /// Publish a batch of `(key, payload)` pairs in one shot — one clock
-    /// read and one partition-log lock per touched partition, instead of
-    /// one of each per message. Returns `(partition, offset)` per input,
-    /// in input order; per-key order is preserved (see
+    /// read and one partition-log tail publish per touched partition,
+    /// instead of one of each per message. Returns `(partition, offset)`
+    /// per input, in input order; per-key order is preserved (see
     /// [`Topic::publish_batch`]).
     pub fn send_batch(&self, batch: Vec<(Option<u64>, Vec<u8>)>) -> Vec<(usize, u64)> {
         let now = self.clock.now_millis();

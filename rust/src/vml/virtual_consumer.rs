@@ -215,10 +215,12 @@ impl VirtualConsumer {
             inner.consumer = Some(consumer);
         }
         if inner.batch.is_none() {
-            // Batch-first consume cycle: one poll_batch (one coordinator
-            // lock), one route_batch per retry round (one router lock),
-            // one commit_batch (one coordinator lock) — the per-message
-            // costs of Eq. 1's `n`-message cycle paid once per batch.
+            // Batch-first consume cycle: one poll_batch (coordinator
+            // snapshot + advance; the partition reads themselves are
+            // lock-free), one route_batch per retry round (one router
+            // lock), one commit_batch (one group-coordinator lock) — the
+            // per-message costs of Eq. 1's `n`-message cycle paid once
+            // per batch, and never serialized against other groups.
             let consumer = inner.consumer.as_ref().expect("consumer joined above");
             let mut batch = consumer.poll_batch(w.batch);
             if batch.is_empty() {
@@ -335,7 +337,9 @@ impl VirtualConsumerGroup {
         }
     }
 
-    /// Group lag on the underlying topic (elastic signal).
+    /// Group lag on the underlying topic (elastic signal). Two atomic
+    /// loads on the broker side, so the controller can poll it every
+    /// tick without contending with the consume path.
     pub fn lag(&self) -> u64 {
         self.wiring.broker.group_lag(&self.topic, &self.wiring.group)
     }

@@ -28,8 +28,9 @@ use std::sync::{Arc, Mutex, RwLock};
 
 /// Actor that owns one broker producer. The mailbox unit is a *batch* of
 /// messages: one dequeue publishes the whole batch through
-/// [`Producer::send_messages`], so the broker-side lock costs are paid per
-/// batch, not per message.
+/// [`Producer::send_messages`], so the broker-side routing and tail
+/// publish are paid per batch, not per message (appends never block
+/// readers — the partition log is lock-free to read).
 struct ProducerWorker {
     producer: Producer,
     metrics: Arc<PipelineMetrics>,

@@ -271,6 +271,126 @@ fn poll_batch_rebalance_redelivers_fenced_messages() {
     assert_eq!(broker.group_lag("t", "g"), 0);
 }
 
+/// Concurrent churn under the coordinator/data-plane lock split:
+/// producer threads keep publishing (lock-free segmented appends) while
+/// the group's membership churns and live members poll/commit. At every
+/// step the coordinator invariants must hold and no committed offset may
+/// pass its partition's end; afterwards the union of everything seen must
+/// be every published offset, gap-free (at-least-once replay covers
+/// whatever fenced or crashed members dropped).
+#[test]
+fn prop_concurrent_churn_never_loses_messages() {
+    check("concurrent-churn", 8, |g: &mut Gen| {
+        let partitions = g.usize(1, 5);
+        let broker = Broker::new();
+        broker.create_topic("t", partitions);
+        let per_producer = g.usize(100, 500);
+        let producers = 2;
+        let handles: Vec<_> = (0..producers)
+            .map(|t| {
+                let b = std::sync::Arc::clone(&broker);
+                std::thread::spawn(move || {
+                    let topic = b.topic("t").unwrap();
+                    let mut sent = 0;
+                    while sent < per_producer {
+                        let m = 16.min(per_producer - sent);
+                        topic.publish_batch(
+                            (0..m)
+                                .map(|i| {
+                                    // Mix keyed and keyless deterministically.
+                                    let key = if i % 3 == 0 {
+                                        None
+                                    } else {
+                                        Some(((t * 31 + sent + i) % 7) as u64)
+                                    };
+                                    Message::new(key, vec![(i % 256) as u8], 0)
+                                })
+                                .collect(),
+                        );
+                        sent += m;
+                    }
+                })
+            })
+            .collect();
+        // Churn members while the producers run; every live member polls
+        // and commits each step (commits fenced by churn are expected and
+        // covered by the final replay).
+        let mut consumers: Vec<Consumer> = vec![broker.subscribe("t", "g")];
+        let mut seen: Vec<Vec<u64>> = vec![Vec::new(); partitions];
+        for _ in 0..g.usize(10, 40) {
+            if g.bool() || consumers.is_empty() {
+                consumers.push(broker.subscribe("t", "g"));
+            } else {
+                let i = g.usize(0, consumers.len());
+                consumers.swap_remove(i).close();
+            }
+            for c in &consumers {
+                let batch = c.poll_batch(g.usize(1, 33));
+                for om in &batch.messages {
+                    seen[om.partition].push(om.offset);
+                }
+                c.commit_batch(&batch);
+            }
+            broker
+                .check_group_invariants("t", "g")
+                .map_err(|e| format!("group invariants violated mid-churn: {e}"))?;
+            let topic = broker.topic("t").unwrap();
+            for (p, &end) in topic.end_offsets().iter().enumerate() {
+                let committed = broker.committed("t", "g", p);
+                prop_assert!(
+                    committed <= end,
+                    "partition {p}: committed {committed} past end {end}"
+                );
+            }
+        }
+        for h in handles {
+            h.join().map_err(|_| "producer thread panicked".to_string())?;
+        }
+        // Settle to one member and drain; at-least-once means the union
+        // of everything seen is exactly every published offset.
+        while consumers.len() > 1 {
+            consumers.pop().expect("len checked").close();
+        }
+        if consumers.is_empty() {
+            consumers.push(broker.subscribe("t", "g"));
+        }
+        let drain = &consumers[0];
+        let mut rounds = 0;
+        while broker.group_lag("t", "g") > 0 {
+            rounds += 1;
+            if rounds > 10_000 {
+                return Err("did not drain in 10k rounds".into());
+            }
+            let batch = drain.poll_batch(64);
+            for om in &batch.messages {
+                seen[om.partition].push(om.offset);
+            }
+            drain.commit_batch(&batch);
+        }
+        let topic = broker.topic("t").unwrap();
+        let mut total = 0u64;
+        for (p, s) in seen.iter().enumerate() {
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            let end = topic.end_offsets()[p];
+            total += end;
+            let expect: Vec<u64> = (0..end).collect();
+            prop_assert!(
+                d == expect,
+                "partition {p}: {} distinct offsets seen vs 0..{end} published",
+                d.len()
+            );
+        }
+        prop_assert!(
+            total == (producers * per_producer) as u64,
+            "published {total} != {} sent",
+            producers * per_producer
+        );
+        Ok(())
+    });
+}
+
 /// Keyed messages always land in the same partition (stable hashing).
 #[test]
 fn prop_keyed_routing_stable() {
