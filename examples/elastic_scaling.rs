@@ -21,12 +21,13 @@ use std::time::Duration;
 fn main() {
     let broker = Broker::new();
     broker.create_topic("load", 3);
+    let client: reactive_liquid::messaging::SharedBrokerClient = broker.clone();
     let clock = real_clock();
     let metrics = PipelineMetrics::new(clock.clone());
     let system = ActorSystem::new();
     let supervisor = Supervisor::new(clock.clone(), Duration::from_millis(100));
     let offsets = Arc::new(OffsetStore::in_memory());
-    let vt = VirtualTopic::new("load", &broker, &system, clock.clone(), metrics.clone(), offsets.clone(), (2, 1, 4));
+    let vt = VirtualTopic::new("load", &client, &system, clock.clone(), metrics.clone(), offsets.clone(), (2, 1, 4));
 
     // Each message takes ~2 ms to "process" — queues form fast.
     let job = Job::from_fn("slow", "load", None, |_env| {
@@ -42,7 +43,7 @@ fn main() {
         cooldown: Duration::from_millis(200),
     };
     let rj = ReactiveJob::start(
-        &system, &broker, job, &vt, None, &supervisor, elastic,
+        &system, &client, job, &vt, None, &supervisor, elastic,
         RouterPolicy::ShortestQueue, 16, 1, clock.clone(), metrics.clone(), offsets,
     );
     supervisor.start();

@@ -19,10 +19,14 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
-    // 1. Messaging layer: a broker with two 3-partition topics.
+    // 1. Messaging layer: a broker with two 3-partition topics. The
+    //    layers above hold it through the BrokerClient seam — swap in a
+    //    transport::RemoteBroker and this same pipeline runs against a
+    //    broker in another process.
     let broker = Broker::new();
     broker.create_topic("sentences", 3);
     broker.create_topic("lengths", 3);
+    let client: reactive_liquid::messaging::SharedBrokerClient = broker.clone();
 
     // 2. Platform services.
     let clock = real_clock();
@@ -34,7 +38,7 @@ fn main() {
 
     // 3. Virtual messaging layer: one virtual topic per topic.
     let mk_vt = |name: &str| {
-        VirtualTopic::new(name, &broker, &system, clock.clone(), metrics.clone(), offsets.clone(), (2, 1, 4))
+        VirtualTopic::new(name, &client, &system, clock.clone(), metrics.clone(), offsets.clone(), (2, 1, 4))
     };
     let vt_in = mk_vt("sentences");
     let vt_out = mk_vt("lengths");
@@ -48,7 +52,7 @@ fn main() {
     });
     let rj = ReactiveJob::start(
         &system,
-        &broker,
+        &client,
         job,
         &vt_in,
         Some(&vt_out),

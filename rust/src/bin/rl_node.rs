@@ -1,0 +1,232 @@
+//! `rl-node` — one Reactive Liquid node role on a real network.
+//!
+//! Roles:
+//!
+//! - `rl-node broker --listen 127.0.0.1:7411` — serve an in-process
+//!   broker (plus gossip membership) over TCP and run until killed;
+//! - `rl-node worker --broker ADDR --messages N [--topic T]
+//!   [--partitions P] [--batch B] [--node-id ID]` — connect a
+//!   [`RemoteBroker`], create the topic, publish `N` messages, consume
+//!   and commit them back, print `processed=N`, exit.
+//!
+//! Two terminals make a real two-process pipeline:
+//!
+//! ```sh
+//! rl-node broker --listen 127.0.0.1:7411
+//! rl-node worker --broker 127.0.0.1:7411 --messages 500
+//! ```
+//!
+//! The worker's wire layer rides broker restarts: connections redial,
+//! publishes retry (re-creating the topic if the restarted broker lost
+//! it), and consumers resubscribe. A restart *between* worker runs is
+//! fully transparent (`tests/transport_tcp_e2e.rs` proves it with real
+//! OS processes). A restart *mid-run* reconnects too, but the broker is
+//! in-memory — messages it held are gone, so a worker that already
+//! published them reports the shortfall and exits nonzero at its
+//! deadline rather than pretending they were processed (a durable log is
+//! future work).
+
+use reactive_liquid::cluster::membership::Membership;
+use reactive_liquid::config::cli::Args;
+use reactive_liquid::messaging::client::SharedBrokerClient;
+use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::transport::{
+    BrokerService, Gossiper, GossipService, NodeService, RemoteBroker, TcpTransport, Transport,
+};
+use reactive_liquid::util::clock::real_clock;
+use std::io::Write;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::from_env().unwrap_or_else(|e| {
+        eprintln!("argument error: {e}");
+        std::process::exit(2);
+    });
+    let role = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let code = match role.as_str() {
+        "broker" => cmd_broker(args),
+        "worker" => cmd_worker(args),
+        _ => {
+            print!(
+                "rl-node — run one Reactive Liquid node role\n\n\
+                 usage: rl-node <broker|worker> [options]\n\n\
+                 broker  --listen ADDR            serve the broker + membership over TCP\n\
+                 worker  --broker ADDR --messages N [--topic T] [--partitions P]\n\
+                 \x20       [--batch B] [--node-id ID]\n"
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_broker(mut args: Args) -> i32 {
+    let listen = args.opt_str("listen").unwrap_or_else(|| "127.0.0.1:7411".to_string());
+    if let Err(e) = args.finish() {
+        eprintln!("{e}");
+        return 2;
+    }
+    let broker = Broker::new();
+    let membership = Membership::new(real_clock(), 8.0);
+    let broker_service = BrokerService::new(broker);
+    let service =
+        NodeService::new(broker_service.clone(), GossipService::new(membership.clone()));
+    let tcp = TcpTransport::default();
+    let handle = match tcp.serve(&listen, service) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("bind {listen}: {e}");
+            return 1;
+        }
+    };
+    // The e2e harness waits for this line before starting workers.
+    println!("rl-node broker listening on {}", handle.addr());
+    let _ = std::io::stdout().flush();
+    loop {
+        std::thread::sleep(Duration::from_secs(5));
+        // Sessions whose client died without a Leave (node loss) release
+        // their group memberships here, so the group rebalances instead
+        // of stalling on a dead member's partitions forever.
+        let reaped = broker_service.reap_idle(Duration::from_secs(30));
+        if reaped > 0 {
+            eprintln!("reaped {reaped} idle consumer session(s)");
+        }
+        let suspects = membership.suspects();
+        if !suspects.is_empty() {
+            eprintln!("suspected members: {suspects:?}");
+        }
+    }
+}
+
+fn cmd_worker(mut args: Args) -> i32 {
+    let Some(addr) = args.opt_str("broker") else {
+        eprintln!("worker needs --broker ADDR");
+        return 2;
+    };
+    // Numeric options: a value that fails to parse is an operator error,
+    // not a silent fall-back to the default.
+    let (total, partitions, batch) = match (
+        args.opt_or::<u64>("messages", 200),
+        args.opt_or::<usize>("partitions", 4),
+        args.opt_or::<usize>("batch", 32),
+    ) {
+        (Ok(t), Ok(p), Ok(b)) => (t, p, b),
+        (Err(e), ..) | (_, Err(e), _) | (.., Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let topic = args.opt_str("topic").unwrap_or_else(|| "wire-demo".to_string());
+    let node_id = args.opt_str("node-id").unwrap_or_else(|| "worker".to_string());
+    if let Err(e) = args.finish() {
+        eprintln!("{e}");
+        return 2;
+    }
+
+    let tcp = TcpTransport::default();
+    let conn = match tcp.connect(&addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            return 1;
+        }
+    };
+    let remote = RemoteBroker::new(conn.clone());
+
+    // Membership: announce ourselves and heartbeat until we exit.
+    let gossiper = Gossiper::new(conn, &node_id);
+    let _ = gossiper.join(1);
+    let stop_beats = Arc::new(AtomicBool::new(false));
+    let beats = gossiper.start_heartbeats(Duration::from_millis(500), stop_beats.clone());
+
+    let code = run_pipeline(&remote, &topic, partitions, total, batch);
+
+    stop_beats.store(true, std::sync::atomic::Ordering::SeqCst);
+    let _ = beats.join();
+    code
+}
+
+/// Keep attempting `op` until it succeeds or `deadline` passes.
+fn patient(deadline: Instant, what: &str, mut op: impl FnMut() -> bool) -> bool {
+    loop {
+        if op() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            eprintln!("gave up on {what}");
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+}
+
+/// Publish `total` messages, then consume + commit them back. Every wire
+/// operation is retried against a deadline, so a broker restart mid-run
+/// stalls progress instead of failing the worker.
+fn run_pipeline(
+    remote: &Arc<RemoteBroker>,
+    topic: &str,
+    partitions: usize,
+    total: u64,
+    batch: usize,
+) -> i32 {
+    let deadline = Instant::now() + Duration::from_secs(60);
+
+    if !patient(deadline, "create-topic", || remote.try_create_topic(topic, partitions).is_ok()) {
+        return 1;
+    }
+
+    // Publish with at-least-once retries: a batch whose ack was lost may
+    // be retried and duplicated — the consume loop counts messages, which
+    // only ever overshoots, never undershoots. An UnknownTopic rejection
+    // means the broker restarted empty mid-run: re-create the topic and
+    // keep going (what that broker lost is reported at the end).
+    let mut published = 0u64;
+    while published < total {
+        let n = batch.min((total - published) as usize);
+        let msgs: Vec<Message> = (0..n)
+            .map(|i| Message::new(None, (published + i as u64).to_le_bytes().to_vec(), 0))
+            .collect();
+        let publish_once = || match remote.try_publish_batch(topic, msgs.clone()) {
+            Ok(_) => true,
+            Err(reactive_liquid::transport::TransportError::Rejected { .. }) => {
+                // Topic gone (restarted broker): recreate, then retry.
+                let _ = remote.try_create_topic(topic, partitions);
+                false
+            }
+            Err(_) => false,
+        };
+        if !patient(deadline, "publish", publish_once) {
+            return 1;
+        }
+        published += n as u64;
+    }
+
+    // Consume + commit until everything published has been seen. The
+    // client: SharedBrokerClient surface is exactly what the pipeline
+    // layers use.
+    let client: SharedBrokerClient = remote.clone();
+    let consumer = client.subscribe(topic, "workers");
+    let mut processed = 0u64;
+    let consume_deadline = Instant::now() + Duration::from_secs(60);
+    while processed < total && Instant::now() < consume_deadline {
+        let polled = consumer.poll_batch(batch);
+        if polled.is_empty() {
+            std::thread::sleep(Duration::from_millis(50));
+            continue;
+        }
+        processed += polled.len() as u64;
+        let _ = consumer.commit_batch(&polled);
+    }
+    consumer.close();
+    println!("processed={processed}");
+    let _ = std::io::stdout().flush();
+    if processed >= total {
+        0
+    } else {
+        eprintln!("only processed {processed}/{total} before the deadline");
+        1
+    }
+}

@@ -1,0 +1,194 @@
+//! Cluster membership fed by gossip heartbeats over the transport layer.
+//!
+//! Before the transport layer, the φ accrual detector was exercised with
+//! *synthetic* heartbeats (components calling it directly in-process).
+//! [`Membership`] is the real wiring: join/leave/heartbeat frames arrive
+//! over a [`Connection`] (decoded by
+//! [`GossipService`](crate::transport::gossip::GossipService)) and feed
+//! the **existing** [`PhiAccrualDetector`] — so node-loss detection in a
+//! multi-process deployment uses the same estimator, with the same
+//! tunables and the same tests, as the in-process supervision stack.
+//!
+//! Semantics (deliberately small — this is a seed-node registry, not full
+//! SWIM):
+//!
+//! - `join` registers a member (idempotent; a higher incarnation wins,
+//!   so a restarted node supersedes its former self) and counts as a
+//!   liveness signal;
+//! - `heartbeat` from an unknown member implies a join we missed
+//!   (gossip is fire-and-forget — frames may drop);
+//! - `leave` removes the member *and* forgets its detector state, so a
+//!   graceful departure never becomes a suspect;
+//! - `suspects` = registered members whose φ exceeds the threshold.
+//!
+//! [`Connection`]: crate::transport::Connection
+
+use crate::reactive::failure_detector::PhiAccrualDetector;
+use crate::util::clock::SharedClock;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Per-member bookkeeping.
+#[derive(Clone, Debug)]
+pub struct MemberInfo {
+    /// Highest incarnation observed (bumped by the member on restart).
+    pub incarnation: u64,
+    /// Heartbeats received from this member.
+    pub heartbeats: u64,
+}
+
+/// The membership registry: who is in the cluster, and who the φ detector
+/// currently suspects. All methods are callable from transport threads.
+pub struct Membership {
+    detector: PhiAccrualDetector,
+    threshold: f64,
+    members: Mutex<BTreeMap<String, MemberInfo>>,
+}
+
+impl Membership {
+    /// `threshold` is the φ suspicion cutoff (8.0 is the production
+    /// default in the Akka lineage this detector follows).
+    pub fn new(clock: SharedClock, threshold: f64) -> Arc<Self> {
+        Arc::new(Membership {
+            detector: PhiAccrualDetector::new(clock, 16, Duration::from_millis(50)),
+            threshold,
+            members: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Register (or refresh) a member. Counts as a liveness signal.
+    pub fn join(&self, node: &str, incarnation: u64) {
+        {
+            let mut m = self.members.lock().unwrap();
+            let e = m
+                .entry(node.to_string())
+                .or_insert(MemberInfo { incarnation, heartbeats: 0 });
+            if incarnation > e.incarnation {
+                e.incarnation = incarnation;
+            }
+        }
+        self.detector.heartbeat(node);
+    }
+
+    /// Graceful departure: remove the member and its detector history.
+    pub fn leave(&self, node: &str) {
+        self.members.lock().unwrap().remove(node);
+        self.detector.forget(node);
+    }
+
+    /// Record a heartbeat (auto-joins unknown members — a dropped join
+    /// frame must not make a live node invisible).
+    pub fn heartbeat(&self, node: &str) {
+        {
+            let mut m = self.members.lock().unwrap();
+            let e = m
+                .entry(node.to_string())
+                .or_insert(MemberInfo { incarnation: 0, heartbeats: 0 });
+            e.heartbeats += 1;
+        }
+        self.detector.heartbeat(node);
+    }
+
+    /// Registered member ids (sorted).
+    pub fn members(&self) -> Vec<String> {
+        self.members.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.lock().unwrap().len()
+    }
+
+    pub fn contains(&self, node: &str) -> bool {
+        self.members.lock().unwrap().contains_key(node)
+    }
+
+    /// Info snapshot for one member.
+    pub fn info(&self, node: &str) -> Option<MemberInfo> {
+        self.members.lock().unwrap().get(node).cloned()
+    }
+
+    /// Current suspicion level of one member.
+    pub fn phi(&self, node: &str) -> f64 {
+        self.detector.phi(node)
+    }
+
+    /// Is this member currently past the φ threshold?
+    pub fn is_suspected(&self, node: &str) -> bool {
+        self.detector.is_suspected(node, self.threshold)
+    }
+
+    /// Registered members currently past the φ threshold (sorted).
+    pub fn suspects(&self) -> Vec<String> {
+        let members = self.members.lock().unwrap();
+        self.detector
+            .suspects(self.threshold)
+            .into_iter()
+            .filter(|n| members.contains_key(n))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+
+    fn fixture() -> (Arc<ManualClock>, Arc<Membership>) {
+        let clock = Arc::new(ManualClock::new());
+        let m = Membership::new(clock.clone(), 8.0);
+        (clock, m)
+    }
+
+    #[test]
+    fn join_heartbeat_leave_lifecycle() {
+        let (clock, m) = fixture();
+        m.join("n1", 1);
+        m.join("n1", 1); // idempotent
+        assert_eq!(m.members(), vec!["n1".to_string()]);
+        for _ in 0..10 {
+            clock.advance(Duration::from_secs(1));
+            m.heartbeat("n1");
+        }
+        assert_eq!(m.info("n1").unwrap().heartbeats, 10);
+        assert!(!m.is_suspected("n1"));
+        m.leave("n1");
+        assert_eq!(m.member_count(), 0);
+        // Silence after leave never creates a suspect.
+        clock.advance(Duration::from_secs(60));
+        assert!(m.suspects().is_empty());
+    }
+
+    #[test]
+    fn silent_member_becomes_suspect_and_recovers() {
+        let (clock, m) = fixture();
+        m.join("w", 1);
+        for _ in 0..10 {
+            clock.advance(Duration::from_secs(1));
+            m.heartbeat("w");
+        }
+        clock.advance(Duration::from_secs(30));
+        assert_eq!(m.suspects(), vec!["w".to_string()]);
+        assert!(m.phi("w") > 8.0);
+        m.heartbeat("w"); // recovery clears suspicion
+        assert!(m.suspects().is_empty());
+    }
+
+    #[test]
+    fn heartbeat_from_unknown_auto_joins() {
+        let (_clock, m) = fixture();
+        m.heartbeat("stray");
+        assert!(m.contains("stray"));
+        assert_eq!(m.info("stray").unwrap().incarnation, 0);
+    }
+
+    #[test]
+    fn higher_incarnation_wins() {
+        let (_clock, m) = fixture();
+        m.join("n", 3);
+        m.join("n", 2); // stale rejoin
+        assert_eq!(m.info("n").unwrap().incarnation, 3);
+        m.join("n", 5); // restart
+        assert_eq!(m.info("n").unwrap().incarnation, 5);
+    }
+}

@@ -17,9 +17,11 @@
 //!   detection delay.
 
 pub mod failure;
+pub mod membership;
 pub mod node;
 pub mod placement;
 
 pub use failure::FailureInjector;
+pub use membership::Membership;
 pub use node::{Cluster, ComponentHandle, Node};
 pub use placement::Placement;

@@ -16,4 +16,4 @@ pub mod runner;
 pub mod tcmm_jobs;
 
 pub use result::ExperimentResult;
-pub use runner::{run_experiment, BurstPacer};
+pub use runner::{run_experiment, run_experiment_on, BurstPacer};

@@ -8,6 +8,7 @@ use crate::cluster::failure::FailureInjector;
 use crate::cluster::node::{Cluster, ComponentHandle};
 use crate::config::{Architecture, ExperimentConfig};
 use crate::log_info;
+use crate::messaging::client::SharedBrokerClient;
 use crate::messaging::{Broker, Producer};
 use crate::metrics::PipelineMetrics;
 use crate::processing::liquid::LiquidJob;
@@ -61,12 +62,24 @@ impl BurstPacer {
     }
 }
 
-/// Run one experiment to completion and collect the §4.3 metrics.
+/// Run one experiment to completion and collect the §4.3 metrics, against
+/// a fresh in-process broker.
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    run_experiment_on(cfg, Broker::new())
+}
+
+/// Run one experiment against any broker client — the in-process broker
+/// or a `transport::RemoteBroker` on the far side of a socket. The whole
+/// pipeline (ingest, both architectures, the drain watermark) goes
+/// through the [`BrokerClient`](crate::messaging::client::BrokerClient)
+/// seam, so this is how a multi-process run shares one broker node.
+///
+/// The broker is expected to be empty (topics are created here; reusing a
+/// broker whose topics hold messages replays them into the run).
+pub fn run_experiment_on(cfg: &ExperimentConfig, broker: SharedBrokerClient) -> ExperimentResult {
     cfg.validate().expect("invalid experiment config");
     let clock = real_clock();
     let metrics = PipelineMetrics::new(clock.clone());
-    let broker = Broker::new();
     let pipeline = tcmm_jobs::tcmm_pipeline(cfg);
     pipeline.validate().expect("pipeline invalid");
     pipeline.create_topics(&broker, cfg.partitions);
@@ -90,7 +103,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 let mut gen = TrajectoryGenerator::new(wl.taxis, wl.hotspots, seed);
                 let dataset: Vec<Vec<u8>> =
                     gen.generate(wl.points_per_taxi).iter().map(|p| p.encode()).collect();
-                let producer = Producer::new(&broker, TOPIC_TRAJ, clock.clone());
+                let producer = Producer::with_client(broker, TOPIC_TRAJ, clock.clone());
                 if wl.ingest_rate == 0 {
                     // One full pass, unpaced (drain-style runs and tests):
                     // publish in batches so the feed side also rides the

@@ -28,7 +28,14 @@
 //!   seeded discrete-event scheduler that drives the elastic controller,
 //!   failure detector, and failure injector on simulated time, plus a
 //!   scenario DSL and a 13-entry chaos matrix that replays the Fig. 8–11
-//!   settings in milliseconds with byte-identical traces per seed.
+//!   settings in milliseconds with byte-identical traces per seed;
+//! - a **cross-process transport layer** ([`transport`]): a versioned,
+//!   CRC-checked wire protocol for the broker API plus membership gossip,
+//!   served over real TCP (`rl-node` broker/worker binaries) or over an
+//!   in-memory simulated network with scriptable delay/drop/partition/
+//!   duplicate/corrupt faults; `transport::RemoteBroker` implements the
+//!   same [`messaging::client::BrokerClient`] surface the in-process
+//!   broker does, so every layer above runs unchanged across processes.
 //!
 //! # Execution model
 //!
@@ -86,5 +93,6 @@ pub mod runtime;
 pub mod sim;
 pub mod tcmm;
 pub mod trajectory;
+pub mod transport;
 pub mod util;
 pub mod vml;

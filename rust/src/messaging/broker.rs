@@ -302,7 +302,7 @@ impl Broker {
 
     /// Create a topic (idempotent; partition count must match an existing
     /// topic or the call panics — config error).
-    pub fn create_topic(self: &Arc<Self>, name: &str, partitions: usize) -> Arc<Topic> {
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Arc<Topic> {
         let mut t = self.shard(name).write().unwrap();
         let topic = t
             .entry(name.to_string())
@@ -341,7 +341,7 @@ impl Broker {
     /// again. It leaves the group on [`Consumer::close`] or drop (crash
     /// semantics: dropping without commit rewinds the group to the
     /// committed offsets).
-    pub fn subscribe(self: &Arc<Self>, topic: &str, group: &str) -> Consumer {
+    pub fn subscribe(&self, topic: &str, group: &str) -> Consumer {
         let t = self.expect_topic(topic);
         let member = self.next_member.fetch_add(1, Ordering::Relaxed);
         let handle = t.group_or_create(group);

@@ -1,0 +1,177 @@
+//! Broker client abstraction: one surface, local or remote.
+//!
+//! [`BrokerClient`] is the narrow waist between the layers above the
+//! messaging layer (vml, processing, the experiment runner) and a broker.
+//! The in-process [`Broker`] implements it directly, and
+//! [`RemoteBroker`](crate::transport::RemoteBroker) implements the same
+//! trait over a wire [`Connection`](crate::transport::Connection) — so a
+//! pipeline runs unchanged whether its broker lives in this process or
+//! behind a socket on another node.
+//!
+//! The trait is deliberately *batch-first and narrow*: only the calls the
+//! pipeline actually makes (create, publish a batch, subscribe, lag
+//! probes) cross it, which is also exactly the frame vocabulary of the
+//! wire protocol ([`transport::frame`](crate::transport::frame)). Local
+//! extras (raw partition reads, invariant hooks, member counts) stay on
+//! the concrete [`Broker`].
+
+use super::broker::{Broker, Consumer, PolledBatch};
+use super::message::Message;
+use std::sync::Arc;
+
+/// A consumer-group membership, local or remote.
+///
+/// Mirrors the data-plane surface of [`Consumer`]: batch polling with
+/// generation-fenced batch commits (see the [`messaging`](crate::messaging)
+/// module docs for the at-least-once contract). Dropping the handle
+/// without [`ConsumerClient::close`] mimics a crash: the group rebalances
+/// and uncommitted offsets are redelivered.
+pub trait ConsumerClient: Send {
+    /// Partitions this member currently owns.
+    fn assignment(&self) -> Vec<usize>;
+
+    /// Poll up to `max` messages with commit bookkeeping. Non-blocking;
+    /// may return an empty batch (remote implementations also return an
+    /// empty batch on a transport hiccup — the caller simply re-polls,
+    /// which is the at-least-once answer).
+    fn poll_batch(&self, max: usize) -> PolledBatch;
+
+    /// Commit `next` (the next offset to read) for `partition`.
+    fn commit(&self, partition: usize, next: u64);
+
+    /// Commit every watermark of `batch` under one coordinator lock;
+    /// `false` means the commit was fenced (rebalance since poll) or lost
+    /// in transit — either way nothing was committed and the batch's
+    /// offsets will be redelivered.
+    fn commit_batch(&self, batch: &PolledBatch) -> bool;
+
+    /// Leave the group gracefully.
+    fn close(self: Box<Self>);
+}
+
+/// A broker endpoint, local or remote.
+pub trait BrokerClient: Send + Sync {
+    /// Create a topic (idempotent for an existing topic with the same
+    /// partition count).
+    fn create_topic(&self, topic: &str, partitions: usize);
+
+    /// Partition count of `topic`; `None` means exactly "the topic does
+    /// not exist". Remote implementations crash on an unreachable broker
+    /// rather than conflate it with nonexistence (callers size consumer
+    /// groups off this answer).
+    fn partition_count(&self, topic: &str) -> Option<usize>;
+
+    /// Publish a batch; returns `(partition, offset)` per message, in
+    /// input order. Keyed messages land on their key's partition and
+    /// input order is preserved within every partition (see
+    /// [`Topic::publish_batch`](crate::messaging::broker::Topic::publish_batch)).
+    fn publish_batch(&self, topic: &str, msgs: Vec<Message>) -> Vec<(usize, u64)>;
+
+    /// Join `group` on `topic`, returning a membership handle.
+    fn subscribe(&self, topic: &str, group: &str) -> Box<dyn ConsumerClient>;
+
+    /// Published-minus-committed lag of one group (elastic signal).
+    fn group_lag(&self, topic: &str, group: &str) -> u64;
+
+    /// Sum of every group's lag on every topic (drain watermark). Remote
+    /// clients return `u64::MAX` when the probe cannot reach the broker,
+    /// so a transport failure can never read as "drained".
+    fn total_lag(&self) -> u64;
+}
+
+/// The shared handle the pipeline layers hold.
+pub type SharedBrokerClient = Arc<dyn BrokerClient>;
+
+impl ConsumerClient for Consumer {
+    fn assignment(&self) -> Vec<usize> {
+        Consumer::assignment(self)
+    }
+
+    fn poll_batch(&self, max: usize) -> PolledBatch {
+        Consumer::poll_batch(self, max)
+    }
+
+    fn commit(&self, partition: usize, next: u64) {
+        Consumer::commit(self, partition, next)
+    }
+
+    fn commit_batch(&self, batch: &PolledBatch) -> bool {
+        Consumer::commit_batch(self, batch)
+    }
+
+    fn close(self: Box<Self>) {
+        Consumer::close(*self)
+    }
+}
+
+impl BrokerClient for Broker {
+    fn create_topic(&self, topic: &str, partitions: usize) {
+        let _ = Broker::create_topic(self, topic, partitions);
+    }
+
+    fn partition_count(&self, topic: &str) -> Option<usize> {
+        self.topic(topic).map(|t| t.partition_count())
+    }
+
+    fn publish_batch(&self, topic: &str, msgs: Vec<Message>) -> Vec<(usize, u64)> {
+        self.topic(topic)
+            .unwrap_or_else(|| panic!("unknown topic '{topic}'"))
+            .publish_batch(msgs)
+    }
+
+    fn subscribe(&self, topic: &str, group: &str) -> Box<dyn ConsumerClient> {
+        Box::new(Broker::subscribe(self, topic, group))
+    }
+
+    fn group_lag(&self, topic: &str, group: &str) -> u64 {
+        Broker::group_lag(self, topic, group)
+    }
+
+    fn total_lag(&self) -> u64 {
+        Broker::total_lag(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_broker_through_client_trait() {
+        let broker = Broker::new();
+        let client: SharedBrokerClient = broker.clone();
+        client.create_topic("t", 2);
+        client.create_topic("t", 2); // idempotent
+        assert_eq!(client.partition_count("t"), Some(2));
+        assert_eq!(client.partition_count("missing"), None);
+
+        let placed = client
+            .publish_batch("t", (0..10u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        assert_eq!(placed.len(), 10);
+        assert_eq!(client.group_lag("t", "g"), 10);
+
+        let consumer = client.subscribe("t", "g");
+        assert_eq!(consumer.assignment().len(), 2);
+        let batch = consumer.poll_batch(100);
+        assert_eq!(batch.len(), 10);
+        assert!(consumer.commit_batch(&batch));
+        assert_eq!(client.group_lag("t", "g"), 0);
+        assert_eq!(client.total_lag(), 0);
+        consumer.close();
+        assert_eq!(broker.group_members("t", "g"), 0, "close left the group");
+    }
+
+    #[test]
+    fn dropping_client_consumer_mimics_crash() {
+        let broker = Broker::new();
+        let client: SharedBrokerClient = broker.clone();
+        client.create_topic("t", 1);
+        client.publish_batch("t", (0..5u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        let consumer = client.subscribe("t", "g");
+        assert_eq!(consumer.poll_batch(5).len(), 5);
+        drop(consumer); // crash: no commit
+        let again = client.subscribe("t", "g");
+        assert_eq!(again.poll_batch(5).len(), 5, "uncommitted batch redelivered");
+        again.close();
+    }
+}

@@ -8,7 +8,7 @@ use std::sync::Arc;
 /// layer and task pools never copies message bodies — only bumps a
 /// refcount. `produced_at_ms` is the broker-ingest timestamp (millis on the
 /// experiment clock) used by the metrics layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Message {
     /// Partitioning key (hashed to choose a partition when present).
     pub key: Option<u64>,
@@ -41,7 +41,7 @@ impl Message {
 }
 
 /// A message paired with its position in a partition log.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct OffsetMessage {
     pub partition: usize,
     pub offset: u64,

@@ -65,14 +65,25 @@
 //! (or simulated cluster node). `cargo bench --bench broker_contention`
 //! sweeps N producers × M consumer groups to show the multi-threaded
 //! scaling the lock split buys.
+//!
+//! # The client seam
+//!
+//! Layers above the messaging layer hold the broker through
+//! [`client::BrokerClient`] / [`client::ConsumerClient`] — a narrow,
+//! batch-first trait pair that `Broker`/`Consumer` implement directly
+//! and that [`transport::RemoteBroker`](crate::transport::RemoteBroker)
+//! implements over a wire connection, so the same pipeline runs against
+//! a broker in this process or on another node.
 
 pub mod broker;
+pub mod client;
 pub mod group;
 pub mod message;
 pub mod partition;
 pub mod producer;
 
 pub use broker::Broker;
+pub use client::{BrokerClient, ConsumerClient, SharedBrokerClient};
 pub use group::MemberId;
 pub use message::Message;
 pub use producer::Producer;

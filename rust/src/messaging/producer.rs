@@ -1,43 +1,64 @@
 //! Producer handle: publishes messages stamped with the experiment clock.
 
-use super::broker::{Broker, Topic};
+use super::broker::Broker;
+use super::client::SharedBrokerClient;
 use super::message::Message;
 use crate::util::clock::SharedClock;
 use std::sync::Arc;
 
-/// Publishes to one topic. Cheap to clone/create; holds the topic `Arc`
-/// directly so the hot path skips the broker's topic map.
+/// Publishes to one topic through a [`BrokerClient`] — the local broker or
+/// a remote one behind a transport connection. Cheap to clone/create; the
+/// per-publish cost is one (sharded, read-locked) topic lookup on the
+/// local path, paid once per *batch* on the batch-first APIs.
+///
+/// [`BrokerClient`]: super::client::BrokerClient
 pub struct Producer {
-    topic: Arc<Topic>,
+    client: SharedBrokerClient,
+    topic: String,
     clock: SharedClock,
 }
 
 impl Producer {
+    /// Producer for the in-process broker (the common case).
     pub fn new(broker: &Arc<Broker>, topic: &str, clock: SharedClock) -> Self {
-        let topic = broker.topic(topic).unwrap_or_else(|| panic!("unknown topic '{topic}'"));
-        Producer { topic, clock }
+        Producer::with_client(broker.clone(), topic, clock)
+    }
+
+    /// Producer over any [`BrokerClient`] (local or remote). Panics if the
+    /// topic does not exist — a config error, same as the local path.
+    ///
+    /// [`BrokerClient`]: super::client::BrokerClient
+    pub fn with_client(client: SharedBrokerClient, topic: &str, clock: SharedClock) -> Self {
+        assert!(client.partition_count(topic).is_some(), "unknown topic '{topic}'");
+        Producer { client, topic: topic.to_string(), clock }
     }
 
     /// Publish a payload; returns `(partition, offset)`.
     pub fn send(&self, key: Option<u64>, payload: Vec<u8>) -> (usize, u64) {
-        self.topic.publish(Message::new(key, payload, self.clock.now_millis()))
+        self.send_message(Message::new(key, payload, 0))
     }
 
     /// Publish a pre-built message, restamping its produce time.
     pub fn send_message(&self, mut msg: Message) -> (usize, u64) {
         msg.produced_at_ms = self.clock.now_millis();
-        self.topic.publish(msg)
+        self.client
+            .publish_batch(&self.topic, vec![msg])
+            .into_iter()
+            .next()
+            .expect("publish placed one message")
     }
 
     /// Publish a batch of `(key, payload)` pairs in one shot — one clock
-    /// read and one partition-log tail publish per touched partition,
-    /// instead of one of each per message. Returns `(partition, offset)`
-    /// per input, in input order; per-key order is preserved (see
-    /// [`Topic::publish_batch`]).
+    /// read and one broker round trip for the whole batch, instead of one
+    /// of each per message. Returns `(partition, offset)` per input, in
+    /// input order; per-key order is preserved (see
+    /// [`Topic::publish_batch`](super::broker::Topic::publish_batch)).
     pub fn send_batch(&self, batch: Vec<(Option<u64>, Vec<u8>)>) -> Vec<(usize, u64)> {
         let now = self.clock.now_millis();
-        self.topic
-            .publish_batch(batch.into_iter().map(|(k, p)| Message::new(k, p, now)).collect())
+        self.client.publish_batch(
+            &self.topic,
+            batch.into_iter().map(|(k, p)| Message::new(k, p, now)).collect(),
+        )
     }
 
     /// Publish pre-built messages as one batch, restamping all of their
@@ -47,11 +68,11 @@ impl Producer {
         for m in &mut msgs {
             m.produced_at_ms = now;
         }
-        self.topic.publish_batch(msgs)
+        self.client.publish_batch(&self.topic, msgs)
     }
 
     pub fn topic_name(&self) -> &str {
-        &self.topic.name
+        &self.topic
     }
 }
 

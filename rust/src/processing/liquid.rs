@@ -21,8 +21,8 @@
 
 use super::job::Job;
 use crate::actor::executor::{Executor, Poll, Poller, Registration};
-use crate::messaging::broker::Consumer;
-use crate::messaging::{Broker, Producer};
+use crate::messaging::client::{ConsumerClient, SharedBrokerClient};
+use crate::messaging::Producer;
 use crate::metrics::PipelineMetrics;
 use crate::util::clock::SharedClock;
 use crate::vml::envelope::Envelope;
@@ -32,7 +32,7 @@ use std::time::Duration;
 
 /// Per-task consume-cycle state (touched only inside activations).
 struct LtInner {
-    consumer: Option<Consumer>,
+    consumer: Option<Box<dyn ConsumerClient>>,
     producer: Option<Producer>,
     processor: Option<Box<dyn super::job::Processor>>,
 }
@@ -129,7 +129,7 @@ impl LiquidTask {
                 .job
                 .output_topic
                 .as_ref()
-                .map(|t| Producer::new(&job.broker, t, job.clock.clone()));
+                .map(|t| Producer::with_client(job.broker.clone(), t, job.clock.clone()));
             inner.processor = Some((job.job.factory)());
         }
         let consumer = inner.consumer.as_ref().expect("consumer joined above");
@@ -207,7 +207,7 @@ impl LiquidTask {
 /// One job executed Liquid-style with a fixed task count.
 pub struct LiquidJob {
     pub job: Job,
-    broker: Arc<Broker>,
+    broker: SharedBrokerClient,
     clock: SharedClock,
     metrics: Arc<PipelineMetrics>,
     batch: usize,
@@ -227,7 +227,7 @@ impl LiquidJob {
     #[allow(clippy::too_many_arguments)]
     pub fn start(
         executor: &Arc<dyn Executor>,
-        broker: &Arc<Broker>,
+        broker: &SharedBrokerClient,
         job: Job,
         task_count: usize,
         batch: usize,
@@ -348,6 +348,8 @@ mod tests {
     use crate::util::clock::real_clock;
     use crate::util::wait_until;
 
+    use crate::messaging::Broker;
+
     fn fixture(
         partitions: usize,
         tasks: usize,
@@ -355,13 +357,14 @@ mod tests {
         let broker = Broker::new();
         broker.create_topic("in", partitions);
         broker.create_topic("out", partitions);
+        let client: SharedBrokerClient = broker.clone();
         let clock = real_clock();
         let metrics = PipelineMetrics::new(clock.clone());
         let job = Job::from_fn("j", "in", Some("out"), |env| vec![env.message.clone()]);
         let executor: Arc<dyn Executor> = ThreadedExecutor::new(tasks.max(2));
         let lj = LiquidJob::start(
             &executor,
-            &broker,
+            &client,
             job,
             tasks,
             8,

@@ -6,9 +6,8 @@
 //! instantiates it under either architecture.
 
 use super::job::Job;
-use crate::messaging::Broker;
+use crate::messaging::client::SharedBrokerClient;
 use std::collections::BTreeSet;
-use std::sync::Arc;
 
 /// An ordered set of jobs forming an incremental processing pipeline.
 #[derive(Clone)]
@@ -36,8 +35,9 @@ impl Pipeline {
 
     /// Create every topic on the broker with `partitions` each (§4.3:
     /// "every topic of Apache Kafka in the messaging layer has three
-    /// partitions in all of the implementations").
-    pub fn create_topics(&self, broker: &Arc<Broker>, partitions: usize) {
+    /// partitions in all of the implementations"). Works against any
+    /// broker client — in-process or remote.
+    pub fn create_topics(&self, broker: &SharedBrokerClient, partitions: usize) {
         for t in self.topics() {
             broker.create_topic(&t, partitions);
         }
@@ -90,8 +90,9 @@ mod tests {
     #[test]
     fn create_topics_on_broker() {
         let p = Pipeline::new("p", vec![job("a", "in", Some("out"))]);
-        let b = Broker::new();
-        p.create_topics(&b, 3);
+        let b = crate::messaging::Broker::new();
+        let client: SharedBrokerClient = b.clone();
+        p.create_topics(&client, 3);
         assert_eq!(b.topic("in").unwrap().partition_count(), 3);
         assert_eq!(b.topic("out").unwrap().partition_count(), 3);
     }

@@ -10,7 +10,8 @@ use super::job::{Job, NoOutput, OutputSink};
 use super::task_pool::TaskPool;
 use crate::actor::system::ActorSystem;
 use crate::config::{ElasticConfig, RouterPolicy};
-use crate::messaging::{Broker, Message};
+use crate::messaging::client::SharedBrokerClient;
+use crate::messaging::Message;
 use crate::metrics::PipelineMetrics;
 use crate::reactive::elastic::ElasticController;
 use crate::reactive::state::OffsetStore;
@@ -63,7 +64,7 @@ impl ReactiveJob {
     #[allow(clippy::too_many_arguments)]
     pub fn start(
         system: &Arc<ActorSystem>,
-        broker: &Arc<Broker>,
+        broker: &SharedBrokerClient,
         job: Job,
         input_vt: &Arc<VirtualTopic>,
         output_vt: Option<&Arc<VirtualTopic>>,
@@ -97,10 +98,7 @@ impl ReactiveJob {
             1024,
         );
         // Virtual consumer group: as many consumers as partitions.
-        let partitions = broker
-            .topic(&job.input_topic)
-            .map(|t| t.partition_count())
-            .unwrap_or(1);
+        let partitions = broker.partition_count(&job.input_topic).unwrap_or(1);
         let consumers = input_vt.subscribe(&job.name, partitions, batch, router.clone());
 
         // Elastic worker service drives the task pool.
@@ -161,11 +159,14 @@ mod tests {
 
     use crate::util::wait_until;
 
+    use crate::messaging::Broker;
+
     #[test]
     fn five_layer_round_trip_with_more_tasks_than_partitions() {
         let broker = Broker::new();
         broker.create_topic("in", 3);
         broker.create_topic("mid", 3);
+        let client: SharedBrokerClient = broker.clone();
         let system = ActorSystem::new();
         let clock = real_clock();
         let metrics = PipelineMetrics::new(clock.clone());
@@ -174,7 +175,7 @@ mod tests {
 
         let vt_in = VirtualTopic::new(
             "in",
-            &broker,
+            &client,
             &system,
             clock.clone(),
             metrics.clone(),
@@ -183,7 +184,7 @@ mod tests {
         );
         let vt_mid = VirtualTopic::new(
             "mid",
-            &broker,
+            &client,
             &system,
             clock.clone(),
             metrics.clone(),
@@ -195,7 +196,7 @@ mod tests {
         let cfg = ElasticConfig { min_workers: 6, max_workers: 12, ..Default::default() };
         let rj = ReactiveJob::start(
             &system,
-            &broker,
+            &client,
             job,
             &vt_in,
             Some(&vt_mid),
@@ -236,6 +237,7 @@ mod tests {
     fn supervisor_heals_killed_consumers_and_tasks() {
         let broker = Broker::new();
         broker.create_topic("in", 2);
+        let client: SharedBrokerClient = broker.clone();
         let system = ActorSystem::new();
         let clock = real_clock();
         let metrics = PipelineMetrics::new(clock.clone());
@@ -243,7 +245,7 @@ mod tests {
         let supervisor = Supervisor::new(clock.clone(), Duration::from_millis(10));
         let vt_in = VirtualTopic::new(
             "in",
-            &broker,
+            &client,
             &system,
             clock.clone(),
             metrics.clone(),
@@ -253,7 +255,7 @@ mod tests {
         let job = Job::from_fn("sink", "in", None, |_e| vec![]);
         let rj = ReactiveJob::start(
             &system,
-            &broker,
+            &client,
             job,
             &vt_in,
             None,

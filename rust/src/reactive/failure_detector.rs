@@ -104,19 +104,21 @@ impl PhiAccrualDetector {
         }
     }
 
-    /// Current suspicion level for `id`; 0.0 for unknown components or
-    /// before two heartbeats have been observed.
-    pub fn phi(&self, id: &str) -> f64 {
-        let s = self.state.lock().unwrap();
-        let st = match s.get(id) {
-            Some(st) if !st.intervals.is_empty() => st,
-            _ => return 0.0,
-        };
+    /// Forget a component (deregistered / intentionally stopped / left the
+    /// cluster through membership gossip).
+    pub fn forget(&self, id: &str) {
+        self.state.lock().unwrap().remove(id);
+    }
+
+    fn phi_of(&self, st: &PhiState, now: std::time::Duration) -> f64 {
+        if st.intervals.is_empty() {
+            return 0.0;
+        }
         let n = st.intervals.len() as f64;
         let mean = st.intervals.iter().sum::<f64>() / n;
         let var = st.intervals.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
         let std = var.sqrt().max(self.min_stddev.as_secs_f64());
-        let since = self.clock.now().saturating_sub(st.last).as_secs_f64();
+        let since = now.saturating_sub(st.last).as_secs_f64();
         // P(next heartbeat later than `since`) under N(mean, std²), via the
         // logistic approximation of the normal CDF tail (as in the Akka
         // implementation lineage).
@@ -126,9 +128,33 @@ impl PhiAccrualDetector {
         -p_later.max(1e-300).log10()
     }
 
+    /// Current suspicion level for `id`; 0.0 for unknown components or
+    /// before two heartbeats have been observed.
+    pub fn phi(&self, id: &str) -> f64 {
+        let s = self.state.lock().unwrap();
+        match s.get(id) {
+            Some(st) => self.phi_of(st, self.clock.now()),
+            None => 0.0,
+        }
+    }
+
     /// Convenience threshold check.
     pub fn is_suspected(&self, id: &str, threshold: f64) -> bool {
         self.phi(id) > threshold
+    }
+
+    /// All monitored components whose φ currently exceeds `threshold`
+    /// (sorted; what the membership layer reports as suspects).
+    pub fn suspects(&self, threshold: f64) -> Vec<String> {
+        let now = self.clock.now();
+        let s = self.state.lock().unwrap();
+        let mut out: Vec<String> = s
+            .iter()
+            .filter(|(_, st)| self.phi_of(st, now) > threshold)
+            .map(|(id, _)| id.clone())
+            .collect();
+        out.sort();
+        out
     }
 }
 
@@ -266,6 +292,27 @@ mod tests {
         sched.run_for(Duration::from_secs(8));
         assert!(d.phi("n") > 8.0, "silence drives phi up, got {}", d.phi("n"));
         assert!(d.is_suspected("n", 8.0));
+    }
+
+    #[test]
+    fn phi_forget_and_suspects() {
+        let clock = Arc::new(ManualClock::new());
+        let d = PhiAccrualDetector::new(clock.clone(), 8, Duration::from_millis(50));
+        for _ in 0..6 {
+            d.heartbeat("a");
+            d.heartbeat("b");
+            clock.advance(Duration::from_secs(1));
+        }
+        assert!(d.suspects(8.0).is_empty(), "regular beats: no suspects");
+        // Only "a" keeps beating; "b" goes silent.
+        for _ in 0..6 {
+            d.heartbeat("a");
+            clock.advance(Duration::from_secs(1));
+        }
+        assert_eq!(d.suspects(8.0), vec!["b".to_string()]);
+        d.forget("b");
+        assert!(d.suspects(8.0).is_empty(), "forgotten components drop out");
+        assert_eq!(d.phi("b"), 0.0);
     }
 
     #[test]

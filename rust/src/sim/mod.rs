@@ -23,6 +23,12 @@
 //!   chaos matrix (`tests/sim_chaos_matrix.rs` runs it twice and demands
 //!   identical traces).
 //!
+//! The transport layer extends this determinism to *network* faults:
+//! [`SimTransport`](crate::transport::SimTransport) schedules its
+//! deliveries on [`SimScheduler`], so partition/drop/delay/duplicate/
+//! corrupt link scripts replay byte-identically per seed
+//! (`tests/transport_sim_chaos.rs`).
+//!
 //! [`Clock`]: crate::util::clock::Clock
 //! [`ElasticController`]: crate::reactive::elastic::ElasticController
 

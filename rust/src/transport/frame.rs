@@ -1,0 +1,794 @@
+//! The wire protocol: length-prefixed, versioned, checksummed frames.
+//!
+//! # Frame layout
+//!
+//! | bytes          | field     | notes                                          |
+//! |----------------|-----------|------------------------------------------------|
+//! | 4              | `length`  | u32 LE; count of bytes *after* this field      |
+//! | 1              | `version` | [`WIRE_VERSION`]; checked before anything else |
+//! | 1              | `flags`   | bit 0 = [`FLAG_NO_REPLY`] (one-way cast)       |
+//! | 1              | `kind`    | frame discriminant                             |
+//! | `length` − 7   | `body`    | kind-specific fields (see below)               |
+//! | 4              | `crc32`   | IEEE CRC-32 over `version..body`, u32 LE       |
+//!
+//! Body scalars are little-endian; strings are `u16 length + UTF-8`;
+//! byte runs are `u32 length + bytes`; sequences are `u32 count +
+//! elements`. A message is `key? (u8 tag + u64) · produced_at_ms (u64) ·
+//! payload (byte run)`.
+//!
+//! # Robustness contract
+//!
+//! [`Frame::decode`] **never panics and never misreads a partial frame**:
+//!
+//! - fewer bytes than the length prefix promises → [`FrameError::Incomplete`]
+//!   (stream framing: read more and retry — *not* corruption);
+//! - a length above [`MAX_FRAME`] → [`FrameError::Oversized`] (a corrupt or
+//!   hostile length field must not drive allocation);
+//! - wrong `version` → [`FrameError::BadVersion`], checked before the
+//!   checksum so version skew is reported as itself;
+//! - any flipped bit in `version..body` → [`FrameError::BadChecksum`]
+//!   (CRC-32 detects all single-bit errors);
+//! - unknown `kind`, truncated body fields, invalid UTF-8, trailing bytes
+//!   → [`FrameError::BadKind`] / [`FrameError::Malformed`].
+//!
+//! `tests/frame_codec_props.rs` drives exactly this contract with
+//! randomized frames under `propcheck`.
+
+use crate::messaging::broker::PolledBatch;
+use crate::messaging::message::{Message, OffsetMessage};
+use std::fmt;
+
+/// Protocol version carried by every frame.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard ceiling on `length` (and therefore on any body allocation).
+pub const MAX_FRAME: usize = 8 * 1024 * 1024;
+
+/// Flags bit: the sender expects no response (gossip casts).
+pub const FLAG_NO_REPLY: u8 = 0b0000_0001;
+
+/// version + flags + kind + crc — the smallest legal `length`.
+const MIN_LEN: usize = 3 + 4;
+
+// ---------------------------------------------------------------- crc32
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC-32 (the Ethernet/zlib polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------- errors
+
+/// Why a byte run failed to decode as a frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Not enough bytes yet — stream framing, read more and retry.
+    Incomplete,
+    /// The length prefix exceeds [`MAX_FRAME`].
+    Oversized { len: usize },
+    /// The version byte is not [`WIRE_VERSION`].
+    BadVersion { got: u8 },
+    /// The CRC-32 over `version..body` does not match.
+    BadChecksum,
+    /// Unknown frame discriminant.
+    BadKind { got: u8 },
+    /// The body does not parse (truncated field, bad UTF-8, trailing
+    /// bytes, an element count that exceeds the frame bound, …).
+    Malformed(&'static str),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Incomplete => write!(f, "incomplete frame (need more bytes)"),
+            FrameError::Oversized { len } => {
+                write!(f, "frame length {len} exceeds the {MAX_FRAME}-byte cap")
+            }
+            FrameError::BadVersion { got } => {
+                write!(f, "wire version {got} (this end speaks {WIRE_VERSION})")
+            }
+            FrameError::BadChecksum => write!(f, "checksum mismatch (corrupt frame)"),
+            FrameError::BadKind { got } => write!(f, "unknown frame kind {got}"),
+            FrameError::Malformed(why) => write!(f, "malformed frame body: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Application-level rejection codes carried by [`Frame::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    Generic,
+    UnknownTopic,
+    /// The session id is not registered (e.g. the broker restarted);
+    /// clients respond by resubscribing.
+    UnknownSession,
+    BadRequest,
+}
+
+impl ErrorCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::Generic => 0,
+            ErrorCode::UnknownTopic => 1,
+            ErrorCode::UnknownSession => 2,
+            ErrorCode::BadRequest => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self, FrameError> {
+        Ok(match v {
+            0 => ErrorCode::Generic,
+            1 => ErrorCode::UnknownTopic,
+            2 => ErrorCode::UnknownSession,
+            3 => ErrorCode::BadRequest,
+            _ => return Err(FrameError::Malformed("unknown error code")),
+        })
+    }
+}
+
+// ---------------------------------------------------------------- frames
+
+/// Every message that crosses the wire: the broker request/response
+/// vocabulary (mirroring
+/// [`BrokerClient`](crate::messaging::client::BrokerClient) /
+/// [`ConsumerClient`](crate::messaging::client::ConsumerClient)) plus
+/// membership gossip.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    // ---- client → broker requests
+    CreateTopic { topic: String, partitions: u32 },
+    PublishBatch { topic: String, msgs: Vec<Message> },
+    Subscribe { topic: String, group: String },
+    PollBatch { session: u64, max: u32 },
+    CommitBatch { session: u64, generation: u64, next_offsets: Vec<(u32, u64)> },
+    Commit { session: u64, partition: u32, next: u64 },
+    Assignment { session: u64 },
+    Leave { session: u64 },
+    GroupLag { topic: String, group: String },
+    TotalLag,
+    PartitionCount { topic: String },
+    // ---- broker → client responses
+    Ok,
+    Placements { placements: Vec<(u32, u64)> },
+    Subscribed { session: u64 },
+    Batch { generation: u64, messages: Vec<OffsetMessage>, next_offsets: Vec<(u32, u64)> },
+    Committed { applied: bool },
+    AssignmentIs { partitions: Vec<u32> },
+    Lag { lag: u64 },
+    Partitions { count: Option<u32> },
+    Error { code: ErrorCode, message: String },
+    // ---- membership gossip (node ↔ node, usually one-way casts)
+    Join { node: String, incarnation: u64 },
+    LeaveNode { node: String },
+    Heartbeat { node: String, seq: u64 },
+}
+
+const K_CREATE_TOPIC: u8 = 1;
+const K_PUBLISH_BATCH: u8 = 2;
+const K_SUBSCRIBE: u8 = 3;
+const K_POLL_BATCH: u8 = 4;
+const K_COMMIT_BATCH: u8 = 5;
+const K_COMMIT: u8 = 6;
+const K_ASSIGNMENT: u8 = 7;
+const K_LEAVE: u8 = 8;
+const K_GROUP_LAG: u8 = 9;
+const K_TOTAL_LAG: u8 = 10;
+const K_PARTITION_COUNT: u8 = 11;
+const K_OK: u8 = 32;
+const K_PLACEMENTS: u8 = 33;
+const K_SUBSCRIBED: u8 = 34;
+const K_BATCH: u8 = 35;
+const K_COMMITTED: u8 = 36;
+const K_ASSIGNMENT_IS: u8 = 37;
+const K_LAG: u8 = 38;
+const K_PARTITIONS: u8 = 39;
+const K_ERROR: u8 = 40;
+const K_JOIN: u8 = 64;
+const K_LEAVE_NODE: u8 = 65;
+const K_HEARTBEAT: u8 = 66;
+
+// ---------------------------------------------------------------- writer
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize, "wire string longer than 64 KiB");
+    put_u16(b, s.len() as u16);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(b: &mut Vec<u8>, bytes: &[u8]) {
+    assert!(bytes.len() <= MAX_FRAME, "wire byte run exceeds the frame cap");
+    put_u32(b, bytes.len() as u32);
+    b.extend_from_slice(bytes);
+}
+
+fn put_msg(b: &mut Vec<u8>, m: &Message) {
+    match m.key {
+        Some(k) => {
+            b.push(1);
+            put_u64(b, k);
+        }
+        None => b.push(0),
+    }
+    put_u64(b, m.produced_at_ms);
+    put_bytes(b, &m.payload);
+}
+
+fn put_pairs(b: &mut Vec<u8>, pairs: &[(u32, u64)]) {
+    put_u32(b, pairs.len() as u32);
+    for &(p, o) in pairs {
+        put_u32(b, p);
+        put_u64(b, o);
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self.pos.checked_add(n).ok_or(FrameError::Malformed("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(FrameError::Malformed("body field truncated"));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String, FrameError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::Malformed("invalid utf-8"))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>, FrameError> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Element count for a sequence. Bounded by the bytes actually left
+    /// in the body, so a corrupted count can never drive a huge
+    /// allocation or a long loop.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize, FrameError> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if n.saturating_mul(min_elem_bytes.max(1)) > remaining {
+            return Err(FrameError::Malformed("element count exceeds frame bound"));
+        }
+        Ok(n)
+    }
+
+    fn msg(&mut self) -> Result<Message, FrameError> {
+        let key = match self.u8()? {
+            0 => None,
+            1 => Some(self.u64()?),
+            _ => return Err(FrameError::Malformed("bad key tag")),
+        };
+        let produced_at_ms = self.u64()?;
+        let payload = self.bytes()?;
+        Ok(Message::new(key, payload, produced_at_ms))
+    }
+
+    fn pairs(&mut self) -> Result<Vec<(u32, u64)>, FrameError> {
+        let n = self.count(12)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push((self.u32()?, self.u64()?));
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<(), FrameError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(FrameError::Malformed("trailing bytes after body"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------- codec
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::CreateTopic { .. } => K_CREATE_TOPIC,
+            Frame::PublishBatch { .. } => K_PUBLISH_BATCH,
+            Frame::Subscribe { .. } => K_SUBSCRIBE,
+            Frame::PollBatch { .. } => K_POLL_BATCH,
+            Frame::CommitBatch { .. } => K_COMMIT_BATCH,
+            Frame::Commit { .. } => K_COMMIT,
+            Frame::Assignment { .. } => K_ASSIGNMENT,
+            Frame::Leave { .. } => K_LEAVE,
+            Frame::GroupLag { .. } => K_GROUP_LAG,
+            Frame::TotalLag => K_TOTAL_LAG,
+            Frame::PartitionCount { .. } => K_PARTITION_COUNT,
+            Frame::Ok => K_OK,
+            Frame::Placements { .. } => K_PLACEMENTS,
+            Frame::Subscribed { .. } => K_SUBSCRIBED,
+            Frame::Batch { .. } => K_BATCH,
+            Frame::Committed { .. } => K_COMMITTED,
+            Frame::AssignmentIs { .. } => K_ASSIGNMENT_IS,
+            Frame::Lag { .. } => K_LAG,
+            Frame::Partitions { .. } => K_PARTITIONS,
+            Frame::Error { .. } => K_ERROR,
+            Frame::Join { .. } => K_JOIN,
+            Frame::LeaveNode { .. } => K_LEAVE_NODE,
+            Frame::Heartbeat { .. } => K_HEARTBEAT,
+        }
+    }
+
+    /// Human-readable discriminant name (traces, error messages).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::CreateTopic { .. } => "create-topic",
+            Frame::PublishBatch { .. } => "publish-batch",
+            Frame::Subscribe { .. } => "subscribe",
+            Frame::PollBatch { .. } => "poll-batch",
+            Frame::CommitBatch { .. } => "commit-batch",
+            Frame::Commit { .. } => "commit",
+            Frame::Assignment { .. } => "assignment",
+            Frame::Leave { .. } => "leave",
+            Frame::GroupLag { .. } => "group-lag",
+            Frame::TotalLag => "total-lag",
+            Frame::PartitionCount { .. } => "partition-count",
+            Frame::Ok => "ok",
+            Frame::Placements { .. } => "placements",
+            Frame::Subscribed { .. } => "subscribed",
+            Frame::Batch { .. } => "batch",
+            Frame::Committed { .. } => "committed",
+            Frame::AssignmentIs { .. } => "assignment-is",
+            Frame::Lag { .. } => "lag",
+            Frame::Partitions { .. } => "partitions",
+            Frame::Error { .. } => "error",
+            Frame::Join { .. } => "join",
+            Frame::LeaveNode { .. } => "leave-node",
+            Frame::Heartbeat { .. } => "heartbeat",
+        }
+    }
+
+    /// Is this a membership-gossip frame (routed to the gossip service)?
+    pub fn is_gossip(&self) -> bool {
+        matches!(self, Frame::Join { .. } | Frame::LeaveNode { .. } | Frame::Heartbeat { .. })
+    }
+
+    fn put_body(&self, b: &mut Vec<u8>) {
+        match self {
+            Frame::CreateTopic { topic, partitions } => {
+                put_str(b, topic);
+                put_u32(b, *partitions);
+            }
+            Frame::PublishBatch { topic, msgs } => {
+                put_str(b, topic);
+                put_u32(b, msgs.len() as u32);
+                for m in msgs {
+                    put_msg(b, m);
+                }
+            }
+            Frame::Subscribe { topic, group } => {
+                put_str(b, topic);
+                put_str(b, group);
+            }
+            Frame::PollBatch { session, max } => {
+                put_u64(b, *session);
+                put_u32(b, *max);
+            }
+            Frame::CommitBatch { session, generation, next_offsets } => {
+                put_u64(b, *session);
+                put_u64(b, *generation);
+                put_pairs(b, next_offsets);
+            }
+            Frame::Commit { session, partition, next } => {
+                put_u64(b, *session);
+                put_u32(b, *partition);
+                put_u64(b, *next);
+            }
+            Frame::Assignment { session } | Frame::Leave { session } => put_u64(b, *session),
+            Frame::GroupLag { topic, group } => {
+                put_str(b, topic);
+                put_str(b, group);
+            }
+            Frame::TotalLag | Frame::Ok => {}
+            Frame::PartitionCount { topic } => put_str(b, topic),
+            Frame::Placements { placements } => put_pairs(b, placements),
+            Frame::Subscribed { session } => put_u64(b, *session),
+            Frame::Batch { generation, messages, next_offsets } => {
+                put_u64(b, *generation);
+                put_u32(b, messages.len() as u32);
+                for om in messages {
+                    put_u32(b, om.partition as u32);
+                    put_u64(b, om.offset);
+                    put_msg(b, &om.message);
+                }
+                put_pairs(b, next_offsets);
+            }
+            Frame::Committed { applied } => b.push(u8::from(*applied)),
+            Frame::AssignmentIs { partitions } => {
+                put_u32(b, partitions.len() as u32);
+                for &p in partitions {
+                    put_u32(b, p);
+                }
+            }
+            Frame::Lag { lag } => put_u64(b, *lag),
+            Frame::Partitions { count } => match count {
+                Some(c) => {
+                    b.push(1);
+                    put_u32(b, *c);
+                }
+                None => b.push(0),
+            },
+            Frame::Error { code, message } => {
+                b.push(code.to_u8());
+                put_str(b, message);
+            }
+            Frame::Join { node, incarnation } => {
+                put_str(b, node);
+                put_u64(b, *incarnation);
+            }
+            Frame::LeaveNode { node } => put_str(b, node),
+            Frame::Heartbeat { node, seq } => {
+                put_str(b, node);
+                put_u64(b, *seq);
+            }
+        }
+    }
+
+    fn read_body(kind: u8, rd: &mut Rd<'_>) -> Result<Frame, FrameError> {
+        Ok(match kind {
+            K_CREATE_TOPIC => {
+                Frame::CreateTopic { topic: rd.string()?, partitions: rd.u32()? }
+            }
+            K_PUBLISH_BATCH => {
+                let topic = rd.string()?;
+                let n = rd.count(13)?; // tag + produced_at + payload len
+                let mut msgs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    msgs.push(rd.msg()?);
+                }
+                Frame::PublishBatch { topic, msgs }
+            }
+            K_SUBSCRIBE => Frame::Subscribe { topic: rd.string()?, group: rd.string()? },
+            K_POLL_BATCH => Frame::PollBatch { session: rd.u64()?, max: rd.u32()? },
+            K_COMMIT_BATCH => Frame::CommitBatch {
+                session: rd.u64()?,
+                generation: rd.u64()?,
+                next_offsets: rd.pairs()?,
+            },
+            K_COMMIT => Frame::Commit {
+                session: rd.u64()?,
+                partition: rd.u32()?,
+                next: rd.u64()?,
+            },
+            K_ASSIGNMENT => Frame::Assignment { session: rd.u64()? },
+            K_LEAVE => Frame::Leave { session: rd.u64()? },
+            K_GROUP_LAG => Frame::GroupLag { topic: rd.string()?, group: rd.string()? },
+            K_TOTAL_LAG => Frame::TotalLag,
+            K_PARTITION_COUNT => Frame::PartitionCount { topic: rd.string()? },
+            K_OK => Frame::Ok,
+            K_PLACEMENTS => Frame::Placements { placements: rd.pairs()? },
+            K_SUBSCRIBED => Frame::Subscribed { session: rd.u64()? },
+            K_BATCH => {
+                let generation = rd.u64()?;
+                let n = rd.count(25)?; // partition + offset + message min
+                let mut messages = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let partition = rd.u32()? as usize;
+                    let offset = rd.u64()?;
+                    let message = rd.msg()?;
+                    messages.push(OffsetMessage { partition, offset, message });
+                }
+                Frame::Batch { generation, messages, next_offsets: rd.pairs()? }
+            }
+            K_COMMITTED => Frame::Committed {
+                applied: match rd.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(FrameError::Malformed("bad bool")),
+                },
+            },
+            K_ASSIGNMENT_IS => {
+                let n = rd.count(4)?;
+                let mut partitions = Vec::with_capacity(n);
+                for _ in 0..n {
+                    partitions.push(rd.u32()?);
+                }
+                Frame::AssignmentIs { partitions }
+            }
+            K_LAG => Frame::Lag { lag: rd.u64()? },
+            K_PARTITIONS => Frame::Partitions {
+                count: match rd.u8()? {
+                    0 => None,
+                    1 => Some(rd.u32()?),
+                    _ => return Err(FrameError::Malformed("bad option tag")),
+                },
+            },
+            K_ERROR => Frame::Error {
+                code: ErrorCode::from_u8(rd.u8()?)?,
+                message: rd.string()?,
+            },
+            K_JOIN => Frame::Join { node: rd.string()?, incarnation: rd.u64()? },
+            K_LEAVE_NODE => Frame::LeaveNode { node: rd.string()? },
+            K_HEARTBEAT => Frame::Heartbeat { node: rd.string()?, seq: rd.u64()? },
+            other => return Err(FrameError::BadKind { got: other }),
+        })
+    }
+
+    /// Encode with empty flags (a request that expects a response).
+    pub fn encode(&self) -> Vec<u8> {
+        self.encode_flags(0)
+    }
+
+    /// Encode with explicit flags ([`FLAG_NO_REPLY`] for casts).
+    pub fn encode_flags(&self, flags: u8) -> Vec<u8> {
+        let mut b = vec![0u8; 4]; // length placeholder
+        b.push(WIRE_VERSION);
+        b.push(flags);
+        b.push(self.kind());
+        self.put_body(&mut b);
+        let crc = crc32(&b[4..]);
+        b.extend_from_slice(&crc.to_le_bytes());
+        let len = (b.len() - 4) as u32;
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        b
+    }
+
+    /// Decode one frame from the head of `buf`. Returns the frame, its
+    /// flags byte, and the total bytes consumed (length prefix included).
+    /// See the module docs for the exact error contract; in particular
+    /// [`FrameError::Incomplete`] means "feed more bytes", every other
+    /// error means the stream is corrupt at this point.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, u8, usize), FrameError> {
+        if buf.len() < 4 {
+            return Err(FrameError::Incomplete);
+        }
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME {
+            return Err(FrameError::Oversized { len });
+        }
+        if len < MIN_LEN {
+            return Err(FrameError::Malformed("length below minimum frame"));
+        }
+        if buf.len() < 4 + len {
+            return Err(FrameError::Incomplete);
+        }
+        let body = &buf[4..4 + len];
+        let version = body[0];
+        if version != WIRE_VERSION {
+            return Err(FrameError::BadVersion { got: version });
+        }
+        let stored = u32::from_le_bytes(body[len - 4..].try_into().unwrap());
+        if crc32(&body[..len - 4]) != stored {
+            return Err(FrameError::BadChecksum);
+        }
+        let flags = body[1];
+        let kind = body[2];
+        let mut rd = Rd { buf: &body[3..len - 4], pos: 0 };
+        let frame = Frame::read_body(kind, &mut rd)?;
+        rd.done()?;
+        Ok((frame, flags, 4 + len))
+    }
+}
+
+/// Convert a [`PolledBatch`] into the wire fields of [`Frame::Batch`].
+pub fn batch_to_frame(batch: PolledBatch) -> Frame {
+    Frame::Batch {
+        generation: batch.generation,
+        messages: batch.messages,
+        next_offsets: batch.next_offsets.iter().map(|&(p, n)| (p as u32, n)).collect(),
+    }
+}
+
+/// Convert [`Frame::Batch`] fields back into a [`PolledBatch`].
+pub fn frame_to_batch(
+    generation: u64,
+    messages: Vec<OffsetMessage>,
+    next_offsets: Vec<(u32, u64)>,
+) -> PolledBatch {
+    PolledBatch {
+        messages,
+        next_offsets: next_offsets.into_iter().map(|(p, n)| (p as usize, n)).collect(),
+        generation,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::CreateTopic { topic: "t".into(), partitions: 3 },
+            Frame::PublishBatch {
+                topic: "t".into(),
+                msgs: vec![
+                    Message::new(Some(7), vec![1, 2, 3], 42),
+                    Message::new(None, vec![], 0),
+                ],
+            },
+            Frame::Subscribe { topic: "t".into(), group: "g".into() },
+            Frame::PollBatch { session: 9, max: 64 },
+            Frame::CommitBatch { session: 9, generation: 2, next_offsets: vec![(0, 5), (1, 7)] },
+            Frame::Commit { session: 9, partition: 1, next: 11 },
+            Frame::Assignment { session: 9 },
+            Frame::Leave { session: 9 },
+            Frame::GroupLag { topic: "t".into(), group: "g".into() },
+            Frame::TotalLag,
+            Frame::PartitionCount { topic: "t".into() },
+            Frame::Ok,
+            Frame::Placements { placements: vec![(2, 100)] },
+            Frame::Subscribed { session: 1 },
+            Frame::Batch {
+                generation: 3,
+                messages: vec![OffsetMessage {
+                    partition: 1,
+                    offset: 4,
+                    message: Message::new(None, vec![9], 5),
+                }],
+                next_offsets: vec![(1, 5)],
+            },
+            Frame::Committed { applied: true },
+            Frame::AssignmentIs { partitions: vec![0, 2] },
+            Frame::Lag { lag: 17 },
+            Frame::Partitions { count: Some(4) },
+            Frame::Partitions { count: None },
+            Frame::Error { code: ErrorCode::UnknownSession, message: "gone".into() },
+            Frame::Join { node: "w1".into(), incarnation: 2 },
+            Frame::LeaveNode { node: "w1".into() },
+            Frame::Heartbeat { node: "w1".into(), seq: 77 },
+        ]
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        for f in sample_frames() {
+            let bytes = f.encode();
+            let (back, flags, used) = Frame::decode(&bytes).expect("decodes");
+            assert_eq!(back, f);
+            assert_eq!(flags, 0);
+            assert_eq!(used, bytes.len());
+        }
+    }
+
+    #[test]
+    fn flags_round_trip() {
+        let bytes = Frame::Heartbeat { node: "n".into(), seq: 1 }.encode_flags(FLAG_NO_REPLY);
+        let (_, flags, _) = Frame::decode(&bytes).unwrap();
+        assert_eq!(flags, FLAG_NO_REPLY);
+    }
+
+    #[test]
+    fn truncation_is_incomplete_never_misread() {
+        let bytes = Frame::Subscribe { topic: "topic".into(), group: "group".into() }.encode();
+        for cut in 0..bytes.len() {
+            assert_eq!(
+                Frame::decode(&bytes[..cut]),
+                Err(FrameError::Incomplete),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_frames_back_to_back_decode_in_order() {
+        let mut stream = Frame::TotalLag.encode();
+        stream.extend_from_slice(&Frame::Lag { lag: 3 }.encode());
+        let (f1, _, used) = Frame::decode(&stream).unwrap();
+        assert_eq!(f1, Frame::TotalLag);
+        let (f2, _, used2) = Frame::decode(&stream[used..]).unwrap();
+        assert_eq!(f2, Frame::Lag { lag: 3 });
+        assert_eq!(used + used2, stream.len());
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut bytes = vec![0u8; 16];
+        bytes[..4].copy_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(FrameError::Oversized { .. })));
+    }
+
+    #[test]
+    fn wrong_version_rejected_even_with_valid_crc() {
+        let mut bytes = Frame::Ok.encode();
+        bytes[4] = WIRE_VERSION + 1;
+        // Recompute the checksum so *only* the version is wrong.
+        let len = bytes.len();
+        let crc = crc32(&bytes[4..len - 4]);
+        bytes[len - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(
+            Frame::decode(&bytes),
+            Err(FrameError::BadVersion { got: WIRE_VERSION + 1 })
+        );
+    }
+
+    #[test]
+    fn flipped_payload_bit_fails_checksum() {
+        let mut bytes =
+            Frame::PublishBatch { topic: "t".into(), msgs: vec![Message::from_str("hello")] }
+                .encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x08;
+        assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn huge_element_count_rejected_without_allocation() {
+        // Hand-craft a CommitBatch whose pair count claims u32::MAX.
+        let mut b = vec![0u8; 4];
+        b.push(WIRE_VERSION);
+        b.push(0);
+        b.push(K_COMMIT_BATCH);
+        put_u64(&mut b, 1); // session
+        put_u64(&mut b, 1); // generation
+        put_u32(&mut b, u32::MAX); // pair count with no pairs behind it
+        let crc = crc32(&b[4..]);
+        b.extend_from_slice(&crc.to_le_bytes());
+        let len = (b.len() - 4) as u32;
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        assert_eq!(
+            Frame::decode(&b),
+            Err(FrameError::Malformed("element count exceeds frame bound"))
+        );
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic check value for CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,209 @@
+//! Membership gossip over the transport: join / leave / heartbeat frames
+//! feeding the φ accrual failure detector.
+//!
+//! Two halves:
+//!
+//! - [`GossipService`] — the receiving end, typically composed into a
+//!   [`NodeService`](super::server::NodeService): decoded gossip frames
+//!   update a [`Membership`] (which drives the *existing*
+//!   [`PhiAccrualDetector`](crate::reactive::failure_detector::PhiAccrualDetector)
+//!   — no synthetic heartbeats, arrival times are real wire arrivals,
+//!   including whatever delay/drop the link inflicted);
+//! - [`Gossiper`] — the sending end a node runs toward its peers:
+//!   sequence-numbered heartbeats as one-way casts (gossip is
+//!   fire-and-forget; a lost heartbeat *should* raise φ a little — that
+//!   is the signal working as designed).
+
+use super::frame::{ErrorCode, Frame};
+use super::{Connection, Service, TransportError};
+use crate::cluster::membership::Membership;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The receiving end of membership gossip.
+pub struct GossipService {
+    membership: Arc<Membership>,
+}
+
+impl GossipService {
+    pub fn new(membership: Arc<Membership>) -> Arc<Self> {
+        Arc::new(GossipService { membership })
+    }
+
+    pub fn membership(&self) -> Arc<Membership> {
+        self.membership.clone()
+    }
+}
+
+impl Service for GossipService {
+    fn handle(&self, req: Frame) -> Frame {
+        match req {
+            Frame::Join { node, incarnation } => {
+                self.membership.join(&node, incarnation);
+                Frame::Ok
+            }
+            Frame::LeaveNode { node } => {
+                self.membership.leave(&node);
+                Frame::Ok
+            }
+            Frame::Heartbeat { node, .. } => {
+                self.membership.heartbeat(&node);
+                Frame::Ok
+            }
+            other => Frame::Error {
+                code: ErrorCode::BadRequest,
+                message: format!("'{}' is not a gossip frame", other.kind_name()),
+            },
+        }
+    }
+}
+
+/// The sending end: one node's gossip toward one peer.
+pub struct Gossiper {
+    conn: Arc<dyn Connection>,
+    node: String,
+    seq: AtomicU64,
+}
+
+impl Gossiper {
+    pub fn new(conn: Arc<dyn Connection>, node: &str) -> Arc<Self> {
+        Arc::new(Gossiper { conn, node: node.to_string(), seq: AtomicU64::new(0) })
+    }
+
+    pub fn node(&self) -> &str {
+        &self.node
+    }
+
+    /// Announce this node (cast; counts as a liveness signal on arrival).
+    pub fn join(&self, incarnation: u64) -> Result<(), TransportError> {
+        self.conn.cast(Frame::Join { node: self.node.clone(), incarnation })
+    }
+
+    /// One sequence-numbered heartbeat (cast).
+    pub fn heartbeat(&self) -> Result<(), TransportError> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        self.conn.cast(Frame::Heartbeat { node: self.node.clone(), seq })
+    }
+
+    /// Graceful departure (cast).
+    pub fn leave(&self) -> Result<(), TransportError> {
+        self.conn.cast(Frame::LeaveNode { node: self.node.clone() })
+    }
+
+    /// Heartbeats sent so far.
+    pub fn beats_sent(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Spawn a real-time heartbeat loop (for `rl-node`; simulation tests
+    /// schedule [`Gossiper::heartbeat`] on the [`SimScheduler`] instead).
+    /// The loop ends when `stop` flips; send failures are ignored — a
+    /// missed heartbeat is exactly what the detector is for.
+    ///
+    /// [`SimScheduler`]: crate::sim::SimScheduler
+    pub fn start_heartbeats(
+        self: &Arc<Self>,
+        period: Duration,
+        stop: Arc<std::sync::atomic::AtomicBool>,
+    ) -> std::thread::JoinHandle<()> {
+        let gossiper = self.clone();
+        std::thread::Builder::new()
+            .name(format!("gossip:{}", self.node))
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let _ = gossiper.heartbeat();
+                    std::thread::sleep(period);
+                }
+                let _ = gossiper.leave();
+            })
+            .expect("spawn gossip thread")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimScheduler;
+    use crate::transport::sim::SimTransport;
+    use crate::transport::Transport;
+
+    fn gossip_net(seed: u64) -> (Arc<SimScheduler>, SimTransport, Arc<Membership>, Arc<Gossiper>) {
+        let sched = Arc::new(SimScheduler::new(seed));
+        let transport = SimTransport::new(sched.clone());
+        let membership = Membership::new(sched.clock(), 8.0);
+        transport.serve("seed-node", GossipService::new(membership.clone())).unwrap();
+        let conn = transport.connect("seed-node").unwrap();
+        let gossiper = Gossiper::new(conn, "w1");
+        (sched, transport, membership, gossiper)
+    }
+
+    #[test]
+    fn join_heartbeat_leave_over_the_wire() {
+        let (sched, _t, membership, gossiper) = gossip_net(3);
+        gossiper.join(1).unwrap();
+        sched.run_for(Duration::ZERO); // deliver the cast
+        assert!(membership.contains("w1"));
+        for _ in 0..5 {
+            gossiper.heartbeat().unwrap();
+            sched.run_for(Duration::from_secs(1));
+        }
+        assert_eq!(membership.info("w1").unwrap().heartbeats, 5);
+        assert_eq!(gossiper.beats_sent(), 5);
+        assert!(!membership.is_suspected("w1"));
+        gossiper.leave().unwrap();
+        sched.run_for(Duration::ZERO);
+        assert!(!membership.contains("w1"));
+    }
+
+    #[test]
+    fn wire_silence_raises_phi_and_suspects() {
+        let (sched, _t, membership, gossiper) = gossip_net(5);
+        gossiper.join(1).unwrap();
+        // Regular 1 s heartbeats, scheduled like a real node would.
+        let g = gossiper.clone();
+        let beats = sched.schedule_every(Duration::from_secs(1), move |_| {
+            let _ = g.heartbeat();
+        });
+        sched.run_for(Duration::from_secs(20));
+        assert!(!membership.is_suspected("w1"), "phi {}", membership.phi("w1"));
+        // Node dies: heartbeats stop arriving; the detector crosses.
+        beats.cancel();
+        sched.run_for(Duration::from_secs(15));
+        assert_eq!(membership.suspects(), vec!["w1".to_string()]);
+    }
+
+    #[test]
+    fn dropped_heartbeats_are_absorbed_until_they_are_not() {
+        let (sched, transport, membership, gossiper) = gossip_net(7);
+        gossiper.join(1).unwrap();
+        let g = gossiper.clone();
+        sched.schedule_every(Duration::from_secs(1), move |_| {
+            let _ = g.heartbeat();
+        });
+        sched.run_for(Duration::from_secs(20));
+        // One lost heartbeat: a 2 s gap against a 1 s rhythm — noticeable
+        // but under the threshold.
+        transport.drop_next("seed-node", 1);
+        sched.run_for(Duration::from_secs(5));
+        assert!(!membership.is_suspected("w1"), "single drop absorbed, phi {}", membership.phi("w1"));
+        // A burst of losses looks like death.
+        transport.partition("seed-node", true);
+        sched.run_for(Duration::from_secs(15));
+        assert!(membership.is_suspected("w1"), "sustained loss suspected");
+        // Link heals, heartbeats resume, suspicion clears.
+        transport.partition("seed-node", false);
+        sched.run_for(Duration::from_secs(2));
+        assert!(!membership.is_suspected("w1"), "recovery clears suspicion");
+    }
+
+    #[test]
+    fn non_gossip_frame_rejected() {
+        let (_s, _t, membership, _g) = gossip_net(9);
+        let svc = GossipService::new(membership);
+        assert!(matches!(
+            svc.handle(Frame::TotalLag),
+            Frame::Error { code: ErrorCode::BadRequest, .. }
+        ));
+    }
+}

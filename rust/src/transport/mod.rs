@@ -1,0 +1,149 @@
+//! Cross-process transport: the broker behind a wire.
+//!
+//! Everything above the messaging layer talks to a broker through the
+//! [`BrokerClient`](crate::messaging::client::BrokerClient) seam. This
+//! module makes the far side of that seam real:
+//!
+//! - [`frame`] — the length-prefixed, versioned, CRC-checked wire
+//!   protocol: the broker request/response vocabulary plus membership
+//!   gossip (join / leave / heartbeat);
+//! - [`Transport`] — how frames move: [`tcp::TcpTransport`] (std::net,
+//!   blocking I/O on dedicated connection threads) for real deployments,
+//!   and [`sim::SimTransport`] (in-memory, scheduled on
+//!   [`SimScheduler`](crate::sim::SimScheduler)) with **scriptable
+//!   delay / drop / partition / duplicate / corrupt faults** for
+//!   deterministic network-chaos tests;
+//! - [`server::BrokerService`] — the broker end of the wire: decoded
+//!   request frames in, response frames out, with a session table mapping
+//!   remote consumers onto real [`Consumer`](crate::messaging::Consumer)
+//!   group memberships;
+//! - [`remote::RemoteBroker`] — the client end: implements `BrokerClient`
+//!   over a [`Connection`], so `vml`, the processing layer, and the
+//!   experiment runner run unchanged against a broker in another process;
+//! - [`gossip`] — membership gossip feeding the φ accrual failure
+//!   detector through [`Membership`](crate::cluster::membership::Membership).
+//!
+//! The `rl-node` binary (`src/bin/rl_node.rs`) packages the roles: a
+//! broker process serving [`server::NodeService`] over TCP, and worker
+//! processes driving a pipeline through [`remote::RemoteBroker`].
+//!
+//! # Failure semantics
+//!
+//! The wire keeps the messaging layer's at-least-once contract:
+//! publishes and commits may be *retried* across reconnects (duplicate
+//! publishes append duplicate messages — redelivery-style duplication,
+//! never loss, never offset gaps); a commit lost in transit is simply not
+//! applied, so its batch redelivers; a broker restart invalidates
+//! sessions, and remote consumers transparently resubscribe and resume
+//! from the broker's committed offsets.
+
+pub mod frame;
+pub mod gossip;
+pub mod remote;
+pub mod server;
+pub mod sim;
+pub mod tcp;
+
+pub use frame::{ErrorCode, Frame, FrameError, FLAG_NO_REPLY, MAX_FRAME, WIRE_VERSION};
+pub use gossip::{Gossiper, GossipService};
+pub use remote::{RemoteBroker, RetryPolicy};
+pub use server::{BrokerService, NodeService};
+pub use sim::{LinkStats, SimTransport};
+pub use tcp::TcpTransport;
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Why a transport operation failed.
+#[derive(Debug, Clone)]
+pub enum TransportError {
+    /// The peer cannot be reached at all (connect refused, partitioned
+    /// link, dropped frame, shut-down endpoint).
+    Unreachable(String),
+    /// I/O failed mid-exchange (reset, timeout, short write).
+    Io(String),
+    /// Received bytes did not decode to a frame (corruption, version skew).
+    Frame(FrameError),
+    /// The peer decoded the request and rejected it ([`Frame::Error`]).
+    Rejected { code: ErrorCode, message: String },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Unreachable(why) => write!(f, "peer unreachable: {why}"),
+            TransportError::Io(why) => write!(f, "transport i/o error: {why}"),
+            TransportError::Frame(e) => write!(f, "frame error: {e}"),
+            TransportError::Rejected { code, message } => {
+                write!(f, "rejected by peer ({code:?}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// The server side of an endpoint: decoded request frames in, response
+/// frames out. Implementations must be callable from any transport
+/// thread concurrently.
+pub trait Service: Send + Sync {
+    /// Handle one request frame. One-way casts also pass through here;
+    /// their return value is discarded by the transport.
+    fn handle(&self, req: Frame) -> Frame;
+}
+
+/// One logical connection to a peer endpoint.
+pub trait Connection: Send + Sync {
+    /// Round trip: send `req`, wait for the peer's response frame. At
+    /// most one call is in flight per connection; implementations may
+    /// retry transparently across reconnects (at-least-once — see the
+    /// module docs).
+    fn call(&self, req: Frame) -> Result<Frame, TransportError>;
+
+    /// One-way send (gossip). Fire-and-forget: delivery is not
+    /// acknowledged, and a faulted link may drop it silently.
+    fn cast(&self, msg: Frame) -> Result<(), TransportError>;
+
+    /// Peer address, for diagnostics.
+    fn peer(&self) -> String;
+}
+
+/// A way to serve and reach endpoints by address.
+pub trait Transport: Send + Sync {
+    /// Bind `service` at `addr`. The returned handle carries the resolved
+    /// address (useful with port 0) and shuts the endpoint down on
+    /// request — after which calls to it fail `Unreachable`, which is
+    /// also how the sim models a server crash (re-`serve` to restart).
+    fn serve(&self, addr: &str, service: Arc<dyn Service>) -> Result<ServerHandle, TransportError>;
+
+    /// Open a connection to `addr`.
+    fn connect(&self, addr: &str) -> Result<Arc<dyn Connection>, TransportError>;
+}
+
+/// Handle to a served endpoint.
+pub struct ServerHandle {
+    addr: String,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    pub fn new(addr: String, stop: Arc<AtomicBool>) -> Self {
+        ServerHandle { addr, stop }
+    }
+
+    /// The resolved listen address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop serving. Existing connection threads wind down; new calls
+    /// fail `Unreachable`.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_shut_down(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}

@@ -1,0 +1,473 @@
+//! [`RemoteBroker`]: the [`BrokerClient`] surface over a wire connection.
+//!
+//! This is what makes node boundaries invisible to the pipeline: `vml`,
+//! both architecture runners, and the experiment harness take a
+//! [`SharedBrokerClient`](crate::messaging::client::SharedBrokerClient)
+//! and never learn whether it is the in-process [`Broker`] or this client
+//! talking to a broker process across a socket (or a simulated link).
+//!
+//! # Failure mapping
+//!
+//! The `BrokerClient` trait is infallible by design (the local broker
+//! cannot fail), so transport failures map onto the messaging layer's
+//! at-least-once semantics instead of new error surface:
+//!
+//! - **polls** that fail return an *empty batch* — the consumer simply
+//!   polls again, and nothing was advanced broker-side that a redelivery
+//!   would miss;
+//! - **commits** that fail return `false`/no-op — the uncommitted batch
+//!   redelivers, the same as a fenced commit;
+//! - **unknown-session rejections** (broker restarted) drop the session;
+//!   the next operation transparently resubscribes and resumes from the
+//!   broker's committed offsets;
+//! - **publishes** retry per [`RetryPolicy`] (duplicating a batch whose
+//!   ack was lost is legal — duplication, never loss); if every attempt
+//!   fails the client **panics**, i.e. the publishing component crashes
+//!   and supervision takes over — let-it-crash, not silent drop. Callers
+//!   that want to script around faults use the fallible `try_*` methods.
+//!
+//! [`Broker`]: crate::messaging::Broker
+
+use super::frame::{ErrorCode, Frame};
+use super::{Connection, TransportError};
+use crate::messaging::broker::PolledBatch;
+use crate::messaging::client::{BrokerClient, ConsumerClient};
+use crate::messaging::Message;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Retry budget for idempotent-enough requests (see the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts (≥ 1).
+    pub attempts: u32,
+    /// Real-time pause between attempts. Use `Duration::ZERO` on
+    /// simulated transports — virtual time does not pass while sleeping.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 3, backoff: Duration::from_millis(100) }
+    }
+}
+
+fn call_retry(
+    conn: &Arc<dyn Connection>,
+    retry: RetryPolicy,
+    req: &Frame,
+) -> Result<Frame, TransportError> {
+    let mut last = TransportError::Unreachable("no attempts".into());
+    for attempt in 0..retry.attempts.max(1) {
+        if attempt > 0 && !retry.backoff.is_zero() {
+            std::thread::sleep(retry.backoff);
+        }
+        match conn.call(req.clone()) {
+            // Rejections are deterministic — retrying cannot help.
+            Ok(Frame::Error { code, message }) => {
+                return Err(TransportError::Rejected { code, message })
+            }
+            Ok(frame) => return Ok(frame),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+fn unexpected(frame: Frame) -> TransportError {
+    TransportError::Io(format!("unexpected response frame '{}'", frame.kind_name()))
+}
+
+/// A broker on the far side of a [`Connection`].
+pub struct RemoteBroker {
+    conn: Arc<dyn Connection>,
+    retry: RetryPolicy,
+}
+
+impl RemoteBroker {
+    pub fn new(conn: Arc<dyn Connection>) -> Arc<Self> {
+        Self::with_retry(conn, RetryPolicy::default())
+    }
+
+    pub fn with_retry(conn: Arc<dyn Connection>, retry: RetryPolicy) -> Arc<Self> {
+        Arc::new(RemoteBroker { conn, retry })
+    }
+
+    /// Fallible publish, for callers that script around network faults
+    /// (the chaos tests, `rl-node` worker loops). One attempt per
+    /// [`RetryPolicy`] slot; duplicates on retried-but-applied requests
+    /// are at-least-once duplication.
+    ///
+    /// Batches whose payloads would overflow one frame are split into
+    /// several `PublishBatch` frames, sent in order — per-partition input
+    /// order is preserved across the chunks, and placements come back
+    /// concatenated in input order, exactly as one frame would. (A chunk
+    /// that fails after earlier chunks landed leaves a prefix published;
+    /// the caller's retry then duplicates that prefix — at-least-once.)
+    pub fn try_publish_batch(
+        &self,
+        topic: &str,
+        msgs: Vec<Message>,
+    ) -> Result<Vec<(usize, u64)>, TransportError> {
+        // Conservative per-message wire cost: payload + key/offsets/len
+        // headers. Budget well under MAX_FRAME so topic names and frame
+        // framing never tip a chunk over.
+        const FRAME_BUDGET: usize = super::MAX_FRAME / 2;
+        let mut placements = Vec::with_capacity(msgs.len());
+        let mut chunk: Vec<Message> = Vec::new();
+        let mut chunk_bytes = 0usize;
+        let send = |chunk: Vec<Message>| -> Result<Vec<(usize, u64)>, TransportError> {
+            let req = Frame::PublishBatch { topic: topic.to_string(), msgs: chunk };
+            match call_retry(&self.conn, self.retry, &req)? {
+                Frame::Placements { placements } => {
+                    Ok(placements.into_iter().map(|(p, o)| (p as usize, o)).collect())
+                }
+                other => Err(unexpected(other)),
+            }
+        };
+        for m in msgs {
+            let cost = m.payload.len() + 32;
+            if !chunk.is_empty() && chunk_bytes + cost > FRAME_BUDGET {
+                placements.extend(send(std::mem::take(&mut chunk))?);
+                chunk_bytes = 0;
+            }
+            chunk_bytes += cost;
+            chunk.push(m);
+        }
+        placements.extend(send(chunk)?);
+        Ok(placements)
+    }
+
+    /// Fallible topic creation.
+    pub fn try_create_topic(&self, topic: &str, partitions: usize) -> Result<(), TransportError> {
+        let req = Frame::CreateTopic { topic: topic.to_string(), partitions: partitions as u32 };
+        match call_retry(&self.conn, self.retry, &req)? {
+            Frame::Ok => Ok(()),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Fallible lag probe.
+    pub fn try_total_lag(&self) -> Result<u64, TransportError> {
+        match call_retry(&self.conn, self.retry, &Frame::TotalLag)? {
+            Frame::Lag { lag } => Ok(lag),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Fallible group-lag probe.
+    pub fn try_group_lag(&self, topic: &str, group: &str) -> Result<u64, TransportError> {
+        let req = Frame::GroupLag { topic: topic.to_string(), group: group.to_string() };
+        match call_retry(&self.conn, self.retry, &req)? {
+            Frame::Lag { lag } => Ok(lag),
+            other => Err(unexpected(other)),
+        }
+    }
+}
+
+impl BrokerClient for RemoteBroker {
+    fn create_topic(&self, topic: &str, partitions: usize) {
+        self.try_create_topic(topic, partitions)
+            .unwrap_or_else(|e| panic!("create_topic('{topic}') over transport failed: {e}"));
+    }
+
+    fn partition_count(&self, topic: &str) -> Option<usize> {
+        // `None` must mean exactly "the topic does not exist" — callers
+        // size consumer groups off it (`ReactiveJob::start`) and assert
+        // topic existence (`Producer::with_client`). Conflating an
+        // unreachable broker with a missing topic would silently
+        // mis-size a pipeline, so transport failure crashes instead
+        // (let-it-crash, same as `publish_batch`).
+        let req = Frame::PartitionCount { topic: topic.to_string() };
+        match call_retry(&self.conn, self.retry, &req) {
+            Ok(Frame::Partitions { count }) => count.map(|c| c as usize),
+            Ok(other) => panic!(
+                "partition_count('{topic}') got unexpected response '{}'",
+                other.kind_name()
+            ),
+            Err(e) => panic!("partition_count('{topic}') over transport failed: {e}"),
+        }
+    }
+
+    fn publish_batch(&self, topic: &str, msgs: Vec<Message>) -> Vec<(usize, u64)> {
+        // Let-it-crash on an exhausted retry budget: the publishing
+        // component dies loudly and supervision regenerates it, instead
+        // of silently dropping a batch.
+        self.try_publish_batch(topic, msgs)
+            .unwrap_or_else(|e| panic!("publish to '{topic}' failed after retries: {e}"))
+    }
+
+    fn subscribe(&self, topic: &str, group: &str) -> Box<dyn ConsumerClient> {
+        let consumer = RemoteConsumer {
+            conn: self.conn.clone(),
+            retry: self.retry,
+            topic: topic.to_string(),
+            group: group.to_string(),
+            session: AtomicU64::new(NO_SESSION),
+            poll_session: AtomicU64::new(NO_SESSION),
+        };
+        let _ = consumer.ensure_session(); // best effort; re-attempted per op
+        Box::new(consumer)
+    }
+
+    fn group_lag(&self, topic: &str, group: &str) -> u64 {
+        // A probe that cannot reach the broker must never read as
+        // "caught up" — the controller would scale in on a partition.
+        self.try_group_lag(topic, group).unwrap_or(u64::MAX)
+    }
+
+    fn total_lag(&self) -> u64 {
+        // Same: an unreachable broker is indistinguishable from lag, and
+        // the drain watermark must not fire on a transport fault.
+        self.try_total_lag().unwrap_or(u64::MAX)
+    }
+}
+
+const NO_SESSION: u64 = 0;
+
+/// A consumer-group membership held as a broker-side session.
+struct RemoteConsumer {
+    conn: Arc<dyn Connection>,
+    retry: RetryPolicy,
+    topic: String,
+    group: String,
+    /// Current session id; [`NO_SESSION`] when (re)subscription is due.
+    session: AtomicU64,
+    /// Session id the most recent poll ran under. Commits are fenced to
+    /// it: the broker's generation fencing only spans one broker
+    /// incarnation (a restarted broker's fresh group restarts its
+    /// generation counter), so a batch polled under a pre-restart session
+    /// must never commit through a post-restart one — that would mark
+    /// never-delivered messages consumed. Callers poll and commit from
+    /// one thread (the executor serializes consumer activations), which
+    /// is the ordering this fence assumes.
+    poll_session: AtomicU64,
+}
+
+impl RemoteConsumer {
+    /// Current session, subscribing if there is none. `None` when the
+    /// broker is unreachable — callers degrade to "nothing polled".
+    fn ensure_session(&self) -> Option<u64> {
+        let current = self.session.load(Ordering::SeqCst);
+        if current != NO_SESSION {
+            return Some(current);
+        }
+        let req =
+            Frame::Subscribe { topic: self.topic.clone(), group: self.group.clone() };
+        match call_retry(&self.conn, self.retry, &req) {
+            Ok(Frame::Subscribed { session }) => {
+                self.session.store(session, Ordering::SeqCst);
+                Some(session)
+            }
+            _ => None,
+        }
+    }
+
+    /// Forget the session (broker restarted / fenced us out); the next
+    /// operation resubscribes.
+    fn drop_session(&self) {
+        self.session.store(NO_SESSION, Ordering::SeqCst);
+    }
+
+    fn session_call(&self, req: Frame) -> Option<Frame> {
+        match call_retry(&self.conn, self.retry, &req) {
+            Ok(frame) => Some(frame),
+            Err(TransportError::Rejected { code: ErrorCode::UnknownSession, .. }) => {
+                self.drop_session();
+                None
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+impl ConsumerClient for RemoteConsumer {
+    fn assignment(&self) -> Vec<usize> {
+        let Some(session) = self.ensure_session() else { return Vec::new() };
+        match self.session_call(Frame::Assignment { session }) {
+            Some(Frame::AssignmentIs { partitions }) => {
+                partitions.into_iter().map(|p| p as usize).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    fn poll_batch(&self, max: usize) -> PolledBatch {
+        let empty =
+            PolledBatch { messages: Vec::new(), next_offsets: Vec::new(), generation: 0 };
+        let Some(session) = self.ensure_session() else { return empty };
+        self.poll_session.store(session, Ordering::SeqCst);
+        match self.session_call(Frame::PollBatch { session, max: max.min(u32::MAX as usize) as u32 })
+        {
+            Some(Frame::Batch { generation, messages, next_offsets }) => {
+                super::frame::frame_to_batch(generation, messages, next_offsets)
+            }
+            _ => empty,
+        }
+    }
+
+    fn commit(&self, partition: usize, next: u64) {
+        let Some(session) = self.ensure_session() else { return };
+        let _ = self.session_call(Frame::Commit {
+            session,
+            partition: partition as u32,
+            next,
+        });
+    }
+
+    fn commit_batch(&self, batch: &PolledBatch) -> bool {
+        if batch.next_offsets.is_empty() {
+            return true;
+        }
+        // Fence, don't resubscribe: the batch may only commit through the
+        // exact session that polled it (see `poll_session`). If the
+        // session was dropped or replaced since the poll, the batch is
+        // stale — refuse, and let the offsets redeliver.
+        let session = self.session.load(Ordering::SeqCst);
+        if session == NO_SESSION || session != self.poll_session.load(Ordering::SeqCst) {
+            return false;
+        }
+        match self.session_call(Frame::CommitBatch {
+            session,
+            generation: batch.generation,
+            next_offsets: batch.next_offsets.iter().map(|&(p, n)| (p as u32, n)).collect(),
+        }) {
+            Some(Frame::Committed { applied }) => applied,
+            _ => false,
+        }
+    }
+
+    fn close(self: Box<Self>) {
+        let session = self.session.load(Ordering::SeqCst);
+        if session != NO_SESSION {
+            let _ = call_retry(&self.conn, self.retry, &Frame::Leave { session });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::messaging::client::SharedBrokerClient;
+    use crate::messaging::Broker;
+    use crate::sim::SimScheduler;
+    use crate::transport::server::BrokerService;
+    use crate::transport::sim::SimTransport;
+    use crate::transport::Transport;
+
+    fn remote_fixture() -> (SimTransport, Arc<Broker>, Arc<RemoteBroker>) {
+        let sched = Arc::new(SimScheduler::new(1));
+        let transport = SimTransport::new(sched);
+        let broker = Broker::new();
+        transport.serve("broker", BrokerService::new(broker.clone())).unwrap();
+        let conn = transport.connect("broker").unwrap();
+        // Zero backoff: sim faults are scripted, real sleeping buys nothing.
+        let remote =
+            RemoteBroker::with_retry(conn, RetryPolicy { attempts: 1, backoff: Duration::ZERO });
+        (transport, broker, remote)
+    }
+
+    #[test]
+    fn full_client_surface_over_sim_link() {
+        let (_t, broker, remote) = remote_fixture();
+        let client: SharedBrokerClient = remote.clone();
+        client.create_topic("t", 2);
+        assert_eq!(client.partition_count("t"), Some(2));
+        assert_eq!(client.partition_count("missing"), None);
+        let placed = client
+            .publish_batch("t", (0..10u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        assert_eq!(placed.len(), 10);
+        assert_eq!(client.group_lag("t", "g"), 10);
+
+        let consumer = client.subscribe("t", "g");
+        assert_eq!(broker.group_members("t", "g"), 1, "remote subscribe joined the real group");
+        assert_eq!(consumer.assignment().len(), 2);
+        let batch = consumer.poll_batch(100);
+        assert_eq!(batch.len(), 10);
+        assert!(consumer.commit_batch(&batch));
+        assert_eq!(client.total_lag(), 0);
+        consumer.close();
+        assert_eq!(broker.group_members("t", "g"), 0, "close released the membership");
+    }
+
+    #[test]
+    fn partitioned_probes_read_as_maximal_lag_and_empty_polls() {
+        let (transport, _broker, remote) = remote_fixture();
+        let client: SharedBrokerClient = remote.clone();
+        client.create_topic("t", 1);
+        client.publish_batch("t", vec![Message::from_str("x")]);
+        let consumer = client.subscribe("t", "g");
+        transport.partition("broker", true);
+        assert_eq!(client.total_lag(), u64::MAX, "unreachable must not read as drained");
+        assert!(consumer.poll_batch(10).is_empty(), "poll degrades to empty");
+        assert!(!consumer.commit_batch(&PolledBatch {
+            messages: vec![],
+            next_offsets: vec![(0, 1)],
+            generation: 0,
+        }));
+        transport.partition("broker", false);
+        let batch = consumer.poll_batch(10);
+        assert_eq!(batch.len(), 1, "heal: everything still there (nothing was lost)");
+        assert!(consumer.commit_batch(&batch));
+        consumer.close();
+    }
+
+    #[test]
+    fn broker_restart_resubscribes_and_redelivers() {
+        let (transport, _broker, remote) = remote_fixture();
+        let client: SharedBrokerClient = remote.clone();
+        client.create_topic("t", 1);
+        client.publish_batch("t", (0..5u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        let consumer = client.subscribe("t", "g");
+        let first = consumer.poll_batch(10);
+        assert_eq!(first.len(), 5);
+        assert!(consumer.commit_batch(&first));
+
+        // "Restart" the broker: fresh broker state behind the same address.
+        let broker2 = Broker::new();
+        transport.serve("broker", BrokerService::new(broker2.clone())).unwrap();
+        broker2.create_topic("t", 1);
+        broker2
+            .topic("t")
+            .unwrap()
+            .publish_batch((5..8u8).map(|i| Message::new(None, vec![i], 0)).collect());
+
+        // The old session id is unknown to the new broker: the first poll
+        // drops the session, the next resubscribes and resumes.
+        let empty = consumer.poll_batch(10);
+        assert!(empty.is_empty(), "stale session degrades to an empty poll");
+        let redelivered = consumer.poll_batch(10);
+        assert_eq!(redelivered.len(), 3, "resubscribed against the restarted broker");
+        assert!(consumer.commit_batch(&redelivered));
+        consumer.close();
+    }
+
+    #[test]
+    fn try_publish_surfaces_faults_for_scripted_retries() {
+        let (transport, broker, remote) = remote_fixture();
+        remote.try_create_topic("t", 1).unwrap();
+        transport.drop_next("broker", 1);
+        let batch = vec![Message::from_str("will drop")];
+        assert!(remote.try_publish_batch("t", batch.clone()).is_err());
+        assert_eq!(broker.topic("t").unwrap().total_messages(), 0, "dropped, not applied");
+        assert!(remote.try_publish_batch("t", batch).is_ok());
+        assert_eq!(broker.topic("t").unwrap().total_messages(), 1);
+    }
+
+    #[test]
+    fn duplicated_publish_is_duplication_never_loss() {
+        let (transport, broker, remote) = remote_fixture();
+        remote.try_create_topic("t", 1).unwrap();
+        transport.duplicate_next("broker", 1);
+        let placed = remote.try_publish_batch("t", vec![Message::from_str("twice")]).unwrap();
+        assert_eq!(placed.len(), 1);
+        let t = broker.topic("t").unwrap();
+        assert_eq!(t.total_messages(), 2, "applied twice");
+        // Offsets stay dense — duplication never punches gaps.
+        let replay = t.read(0, 10);
+        assert_eq!(replay.len(), 2);
+        assert_eq!(replay[0].0, 0);
+        assert_eq!(replay[1].0, 1);
+    }
+}

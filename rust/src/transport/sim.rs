@@ -1,0 +1,383 @@
+//! In-memory transport with scriptable network faults, scheduled on the
+//! deterministic [`SimScheduler`].
+//!
+//! One [`SimTransport`] is a whole virtual network: endpoints are
+//! registered by address ([`Transport::serve`]) and reached by name
+//! ([`Transport::connect`]). Per-address **link fault scripts** make the
+//! network misbehave on demand, deterministically:
+//!
+//! | fault            | `call` (request/response)            | `cast` (one-way)                  |
+//! |------------------|--------------------------------------|-----------------------------------|
+//! | `partitioned`    | `Err(Unreachable)`                   | dropped silently                  |
+//! | `drop_next(n)`   | next `n` frames fail/drop            | next `n` frames dropped           |
+//! | `corrupt_next(n)`| bytes bit-flipped → `Err(Frame(_))` (the codec rejects them) | delivery dropped (peer rejects)  |
+//! | `duplicate_next(n)` | request applied **twice** at the peer | delivered twice               |
+//! | `delay`          | — (calls are instantaneous in virtual time) | delivery scheduled `delay` later |
+//!
+//! Fault counters decrement in caller order, so a single-threaded driver
+//! (the transport chaos tests) gets byte-identical behaviour run-to-run —
+//! chaos fingerprints stay comparable across processes. Serving is
+//! re-entrant with shutdown: [`ServerHandle::shutdown`] makes the address
+//! unreachable (a crashed broker), and a later `serve` on the same
+//! address restores it (a restarted broker with fresh state).
+//!
+//! Delivery of delayed casts requires the scheduler to be pumped
+//! ([`SimScheduler::run_until`]); fault-free `call`s are synchronous and
+//! need no pumping, which is what lets a real threaded pipeline run over
+//! `SimTransport` unchanged.
+
+use super::frame::Frame;
+use super::{Connection, ServerHandle, Service, Transport, TransportError};
+use crate::sim::SimScheduler;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Scriptable fault state of one link (keyed by destination address).
+#[derive(Default)]
+struct LinkFaults {
+    partitioned: bool,
+    drop_next: u32,
+    duplicate_next: u32,
+    corrupt_next: u32,
+    delay: Duration,
+    dropped: u64,
+    delivered: u64,
+}
+
+/// Delivery counters of one link (diagnostics and test probes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkStats {
+    pub dropped: u64,
+    pub delivered: u64,
+}
+
+struct Endpoint {
+    svc: Arc<dyn Service>,
+    stop: Arc<AtomicBool>,
+}
+
+struct SimNet {
+    sched: Arc<SimScheduler>,
+    services: Mutex<HashMap<String, Endpoint>>,
+    faults: Mutex<HashMap<String, LinkFaults>>,
+}
+
+enum Gate {
+    Drop,
+    Corrupt,
+    Deliver { duplicate: bool },
+}
+
+impl SimNet {
+    /// Consume fault budget for one frame toward `addr`, in caller order.
+    fn gate(&self, addr: &str) -> Gate {
+        let mut faults = self.faults.lock().unwrap();
+        let f = faults.entry(addr.to_string()).or_default();
+        if f.partitioned || f.drop_next > 0 {
+            if !f.partitioned {
+                f.drop_next -= 1;
+            }
+            f.dropped += 1;
+            return Gate::Drop;
+        }
+        if f.corrupt_next > 0 {
+            f.corrupt_next -= 1;
+            f.dropped += 1;
+            return Gate::Corrupt;
+        }
+        let duplicate = if f.duplicate_next > 0 {
+            f.duplicate_next -= 1;
+            true
+        } else {
+            false
+        };
+        f.delivered += 1;
+        Gate::Deliver { duplicate }
+    }
+
+    fn delay(&self, addr: &str) -> Duration {
+        self.faults.lock().unwrap().get(addr).map(|f| f.delay).unwrap_or(Duration::ZERO)
+    }
+
+    fn endpoint(&self, addr: &str) -> Result<(Arc<dyn Service>, Arc<AtomicBool>), TransportError> {
+        let services = self.services.lock().unwrap();
+        match services.get(addr) {
+            None => Err(TransportError::Unreachable(format!("no service at '{addr}'"))),
+            Some(ep) if ep.stop.load(Ordering::SeqCst) => {
+                Err(TransportError::Unreachable(format!("service at '{addr}' is shut down")))
+            }
+            Some(ep) => Ok((ep.svc.clone(), ep.stop.clone())),
+        }
+    }
+}
+
+/// The virtual network (cheap to clone — clones share the network).
+#[derive(Clone)]
+pub struct SimTransport {
+    net: Arc<SimNet>,
+}
+
+impl SimTransport {
+    pub fn new(sched: Arc<SimScheduler>) -> Self {
+        SimTransport {
+            net: Arc::new(SimNet {
+                sched,
+                services: Mutex::new(HashMap::new()),
+                faults: Mutex::new(HashMap::new()),
+            }),
+        }
+    }
+
+    fn with_faults(&self, addr: &str, f: impl FnOnce(&mut LinkFaults)) {
+        let mut faults = self.net.faults.lock().unwrap();
+        f(faults.entry(addr.to_string()).or_default());
+    }
+
+    /// Partition (or heal) the link toward `addr`.
+    pub fn partition(&self, addr: &str, on: bool) {
+        self.with_faults(addr, |f| f.partitioned = on);
+    }
+
+    /// Drop the next `n` frames toward `addr`.
+    pub fn drop_next(&self, addr: &str, n: u32) {
+        self.with_faults(addr, |f| f.drop_next += n);
+    }
+
+    /// Deliver the next `n` frames toward `addr` twice (duplicated in
+    /// flight — the at-least-once stressor).
+    pub fn duplicate_next(&self, addr: &str, n: u32) {
+        self.with_faults(addr, |f| f.duplicate_next += n);
+    }
+
+    /// Bit-flip the next `n` frames toward `addr` on the wire; the codec
+    /// at the receiving end rejects them (checksum/version), so they are
+    /// effectively dropped — but through the *decode* path.
+    pub fn corrupt_next(&self, addr: &str, n: u32) {
+        self.with_faults(addr, |f| f.corrupt_next += n);
+    }
+
+    /// One-way (cast) delivery latency toward `addr`, in virtual time.
+    pub fn set_delay(&self, addr: &str, d: Duration) {
+        self.with_faults(addr, |f| f.delay = d);
+    }
+
+    /// Delivered/dropped counters for the link toward `addr`.
+    pub fn link_stats(&self, addr: &str) -> LinkStats {
+        let faults = self.net.faults.lock().unwrap();
+        match faults.get(addr) {
+            Some(f) => LinkStats { dropped: f.dropped, delivered: f.delivered },
+            None => LinkStats { dropped: 0, delivered: 0 },
+        }
+    }
+}
+
+impl Transport for SimTransport {
+    fn serve(&self, addr: &str, service: Arc<dyn Service>) -> Result<ServerHandle, TransportError> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut services = self.net.services.lock().unwrap();
+        // Re-serving an address models a restart: the old endpoint (if
+        // any) is replaced wholesale.
+        services.insert(addr.to_string(), Endpoint { svc: service, stop: stop.clone() });
+        Ok(ServerHandle::new(addr.to_string(), stop))
+    }
+
+    fn connect(&self, addr: &str) -> Result<Arc<dyn Connection>, TransportError> {
+        // Connecting is lazy (like dialing a name before the peer is up);
+        // reachability is judged per call, which is what lets one
+        // connection span a simulated server restart.
+        Ok(Arc::new(SimConnection { net: self.net.clone(), addr: addr.to_string() }))
+    }
+}
+
+struct SimConnection {
+    net: Arc<SimNet>,
+    addr: String,
+}
+
+impl Connection for SimConnection {
+    fn call(&self, req: Frame) -> Result<Frame, TransportError> {
+        match self.net.gate(&self.addr) {
+            Gate::Drop => Err(TransportError::Unreachable(format!(
+                "link to '{}' dropped the frame",
+                self.addr
+            ))),
+            Gate::Corrupt => {
+                // Put the request through the real codec with one bit
+                // flipped mid-frame: the decode error the peer would
+                // produce is the error the caller sees.
+                let mut bytes = req.encode();
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x10;
+                match Frame::decode(&bytes) {
+                    Err(e) => Err(TransportError::Frame(e)),
+                    Ok(_) => Err(TransportError::Io("corrupted frame slipped the crc".into())),
+                }
+            }
+            Gate::Deliver { duplicate } => {
+                let (svc, _stop) = self.net.endpoint(&self.addr)?;
+                if duplicate {
+                    let _ = svc.handle(req.clone());
+                }
+                Ok(svc.handle(req))
+            }
+        }
+    }
+
+    fn cast(&self, msg: Frame) -> Result<(), TransportError> {
+        match self.net.gate(&self.addr) {
+            // Fire-and-forget: a dropped or corrupted cast is invisible
+            // to the sender.
+            Gate::Drop | Gate::Corrupt => Ok(()),
+            Gate::Deliver { duplicate } => {
+                let delay = self.net.delay(&self.addr);
+                let copies = if duplicate { 2 } else { 1 };
+                for _ in 0..copies {
+                    let net = self.net.clone();
+                    let addr = self.addr.clone();
+                    let msg = msg.clone();
+                    self.net.sched.schedule_after(delay, move |_| {
+                        if let Ok((svc, _)) = net.endpoint(&addr) {
+                            let _ = svc.handle(msg);
+                        }
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.addr.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::ErrorCode;
+    use std::sync::atomic::AtomicU64;
+
+    /// Echoes every request, counting them.
+    struct Echo {
+        hits: AtomicU64,
+    }
+
+    impl Service for Echo {
+        fn handle(&self, req: Frame) -> Frame {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            req
+        }
+    }
+
+    fn network() -> (SimTransport, Arc<Echo>, Arc<dyn Connection>) {
+        let sched = Arc::new(SimScheduler::new(1));
+        let t = SimTransport::new(sched);
+        let echo = Arc::new(Echo { hits: AtomicU64::new(0) });
+        t.serve("svc", echo.clone()).unwrap();
+        let conn = t.connect("svc").unwrap();
+        (t, echo, conn)
+    }
+
+    #[test]
+    fn healthy_call_round_trips() {
+        let (_t, echo, conn) = network();
+        let resp = conn.call(Frame::TotalLag).unwrap();
+        assert_eq!(resp, Frame::TotalLag);
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 1);
+        assert_eq!(conn.peer(), "svc");
+    }
+
+    #[test]
+    fn partition_drop_and_heal() {
+        let (t, echo, conn) = network();
+        t.partition("svc", true);
+        assert!(matches!(conn.call(Frame::TotalLag), Err(TransportError::Unreachable(_))));
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 0);
+        t.partition("svc", false);
+        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert_eq!(t.link_stats("svc"), LinkStats { dropped: 1, delivered: 1 });
+    }
+
+    #[test]
+    fn drop_next_counts_down() {
+        let (t, _echo, conn) = network();
+        t.drop_next("svc", 2);
+        assert!(conn.call(Frame::TotalLag).is_err());
+        assert!(conn.call(Frame::TotalLag).is_err());
+        assert!(conn.call(Frame::TotalLag).is_ok());
+    }
+
+    #[test]
+    fn corrupt_next_surfaces_a_codec_error() {
+        let (t, echo, conn) = network();
+        t.corrupt_next("svc", 1);
+        match conn.call(Frame::PartitionCount { topic: "abcdefg".into() }) {
+            Err(TransportError::Frame(_)) => {}
+            other => panic!("expected a frame error, got {other:?}"),
+        }
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 0, "corrupt frame never reaches the service");
+        assert!(conn.call(Frame::TotalLag).is_ok(), "only the next frame was corrupted");
+    }
+
+    #[test]
+    fn duplicate_next_applies_twice() {
+        let (t, echo, conn) = network();
+        t.duplicate_next("svc", 1);
+        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 2, "request applied twice");
+        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn casts_deliver_on_the_virtual_clock() {
+        let sched = Arc::new(SimScheduler::new(1));
+        let t = SimTransport::new(sched.clone());
+        let echo = Arc::new(Echo { hits: AtomicU64::new(0) });
+        t.serve("svc", echo.clone()).unwrap();
+        let conn = t.connect("svc").unwrap();
+        t.set_delay("svc", Duration::from_millis(300));
+        conn.cast(Frame::Heartbeat { node: "n".into(), seq: 1 }).unwrap();
+        sched.run_until(Duration::from_millis(299));
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 0, "still in flight");
+        sched.run_until(Duration::from_millis(300));
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 1, "arrived after the link delay");
+        // Duplicated cast: two deliveries.
+        t.duplicate_next("svc", 1);
+        conn.cast(Frame::Heartbeat { node: "n".into(), seq: 2 }).unwrap();
+        sched.run_until(Duration::from_secs(1));
+        assert_eq!(echo.hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn shutdown_and_reserve_model_a_restart() {
+        let (t, echo, conn) = network();
+        let handle = t.serve("svc", echo.clone()).unwrap();
+        assert!(conn.call(Frame::TotalLag).is_ok());
+        handle.shutdown();
+        assert!(matches!(conn.call(Frame::TotalLag), Err(TransportError::Unreachable(_))));
+        // Restart with a fresh service: the same connection works again.
+        let echo2 = Arc::new(Echo { hits: AtomicU64::new(0) });
+        t.serve("svc", echo2.clone()).unwrap();
+        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert_eq!(echo2.hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn unknown_address_unreachable() {
+        let sched = Arc::new(SimScheduler::new(1));
+        let t = SimTransport::new(sched);
+        let conn = t.connect("ghost").unwrap();
+        assert!(matches!(conn.call(Frame::TotalLag), Err(TransportError::Unreachable(_))));
+        // Casts to nowhere are silently fire-and-forget.
+        assert!(conn.cast(Frame::Heartbeat { node: "n".into(), seq: 1 }).is_ok());
+    }
+
+    #[test]
+    fn error_code_is_importable_for_matching() {
+        // Keep the ErrorCode import honest (used by downstream tests).
+        assert_ne!(ErrorCode::Generic, ErrorCode::UnknownSession);
+    }
+}

@@ -22,8 +22,8 @@
 use super::router::TaskRouter;
 use crate::actor::executor::{Executor, Poll, Poller, Registration};
 use crate::log_debug;
-use crate::messaging::broker::{Consumer, PolledBatch};
-use crate::messaging::Broker;
+use crate::messaging::broker::PolledBatch;
+use crate::messaging::client::{ConsumerClient, SharedBrokerClient};
 use crate::metrics::PipelineMetrics;
 use crate::reactive::state::OffsetStore;
 use crate::util::clock::SharedClock;
@@ -32,10 +32,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Shared wiring a virtual consumer needs.
+/// Shared wiring a virtual consumer needs. The broker is held through the
+/// [`BrokerClient`](crate::messaging::client::BrokerClient) seam, so a
+/// consumer group runs identically against the in-process broker and
+/// against a remote one behind a transport connection.
 #[derive(Clone)]
 pub struct ConsumerWiring {
-    pub broker: Arc<Broker>,
+    pub broker: SharedBrokerClient,
     pub topic: String,
     pub group: String,
     /// Consume batch size (the `n` of Equations 1–2).
@@ -51,7 +54,7 @@ pub struct ConsumerWiring {
 /// Interior consume-cycle state (touched only inside activations, which
 /// the executor serializes per consumer).
 struct VcInner {
-    consumer: Option<Consumer>,
+    consumer: Option<Box<dyn ConsumerClient>>,
     /// Batch polled but not yet committed (commit happens only after the
     /// whole batch routed).
     batch: Option<PolledBatch>,
@@ -280,11 +283,7 @@ impl VirtualConsumerGroup {
     /// `min(count, partitions)` — extra members would idle, exactly like
     /// Kafka; we cap defensively as the paper's §3.1 specifies).
     pub fn start(topic: &str, job: &str, count: usize, wiring: ConsumerWiring) -> Self {
-        let partitions = wiring
-            .broker
-            .topic(topic)
-            .map(|t| t.partition_count())
-            .unwrap_or(count.max(1));
+        let partitions = wiring.broker.partition_count(topic).unwrap_or(count.max(1));
         let count = count.min(partitions).max(1);
         let consumers = (0..count)
             .map(|i| VirtualConsumer::spawn(&format!("{topic}/{job}/vc-{i}"), wiring.clone()))
@@ -351,7 +350,7 @@ mod tests {
     use crate::actor::executor::ThreadedExecutor;
     use crate::actor::mailbox::SendError;
     use crate::config::RouterPolicy;
-    use crate::messaging::Message;
+    use crate::messaging::{Broker, Message};
     use crate::util::clock::real_clock;
     use crate::util::wait_until;
     use crate::vml::router::RouteTarget;

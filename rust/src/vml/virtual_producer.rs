@@ -19,7 +19,8 @@
 
 use crate::actor::mailbox::SendError;
 use crate::actor::system::{Actor, ActorRef, ActorSystem, Ctx};
-use crate::messaging::{Broker, Message, Producer};
+use crate::messaging::client::SharedBrokerClient;
+use crate::messaging::{Message, Producer};
 use crate::metrics::PipelineMetrics;
 use crate::reactive::elastic::ScalableTarget;
 use crate::util::clock::SharedClock;
@@ -52,7 +53,7 @@ impl Actor for ProducerWorker {
 /// Elastic pool of producer workers for one topic.
 pub struct VirtualProducerPool {
     system: Arc<ActorSystem>,
-    broker: Arc<Broker>,
+    broker: SharedBrokerClient,
     topic: String,
     clock: SharedClock,
     metrics: Arc<PipelineMetrics>,
@@ -71,7 +72,7 @@ pub struct VirtualProducerPool {
 impl VirtualProducerPool {
     pub fn start(
         system: &Arc<ActorSystem>,
-        broker: &Arc<Broker>,
+        broker: &SharedBrokerClient,
         topic: &str,
         clock: SharedClock,
         metrics: Arc<PipelineMetrics>,
@@ -107,7 +108,7 @@ impl VirtualProducerPool {
         let metrics = self.metrics.clone();
         let queued = self.queued.clone();
         self.system.spawn(&path, self.mailbox_capacity, move || ProducerWorker {
-            producer: Producer::new(&broker, &topic, clock.clone()),
+            producer: Producer::with_client(broker.clone(), &topic, clock.clone()),
             metrics: metrics.clone(),
             queued: queued.clone(),
         })
@@ -255,20 +256,25 @@ mod tests {
     use crate::util::wait_until;
     use std::time::Duration;
 
-    fn fixture(partitions: usize) -> (Arc<ActorSystem>, Arc<Broker>, Arc<PipelineMetrics>) {
+    use crate::messaging::Broker;
+
+    type Fixture = (Arc<ActorSystem>, Arc<Broker>, SharedBrokerClient, Arc<PipelineMetrics>);
+
+    fn fixture(partitions: usize) -> Fixture {
         let system = ActorSystem::new();
         let broker = Broker::new();
         broker.create_topic("out", partitions);
+        let client: SharedBrokerClient = broker.clone();
         let metrics = PipelineMetrics::new(real_clock());
-        (system, broker, metrics)
+        (system, broker, client, metrics)
     }
 
     #[test]
     fn publishes_through_workers() {
-        let (system, broker, metrics) = fixture(2);
+        let (system, broker, client, metrics) = fixture(2);
         let pool = VirtualProducerPool::start(
             &system,
-            &broker,
+            &client,
             "out",
             real_clock(),
             metrics.clone(),
@@ -288,10 +294,10 @@ mod tests {
 
     #[test]
     fn publish_batch_lands_everything() {
-        let (system, broker, metrics) = fixture(3);
+        let (system, broker, client, metrics) = fixture(3);
         let pool = VirtualProducerPool::start(
             &system,
-            &broker,
+            &client,
             "out",
             real_clock(),
             metrics.clone(),
@@ -315,9 +321,9 @@ mod tests {
 
     #[test]
     fn try_publish_batch_hands_back_when_saturated() {
-        let (system, broker, metrics) = fixture(1);
+        let (system, _broker, client, metrics) = fixture(1);
         let pool =
-            VirtualProducerPool::start(&system, &broker, "out", real_clock(), metrics, 1, 1, 1);
+            VirtualProducerPool::start(&system, &client, "out", real_clock(), metrics, 1, 1, 1);
         pool.stop_all(); // no live workers: every mailbox rejects as closed
         let batch: Vec<Message> = (0..4u8).map(|i| Message::new(None, vec![i], 0)).collect();
         let back = pool.try_publish_batch(batch).unwrap_err();
@@ -327,9 +333,9 @@ mod tests {
 
     #[test]
     fn scale_to_respects_bounds() {
-        let (system, broker, metrics) = fixture(1);
+        let (system, _broker, client, metrics) = fixture(1);
         let pool =
-            VirtualProducerPool::start(&system, &broker, "out", real_clock(), metrics, 2, 1, 4);
+            VirtualProducerPool::start(&system, &client, "out", real_clock(), metrics, 2, 1, 4);
         assert_eq!(pool.worker_count(), 2);
         pool.scale_to(100);
         assert_eq!(pool.worker_count(), 4, "clamped to max");
@@ -341,9 +347,9 @@ mod tests {
 
     #[test]
     fn scale_in_does_not_lose_messages() {
-        let (system, broker, metrics) = fixture(1);
+        let (system, broker, client, metrics) = fixture(1);
         let pool =
-            VirtualProducerPool::start(&system, &broker, "out", real_clock(), metrics, 4, 1, 4);
+            VirtualProducerPool::start(&system, &client, "out", real_clock(), metrics, 4, 1, 4);
         for i in 0..100u8 {
             pool.publish(Message::new(None, vec![i], 0));
         }

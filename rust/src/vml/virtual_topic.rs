@@ -13,7 +13,8 @@ use super::virtual_consumer::{ConsumerWiring, VirtualConsumerGroup};
 use super::virtual_producer::VirtualProducerPool;
 use super::router::TaskRouter;
 use crate::actor::system::ActorSystem;
-use crate::messaging::{Broker, Message};
+use crate::messaging::client::SharedBrokerClient;
+use crate::messaging::Message;
 use crate::metrics::PipelineMetrics;
 use crate::reactive::state::OffsetStore;
 use crate::util::clock::SharedClock;
@@ -23,7 +24,7 @@ use std::sync::{Arc, Mutex};
 /// Per-topic mediator between the messaging layer and the processing layer.
 pub struct VirtualTopic {
     pub topic: String,
-    broker: Arc<Broker>,
+    broker: SharedBrokerClient,
     system: Arc<ActorSystem>,
     clock: SharedClock,
     metrics: Arc<PipelineMetrics>,
@@ -37,7 +38,7 @@ impl VirtualTopic {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         topic: &str,
-        broker: &Arc<Broker>,
+        broker: &SharedBrokerClient,
         system: &Arc<ActorSystem>,
         clock: SharedClock,
         metrics: Arc<PipelineMetrics>,
@@ -173,15 +174,16 @@ mod tests {
 
     #[test]
     fn full_virtual_topic_round_trip() {
-        let broker = Broker::new();
+        let broker = crate::messaging::Broker::new();
         broker.create_topic("in", 3);
+        let client: SharedBrokerClient = broker.clone();
         let system = ActorSystem::new();
         let clock = real_clock();
         let metrics = PipelineMetrics::new(clock.clone());
         let offsets = Arc::new(OffsetStore::in_memory());
         let vt = VirtualTopic::new(
             "in",
-            &broker,
+            &client,
             &system,
             clock,
             metrics.clone(),

@@ -1,0 +1,238 @@
+//! Wire-codec property suite: every frame type round-trips; truncated,
+//! bit-flipped, oversized-length, and wrong-version frames are rejected
+//! as *errors* — never panics, never a partial read misinterpreted as a
+//! frame. `RL_PROPCHECK_CASES` raises the case count (the nightly CI deep
+//! job runs 2000).
+
+use reactive_liquid::messaging::message::{Message, OffsetMessage};
+use reactive_liquid::prop_assert;
+use reactive_liquid::transport::frame::crc32;
+use reactive_liquid::transport::{ErrorCode, Frame, FrameError, FLAG_NO_REPLY, MAX_FRAME, WIRE_VERSION};
+use reactive_liquid::util::propcheck::{check, Gen};
+
+fn arb_string(g: &mut Gen, max_len: usize) -> String {
+    let n = g.usize(0, max_len + 1);
+    (0..n).map(|_| char::from(b'a' + g.usize(0, 26) as u8)).collect()
+}
+
+fn arb_message(g: &mut Gen) -> Message {
+    let key = if g.bool() { Some(g.u64()) } else { None };
+    let payload = g.vec(48, |g| g.u64() as u8);
+    Message::new(key, payload, g.u64() % 1_000_000)
+}
+
+fn arb_offset_message(g: &mut Gen) -> OffsetMessage {
+    OffsetMessage {
+        partition: g.usize(0, 64),
+        offset: g.u64() % 1_000_000,
+        message: arb_message(g),
+    }
+}
+
+fn arb_pairs(g: &mut Gen) -> Vec<(u32, u64)> {
+    g.vec(8, |g| (g.u64() as u32 % 64, g.u64() % 100_000))
+}
+
+fn arb_error_code(g: &mut Gen) -> ErrorCode {
+    *g.pick(&[
+        ErrorCode::Generic,
+        ErrorCode::UnknownTopic,
+        ErrorCode::UnknownSession,
+        ErrorCode::BadRequest,
+    ])
+}
+
+/// One random frame, covering every variant.
+fn arb_frame(g: &mut Gen) -> Frame {
+    match g.usize(0, 23) {
+        0 => Frame::CreateTopic { topic: arb_string(g, 12), partitions: g.u64() as u32 % 16 + 1 },
+        1 => Frame::PublishBatch { topic: arb_string(g, 12), msgs: g.vec(6, arb_message) },
+        2 => Frame::Subscribe { topic: arb_string(g, 12), group: arb_string(g, 12) },
+        3 => Frame::PollBatch { session: g.u64(), max: g.u64() as u32 % 1024 },
+        4 => Frame::CommitBatch {
+            session: g.u64(),
+            generation: g.u64() % 1000,
+            next_offsets: arb_pairs(g),
+        },
+        5 => Frame::Commit {
+            session: g.u64(),
+            partition: g.u64() as u32 % 64,
+            next: g.u64() % 100_000,
+        },
+        6 => Frame::Assignment { session: g.u64() },
+        7 => Frame::Leave { session: g.u64() },
+        8 => Frame::GroupLag { topic: arb_string(g, 12), group: arb_string(g, 12) },
+        9 => Frame::TotalLag,
+        10 => Frame::PartitionCount { topic: arb_string(g, 12) },
+        11 => Frame::Ok,
+        12 => Frame::Placements { placements: arb_pairs(g) },
+        13 => Frame::Subscribed { session: g.u64() },
+        14 => Frame::Batch {
+            generation: g.u64() % 1000,
+            messages: g.vec(5, arb_offset_message),
+            next_offsets: arb_pairs(g),
+        },
+        15 => Frame::Committed { applied: g.bool() },
+        16 => Frame::AssignmentIs {
+            partitions: g.vec(8, |g| g.u64() as u32 % 64),
+        },
+        17 => Frame::Lag { lag: g.u64() },
+        18 => Frame::Partitions { count: if g.bool() { Some(g.u64() as u32 % 64) } else { None } },
+        19 => Frame::Error { code: arb_error_code(g), message: arb_string(g, 24) },
+        20 => Frame::Join { node: arb_string(g, 16), incarnation: g.u64() % 100 },
+        21 => Frame::LeaveNode { node: arb_string(g, 16) },
+        _ => Frame::Heartbeat { node: arb_string(g, 16), seq: g.u64() },
+    }
+}
+
+#[test]
+fn every_frame_round_trips_with_flags() {
+    check("frame-round-trip", 300, |g| {
+        let frame = arb_frame(g);
+        let flags = if g.bool() { FLAG_NO_REPLY } else { 0 };
+        let bytes = frame.encode_flags(flags);
+        match Frame::decode(&bytes) {
+            Ok((back, got_flags, used)) => {
+                prop_assert!(back == frame, "decode mismatch: {back:?} != {frame:?}");
+                prop_assert!(got_flags == flags, "flags {got_flags} != {flags}");
+                prop_assert!(used == bytes.len(), "consumed {used} of {}", bytes.len());
+                Ok(())
+            }
+            Err(e) => Err(format!("own encoding failed to decode: {e}")),
+        }
+    });
+}
+
+#[test]
+fn truncation_always_reads_as_incomplete() {
+    check("frame-truncation", 200, |g| {
+        let bytes = arb_frame(g).encode();
+        // Every cut point for small frames, a random sample for large.
+        let cuts: Vec<usize> = if bytes.len() <= 96 {
+            (0..bytes.len()).collect()
+        } else {
+            (0..96).map(|_| g.usize(0, bytes.len())).collect()
+        };
+        for cut in cuts {
+            match Frame::decode(&bytes[..cut]) {
+                Err(FrameError::Incomplete) => {}
+                other => {
+                    return Err(format!(
+                        "cut at {cut}/{} gave {other:?}, expected Incomplete",
+                        bytes.len()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn any_flipped_bit_is_rejected() {
+    check("frame-bit-flip", 300, |g| {
+        let frame = arb_frame(g);
+        let mut bytes = frame.encode();
+        let bit = g.usize(0, bytes.len() * 8);
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        match Frame::decode(&bytes) {
+            Err(_) => Ok(()), // any error is a correct rejection
+            Ok((back, _, _)) => Err(format!(
+                "flipped bit {bit} still decoded (as {}): corruption passed the codec",
+                back.kind_name()
+            )),
+        }
+    });
+}
+
+#[test]
+fn oversized_length_is_rejected_without_allocation() {
+    check("frame-oversized", 100, |g| {
+        // A length prefix past the cap, with arbitrary bytes behind it.
+        let mut bytes = ((MAX_FRAME as u32).saturating_add(1 + g.u64() as u32 % 1024))
+            .to_le_bytes()
+            .to_vec();
+        bytes.extend(g.vec(32, |g| g.u64() as u8));
+        match Frame::decode(&bytes) {
+            Err(FrameError::Oversized { len }) => {
+                prop_assert!(len > MAX_FRAME, "reported len {len}");
+                Ok(())
+            }
+            other => Err(format!("expected Oversized, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn wrong_version_is_rejected_as_version_skew() {
+    check("frame-version", 200, |g| {
+        let mut bytes = arb_frame(g).encode();
+        // Any version byte but ours, with the checksum recomputed so the
+        // *only* defect is the version.
+        let bad = {
+            let mut v = g.u64() as u8;
+            if v == WIRE_VERSION {
+                v = v.wrapping_add(1);
+            }
+            v
+        };
+        bytes[4] = bad;
+        let len = bytes.len();
+        let crc = crc32(&bytes[4..len - 4]);
+        bytes[len - 4..].copy_from_slice(&crc.to_le_bytes());
+        match Frame::decode(&bytes) {
+            Err(FrameError::BadVersion { got }) => {
+                prop_assert!(got == bad, "reported version {got}, flipped to {bad}");
+                Ok(())
+            }
+            other => Err(format!("expected BadVersion, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn random_byte_soup_never_panics() {
+    check("frame-soup", 300, |g| {
+        let soup = g.vec(256, |g| g.u64() as u8);
+        // Any result is fine — the property is "no panic, no misread of
+        // garbage as a *valid-length* frame that consumed beyond the buffer".
+        if let Ok((_, _, used)) = Frame::decode(&soup) {
+            prop_assert!(used <= soup.len(), "consumed {used} of {}", soup.len());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn streamed_frames_decode_in_order_at_any_chunking() {
+    check("frame-streaming", 150, |g| {
+        let frames: Vec<Frame> = (0..g.usize(1, 5)).map(|_| arb_frame(g)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&f.encode());
+        }
+        // Feed the stream in random chunks through the same accumulate /
+        // drain loop the TCP handler runs.
+        let mut buf: Vec<u8> = Vec::new();
+        let mut decoded = Vec::new();
+        let mut pos = 0;
+        while pos < stream.len() {
+            let take = g.usize(1, 64).min(stream.len() - pos);
+            buf.extend_from_slice(&stream[pos..pos + take]);
+            pos += take;
+            loop {
+                match Frame::decode(&buf) {
+                    Ok((f, _, used)) => {
+                        buf.drain(..used);
+                        decoded.push(f);
+                    }
+                    Err(FrameError::Incomplete) => break,
+                    Err(e) => return Err(format!("stream decode failed: {e}")),
+                }
+            }
+        }
+        prop_assert!(buf.is_empty(), "{} leftover bytes", buf.len());
+        prop_assert!(decoded == frames, "stream decoded differently");
+        Ok(())
+    });
+}

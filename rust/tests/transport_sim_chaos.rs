@@ -1,0 +1,471 @@
+//! Deterministic network-fault matrix for the transport layer, in the
+//! style of `tests/sim_chaos_matrix.rs`: every scenario runs **twice**
+//! and must produce byte-identical trace fingerprints, while its probes
+//! hold (no message loss, no offset gaps, correct φ verdicts). Faults
+//! are scripted on the [`SimTransport`] links — partition-then-heal,
+//! duplicated and corrupted publish frames, delayed heartbeats just
+//! under and just over the φ threshold — a scenario family the in-process
+//! sim matrix cannot express.
+//!
+//! With `RL_TRANSPORT_FP=<path>` set, every scenario's fingerprint is
+//! dumped to `<path>`; CI runs the suite in two separate processes and
+//! diffs the dumps to catch process-level nondeterminism.
+
+use reactive_liquid::cluster::membership::Membership;
+use reactive_liquid::messaging::client::{ConsumerClient, SharedBrokerClient};
+use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::sim::SimScheduler;
+use reactive_liquid::transport::{
+    BrokerService, Gossiper, GossipService, RemoteBroker, RetryPolicy, SimTransport, Transport,
+};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ------------------------------------------------------------ harness
+
+/// Virtual-time-stamped event trace with a byte-comparable fingerprint.
+struct TraceLog {
+    sched: Arc<SimScheduler>,
+    events: Mutex<Vec<String>>,
+}
+
+impl TraceLog {
+    fn new(sched: Arc<SimScheduler>) -> Arc<Self> {
+        Arc::new(TraceLog { sched, events: Mutex::new(Vec::new()) })
+    }
+
+    fn log(&self, event: impl Into<String>) {
+        let at = self.sched.now().as_millis();
+        self.events.lock().unwrap().push(format!("t={at:>8}ms {}", event.into()));
+    }
+
+    fn fingerprint(&self, name: &str) -> String {
+        let events = self.events.lock().unwrap();
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for line in events.iter() {
+            for &b in line.as_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            h ^= 0x0A;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        format!("{name} events={} fnv={h:016x}", events.len())
+    }
+
+    fn dump(&self) -> String {
+        self.events.lock().unwrap().join("\n")
+    }
+}
+
+/// What one scenario run produced.
+struct RunReport {
+    fingerprint: String,
+    violations: Vec<String>,
+    trace: String,
+}
+
+struct Net {
+    sched: Arc<SimScheduler>,
+    transport: SimTransport,
+    broker: Arc<Broker>,
+    remote: Arc<RemoteBroker>,
+    trace: Arc<TraceLog>,
+}
+
+/// A broker served at "broker" over a fresh simulated network. Retries
+/// are scripted by the scenarios themselves, so the client gets exactly
+/// one attempt per operation and zero real-time backoff.
+fn net(seed: u64) -> Net {
+    let sched = Arc::new(SimScheduler::new(seed));
+    let transport = SimTransport::new(sched.clone());
+    let broker = Broker::new();
+    transport.serve("broker", BrokerService::new(broker.clone())).unwrap();
+    let conn = transport.connect("broker").unwrap();
+    let remote =
+        RemoteBroker::with_retry(conn, RetryPolicy { attempts: 1, backoff: Duration::ZERO });
+    let trace = TraceLog::new(sched.clone());
+    Net { sched, transport, broker, remote, trace }
+}
+
+fn seq_of(m: &Message) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&m.payload);
+    u64::from_le_bytes(b)
+}
+
+/// A consumer handle shared between scheduled events and the driver.
+type SharedConsumer = Arc<Mutex<Box<dyn ConsumerClient>>>;
+
+// --------------------------------------- scenario: partition then heal
+
+/// Producers and a consumer drive the broker over the wire while the link
+/// partitions mid-run and heals later. Publishes during the partition
+/// fail and are retried by the driver (offsets never advance for
+/// unapplied frames), polls degrade to empty; after the heal everything
+/// published is delivered and committed — zero loss, zero gaps.
+fn partition_then_heal_run(seed: u64) -> RunReport {
+    let net = net(seed);
+    let trace = net.trace.clone();
+    net.remote.try_create_topic("t", 2).unwrap();
+    let client: SharedBrokerClient = net.remote.clone();
+    let consumer: SharedConsumer = Arc::new(Mutex::new(client.subscribe("t", "g")));
+    trace.log("subscribed t/g");
+
+    // next_seq advances only on acked publishes: a dropped frame is
+    // retried with the same ids on the next tick.
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Arc<Mutex<BTreeMap<u64, u64>>> = Arc::new(Mutex::new(BTreeMap::new()));
+    let offsets: Arc<Mutex<BTreeMap<usize, BTreeSet<u64>>>> =
+        Arc::new(Mutex::new(BTreeMap::new()));
+
+    // Producer: 5 messages every 100 ms until t = 8 s.
+    {
+        let remote = net.remote.clone();
+        let next_seq = next_seq.clone();
+        let trace = trace.clone();
+        net.sched.schedule_every(Duration::from_millis(100), move |sch| {
+            if sch.now() > Duration::from_secs(8) {
+                return;
+            }
+            let base = *next_seq.lock().unwrap();
+            let batch: Vec<Message> =
+                (base..base + 5).map(|s| Message::new(None, s.to_le_bytes().to_vec(), 0)).collect();
+            match remote.try_publish_batch("t", batch) {
+                Ok(placed) => {
+                    *next_seq.lock().unwrap() = base + 5;
+                    trace.log(format!("publish ok base={base} n={}", placed.len()));
+                }
+                Err(_) => trace.log(format!("publish dropped base={base} (will retry)")),
+            }
+        });
+    }
+
+    // Consumer: poll + commit every 150 ms.
+    {
+        let consumer = consumer.clone();
+        let seen = seen.clone();
+        let offsets = offsets.clone();
+        let trace = trace.clone();
+        net.sched.schedule_every(Duration::from_millis(150), move |_| {
+            let c = consumer.lock().unwrap();
+            let batch = c.poll_batch(16);
+            if batch.is_empty() {
+                return;
+            }
+            for om in &batch.messages {
+                *seen.lock().unwrap().entry(seq_of(&om.message)).or_insert(0) += 1;
+                offsets.lock().unwrap().entry(om.partition).or_default().insert(om.offset);
+            }
+            let applied = c.commit_batch(&batch);
+            trace.log(format!(
+                "poll n={} gen={} commit_applied={applied}",
+                batch.len(),
+                batch.generation
+            ));
+        });
+    }
+
+    // Fault script: partition at 3 s, heal at 6 s.
+    {
+        let transport = net.transport.clone();
+        let trace = trace.clone();
+        net.sched.schedule_at(Duration::from_secs(3), move |_| {
+            transport.partition("broker", true);
+            trace.log("link partitioned");
+        });
+    }
+    {
+        let transport = net.transport.clone();
+        let trace = trace.clone();
+        net.sched.schedule_at(Duration::from_secs(6), move |_| {
+            transport.partition("broker", false);
+            trace.log("link healed");
+        });
+    }
+
+    net.sched.run_until(Duration::from_secs(12));
+
+    // Drain imperatively (calls are synchronous in virtual time).
+    {
+        let c = consumer.lock().unwrap();
+        let mut empties = 0;
+        while empties < 2 {
+            let batch = c.poll_batch(64);
+            if batch.is_empty() {
+                empties += 1;
+                continue;
+            }
+            empties = 0;
+            for om in &batch.messages {
+                *seen.lock().unwrap().entry(seq_of(&om.message)).or_insert(0) += 1;
+                offsets.lock().unwrap().entry(om.partition).or_default().insert(om.offset);
+            }
+            c.commit_batch(&batch);
+        }
+    }
+    trace.log(format!("drained published={}", *next_seq.lock().unwrap()));
+
+    // Probes.
+    let mut violations = Vec::new();
+    let published = *next_seq.lock().unwrap();
+    if published == 0 {
+        violations.push("nothing was published".into());
+    }
+    let seen = seen.lock().unwrap();
+    for s in 0..published {
+        if !seen.contains_key(&s) {
+            violations.push(format!("seq {s} published+acked but never delivered"));
+        }
+    }
+    let total = net.broker.topic("t").unwrap().total_messages();
+    if total != published {
+        violations.push(format!("broker holds {total} messages, acked {published} (loss or dup)"));
+    }
+    for (p, offs) in offsets.lock().unwrap().iter() {
+        let end = offs.iter().next_back().map(|&o| o + 1).unwrap_or(0);
+        if offs.len() as u64 != end {
+            violations.push(format!("partition {p} offsets have gaps ({} of {end})", offs.len()));
+        }
+    }
+    match net.remote.try_group_lag("t", "g") {
+        Ok(0) => {}
+        Ok(lag) => violations.push(format!("group lag {lag} after drain")),
+        Err(e) => violations.push(format!("lag probe failed after heal: {e}")),
+    }
+    RunReport { fingerprint: trace.fingerprint("partition-then-heal"), violations, trace: trace.dump() }
+}
+
+// ------------------------- scenario: duplicated + corrupted publishes
+
+/// Ten publish batches; two are duplicated in flight (applied twice —
+/// at-least-once duplication) and one is corrupted in flight (rejected
+/// by the codec, retried clean). Delivery must cover every id, duplicated
+/// ids exactly twice, offsets dense — duplication and corruption never
+/// become loss or gaps.
+fn duplicate_and_corrupt_publish_run(seed: u64) -> RunReport {
+    let net = net(seed);
+    let trace = net.trace.clone();
+    net.remote.try_create_topic("t", 1).unwrap();
+    let client: SharedBrokerClient = net.remote.clone();
+    let consumer = client.subscribe("t", "g");
+    trace.log("subscribed t/g");
+
+    const BATCHES: u64 = 10;
+    const PER: u64 = 4;
+    let duplicated: BTreeSet<u64> = [3u64, 7].into_iter().collect();
+    for i in 0..BATCHES {
+        if duplicated.contains(&i) {
+            net.transport.duplicate_next("broker", 1);
+            trace.log(format!("armed duplicate for batch {i}"));
+        }
+        if i == 5 {
+            net.transport.corrupt_next("broker", 1);
+            trace.log("armed corrupt for batch 5");
+        }
+        let batch: Vec<Message> = (i * PER..(i + 1) * PER)
+            .map(|s| Message::new(None, s.to_le_bytes().to_vec(), 0))
+            .collect();
+        loop {
+            match net.remote.try_publish_batch("t", batch.clone()) {
+                Ok(placed) => {
+                    trace.log(format!("publish batch={i} first_offset={}", placed[0].1));
+                    break;
+                }
+                Err(e) => trace.log(format!("publish batch={i} rejected ({e}); retrying")),
+            }
+        }
+    }
+
+    // Drain.
+    let mut seen: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut offsets: BTreeSet<u64> = BTreeSet::new();
+    let mut empties = 0;
+    while empties < 2 {
+        let batch = consumer.poll_batch(64);
+        if batch.is_empty() {
+            empties += 1;
+            continue;
+        }
+        empties = 0;
+        for om in &batch.messages {
+            *seen.entry(seq_of(&om.message)).or_insert(0) += 1;
+            offsets.insert(om.offset);
+        }
+        consumer.commit_batch(&batch);
+    }
+    let delivered: u64 = seen.values().sum();
+    trace.log(format!("drained delivered={delivered}"));
+    consumer.close();
+
+    // Probes.
+    let mut violations = Vec::new();
+    let expected_total = (BATCHES + duplicated.len() as u64) * PER;
+    let total = net.broker.topic("t").unwrap().total_messages();
+    if total != expected_total {
+        violations.push(format!("broker holds {total}, expected {expected_total}"));
+    }
+    if offsets.len() as u64 != expected_total
+        || offsets.iter().next_back() != Some(&(expected_total - 1))
+    {
+        violations.push(format!("offsets not dense 0..{expected_total}"));
+    }
+    for s in 0..BATCHES * PER {
+        let copies = seen.get(&s).copied().unwrap_or(0);
+        let expected = if duplicated.contains(&(s / PER)) { 2 } else { 1 };
+        if copies != expected {
+            violations.push(format!("seq {s}: delivered {copies} times, expected {expected}"));
+        }
+    }
+    RunReport {
+        fingerprint: trace.fingerprint("duplicate-and-corrupt-publish"),
+        violations,
+        trace: trace.dump(),
+    }
+}
+
+// --------------------------- scenario: delayed heartbeats vs φ threshold
+
+/// Heartbeats ride the wire with 100 ms of base latency; after a steady
+/// 1 s rhythm, exactly one heartbeat is delayed by `bump`. A bump of
+/// 250 ms keeps the arrival gap under the φ=8 crossing (~1.26 s for this
+/// rhythm) — never suspected; a bump of 450 ms pushes the gap past it —
+/// suspected at a probe inside the gap, recovered on arrival.
+fn delayed_heartbeat_run(seed: u64, bump: Duration, expect_suspect: bool) -> RunReport {
+    let sched = Arc::new(SimScheduler::new(seed));
+    let transport = SimTransport::new(sched.clone());
+    let membership = Membership::new(sched.clock(), 8.0);
+    transport.serve("detector", GossipService::new(membership.clone())).unwrap();
+    let conn = transport.connect("detector").unwrap();
+    let gossiper = Gossiper::new(conn, "w1");
+    let trace = TraceLog::new(sched.clone());
+
+    transport.set_delay("detector", Duration::from_millis(100));
+    gossiper.join(1).unwrap();
+    trace.log("join cast");
+
+    // Steady 1 s heartbeats.
+    {
+        let g = gossiper.clone();
+        sched.schedule_every(Duration::from_secs(1), move |_| {
+            let _ = g.heartbeat();
+        });
+    }
+    // Bump the link delay for exactly the heartbeat sent at t = 31 s.
+    {
+        let transport = transport.clone();
+        let trace = trace.clone();
+        sched.schedule_at(Duration::from_millis(30_500), move |_| {
+            transport.set_delay("detector", bump);
+            trace.log(format!("link delay bumped to {}ms", bump.as_millis()));
+        });
+    }
+    {
+        let transport = transport.clone();
+        let trace = trace.clone();
+        sched.schedule_at(Duration::from_millis(31_500), move |_| {
+            transport.set_delay("detector", Duration::from_millis(100));
+            trace.log("link delay restored to 100ms");
+        });
+    }
+    // Probe every 50 ms; log suspicion *transitions* only.
+    let ever_suspected = Arc::new(Mutex::new(false));
+    {
+        let membership = membership.clone();
+        let trace = trace.clone();
+        let ever = ever_suspected.clone();
+        let mut last = false;
+        sched.schedule_every(Duration::from_millis(50), move |_| {
+            let now = membership.is_suspected("w1");
+            if now != last {
+                trace.log(format!("w1 suspected={} phi={:.2}", now, membership.phi("w1")));
+                if now {
+                    *ever.lock().unwrap() = true;
+                }
+                last = now;
+            }
+        });
+    }
+
+    sched.run_until(Duration::from_secs(40));
+
+    let mut violations = Vec::new();
+    let suspected = *ever_suspected.lock().unwrap();
+    if suspected != expect_suspect {
+        violations.push(format!(
+            "delay bump {}ms: suspected={suspected}, expected {expect_suspect} (phi now {:.2})",
+            bump.as_millis(),
+            membership.phi("w1")
+        ));
+    }
+    if membership.is_suspected("w1") {
+        violations.push("w1 still suspected after heartbeats resumed".into());
+    }
+    if membership.info("w1").map(|i| i.heartbeats).unwrap_or(0) < 30 {
+        violations.push("heartbeats did not flow".into());
+    }
+    let name = format!("delayed-heartbeat-{}ms", bump.as_millis());
+    RunReport { fingerprint: trace.fingerprint(&name), violations, trace: trace.dump() }
+}
+
+// ------------------------------------------------------------- matrix
+
+fn matrix() -> Vec<(&'static str, Box<dyn Fn() -> RunReport>)> {
+    vec![
+        ("partition-then-heal", Box::new(|| partition_then_heal_run(42))),
+        ("duplicate-and-corrupt-publish", Box::new(|| duplicate_and_corrupt_publish_run(7))),
+        (
+            "delayed-heartbeat-under-threshold",
+            Box::new(|| delayed_heartbeat_run(11, Duration::from_millis(250), false)),
+        ),
+        (
+            "delayed-heartbeat-over-threshold",
+            Box::new(|| delayed_heartbeat_run(11, Duration::from_millis(450), true)),
+        ),
+    ]
+}
+
+#[test]
+fn transport_chaos_matrix_passes_and_is_deterministic() {
+    for (name, run) in matrix() {
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.fingerprint, b.fingerprint,
+            "scenario '{name}' is nondeterministic\nfirst run trace:\n{}",
+            a.trace
+        );
+        assert!(
+            a.violations.is_empty(),
+            "scenario '{name}' violated probes: {:?}\ntrace:\n{}",
+            a.violations,
+            a.trace
+        );
+        assert!(b.violations.is_empty(), "second run of '{name}' diverged: {:?}", b.violations);
+    }
+}
+
+#[test]
+fn partition_window_really_dropped_and_healed() {
+    // The scenario is only meaningful if the fault window really dropped
+    // frames and the heal really restored flow.
+    let report = partition_then_heal_run(42);
+    assert!(report.violations.is_empty(), "{:?}", report.violations);
+    assert!(report.trace.contains("publish dropped"), "no publish was ever dropped:\n{}", report.trace);
+    assert!(report.trace.contains("link healed"), "heal never fired");
+    assert!(report.trace.contains("drained"), "drain never completed");
+}
+
+#[test]
+fn dump_fingerprints_for_cross_process_diff() {
+    // With RL_TRANSPORT_FP set, write every scenario fingerprint for the
+    // CI two-process diff (same pattern as the sim chaos matrix).
+    let Ok(path) = std::env::var("RL_TRANSPORT_FP") else { return };
+    let mut out = String::new();
+    for (_name, run) in matrix() {
+        out.push_str(&run().fingerprint);
+        out.push('\n');
+    }
+    std::fs::write(&path, out).expect("write transport fingerprint dump");
+}
