@@ -1,0 +1,147 @@
+//! Durability bench: what the on-disk segment log costs, per fsync
+//! policy, against the in-memory broker as the zero-persistence baseline.
+//!
+//! For each point it drives batched publishes through a 4-partition topic
+//! and reports throughput plus per-batch latency percentiles
+//! (p50/p99/p999 from `util::histogram`), then times a full recovery
+//! (reopen + segment scan) of the log it just wrote. Results land in
+//! `BENCH_durability.json` (see `util::io::bench_out_dir`) so
+//! `bench_check` can diff them against `benches/baselines/`.
+//!
+//! `RL_BENCH_SMOKE=1` shrinks the workload to a few thousand messages —
+//! enough for CI to validate the emission path, useless for numbers.
+
+use reactive_liquid::messaging::{Broker, DiskStorage, FsyncPolicy, Message, StorageConfig};
+use reactive_liquid::util::histogram::Histogram;
+use reactive_liquid::util::io::{write_bench_json, Json};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+const BATCH: usize = 64;
+const PAYLOAD: usize = 64;
+const PARTITIONS: usize = 4;
+
+struct Point {
+    name: String,
+    throughput_msgs_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    p999_us: f64,
+    /// Reopen + full segment scan of the log written above (0 when the
+    /// point has nothing to recover, i.e. the in-memory baseline).
+    recover_ms: f64,
+}
+
+/// Publish `total` messages in batches and return (throughput, latency).
+fn drive(broker: &Arc<Broker>, total: u64) -> (f64, Histogram) {
+    let topic = broker.topic("bench").unwrap();
+    let mut hist = Histogram::new();
+    let start = Instant::now();
+    let mut published = 0u64;
+    while published < total {
+        let n = BATCH.min((total - published) as usize);
+        let msgs: Vec<Message> =
+            (0..n).map(|_| Message::new(None, vec![0xAB; PAYLOAD], published)).collect();
+        let t0 = Instant::now();
+        topic.publish_batch(msgs);
+        hist.record(t0.elapsed());
+        published += n as u64;
+    }
+    (total as f64 / start.elapsed().as_secs_f64(), hist)
+}
+
+fn point_from(name: &str, throughput: f64, hist: &Histogram, recover_ms: f64) -> Point {
+    Point {
+        name: name.to_string(),
+        throughput_msgs_s: throughput,
+        p50_us: hist.quantile(0.50).as_secs_f64() * 1e6,
+        p99_us: hist.quantile(0.99).as_secs_f64() * 1e6,
+        p999_us: hist.quantile(0.999).as_secs_f64() * 1e6,
+        recover_ms,
+    }
+}
+
+fn disk_point(name: &str, fsync: FsyncPolicy, dir: &PathBuf, total: u64) -> Point {
+    std::fs::remove_dir_all(dir).ok();
+    let cfg = StorageConfig { fsync, ..StorageConfig::default() };
+    let storage = DiskStorage::open(dir, cfg).expect("open bench data dir");
+    let broker = Broker::with_storage(storage).expect("fresh dir recovers empty");
+    broker.create_topic("bench", PARTITIONS);
+    let (throughput, hist) = drive(&broker, total);
+    drop(broker); // graceful shutdown: everything synced
+
+    // Recovery cost: reopen the same directory and rebuild the log.
+    let t0 = Instant::now();
+    let storage = DiskStorage::open(dir, cfg).expect("reopen bench data dir");
+    let recovered = Broker::with_storage(storage).expect("recover bench log");
+    let recover_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(
+        recovered.topic("bench").unwrap().total_messages(),
+        total,
+        "recovery lost messages — bench aborted"
+    );
+    drop(recovered);
+    std::fs::remove_dir_all(dir).ok();
+    point_from(name, throughput, &hist, recover_ms)
+}
+
+fn main() {
+    let smoke = std::env::var("RL_BENCH_SMOKE").ok().as_deref() == Some("1");
+    let total: u64 = if smoke { 2_048 } else { 65_536 };
+    let root = std::env::temp_dir().join(format!("rl_bench_durability_{}", std::process::id()));
+
+    println!("== durability bench: {total} msgs × {PAYLOAD}B, batch={BATCH}, {PARTITIONS} partitions ==\n");
+    let mut points = Vec::new();
+
+    // Baseline: no storage attached at all.
+    {
+        let broker = Broker::new();
+        broker.create_topic("bench", PARTITIONS);
+        let (throughput, hist) = drive(&broker, total);
+        points.push(point_from("in-memory", throughput, &hist, 0.0));
+    }
+
+    // One point per fsync policy, as the acceptance bar requires.
+    for fsync in [FsyncPolicy::PerBatch, FsyncPolicy::IntervalMs(25), FsyncPolicy::Off] {
+        let name = format!("disk-{}", fsync.label());
+        points.push(disk_point(&name, fsync, &root.join(fsync.label()), total));
+    }
+    std::fs::remove_dir_all(&root).ok();
+
+    for p in &points {
+        println!(
+            "{:24} {:>12.0} msgs/s   p50 {:>8.1}µs  p99 {:>8.1}µs  p999 {:>8.1}µs  recover {:>7.1}ms",
+            p.name, p.throughput_msgs_s, p.p50_us, p.p99_us, p.p999_us, p.recover_ms
+        );
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("durability")),
+        ("smoke", Json::Bool(smoke)),
+        ("messages", Json::num(total as f64)),
+        ("batch", Json::num(BATCH as f64)),
+        ("payload_bytes", Json::num(PAYLOAD as f64)),
+        ("partitions", Json::num(PARTITIONS as f64)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::str(p.name.clone())),
+                            ("throughput_msgs_s", Json::num(p.throughput_msgs_s)),
+                            ("p50_us", Json::num(p.p50_us)),
+                            ("p99_us", Json::num(p.p99_us)),
+                            ("p999_us", Json::num(p.p999_us)),
+                            ("recover_ms", Json::num(p.recover_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = write_bench_json("durability", &json).expect("write BENCH_durability.json");
+    println!("\nwrote {}", path.display());
+}

@@ -9,15 +9,26 @@ use reactive_liquid::actor::mailbox::Mailbox;
 use reactive_liquid::config::RouterPolicy;
 use reactive_liquid::messaging::{Broker, Message};
 use reactive_liquid::tcmm::backend::{CpuBackend, NearestBackend, XlaBackend};
+use reactive_liquid::util::io::{write_bench_json, Json};
 use reactive_liquid::util::prng::Pcg32;
 use reactive_liquid::vml::envelope::Envelope;
 use reactive_liquid::vml::router::{RouteTarget, TaskRouter};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Every `bench()` result, for the `BENCH_perf_hotpath.json` emission.
+static RESULTS: Mutex<Vec<(String, f64)>> = Mutex::new(Vec::new());
+
+fn smoke() -> bool {
+    std::env::var("RL_BENCH_SMOKE").ok().as_deref() == Some("1")
+}
+
 /// Run `f` `iters` times (after a warm-up) and report+return ops/s.
+/// Under `RL_BENCH_SMOKE=1` the iteration count shrinks ~50× — fast
+/// enough for CI to validate the harness, useless for real numbers.
 fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
+    let iters = if smoke() { (iters / 50).max(100) } else { iters };
     // Warm-up.
     for _ in 0..iters / 10 + 1 {
         f();
@@ -33,6 +44,7 @@ fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
         1.0 / per,
         per * 1e6
     );
+    RESULTS.lock().unwrap().push((name.to_string(), 1.0 / per));
     1.0 / per
 }
 
@@ -205,5 +217,23 @@ fn main() {
         }
     }
 
-    println!("\nperf_hotpath done");
+    // Emit the machine-readable record alongside the human output.
+    let points: Vec<Json> = RESULTS
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(name, ops)| {
+            Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("throughput_ops_s", Json::num(*ops)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath")),
+        ("smoke", Json::Bool(smoke())),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("perf_hotpath", &json).expect("write BENCH_perf_hotpath.json");
+    println!("\nperf_hotpath done — wrote {}", path.display());
 }

@@ -1,0 +1,203 @@
+//! `bench_check` — validate emitted `BENCH_*.json` files and flag
+//! throughput regressions against the committed baselines.
+//!
+//! ```sh
+//! bench_check [--current DIR] [--baseline DIR] [--max-regression PCT]
+//! ```
+//!
+//! - `--current` defaults to the benches' output dir (`$RL_BENCH_OUT` or
+//!   `target/bench`); `--baseline` to `benches/baselines`.
+//! - Every `BENCH_*.json` in the current dir must parse and carry a
+//!   non-empty `points` array whose entries each have a `name` and at
+//!   least one finite `throughput*` metric. `BENCH_durability.json`
+//!   additionally must cover all three fsync policies — the issue's
+//!   acceptance bar.
+//! - A point whose throughput fell more than `--max-regression` percent
+//!   (default 20) below the baseline fails the check — unless the
+//!   baseline is marked `"provisional": true` (recorded on a machine
+//!   whose numbers nobody should gate on), which downgrades the failure
+//!   to a warning.
+//!
+//! Exit codes: 0 ok (warnings allowed), 1 validation failure or real
+//! regression, 2 usage error.
+
+use reactive_liquid::config::cli::Args;
+use reactive_liquid::util::io::{bench_out_dir, Json};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let mut args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let current = args.opt_str("current").map(PathBuf::from).unwrap_or_else(bench_out_dir);
+    let baseline = args
+        .opt_str("baseline")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("benches").join("baselines"));
+    let max_regression = match args.opt_or::<f64>("max-regression", 20.0) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = args.finish() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+
+    let files = match bench_files(&current) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("FAIL: cannot list {}: {e}", current.display());
+            std::process::exit(1);
+        }
+    };
+    if files.is_empty() {
+        eprintln!("FAIL: no BENCH_*.json files in {}", current.display());
+        std::process::exit(1);
+    }
+
+    let mut failures = 0u32;
+    for file in files {
+        match check_file(&file, &baseline, max_regression) {
+            Ok(notes) => {
+                println!("ok: {}", file.display());
+                for n in notes {
+                    println!("  {n}");
+                }
+            }
+            Err(why) => {
+                eprintln!("FAIL: {}: {why}", file.display());
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} bench file(s) failed");
+        std::process::exit(1);
+    }
+}
+
+fn bench_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+/// A point's comparable metrics: every finite numeric `throughput*` key.
+fn throughputs(point: &Json) -> Vec<(String, f64)> {
+    match point {
+        Json::Obj(m) => m
+            .iter()
+            .filter(|(k, _)| k.starts_with("throughput"))
+            .filter_map(|(k, v)| v.as_f64().filter(|n| n.is_finite()).map(|n| (k.clone(), n)))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Validate one result file and diff it against its baseline. Returns
+/// human-readable notes on success, the failure reason otherwise.
+fn check_file(file: &Path, baseline_dir: &Path, max_regression: f64) -> Result<Vec<String>, String> {
+    let text = std::fs::read_to_string(file).map_err(|e| format!("unreadable: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let bench = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or("missing string field 'bench'")?
+        .to_string();
+    let points = doc
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'points'")?;
+    if points.is_empty() {
+        return Err("empty 'points' array".into());
+    }
+    let mut names = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        let name = p
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("point {i}: missing 'name'"))?;
+        if throughputs(p).is_empty() {
+            return Err(format!("point '{name}': no finite throughput metric"));
+        }
+        names.push(name.to_string());
+    }
+    if bench == "durability" {
+        // The acceptance bar: one throughput point per fsync policy.
+        for required in ["disk-per-batch", "disk-interval", "disk-off"] {
+            if !names.iter().any(|n| n.starts_with(required)) {
+                return Err(format!("durability bench missing the '{required}*' policy point"));
+            }
+        }
+    }
+
+    let mut notes = Vec::new();
+    let base_path = baseline_dir.join(file.file_name().unwrap());
+    let base_text = match std::fs::read_to_string(&base_path) {
+        Ok(t) => t,
+        Err(_) => {
+            notes.push(format!("no baseline at {} — nothing to compare", base_path.display()));
+            return Ok(notes);
+        }
+    };
+    let base = Json::parse(&base_text)
+        .map_err(|e| format!("baseline {} invalid: {e}", base_path.display()))?;
+    let provisional = base.get("provisional").and_then(Json::as_bool).unwrap_or(false);
+    let base_points = base.get("points").and_then(Json::as_arr).unwrap_or(&[]);
+
+    let mut regressions = Vec::new();
+    for p in points {
+        let name = p.get("name").and_then(Json::as_str).unwrap_or_default();
+        let Some(bp) = base_points
+            .iter()
+            .find(|bp| bp.get("name").and_then(Json::as_str) == Some(name))
+        else {
+            notes.push(format!("point '{name}' has no baseline entry"));
+            continue;
+        };
+        let base_metrics = throughputs(bp);
+        for (key, cur) in throughputs(p) {
+            let Some((_, base_v)) = base_metrics.iter().find(|(k, _)| *k == key) else {
+                continue;
+            };
+            if *base_v <= 0.0 {
+                continue;
+            }
+            let delta_pct = (cur - base_v) / base_v * 100.0;
+            if delta_pct < -max_regression {
+                regressions.push(format!(
+                    "'{name}' {key}: {cur:.0} vs baseline {base_v:.0} ({delta_pct:+.1}%)"
+                ));
+            } else {
+                notes.push(format!("'{name}' {key}: {delta_pct:+.1}% vs baseline"));
+            }
+        }
+    }
+    if regressions.is_empty() {
+        return Ok(notes);
+    }
+    if provisional {
+        for r in &regressions {
+            notes.push(format!("WARN (provisional baseline): regression {r}"));
+        }
+        Ok(notes)
+    } else {
+        Err(format!(">{max_regression}% regression: {}", regressions.join("; ")))
+    }
+}

@@ -2,34 +2,40 @@
 //!
 //! Roles:
 //!
-//! - `rl-node broker --listen 127.0.0.1:7411` — serve an in-process
-//!   broker (plus gossip membership) over TCP and run until killed;
+//! - `rl-node broker --listen 127.0.0.1:7411 [--data-dir DIR]
+//!   [--fsync per-batch|interval:<ms>|off]` — serve a broker (plus
+//!   gossip membership) over TCP and run until killed. With `--data-dir`
+//!   the broker is **durable**: every partition writes through an
+//!   on-disk segment log and committed offsets checkpoint, and on boot
+//!   the broker recovers both (truncating torn tails, refusing cleanly
+//!   on corruption it cannot repair);
 //! - `rl-node worker --broker ADDR --messages N [--topic T]
-//!   [--partitions P] [--batch B] [--node-id ID]` — connect a
-//!   [`RemoteBroker`], create the topic, publish `N` messages, consume
-//!   and commit them back, print `processed=N`, exit.
+//!   [--partitions P] [--batch B] [--node-id ID] [--group G]
+//!   [--skip-publish]` — connect a [`RemoteBroker`], create the topic,
+//!   publish `N` messages (unless `--skip-publish`), consume and commit
+//!   them back in group `G`, print `processed=N`, exit.
 //!
 //! Two terminals make a real two-process pipeline:
 //!
 //! ```sh
-//! rl-node broker --listen 127.0.0.1:7411
+//! rl-node broker --listen 127.0.0.1:7411 --data-dir /var/lib/rl
 //! rl-node worker --broker 127.0.0.1:7411 --messages 500
 //! ```
 //!
 //! The worker's wire layer rides broker restarts: connections redial,
 //! publishes retry (re-creating the topic if the restarted broker lost
-//! it), and consumers resubscribe. A restart *between* worker runs is
-//! fully transparent (`tests/transport_tcp_e2e.rs` proves it with real
-//! OS processes). A restart *mid-run* reconnects too, but the broker is
-//! in-memory — messages it held are gone, so a worker that already
-//! published them reports the shortfall and exits nonzero at its
-//! deadline rather than pretending they were processed (a durable log is
-//! future work).
+//! it), and consumers resubscribe. With `--data-dir`, a `kill -9`'d and
+//! restarted broker serves every message it acknowledged before the
+//! crash from disk (`tests/transport_tcp_e2e.rs` proves it with real OS
+//! processes). Without it the broker is in-memory: a mid-run restart
+//! loses its messages, and a worker that already published them reports
+//! the shortfall and exits nonzero at its deadline rather than
+//! pretending they were processed.
 
 use reactive_liquid::cluster::membership::Membership;
 use reactive_liquid::config::cli::Args;
 use reactive_liquid::messaging::client::SharedBrokerClient;
-use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::messaging::{Broker, DiskStorage, FsyncPolicy, Message, StorageConfig};
 use reactive_liquid::transport::{
     BrokerService, Gossiper, GossipService, NodeService, RemoteBroker, TcpTransport, Transport,
 };
@@ -53,8 +59,10 @@ fn main() {
                 "rl-node — run one Reactive Liquid node role\n\n\
                  usage: rl-node <broker|worker> [options]\n\n\
                  broker  --listen ADDR            serve the broker + membership over TCP\n\
+                 \x20       [--data-dir DIR]         persist partitions + offsets, recover on boot\n\
+                 \x20       [--fsync POLICY]         per-batch (default) | interval:<ms> | off\n\
                  worker  --broker ADDR --messages N [--topic T] [--partitions P]\n\
-                 \x20       [--batch B] [--node-id ID]\n"
+                 \x20       [--batch B] [--node-id ID] [--group G] [--skip-publish]\n"
             );
             0
         }
@@ -64,11 +72,55 @@ fn main() {
 
 fn cmd_broker(mut args: Args) -> i32 {
     let listen = args.opt_str("listen").unwrap_or_else(|| "127.0.0.1:7411".to_string());
+    let data_dir = args.opt_str("data-dir");
+    let fsync = match args.opt_str("fsync") {
+        None => FsyncPolicy::PerBatch,
+        Some(s) => match FsyncPolicy::parse(&s) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
     if let Err(e) = args.finish() {
         eprintln!("{e}");
         return 2;
     }
-    let broker = Broker::new();
+    let broker = match &data_dir {
+        None => Broker::new(),
+        Some(dir) => {
+            let cfg = StorageConfig { fsync, ..StorageConfig::default() };
+            let storage = match DiskStorage::open(std::path::Path::new(dir), cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("open data dir {dir}: {e}");
+                    return 1;
+                }
+            };
+            // A recovery error means the on-disk state cannot be trusted
+            // (damage before the log tail, corrupt manifest): refuse to
+            // serve rather than start empty and silently lose data.
+            match Broker::with_storage(storage) {
+                Ok(b) => {
+                    let topics = b.topic_names();
+                    let messages: u64 =
+                        topics.iter().filter_map(|t| b.topic(t)).map(|t| t.total_messages()).sum();
+                    println!(
+                        "rl-node broker recovered {} topic(s), {} message(s) from {dir} (fsync={})",
+                        topics.len(),
+                        messages,
+                        fsync.label()
+                    );
+                    b
+                }
+                Err(e) => {
+                    eprintln!("recover {dir}: {e}");
+                    return 1;
+                }
+            }
+        }
+    };
     let membership = Membership::new(real_clock(), 8.0);
     let broker_service = BrokerService::new(broker);
     let service =
@@ -120,6 +172,8 @@ fn cmd_worker(mut args: Args) -> i32 {
     };
     let topic = args.opt_str("topic").unwrap_or_else(|| "wire-demo".to_string());
     let node_id = args.opt_str("node-id").unwrap_or_else(|| "worker".to_string());
+    let group = args.opt_str("group").unwrap_or_else(|| "workers".to_string());
+    let skip_publish = args.flag("skip-publish");
     if let Err(e) = args.finish() {
         eprintln!("{e}");
         return 2;
@@ -141,7 +195,7 @@ fn cmd_worker(mut args: Args) -> i32 {
     let stop_beats = Arc::new(AtomicBool::new(false));
     let beats = gossiper.start_heartbeats(Duration::from_millis(500), stop_beats.clone());
 
-    let code = run_pipeline(&remote, &topic, partitions, total, batch);
+    let code = run_pipeline(&remote, &topic, &group, partitions, total, batch, skip_publish);
 
     stop_beats.store(true, std::sync::atomic::Ordering::SeqCst);
     let _ = beats.join();
@@ -162,15 +216,19 @@ fn patient(deadline: Instant, what: &str, mut op: impl FnMut() -> bool) -> bool 
     }
 }
 
-/// Publish `total` messages, then consume + commit them back. Every wire
-/// operation is retried against a deadline, so a broker restart mid-run
-/// stalls progress instead of failing the worker.
+/// Publish `total` messages (unless `skip_publish` — then the broker is
+/// expected to already hold them, e.g. recovered from disk), then consume
+/// + commit them back in `group`. Every wire operation is retried against
+/// a deadline, so a broker restart mid-run stalls progress instead of
+/// failing the worker.
 fn run_pipeline(
     remote: &Arc<RemoteBroker>,
     topic: &str,
+    group: &str,
     partitions: usize,
     total: u64,
     batch: usize,
+    skip_publish: bool,
 ) -> i32 {
     let deadline = Instant::now() + Duration::from_secs(60);
 
@@ -183,7 +241,7 @@ fn run_pipeline(
     // only ever overshoots, never undershoots. An UnknownTopic rejection
     // means the broker restarted empty mid-run: re-create the topic and
     // keep going (what that broker lost is reported at the end).
-    let mut published = 0u64;
+    let mut published = if skip_publish { total } else { 0 };
     while published < total {
         let n = batch.min((total - published) as usize);
         let msgs: Vec<Message> = (0..n)
@@ -208,7 +266,7 @@ fn run_pipeline(
     // client: SharedBrokerClient surface is exactly what the pipeline
     // layers use.
     let client: SharedBrokerClient = remote.clone();
-    let consumer = client.subscribe(topic, "workers");
+    let consumer = client.subscribe(topic, group);
     let mut processed = 0u64;
     let consume_deadline = Instant::now() + Duration::from_secs(60);
     while processed < total && Instant::now() < consume_deadline {

@@ -105,6 +105,24 @@ impl Default for ElasticConfig {
     }
 }
 
+/// Broker durability: where (and whether) the messaging layer persists
+/// partitions and committed offsets, and how aggressively it fsyncs.
+/// `rl-node broker` exposes the same pair as `--data-dir` / `--fsync`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DurabilityConfig {
+    /// Data directory for the on-disk segment log; `None` = in-memory
+    /// broker (the simulation default — chaos runs stay deterministic).
+    pub data_dir: Option<String>,
+    /// When appends/checkpoints are fdatasync'd past the OS cache.
+    pub fsync: crate::messaging::storage::FsyncPolicy,
+}
+
+impl Default for DurabilityConfig {
+    fn default() -> Self {
+        DurabilityConfig { data_dir: None, fsync: crate::messaging::storage::FsyncPolicy::PerBatch }
+    }
+}
+
 /// Synthetic T-Drive workload parameters.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WorkloadConfig {
@@ -162,6 +180,7 @@ pub struct ExperimentConfig {
     /// §5 scheduler ablation uses it (a distribution scheduler only
     /// matters when tasks differ).
     pub task_speed_spread: f64,
+    pub durability: DurabilityConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -184,6 +203,7 @@ impl Default for ExperimentConfig {
             tcmm_threshold: 0.003,
             macro_period_paper_min: 5.0,
             task_speed_spread: 0.0,
+            durability: DurabilityConfig::default(),
         }
     }
 }
@@ -327,6 +347,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_float("tcmm", "macro_period_paper_min") {
             self.macro_period_paper_min = v;
         }
+        if let Some(v) = doc.get_str("durability", "data_dir") {
+            self.durability.data_dir = Some(v);
+        }
+        if let Some(v) = doc.get_str("durability", "fsync") {
+            self.durability.fsync = crate::messaging::storage::FsyncPolicy::parse(&v)?;
+        }
         Ok(())
     }
 }
@@ -381,5 +407,21 @@ mod tests {
     fn arch_labels() {
         assert_eq!(Architecture::Liquid { tasks_per_job: 3 }.label(), "liquid-3");
         assert_eq!(Architecture::Reactive.label(), "reactive");
+    }
+
+    #[test]
+    fn durability_from_toml() {
+        use crate::messaging::storage::FsyncPolicy;
+        assert_eq!(ExperimentConfig::default().durability.data_dir, None);
+        let doc = toml::parse(
+            "[durability]\ndata_dir = \"/tmp/rl-data\"\nfsync = \"interval:25\"\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.durability.data_dir.as_deref(), Some("/tmp/rl-data"));
+        assert_eq!(c.durability.fsync, FsyncPolicy::IntervalMs(25));
+        let bad = toml::parse("[durability]\nfsync = \"sometimes\"\n").unwrap();
+        assert!(ExperimentConfig::default().apply(&bad).is_err());
     }
 }

@@ -25,9 +25,18 @@
 //! each group mirrors its `committed` total into an atomic, making a lag
 //! probe O(groups) atomic loads.
 
+//!
+//! A broker opened with [`Broker::with_storage`] additionally writes
+//! every partition through a durable [`Storage`] backend and checkpoints
+//! committed offsets, recovering both on startup; `Broker::new` stays
+//! purely in-memory. The data-plane protocol is unchanged either way —
+//! persistence rides inside the partition writer mutex
+//! ([`PartitionLog::attach_store`]) and behind the commit paths.
+
 use super::group::{GroupState, MemberId};
 use super::message::{Message, OffsetMessage};
 use super::partition::PartitionLog;
+use super::storage::{Storage, StorageError};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -36,6 +45,8 @@ use std::sync::{Arc, Mutex, RwLock};
 /// committed-offset total is mirrored outside the mutex so lag probes are
 /// atomic loads, never coordinator acquisitions.
 struct GroupHandle {
+    /// The group's name, for checkpointing commits to storage.
+    name: String,
     state: Mutex<GroupState>,
     /// Sum of committed offsets across partitions (monotonic — commits
     /// never regress). `published - committed_total` is the group's lag.
@@ -43,8 +54,9 @@ struct GroupHandle {
 }
 
 impl GroupHandle {
-    fn new(partitions: usize) -> Self {
+    fn new(name: &str, partitions: usize) -> Self {
         GroupHandle {
+            name: name.to_string(),
             state: Mutex::new(GroupState::new(partitions)),
             committed_total: AtomicU64::new(0),
         }
@@ -65,6 +77,10 @@ pub struct Topic {
     /// with each group's `committed_total` this makes lag a subtraction
     /// of two atomic loads.
     published: AtomicU64,
+    /// Durable backend, when the broker was opened with one. Commits are
+    /// checkpointed through it; the partition logs write through their
+    /// attached stores independently.
+    storage: Option<Arc<dyn Storage>>,
 }
 
 impl Topic {
@@ -76,6 +92,42 @@ impl Topic {
             groups: RwLock::new(HashMap::new()),
             rr: AtomicUsize::new(0),
             published: AtomicU64::new(0),
+            storage: None,
+        }
+    }
+
+    /// Build a durable topic: open every partition's store, replay what
+    /// it recovered into the in-memory log, and attach the store so new
+    /// appends write through. Used for both fresh creation (the stores
+    /// recover nothing) and restart recovery.
+    fn recover(name: &str, partitions: usize, storage: Arc<dyn Storage>) -> Result<Self, StorageError> {
+        assert!(partitions >= 1, "topic needs >= 1 partition");
+        let mut logs = Vec::with_capacity(partitions);
+        let mut published = 0u64;
+        for p in 0..partitions {
+            let (store, recovered) = storage.open_partition(name, p)?;
+            let log = PartitionLog::new();
+            published += recovered.len() as u64;
+            log.restore(recovered);
+            log.attach_store(store);
+            logs.push(log);
+        }
+        Ok(Topic {
+            name: name.to_string(),
+            partitions: logs,
+            groups: RwLock::new(HashMap::new()),
+            rr: AtomicUsize::new(0),
+            published: AtomicU64::new(published),
+            storage: Some(storage),
+        })
+    }
+
+    /// Forward commit watermarks that actually moved to the checkpoint
+    /// store. Called outside the group lock — the store applies entries
+    /// monotonically, so a racing stale checkpoint can never regress one.
+    fn checkpoint_commits(&self, group: &str, entries: &[(usize, u64)]) {
+        if let Some(storage) = &self.storage {
+            storage.checkpoint(&self.name, group, entries);
         }
     }
 
@@ -114,7 +166,7 @@ impl Topic {
         let mut groups = self.groups.write().unwrap();
         groups
             .entry(group.to_string())
-            .or_insert_with(|| Arc::new(GroupHandle::new(self.partition_count())))
+            .or_insert_with(|| Arc::new(GroupHandle::new(group, self.partition_count())))
             .clone()
     }
 
@@ -289,6 +341,8 @@ fn shard_of(name: &str) -> usize {
 pub struct Broker {
     shards: [RwLock<HashMap<String, Arc<Topic>>>; TOPIC_SHARDS],
     next_member: AtomicU64,
+    /// Durable backend, when opened with [`Broker::with_storage`].
+    storage: Option<Arc<dyn Storage>>,
 }
 
 impl Broker {
@@ -296,24 +350,93 @@ impl Broker {
         Arc::new(Self::default())
     }
 
+    /// Open a broker on a durable [`Storage`] backend and recover
+    /// everything it persisted: topics are re-created from the manifest,
+    /// each partition replays its segment log (torn tails already
+    /// truncated by the backend), and consumer groups resume from their
+    /// checkpointed committed offsets (clamped to the recovered log end —
+    /// redelivery, never loss). Errors mean the on-disk state cannot be
+    /// trusted; the caller should refuse to serve rather than start empty.
+    pub fn with_storage(storage: Arc<dyn Storage>) -> Result<Arc<Self>, StorageError> {
+        let broker = Broker {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            next_member: AtomicU64::new(1),
+            storage: Some(storage.clone()),
+        };
+        for meta in storage.load_topics()? {
+            broker.try_create_topic(&meta.name, meta.partitions)?;
+        }
+        for c in storage.load_commits() {
+            let Some(t) = broker.topic(&c.topic) else {
+                crate::log_warn!(
+                    "storage",
+                    "checkpoint names unknown topic '{}' (group '{}'); ignored",
+                    c.topic,
+                    c.group
+                );
+                continue;
+            };
+            if c.partition >= t.partition_count() {
+                crate::log_warn!(
+                    "storage",
+                    "checkpoint for '{}' names partition {} of {}; ignored",
+                    c.topic,
+                    c.partition,
+                    t.partition_count()
+                );
+                continue;
+            }
+            // Clamp to the recovered end: a checkpoint that outran a
+            // truncated log must redeliver, not mask real lag.
+            let end = t.partitions[c.partition].end_offset();
+            let h = t.group_or_create(&c.group);
+            let delta = h.state.lock().unwrap().commit(c.partition, c.next.min(end));
+            if delta > 0 {
+                h.committed_total.fetch_add(delta, Ordering::Release);
+            }
+        }
+        Ok(Arc::new(broker))
+    }
+
     fn shard(&self, name: &str) -> &RwLock<HashMap<String, Arc<Topic>>> {
         &self.shards[shard_of(name)]
     }
 
     /// Create a topic (idempotent; partition count must match an existing
-    /// topic or the call panics — config error).
+    /// topic or the call panics — config error, as does a storage failure).
     pub fn create_topic(&self, name: &str, partitions: usize) -> Arc<Topic> {
+        self.try_create_topic(name, partitions)
+            .unwrap_or_else(|e| panic!("create topic '{name}': {e}"))
+    }
+
+    /// Fallible [`Broker::create_topic`]: durable brokers surface storage
+    /// refusals (partition-count mismatch with persisted state, damaged
+    /// segment chains) instead of panicking.
+    pub fn try_create_topic(&self, name: &str, partitions: usize) -> Result<Arc<Topic>, StorageError> {
         let mut t = self.shard(name).write().unwrap();
-        let topic = t
-            .entry(name.to_string())
-            .or_insert_with(|| Arc::new(Topic::new(name, partitions)))
-            .clone();
-        assert_eq!(
-            topic.partition_count(),
-            partitions,
-            "topic '{name}' exists with different partition count"
-        );
-        topic
+        if let Some(topic) = t.get(name) {
+            assert_eq!(
+                topic.partition_count(),
+                partitions,
+                "topic '{name}' exists with different partition count"
+            );
+            return Ok(topic.clone());
+        }
+        let topic = match &self.storage {
+            None => Arc::new(Topic::new(name, partitions)),
+            Some(storage) => {
+                storage.create_topic(name, partitions)?;
+                Arc::new(Topic::recover(name, partitions, storage.clone())?)
+            }
+        };
+        t.insert(name.to_string(), topic.clone());
+        Ok(topic)
+    }
+
+    /// The durable backend, if this broker has one (`rl-node` uses it for
+    /// a final sync on graceful shutdown).
+    pub fn storage(&self) -> Option<&Arc<dyn Storage>> {
+        self.storage.as_ref()
     }
 
     pub fn topic(&self, name: &str) -> Option<Arc<Topic>> {
@@ -557,6 +680,7 @@ impl Consumer {
         let delta = self.group.state.lock().unwrap().commit(partition, next);
         if delta > 0 {
             self.group.committed_total.fetch_add(delta, Ordering::Release);
+            self.topic.checkpoint_commits(&self.group.name, &[(partition, next)]);
         }
     }
 
@@ -572,17 +696,23 @@ impl Consumer {
             return true;
         }
         let mut delta = 0;
+        let mut moved: Vec<(usize, u64)> = Vec::new();
         {
             let mut g = self.group.state.lock().unwrap();
             if g.generation() != batch.generation {
                 return false;
             }
             for &(p, next) in &batch.next_offsets {
-                delta += g.commit(p, next);
+                let d = g.commit(p, next);
+                if d > 0 {
+                    delta += d;
+                    moved.push((p, g.committed(p)));
+                }
             }
         }
         if delta > 0 {
             self.group.committed_total.fetch_add(delta, Ordering::Release);
+            self.topic.checkpoint_commits(&self.group.name, &moved);
         }
         true
     }
@@ -590,15 +720,21 @@ impl Consumer {
     /// Commit everything consumed so far (positions → committed).
     pub fn commit_all(&self) {
         let mut delta = 0;
+        let mut moved: Vec<(usize, u64)> = Vec::new();
         {
             let mut g = self.group.state.lock().unwrap();
             for p in g.assigned(self.member).to_vec() {
                 let pos = g.position(p);
-                delta += g.commit(p, pos);
+                let d = g.commit(p, pos);
+                if d > 0 {
+                    delta += d;
+                    moved.push((p, pos));
+                }
             }
         }
         if delta > 0 {
             self.group.committed_total.fetch_add(delta, Ordering::Release);
+            self.topic.checkpoint_commits(&self.group.name, &moved);
         }
     }
 
@@ -626,6 +762,7 @@ impl Default for Broker {
         Broker {
             shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
             next_member: AtomicU64::new(1),
+            storage: None,
         }
     }
 }
@@ -937,5 +1074,129 @@ mod tests {
     fn topic_recreation_with_mismatch_panics() {
         let b = broker_with_topic(3);
         b.create_topic("t", 4);
+    }
+
+    mod durable {
+        use super::*;
+        use crate::messaging::storage::{FsyncPolicy, MemStorage, StorageConfig};
+
+        #[test]
+        fn kill_and_reopen_serves_acked_messages_and_resumes_commits() {
+            let storage = MemStorage::new(StorageConfig::default());
+            {
+                let b = Broker::with_storage(storage.clone()).unwrap();
+                b.create_topic("t", 2);
+                let t = b.topic("t").unwrap();
+                t.publish_batch((0..10u8).map(|i| Message::new(None, vec![i], 0)).collect());
+                let c = b.subscribe("t", "g");
+                let batch = c.poll_batch(6);
+                assert_eq!(batch.len(), 6);
+                assert!(c.commit_batch(&batch));
+            }
+            storage.kill();
+            let b = Broker::with_storage(storage).unwrap();
+            let t = b.topic("t").expect("topic recovered from the manifest");
+            assert_eq!(t.total_messages(), 10, "every acked message survived");
+            assert_eq!(b.group_lag("t", "g"), 4, "group resumes at its checkpoint");
+            let c = b.subscribe("t", "g");
+            let mut got = 0;
+            loop {
+                let batch = c.poll_batch(8);
+                if batch.is_empty() {
+                    break;
+                }
+                got += batch.len();
+                assert!(c.commit_batch(&batch));
+            }
+            assert_eq!(got, 4, "only the uncommitted suffix is redelivered");
+            assert_eq!(b.total_lag(), 0);
+        }
+
+        #[test]
+        fn power_loss_with_fsync_off_loses_only_unsynced_tail() {
+            let cfg = StorageConfig { fsync: FsyncPolicy::Off, ..StorageConfig::default() };
+            let storage = MemStorage::new(cfg);
+            {
+                let b = Broker::with_storage(storage.clone()).unwrap();
+                let t = b.create_topic("t", 1);
+                t.publish_batch((0..5u8).map(|i| Message::new(None, vec![i], 0)).collect());
+                storage.sync();
+                t.publish_batch((5..9u8).map(|i| Message::new(None, vec![i], 0)).collect());
+            }
+            storage.crash();
+            let b = Broker::with_storage(storage).unwrap();
+            let t = b.topic("t").unwrap();
+            assert_eq!(t.total_messages(), 5, "synced prefix survives; offsets stay dense");
+            let c = b.subscribe("t", "g");
+            let msgs = c.poll(10);
+            let payloads: Vec<u8> = msgs.iter().map(|m| m.message.payload[0]).collect();
+            assert_eq!(payloads, vec![0, 1, 2, 3, 4], "no gaps, prefix order intact");
+        }
+
+        #[test]
+        fn checkpoint_clamped_to_recovered_log_end() {
+            // Commits synced, appends not: after power loss the checkpoint
+            // can point past the recovered log. It must clamp, not mask lag.
+            let cfg = StorageConfig { fsync: FsyncPolicy::Off, ..StorageConfig::default() };
+            let storage = MemStorage::new(cfg);
+            {
+                let b = Broker::with_storage(storage.clone()).unwrap();
+                let t = b.create_topic("t", 1);
+                t.publish_batch((0..3u8).map(|i| Message::new(None, vec![i], 0)).collect());
+                storage.sync(); // 3 messages durable
+                t.publish_batch((3..8u8).map(|i| Message::new(None, vec![i], 0)).collect());
+                let c = b.subscribe("t", "g");
+                let batch = c.poll_batch(8);
+                assert_eq!(batch.len(), 8);
+                assert!(c.commit_batch(&batch));
+                // Sync ONLY the checkpoint ahead of the appends.
+                storage.checkpoint("t", "g", &[(0, 8)]);
+            }
+            // Promote commits but not the appends: model a checkpoint file
+            // that survived while tail appends did not.
+            storage.sync_commits_only_for_test();
+            storage.crash();
+            let b = Broker::with_storage(storage).unwrap();
+            assert_eq!(b.topic("t").unwrap().total_messages(), 3);
+            assert_eq!(b.committed("t", "g", 0), 3, "commit clamped to the log end");
+            assert_eq!(b.group_lag("t", "g"), 0);
+        }
+
+        #[test]
+        fn fresh_durable_broker_behaves_like_in_memory() {
+            let storage = MemStorage::new(StorageConfig::default());
+            let b = Broker::with_storage(storage).unwrap();
+            b.create_topic("t", 3);
+            let t = b.topic("t").unwrap();
+            for i in 0..30u8 {
+                t.publish(Message::new(None, vec![i], 0));
+            }
+            let c = b.subscribe("t", "g");
+            let mut got = 0;
+            loop {
+                let batch = c.poll(7);
+                if batch.is_empty() {
+                    break;
+                }
+                got += batch.len();
+            }
+            assert_eq!(got, 30);
+        }
+
+        #[test]
+        fn durable_topic_partition_mismatch_is_error_not_silent() {
+            let storage = MemStorage::new(StorageConfig::default());
+            {
+                let b = Broker::with_storage(storage.clone()).unwrap();
+                b.create_topic("t", 2);
+            }
+            storage.kill();
+            let b = Broker::with_storage(storage).unwrap();
+            // Recovery already re-created "t" with 2 partitions.
+            assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                b.create_topic("t", 3);
+            }))
+            .is_err());
+        }
     }
 }

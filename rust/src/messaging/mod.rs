@@ -66,6 +66,18 @@
 //! sweeps N producers × M consumer groups to show the multi-threaded
 //! scaling the lock split buys.
 //!
+//! # Durability
+//!
+//! A broker opened with [`Broker::with_storage`] writes every partition
+//! through a [`storage`] backend: append-only segment files sealed with
+//! the wire protocol's CRC-32, a compacted committed-offset checkpoint,
+//! and a pluggable fsync policy ([`storage::FsyncPolicy`]). On startup
+//! the backend scans its segments, truncates torn tails at the last
+//! valid CRC boundary, and the broker resumes topics and group offsets
+//! where the last acked state left them — acknowledged messages survive
+//! `kill -9` under every policy, and redelivery stays bounded by the
+//! checkpoint cadence. `Broker::new` remains purely in-memory.
+//!
 //! # The client seam
 //!
 //! Layers above the messaging layer hold the broker through
@@ -81,11 +93,13 @@ pub mod group;
 pub mod message;
 pub mod partition;
 pub mod producer;
+pub mod storage;
 
 pub use broker::Broker;
 pub use client::{BrokerClient, ConsumerClient, SharedBrokerClient};
 pub use group::MemberId;
 pub use message::Message;
 pub use producer::Producer;
+pub use storage::{DiskStorage, FsyncPolicy, MemStorage, Storage, StorageConfig, StorageError};
 
 pub use broker::{Consumer, PolledBatch};

@@ -25,8 +25,17 @@
 //! Slots at or above `tail` are only touched by the writer holding the
 //! mutex; slots below `tail` are immutable. That single invariant is what
 //! the `unsafe` blocks below rely on.
+//!
+//! # Durability hook
+//!
+//! A log may carry an attached [`PartitionStore`]. Appends then persist
+//! the batch **first** — still under the writer mutex, still before the
+//! tail publish — so disk order, memory order, and the offsets consumers
+//! are acked against are always the same sequence. A log without a store
+//! behaves exactly as before (the store check is one `OnceLock` load).
 
 use super::message::Message;
+use super::storage::PartitionStore;
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
@@ -97,18 +106,65 @@ pub struct PartitionLog {
     tail: AtomicU64,
     /// Serializes appenders (and only appenders) — never held by readers.
     writer: Mutex<()>,
+    /// Durable backing, if any. Set once during recovery wiring; appends
+    /// write through it before publishing to readers.
+    store: OnceLock<Arc<dyn PartitionStore>>,
 }
 
 impl PartitionLog {
     pub fn new() -> Self {
         let head = Arc::new(Segment::new(0));
         let tail_seg = AtomicPtr::new(Arc::as_ptr(&head) as *mut Segment);
-        PartitionLog { head, tail_seg, tail: AtomicU64::new(0), writer: Mutex::new(()) }
+        PartitionLog {
+            head,
+            tail_seg,
+            tail: AtomicU64::new(0),
+            writer: Mutex::new(()),
+            store: OnceLock::new(),
+        }
+    }
+
+    /// Attach a durable store. Called once during recovery wiring, after
+    /// [`PartitionLog::restore`] replayed the store's messages, so the
+    /// two ends must already agree — from here on every append writes
+    /// through the store before it is published.
+    pub fn attach_store(&self, store: Arc<dyn PartitionStore>) {
+        let _guard = self.writer.lock().unwrap();
+        assert_eq!(
+            store.end_offset(),
+            self.tail.load(Ordering::Relaxed),
+            "store and log must agree on the end offset before attachment"
+        );
+        assert!(self.store.set(store).is_ok(), "store attached twice");
+    }
+
+    /// Replay recovered messages into a log that has no store attached
+    /// yet (recovery only — the store already holds these records).
+    pub fn restore(&self, msgs: Vec<Message>) {
+        assert!(self.store.get().is_none(), "restore must precede attach_store");
+        if msgs.is_empty() {
+            return;
+        }
+        let _guard = self.writer.lock().unwrap();
+        let base = self.tail.load(Ordering::Relaxed);
+        let n = msgs.len() as u64;
+        self.write_slots_locked(base, msgs.into_iter());
+        self.tail.store(base + n, Ordering::Release);
     }
 
     /// Append one message, returning its offset.
     pub fn append(&self, msg: Message) -> u64 {
-        self.append_iter(std::iter::once(msg))
+        let _guard = self.writer.lock().unwrap();
+        // Only the mutex holder stores `tail`, so this read is exact.
+        let base = self.tail.load(Ordering::Relaxed);
+        if let Some(store) = self.store.get() {
+            // Persist before publish: a message a reader can see is
+            // already on disk (see the module docs).
+            store.append_batch(std::slice::from_ref(&msg));
+        }
+        self.write_slots_locked(base, std::iter::once(msg));
+        self.tail.store(base + 1, Ordering::Release);
+        base
     }
 
     /// Append a whole batch under one writer-mutex acquisition, returning
@@ -118,20 +174,26 @@ impl PartitionLog {
     /// of it. For an empty batch the current end offset is returned and
     /// nothing is written.
     pub fn append_batch(&self, msgs: Vec<Message>) -> u64 {
-        self.append_iter(msgs.into_iter())
-    }
-
-    fn append_iter<I>(&self, msgs: I) -> u64
-    where
-        I: ExactSizeIterator<Item = Message>,
-    {
-        let n = msgs.len() as u64;
         let _guard = self.writer.lock().unwrap();
-        // Only the mutex holder stores `tail`, so this read is exact.
         let base = self.tail.load(Ordering::Relaxed);
-        if n == 0 {
+        if msgs.is_empty() {
             return base;
         }
+        if let Some(store) = self.store.get() {
+            store.append_batch(&msgs);
+        }
+        let n = msgs.len() as u64;
+        self.write_slots_locked(base, msgs.into_iter());
+        self.tail.store(base + n, Ordering::Release);
+        base
+    }
+
+    /// Write `msgs` into the slots starting at `base`. Caller holds the
+    /// writer mutex and publishes the tail afterwards.
+    fn write_slots_locked<I>(&self, base: u64, msgs: I)
+    where
+        I: Iterator<Item = Message>,
+    {
         // SAFETY: `tail_seg` points into the chain owned by `self.head`,
         // and segments are never unlinked while `&self` is alive.
         let mut seg: &Segment = unsafe { &*self.tail_seg.load(Ordering::Relaxed) };
@@ -156,10 +218,9 @@ impl PartitionLog {
             unsafe { seg.slots[idx].get().write(MaybeUninit::new(msg)) };
             seg.init.store(idx + 1, Ordering::Relaxed);
         }
-        // Publish: everything written above happens-before any reader's
-        // acquire-load that observes the new tail.
-        self.tail.store(base + n, Ordering::Release);
-        base
+        // The caller's release-store of `tail` publishes these writes:
+        // everything above happens-before any reader's acquire-load that
+        // observes the new tail.
     }
 
     /// First offset *past* the log end (== number of messages).
@@ -234,6 +295,56 @@ impl Default for PartitionLog {
 mod tests {
     use super::*;
     use std::sync::Arc;
+
+    /// Records every appended message; end offset tracks the log's.
+    struct RecordingStore {
+        seen: Mutex<Vec<Message>>,
+    }
+
+    impl PartitionStore for RecordingStore {
+        fn append_batch(&self, msgs: &[Message]) {
+            self.seen.lock().unwrap().extend_from_slice(msgs);
+        }
+        fn end_offset(&self) -> u64 {
+            self.seen.lock().unwrap().len() as u64
+        }
+        fn sync(&self) {}
+    }
+
+    #[test]
+    fn attached_store_sees_every_append_in_offset_order() {
+        let log = PartitionLog::new();
+        let store = Arc::new(RecordingStore { seen: Mutex::new(Vec::new()) });
+        log.attach_store(store.clone());
+        log.append(Message::from_str("a"));
+        log.append_batch(vec![Message::from_str("b"), Message::from_str("c")]);
+        log.append_batch(Vec::new()); // empty batch never reaches the store
+        let seen = store.seen.lock().unwrap();
+        let texts: Vec<_> = seen.iter().map(|m| m.payload_str().unwrap()).collect();
+        assert_eq!(texts, ["a", "b", "c"], "store order == offset order");
+        assert_eq!(log.end_offset(), 3);
+    }
+
+    #[test]
+    fn restore_then_attach_resumes_offsets() {
+        let log = PartitionLog::new();
+        let recovered = vec![Message::from_str("r0"), Message::from_str("r1")];
+        log.restore(recovered.clone());
+        assert_eq!(log.end_offset(), 2);
+        assert_eq!(log.read(0, 10).len(), 2);
+        let store = Arc::new(RecordingStore { seen: Mutex::new(recovered) });
+        log.attach_store(store.clone());
+        assert_eq!(log.append(Message::from_str("new")), 2, "appends continue past recovery");
+        assert_eq!(store.seen.lock().unwrap().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "agree on the end offset")]
+    fn attach_store_rejects_offset_mismatch() {
+        let log = PartitionLog::new();
+        log.restore(vec![Message::from_str("x")]);
+        log.attach_store(Arc::new(RecordingStore { seen: Mutex::new(Vec::new()) }));
+    }
 
     #[test]
     fn append_assigns_dense_offsets() {

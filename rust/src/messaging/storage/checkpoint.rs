@@ -1,0 +1,383 @@
+//! Compacted, CRC-sealed tables: the consumer-offset checkpoint
+//! (`offsets.ckpt`) and the topic manifest (`topics.meta`).
+//!
+//! Both are tiny (entries, not history), so "compaction" is structural:
+//! every write rewrites the full current table — one live value per key,
+//! nothing to replay — via the classic atomic pattern: write `<file>.tmp`,
+//! optionally fdatasync, then `rename` over the live file. A reader (or a
+//! recovering broker) therefore sees either the old table or the new one,
+//! never a torn mix; a crash mid-write leaves at most a stale `.tmp` that
+//! the next write overwrites.
+//!
+//! # Sealed-table layout (little-endian)
+//!
+//! | bytes | field                            |
+//! |-------|----------------------------------|
+//! | 8     | magic (`RLCKPT1\n` / `RLMETA1\n`)|
+//! | n     | body (table-specific)            |
+//! | 4     | CRC-32 over magic + body         |
+//!
+//! Checkpoint body: `count u32`, then per entry `topic str16`,
+//! `group str16`, `partition u32`, `next u64`. Manifest body: `count u32`,
+//! then per entry `name str16`, `dir str16`, `partitions u32`. (`str16` =
+//! u16 length + UTF-8 bytes, the wire protocol's string form.)
+
+use super::StorageError;
+use crate::util::crc::crc32;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+pub const CKPT_MAGIC: &[u8; 8] = b"RLCKPT1\n";
+pub const META_MAGIC: &[u8; 8] = b"RLMETA1\n";
+
+/// Ceiling on either table file — far above any real table, low enough
+/// that a corrupt length field can never drive a huge allocation.
+const MAX_TABLE: u64 = 64 * 1024 * 1024;
+
+// ------------------------------------------------------------ seal/unseal
+
+/// Atomically replace `path` with `magic + body + crc`.
+pub fn write_sealed(path: &Path, magic: &[u8; 8], body: &[u8], fsync: bool) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(8 + body.len() + 4);
+    buf.extend_from_slice(magic);
+    buf.extend_from_slice(body);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        if fsync {
+            f.sync_data()?;
+        }
+    }
+    std::fs::rename(&tmp, path)?;
+    if fsync {
+        // Make the rename itself durable (fsync the parent directory).
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read and verify a sealed table. `Ok(None)` when the file does not
+/// exist; `Err(Corrupt)` when it exists but fails the magic/CRC/size
+/// checks; `Ok(Some(body))` otherwise.
+pub fn read_sealed(path: &Path, magic: &[u8; 8]) -> Result<Option<Vec<u8>>, StorageError> {
+    let meta = match std::fs::metadata(path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(StorageError::Io(e)),
+        Ok(m) => m,
+    };
+    if meta.len() > MAX_TABLE {
+        return Err(StorageError::Corrupt(format!(
+            "{}: {} bytes exceeds the table ceiling",
+            path.display(),
+            meta.len()
+        )));
+    }
+    let bytes = std::fs::read(path).map_err(StorageError::Io)?;
+    if bytes.len() < 12 || &bytes[0..8] != magic {
+        return Err(StorageError::Corrupt(format!("{}: bad table magic", path.display())));
+    }
+    let split = bytes.len() - 4;
+    let stored = u32::from_le_bytes(bytes[split..].try_into().unwrap());
+    if crc32(&bytes[..split]) != stored {
+        return Err(StorageError::Corrupt(format!("{}: table CRC mismatch", path.display())));
+    }
+    Ok(Some(bytes[8..split].to_vec()))
+}
+
+// ----------------------------------------------------------- body codecs
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize, "table string too long");
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(buf: &[u8], at: &mut usize) -> Result<String, StorageError> {
+    let malformed = || StorageError::Corrupt("malformed table body".to_string());
+    if buf.len() < *at + 2 {
+        return Err(malformed());
+    }
+    let len = u16::from_le_bytes(buf[*at..*at + 2].try_into().unwrap()) as usize;
+    *at += 2;
+    if buf.len() < *at + len {
+        return Err(malformed());
+    }
+    let s = std::str::from_utf8(&buf[*at..*at + len]).map_err(|_| malformed())?.to_string();
+    *at += len;
+    Ok(s)
+}
+
+fn get_u32(buf: &[u8], at: &mut usize) -> Result<u32, StorageError> {
+    if buf.len() < *at + 4 {
+        return Err(StorageError::Corrupt("malformed table body".to_string()));
+    }
+    let v = u32::from_le_bytes(buf[*at..*at + 4].try_into().unwrap());
+    *at += 4;
+    Ok(v)
+}
+
+fn get_u64(buf: &[u8], at: &mut usize) -> Result<u64, StorageError> {
+    if buf.len() < *at + 8 {
+        return Err(StorageError::Corrupt("malformed table body".to_string()));
+    }
+    let v = u64::from_le_bytes(buf[*at..*at + 8].try_into().unwrap());
+    *at += 8;
+    Ok(v)
+}
+
+/// The committed-offsets table: `(topic, group, partition) → next offset`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CheckpointTable {
+    pub entries: BTreeMap<(String, String, u32), u64>,
+}
+
+impl CheckpointTable {
+    /// Apply one commit, keeping the table monotonic per key (a racing
+    /// stale writer can never regress a newer commit). Returns whether
+    /// the table changed.
+    pub fn apply(&mut self, topic: &str, group: &str, partition: u32, next: u64) -> bool {
+        let key = (topic.to_string(), group.to_string(), partition);
+        match self.entries.get(&key) {
+            Some(&cur) if cur >= next => false,
+            _ => {
+                self.entries.insert(key, next);
+                true
+            }
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for ((topic, group, partition), next) in &self.entries {
+            put_str(&mut out, topic);
+            put_str(&mut out, group);
+            out.extend_from_slice(&partition.to_le_bytes());
+            out.extend_from_slice(&next.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<CheckpointTable, StorageError> {
+        let mut at = 0;
+        let count = get_u32(body, &mut at)?;
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let topic = get_str(body, &mut at)?;
+            let group = get_str(body, &mut at)?;
+            let partition = get_u32(body, &mut at)?;
+            let next = get_u64(body, &mut at)?;
+            entries.insert((topic, group, partition), next);
+        }
+        if at != body.len() {
+            return Err(StorageError::Corrupt("trailing bytes after checkpoint table".into()));
+        }
+        Ok(CheckpointTable { entries })
+    }
+
+    /// Load from disk. Missing file → empty table. A corrupt file is an
+    /// error so the *caller* chooses the policy (the broker warns and
+    /// redelivers from zero — at-least-once allows it; losing commits is
+    /// redelivery, losing data would be loss).
+    pub fn load(path: &Path) -> Result<CheckpointTable, StorageError> {
+        match read_sealed(path, CKPT_MAGIC)? {
+            None => Ok(CheckpointTable::default()),
+            Some(body) => Self::decode(&body),
+        }
+    }
+
+    pub fn store(&self, path: &Path, fsync: bool) -> std::io::Result<()> {
+        write_sealed(path, CKPT_MAGIC, &self.encode(), fsync)
+    }
+}
+
+/// The topic manifest: `name → (directory, partitions)`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Manifest {
+    pub topics: BTreeMap<String, (String, u32)>,
+}
+
+impl Manifest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.topics.len() as u32).to_le_bytes());
+        for (name, (dir, partitions)) in &self.topics {
+            put_str(&mut out, name);
+            put_str(&mut out, dir);
+            out.extend_from_slice(&partitions.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Manifest, StorageError> {
+        let mut at = 0;
+        let count = get_u32(body, &mut at)?;
+        let mut topics = BTreeMap::new();
+        for _ in 0..count {
+            let name = get_str(body, &mut at)?;
+            let dir = get_str(body, &mut at)?;
+            let partitions = get_u32(body, &mut at)?;
+            if partitions == 0 {
+                return Err(StorageError::Corrupt(format!(
+                    "manifest topic '{name}' claims zero partitions"
+                )));
+            }
+            topics.insert(name, (dir, partitions));
+        }
+        if at != body.len() {
+            return Err(StorageError::Corrupt("trailing bytes after manifest".into()));
+        }
+        Ok(Manifest { topics })
+    }
+
+    /// Load from disk; missing file → empty manifest; corrupt file →
+    /// error (the broker **refuses** to start on a bad manifest — unlike
+    /// commits, guessing here could resurrect wrong topology).
+    pub fn load(path: &Path) -> Result<Manifest, StorageError> {
+        match read_sealed(path, META_MAGIC)? {
+            None => Ok(Manifest::default()),
+            Some(body) => Self::decode(&body),
+        }
+    }
+
+    pub fn store(&self, path: &Path) -> std::io::Result<()> {
+        // The manifest is rewritten only on topic creation; always fsync.
+        write_sealed(path, META_MAGIC, &self.encode(), true)
+    }
+}
+
+/// Directory name for a topic: a sanitized, length-capped prefix of the
+/// name plus an FNV-1a hash of the full name, so any two distinct topic
+/// names map to distinct directories regardless of what characters or
+/// lengths the names use.
+pub fn topic_dir_name(name: &str) -> String {
+    let safe: String = name
+        .chars()
+        .take(32)
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
+        .collect();
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{safe}-{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("rl_ckpt_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn checkpoint_round_trip_and_monotonicity() {
+        let dir = tmp("rt");
+        let path = dir.join("offsets.ckpt");
+        let mut t = CheckpointTable::default();
+        assert!(t.apply("orders", "workers", 0, 10));
+        assert!(t.apply("orders", "workers", 1, 4));
+        assert!(t.apply("clicks", "audit", 0, 99));
+        assert!(!t.apply("orders", "workers", 0, 7), "stale commit ignored");
+        assert!(!t.apply("orders", "workers", 0, 10), "equal commit is a no-op");
+        assert!(t.apply("orders", "workers", 0, 11));
+        t.store(&path, true).unwrap();
+        let back = CheckpointTable::load(&path).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.entries[&("orders".into(), "workers".into(), 0)], 11);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_files_load_empty() {
+        let dir = tmp("missing");
+        assert_eq!(CheckpointTable::load(&dir.join("none.ckpt")).unwrap(), Default::default());
+        assert_eq!(Manifest::load(&dir.join("none.meta")).unwrap(), Default::default());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_tables_are_errors_not_panics() {
+        let dir = tmp("corrupt");
+        let path = dir.join("offsets.ckpt");
+        let mut t = CheckpointTable::default();
+        t.apply("a", "g", 0, 5);
+        t.store(&path, false).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Flip every byte in turn: every variant must error cleanly.
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x55;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(CheckpointTable::load(&path).is_err(), "flip at byte {i} accepted");
+        }
+        // Truncations too.
+        for cut in 0..good.len() {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(CheckpointTable::load(&path).is_err(), "cut at {cut} accepted");
+        }
+        // Arbitrary garbage.
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(CheckpointTable::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_round_trip_and_zero_partitions_rejected() {
+        let dir = tmp("manifest");
+        let path = dir.join("topics.meta");
+        let mut m = Manifest::default();
+        m.topics.insert("orders".into(), (topic_dir_name("orders"), 4));
+        m.topics.insert("weird/topic name".into(), (topic_dir_name("weird/topic name"), 1));
+        m.store(&path).unwrap();
+        let back = Manifest::load(&path).unwrap();
+        assert_eq!(back, m);
+
+        let mut zero = Manifest::default();
+        zero.topics.insert("z".into(), ("z-0".into(), 0));
+        // Hand-encode with zero partitions: decode must reject.
+        assert!(Manifest::decode(&zero.encode()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_rewrite_leaves_no_tmp_visible() {
+        let dir = tmp("atomic");
+        let path = dir.join("offsets.ckpt");
+        let mut t = CheckpointTable::default();
+        for i in 0..50u32 {
+            t.apply("t", "g", i % 4, i as u64);
+            t.store(&path, false).unwrap();
+            assert!(CheckpointTable::load(&path).is_ok(), "live file always valid");
+        }
+        assert!(!path.with_extension("tmp").exists(), "tmp renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn topic_dir_names_distinct_and_safe() {
+        let a = topic_dir_name("orders");
+        let b = topic_dir_name("orders2");
+        assert_ne!(a, b);
+        let weird = topic_dir_name("../../etc/passwd");
+        assert!(!weird.contains('/'), "path separators sanitized: {weird}");
+        // Same 32-char prefix, different tails: hash disambiguates.
+        let long_a = topic_dir_name(&format!("{}{}", "x".repeat(32), "a"));
+        let long_b = topic_dir_name(&format!("{}{}", "x".repeat(32), "b"));
+        assert_ne!(long_a, long_b);
+    }
+}

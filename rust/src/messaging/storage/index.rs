@@ -1,0 +1,214 @@
+//! Sparse offset index sidecar (`<base>.idx`, next to its `.seg`).
+//!
+//! # Layout (little-endian)
+//!
+//! | bytes | field                                         |
+//! |-------|-----------------------------------------------|
+//! | 8     | magic `RLIDX01\n`                             |
+//! | 8     | segment base offset                           |
+//! | 4     | CRC-32 over magic + base                      |
+//! | 12·k  | entries: `rel` u32 (offset − base), `pos` u64 |
+//!
+//! One entry is written every `index_every` records, so a seek to offset
+//! `o` starts scanning at most `index_every − 1` records before it
+//! instead of at the segment head.
+//!
+//! The index is **advisory and never trusted**: [`load`] validates the
+//! header, entry alignment, monotonicity and position bounds, and returns
+//! `None` on *any* anomaly — readers then fall back to a full scan from
+//! the segment header. A torn entry at the tail (the writer died
+//! mid-append) silently drops the partial entry, because losing index
+//! density costs a longer scan, never correctness.
+
+use crate::util::crc::crc32;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub const IDX_MAGIC: &[u8; 8] = b"RLIDX01\n";
+pub const IDX_HEADER: usize = 20;
+pub const IDX_ENTRY: usize = 12;
+
+fn header_bytes(base: u64) -> [u8; IDX_HEADER] {
+    let mut h = [0u8; IDX_HEADER];
+    h[0..8].copy_from_slice(IDX_MAGIC);
+    h[8..16].copy_from_slice(&base.to_le_bytes());
+    let crc = crc32(&h[0..16]);
+    h[16..20].copy_from_slice(&crc.to_le_bytes());
+    h
+}
+
+/// Incremental index writer for the segment currently being appended.
+pub struct IndexWriter {
+    w: BufWriter<File>,
+}
+
+impl IndexWriter {
+    /// Create (truncating any stale file) with a fresh header.
+    pub fn create(path: &Path, base: u64) -> std::io::Result<IndexWriter> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(&header_bytes(base))?;
+        w.flush()?;
+        Ok(IndexWriter { w })
+    }
+
+    /// Open for appending more entries after recovery rewrote the file.
+    pub fn append_to(path: &Path) -> std::io::Result<IndexWriter> {
+        let f = std::fs::OpenOptions::new().append(true).open(path)?;
+        Ok(IndexWriter { w: BufWriter::new(f) })
+    }
+
+    pub fn push(&mut self, rel: u32, pos: u64) -> std::io::Result<()> {
+        self.w.write_all(&rel.to_le_bytes())?;
+        self.w.write_all(&pos.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Rewrite the whole index from scratch (recovery after a truncation).
+pub fn rewrite(path: &Path, base: u64, entries: &[(u32, u64)]) -> std::io::Result<IndexWriter> {
+    let mut w = IndexWriter::create(path, base)?;
+    for &(rel, pos) in entries {
+        w.push(rel, pos)?;
+    }
+    w.flush()?;
+    Ok(w)
+}
+
+/// Load and validate the index for a segment with base `expected_base`
+/// whose data file is `seg_len` bytes. Returns `None` — scan from the
+/// header instead — on any anomaly.
+pub fn load(path: &Path, expected_base: u64, seg_len: u64) -> Option<Vec<(u32, u64)>> {
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() < IDX_HEADER {
+        return None;
+    }
+    if &bytes[0..8] != IDX_MAGIC {
+        return None;
+    }
+    let base = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let stored = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    if base != expected_base || crc32(&bytes[0..16]) != stored {
+        return None;
+    }
+    // Whole entries only; a torn trailing entry is dropped.
+    let body = &bytes[IDX_HEADER..];
+    let whole = body.len() / IDX_ENTRY;
+    let mut entries = Vec::with_capacity(whole);
+    let mut prev_rel: i64 = -1;
+    let mut prev_pos: u64 = 0;
+    for i in 0..whole {
+        let at = i * IDX_ENTRY;
+        let rel = u32::from_le_bytes(body[at..at + 4].try_into().unwrap());
+        let pos = u64::from_le_bytes(body[at + 4..at + 12].try_into().unwrap());
+        // Entries must advance in both coordinates and point inside the
+        // segment's data region; anything else means the file is not an
+        // index for this segment.
+        if (rel as i64) <= prev_rel || (i > 0 && pos <= prev_pos) {
+            return None;
+        }
+        if pos < super::segment::SEG_HEADER as u64 || pos >= seg_len {
+            return None;
+        }
+        prev_rel = rel as i64;
+        prev_pos = pos;
+        entries.push((rel, pos));
+    }
+    Some(entries)
+}
+
+/// Greatest entry at or below `rel`, or the segment-header start when the
+/// index has nothing that early.
+pub fn lookup(entries: &[(u32, u64)], rel: u32) -> (u32, u64) {
+    let mut best = (0u32, super::segment::SEG_HEADER as u64);
+    for &(r, p) in entries {
+        if r <= rel {
+            best = (r, p);
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("rl_idx_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("0.idx")
+    }
+
+    #[test]
+    fn round_trip_and_lookup() {
+        let path = tmp("rt");
+        let mut w = IndexWriter::create(&path, 100).unwrap();
+        w.push(0, 20).unwrap();
+        w.push(64, 5000).unwrap();
+        w.push(128, 11000).unwrap();
+        w.flush().unwrap();
+        let entries = load(&path, 100, 20_000).expect("valid index");
+        assert_eq!(entries, vec![(0, 20), (64, 5000), (128, 11000)]);
+        assert_eq!(lookup(&entries, 0), (0, 20));
+        assert_eq!(lookup(&entries, 63), (0, 20));
+        assert_eq!(lookup(&entries, 64), (64, 5000));
+        assert_eq!(lookup(&entries, 1000), (128, 11000));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_base_or_magic_discarded() {
+        let path = tmp("base");
+        let mut w = IndexWriter::create(&path, 7).unwrap();
+        w.push(0, 20).unwrap();
+        w.flush().unwrap();
+        assert!(load(&path, 8, 1000).is_none(), "base mismatch");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path, 7, 1000).is_none(), "bad magic");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_entry_dropped_not_fatal() {
+        let path = tmp("torn");
+        let mut w = IndexWriter::create(&path, 0).unwrap();
+        w.push(0, 20).unwrap();
+        w.push(64, 900).unwrap();
+        w.flush().unwrap();
+        drop(w);
+        // Tear the last entry in half.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let entries = load(&path, 0, 10_000).expect("prefix still valid");
+        assert_eq!(entries, vec![(0, 20)]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_monotonic_or_out_of_range_discarded() {
+        let path = tmp("mono");
+        let mut w = IndexWriter::create(&path, 0).unwrap();
+        w.push(64, 900).unwrap();
+        w.push(32, 1200).unwrap(); // rel regresses
+        w.flush().unwrap();
+        assert!(load(&path, 0, 10_000).is_none());
+        let mut w = IndexWriter::create(&path, 0).unwrap();
+        w.push(0, 99_999).unwrap(); // pos past the segment
+        w.flush().unwrap();
+        assert!(load(&path, 0, 10_000).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        assert!(load(Path::new("/nonexistent/rl.idx"), 0, 10).is_none());
+    }
+}

@@ -1,0 +1,248 @@
+//! [`MemStorage`]: an in-process [`Storage`] backend for deterministic
+//! crash simulation.
+//!
+//! It models exactly the durability contract the disk backend provides,
+//! without files or threads, so property tests can run thousands of
+//! kill-at-arbitrary-point loops per second with reproducible seeds:
+//!
+//! - every append lands in `live` immediately (the disk backend's
+//!   user-space flush — survives process death);
+//! - `durable_len` trails `live` until a sync (the fdatasync boundary —
+//!   survives power loss);
+//! - [`MemStorage::crash`] simulates power loss: the un-synced suffix of
+//!   every partition and any un-synced checkpoint update vanish;
+//!   [`MemStorage::kill`] simulates `kill -9`: flushed data survives,
+//!   only the policy-deferred checkpoint writes can lag.
+//!
+//! Under [`FsyncPolicy::PerBatch`] the two lengths never diverge, which
+//! is the invariant the zero-acked-loss property asserts. No background
+//! flusher thread exists here — `IntervalMs` simply behaves like `Off`
+//! until someone calls [`Storage::sync`], keeping chaos fingerprints
+//! deterministic.
+
+use super::{CommitEntry, FsyncPolicy, PartitionStore, Storage, StorageConfig, StorageError, TopicMeta};
+use crate::messaging::message::Message;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// In-memory storage with an explicit durable/volatile boundary.
+pub struct MemStorage {
+    cfg: StorageConfig,
+    inner: Mutex<MemInner>,
+}
+
+#[derive(Default)]
+struct MemInner {
+    topics: BTreeMap<String, u32>,
+    parts: BTreeMap<(String, usize), Arc<MemPartitionStore>>,
+    /// Synced (power-loss durable) committed offsets.
+    durable_commits: BTreeMap<(String, String, u32), u64>,
+    /// Latest committed offsets, possibly not yet "synced".
+    live_commits: BTreeMap<(String, String, u32), u64>,
+}
+
+impl MemStorage {
+    pub fn new(cfg: StorageConfig) -> Arc<MemStorage> {
+        Arc::new(MemStorage { cfg, inner: Mutex::new(MemInner::default()) })
+    }
+
+    /// Simulate power loss: every un-synced suffix disappears. The
+    /// storage can then be re-opened by a fresh broker via
+    /// [`crate::messaging::Broker::with_storage`].
+    pub fn crash(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for part in inner.parts.values() {
+            part.drop_unsynced();
+        }
+        inner.live_commits = inner.durable_commits.clone();
+    }
+
+    /// Simulate `kill -9`: flushed appends survive (they always do — the
+    /// disk backend flushes per batch under every policy); commits that
+    /// the policy deferred are promoted too, because the disk backend's
+    /// `Drop` does not run on SIGKILL but its non-deferred checkpoint
+    /// writes already hit the file. Only `IntervalMs`/`Off` commit
+    /// deferral is lost.
+    pub fn kill(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for part in inner.parts.values() {
+            part.promote_all();
+        }
+        if self.cfg.fsync == FsyncPolicy::PerBatch {
+            inner.durable_commits = inner.live_commits.clone();
+        }
+        inner.live_commits = inner.durable_commits.clone();
+    }
+
+    /// Test hook: promote only the commit table to durable, leaving
+    /// partition appends volatile — models a checkpoint file that
+    /// survived a power loss whose tail appends did not (the recovery
+    /// path must clamp such commits to the recovered log end).
+    pub fn sync_commits_only_for_test(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.durable_commits = inner.live_commits.clone();
+    }
+
+    /// Messages that would survive a crash right now, for assertions.
+    pub fn durable_messages(&self, topic: &str, partition: usize) -> Vec<Message> {
+        let inner = self.inner.lock().unwrap();
+        match inner.parts.get(&(topic.to_string(), partition)) {
+            Some(p) => p.durable_snapshot(),
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Storage for MemStorage {
+    fn policy(&self) -> FsyncPolicy {
+        self.cfg.fsync
+    }
+
+    fn load_topics(&self) -> Result<Vec<TopicMeta>, StorageError> {
+        let inner = self.inner.lock().unwrap();
+        Ok(inner
+            .topics
+            .iter()
+            .map(|(name, partitions)| TopicMeta { name: name.clone(), partitions: *partitions as usize })
+            .collect())
+    }
+
+    fn create_topic(&self, name: &str, partitions: usize) -> Result<(), StorageError> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.topics.get(name) {
+            Some(existing) if *existing as usize != partitions => Err(StorageError::Corrupt(format!(
+                "topic '{name}' persisted with {existing} partitions, asked for {partitions}"
+            ))),
+            Some(_) => Ok(()),
+            None => {
+                inner.topics.insert(name.to_string(), partitions as u32);
+                Ok(())
+            }
+        }
+    }
+
+    fn open_partition(
+        &self,
+        topic: &str,
+        partition: usize,
+    ) -> Result<(Arc<dyn PartitionStore>, Vec<Message>), StorageError> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.topics.contains_key(topic) {
+            return Err(StorageError::Corrupt(format!("topic '{topic}' not in the manifest")));
+        }
+        let part = inner
+            .parts
+            .entry((topic.to_string(), partition))
+            .or_insert_with(|| {
+                Arc::new(MemPartitionStore {
+                    per_batch: self.cfg.fsync == FsyncPolicy::PerBatch,
+                    inner: Mutex::new(MemPartInner::default()),
+                    end: AtomicU64::new(0),
+                })
+            })
+            .clone();
+        let recovered = part.durable_snapshot();
+        // Re-opening after a crash: the volatile suffix is already gone
+        // (crash() dropped it); after kill() everything was promoted.
+        part.reset_to_durable();
+        Ok((part, recovered))
+    }
+
+    fn load_commits(&self) -> Vec<CommitEntry> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .durable_commits
+            .iter()
+            .map(|((topic, group, partition), next)| CommitEntry {
+                topic: topic.clone(),
+                group: group.clone(),
+                partition: *partition as usize,
+                next: *next,
+            })
+            .collect()
+    }
+
+    fn checkpoint(&self, topic: &str, group: &str, entries: &[(usize, u64)]) {
+        let mut inner = self.inner.lock().unwrap();
+        for &(partition, next) in entries {
+            let key = (topic.to_string(), group.to_string(), partition as u32);
+            let live = inner.live_commits.entry(key.clone()).or_insert(0);
+            if next > *live {
+                *live = next;
+            }
+            if self.cfg.fsync == FsyncPolicy::PerBatch {
+                let durable = inner.durable_commits.entry(key).or_insert(0);
+                if next > *durable {
+                    *durable = next;
+                }
+            }
+        }
+    }
+
+    fn sync(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for part in inner.parts.values() {
+            part.promote_all();
+        }
+        inner.durable_commits = inner.live_commits.clone();
+    }
+}
+
+/// One partition's append log with a durable/volatile watermark.
+pub struct MemPartitionStore {
+    per_batch: bool,
+    inner: Mutex<MemPartInner>,
+    end: AtomicU64,
+}
+
+#[derive(Default)]
+struct MemPartInner {
+    messages: Vec<Message>,
+    durable_len: usize,
+}
+
+impl MemPartitionStore {
+    fn durable_snapshot(&self) -> Vec<Message> {
+        let inner = self.inner.lock().unwrap();
+        inner.messages[..inner.durable_len].to_vec()
+    }
+
+    fn drop_unsynced(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let durable = inner.durable_len;
+        inner.messages.truncate(durable);
+        self.end.store(durable as u64, Ordering::Release);
+    }
+
+    fn promote_all(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.durable_len = inner.messages.len();
+    }
+
+    fn reset_to_durable(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let durable = inner.durable_len;
+        inner.messages.truncate(durable);
+        self.end.store(durable as u64, Ordering::Release);
+    }
+}
+
+impl PartitionStore for MemPartitionStore {
+    fn append_batch(&self, msgs: &[Message]) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.messages.extend_from_slice(msgs);
+        if self.per_batch {
+            inner.durable_len = inner.messages.len();
+        }
+        self.end.store(inner.messages.len() as u64, Ordering::Release);
+    }
+
+    fn end_offset(&self) -> u64 {
+        self.end.load(Ordering::Acquire)
+    }
+
+    fn sync(&self) {
+        self.promote_all();
+    }
+}

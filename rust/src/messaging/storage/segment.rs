@@ -1,0 +1,531 @@
+//! Segment files: the append-only on-disk form of one partition log.
+//!
+//! A partition directory holds a chain of segment files named by the
+//! offset of their first record — `00000000000000000000.seg`,
+//! `00000000000000004096.seg`, … — each with a sparse `.idx` sidecar
+//! ([`super::index`]). A segment starts with a 20-byte header and is
+//! followed by CRC-sealed records ([`super::record`]):
+//!
+//! | bytes | field                         |
+//! |-------|-------------------------------|
+//! | 8     | magic `RLSEG01\n`             |
+//! | 8     | base offset (u64 LE)          |
+//! | 4     | CRC-32 over magic + base      |
+//!
+//! # Recovery contract
+//!
+//! [`scan`] walks a segment from the header and stops at the first byte
+//! run that fails to decode, reporting the valid prefix (its messages,
+//! its byte length, and the per-record positions for index rebuilds) plus
+//! a description of the damage. The *caller* decides what the damage
+//! means: in the chain's **last** segment it is a torn tail — truncate to
+//! the valid prefix and keep appending — while in any earlier segment it
+//! would create an offset gap, so recovery refuses to open the partition.
+
+use super::index::{self, IndexWriter};
+use super::record::{self, RecordError};
+use super::StorageError;
+use crate::messaging::message::Message;
+use crate::util::crc::crc32;
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+pub const SEG_MAGIC: &[u8; 8] = b"RLSEG01\n";
+pub const SEG_HEADER: usize = 20;
+
+/// Data-file name for a segment starting at `base`. Zero-padded so the
+/// lexicographic directory order is the offset order.
+pub fn seg_file_name(base: u64) -> String {
+    format!("{base:020}.seg")
+}
+
+pub fn idx_file_name(base: u64) -> String {
+    format!("{base:020}.idx")
+}
+
+/// Base offset encoded in a segment file name, if it is one.
+pub fn parse_seg_file_name(name: &str) -> Option<u64> {
+    let stem = name.strip_suffix(".seg")?;
+    if stem.len() != 20 || !stem.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    stem.parse().ok()
+}
+
+pub fn header_bytes(base: u64) -> [u8; SEG_HEADER] {
+    let mut h = [0u8; SEG_HEADER];
+    h[0..8].copy_from_slice(SEG_MAGIC);
+    h[8..16].copy_from_slice(&base.to_le_bytes());
+    let crc = crc32(&h[0..16]);
+    h[16..20].copy_from_slice(&crc.to_le_bytes());
+    h
+}
+
+/// Validate a segment header against the base its file name promises.
+fn check_header(buf: &[u8], expected_base: u64) -> Result<(), String> {
+    if buf.len() < SEG_HEADER {
+        return Err(format!("header truncated at {} bytes", buf.len()));
+    }
+    if &buf[0..8] != SEG_MAGIC {
+        return Err("bad segment magic".to_string());
+    }
+    let base = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let stored = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+    if crc32(&buf[0..16]) != stored {
+        return Err("segment header CRC mismatch".to_string());
+    }
+    if base != expected_base {
+        return Err(format!("segment header base {base} != expected {expected_base}"));
+    }
+    Ok(())
+}
+
+/// Everything [`scan`] learned about one segment file.
+pub struct ScanOutcome {
+    /// Messages of the valid prefix, in offset order.
+    pub messages: Vec<Message>,
+    /// Byte length of the valid prefix (header + intact records). Zero
+    /// when the header itself is damaged.
+    pub valid_len: u64,
+    /// Byte position of each valid record (for index rebuilds).
+    pub positions: Vec<u64>,
+    /// Why the scan stopped early, when the file does not end exactly at
+    /// a record boundary.
+    pub damage: Option<String>,
+}
+
+/// Scan a whole segment file, tolerating any tail damage.
+pub fn scan(path: &Path, expected_base: u64) -> Result<ScanOutcome, StorageError> {
+    let bytes = std::fs::read(path).map_err(StorageError::Io)?;
+    if let Err(why) = check_header(&bytes, expected_base) {
+        return Ok(ScanOutcome {
+            messages: Vec::new(),
+            valid_len: 0,
+            positions: Vec::new(),
+            damage: Some(format!("{}: {why}", path.display())),
+        });
+    }
+    let mut messages = Vec::new();
+    let mut positions = Vec::new();
+    let mut at = SEG_HEADER;
+    let mut damage = None;
+    while at < bytes.len() {
+        match record::decode(&bytes[at..]) {
+            Ok((msg, used)) => {
+                positions.push(at as u64);
+                messages.push(msg);
+                at += used;
+            }
+            Err(RecordError::Truncated) => {
+                damage = Some(format!(
+                    "{}: torn record at byte {at} ({} trailing bytes)",
+                    path.display(),
+                    bytes.len() - at
+                ));
+                break;
+            }
+            Err(RecordError::Corrupt(why)) => {
+                damage = Some(format!("{}: corrupt record at byte {at}: {why}", path.display()));
+                break;
+            }
+        }
+    }
+    Ok(ScanOutcome { messages, valid_len: at as u64, positions, damage })
+}
+
+/// Read up to `max` `(offset, message)` pairs starting at offset `from`,
+/// seeking via the sparse index when it validates and falling back to a
+/// header scan when it does not. Tail damage silently ends the read (only
+/// the intact prefix is served) — recovery, not the read path, repairs
+/// files.
+pub fn read_from(
+    dir: &Path,
+    base: u64,
+    from: u64,
+    max: usize,
+) -> Result<Vec<(u64, Message)>, StorageError> {
+    let seg_path = dir.join(seg_file_name(base));
+    let seg_len = std::fs::metadata(&seg_path).map_err(StorageError::Io)?.len();
+    let mut f = File::open(&seg_path).map_err(StorageError::Io)?;
+    let mut hdr = [0u8; SEG_HEADER];
+    if f.read_exact(&mut hdr).is_err() || check_header(&hdr, base).is_err() {
+        return Err(StorageError::Corrupt(format!(
+            "{}: unreadable segment header",
+            seg_path.display()
+        )));
+    }
+    let rel_target = from.saturating_sub(base).min(u32::MAX as u64) as u32;
+    let idx_entries =
+        index::load(&dir.join(idx_file_name(base)), base, seg_len).unwrap_or_default();
+    let (start_rel, start_pos) = index::lookup(&idx_entries, rel_target);
+
+    // Trust-but-verify: if the very first record at the indexed position
+    // fails to decode, the index lied — retry with a scan from the
+    // header (the index is advisory, never load-bearing).
+    match read_records(&mut f, base, start_rel as u64, start_pos, from, max) {
+        Ok(out) => Ok(out),
+        Err(()) if start_pos != SEG_HEADER as u64 => {
+            read_records(&mut f, base, 0, SEG_HEADER as u64, from, max)
+                .or(Ok(Vec::new()))
+        }
+        Err(()) => Ok(Vec::new()),
+    }
+}
+
+/// Inner streaming read starting at byte `pos`, which should hold record
+/// `base + rel`. `Err(())` means the **first** record at `pos` failed to
+/// decode (an untrustworthy seek position); a failure after at least one
+/// good record is tail damage and cleanly ends the read.
+fn read_records(
+    f: &mut File,
+    base: u64,
+    mut rel: u64,
+    pos: u64,
+    from: u64,
+    max: usize,
+) -> Result<Vec<(u64, Message)>, ()> {
+    if f.seek(SeekFrom::Start(pos)).is_err() {
+        return Err(());
+    }
+    let mut out = Vec::new();
+    let mut first = true;
+    loop {
+        if out.len() >= max {
+            return Ok(out);
+        }
+        let decoded = (|| {
+            let mut head = [0u8; record::RECORD_HEADER];
+            f.read_exact(&mut head).ok()?;
+            let len = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
+            if !(record::MIN_BODY..=record::MAX_BODY).contains(&len) {
+                return None;
+            }
+            let stored = u32::from_le_bytes(head[4..8].try_into().unwrap());
+            let mut body = vec![0u8; len];
+            f.read_exact(&mut body).ok()?;
+            if crc32(&body) != stored {
+                return None;
+            }
+            record::decode_body(&body).ok()
+        })();
+        match decoded {
+            Some(msg) => {
+                let off = base + rel;
+                if off >= from {
+                    out.push((off, msg));
+                }
+                rel += 1;
+                first = false;
+            }
+            // Clean EOF, torn tail, or a bad seek target.
+            None if first => return Err(()),
+            None => return Ok(out),
+        }
+    }
+}
+
+/// Append side of one segment file (plus its index sidecar).
+pub struct SegmentWriter {
+    file: BufWriter<File>,
+    base: u64,
+    records: u64,
+    bytes: u64,
+    index: IndexWriter,
+    /// Record count at the last index entry (next entry once
+    /// `records - last_indexed >= index_every`).
+    last_indexed: u64,
+    index_every: u64,
+    scratch: Vec<u8>,
+}
+
+impl SegmentWriter {
+    /// Create a fresh segment starting at offset `base` in `dir`.
+    pub fn create(dir: &Path, base: u64, index_every: u64) -> std::io::Result<SegmentWriter> {
+        let mut file = BufWriter::new(File::create(dir.join(seg_file_name(base)))?);
+        file.write_all(&header_bytes(base))?;
+        file.flush()?;
+        file.get_ref().sync_data()?;
+        let index = IndexWriter::create(&dir.join(idx_file_name(base)), base)?;
+        Ok(SegmentWriter {
+            file,
+            base,
+            records: 0,
+            bytes: SEG_HEADER as u64,
+            index,
+            last_indexed: 0,
+            index_every: index_every.max(1),
+            scratch: Vec::with_capacity(4096),
+        })
+    }
+
+    /// Reopen a recovered segment for appending after `records` intact
+    /// records occupying `valid_len` bytes (recovery already truncated
+    /// any damage and rewrote the index).
+    pub fn open_end(
+        dir: &Path,
+        base: u64,
+        valid_len: u64,
+        records: u64,
+        index_every: u64,
+    ) -> std::io::Result<SegmentWriter> {
+        let f = std::fs::OpenOptions::new().append(true).open(dir.join(seg_file_name(base)))?;
+        debug_assert_eq!(f.metadata()?.len(), valid_len);
+        let index = IndexWriter::append_to(&dir.join(idx_file_name(base)))?;
+        Ok(SegmentWriter {
+            file: BufWriter::new(f),
+            base,
+            records,
+            bytes: valid_len,
+            index,
+            // Treat the reopen point as indexed so the stride resumes
+            // cleanly; entries need not be evenly spaced to be useful.
+            last_indexed: records,
+            index_every: index_every.max(1),
+            scratch: Vec::with_capacity(4096),
+        })
+    }
+
+    /// Append one message (buffered — call [`SegmentWriter::flush`] or
+    /// [`SegmentWriter::sync`] to push it down).
+    pub fn append(&mut self, msg: &Message) -> std::io::Result<()> {
+        if self.records == 0 || self.records - self.last_indexed >= self.index_every {
+            // Index entry points at the record about to be written.
+            self.index.push((self.records).min(u32::MAX as u64) as u32, self.bytes)?;
+            self.last_indexed = self.records;
+        }
+        self.scratch.clear();
+        let used = record::encode_into(&mut self.scratch, msg);
+        self.file.write_all(&self.scratch)?;
+        self.bytes += used as u64;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Push buffered bytes to the OS (kill -9 durable; not power-loss
+    /// durable until [`SegmentWriter::sync`]).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.file.flush()?;
+        self.index.flush()
+    }
+
+    /// Flush and fdatasync the data file (the index is advisory and is
+    /// deliberately not fsynced — losing it costs a scan, not data).
+    pub fn sync(&mut self) -> std::io::Result<()> {
+        self.flush()?;
+        self.file.get_ref().sync_data()
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Offset the next append will receive.
+    pub fn end_offset(&self) -> u64 {
+        self.base + self.records
+    }
+
+    pub fn len_bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// Truncate a damaged segment to its valid prefix and rebuild its index.
+/// A `valid_len` of zero (damaged header) resets the file to a fresh
+/// header. Returns the record positions that survive.
+pub fn truncate_to_valid(
+    dir: &Path,
+    base: u64,
+    outcome: &ScanOutcome,
+    index_every: u64,
+) -> Result<(), StorageError> {
+    let seg_path = dir.join(seg_file_name(base));
+    let f = std::fs::OpenOptions::new().write(true).open(&seg_path).map_err(StorageError::Io)?;
+    if outcome.valid_len == 0 {
+        f.set_len(0).map_err(StorageError::Io)?;
+        let mut w = BufWriter::new(&f);
+        w.write_all(&header_bytes(base)).map_err(StorageError::Io)?;
+        w.flush().map_err(StorageError::Io)?;
+    } else {
+        f.set_len(outcome.valid_len).map_err(StorageError::Io)?;
+    }
+    f.sync_data().map_err(StorageError::Io)?;
+    let stride = index_every.max(1) as usize;
+    let entries: Vec<(u32, u64)> = outcome
+        .positions
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % stride == 0)
+        .map(|(i, &pos)| (i as u32, pos))
+        .collect();
+    index::rewrite(&dir.join(idx_file_name(base)), base, &entries).map_err(StorageError::Io)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rl_seg_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn msg(i: u64) -> Message {
+        Message::new(Some(i), format!("payload-{i}").into_bytes(), i)
+    }
+
+    #[test]
+    fn file_names_round_trip() {
+        assert_eq!(seg_file_name(0), "00000000000000000000.seg");
+        assert_eq!(parse_seg_file_name(&seg_file_name(0)), Some(0));
+        assert_eq!(parse_seg_file_name(&seg_file_name(123456)), Some(123456));
+        assert_eq!(parse_seg_file_name("junk.seg"), None);
+        assert_eq!(parse_seg_file_name("00000000000000000000.idx"), None);
+    }
+
+    #[test]
+    fn write_scan_round_trip() {
+        let dir = tmp("rt");
+        let mut w = SegmentWriter::create(&dir, 0, 8).unwrap();
+        for i in 0..100 {
+            w.append(&msg(i)).unwrap();
+        }
+        w.sync().unwrap();
+        assert_eq!(w.end_offset(), 100);
+        let out = scan(&dir.join(seg_file_name(0)), 0).unwrap();
+        assert!(out.damage.is_none());
+        assert_eq!(out.messages.len(), 100);
+        assert_eq!(out.positions.len(), 100);
+        assert_eq!(out.valid_len, w.len_bytes());
+        for (i, m) in out.messages.iter().enumerate() {
+            assert_eq!(m, &msg(i as u64));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_from_uses_index_and_matches_scan() {
+        let dir = tmp("read");
+        let mut w = SegmentWriter::create(&dir, 500, 8).unwrap();
+        for i in 0..200 {
+            w.append(&msg(i)).unwrap();
+        }
+        w.sync().unwrap();
+        let got = read_from(&dir, 500, 620, 50).unwrap();
+        assert_eq!(got.len(), 50);
+        assert_eq!(got[0].0, 620);
+        assert_eq!(got[0].1, msg(120));
+        assert_eq!(got[49].0, 669);
+        // From before the base: everything from the start.
+        let all = read_from(&dir, 500, 0, 1000).unwrap();
+        assert_eq!(all.len(), 200);
+        // Past the end: empty.
+        assert!(read_from(&dir, 500, 700, 10).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_from_survives_corrupt_index() {
+        let dir = tmp("badidx");
+        let mut w = SegmentWriter::create(&dir, 0, 4).unwrap();
+        for i in 0..50 {
+            w.append(&msg(i)).unwrap();
+        }
+        w.sync().unwrap();
+        // Poison the index with positions that point mid-record.
+        index::rewrite(&dir.join(idx_file_name(0)), 0, &[(0, 21), (10, 37)]).unwrap();
+        let got = read_from(&dir, 0, 10, 10).unwrap();
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[0].0, 10);
+        assert_eq!(got[0].1, msg(10));
+        // Deleting the index entirely also works (plain scan).
+        std::fs::remove_file(dir.join(idx_file_name(0))).unwrap();
+        let got = read_from(&dir, 0, 45, 10).unwrap();
+        assert_eq!(got.len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_scan_reports_valid_prefix() {
+        let dir = tmp("torn");
+        let mut w = SegmentWriter::create(&dir, 0, 8).unwrap();
+        for i in 0..10 {
+            w.append(&msg(i)).unwrap();
+        }
+        w.sync().unwrap();
+        let full = std::fs::read(dir.join(seg_file_name(0))).unwrap();
+        let out = scan(&dir.join(seg_file_name(0)), 0).unwrap();
+        let last_start = *out.positions.last().unwrap();
+        // Cut inside the final record.
+        std::fs::write(dir.join(seg_file_name(0)), &full[..last_start as usize + 3]).unwrap();
+        let cut = scan(&dir.join(seg_file_name(0)), 0).unwrap();
+        assert_eq!(cut.messages.len(), 9);
+        assert_eq!(cut.valid_len, last_start);
+        assert!(cut.damage.is_some());
+        // Truncate-to-valid then rescan: clean.
+        truncate_to_valid(&dir, 0, &cut, 8).unwrap();
+        let clean = scan(&dir.join(seg_file_name(0)), 0).unwrap();
+        assert_eq!(clean.messages.len(), 9);
+        assert!(clean.damage.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn damaged_header_scan_yields_empty_valid_prefix() {
+        let dir = tmp("hdr");
+        let mut w = SegmentWriter::create(&dir, 0, 8).unwrap();
+        w.append(&msg(0)).unwrap();
+        w.sync().unwrap();
+        let mut bytes = std::fs::read(dir.join(seg_file_name(0))).unwrap();
+        bytes[3] ^= 0xFF;
+        std::fs::write(dir.join(seg_file_name(0)), &bytes).unwrap();
+        let out = scan(&dir.join(seg_file_name(0)), 0).unwrap();
+        assert_eq!(out.valid_len, 0);
+        assert!(out.messages.is_empty());
+        assert!(out.damage.is_some());
+        // Repair resets to a fresh, scannable header.
+        truncate_to_valid(&dir, 0, &out, 8).unwrap();
+        let clean = scan(&dir.join(seg_file_name(0)), 0).unwrap();
+        assert!(clean.damage.is_none());
+        assert!(clean.messages.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn base_mismatch_is_damage() {
+        let dir = tmp("base");
+        let mut w = SegmentWriter::create(&dir, 64, 8).unwrap();
+        w.append(&msg(0)).unwrap();
+        w.sync().unwrap();
+        let out = scan(&dir.join(seg_file_name(64)), 65).unwrap();
+        assert_eq!(out.valid_len, 0);
+        assert!(out.damage.unwrap().contains("base"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_end_continues_appending() {
+        let dir = tmp("reopen");
+        let mut w = SegmentWriter::create(&dir, 0, 8).unwrap();
+        for i in 0..5 {
+            w.append(&msg(i)).unwrap();
+        }
+        w.sync().unwrap();
+        let len = w.len_bytes();
+        drop(w);
+        let mut w = SegmentWriter::open_end(&dir, 0, len, 5, 8).unwrap();
+        assert_eq!(w.end_offset(), 5);
+        for i in 5..12 {
+            w.append(&msg(i)).unwrap();
+        }
+        w.sync().unwrap();
+        let out = scan(&dir.join(seg_file_name(0)), 0).unwrap();
+        assert!(out.damage.is_none());
+        assert_eq!(out.messages.len(), 12);
+        assert_eq!(out.messages[11], msg(11));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

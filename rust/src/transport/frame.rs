@@ -52,32 +52,10 @@ const MIN_LEN: usize = 3 + 4;
 
 // ---------------------------------------------------------------- crc32
 
-const fn crc32_table() -> [u32; 256] {
-    let mut table = [0u32; 256];
-    let mut i = 0;
-    while i < 256 {
-        let mut c = i as u32;
-        let mut k = 0;
-        while k < 8 {
-            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-            k += 1;
-        }
-        table[i] = c;
-        i += 1;
-    }
-    table
-}
-
-static CRC_TABLE: [u32; 256] = crc32_table();
-
-/// IEEE CRC-32 (the Ethernet/zlib polynomial).
-pub fn crc32(data: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    c ^ 0xFFFF_FFFF
-}
+// The CRC implementation lives in `util::crc` so the durable storage
+// layer seals its records with the exact same checksum; re-exported here
+// because the wire protocol is where it historically lived.
+pub use crate::util::crc::crc32;
 
 // ---------------------------------------------------------------- errors
 

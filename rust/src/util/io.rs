@@ -2,7 +2,9 @@
 //!
 //! No serde is available offline, so JSON encoding is a small hand-rolled
 //! emitter over an explicit value enum — enough for flat experiment records
-//! and nested figure metadata.
+//! and nested figure metadata. [`Json::parse`] is the matching reader, used
+//! by `bench_check` to compare emitted `BENCH_*.json` files against the
+//! committed baselines.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -39,6 +41,55 @@ impl Json {
         let mut out = String::new();
         self.render_into(&mut out);
         out
+    }
+
+    /// Parse a JSON document. Covers the full value grammar (escapes and
+    /// `\uXXXX` included); numbers become `f64` like everything else here.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { b: s.as_bytes(), at: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.at != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.at));
+        }
+        Ok(v)
+    }
+
+    // Shape accessors (None on type mismatch — callers report context).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     fn render_into(&self, out: &mut String) {
@@ -97,6 +148,197 @@ impl Json {
             }
         }
     }
+}
+
+/// Recursive-descent JSON reader over raw bytes.
+struct Parser<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.at < self.b.len() && matches!(self.b[self.at], b' ' | b'\t' | b'\n' | b'\r') {
+            self.at += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.at).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.at += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at offset {}", c as char, self.at))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.at..].starts_with(word.as_bytes()) {
+            self.at += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at offset {}", self.at))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected byte at offset {}", self.at)),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.at;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E') | Some(b'0'..=b'9')
+        ) {
+            self.at += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.at])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at offset {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek().ok_or("unterminated string")? {
+                b'"' => {
+                    self.at += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.at += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.at += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            // Surrogate pair: a high surrogate must be
+                            // followed by `\u` + low surrogate.
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                self.eat(b'\\').and_then(|()| self.eat(b'u'))?;
+                                let lo = self.hex4()?;
+                                0x10000 + ((hi - 0xD800) << 10) + (lo.wrapping_sub(0xDC00) & 0x3FF)
+                            } else {
+                                hi
+                            };
+                            out.push(char::from_u32(cp).ok_or("bad \\u escape")?);
+                        }
+                        other => return Err(format!("bad escape '\\{}'", other as char)),
+                    }
+                }
+                _ => {
+                    // Copy one UTF-8 scalar (the input is a &str, so the
+                    // bytes are valid UTF-8 by construction).
+                    let rest = std::str::from_utf8(&self.b[self.at..]).map_err(|e| e.to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.at += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.at + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let s = std::str::from_utf8(&self.b[self.at..self.at + 4]).map_err(|e| e.to_string())?;
+        self.at += 4;
+        u32::from_str_radix(s, 16).map_err(|_| "bad \\u escape".to_string())
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.at += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.at += 1,
+                Some(b']') => {
+                    self.at += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.at)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.at += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            map.insert(key, self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.at += 1,
+                Some(b'}') => {
+                    self.at += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.at)),
+            }
+        }
+    }
+}
+
+/// Where benches drop their `BENCH_<name>.json` result files:
+/// `$RL_BENCH_OUT` when set, else `target/bench` under the working dir.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    match std::env::var("RL_BENCH_OUT") {
+        Ok(d) if !d.is_empty() => std::path::PathBuf::from(d),
+        _ => std::path::PathBuf::from("target").join("bench"),
+    }
+}
+
+/// Write one bench result file (`BENCH_<name>.json`) and return its path.
+pub fn write_bench_json(name: &str, v: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = bench_out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, v.render() + "\n")?;
+    Ok(path)
 }
 
 /// Append one JSON object per line to `path` (creating parents).
@@ -172,6 +414,45 @@ mod tests {
             ("series", Json::Arr(vec![Json::num(1.0), Json::num(2.0)])),
         ]);
         assert_eq!(v.render(), r#"{"name":"fig8","series":[1,2]}"#);
+    }
+
+    #[test]
+    fn json_parse_round_trips_render() {
+        let v = Json::obj(vec![
+            ("bench", Json::str("durability")),
+            ("provisional", Json::Bool(true)),
+            ("nothing", Json::Null),
+            (
+                "points",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("per-batch")),
+                    ("throughput_msgs_s", Json::num(12345.5)),
+                ])]),
+            ),
+        ]);
+        let back = Json::parse(&v.render()).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.get("bench").and_then(Json::as_str), Some("durability"));
+        assert_eq!(back.get("provisional").and_then(Json::as_bool), Some(true));
+        let pts = back.get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(pts[0].get("throughput_msgs_s").and_then(Json::as_f64), Some(12345.5));
+    }
+
+    #[test]
+    fn json_parse_escapes_and_whitespace() {
+        let v = Json::parse(" { \"a\\n\\\"b\" : [ 1 , -2.5e2 , \"\\u0041\\ud83d\\ude00\" ] } ")
+            .unwrap();
+        let arr = v.get("a\n\"b").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(-250.0));
+        assert_eq!(arr[2].as_str(), Some("A😀"));
+    }
+
+    #[test]
+    fn json_parse_rejects_malformed() {
+        for bad in ["", "{", "[1,", "{\"a\":}", "nul", "1 2", "\"unterminated", "{\"a\" 1}"] {
+            assert!(Json::parse(bad).is_err(), "accepted: {bad:?}");
+        }
     }
 
     #[test]

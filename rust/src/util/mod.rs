@@ -2,13 +2,16 @@
 //!
 //! The offline build environment carries no third-party utility crates, so
 //! this module provides from scratch what the rest of the stack needs:
-//! a seedable PRNG ([`prng`]), wall/simulated clocks ([`clock`]), statistics
+//! a seedable PRNG ([`prng`]), an IEEE CRC-32 ([`crc`], shared by the wire
+//! protocol and the durable storage layer), wall/simulated clocks
+//! ([`clock`]), statistics
 //! for the evaluation figures ([`stats`]), a latency histogram
 //! ([`histogram`]), a leveled logger ([`logging`]), CSV/JSONL result writers
 //! ([`io`]), a randomized property-testing harness ([`propcheck`]), and
 //! condition waits for concurrency tests ([`wait`]).
 
 pub mod clock;
+pub mod crc;
 pub mod histogram;
 pub mod io;
 pub mod logging;

@@ -2,7 +2,9 @@
 //! serves the wire protocol on a loopback port; `rl-node worker`
 //! processes drive a publish→consume→commit pipeline against it and
 //! print their processed counts. The broker is killed and restarted
-//! between phases, proving the client side rides a reconnect.
+//! between phases, proving the client side rides a reconnect; the
+//! durable variant runs the broker with `--data-dir`, SIGKILLs it, and
+//! proves the restarted process serves every acked message from disk.
 //!
 //! Guarded by `RL_TCP_E2E=1` — sandboxed environments without loopback
 //! networking (or without the binaries built) skip it; the `transport-e2e`
@@ -32,8 +34,13 @@ fn free_port() -> u16 {
 }
 
 fn spawn_broker(port: u16) -> Child {
+    spawn_broker_with(port, &[])
+}
+
+fn spawn_broker_with(port: u16, extra: &[&str]) -> Child {
     Command::new(env!("CARGO_BIN_EXE_rl-node"))
         .args(["broker", "--listen", &format!("127.0.0.1:{port}")])
+        .args(extra)
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit())
         .spawn()
@@ -54,8 +61,12 @@ fn wait_reachable(port: u16, deadline: Duration) -> bool {
 }
 
 fn spawn_broker_reachable(port: u16) -> Child {
+    spawn_broker_reachable_with(port, &[])
+}
+
+fn spawn_broker_reachable_with(port: u16, extra: &[&str]) -> Child {
     for attempt in 0..5 {
-        let mut child = spawn_broker(port);
+        let mut child = spawn_broker_with(port, extra);
         if wait_reachable(port, Duration::from_secs(5)) {
             return child;
         }
@@ -69,6 +80,10 @@ fn spawn_broker_reachable(port: u16) -> Child {
 
 /// Run one worker process to completion and return its processed count.
 fn run_worker(port: u16, messages: u64, topic: &str, node_id: &str) -> u64 {
+    run_worker_with(port, messages, topic, node_id, &[])
+}
+
+fn run_worker_with(port: u16, messages: u64, topic: &str, node_id: &str, extra: &[&str]) -> u64 {
     let output = Command::new(env!("CARGO_BIN_EXE_rl-node"))
         .args([
             "worker",
@@ -81,6 +96,7 @@ fn run_worker(port: u16, messages: u64, topic: &str, node_id: &str) -> u64 {
             "--node-id",
             node_id,
         ])
+        .args(extra)
         .stderr(Stdio::inherit())
         .output()
         .expect("run rl-node worker");
@@ -124,6 +140,49 @@ fn two_process_pipeline_survives_broker_restart() {
 
     broker2.kill().expect("kill broker 2");
     let _ = broker2.wait();
+}
+
+#[test]
+fn durable_broker_serves_acked_messages_after_kill_dash_nine() {
+    if !enabled() {
+        return;
+    }
+    let port = free_port();
+    let data_dir = std::env::temp_dir().join(format!("rl_e2e_durable_{}", std::process::id()));
+    std::fs::remove_dir_all(&data_dir).ok();
+    let dir_arg = data_dir.to_string_lossy().to_string();
+    // `--fsync off` on purpose: acked messages must survive SIGKILL on
+    // the strength of the per-append flush alone (fsync only buys
+    // power-loss durability, which killing a process cannot test).
+    let durable_args = ["--data-dir", dir_arg.as_str(), "--fsync", "off"];
+
+    // Phase 1: a worker publishes + consumes 120 messages; every one of
+    // them was acknowledged by the durable broker before it exits.
+    let mut broker = spawn_broker_reachable_with(port, &durable_args);
+    let processed = run_worker(port, 120, "durable", "worker-1");
+    assert!(processed >= 120, "phase 1 processed {processed} < 120");
+
+    // kill -9 (Child::kill is SIGKILL on unix — no graceful shutdown,
+    // no Drop, no final sync runs in the broker process).
+    broker.kill().expect("kill -9 broker");
+    let _ = broker.wait();
+
+    // Phase 2: restart over the same data dir. A worker that publishes
+    // NOTHING and consumes in a fresh group must still see all 120
+    // messages — they can only have come from the recovered segment log.
+    let mut broker2 = spawn_broker_reachable_with(port, &durable_args);
+    let replayed = run_worker_with(
+        port,
+        120,
+        "durable",
+        "worker-2",
+        &["--skip-publish", "--group", "fresh-after-crash"],
+    );
+    assert!(replayed >= 120, "recovered broker served only {replayed}/120 acked messages");
+
+    broker2.kill().expect("kill broker 2");
+    let _ = broker2.wait();
+    std::fs::remove_dir_all(&data_dir).ok();
 }
 
 #[test]
