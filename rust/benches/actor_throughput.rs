@@ -10,6 +10,7 @@
 //! Smoke (CI): `RL_BENCH_SMOKE=1 cargo bench --bench actor_throughput`
 
 use reactive_liquid::actor::system::{Actor, ActorSystem, Ctx};
+use reactive_liquid::util::io::{write_bench_json, Json};
 use reactive_liquid::util::wait_until;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -27,7 +28,7 @@ impl Actor for CountActor {
     }
 }
 
-fn run_scale(actors: usize, total_msgs: u64) {
+fn run_scale(actors: usize, total_msgs: u64) -> Json {
     let sys = ActorSystem::new();
     let workers = sys.executor().worker_count();
     let os_threads = workers + 1; // worker pool + timer thread
@@ -61,19 +62,30 @@ fn run_scale(actors: usize, total_msgs: u64) {
         actors as f64 / os_threads as f64
     );
     sys.shutdown();
+    Json::obj(vec![
+        ("name", Json::str(format!("actors={actors}"))),
+        ("actors", Json::num(actors as f64)),
+        ("msgs", Json::num(sent as f64)),
+        ("os_threads", Json::num(os_threads as f64)),
+        ("throughput_msgs_s", Json::num(rate)),
+    ])
 }
 
 fn main() {
     let smoke = std::env::var("RL_BENCH_SMOKE").is_ok();
     println!("# actor_throughput: msgs/sec over the fixed work-stealing pool");
-    if smoke {
+    let points = if smoke {
         // Tiny CI smoke: prove 10k actors activate on the bounded pool
         // without measuring steady-state throughput.
-        run_scale(100, 20_000);
-        run_scale(10_000, 20_000);
-        return;
-    }
-    for &actors in &[100usize, 1_000, 10_000] {
-        run_scale(actors, 1_000_000);
-    }
+        vec![run_scale(100, 20_000), run_scale(10_000, 20_000)]
+    } else {
+        [100usize, 1_000, 10_000].iter().map(|&actors| run_scale(actors, 1_000_000)).collect()
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::str("actor_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("actor_throughput", &json).expect("write BENCH_actor_throughput.json");
+    println!("wrote {}", path.display());
 }

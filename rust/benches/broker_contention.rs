@@ -18,6 +18,7 @@
 //! Smoke (CI): `RL_BENCH_SMOKE=1 cargo bench --bench broker_contention`
 
 use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::util::io::{write_bench_json, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -87,6 +88,7 @@ fn main() {
     );
     let mut base = 0.0f64;
     let mut four_by_four = 0.0f64;
+    let mut points = Vec::new();
     for &(p, c) in sweep {
         // Warm-up pass at a fraction of the work, then the measured pass.
         run_cell(p, c, per_producer / 10 + 1);
@@ -105,6 +107,13 @@ fn main() {
             rate,
             rate / base
         );
+        points.push(Json::obj(vec![
+            ("name", Json::str(format!("{p}p x {c}c"))),
+            ("producers", Json::num(p as f64)),
+            ("consumers", Json::num(c as f64)),
+            ("throughput_msgs_s", Json::num(rate)),
+            ("vs_1x1", Json::num(rate / base)),
+        ]));
     }
     println!(
         "\n4x4 scaling vs single pair: {:.2}x (target ≥ 2.00x on ≥4 cores; \
@@ -112,5 +121,16 @@ fn main() {
         four_by_four / base,
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
-    println!("\nbroker_contention done");
+    let json = Json::obj(vec![
+        ("bench", Json::str("broker_contention")),
+        ("smoke", Json::Bool(smoke)),
+        ("partitions", Json::num(PARTITIONS as f64)),
+        ("batch", Json::num(BATCH as f64)),
+        ("per_producer", Json::num(per_producer as f64)),
+        ("scaling_4x4_vs_1x1", Json::num(four_by_four / base)),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("broker_contention", &json).expect("write BENCH_broker_contention.json");
+    println!("\nwrote {}", path.display());
+    println!("broker_contention done");
 }

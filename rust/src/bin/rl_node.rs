@@ -22,6 +22,23 @@
 //! rl-node worker --broker 127.0.0.1:7411 --messages 500
 //! ```
 //!
+//! # Cluster mode
+//!
+//! Give a broker `--node-id` and `--peers` and it becomes one seat of a
+//! multi-broker cluster: it serves a [`ClusterView`]-aware broker (PR 7),
+//! heartbeats its peers, and when the φ detector declares a peer dead it
+//! rebalances partition ownership and gossips the new placement map. A
+//! worker pointed at `--seeds` routes through a [`ClusterClient`]
+//! instead of a single [`RemoteBroker`]. Four terminals make a 3-broker
+//! cluster (see the README quickstart):
+//!
+//! ```sh
+//! rl-node broker --listen 127.0.0.1:7411 --node-id n1 --peers n2=127.0.0.1:7412,n3=127.0.0.1:7413
+//! rl-node broker --listen 127.0.0.1:7412 --node-id n2 --peers n1=127.0.0.1:7411,n3=127.0.0.1:7413
+//! rl-node broker --listen 127.0.0.1:7413 --node-id n3 --peers n1=127.0.0.1:7411,n2=127.0.0.1:7412
+//! rl-node worker --seeds 127.0.0.1:7411,127.0.0.1:7412 --messages 500
+//! ```
+//!
 //! The worker's wire layer rides broker restarts: connections redial,
 //! publishes retry (re-creating the topic if the restarted broker lost
 //! it), and consumers resubscribe. With `--data-dir`, a `kill -9`'d and
@@ -32,12 +49,14 @@
 //! the shortfall and exits nonzero at its deadline rather than
 //! pretending they were processed.
 
-use reactive_liquid::cluster::membership::Membership;
+use reactive_liquid::cluster::membership::{ClusterView, Membership};
+use reactive_liquid::cluster::PlacementMap;
 use reactive_liquid::config::cli::Args;
 use reactive_liquid::messaging::client::SharedBrokerClient;
 use reactive_liquid::messaging::{Broker, DiskStorage, FsyncPolicy, Message, StorageConfig};
 use reactive_liquid::transport::{
-    BrokerService, Gossiper, GossipService, NodeService, RemoteBroker, TcpTransport, Transport,
+    BrokerService, ClusterClient, Connection, Frame, Gossiper, GossipService, NodeService,
+    RemoteBroker, RetryPolicy, TcpTransport, Transport, TransportError,
 };
 use reactive_liquid::util::clock::real_clock;
 use std::io::Write;
@@ -61,7 +80,10 @@ fn main() {
                  broker  --listen ADDR            serve the broker + membership over TCP\n\
                  \x20       [--data-dir DIR]         persist partitions + offsets, recover on boot\n\
                  \x20       [--fsync POLICY]         per-batch (default) | interval:<ms> | off\n\
-                 worker  --broker ADDR --messages N [--topic T] [--partitions P]\n\
+                 \x20       [--node-id ID --peers id=addr,...]  join a multi-broker cluster\n\
+                 \x20       [--advertise ADDR]       address peers/clients should use (default: --listen)\n\
+                 worker  --broker ADDR | --seeds ADDR,ADDR,...\n\
+                 \x20       --messages N [--topic T] [--partitions P]\n\
                  \x20       [--batch B] [--node-id ID] [--group G] [--skip-publish]\n"
             );
             0
@@ -73,6 +95,9 @@ fn main() {
 fn cmd_broker(mut args: Args) -> i32 {
     let listen = args.opt_str("listen").unwrap_or_else(|| "127.0.0.1:7411".to_string());
     let data_dir = args.opt_str("data-dir");
+    let node_id = args.opt_str("node-id");
+    let advertise = args.opt_str("advertise").unwrap_or_else(|| listen.clone());
+    let peers_spec = args.opt_str("peers");
     let fsync = match args.opt_str("fsync") {
         None => FsyncPolicy::PerBatch,
         Some(s) => match FsyncPolicy::parse(&s) {
@@ -122,10 +147,45 @@ fn cmd_broker(mut args: Args) -> i32 {
         }
     };
     let membership = Membership::new(real_clock(), 8.0);
+    let tcp = TcpTransport::default();
+
+    // Clustered seat: a --peers roster makes this broker one node of a
+    // placement-map cluster (see the module docs).
+    if let Some(spec) = peers_spec {
+        let node_id = node_id.unwrap_or_else(|| advertise.clone());
+        let mut peers: Vec<(String, String)> = Vec::new();
+        for part in spec.split(',').filter(|s| !s.is_empty()) {
+            let Some((id, addr)) = part.split_once('=') else {
+                eprintln!("--peers expects id=addr,id=addr,... (got '{part}')");
+                return 2;
+            };
+            peers.push((id.to_string(), addr.to_string()));
+        }
+        let mut nodes = peers.clone();
+        nodes.push((node_id.clone(), advertise.clone()));
+        let view = ClusterView::new(&node_id, membership.clone(), PlacementMap::new(1, nodes));
+        let broker_service = BrokerService::with_cluster(broker, view.clone());
+        let service =
+            NodeService::new(broker_service.clone(), GossipService::with_view(view.clone()));
+        let handle = match tcp.serve(&listen, service) {
+            Ok(h) => h,
+            Err(e) => {
+                eprintln!("bind {listen}: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "rl-node broker {node_id} listening on {} (cluster of {})",
+            handle.addr(),
+            peers.len() + 1
+        );
+        let _ = std::io::stdout().flush();
+        run_cluster_seat(&tcp, &node_id, peers, view, broker_service, membership);
+    }
+
     let broker_service = BrokerService::new(broker);
     let service =
         NodeService::new(broker_service.clone(), GossipService::new(membership.clone()));
-    let tcp = TcpTransport::default();
     let handle = match tcp.serve(&listen, service) {
         Ok(h) => h,
         Err(e) => {
@@ -152,10 +212,105 @@ fn cmd_broker(mut args: Args) -> i32 {
     }
 }
 
+/// The clustered broker's supervision loop: heartbeat peers, watch the φ
+/// detector, rebalance ownership away from the dead, gossip the map.
+/// Never returns.
+fn run_cluster_seat(
+    tcp: &TcpTransport,
+    node_id: &str,
+    peers: Vec<(String, String)>,
+    view: Arc<ClusterView>,
+    broker_service: Arc<BrokerService>,
+    membership: Arc<Membership>,
+) -> ! {
+    // Peers may come up in any order: connections dial lazily and a
+    // failed dial is retried next tick, not fatal.
+    struct Peer {
+        id: String,
+        addr: String,
+        conn: Option<Arc<dyn Connection>>,
+        gossiper: Option<Arc<Gossiper>>,
+    }
+    let mut peers: Vec<Peer> = peers
+        .into_iter()
+        .map(|(id, addr)| Peer { id, addr, conn: None, gossiper: None })
+        .collect();
+    let mut tick = 0u64;
+    loop {
+        std::thread::sleep(Duration::from_millis(500));
+        tick += 1;
+        let map = view.map();
+        for peer in &mut peers {
+            if peer.conn.is_none() {
+                match tcp.connect(&peer.addr) {
+                    Ok(c) => {
+                        let g = Gossiper::new(c.clone(), node_id);
+                        let _ = g.join(1);
+                        peer.conn = Some(c);
+                        peer.gossiper = Some(g);
+                    }
+                    Err(_) => continue, // retry next tick
+                }
+            }
+            if let Some(g) = &peer.gossiper {
+                let _ = g.heartbeat();
+            }
+            // Map anti-entropy: a restarted or partitioned-then-healed
+            // peer adopts the highest epoch it hears.
+            if tick % 4 == 0 {
+                if let Some(c) = &peer.conn {
+                    let cast = c.cast(Frame::ClusterMapIs {
+                        epoch: map.epoch(),
+                        nodes: map.nodes().to_vec(),
+                    });
+                    if cast.is_err() {
+                        // Dead link: drop it so the next tick redials.
+                        peer.conn = None;
+                        peer.gossiper = None;
+                    }
+                }
+            }
+        }
+        // Failure-driven rebalance: when φ declares a mapped peer dead
+        // (or a dead one heals), recompute ownership and gossip it.
+        if let Some(next) = view.rebalance() {
+            eprintln!(
+                "cluster epoch {} -> {:?} own the partitions",
+                next.epoch(),
+                next.nodes().iter().map(|(id, _)| id.as_str()).collect::<Vec<_>>()
+            );
+            for peer in &peers {
+                if let Some(c) = &peer.conn {
+                    let _ = c.cast(Frame::ClusterMapIs {
+                        epoch: next.epoch(),
+                        nodes: next.nodes().to_vec(),
+                    });
+                }
+            }
+        }
+        if tick % 10 == 0 {
+            let reaped = broker_service.reap_idle(Duration::from_secs(30));
+            if reaped > 0 {
+                eprintln!("reaped {reaped} idle consumer session(s)");
+            }
+            let suspects = membership.suspects();
+            if !suspects.is_empty() {
+                eprintln!("suspected members: {suspects:?}");
+            }
+        }
+    }
+}
+
 fn cmd_worker(mut args: Args) -> i32 {
-    let Some(addr) = args.opt_str("broker") else {
-        eprintln!("worker needs --broker ADDR");
-        return 2;
+    let broker_addr = args.opt_str("broker");
+    let seeds = args.opt_str("seeds");
+    let (addr, seeds) = match (broker_addr, seeds) {
+        (Some(a), None) => (Some(a), None),
+        (None, Some(s)) => (None, Some(s)),
+        _ => {
+            eprintln!("worker needs exactly one of --broker ADDR or --seeds ADDR,ADDR,...");
+            return 2;
+        }
     };
     // Numeric options: a value that fails to parse is an operator error,
     // not a silent fall-back to the default.
@@ -180,6 +335,28 @@ fn cmd_worker(mut args: Args) -> i32 {
     }
 
     let tcp = TcpTransport::default();
+
+    // Cluster worker: bootstrap a routed client from the seed list. The
+    // gossip announcement goes to the first reachable seed — any clustered
+    // broker spreads membership from there.
+    if let Some(spec) = seeds {
+        let seed_addrs: Vec<String> =
+            spec.split(',').filter(|s| !s.is_empty()).map(|s| s.to_string()).collect();
+        let client =
+            match ClusterClient::connect(Arc::new(tcp.clone()), seed_addrs.clone(), RetryPolicy::default()) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("bootstrap from seeds {seed_addrs:?}: {e}");
+                    return 1;
+                }
+            };
+        let gossip_conn = seed_addrs.iter().find_map(|a| tcp.connect(a).ok());
+        return with_heartbeats(gossip_conn, &node_id, || {
+            run_pipeline(&client, &topic, &group, partitions, total, batch, skip_publish)
+        });
+    }
+
+    let addr = addr.expect("checked above");
     let conn = match tcp.connect(&addr) {
         Ok(c) => c,
         Err(e) => {
@@ -188,15 +365,24 @@ fn cmd_worker(mut args: Args) -> i32 {
         }
     };
     let remote = RemoteBroker::new(conn.clone());
+    with_heartbeats(Some(conn), &node_id, || {
+        run_pipeline(&remote, &topic, &group, partitions, total, batch, skip_publish)
+    })
+}
 
-    // Membership: announce ourselves and heartbeat until we exit.
-    let gossiper = Gossiper::new(conn, &node_id);
+/// Announce this worker over `conn` (when there is one) and heartbeat for
+/// the duration of `body`.
+fn with_heartbeats(
+    conn: Option<Arc<dyn Connection>>,
+    node_id: &str,
+    body: impl FnOnce() -> i32,
+) -> i32 {
+    let Some(conn) = conn else { return body() };
+    let gossiper = Gossiper::new(conn, node_id);
     let _ = gossiper.join(1);
     let stop_beats = Arc::new(AtomicBool::new(false));
     let beats = gossiper.start_heartbeats(Duration::from_millis(500), stop_beats.clone());
-
-    let code = run_pipeline(&remote, &topic, &group, partitions, total, batch, skip_publish);
-
+    let code = body();
     stop_beats.store(true, std::sync::atomic::Ordering::SeqCst);
     let _ = beats.join();
     code
@@ -216,13 +402,58 @@ fn patient(deadline: Instant, what: &str, mut op: impl FnMut() -> bool) -> bool 
     }
 }
 
+/// The fallible wire surface [`run_pipeline`] drives — satisfied by the
+/// single-broker [`RemoteBroker`] and the cluster-routed [`ClusterClient`]
+/// alike, so the worker body is identical either way.
+trait WireClient {
+    fn try_create_topic(&self, topic: &str, partitions: usize) -> Result<(), TransportError>;
+    fn try_publish_batch(
+        &self,
+        topic: &str,
+        msgs: Vec<Message>,
+    ) -> Result<Vec<(usize, u64)>, TransportError>;
+    fn shared(&self) -> SharedBrokerClient;
+}
+
+impl WireClient for Arc<RemoteBroker> {
+    fn try_create_topic(&self, topic: &str, partitions: usize) -> Result<(), TransportError> {
+        RemoteBroker::try_create_topic(self, topic, partitions)
+    }
+    fn try_publish_batch(
+        &self,
+        topic: &str,
+        msgs: Vec<Message>,
+    ) -> Result<Vec<(usize, u64)>, TransportError> {
+        RemoteBroker::try_publish_batch(self, topic, msgs)
+    }
+    fn shared(&self) -> SharedBrokerClient {
+        self.clone()
+    }
+}
+
+impl WireClient for Arc<ClusterClient> {
+    fn try_create_topic(&self, topic: &str, partitions: usize) -> Result<(), TransportError> {
+        ClusterClient::try_create_topic(self, topic, partitions)
+    }
+    fn try_publish_batch(
+        &self,
+        topic: &str,
+        msgs: Vec<Message>,
+    ) -> Result<Vec<(usize, u64)>, TransportError> {
+        ClusterClient::try_publish_batch(self, topic, msgs)
+    }
+    fn shared(&self) -> SharedBrokerClient {
+        self.clone()
+    }
+}
+
 /// Publish `total` messages (unless `skip_publish` — then the broker is
 /// expected to already hold them, e.g. recovered from disk), then consume
 /// + commit them back in `group`. Every wire operation is retried against
 /// a deadline, so a broker restart mid-run stalls progress instead of
 /// failing the worker.
 fn run_pipeline(
-    remote: &Arc<RemoteBroker>,
+    remote: &impl WireClient,
     topic: &str,
     group: &str,
     partitions: usize,
@@ -249,7 +480,7 @@ fn run_pipeline(
             .collect();
         let publish_once = || match remote.try_publish_batch(topic, msgs.clone()) {
             Ok(_) => true,
-            Err(reactive_liquid::transport::TransportError::Rejected { .. }) => {
+            Err(TransportError::Rejected { .. }) => {
                 // Topic gone (restarted broker): recreate, then retry.
                 let _ = remote.try_create_topic(topic, partitions);
                 false
@@ -265,7 +496,7 @@ fn run_pipeline(
     // Consume + commit until everything published has been seen. The
     // client: SharedBrokerClient surface is exactly what the pipeline
     // layers use.
-    let client: SharedBrokerClient = remote.clone();
+    let client: SharedBrokerClient = remote.shared();
     let consumer = client.subscribe(topic, group);
     let mut processed = 0u64;
     let consume_deadline = Instant::now() + Duration::from_secs(60);

@@ -23,6 +23,7 @@
 //!
 //! [`Connection`]: crate::transport::Connection
 
+use super::placement::PlacementMap;
 use crate::reactive::failure_detector::PhiAccrualDetector;
 use crate::util::clock::SharedClock;
 use std::collections::BTreeMap;
@@ -129,6 +130,120 @@ impl Membership {
     }
 }
 
+/// One node's view of the cluster: its [`Membership`] (who gossips, who
+/// the φ detector suspects) plus the current [`PlacementMap`] and the
+/// roster of every `(id, address)` ever seen in an adopted map.
+///
+/// This is where **failure drives rebalance**: [`ClusterView::rebalance`]
+/// drops suspected members from the map, re-adds recovered roster nodes,
+/// and bumps the cluster epoch — and because the successor map is a pure
+/// function of the surviving node set, every node that observes the same
+/// failures computes the *same* successor independently (gossip of the
+/// map is anti-entropy, not consensus). The bumped epoch fences the data
+/// plane: broker sessions created under the old epoch refuse polls and
+/// commits ([`ErrorCode::EpochFenced`]), forcing consumers to resubscribe
+/// under the new map, so a stale commit can never land after its
+/// partitions moved.
+///
+/// A **quorum guard** keeps a partitioned minority honest: a node that
+/// can only account for fewer than a strict majority of the current map's
+/// members freezes (no rebalance, no epoch bump) instead of electing
+/// itself a one-node cluster. On heal it adopts the majority's
+/// higher-epoch map via gossip.
+///
+/// [`ErrorCode::EpochFenced`]: crate::transport::frame::ErrorCode
+pub struct ClusterView {
+    node: String,
+    membership: Arc<Membership>,
+    map: Mutex<PlacementMap>,
+    /// Every `(id, address)` ever seen in an adopted map — suspects leave
+    /// the *map* but stay here so a healed node can be re-added.
+    roster: Mutex<BTreeMap<String, String>>,
+}
+
+impl ClusterView {
+    pub fn new(node: &str, membership: Arc<Membership>, initial: PlacementMap) -> Arc<Self> {
+        let roster = initial.nodes().iter().cloned().collect();
+        Arc::new(ClusterView {
+            node: node.to_string(),
+            membership,
+            map: Mutex::new(initial),
+            roster: Mutex::new(roster),
+        })
+    }
+
+    pub fn node(&self) -> &str {
+        &self.node
+    }
+
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.map.lock().unwrap().epoch()
+    }
+
+    /// Snapshot of the current map.
+    pub fn map(&self) -> PlacementMap {
+        self.map.lock().unwrap().clone()
+    }
+
+    /// Adopt `other` if it wins the [`PlacementMap::should_adopt`] order
+    /// (gossip anti-entropy). Its nodes join the roster either way —
+    /// an address learned from any epoch stays learnable.
+    pub fn adopt(&self, other: PlacementMap) -> bool {
+        {
+            let mut roster = self.roster.lock().unwrap();
+            for (id, addr) in other.nodes() {
+                roster.entry(id.clone()).or_insert_with(|| addr.clone());
+            }
+        }
+        let mut map = self.map.lock().unwrap();
+        if map.should_adopt(&other) {
+            *map = other;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is `id` alive from this node's seat? Self is axiomatically alive;
+    /// everyone else must be a registered gossip member the φ detector
+    /// does not currently suspect.
+    fn is_alive(&self, id: &str) -> bool {
+        id == self.node || (self.membership.contains(id) && !self.membership.is_suspected(id))
+    }
+
+    /// Failure-driven rebalance tick. Computes the surviving node set
+    /// (current map minus suspects, plus recovered roster nodes), and if
+    /// it differs from the map's set — and this node can account for a
+    /// strict majority of the *current* map (quorum guard) — installs the
+    /// epoch-bumped successor and returns it for gossiping to peers.
+    /// Returns `None` when nothing changed or quorum is lost.
+    pub fn rebalance(&self) -> Option<PlacementMap> {
+        let mut map = self.map.lock().unwrap();
+        let alive_in_map =
+            map.nodes().iter().filter(|(id, _)| self.is_alive(id)).count();
+        // Strict majority of the map we are amending. A minority seat
+        // must freeze: it cannot tell death from its own isolation.
+        if !map.is_empty() && alive_in_map < map.nodes().len() / 2 + 1 {
+            return None;
+        }
+        let roster = self.roster.lock().unwrap();
+        let next: Vec<(String, String)> = roster
+            .iter()
+            .filter(|(id, _)| self.is_alive(id))
+            .map(|(id, addr)| (id.clone(), addr.clone()))
+            .collect();
+        if next == map.nodes() {
+            return None;
+        }
+        *map = map.advanced(next);
+        Some(map.clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,5 +305,92 @@ mod tests {
         assert_eq!(m.info("n").unwrap().incarnation, 3);
         m.join("n", 5); // restart
         assert_eq!(m.info("n").unwrap().incarnation, 5);
+    }
+
+    fn three_map() -> PlacementMap {
+        PlacementMap::new(
+            1,
+            vec![
+                ("n1".into(), "n1".into()),
+                ("n2".into(), "n2".into()),
+                ("n3".into(), "n3".into()),
+            ],
+        )
+    }
+
+    /// Beat every peer enough for the φ detector to build a rhythm.
+    fn warm(clock: &Arc<ManualClock>, m: &Membership, peers: &[&str]) {
+        for _ in 0..10 {
+            clock.advance(Duration::from_secs(1));
+            for p in peers {
+                m.heartbeat(p);
+            }
+        }
+    }
+
+    #[test]
+    fn suspected_node_is_rebalanced_out_and_back_in() {
+        let (clock, m) = fixture();
+        let view = ClusterView::new("n1", m.clone(), three_map());
+        warm(&clock, &m, &["n2", "n3"]);
+        assert!(view.rebalance().is_none(), "healthy cluster: no change");
+
+        // n2 goes silent; n3 keeps beating.
+        for _ in 0..30 {
+            clock.advance(Duration::from_secs(1));
+            m.heartbeat("n3");
+        }
+        assert!(m.is_suspected("n2"));
+        let rebalanced = view.rebalance().expect("suspect drives a new map");
+        assert_eq!(rebalanced.epoch(), 2);
+        assert!(!rebalanced.contains("n2"));
+        assert!(rebalanced.contains("n1") && rebalanced.contains("n3"));
+
+        // n2 heals: heartbeats resume, the roster re-admits it.
+        warm(&clock, &m, &["n2", "n3"]);
+        let healed = view.rebalance().expect("recovery drives a new map");
+        assert_eq!(healed.epoch(), 3);
+        assert!(healed.contains("n2"));
+    }
+
+    #[test]
+    fn minority_seat_freezes_instead_of_seceding() {
+        let (clock, m) = fixture();
+        let view = ClusterView::new("n3", m.clone(), three_map());
+        warm(&clock, &m, &["n1", "n2"]);
+        // n3 is isolated: from its seat, both peers go silent.
+        clock.advance(Duration::from_secs(30));
+        assert_eq!(m.suspects().len(), 2);
+        assert!(view.rebalance().is_none(), "1 of 3 alive: below quorum, freeze");
+        assert_eq!(view.epoch(), 1, "no epoch bump from a minority");
+        // The majority side's higher-epoch map arrives on heal: adopted.
+        let majority =
+            three_map().advanced(vec![("n1".into(), "n1".into()), ("n2".into(), "n2".into())]);
+        assert!(view.adopt(majority.clone()));
+        assert_eq!(view.map(), majority);
+        // A stale or equal-epoch echo does not regress it.
+        assert!(!view.adopt(three_map()));
+        assert_eq!(view.epoch(), 2);
+    }
+
+    #[test]
+    fn identical_failures_yield_identical_successor_maps() {
+        // Two surviving seats that observe the same suspect must compute
+        // byte-identical successors without talking to each other.
+        let (c1, m1) = fixture();
+        let (c2, m2) = fixture();
+        let v1 = ClusterView::new("n1", m1.clone(), three_map());
+        let v2 = ClusterView::new("n2", m2.clone(), three_map());
+        warm(&c1, &m1, &["n2", "n3"]);
+        warm(&c2, &m2, &["n1", "n3"]);
+        for _ in 0..30 {
+            c1.advance(Duration::from_secs(1));
+            m1.heartbeat("n2");
+            c2.advance(Duration::from_secs(1));
+            m2.heartbeat("n1");
+        }
+        let a = v1.rebalance().expect("n1 rebalances");
+        let b = v2.rebalance().expect("n2 rebalances");
+        assert_eq!(a, b, "independent seats agree on the successor map");
     }
 }

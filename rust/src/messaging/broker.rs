@@ -174,7 +174,7 @@ impl Topic {
     /// round-robin slot.
     fn pick_partition(&self, key: Option<u64>) -> usize {
         match key {
-            Some(k) => (hash64(k) % self.partitions.len() as u64) as usize,
+            Some(k) => partition_for_key(k, self.partitions.len()),
             None => self.rr.fetch_add(1, Ordering::Relaxed) % self.partitions.len(),
         }
     }
@@ -224,7 +224,7 @@ impl Topic {
         let mut which = Vec::with_capacity(len);
         for m in &msgs {
             let p = match m.key {
-                Some(k) => (hash64(k) % n as u64) as usize,
+                Some(k) => partition_for_key(k, n),
                 None => {
                     let p = rr % n;
                     rr += 1;
@@ -265,6 +265,23 @@ impl Topic {
                 (p, off)
             })
             .collect()
+    }
+
+    /// Clustered publish: append `msgs` to one **explicit** partition,
+    /// bypassing key/round-robin routing — the cluster client already
+    /// routed (with [`partition_for_key`], so client-side and in-process
+    /// routing agree) and the owner check in the wire server already
+    /// vetted that this node holds `partition`. Returns the base offset
+    /// of the appended run (input order preserved; offsets are dense).
+    pub fn publish_to(&self, partition: usize, msgs: Vec<Message>) -> u64 {
+        let log = &self.partitions[partition];
+        if msgs.is_empty() {
+            return log.end_offset();
+        }
+        // Count before the append, as in `publish` — lag may transiently
+        // over-report, never read "drained" with unconsumed messages.
+        self.published.fetch_add(msgs.len() as u64, Ordering::Relaxed);
+        log.append_batch(msgs)
     }
 
     /// Read a raw window from one partition (offset-addressed, group-free).
@@ -314,6 +331,24 @@ fn hash64(mut x: u64) -> u64 {
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     x ^ (x >> 31)
+}
+
+/// The partition a keyed message lands in — **the** routing function,
+/// public so the cluster client partitions on its side of the wire with
+/// bit-identical results to an in-process publish.
+#[inline]
+pub fn partition_for_key(key: u64, partitions: usize) -> usize {
+    (hash64(key) % partitions as u64) as usize
+}
+
+/// Conservative per-message wire cost used by byte-budgeted polls: the
+/// payload plus a fixed allowance for framing (key tag + key + timestamp
+/// + partition + offset + length prefixes). Matches the publish-side
+/// chunking estimate in the remote client, so both directions budget the
+/// same way.
+#[inline]
+pub fn wire_cost(m: &Message) -> usize {
+    m.payload.len() + 32
 }
 
 /// Number of independent topic-registry shards. Power of two so the name
@@ -614,16 +649,24 @@ impl Consumer {
     }
 
     /// The shared snapshot → lock-free read → fenced advance cycle behind
-    /// both poll flavors. Returns the polled batch with its watermarks
+    /// every poll flavor. Returns the polled batch with its watermarks
     /// and generation; `poll` discards the bookkeeping, `poll_batch`
     /// returns it for fenced commits.
-    fn poll_inner(&self, max: usize) -> PolledBatch {
+    ///
+    /// `max_bytes` bounds the batch by [`wire_cost`]: positions advance
+    /// only over the kept prefix, so budget-trimmed messages are simply
+    /// re-read by the next poll, never skipped. **Progress guarantee:**
+    /// the first message of a poll is always delivered, even when it
+    /// alone overruns the budget — a poll can be oversized, but can never
+    /// livelock returning empty against a large head-of-line message.
+    fn poll_inner(&self, max: usize, max_bytes: usize) -> PolledBatch {
         let mut messages = Vec::new();
         let mut next_offsets: Vec<(usize, u64)> = Vec::new();
         let (generation, parts, positions) = self.snapshot();
         if parts.is_empty() || max == 0 {
             return PolledBatch { messages, next_offsets, generation };
         }
+        let mut budget = max_bytes;
         let start = self.cursor.fetch_add(1, Ordering::Relaxed) % parts.len();
         for k in 0..parts.len() {
             if messages.len() >= max {
@@ -632,14 +675,24 @@ impl Consumer {
             let i = (start + k) % parts.len();
             let (p, from) = (parts[i], positions[i]);
             let batch = self.topic.partitions[p].read(from, max - messages.len());
-            if let Some((last, _)) = batch.last() {
-                next_offsets.push((p, last + 1));
+            let mut last: Option<u64> = None;
+            let mut exhausted = false;
+            for (offset, message) in batch {
+                let cost = wire_cost(&message);
+                if cost > budget && !messages.is_empty() {
+                    exhausted = true;
+                    break;
+                }
+                budget = budget.saturating_sub(cost);
+                last = Some(offset);
+                messages.push(OffsetMessage { partition: p, offset, message });
             }
-            messages.extend(batch.into_iter().map(|(offset, message)| OffsetMessage {
-                partition: p,
-                offset,
-                message,
-            }));
+            if let Some(l) = last {
+                next_offsets.push((p, l + 1));
+            }
+            if exhausted {
+                break;
+            }
         }
         self.advance_if_current(generation, &next_offsets);
         PolledBatch { messages, next_offsets, generation }
@@ -653,7 +706,7 @@ impl Consumer {
     /// this one with per-message [`Consumer::commit`] calls, which is
     /// what `perf_hotpath` measures against the batched pair.
     pub fn poll(&self, max: usize) -> Vec<OffsetMessage> {
-        self.poll_inner(max).messages
+        self.poll_inner(max, usize::MAX).messages
     }
 
     /// Poll up to `max` messages and return them together with the
@@ -664,7 +717,17 @@ impl Consumer {
     /// pay the commit lock once per batch. Within each partition,
     /// messages are in offset order.
     pub fn poll_batch(&self, max: usize) -> PolledBatch {
-        self.poll_inner(max)
+        self.poll_inner(max, usize::MAX)
+    }
+
+    /// [`Consumer::poll_batch`] with a byte budget: the batch's summed
+    /// [`wire_cost`] stays within `max_bytes` (except for a single
+    /// oversized head-of-line message — see the progress guarantee on
+    /// `poll_inner`). The wire server polls through this so a reply
+    /// `Batch` frame never encodes past `MAX_FRAME`, no matter the
+    /// payload sizes behind the count cap.
+    pub fn poll_batch_budgeted(&self, max: usize, max_bytes: usize) -> PolledBatch {
+        self.poll_inner(max, max_bytes)
     }
 
     /// Commit `next` (the next offset to read) for `partition`.
@@ -870,6 +933,57 @@ mod tests {
         let replay: Vec<u8> =
             t.read(p_single, 1, 10).into_iter().map(|(_, m)| m.payload[0]).collect();
         assert_eq!(replay, (0..6u8).collect::<Vec<_>>(), "input order preserved");
+    }
+
+    #[test]
+    fn publish_to_is_dense_and_counted() {
+        let b = broker_with_topic(3);
+        let t = b.topic("t").unwrap();
+        let base = t.publish_to(1, (0..4u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        assert_eq!(base, 0);
+        let base2 = t.publish_to(1, vec![Message::new(None, vec![9], 0)]);
+        assert_eq!(base2, 4, "offsets continue densely");
+        assert_eq!(t.end_offsets(), vec![0, 5, 0], "only the addressed partition grows");
+        assert_eq!(b.group_lag("t", "nobody"), 5, "explicit publishes count toward lag");
+        assert_eq!(t.publish_to(0, vec![]), 0, "empty append returns the end offset");
+    }
+
+    #[test]
+    fn partition_for_key_matches_broker_routing() {
+        let b = broker_with_topic(4);
+        let t = b.topic("t").unwrap();
+        for key in [0u64, 1, 42, u64::MAX] {
+            let (p, _) = t.publish(Message::new(Some(key), vec![], 0));
+            assert_eq!(p, partition_for_key(key, 4), "client-side routing agrees");
+        }
+    }
+
+    #[test]
+    fn budgeted_poll_trims_to_bytes_and_redelivers_the_rest() {
+        let b = broker_with_topic(1);
+        let t = b.topic("t").unwrap();
+        t.publish_batch((0..6u8).map(|i| Message::new(None, vec![i; 100], 0)).collect());
+        let c = b.subscribe("t", "g");
+        // Budget fits two 132-byte messages, not three.
+        let batch = c.poll_batch_budgeted(100, 300);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.next_offsets, vec![(0, 2)], "watermark covers only the kept prefix");
+        // The trimmed messages come back on the next poll — nothing skipped.
+        let rest = c.poll_batch_budgeted(100, usize::MAX);
+        let offsets: Vec<u64> = rest.messages.iter().map(|m| m.offset).collect();
+        assert_eq!(offsets, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn budgeted_poll_always_delivers_an_oversized_head_message() {
+        let b = broker_with_topic(1);
+        let t = b.topic("t").unwrap();
+        t.publish(Message::new(None, vec![7; 10_000], 0));
+        t.publish(Message::new(None, vec![8; 10_000], 0));
+        let c = b.subscribe("t", "g");
+        let batch = c.poll_batch_budgeted(100, 64);
+        assert_eq!(batch.len(), 1, "head-of-line message delivered despite the budget");
+        assert_eq!(batch.messages[0].offset, 0);
     }
 
     #[test]

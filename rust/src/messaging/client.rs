@@ -2,11 +2,14 @@
 //!
 //! [`BrokerClient`] is the narrow waist between the layers above the
 //! messaging layer (vml, processing, the experiment runner) and a broker.
-//! The in-process [`Broker`] implements it directly, and
+//! The in-process [`Broker`] implements it directly,
 //! [`RemoteBroker`](crate::transport::RemoteBroker) implements the same
-//! trait over a wire [`Connection`](crate::transport::Connection) — so a
-//! pipeline runs unchanged whether its broker lives in this process or
-//! behind a socket on another node.
+//! trait over a wire [`Connection`](crate::transport::Connection), and
+//! [`ClusterClient`](crate::transport::ClusterClient) implements it over
+//! a whole *cluster* of brokers (routing each publish to the partition's
+//! HRW owner and draining every node) — so a pipeline runs unchanged
+//! whether its broker lives in this process, behind a socket on another
+//! node, or spread across three.
 //!
 //! The trait is deliberately *batch-first and narrow*: only the calls the
 //! pipeline actually makes (create, publish a batch, subscribe, lag

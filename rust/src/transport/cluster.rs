@@ -1,0 +1,871 @@
+//! [`ClusterClient`]: the [`BrokerClient`] surface over a **multi-broker
+//! cluster** — [`RemoteBroker`](super::remote::RemoteBroker) grown a
+//! routing table.
+//!
+//! Where `RemoteBroker` speaks to one node, this client holds a
+//! [`PlacementMap`] and routes every publish to the partition's owner
+//! with [`Frame::PublishTo`], stamped with the map's cluster epoch. The
+//! routing table is **self-healing**: any [`ErrorCode::NotOwner`] or
+//! [`ErrorCode::EpochFenced`] rejection (and any unreachable owner)
+//! triggers a refresh — [`Frame::GetClusterMap`] against every known
+//! address, adopting the highest-epoch answer — and the publish reroutes.
+//! An [`ErrorCode::UnknownTopic`] rejection heals differently: the node
+//! is missing the topic (it restarted empty, or was down at create
+//! time), so the client re-creates it there and retries.
+//!
+//! Client-side partitioning uses the broker's own
+//! [`partition_for_key`](crate::messaging::broker::partition_for_key),
+//! so a keyed publish lands on exactly the partition an in-process
+//! publish would pick.
+//!
+//! # Consumption is location-transparent
+//!
+//! [`ClusterConsumer`] does **not** route polls by ownership: after a
+//! failure-driven rebalance a partition's *new* owner appends new
+//! messages while messages appended before the failure still sit on the
+//! old owner — ownership governs where publishes go, not where data
+//! lives. So the consumer keeps one broker session per node and rotates
+//! which node each `poll_batch` visits; every node's local consumer
+//! group coordinates that node's share of the data, and nothing strands.
+//! Commits are fenced to the exact `(node, session)` the batch was
+//! polled under (the cross-node analogue of `RemoteConsumer`'s
+//! poll-session fence), and any epoch fence from a node retires that
+//! node's session and refreshes the map.
+//!
+//! Failure mapping matches `RemoteBroker`: failed polls are empty
+//! batches, failed commits are `false` (redelivery), unreachable lag
+//! probes read `u64::MAX`, and publishes that exhaust their routing
+//! attempts crash the caller (let-it-crash).
+
+use super::frame::{ErrorCode, Frame};
+use super::remote::{call_retry, unexpected, RetryPolicy};
+use super::{Connection, Transport, TransportError};
+use crate::cluster::PlacementMap;
+use crate::messaging::broker::{partition_for_key, PolledBatch};
+use crate::messaging::client::{BrokerClient, ConsumerClient};
+use crate::messaging::Message;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Give a publish a few chances to chase a moving owner before giving
+/// up: each failed attempt refreshes the map, so this bounds how many
+/// rebalances a single publish can ride through, not how many network
+/// retries it makes (that is [`RetryPolicy`]).
+const ROUTING_ATTEMPTS: usize = 4;
+
+/// Publish chunk budget — same margin as `RemoteBroker`'s chunking.
+const FRAME_BUDGET: usize = super::MAX_FRAME / 2;
+
+/// Shared state behind the client and its consumers.
+struct Core {
+    transport: Arc<dyn Transport>,
+    retry: RetryPolicy,
+    /// The routing table.
+    map: Mutex<PlacementMap>,
+    /// Bootstrap addresses, always probed on refresh even when the
+    /// current map has forgotten them.
+    seeds: Vec<String>,
+    /// Connection cache per address (re-dialed on demand).
+    conns: Mutex<HashMap<String, Arc<dyn Connection>>>,
+    /// topic → partition count, recorded at create/first sight; used to
+    /// re-create topics on nodes that answer `UnknownTopic`.
+    partitions: Mutex<HashMap<String, usize>>,
+    /// Round-robin cursor for keyless publishes (client-side — each
+    /// client spreads its own keyless traffic).
+    rr: AtomicUsize,
+}
+
+impl Core {
+    fn map(&self) -> PlacementMap {
+        self.map.lock().unwrap().clone()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.map.lock().unwrap().epoch()
+    }
+
+    fn adopt(&self, other: PlacementMap) -> bool {
+        let mut map = self.map.lock().unwrap();
+        if map.should_adopt(&other) {
+            *map = other;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Connection to `addr`, cached. `None` when dialing fails.
+    fn conn(&self, addr: &str) -> Option<Arc<dyn Connection>> {
+        if let Some(c) = self.conns.lock().unwrap().get(addr) {
+            return Some(c.clone());
+        }
+        let c = self.transport.connect(addr).ok()?;
+        self.conns.lock().unwrap().insert(addr.to_string(), c.clone());
+        Some(c)
+    }
+
+    /// Refresh the routing table: ask every known address (current map ∪
+    /// seeds) for its map and adopt the winner. Unreachable nodes are
+    /// skipped — refresh succeeds if *anyone* answers.
+    fn refresh(&self) {
+        let mut addrs: Vec<String> =
+            self.map().nodes().iter().map(|(_, a)| a.clone()).collect();
+        for s in &self.seeds {
+            if !addrs.contains(s) {
+                addrs.push(s.clone());
+            }
+        }
+        for addr in addrs {
+            let Some(conn) = self.conn(&addr) else { continue };
+            if let Ok(Frame::ClusterMapIs { epoch, nodes }) =
+                call_retry(&conn, self.retry, &Frame::GetClusterMap)
+            {
+                self.adopt(PlacementMap::new(epoch, nodes));
+            }
+        }
+    }
+
+    fn record_partitions(&self, topic: &str, n: usize) {
+        self.partitions.lock().unwrap().insert(topic.to_string(), n);
+    }
+
+    fn known_partitions(&self, topic: &str) -> Option<usize> {
+        self.partitions.lock().unwrap().get(topic).copied()
+    }
+
+    /// Publish one chunk to one partition, chasing the owner across
+    /// rebalances. Returns the `(partition, offset)` placements.
+    fn publish_chunk(
+        &self,
+        topic: &str,
+        partition: usize,
+        msgs: Vec<Message>,
+    ) -> Result<Vec<(usize, u64)>, TransportError> {
+        let mut last = TransportError::Unreachable("no owner reachable".into());
+        for _ in 0..ROUTING_ATTEMPTS {
+            let map = self.map();
+            let Some((_, addr)) = map.owner_of(topic, partition) else {
+                self.refresh();
+                last = TransportError::Unreachable("empty cluster map".into());
+                continue;
+            };
+            let addr = addr.clone();
+            let Some(conn) = self.conn(&addr) else {
+                self.refresh();
+                last = TransportError::Unreachable(format!("cannot dial {addr}"));
+                continue;
+            };
+            let req = Frame::PublishTo {
+                topic: topic.to_string(),
+                partition: partition as u32,
+                epoch: map.epoch(),
+                msgs: msgs.clone(),
+            };
+            match call_retry(&conn, self.retry, &req) {
+                Ok(Frame::Placements { placements }) => {
+                    return Ok(placements.into_iter().map(|(p, o)| (p as usize, o)).collect())
+                }
+                Ok(other) => return Err(unexpected(other)),
+                Err(TransportError::Rejected {
+                    code: ErrorCode::NotOwner | ErrorCode::EpochFenced,
+                    message,
+                }) => {
+                    // Stale routing — refresh and chase the new owner.
+                    self.refresh();
+                    last = TransportError::Rejected {
+                        code: ErrorCode::NotOwner,
+                        message,
+                    };
+                }
+                Err(TransportError::Rejected { code: ErrorCode::UnknownTopic, message }) => {
+                    // The owner is missing the topic (restarted empty or
+                    // down at create time) — heal it and retry.
+                    match self.known_partitions(topic) {
+                        Some(n) => {
+                            let _ = call_retry(
+                                &conn,
+                                self.retry,
+                                &Frame::CreateTopic {
+                                    topic: topic.to_string(),
+                                    partitions: n as u32,
+                                },
+                            );
+                            last = TransportError::Rejected {
+                                code: ErrorCode::UnknownTopic,
+                                message,
+                            };
+                        }
+                        None => {
+                            return Err(TransportError::Rejected {
+                                code: ErrorCode::UnknownTopic,
+                                message,
+                            })
+                        }
+                    }
+                }
+                Err(e @ TransportError::Rejected { .. }) => return Err(e),
+                Err(e) => {
+                    // Unreachable owner: a failure the detector may not
+                    // have declared yet. Refresh — a survivor's rebalanced
+                    // map reroutes the partition.
+                    self.refresh();
+                    last = e;
+                }
+            }
+        }
+        Err(last)
+    }
+}
+
+/// A broker *cluster* behind the [`BrokerClient`] seam.
+pub struct ClusterClient {
+    core: Arc<Core>,
+}
+
+impl ClusterClient {
+    /// Build from a known initial map (tests, or a worker handed the map
+    /// out of band).
+    pub fn with_map(transport: Arc<dyn Transport>, map: PlacementMap) -> Arc<Self> {
+        Self::with_map_retry(transport, map, RetryPolicy::default())
+    }
+
+    pub fn with_map_retry(
+        transport: Arc<dyn Transport>,
+        map: PlacementMap,
+        retry: RetryPolicy,
+    ) -> Arc<Self> {
+        let seeds = map.nodes().iter().map(|(_, a)| a.clone()).collect();
+        Arc::new(ClusterClient {
+            core: Arc::new(Core {
+                transport,
+                retry,
+                map: Mutex::new(map),
+                seeds,
+                conns: Mutex::new(HashMap::new()),
+                partitions: Mutex::new(HashMap::new()),
+                rr: AtomicUsize::new(0),
+            }),
+        })
+    }
+
+    /// Bootstrap from seed addresses: fetch the cluster map from the
+    /// first seeds that answer and adopt the highest epoch. Fails only
+    /// when *no* seed is reachable.
+    pub fn connect(
+        transport: Arc<dyn Transport>,
+        seeds: Vec<String>,
+        retry: RetryPolicy,
+    ) -> Result<Arc<Self>, TransportError> {
+        let client = Arc::new(ClusterClient {
+            core: Arc::new(Core {
+                transport,
+                retry,
+                map: Mutex::new(PlacementMap::empty()),
+                seeds,
+                conns: Mutex::new(HashMap::new()),
+                partitions: Mutex::new(HashMap::new()),
+                rr: AtomicUsize::new(0),
+            }),
+        });
+        client.core.refresh();
+        if client.core.map().is_empty() {
+            return Err(TransportError::Unreachable("no seed answered with a cluster map".into()));
+        }
+        Ok(client)
+    }
+
+    /// Current routing-table snapshot (diagnostics, tests).
+    pub fn map(&self) -> PlacementMap {
+        self.core.map()
+    }
+
+    /// Force a routing-table refresh (normally automatic).
+    pub fn refresh(&self) {
+        self.core.refresh()
+    }
+
+    /// Fallible publish: client-side routing (key hash / round-robin,
+    /// identical to the broker's), owner-addressed `PublishTo` frames
+    /// chunked under the frame budget, and placements re-assembled in
+    /// input order — the same contract as
+    /// [`RemoteBroker::try_publish_batch`](super::remote::RemoteBroker::try_publish_batch),
+    /// across many nodes.
+    pub fn try_publish_batch(
+        &self,
+        topic: &str,
+        msgs: Vec<Message>,
+    ) -> Result<Vec<(usize, u64)>, TransportError> {
+        let len = msgs.len();
+        if len == 0 {
+            return Ok(Vec::new());
+        }
+        let n = match self.core.known_partitions(topic) {
+            Some(n) => n,
+            None => match self.try_partition_count(topic)? {
+                Some(n) => {
+                    self.core.record_partitions(topic, n);
+                    n
+                }
+                None => {
+                    return Err(TransportError::Rejected {
+                        code: ErrorCode::UnknownTopic,
+                        message: format!("unknown topic '{topic}'"),
+                    })
+                }
+            },
+        };
+        // Route in input order with the broker's own functions, so the
+        // cluster spread is indistinguishable from one big broker.
+        let keyless = msgs.iter().filter(|m| m.key.is_none()).count();
+        let mut rr =
+            if keyless > 0 { self.core.rr.fetch_add(keyless, Ordering::Relaxed) } else { 0 };
+        let mut which = Vec::with_capacity(len);
+        for m in &msgs {
+            let p = match m.key {
+                Some(k) => partition_for_key(k, n),
+                None => {
+                    let p = rr % n;
+                    rr += 1;
+                    p
+                }
+            };
+            which.push(p);
+        }
+        // Bucket per partition, remembering each message's input slot.
+        let mut buckets: HashMap<usize, (Vec<usize>, Vec<Message>)> = HashMap::new();
+        for (i, (m, &p)) in msgs.into_iter().zip(which.iter()).enumerate() {
+            let b = buckets.entry(p).or_default();
+            b.0.push(i);
+            b.1.push(m);
+        }
+        // Deterministic send order (HashMap iteration is not).
+        let mut parts: Vec<usize> = buckets.keys().copied().collect();
+        parts.sort_unstable();
+        let mut out: Vec<Option<(usize, u64)>> = vec![None; len];
+        for p in parts {
+            let (slots, bucket) = buckets.remove(&p).unwrap();
+            let mut done = 0;
+            let mut chunk: Vec<Message> = Vec::new();
+            let mut chunk_bytes = 0usize;
+            let mut flush = |chunk: Vec<Message>, done: &mut usize| -> Result<(), TransportError> {
+                let placed = self.core.publish_chunk(topic, p, chunk)?;
+                for placement in placed {
+                    out[slots[*done]] = Some(placement);
+                    *done += 1;
+                }
+                Ok(())
+            };
+            for m in bucket {
+                let cost = m.payload.len() + 32;
+                if !chunk.is_empty() && chunk_bytes + cost > FRAME_BUDGET {
+                    flush(std::mem::take(&mut chunk), &mut done)?;
+                    chunk_bytes = 0;
+                }
+                chunk_bytes += cost;
+                chunk.push(m);
+            }
+            flush(chunk, &mut done)?;
+        }
+        Ok(out.into_iter().map(|o| o.expect("every message placed")).collect())
+    }
+
+    /// Fallible topic creation, broadcast to every node in the map: each
+    /// node hosts the full partition set (it owns a slice of it for
+    /// publishes). Succeeds if *any* node acked — the rest heal via the
+    /// `UnknownTopic` path on first publish.
+    pub fn try_create_topic(&self, topic: &str, partitions: usize) -> Result<(), TransportError> {
+        self.core.record_partitions(topic, partitions);
+        let req =
+            Frame::CreateTopic { topic: topic.to_string(), partitions: partitions as u32 };
+        let mut last = TransportError::Unreachable("empty cluster map".into());
+        let mut created = false;
+        for (_, addr) in self.core.map().nodes() {
+            let Some(conn) = self.core.conn(addr) else {
+                last = TransportError::Unreachable(format!("cannot dial {addr}"));
+                continue;
+            };
+            match call_retry(&conn, self.core.retry, &req) {
+                Ok(Frame::Ok) => created = true,
+                Ok(other) => return Err(unexpected(other)),
+                Err(e @ TransportError::Rejected { .. }) => return Err(e),
+                Err(e) => last = e,
+            }
+        }
+        if created {
+            Ok(())
+        } else {
+            Err(last)
+        }
+    }
+
+    /// Fallible partition-count probe: first reachable node answers.
+    pub fn try_partition_count(&self, topic: &str) -> Result<Option<usize>, TransportError> {
+        let req = Frame::PartitionCount { topic: topic.to_string() };
+        let mut last = TransportError::Unreachable("empty cluster map".into());
+        for (_, addr) in self.core.map().nodes() {
+            let Some(conn) = self.core.conn(addr) else { continue };
+            match call_retry(&conn, self.core.retry, &req) {
+                Ok(Frame::Partitions { count }) => {
+                    let count = count.map(|c| c as usize);
+                    if let Some(n) = count {
+                        self.core.record_partitions(topic, n);
+                    }
+                    return Ok(count);
+                }
+                Ok(other) => return Err(unexpected(other)),
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// Sum a per-node lag probe across the cluster; `None` (→ `u64::MAX`
+    /// at the trait surface) when any node is unreachable — a partial sum
+    /// must never read as "drained".
+    fn lag_sum(&self, req: impl Fn() -> Frame) -> Option<u64> {
+        let mut total = 0u64;
+        for (_, addr) in self.core.map().nodes() {
+            let conn = self.core.conn(addr)?;
+            match call_retry(&conn, self.core.retry, &req()) {
+                Ok(Frame::Lag { lag }) => total = total.saturating_add(lag),
+                // An `UnknownTopic` rejection means "this node has no
+                // such topic yet" — zero lag there, not a failed probe.
+                Err(TransportError::Rejected { code: ErrorCode::UnknownTopic, .. }) => {}
+                _ => return None,
+            }
+        }
+        Some(total)
+    }
+
+    /// Concrete consumer handle (the trait surface boxes this; tests and
+    /// the chaos suite use it directly for per-node introspection).
+    pub fn subscribe_cluster(&self, topic: &str, group: &str) -> ClusterConsumer {
+        ClusterConsumer {
+            core: self.core.clone(),
+            topic: topic.to_string(),
+            group: group.to_string(),
+            sessions: Mutex::new(HashMap::new()),
+            cursor: AtomicUsize::new(0),
+            last_poll: Mutex::new(None),
+        }
+    }
+}
+
+impl BrokerClient for ClusterClient {
+    fn create_topic(&self, topic: &str, partitions: usize) {
+        self.try_create_topic(topic, partitions)
+            .unwrap_or_else(|e| panic!("create_topic('{topic}') across the cluster failed: {e}"));
+    }
+
+    fn partition_count(&self, topic: &str) -> Option<usize> {
+        self.try_partition_count(topic)
+            .unwrap_or_else(|e| panic!("partition_count('{topic}') across the cluster failed: {e}"))
+    }
+
+    fn publish_batch(&self, topic: &str, msgs: Vec<Message>) -> Vec<(usize, u64)> {
+        self.try_publish_batch(topic, msgs)
+            .unwrap_or_else(|e| panic!("publish to '{topic}' failed after rerouting: {e}"))
+    }
+
+    fn subscribe(&self, topic: &str, group: &str) -> Box<dyn ConsumerClient> {
+        Box::new(self.subscribe_cluster(topic, group))
+    }
+
+    fn group_lag(&self, topic: &str, group: &str) -> u64 {
+        self.lag_sum(|| Frame::GroupLag { topic: topic.to_string(), group: group.to_string() })
+            .unwrap_or(u64::MAX)
+    }
+
+    fn total_lag(&self) -> u64 {
+        self.lag_sum(|| Frame::TotalLag).unwrap_or(u64::MAX)
+    }
+}
+
+const NO_SESSION: u64 = 0;
+
+/// One consumer-group membership spread across every node of the
+/// cluster: one broker-side session per node, polled in rotation. See
+/// the module docs for why consumption ignores partition ownership.
+pub struct ClusterConsumer {
+    core: Arc<Core>,
+    topic: String,
+    group: String,
+    /// node id → session id on that node ([`NO_SESSION`] = due).
+    sessions: Mutex<HashMap<String, u64>>,
+    /// Rotates which node each poll visits.
+    cursor: AtomicUsize,
+    /// `(node, session)` of the most recent poll — commits are fenced to
+    /// it, the cross-node analogue of `RemoteConsumer::poll_session`.
+    last_poll: Mutex<Option<(String, u64)>>,
+}
+
+impl ClusterConsumer {
+    /// The node the most recent poll ran against (chaos-suite probes).
+    pub fn last_polled_node(&self) -> Option<String> {
+        self.last_poll.lock().unwrap().as_ref().map(|(n, _)| n.clone())
+    }
+
+    /// Session on `node`, subscribing if there is none. `None` when the
+    /// node is unreachable or the topic is not there yet.
+    fn session_on(&self, node: &str, addr: &str) -> Option<u64> {
+        if let Some(&s) = self.sessions.lock().unwrap().get(node) {
+            if s != NO_SESSION {
+                return Some(s);
+            }
+        }
+        let conn = self.core.conn(addr)?;
+        let req = Frame::Subscribe { topic: self.topic.clone(), group: self.group.clone() };
+        match call_retry(&conn, self.core.retry, &req) {
+            Ok(Frame::Subscribed { session }) => {
+                self.sessions.lock().unwrap().insert(node.to_string(), session);
+                Some(session)
+            }
+            Err(TransportError::Rejected { code: ErrorCode::UnknownTopic, .. }) => {
+                // Heal like the publish path: the node is missing the
+                // topic — create it (when we know the partition count)
+                // and let the next rotation subscribe.
+                if let Some(n) = self.core.known_partitions(&self.topic) {
+                    let _ = call_retry(
+                        &conn,
+                        self.core.retry,
+                        &Frame::CreateTopic {
+                            topic: self.topic.clone(),
+                            partitions: n as u32,
+                        },
+                    );
+                }
+                None
+            }
+            _ => None,
+        }
+    }
+
+    /// Drop the session on `node`; the next visit resubscribes.
+    fn drop_session(&self, node: &str) {
+        self.sessions.lock().unwrap().remove(node);
+    }
+
+    fn empty() -> PolledBatch {
+        PolledBatch { messages: Vec::new(), next_offsets: Vec::new(), generation: 0 }
+    }
+}
+
+impl ConsumerClient for ClusterConsumer {
+    fn assignment(&self) -> Vec<usize> {
+        // Union across nodes: each node's local group assigns this member
+        // a slice of the full partition set.
+        let mut parts: Vec<usize> = Vec::new();
+        for (node, addr) in self.core.map().nodes() {
+            let Some(session) = self.session_on(node, addr) else { continue };
+            let Some(conn) = self.core.conn(addr) else { continue };
+            if let Ok(Frame::AssignmentIs { partitions }) =
+                call_retry(&conn, self.core.retry, &Frame::Assignment { session })
+            {
+                parts.extend(partitions.into_iter().map(|p| p as usize));
+            }
+        }
+        parts.sort_unstable();
+        parts.dedup();
+        parts
+    }
+
+    fn poll_batch(&self, max: usize) -> PolledBatch {
+        // One node per poll, rotating — so every node's share of the data
+        // is drained by steady re-polling, and one dead node costs one
+        // empty poll, not a stall.
+        let map = self.core.map();
+        let nodes = map.nodes();
+        if nodes.is_empty() {
+            return Self::empty();
+        }
+        let (node, addr) = &nodes[self.cursor.fetch_add(1, Ordering::Relaxed) % nodes.len()];
+        let Some(session) = self.session_on(node, addr) else { return Self::empty() };
+        let Some(conn) = self.core.conn(addr) else { return Self::empty() };
+        *self.last_poll.lock().unwrap() = Some((node.clone(), session));
+        let req = Frame::PollBatch { session, max: max.min(u32::MAX as usize) as u32 };
+        match call_retry(&conn, self.core.retry, &req) {
+            Ok(Frame::Batch { generation, messages, next_offsets }) => {
+                super::frame::frame_to_batch(generation, messages, next_offsets)
+            }
+            Err(TransportError::Rejected { code: ErrorCode::UnknownSession, .. }) => {
+                self.drop_session(node);
+                Self::empty()
+            }
+            Err(TransportError::Rejected { code: ErrorCode::EpochFenced, .. }) => {
+                // The cluster rebalanced: this session is retired. Learn
+                // the new map now; the next rotation resubscribes under
+                // the new epoch.
+                self.drop_session(node);
+                self.core.refresh();
+                Self::empty()
+            }
+            _ => Self::empty(),
+        }
+    }
+
+    fn commit(&self, partition: usize, next: u64) {
+        // Single commits address whatever node the last poll read from —
+        // that is where the polled offsets live.
+        let Some((node, session)) = self.last_poll.lock().unwrap().clone() else { return };
+        let map = self.core.map();
+        let Some(addr) = map.addr_of(&node) else { return };
+        let Some(conn) = self.core.conn(addr) else { return };
+        match call_retry(
+            &conn,
+            self.core.retry,
+            &Frame::Commit { session, partition: partition as u32, next },
+        ) {
+            Err(TransportError::Rejected {
+                code: ErrorCode::UnknownSession | ErrorCode::EpochFenced,
+                ..
+            }) => self.drop_session(&node),
+            _ => {}
+        }
+    }
+
+    fn commit_batch(&self, batch: &PolledBatch) -> bool {
+        if batch.next_offsets.is_empty() {
+            return true;
+        }
+        // Fence to the exact (node, session) that polled the batch: if
+        // that session was dropped or replaced since, the batch is stale
+        // and must redeliver — never commit it through a fresh session.
+        let Some((node, session)) = self.last_poll.lock().unwrap().clone() else { return false };
+        if self.sessions.lock().unwrap().get(&node) != Some(&session) {
+            return false;
+        }
+        let map = self.core.map();
+        let Some(addr) = map.addr_of(&node) else { return false };
+        let Some(conn) = self.core.conn(addr) else { return false };
+        let req = Frame::CommitBatch {
+            session,
+            generation: batch.generation,
+            next_offsets: batch.next_offsets.iter().map(|&(p, n)| (p as u32, n)).collect(),
+        };
+        match call_retry(&conn, self.core.retry, &req) {
+            Ok(Frame::Committed { applied }) => applied,
+            Err(TransportError::Rejected {
+                code: ErrorCode::UnknownSession | ErrorCode::EpochFenced,
+                ..
+            }) => {
+                self.drop_session(&node);
+                false
+            }
+            _ => false,
+        }
+    }
+
+    fn close(self: Box<Self>) {
+        let sessions = self.sessions.lock().unwrap().clone();
+        let map = self.core.map();
+        for (node, session) in sessions {
+            if session == NO_SESSION {
+                continue;
+            }
+            let Some(addr) = map.addr_of(&node) else { continue };
+            let Some(conn) = self.core.conn(addr) else { continue };
+            let _ = call_retry(&conn, self.core.retry, &Frame::Leave { session });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterView, Membership};
+    use crate::messaging::Broker;
+    use crate::sim::SimScheduler;
+    use crate::transport::server::BrokerService;
+    use crate::transport::sim::SimTransport;
+    use std::time::Duration;
+
+    fn no_backoff() -> RetryPolicy {
+        RetryPolicy { attempts: 1, backoff: Duration::ZERO }
+    }
+
+    struct Node {
+        broker: Arc<Broker>,
+        view: Arc<ClusterView>,
+    }
+
+    /// Three clustered brokers at sim addresses n1/n2/n3, epoch-1 map.
+    fn three_nodes(
+        seed: u64,
+    ) -> (Arc<SimScheduler>, SimTransport, Vec<Node>, Arc<ClusterClient>) {
+        let sched = Arc::new(SimScheduler::new(seed));
+        let transport = SimTransport::new(sched.clone());
+        let names = ["n1", "n2", "n3"];
+        let map = PlacementMap::new(
+            1,
+            names.iter().map(|n| (n.to_string(), n.to_string())).collect(),
+        );
+        let mut nodes = Vec::new();
+        for n in names {
+            let membership = Membership::new(sched.clock(), 8.0);
+            let view = ClusterView::new(n, membership, map.clone());
+            let broker = Broker::new();
+            transport.serve(n, BrokerService::with_cluster(broker.clone(), view.clone())).unwrap();
+            nodes.push(Node { broker, view });
+        }
+        let client = ClusterClient::with_map_retry(
+            Arc::new(transport.clone()),
+            map,
+            no_backoff(),
+        );
+        (sched, transport, nodes, client)
+    }
+
+    #[test]
+    fn publishes_land_on_owners_and_spread() {
+        let (_s, _t, nodes, client) = three_nodes(1);
+        client.create_topic("t", 12);
+        let placed = client.publish_batch(
+            "t",
+            (0..48u8).map(|i| Message::new(None, vec![i], 0)).collect(),
+        );
+        assert_eq!(placed.len(), 48);
+        // Every message sits on its partition's owner, and nowhere else.
+        let map = client.map();
+        for (i, node) in nodes.iter().enumerate() {
+            let name = format!("n{}", i + 1);
+            let owned = map.owned_partitions("t", 12, &name);
+            let topic = node.broker.topic("t").unwrap();
+            let end = topic.end_offsets();
+            for (p, &count) in end.iter().enumerate() {
+                if owned.contains(&p) {
+                    assert_eq!(count, 4, "partition {p} on {name}: 48/12 each");
+                } else {
+                    assert_eq!(count, 0, "partition {p} must not leak onto {name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keyed_routing_matches_in_process_broker() {
+        let (_s, _t, _nodes, client) = three_nodes(2);
+        client.create_topic("t", 8);
+        let reference = Broker::new();
+        reference.create_topic("t", 8);
+        for key in [1u64, 7, 99, 12345] {
+            let remote = client.publish_batch("t", vec![Message::new(Some(key), vec![1], 0)]);
+            let local = reference
+                .topic("t")
+                .unwrap()
+                .publish(Message::new(Some(key), vec![1], 0));
+            assert_eq!(remote[0].0, local.0, "key {key} routed identically");
+        }
+    }
+
+    #[test]
+    fn consumer_drains_every_node_and_commits() {
+        let (_s, _t, _nodes, client) = three_nodes(3);
+        client.create_topic("t", 12);
+        client.publish_batch("t", (0..60u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        let consumer = client.subscribe("t", "g");
+        let mut seen = 0;
+        // Rotation: poll until every node's share has drained.
+        for _ in 0..64 {
+            let batch = consumer.poll_batch(100);
+            seen += batch.len();
+            assert!(consumer.commit_batch(&batch));
+            if seen == 60 {
+                break;
+            }
+        }
+        assert_eq!(seen, 60, "every node's share delivered");
+        assert_eq!(client.total_lag(), 0, "commits landed on every node");
+        consumer.close();
+    }
+
+    #[test]
+    fn stale_client_reroutes_after_rebalance() {
+        let (_s, transport, nodes, client) = three_nodes(4);
+        client.create_topic("t", 12);
+        // The cluster rebalances to {n1, n2} at epoch 2 — but this client
+        // still holds the epoch-1 map.
+        let survivors: Vec<(String, String)> =
+            vec![("n1".into(), "n1".into()), ("n2".into(), "n2".into())];
+        for i in 0..2 {
+            assert!(nodes[i].view.adopt(nodes[i].view.map().advanced(survivors.clone())));
+        }
+        transport.partition("n3", true); // and n3 is gone
+        let placed = client.publish_batch(
+            "t",
+            (0..24u8).map(|i| Message::new(None, vec![i], 0)).collect(),
+        );
+        assert_eq!(placed.len(), 24, "rerouted through EpochFenced/NotOwner");
+        assert_eq!(client.map().epoch(), 2, "client adopted the rebalanced map");
+        let on_n1: u64 = nodes[0].broker.topic("t").unwrap().total_messages();
+        let on_n2: u64 = nodes[1].broker.topic("t").unwrap().total_messages();
+        assert_eq!(on_n1 + on_n2, 24, "survivors hold everything");
+    }
+
+    #[test]
+    fn unknown_topic_on_one_node_heals_by_recreation() {
+        let (_s, transport, nodes, client) = three_nodes(5);
+        client.create_topic("t", 12);
+        // n2 "restarts empty": fresh broker, same address, same view.
+        let fresh = Broker::new();
+        transport
+            .serve("n2", BrokerService::with_cluster(fresh.clone(), nodes[1].view.clone()))
+            .unwrap();
+        let placed = client.publish_batch(
+            "t",
+            (0..24u8).map(|i| Message::new(None, vec![i], 0)).collect(),
+        );
+        assert_eq!(placed.len(), 24);
+        assert!(fresh.topic("t").is_some(), "topic re-created on the restarted node");
+    }
+
+    #[test]
+    fn bootstrap_from_seeds_adopts_the_map() {
+        let (_s, transport, _nodes, _client) = three_nodes(6);
+        let client = ClusterClient::connect(
+            Arc::new(transport.clone()),
+            vec!["n2".into()],
+            no_backoff(),
+        )
+        .unwrap();
+        assert_eq!(client.map().epoch(), 1);
+        assert_eq!(client.map().nodes().len(), 3);
+        // No seed reachable → an error, not an empty-map client.
+        transport.partition("n1", true);
+        assert!(ClusterClient::connect(
+            Arc::new(transport.clone()),
+            vec!["n1".into()],
+            no_backoff(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn commit_fenced_to_the_session_that_polled() {
+        let (_s, _t, nodes, client) = three_nodes(7);
+        client.create_topic("t", 3);
+        client.publish_batch("t", (0..30u8).map(|i| Message::new(None, vec![i], 0)).collect());
+        let consumer = client.subscribe_cluster("t", "g");
+        let batch = poll_until_nonempty(&consumer);
+        // An epoch bump on the polled node retires its session server-side.
+        let polled = consumer.last_polled_node().unwrap();
+        let idx = polled.trim_start_matches('n').parse::<usize>().unwrap() - 1;
+        let view = &nodes[idx].view;
+        assert!(view.adopt(view.map().advanced(vec![(polled.clone(), polled.clone())])));
+        assert!(!consumer.commit_batch(&batch), "stale batch must not commit");
+        // Redelivery: the same offsets come around again on that node.
+        let again = poll_until_nonempty(&consumer);
+        assert!(!again.messages.is_empty());
+        Box::new(consumer).close();
+    }
+
+    fn poll_until_nonempty(consumer: &ClusterConsumer) -> PolledBatch {
+        for _ in 0..16 {
+            let b = consumer.poll_batch(10);
+            if !b.messages.is_empty() {
+                return b;
+            }
+        }
+        panic!("no node delivered within 16 rotations");
+    }
+}

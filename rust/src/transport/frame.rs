@@ -105,6 +105,14 @@ pub enum ErrorCode {
     /// clients respond by resubscribing.
     UnknownSession,
     BadRequest,
+    /// This node does not own the addressed partition under the current
+    /// placement map; clients respond by refreshing their routing table.
+    /// The message names the owner's node id when the node knows it.
+    NotOwner,
+    /// The request was stamped with a cluster epoch that differs from
+    /// this node's; clients respond by refreshing the map (and consumers
+    /// by resubscribing — their broker session was retired).
+    EpochFenced,
 }
 
 impl ErrorCode {
@@ -114,6 +122,8 @@ impl ErrorCode {
             ErrorCode::UnknownTopic => 1,
             ErrorCode::UnknownSession => 2,
             ErrorCode::BadRequest => 3,
+            ErrorCode::NotOwner => 4,
+            ErrorCode::EpochFenced => 5,
         }
     }
 
@@ -123,6 +133,8 @@ impl ErrorCode {
             1 => ErrorCode::UnknownTopic,
             2 => ErrorCode::UnknownSession,
             3 => ErrorCode::BadRequest,
+            4 => ErrorCode::NotOwner,
+            5 => ErrorCode::EpochFenced,
             _ => return Err(FrameError::Malformed("unknown error code")),
         })
     }
@@ -149,6 +161,14 @@ pub enum Frame {
     GroupLag { topic: String, group: String },
     TotalLag,
     PartitionCount { topic: String },
+    /// Clustered publish: address one partition explicitly, stamped with
+    /// the sender's cluster epoch. The receiving node rejects it with
+    /// [`ErrorCode::NotOwner`] / [`ErrorCode::EpochFenced`] when the
+    /// routing is stale — that rejection *is* the routing-refresh signal.
+    PublishTo { topic: String, partition: u32, epoch: u64, msgs: Vec<Message> },
+    /// Ask a node for its current placement map (answered by
+    /// [`Frame::ClusterMapIs`]).
+    GetClusterMap,
     // ---- broker → client responses
     Ok,
     Placements { placements: Vec<(u32, u64)> },
@@ -159,6 +179,11 @@ pub enum Frame {
     Lag { lag: u64 },
     Partitions { count: Option<u32> },
     Error { code: ErrorCode, message: String },
+    /// A placement map: `(epoch, sorted (node id, address) set)`. Sent as
+    /// a call response to [`Frame::GetClusterMap`] *and* gossiped as a
+    /// one-way cast between nodes after a rebalance (anti-entropy — the
+    /// receiver adopts it iff it wins the epoch/tie-break order).
+    ClusterMapIs { epoch: u64, nodes: Vec<(String, String)> },
     // ---- membership gossip (node ↔ node, usually one-way casts)
     Join { node: String, incarnation: u64 },
     LeaveNode { node: String },
@@ -176,6 +201,8 @@ const K_LEAVE: u8 = 8;
 const K_GROUP_LAG: u8 = 9;
 const K_TOTAL_LAG: u8 = 10;
 const K_PARTITION_COUNT: u8 = 11;
+const K_PUBLISH_TO: u8 = 12;
+const K_GET_CLUSTER_MAP: u8 = 13;
 const K_OK: u8 = 32;
 const K_PLACEMENTS: u8 = 33;
 const K_SUBSCRIBED: u8 = 34;
@@ -185,6 +212,7 @@ const K_ASSIGNMENT_IS: u8 = 37;
 const K_LAG: u8 = 38;
 const K_PARTITIONS: u8 = 39;
 const K_ERROR: u8 = 40;
+const K_CLUSTER_MAP_IS: u8 = 41;
 const K_JOIN: u8 = 64;
 const K_LEAVE_NODE: u8 = 65;
 const K_HEARTBEAT: u8 = 66;
@@ -337,6 +365,8 @@ impl Frame {
             Frame::GroupLag { .. } => K_GROUP_LAG,
             Frame::TotalLag => K_TOTAL_LAG,
             Frame::PartitionCount { .. } => K_PARTITION_COUNT,
+            Frame::PublishTo { .. } => K_PUBLISH_TO,
+            Frame::GetClusterMap => K_GET_CLUSTER_MAP,
             Frame::Ok => K_OK,
             Frame::Placements { .. } => K_PLACEMENTS,
             Frame::Subscribed { .. } => K_SUBSCRIBED,
@@ -346,6 +376,7 @@ impl Frame {
             Frame::Lag { .. } => K_LAG,
             Frame::Partitions { .. } => K_PARTITIONS,
             Frame::Error { .. } => K_ERROR,
+            Frame::ClusterMapIs { .. } => K_CLUSTER_MAP_IS,
             Frame::Join { .. } => K_JOIN,
             Frame::LeaveNode { .. } => K_LEAVE_NODE,
             Frame::Heartbeat { .. } => K_HEARTBEAT,
@@ -366,6 +397,8 @@ impl Frame {
             Frame::GroupLag { .. } => "group-lag",
             Frame::TotalLag => "total-lag",
             Frame::PartitionCount { .. } => "partition-count",
+            Frame::PublishTo { .. } => "publish-to",
+            Frame::GetClusterMap => "get-cluster-map",
             Frame::Ok => "ok",
             Frame::Placements { .. } => "placements",
             Frame::Subscribed { .. } => "subscribed",
@@ -375,6 +408,7 @@ impl Frame {
             Frame::Lag { .. } => "lag",
             Frame::Partitions { .. } => "partitions",
             Frame::Error { .. } => "error",
+            Frame::ClusterMapIs { .. } => "cluster-map-is",
             Frame::Join { .. } => "join",
             Frame::LeaveNode { .. } => "leave-node",
             Frame::Heartbeat { .. } => "heartbeat",
@@ -382,8 +416,16 @@ impl Frame {
     }
 
     /// Is this a membership-gossip frame (routed to the gossip service)?
+    /// [`Frame::ClusterMapIs`] counts: as a *cast* it is map anti-entropy
+    /// between nodes; as a call *response* it never reaches this router.
     pub fn is_gossip(&self) -> bool {
-        matches!(self, Frame::Join { .. } | Frame::LeaveNode { .. } | Frame::Heartbeat { .. })
+        matches!(
+            self,
+            Frame::Join { .. }
+                | Frame::LeaveNode { .. }
+                | Frame::Heartbeat { .. }
+                | Frame::ClusterMapIs { .. }
+        )
     }
 
     fn put_body(&self, b: &mut Vec<u8>) {
@@ -422,8 +464,17 @@ impl Frame {
                 put_str(b, topic);
                 put_str(b, group);
             }
-            Frame::TotalLag | Frame::Ok => {}
+            Frame::TotalLag | Frame::Ok | Frame::GetClusterMap => {}
             Frame::PartitionCount { topic } => put_str(b, topic),
+            Frame::PublishTo { topic, partition, epoch, msgs } => {
+                put_str(b, topic);
+                put_u32(b, *partition);
+                put_u64(b, *epoch);
+                put_u32(b, msgs.len() as u32);
+                for m in msgs {
+                    put_msg(b, m);
+                }
+            }
             Frame::Placements { placements } => put_pairs(b, placements),
             Frame::Subscribed { session } => put_u64(b, *session),
             Frame::Batch { generation, messages, next_offsets } => {
@@ -454,6 +505,14 @@ impl Frame {
             Frame::Error { code, message } => {
                 b.push(code.to_u8());
                 put_str(b, message);
+            }
+            Frame::ClusterMapIs { epoch, nodes } => {
+                put_u64(b, *epoch);
+                put_u32(b, nodes.len() as u32);
+                for (id, addr) in nodes {
+                    put_str(b, id);
+                    put_str(b, addr);
+                }
             }
             Frame::Join { node, incarnation } => {
                 put_str(b, node);
@@ -498,6 +557,18 @@ impl Frame {
             K_GROUP_LAG => Frame::GroupLag { topic: rd.string()?, group: rd.string()? },
             K_TOTAL_LAG => Frame::TotalLag,
             K_PARTITION_COUNT => Frame::PartitionCount { topic: rd.string()? },
+            K_PUBLISH_TO => {
+                let topic = rd.string()?;
+                let partition = rd.u32()?;
+                let epoch = rd.u64()?;
+                let n = rd.count(13)?; // tag + produced_at + payload len
+                let mut msgs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    msgs.push(rd.msg()?);
+                }
+                Frame::PublishTo { topic, partition, epoch, msgs }
+            }
+            K_GET_CLUSTER_MAP => Frame::GetClusterMap,
             K_OK => Frame::Ok,
             K_PLACEMENTS => Frame::Placements { placements: rd.pairs()? },
             K_SUBSCRIBED => Frame::Subscribed { session: rd.u64()? },
@@ -540,6 +611,17 @@ impl Frame {
                 code: ErrorCode::from_u8(rd.u8()?)?,
                 message: rd.string()?,
             },
+            K_CLUSTER_MAP_IS => {
+                let epoch = rd.u64()?;
+                let n = rd.count(4)?; // two u16 length prefixes minimum
+                let mut nodes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let id = rd.string()?;
+                    let addr = rd.string()?;
+                    nodes.push((id, addr));
+                }
+                Frame::ClusterMapIs { epoch, nodes }
+            }
             K_JOIN => Frame::Join { node: rd.string()?, incarnation: rd.u64()? },
             K_LEAVE_NODE => Frame::LeaveNode { node: rd.string()? },
             K_HEARTBEAT => Frame::Heartbeat { node: rd.string()?, seq: rd.u64()? },
@@ -666,6 +748,24 @@ mod tests {
             Frame::Partitions { count: Some(4) },
             Frame::Partitions { count: None },
             Frame::Error { code: ErrorCode::UnknownSession, message: "gone".into() },
+            Frame::PublishTo {
+                topic: "t".into(),
+                partition: 2,
+                epoch: 5,
+                msgs: vec![Message::new(Some(1), vec![4, 5], 6)],
+            },
+            Frame::PublishTo { topic: "t".into(), partition: 0, epoch: 0, msgs: vec![] },
+            Frame::GetClusterMap,
+            Frame::ClusterMapIs {
+                epoch: 7,
+                nodes: vec![
+                    ("n1".into(), "sim://n1".into()),
+                    ("n2".into(), "sim://n2".into()),
+                ],
+            },
+            Frame::ClusterMapIs { epoch: 0, nodes: vec![] },
+            Frame::Error { code: ErrorCode::NotOwner, message: "owner=n2".into() },
+            Frame::Error { code: ErrorCode::EpochFenced, message: "epoch=9".into() },
             Frame::Join { node: "w1".into(), incarnation: 2 },
             Frame::LeaveNode { node: "w1".into() },
             Frame::Heartbeat { node: "w1".into(), seq: 77 },

@@ -16,7 +16,8 @@
 
 use super::frame::{ErrorCode, Frame};
 use super::{Connection, Service, TransportError};
-use crate::cluster::membership::Membership;
+use crate::cluster::membership::{ClusterView, Membership};
+use crate::cluster::PlacementMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -24,11 +25,21 @@ use std::time::Duration;
 /// The receiving end of membership gossip.
 pub struct GossipService {
     membership: Arc<Membership>,
+    /// When the node is clustered, [`Frame::ClusterMapIs`] casts feed the
+    /// view's anti-entropy ([`ClusterView::adopt`]). Without a view they
+    /// are acknowledged and ignored — a standalone node has no map.
+    view: Option<Arc<ClusterView>>,
 }
 
 impl GossipService {
     pub fn new(membership: Arc<Membership>) -> Arc<Self> {
-        Arc::new(GossipService { membership })
+        Arc::new(GossipService { membership, view: None })
+    }
+
+    /// Gossip for a clustered node: membership frames as before, plus
+    /// placement-map anti-entropy into `view`.
+    pub fn with_view(view: Arc<ClusterView>) -> Arc<Self> {
+        Arc::new(GossipService { membership: view.membership().clone(), view: Some(view) })
     }
 
     pub fn membership(&self) -> Arc<Membership> {
@@ -49,6 +60,12 @@ impl Service for GossipService {
             }
             Frame::Heartbeat { node, .. } => {
                 self.membership.heartbeat(&node);
+                Frame::Ok
+            }
+            Frame::ClusterMapIs { epoch, nodes } => {
+                if let Some(view) = &self.view {
+                    view.adopt(PlacementMap::new(epoch, nodes));
+                }
                 Frame::Ok
             }
             other => Frame::Error {
@@ -195,6 +212,33 @@ mod tests {
         transport.partition("seed-node", false);
         sched.run_for(Duration::from_secs(2));
         assert!(!membership.is_suspected("w1"), "recovery clears suspicion");
+    }
+
+    #[test]
+    fn cluster_map_casts_feed_anti_entropy() {
+        use crate::cluster::ClusterView;
+        let sched = Arc::new(SimScheduler::new(11));
+        let transport = SimTransport::new(sched.clone());
+        let membership = Membership::new(sched.clock(), 8.0);
+        let view = ClusterView::new(
+            "n1",
+            membership,
+            PlacementMap::new(1, vec![("n1".into(), "sim://n1".into())]),
+        );
+        transport.serve("n1", GossipService::with_view(view.clone())).unwrap();
+        let conn = transport.connect("n1").unwrap();
+        conn.cast(Frame::ClusterMapIs {
+            epoch: 3,
+            nodes: vec![("n1".into(), "sim://n1".into()), ("n2".into(), "sim://n2".into())],
+        })
+        .unwrap();
+        sched.run_for(Duration::ZERO);
+        assert_eq!(view.epoch(), 3, "higher-epoch map adopted from a cast");
+        assert!(view.map().contains("n2"));
+        // A stale echo arriving late never regresses the view.
+        conn.cast(Frame::ClusterMapIs { epoch: 2, nodes: vec![] }).unwrap();
+        sched.run_for(Duration::ZERO);
+        assert_eq!(view.epoch(), 3);
     }
 
     #[test]

@@ -37,6 +37,7 @@
 //! sessions, and remote consumers transparently resubscribe and resume
 //! from the broker's committed offsets.
 
+pub mod cluster;
 pub mod frame;
 pub mod gossip;
 pub mod remote;
@@ -44,6 +45,7 @@ pub mod server;
 pub mod sim;
 pub mod tcp;
 
+pub use cluster::{ClusterClient, ClusterConsumer};
 pub use frame::{ErrorCode, Frame, FrameError, FLAG_NO_REPLY, MAX_FRAME, WIRE_VERSION};
 pub use gossip::{Gossiper, GossipService};
 pub use remote::{RemoteBroker, RetryPolicy};

@@ -53,7 +53,7 @@ impl Default for RetryPolicy {
     }
 }
 
-fn call_retry(
+pub(super) fn call_retry(
     conn: &Arc<dyn Connection>,
     retry: RetryPolicy,
     req: &Frame,
@@ -75,7 +75,7 @@ fn call_retry(
     Err(last)
 }
 
-fn unexpected(frame: Frame) -> TransportError {
+pub(super) fn unexpected(frame: Frame) -> TransportError {
     TransportError::Io(format!("unexpected response frame '{}'", frame.kind_name()))
 }
 

@@ -14,9 +14,20 @@
 //! (bad partition indexes, unknown topics, mismatched partition counts
 //! are all [`Frame::Error`] responses), because a wire peer must not be
 //! able to kill a broker thread.
+//!
+//! A service built with [`BrokerService::with_cluster`] additionally
+//! enforces the **cluster data plane**: [`Frame::PublishTo`] is accepted
+//! only for partitions this node owns under the current placement map
+//! (else [`ErrorCode::NotOwner`]) and only at the current cluster epoch
+//! (else [`ErrorCode::EpochFenced`]); consumer sessions are stamped with
+//! the epoch they subscribed under, and any poll/commit after a rebalance
+//! bumped the epoch retires the session with `EpochFenced` — so a commit
+//! decided against the old partition layout can never land on the new
+//! one.
 
-use super::frame::{batch_to_frame, ErrorCode, Frame};
+use super::frame::{batch_to_frame, ErrorCode, Frame, MAX_FRAME};
 use super::Service;
+use crate::cluster::ClusterView;
 use crate::messaging::broker::{Broker, Consumer};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,6 +38,10 @@ struct Session {
     consumer: Arc<Consumer>,
     /// Partition count of the session's topic, for request validation.
     partitions: usize,
+    /// Cluster epoch this session subscribed under (0 when the service
+    /// is not clustered). A rebalance bumps the node's epoch and fences
+    /// every older session.
+    epoch: u64,
     /// Last time any frame addressed this session (reaping — see
     /// [`BrokerService::reap_idle`]).
     last_used: Mutex<Instant>,
@@ -63,6 +78,10 @@ pub struct BrokerService {
     broker: Arc<Broker>,
     sessions: RwLock<HashMap<u64, Arc<Session>>>,
     next_session: AtomicU64,
+    /// This node's cluster seat, when built with
+    /// [`BrokerService::with_cluster`] — drives the owner checks and
+    /// epoch fences. `None` = standalone broker, no cluster semantics.
+    view: Option<Arc<ClusterView>>,
 }
 
 fn err(code: ErrorCode, message: String) -> Frame {
@@ -88,7 +107,38 @@ impl BrokerService {
             broker,
             sessions: RwLock::new(HashMap::new()),
             next_session: AtomicU64::new(session_seed()),
+            view: None,
         })
+    }
+
+    /// A clustered service: one node's seat in the multi-broker data
+    /// plane. Enables the [`Frame::PublishTo`] owner check, the
+    /// [`Frame::GetClusterMap`] answer, and epoch fencing of sessions.
+    pub fn with_cluster(broker: Arc<Broker>, view: Arc<ClusterView>) -> Arc<Self> {
+        Arc::new(BrokerService {
+            broker,
+            sessions: RwLock::new(HashMap::new()),
+            next_session: AtomicU64::new(session_seed()),
+            view: Some(view),
+        })
+    }
+
+    /// Epoch fence: `None` when the session may proceed. A session
+    /// subscribed under an older cluster epoch is **retired** (removed,
+    /// its group membership released) and the caller gets
+    /// [`ErrorCode::EpochFenced`] — the client's move is to refresh its
+    /// map and resubscribe under the current epoch.
+    fn fenced(&self, id: u64, s: &Session) -> Option<Frame> {
+        let view = self.view.as_ref()?;
+        let now = view.epoch();
+        if s.epoch == now {
+            return None;
+        }
+        self.sessions.write().unwrap().remove(&id);
+        Some(err(
+            ErrorCode::EpochFenced,
+            format!("session epoch {} behind cluster epoch {now}", s.epoch),
+        ))
     }
 
     /// Live remote consumer sessions (diagnostics).
@@ -162,6 +212,7 @@ impl Service for BrokerService {
                 let session = Arc::new(Session {
                     consumer: Arc::new(consumer),
                     partitions: t.partition_count(),
+                    epoch: self.view.as_ref().map(|v| v.epoch()).unwrap_or(0),
                     last_used: Mutex::new(Instant::now()),
                 });
                 self.sessions.write().unwrap().insert(id, session);
@@ -169,20 +220,29 @@ impl Service for BrokerService {
             }
             Frame::PollBatch { session, max } => match self.session(session) {
                 None => err(ErrorCode::UnknownSession, format!("unknown session {session}")),
-                // Cap the poll so one response frame can never blow the
-                // frame size cap by message *count* alone. Known
-                // limitation: the cap is count-based, not byte-based — a
-                // poll of multi-megabyte payloads could still encode past
-                // MAX_FRAME and strand the advanced positions until a
-                // rebalance rewinds them. The pipelines here carry ≤ KiB
-                // payloads; a byte-budgeted poll needs support in
-                // `Consumer::poll_batch` itself and is future work.
-                Some(s) => batch_to_frame(s.consumer.poll_batch((max as usize).min(65_536))),
+                Some(s) => {
+                    if let Some(fence) = self.fenced(session, &s) {
+                        return fence;
+                    }
+                    // Cap the poll by count *and* by encoded bytes: the
+                    // byte budget (half the frame cap, same margin as the
+                    // publish-side chunking) guarantees the reply Batch
+                    // encodes within MAX_FRAME no matter the payload
+                    // sizes — except a single oversized head-of-line
+                    // message, which inbound chunking already bounds to
+                    // fit. Trimmed messages are re-served next poll.
+                    batch_to_frame(
+                        s.consumer.poll_batch_budgeted((max as usize).min(65_536), MAX_FRAME / 2),
+                    )
+                }
             },
             Frame::CommitBatch { session, generation, next_offsets } => {
                 match self.session(session) {
                     None => err(ErrorCode::UnknownSession, format!("unknown session {session}")),
                     Some(s) => {
+                        if let Some(fence) = self.fenced(session, &s) {
+                            return fence;
+                        }
                         if next_offsets.iter().any(|&(p, _)| p as usize >= s.partitions) {
                             return err(
                                 ErrorCode::BadRequest,
@@ -197,6 +257,9 @@ impl Service for BrokerService {
             Frame::Commit { session, partition, next } => match self.session(session) {
                 None => err(ErrorCode::UnknownSession, format!("unknown session {session}")),
                 Some(s) => {
+                    if let Some(fence) = self.fenced(session, &s) {
+                        return fence;
+                    }
                     if partition as usize >= s.partitions {
                         return err(
                             ErrorCode::BadRequest,
@@ -209,9 +272,14 @@ impl Service for BrokerService {
             },
             Frame::Assignment { session } => match self.session(session) {
                 None => err(ErrorCode::UnknownSession, format!("unknown session {session}")),
-                Some(s) => Frame::AssignmentIs {
-                    partitions: s.consumer.assignment().into_iter().map(|p| p as u32).collect(),
-                },
+                Some(s) => {
+                    if let Some(fence) = self.fenced(session, &s) {
+                        return fence;
+                    }
+                    Frame::AssignmentIs {
+                        partitions: s.consumer.assignment().into_iter().map(|p| p as u32).collect(),
+                    }
+                }
             },
             Frame::Leave { session } => {
                 // Dropping the consumer leaves the group (once any
@@ -226,6 +294,42 @@ impl Service for BrokerService {
             Frame::TotalLag => Frame::Lag { lag: self.broker.total_lag() },
             Frame::PartitionCount { topic } => Frame::Partitions {
                 count: self.broker.topic(&topic).map(|t| t.partition_count() as u32),
+            },
+            Frame::PublishTo { topic, partition, epoch, msgs } => {
+                // Ordering matters: epoch before ownership. A stale map
+                // is wrong *wholesale* — the client must refresh before
+                // any per-partition answer means anything.
+                if let Some(view) = &self.view {
+                    let now = view.epoch();
+                    if epoch != now {
+                        return err(ErrorCode::EpochFenced, format!("cluster epoch is {now}"));
+                    }
+                }
+                let Some(t) = self.broker.topic(&topic) else {
+                    return err(ErrorCode::UnknownTopic, format!("unknown topic '{topic}'"));
+                };
+                if partition as usize >= t.partition_count() {
+                    return err(ErrorCode::BadRequest, "publish to out-of-range partition".into());
+                }
+                if let Some(view) = &self.view {
+                    if let Some((owner, _)) = view.map().owner_of(&topic, partition as usize) {
+                        if owner != view.node() {
+                            return err(ErrorCode::NotOwner, format!("owner={owner}"));
+                        }
+                    }
+                }
+                let count = msgs.len() as u64;
+                let base = t.publish_to(partition as usize, msgs);
+                Frame::Placements {
+                    placements: (0..count).map(|i| (partition, base + i)).collect(),
+                }
+            }
+            Frame::GetClusterMap => match &self.view {
+                None => err(ErrorCode::BadRequest, "not a clustered broker".into()),
+                Some(view) => {
+                    let map = view.map();
+                    Frame::ClusterMapIs { epoch: map.epoch(), nodes: map.nodes().to_vec() }
+                }
             },
             other => err(
                 ErrorCode::BadRequest,
@@ -410,6 +514,160 @@ mod tests {
             Frame::Error { code: ErrorCode::UnknownSession, .. }
         ));
         assert!(matches!(svc.handle(Frame::PollBatch { session: live, max: 1 }), Frame::Batch { .. }));
+    }
+
+    #[test]
+    fn poll_reply_frame_stays_within_max_frame() {
+        let svc = service_with_topic(1);
+        let t = svc.broker.topic("t").unwrap();
+        // 6 MiB in 1 MiB messages: the old count-only cap would happily
+        // poll all six into one reply and encode past MAX_FRAME.
+        t.publish_batch(
+            (0..6).map(|i| Message::new(None, vec![i as u8; 1024 * 1024], 0)).collect(),
+        );
+        let session = subscribe(&svc);
+        let mut delivered = 0;
+        loop {
+            let resp = svc.handle(Frame::PollBatch { session, max: 65_536 });
+            assert!(
+                resp.encode().len() <= MAX_FRAME,
+                "a poll reply must always fit one frame"
+            );
+            match resp {
+                Frame::Batch { messages, .. } => {
+                    if messages.is_empty() {
+                        break;
+                    }
+                    delivered += messages.len();
+                }
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        assert_eq!(delivered, 6, "budget trims polls, never loses messages");
+    }
+
+    fn clustered(
+        node: &str,
+        partitions: u32,
+    ) -> (Arc<BrokerService>, Arc<ClusterView>) {
+        use crate::cluster::{Membership, PlacementMap};
+        use crate::util::clock::ManualClock;
+        let clock = Arc::new(ManualClock::new());
+        let membership = Membership::new(clock, 8.0);
+        let map = PlacementMap::new(
+            1,
+            vec![("n1".into(), "sim://n1".into()), ("n2".into(), "sim://n2".into())],
+        );
+        let view = ClusterView::new(node, membership, map);
+        let broker = Broker::new();
+        let svc = BrokerService::with_cluster(broker, view.clone());
+        assert_eq!(
+            svc.handle(Frame::CreateTopic { topic: "t".into(), partitions }),
+            Frame::Ok
+        );
+        (svc, view)
+    }
+
+    #[test]
+    fn publish_to_enforces_epoch_then_ownership() {
+        let (svc, view) = clustered("n1", 16);
+        let map = view.map();
+        let mine = map.owned_partitions("t", 16, "n1");
+        let theirs = map.owned_partitions("t", 16, "n2");
+        assert!(!mine.is_empty() && !theirs.is_empty(), "HRW spreads 16 over 2");
+        let msg = || vec![Message::new(None, vec![1], 0)];
+        // Wrong epoch is rejected before any per-partition answer.
+        assert!(matches!(
+            svc.handle(Frame::PublishTo { topic: "t".into(), partition: mine[0] as u32, epoch: 9, msgs: msg() }),
+            Frame::Error { code: ErrorCode::EpochFenced, .. }
+        ));
+        // A partition the map assigns elsewhere is refused, naming the owner.
+        match svc.handle(Frame::PublishTo { topic: "t".into(), partition: theirs[0] as u32, epoch: 1, msgs: msg() }) {
+            Frame::Error { code: ErrorCode::NotOwner, message } => {
+                assert_eq!(message, "owner=n2")
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        // An owned partition at the right epoch lands with dense offsets.
+        match svc.handle(Frame::PublishTo {
+            topic: "t".into(),
+            partition: mine[0] as u32,
+            epoch: 1,
+            msgs: vec![Message::new(None, vec![1], 0), Message::new(None, vec![2], 0)],
+        }) {
+            Frame::Placements { placements } => {
+                assert_eq!(placements, vec![(mine[0] as u32, 0), (mine[0] as u32, 1)])
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        // Unknown topics and out-of-range partitions stay error frames.
+        assert!(matches!(
+            svc.handle(Frame::PublishTo { topic: "x".into(), partition: 0, epoch: 1, msgs: msg() }),
+            Frame::Error { code: ErrorCode::UnknownTopic, .. }
+        ));
+        assert!(matches!(
+            svc.handle(Frame::PublishTo { topic: "t".into(), partition: 99, epoch: 1, msgs: msg() }),
+            Frame::Error { code: ErrorCode::BadRequest, .. }
+        ));
+    }
+
+    #[test]
+    fn standalone_service_accepts_publish_to_without_cluster_checks() {
+        // A single broker owns every partition and has no epochs.
+        let svc = service_with_topic(2);
+        assert!(matches!(
+            svc.handle(Frame::PublishTo {
+                topic: "t".into(),
+                partition: 1,
+                epoch: 42,
+                msgs: vec![Message::new(None, vec![1], 0)],
+            }),
+            Frame::Placements { .. }
+        ));
+        assert!(matches!(
+            svc.handle(Frame::GetClusterMap),
+            Frame::Error { code: ErrorCode::BadRequest, .. }
+        ));
+    }
+
+    #[test]
+    fn epoch_bump_fences_and_retires_stale_sessions() {
+        let (svc, view) = clustered("n1", 2);
+        let session = subscribe(&svc);
+        assert!(matches!(
+            svc.handle(Frame::PollBatch { session, max: 10 }),
+            Frame::Batch { .. }
+        ));
+        // A rebalance elsewhere arrives by adoption: n2 is gone, epoch 2.
+        assert!(view.adopt(view.map().advanced(vec![("n1".into(), "sim://n1".into())])));
+        assert!(matches!(
+            svc.handle(Frame::PollBatch { session, max: 10 }),
+            Frame::Error { code: ErrorCode::EpochFenced, .. }
+        ));
+        // The fence retired the session — it is gone, not just refused.
+        assert_eq!(svc.session_count(), 0);
+        assert!(matches!(
+            svc.handle(Frame::CommitBatch { session, generation: 0, next_offsets: vec![(0, 1)] }),
+            Frame::Error { code: ErrorCode::UnknownSession, .. }
+        ));
+        // Resubscribing under the new epoch works immediately.
+        let fresh = subscribe(&svc);
+        assert!(matches!(
+            svc.handle(Frame::PollBatch { session: fresh, max: 10 }),
+            Frame::Batch { .. }
+        ));
+    }
+
+    #[test]
+    fn get_cluster_map_returns_the_current_map() {
+        let (svc, view) = clustered("n1", 2);
+        match svc.handle(Frame::GetClusterMap) {
+            Frame::ClusterMapIs { epoch, nodes } => {
+                assert_eq!(epoch, 1);
+                assert_eq!(nodes, view.map().nodes().to_vec());
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,633 @@
+//! Deterministic **cluster chaos** suite: a 3-broker SimTransport cluster
+//! driven through scripted failure scenarios under live traffic. Every
+//! scenario runs **twice** per seed and must produce byte-identical trace
+//! fingerprints; its probes demand zero acked-message loss, converged
+//! placement views, and a fully drained (lag 0 — i.e. dense committed
+//! offsets on every `(node, partition)`) cluster after heal.
+//!
+//! The moving parts under test are exactly the PR's tentpole: rendezvous
+//! placement ([`PlacementMap`]), epoch-fenced publish/consume
+//! ([`Frame::PublishTo`] / [`ErrorCode::EpochFenced`]), φ-driven
+//! rebalance ([`ClusterView::rebalance`]) gossiped as
+//! [`Frame::ClusterMapIs`], and the routed [`ClusterClient`] healing its
+//! table on `NotOwner` / `EpochFenced` / unreachable-owner.
+//!
+//! Scenarios:
+//!
+//! - **kill-one-broker** — a node dies under live traffic (φ declares it,
+//!   survivors rebalance, the client reroutes), then restarts empty of
+//!   sessions but full of data and is re-admitted;
+//! - **partitioned-minority** — an isolated node must freeze (quorum
+//!   guard), never secede, and rejoin the majority's higher epoch on heal;
+//! - **rolling-restart** — every node restarts in turn under traffic;
+//! - **rebalance-storm** — rapid kill/revive cycles force repeated epoch
+//!   bumps; the cluster must still converge and lose nothing.
+//!
+//! With `RL_CLUSTER_FP=<path>` set, every scenario's fingerprint is
+//! dumped to `<path>`; CI runs the suite in two separate processes and
+//! diffs the dumps to catch process-level nondeterminism.
+
+use reactive_liquid::cluster::membership::{ClusterView, Membership};
+use reactive_liquid::cluster::PlacementMap;
+use reactive_liquid::messaging::client::{BrokerClient, ConsumerClient};
+use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::sim::SimScheduler;
+use reactive_liquid::transport::cluster::{ClusterClient, ClusterConsumer};
+use reactive_liquid::transport::{
+    BrokerService, Frame, Gossiper, GossipService, NodeService, RetryPolicy, SimTransport,
+    Transport,
+};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ------------------------------------------------------------ harness
+
+/// Virtual-time-stamped event trace with a byte-comparable fingerprint.
+struct TraceLog {
+    sched: Arc<SimScheduler>,
+    events: Mutex<Vec<String>>,
+}
+
+impl TraceLog {
+    fn new(sched: Arc<SimScheduler>) -> Arc<Self> {
+        Arc::new(TraceLog { sched, events: Mutex::new(Vec::new()) })
+    }
+
+    fn log(&self, event: impl Into<String>) {
+        let at = self.sched.now().as_millis();
+        self.events.lock().unwrap().push(format!("t={at:>8}ms {}", event.into()));
+    }
+
+    fn fingerprint(&self, name: &str) -> String {
+        let events = self.events.lock().unwrap();
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for line in events.iter() {
+            for &b in line.as_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            h ^= 0x0A;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        format!("{name} events={} fnv={h:016x}", events.len())
+    }
+
+    fn dump(&self) -> String {
+        self.events.lock().unwrap().join("\n")
+    }
+}
+
+/// What one scenario run produced.
+struct RunReport {
+    fingerprint: String,
+    violations: Vec<String>,
+    trace: String,
+}
+
+/// One broker seat of the simulated cluster.
+struct Seat {
+    id: String,
+    broker: Arc<Broker>,
+    view: Arc<ClusterView>,
+    /// Process liveness: `false` while killed — the seat's outbound
+    /// gossip, anti-entropy, and rebalance ticks are suppressed (a dead
+    /// process sends nothing), and its address is partitioned.
+    up: Arc<AtomicBool>,
+    /// Link isolation: `true` while the seat is partitioned away — the
+    /// process is alive (its view keeps ticking, exercising the quorum
+    /// guard) but nothing it sends gets out.
+    cut: Arc<AtomicBool>,
+}
+
+struct ClusterNet {
+    sched: Arc<SimScheduler>,
+    transport: SimTransport,
+    seats: Vec<Seat>,
+    client: Arc<ClusterClient>,
+    trace: Arc<TraceLog>,
+}
+
+const NODES: [&str; 3] = ["n1", "n2", "n3"];
+const PARTITIONS: usize = 12;
+const HEARTBEAT: Duration = Duration::from_millis(500);
+
+/// A 3-broker cluster at epoch 1: every seat serves a clustered broker +
+/// gossip endpoint, heartbeats its peers, gossips its map every 2 s, and
+/// runs a 1 s failure-driven rebalance tick — all in virtual time.
+fn cluster(seed: u64) -> ClusterNet {
+    let sched = Arc::new(SimScheduler::new(seed));
+    let transport = SimTransport::new(sched.clone());
+    let trace = TraceLog::new(sched.clone());
+    let map = PlacementMap::new(
+        1,
+        NODES.iter().map(|n| (n.to_string(), n.to_string())).collect(),
+    );
+
+    let mut seats = Vec::new();
+    for name in NODES {
+        let membership = Membership::new(sched.clock(), 8.0);
+        let view = ClusterView::new(name, membership, map.clone());
+        let broker = Broker::new();
+        let service = NodeService::new(
+            BrokerService::with_cluster(broker.clone(), view.clone()),
+            GossipService::with_view(view.clone()),
+        );
+        transport.serve(name, service).unwrap();
+        seats.push(Seat {
+            id: name.to_string(),
+            broker,
+            view,
+            up: Arc::new(AtomicBool::new(true)),
+            cut: Arc::new(AtomicBool::new(false)),
+        });
+    }
+
+    // Gossip mesh: every ordered pair (i -> j) gets a connection carrying
+    // heartbeats (500 ms), map anti-entropy (2 s), and rebalance casts.
+    for i in 0..NODES.len() {
+        let mut peer_conns = Vec::new();
+        for j in 0..NODES.len() {
+            if i == j {
+                continue;
+            }
+            let conn = transport.connect(NODES[j]).unwrap();
+            let gossiper = Gossiper::new(conn.clone(), NODES[i]);
+            gossiper.join(1).unwrap();
+            peer_conns.push(conn.clone());
+            {
+                let up = seats[i].up.clone();
+                let cut = seats[i].cut.clone();
+                sched.schedule_every(HEARTBEAT, move |_| {
+                    if up.load(Ordering::SeqCst) && !cut.load(Ordering::SeqCst) {
+                        let _ = gossiper.heartbeat();
+                    }
+                });
+            }
+            {
+                let up = seats[i].up.clone();
+                let cut = seats[i].cut.clone();
+                let view = seats[i].view.clone();
+                sched.schedule_every(Duration::from_secs(2), move |_| {
+                    if up.load(Ordering::SeqCst) && !cut.load(Ordering::SeqCst) {
+                        let m = view.map();
+                        let _ = conn.cast(Frame::ClusterMapIs {
+                            epoch: m.epoch(),
+                            nodes: m.nodes().to_vec(),
+                        });
+                    }
+                });
+            }
+        }
+        // Failure-driven rebalance tick: suspects drop out, healed roster
+        // nodes rejoin, the bumped map is cast to every peer.
+        let up = seats[i].up.clone();
+        let cut = seats[i].cut.clone();
+        let view = seats[i].view.clone();
+        let trace_t = trace.clone();
+        let id = seats[i].id.clone();
+        sched.schedule_every(Duration::from_secs(1), move |_| {
+            if !up.load(Ordering::SeqCst) {
+                return;
+            }
+            if let Some(next) = view.rebalance() {
+                let members: Vec<&str> = next.nodes().iter().map(|(n, _)| n.as_str()).collect();
+                trace_t.log(format!("{id} rebalanced to epoch {} {members:?}", next.epoch()));
+                if !cut.load(Ordering::SeqCst) {
+                    for conn in &peer_conns {
+                        let _ = conn.cast(Frame::ClusterMapIs {
+                            epoch: next.epoch(),
+                            nodes: next.nodes().to_vec(),
+                        });
+                    }
+                }
+            }
+        });
+    }
+
+    let client = ClusterClient::with_map_retry(
+        Arc::new(transport.clone()),
+        map,
+        RetryPolicy { attempts: 1, backoff: Duration::ZERO },
+    );
+    ClusterNet { sched, transport, seats, client, trace }
+}
+
+/// Kill seat `i` at `at`: the process dies — address partitioned, all
+/// outbound suppressed, broker sessions forever lost (the *data* survives;
+/// this is the durable-broker restart model).
+fn kill_at(net: &ClusterNet, i: usize, at: Duration) {
+    let transport = net.transport.clone();
+    let up = net.seats[i].up.clone();
+    let id = net.seats[i].id.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_at(at, move |_| {
+        up.store(false, Ordering::SeqCst);
+        transport.partition(&id, true);
+        trace.log(format!("{id} killed"));
+    });
+}
+
+/// Restart seat `i` at `at`: a fresh `BrokerService` (sessions lost) over
+/// the *same* broker and view — data and placement knowledge survive the
+/// crash, exactly like an `rl-node` broker restarting on its data dir.
+fn revive_at(net: &ClusterNet, i: usize, at: Duration) {
+    let transport = net.transport.clone();
+    let up = net.seats[i].up.clone();
+    let id = net.seats[i].id.clone();
+    let broker = net.seats[i].broker.clone();
+    let view = net.seats[i].view.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_at(at, move |_| {
+        transport.partition(&id, false);
+        let service = NodeService::new(
+            BrokerService::with_cluster(broker.clone(), view.clone()),
+            GossipService::with_view(view.clone()),
+        );
+        transport.serve(&id, service).unwrap();
+        up.store(true, Ordering::SeqCst);
+        trace.log(format!("{id} restarted"));
+    });
+}
+
+/// Isolate seat `i` (two-way partition): unreachable as a destination,
+/// and its own sends are cut — but the process keeps running.
+fn isolate_at(net: &ClusterNet, i: usize, at: Duration, on: bool) {
+    let transport = net.transport.clone();
+    let cut = net.seats[i].cut.clone();
+    let id = net.seats[i].id.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_at(at, move |_| {
+        cut.store(on, Ordering::SeqCst);
+        transport.partition(&id, on);
+        trace.log(format!("{id} {}", if on { "isolated" } else { "healed" }));
+    });
+}
+
+fn seq_of(m: &Message) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&m.payload);
+    u64::from_le_bytes(b)
+}
+
+/// Producer: 4 keyless messages every 100 ms until `until`. `next_seq`
+/// advances only on acked publishes — a failed batch is retried with the
+/// same sequence numbers, so "acked" is exactly the loss-probe universe.
+fn start_producer(net: &ClusterNet, until: Duration, next_seq: Arc<Mutex<u64>>) {
+    let client = net.client.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_every(Duration::from_millis(100), move |sch| {
+        if sch.now() > until {
+            return;
+        }
+        let base = *next_seq.lock().unwrap();
+        let batch: Vec<Message> =
+            (base..base + 4).map(|s| Message::new(None, s.to_le_bytes().to_vec(), 0)).collect();
+        match client.try_publish_batch("t", batch) {
+            Ok(placed) => {
+                *next_seq.lock().unwrap() = base + 4;
+                trace.log(format!("publish ok base={base} n={}", placed.len()));
+            }
+            Err(_) => trace.log(format!("publish stalled base={base} (will retry)")),
+        }
+    });
+}
+
+type Seen = Arc<Mutex<BTreeMap<u64, u64>>>;
+
+/// Consumer: poll one rotating node + commit every 150 ms.
+fn start_consumer(net: &ClusterNet, consumer: Arc<ClusterConsumer>, seen: Seen) {
+    let trace = net.trace.clone();
+    net.sched.schedule_every(Duration::from_millis(150), move |_| {
+        let batch = consumer.poll_batch(32);
+        if batch.is_empty() {
+            return;
+        }
+        for om in &batch.messages {
+            *seen.lock().unwrap().entry(seq_of(&om.message)).or_insert(0) += 1;
+        }
+        let applied = consumer.commit_batch(&batch);
+        trace.log(format!("poll n={} commit_applied={applied}", batch.len()));
+    });
+}
+
+/// Imperative post-run drain: rotate polls until 8 consecutive empties
+/// (enough rotations to visit every node several times).
+fn drain(consumer: &ClusterConsumer, seen: &Seen) -> u64 {
+    let mut empties = 0;
+    let mut delivered = 0u64;
+    while empties < 8 {
+        let batch = consumer.poll_batch(64);
+        if batch.is_empty() {
+            empties += 1;
+            continue;
+        }
+        empties = 0;
+        delivered += batch.len() as u64;
+        for om in &batch.messages {
+            *seen.lock().unwrap().entry(seq_of(&om.message)).or_insert(0) += 1;
+        }
+        consumer.commit_batch(&batch);
+    }
+    delivered
+}
+
+/// Shared end-of-run probes: zero acked loss, converged views, drained
+/// groups (lag 0 ⇒ committed offsets dense to every node's log end).
+fn common_probes(net: &ClusterNet, published: u64, seen: &Seen, violations: &mut Vec<String>) {
+    if published == 0 {
+        violations.push("nothing was published".into());
+    }
+    let seen = seen.lock().unwrap();
+    for s in 0..published {
+        if !seen.contains_key(&s) {
+            violations.push(format!("seq {s} acked but never delivered"));
+        }
+    }
+    // The cluster holds at least every acked message (retries may have
+    // duplicated a chunk whose ack was lost — duplication, never loss).
+    let held: u64 = net
+        .seats
+        .iter()
+        .filter_map(|s| s.broker.topic("t"))
+        .map(|t| t.total_messages())
+        .sum();
+    if held < published {
+        violations.push(format!("cluster holds {held} messages, acked {published}: loss"));
+    }
+    // All views converge on one epoch and one member set.
+    let epochs: Vec<u64> = net.seats.iter().map(|s| s.view.epoch()).collect();
+    if epochs.windows(2).any(|w| w[0] != w[1]) {
+        violations.push(format!("views diverge after heal: epochs {epochs:?}"));
+    }
+    let sets: Vec<Vec<String>> = net
+        .seats
+        .iter()
+        .map(|s| s.view.map().nodes().iter().map(|(id, _)| id.clone()).collect())
+        .collect();
+    if sets.windows(2).any(|w| w[0] != w[1]) {
+        violations.push(format!("views diverge after heal: members {sets:?}"));
+    }
+    // Drained: every node's group offsets caught up to its log end —
+    // dense committed coverage of every (node, partition).
+    net.client.refresh();
+    let lag = net.client.group_lag("t", "g");
+    if lag != 0 {
+        violations.push(format!("group lag {lag} after drain"));
+    }
+}
+
+// --------------------------------------- scenario: kill one broker
+
+/// One broker dies under live traffic at 5 s and restarts at 10 s. The φ
+/// detector declares it, survivors rebalance to epoch 2 (reroutes the
+/// client mid-stream), the restart is re-admitted at epoch 3+ — with zero
+/// acked loss and a fully drained cluster at the end.
+fn kill_one_broker_run(seed: u64) -> RunReport {
+    let net = cluster(seed);
+    let trace = net.trace.clone();
+    net.client.try_create_topic("t", PARTITIONS).unwrap();
+    let consumer = Arc::new(net.client.subscribe_cluster("t", "g"));
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Seen = Arc::new(Mutex::new(BTreeMap::new()));
+
+    start_producer(&net, Duration::from_secs(14), next_seq.clone());
+    start_consumer(&net, consumer.clone(), seen.clone());
+    kill_at(&net, 2, Duration::from_secs(5));
+    revive_at(&net, 2, Duration::from_secs(10));
+
+    net.sched.run_until(Duration::from_secs(18));
+    let delivered = drain(&consumer, &seen);
+    let published = *next_seq.lock().unwrap();
+    trace.log(format!("drained published={published} final_drain={delivered}"));
+
+    let mut violations = Vec::new();
+    common_probes(&net, published, &seen, &mut violations);
+    let epoch = net.seats[0].view.epoch();
+    if epoch < 3 {
+        violations.push(format!(
+            "epoch {epoch} after kill+revive: expected >= 3 (drop bump + re-admit bump)"
+        ));
+    }
+    if net.seats[0].view.map().nodes().len() != 3 {
+        violations.push("restarted node was never re-admitted".into());
+    }
+    RunReport { fingerprint: trace.fingerprint("kill-one-broker"), violations, trace: trace.dump() }
+}
+
+// --------------------------------- scenario: partitioned minority
+
+/// One node is partitioned away (two-way) under traffic. The majority
+/// rebalances around it; the minority seat must FREEZE — `rebalance()`
+/// returns `None` and its epoch never moves — rather than secede into a
+/// one-node cluster. On heal it adopts the majority's map and rejoins.
+fn partitioned_minority_run(seed: u64) -> RunReport {
+    let net = cluster(seed);
+    let trace = net.trace.clone();
+    net.client.try_create_topic("t", PARTITIONS).unwrap();
+    let consumer = Arc::new(net.client.subscribe_cluster("t", "g"));
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Seen = Arc::new(Mutex::new(BTreeMap::new()));
+    let violations = Arc::new(Mutex::new(Vec::new()));
+
+    start_producer(&net, Duration::from_secs(13), next_seq.clone());
+    start_consumer(&net, consumer.clone(), seen.clone());
+    isolate_at(&net, 2, Duration::from_secs(5), true);
+    isolate_at(&net, 2, Duration::from_secs(9), false);
+
+    // Mid-window probe: the isolated seat suspects everyone else, but the
+    // quorum guard must hold — no secession map, no epoch movement.
+    {
+        let view = net.seats[2].view.clone();
+        let violations = violations.clone();
+        let trace = trace.clone();
+        net.sched.schedule_at(Duration::from_secs(8), move |_| {
+            match view.rebalance() {
+                None => trace.log("minority seat frozen (quorum guard held)"),
+                Some(m) => violations.lock().unwrap().push(format!(
+                    "isolated minority seceded: epoch {} {:?}",
+                    m.epoch(),
+                    m.nodes()
+                )),
+            }
+            if view.epoch() != 1 {
+                violations
+                    .lock()
+                    .unwrap()
+                    .push(format!("minority epoch moved to {} while isolated", view.epoch()));
+            }
+        });
+    }
+    // Majority-side probe: by 8 s the two-seat majority owns the map.
+    {
+        let view = net.seats[0].view.clone();
+        let violations = violations.clone();
+        net.sched.schedule_at(Duration::from_secs(8), move |_| {
+            let m = view.map();
+            if m.epoch() < 2 || m.contains("n3") {
+                violations.lock().unwrap().push(format!(
+                    "majority never rebalanced around the minority (epoch {}, n3 mapped: {})",
+                    m.epoch(),
+                    m.contains("n3")
+                ));
+            }
+        });
+    }
+
+    net.sched.run_until(Duration::from_secs(17));
+    let delivered = drain(&consumer, &seen);
+    let published = *next_seq.lock().unwrap();
+    trace.log(format!("drained published={published} final_drain={delivered}"));
+
+    let mut violations = Arc::try_unwrap(violations).unwrap().into_inner().unwrap();
+    common_probes(&net, published, &seen, &mut violations);
+    if !net.seats[2].view.map().contains("n3") {
+        violations.push("healed minority never rejoined the map".into());
+    }
+    RunReport {
+        fingerprint: trace.fingerprint("partitioned-minority"),
+        violations,
+        trace: trace.dump(),
+    }
+}
+
+// ------------------------------------- scenario: rolling restart
+
+/// Every broker restarts in turn under live traffic — the moving outage
+/// window must never lose an acked message or wedge the group.
+fn rolling_restart_run(seed: u64) -> RunReport {
+    let net = cluster(seed);
+    let trace = net.trace.clone();
+    net.client.try_create_topic("t", PARTITIONS).unwrap();
+    let consumer = Arc::new(net.client.subscribe_cluster("t", "g"));
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Seen = Arc::new(Mutex::new(BTreeMap::new()));
+
+    start_producer(&net, Duration::from_secs(16), next_seq.clone());
+    start_consumer(&net, consumer.clone(), seen.clone());
+    for (i, (down, up)) in [(4u64, 6u64), (8, 10), (12, 14)].iter().enumerate() {
+        kill_at(&net, i, Duration::from_secs(*down));
+        revive_at(&net, i, Duration::from_secs(*up));
+    }
+
+    net.sched.run_until(Duration::from_secs(20));
+    let delivered = drain(&consumer, &seen);
+    let published = *next_seq.lock().unwrap();
+    trace.log(format!("drained published={published} final_drain={delivered}"));
+
+    let mut violations = Vec::new();
+    common_probes(&net, published, &seen, &mut violations);
+    if net.seats[0].view.map().nodes().len() != 3 {
+        violations.push("not every restarted node was re-admitted".into());
+    }
+    RunReport { fingerprint: trace.fingerprint("rolling-restart"), violations, trace: trace.dump() }
+}
+
+// ------------------------------------- scenario: rebalance storm
+
+/// Rapid kill/revive cycles force epoch bumps in quick succession — the
+/// deterministic successor maps and anti-entropy must converge the views
+/// anyway, with zero acked loss.
+fn rebalance_storm_run(seed: u64) -> RunReport {
+    let net = cluster(seed);
+    let trace = net.trace.clone();
+    net.client.try_create_topic("t", PARTITIONS).unwrap();
+    let consumer = Arc::new(net.client.subscribe_cluster("t", "g"));
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Seen = Arc::new(Mutex::new(BTreeMap::new()));
+
+    start_producer(&net, Duration::from_secs(13), next_seq.clone());
+    start_consumer(&net, consumer.clone(), seen.clone());
+    kill_at(&net, 1, Duration::from_secs(4));
+    revive_at(&net, 1, Duration::from_millis(5_500));
+    kill_at(&net, 2, Duration::from_millis(6_500));
+    revive_at(&net, 2, Duration::from_secs(8));
+    kill_at(&net, 1, Duration::from_secs(9));
+    revive_at(&net, 1, Duration::from_millis(10_500));
+
+    net.sched.run_until(Duration::from_secs(17));
+    let delivered = drain(&consumer, &seen);
+    let published = *next_seq.lock().unwrap();
+    trace.log(format!("drained published={published} final_drain={delivered}"));
+
+    let mut violations = Vec::new();
+    common_probes(&net, published, &seen, &mut violations);
+    let epoch = net.seats[0].view.epoch();
+    if epoch < 4 {
+        violations.push(format!("storm of 3 kill/revive cycles only reached epoch {epoch}"));
+    }
+    RunReport { fingerprint: trace.fingerprint("rebalance-storm"), violations, trace: trace.dump() }
+}
+
+// ------------------------------------------------------------- matrix
+
+fn matrix() -> Vec<(&'static str, Box<dyn Fn() -> RunReport>)> {
+    vec![
+        ("kill-one-broker", Box::new(|| kill_one_broker_run(42))),
+        ("partitioned-minority", Box::new(|| partitioned_minority_run(7))),
+        ("rolling-restart", Box::new(|| rolling_restart_run(11))),
+        ("rebalance-storm", Box::new(|| rebalance_storm_run(23))),
+    ]
+}
+
+#[test]
+fn cluster_chaos_matrix_passes_and_is_deterministic() {
+    for (name, run) in matrix() {
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.fingerprint, b.fingerprint,
+            "scenario '{name}' is nondeterministic\nfirst run trace:\n{}",
+            a.trace
+        );
+        assert!(
+            a.violations.is_empty(),
+            "scenario '{name}' violated probes: {:?}\ntrace:\n{}",
+            a.violations,
+            a.trace
+        );
+        assert!(b.violations.is_empty(), "second run of '{name}' diverged: {:?}", b.violations);
+    }
+}
+
+#[test]
+fn kill_window_really_stalled_and_rerouted() {
+    // The kill scenario is only meaningful if the outage really bit: some
+    // publish stalled, the survivors really rebalanced, the dead node
+    // really restarted.
+    let report = kill_one_broker_run(42);
+    assert!(report.violations.is_empty(), "{:?}", report.violations);
+    assert!(
+        report.trace.contains("publish stalled"),
+        "no publish ever stalled — the kill window did not bite:\n{}",
+        report.trace
+    );
+    assert!(report.trace.contains("n3 killed"), "kill never fired");
+    assert!(report.trace.contains("rebalanced to epoch 2"), "no failure-driven rebalance");
+    assert!(report.trace.contains("n3 restarted"), "restart never fired");
+}
+
+#[test]
+fn minority_freeze_probe_really_ran() {
+    let report = partitioned_minority_run(7);
+    assert!(report.violations.is_empty(), "{:?}", report.violations);
+    assert!(
+        report.trace.contains("minority seat frozen"),
+        "quorum-guard probe never observed the freeze:\n{}",
+        report.trace
+    );
+}
+
+#[test]
+fn dump_fingerprints_for_cross_process_diff() {
+    // With RL_CLUSTER_FP set, write every scenario fingerprint for the
+    // CI two-process diff (same pattern as the transport chaos matrix).
+    let Ok(path) = std::env::var("RL_CLUSTER_FP") else { return };
+    let mut out = String::new();
+    for (_name, run) in matrix() {
+        out.push_str(&run().fingerprint);
+        out.push('\n');
+    }
+    std::fs::write(&path, out).expect("write cluster fingerprint dump");
+}

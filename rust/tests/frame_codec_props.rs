@@ -39,12 +39,19 @@ fn arb_error_code(g: &mut Gen) -> ErrorCode {
         ErrorCode::UnknownTopic,
         ErrorCode::UnknownSession,
         ErrorCode::BadRequest,
+        ErrorCode::NotOwner,
+        ErrorCode::EpochFenced,
     ])
+}
+
+/// `(node id, address)` pairs as carried by the cluster-map frame.
+fn arb_nodes(g: &mut Gen) -> Vec<(String, String)> {
+    g.vec(4, |g| (arb_string(g, 12), arb_string(g, 20)))
 }
 
 /// One random frame, covering every variant.
 fn arb_frame(g: &mut Gen) -> Frame {
-    match g.usize(0, 23) {
+    match g.usize(0, 26) {
         0 => Frame::CreateTopic { topic: arb_string(g, 12), partitions: g.u64() as u32 % 16 + 1 },
         1 => Frame::PublishBatch { topic: arb_string(g, 12), msgs: g.vec(6, arb_message) },
         2 => Frame::Subscribe { topic: arb_string(g, 12), group: arb_string(g, 12) },
@@ -81,7 +88,15 @@ fn arb_frame(g: &mut Gen) -> Frame {
         19 => Frame::Error { code: arb_error_code(g), message: arb_string(g, 24) },
         20 => Frame::Join { node: arb_string(g, 16), incarnation: g.u64() % 100 },
         21 => Frame::LeaveNode { node: arb_string(g, 16) },
-        _ => Frame::Heartbeat { node: arb_string(g, 16), seq: g.u64() },
+        22 => Frame::Heartbeat { node: arb_string(g, 16), seq: g.u64() },
+        23 => Frame::PublishTo {
+            topic: arb_string(g, 12),
+            partition: g.u64() as u32 % 64,
+            epoch: g.u64() % 1000,
+            msgs: g.vec(6, arb_message),
+        },
+        24 => Frame::GetClusterMap,
+        _ => Frame::ClusterMapIs { epoch: g.u64() % 1000, nodes: arb_nodes(g) },
     }
 }
 

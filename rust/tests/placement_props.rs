@@ -1,0 +1,222 @@
+//! Property suite for rendezvous (HRW) partition placement — the three
+//! guarantees the multi-broker cluster leans on:
+//!
+//! 1. **Determinism** — the owner of `(topic, partition)` is a pure
+//!    function of the node *set*: construction order, epoch, and which
+//!    process computes it are all irrelevant (the suite re-derives the
+//!    argmax from [`hrw_score`] independently and demands agreement);
+//! 2. **Balance** — over 64 partitions (× many topics) and 3–7 nodes,
+//!    every node's share lands within ±20% of fair;
+//! 3. **Minimal movement** — a single join moves only partitions the
+//!    newcomer wins (~1/N of them); a single leave moves only the
+//!    leaver's partitions. Nothing else ever changes owner.
+//!
+//! `RL_PROPCHECK_CASES` raises the case count (nightly CI runs deep).
+
+use reactive_liquid::cluster::{hrw_score, PlacementMap};
+use reactive_liquid::prop_assert;
+use reactive_liquid::util::propcheck::{check, Gen};
+use std::collections::BTreeMap;
+
+fn arb_name(g: &mut Gen, prefix: &str) -> String {
+    let suffix: String =
+        (0..g.usize(1, 9)).map(|_| char::from(b'a' + g.usize(0, 26) as u8)).collect();
+    format!("{prefix}-{suffix}")
+}
+
+/// 3–7 distinct `(id, addr)` nodes. Ids carry an index so duplicates are
+/// impossible regardless of the random suffixes.
+fn arb_nodes(g: &mut Gen) -> Vec<(String, String)> {
+    let n = g.usize(3, 8);
+    (0..n)
+        .map(|i| {
+            let id = format!("{i}-{}", arb_name(g, "node"));
+            let addr = format!("sim://{id}");
+            (id, addr)
+        })
+        .collect()
+}
+
+/// Fisher–Yates over the generator, so shuffled construction inputs are
+/// reproducible per case.
+fn shuffle<T>(g: &mut Gen, mut xs: Vec<T>) -> Vec<T> {
+    for i in (1..xs.len()).rev() {
+        let j = g.usize(0, i + 1);
+        xs.swap(i, j);
+    }
+    xs
+}
+
+/// Independent re-derivation of the owner: highest [`hrw_score`], ties to
+/// the smallest node id — the contract `owner_of` must match.
+fn argmax_owner<'a>(
+    nodes: &'a [(String, String)],
+    topic: &str,
+    partition: usize,
+) -> Option<&'a (String, String)> {
+    let mut best: Option<(&'a (String, String), u64)> = None;
+    for node in nodes {
+        let s = hrw_score(&node.0, topic, partition);
+        best = match best {
+            None => Some((node, s)),
+            Some((bn, bs)) => {
+                if s > bs || (s == bs && node.0 < bn.0) {
+                    Some((node, s))
+                } else {
+                    Some((bn, bs))
+                }
+            }
+        };
+    }
+    best.map(|(n, _)| n)
+}
+
+#[test]
+fn owner_is_a_pure_function_of_the_node_set() {
+    check("placement-determinism", 150, |g| {
+        let nodes = arb_nodes(g);
+        let shuffled = shuffle(g, nodes.clone());
+        // Different construction order, different epochs: same owners.
+        let a = PlacementMap::new(g.u64() % 100, nodes.clone());
+        let b = PlacementMap::new(g.u64() % 100, shuffled);
+        for _ in 0..16 {
+            let topic = arb_name(g, "topic");
+            let p = g.usize(0, 64);
+            let oa = a.owner_of(&topic, p).cloned();
+            let ob = b.owner_of(&topic, p).cloned();
+            prop_assert!(
+                oa == ob,
+                "construction order changed the owner of ({topic}, {p}): {oa:?} vs {ob:?}"
+            );
+            // And both match the independent argmax re-derivation — the
+            // cross-process pin: any process computing HRW over the same
+            // set gets this owner.
+            let expect = argmax_owner(&nodes, &topic, p).cloned();
+            prop_assert!(oa == expect, "owner_of diverged from the hrw_score argmax");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ownership_is_balanced_within_20_percent() {
+    // 64 topics × 64 partitions = 4096 placements: enough mass that a
+    // ±20% band sits >5σ from a fair multinomial spread — a violation
+    // means real skew, not sampling noise.
+    check("placement-balance", 30, |g| {
+        let nodes = arb_nodes(g);
+        let map = PlacementMap::new(1, nodes.clone());
+        let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+        let topics: Vec<String> = (0..64).map(|_| arb_name(g, "topic")).collect();
+        for topic in &topics {
+            for p in 0..64 {
+                let (id, _) = map.owner_of(topic, p).expect("non-empty map");
+                *counts.entry(id.as_str()).or_insert(0) += 1;
+            }
+        }
+        let total = topics.len() * 64;
+        let fair = total as f64 / nodes.len() as f64;
+        for (id, _) in &nodes {
+            let got = *counts.get(id.as_str()).unwrap_or(&0) as f64;
+            prop_assert!(
+                got >= fair * 0.8 && got <= fair * 1.2,
+                "node {id} owns {got} of {total} placements over {} nodes (fair {fair:.0} ± 20%)",
+                nodes.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_join_moves_only_what_the_newcomer_wins() {
+    check("placement-join-movement", 60, |g| {
+        let nodes = arb_nodes(g);
+        let before = PlacementMap::new(1, nodes.clone());
+        let newcomer = {
+            // A distinct id outside the `arb_nodes` namespace.
+            let id = arb_name(g, "joiner");
+            (id.clone(), format!("sim://{id}"))
+        };
+        let mut grown = nodes.clone();
+        grown.push(newcomer.clone());
+        let after = before.advanced(grown);
+
+        let topics: Vec<String> = (0..16).map(|_| arb_name(g, "topic")).collect();
+        let total = topics.len() * 64;
+        let mut moved = 0usize;
+        for topic in &topics {
+            for p in 0..64 {
+                let was = before.owner_of(topic, p).cloned().expect("non-empty");
+                let now = after.owner_of(topic, p).cloned().expect("non-empty");
+                if was != now {
+                    prop_assert!(
+                        now.0 == newcomer.0,
+                        "({topic}, {p}) moved {} -> {} on a join of {} — only the \
+                         newcomer may take partitions",
+                        was.0,
+                        now.0,
+                        newcomer.0
+                    );
+                    moved += 1;
+                }
+            }
+        }
+        // ~1/N of partitions move to the newcomer: demand the right order
+        // of magnitude, with generous statistical slack on both sides.
+        let n_after = nodes.len() + 1;
+        prop_assert!(moved > 0, "a join that moved nothing cannot be balanced");
+        prop_assert!(
+            moved <= 2 * total / n_after,
+            "join moved {moved} of {total} placements — far more than ~1/{n_after}"
+        );
+        prop_assert!(
+            moved >= total / (3 * n_after),
+            "join moved only {moved} of {total} placements — far less than ~1/{n_after}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn single_leave_moves_only_the_leavers_partitions() {
+    check("placement-leave-movement", 60, |g| {
+        let nodes = arb_nodes(g);
+        let before = PlacementMap::new(1, nodes.clone());
+        let leaver = g.usize(0, nodes.len());
+        let leaver_id = nodes[leaver].0.clone();
+        let mut rest = nodes.clone();
+        rest.remove(leaver);
+        let after = before.advanced(rest);
+
+        let topics: Vec<String> = (0..16).map(|_| arb_name(g, "topic")).collect();
+        let total = topics.len() * 64;
+        let mut moved = 0usize;
+        for topic in &topics {
+            for p in 0..64 {
+                let was = before.owner_of(topic, p).cloned().expect("non-empty");
+                let now = after.owner_of(topic, p).cloned().expect("non-empty");
+                if was != now {
+                    prop_assert!(
+                        was.0 == leaver_id,
+                        "({topic}, {p}) moved {} -> {} when {leaver_id} left — \
+                         survivors' partitions must not reshuffle",
+                        was.0,
+                        now.0
+                    );
+                    moved += 1;
+                }
+            }
+        }
+        let n = nodes.len();
+        prop_assert!(
+            moved <= 2 * total / n,
+            "leave moved {moved} of {total} placements — far more than ~1/{n}"
+        );
+        prop_assert!(
+            moved >= total / (3 * n),
+            "leave moved only {moved} of {total} placements — far less than ~1/{n}"
+        );
+        Ok(())
+    });
+}

@@ -5,12 +5,15 @@
 //! crosses the wire protocol, and the drain watermark still proves the
 //! broker fully caught up at the end.
 
+use reactive_liquid::cluster::{ClusterView, Membership, PlacementMap};
 use reactive_liquid::config::{Architecture, ExperimentConfig, TcmmBackend};
 use reactive_liquid::experiment::run_experiment_on;
 use reactive_liquid::messaging::client::SharedBrokerClient;
 use reactive_liquid::messaging::Broker;
 use reactive_liquid::sim::SimScheduler;
-use reactive_liquid::transport::{BrokerService, RemoteBroker, SimTransport, Transport};
+use reactive_liquid::transport::{
+    BrokerService, ClusterClient, RemoteBroker, RetryPolicy, SimTransport, Transport,
+};
 use std::sync::Arc;
 
 /// Experiments are timing-sensitive; serialize them (same pattern as
@@ -52,6 +55,30 @@ fn remote_broker(addr: &str) -> (Arc<Broker>, SharedBrokerClient) {
     (broker, remote)
 }
 
+/// Three brokers behind the cluster seam: every node serves
+/// [`BrokerService::with_cluster`] over the same static epoch-1 map, and
+/// the pipeline's client is a [`ClusterClient`] that routes each publish
+/// to the partition's HRW owner and drains all three nodes. No faults are
+/// scripted — this pins the *happy-path* guarantee that the full pipeline
+/// runs unmodified when its broker is a cluster instead of one process.
+fn cluster_broker(tag: &str) -> (Vec<Arc<Broker>>, SharedBrokerClient) {
+    let sched = Arc::new(SimScheduler::new(1));
+    let transport = SimTransport::new(sched.clone());
+    let ids: Vec<String> = ["n1", "n2", "n3"].iter().map(|n| format!("{tag}-{n}")).collect();
+    let map = PlacementMap::new(1, ids.iter().map(|id| (id.clone(), id.clone())).collect());
+    let mut brokers = Vec::new();
+    for id in &ids {
+        let membership = Membership::new(sched.clock(), 8.0);
+        let view = ClusterView::new(id, membership, map.clone());
+        let broker = Broker::new();
+        transport.serve(id, BrokerService::with_cluster(broker.clone(), view)).unwrap();
+        brokers.push(broker);
+    }
+    let client: SharedBrokerClient =
+        ClusterClient::with_map_retry(Arc::new(transport), map, RetryPolicy::default());
+    (brokers, client)
+}
+
 #[test]
 fn reactive_pipeline_runs_unmodified_over_remote_broker() {
     let _guard = serial();
@@ -85,4 +112,45 @@ fn liquid_pipeline_runs_unmodified_over_remote_broker() {
         r.total_processed
     );
     assert_eq!(broker.total_lag(), 0, "drain watermark held across the wire");
+}
+
+#[test]
+fn reactive_pipeline_runs_unmodified_against_three_broker_cluster() {
+    let _guard = serial();
+    let base = cfg(Architecture::Reactive);
+    let total_points = (base.workload.taxis * base.workload.points_per_taxi) as u64;
+    let (brokers, remote) = cluster_broker("rc");
+    let r = run_experiment_on(&base, remote);
+    assert_eq!(r.label, "reactive");
+    assert!(
+        r.total_processed >= total_points,
+        "expected ≥ {total_points} processed through the cluster, got {}",
+        r.total_processed
+    );
+    // The data plane really was distributed: HRW placement spread the
+    // topic's partitions, so more than one broker holds messages — and
+    // every one of them drained to its watermark.
+    let holding = brokers.iter().filter(|b| b.total_messages() > 0).count();
+    assert!(holding >= 2, "expected ≥2 of 3 brokers to own data, got {holding}");
+    for (i, b) in brokers.iter().enumerate() {
+        assert_eq!(b.total_lag(), 0, "broker {i} not drained");
+    }
+}
+
+#[test]
+fn liquid_pipeline_runs_unmodified_against_three_broker_cluster() {
+    let _guard = serial();
+    let base = cfg(Architecture::Liquid { tasks_per_job: 3 });
+    let total_points = (base.workload.taxis * base.workload.points_per_taxi) as u64;
+    let (brokers, remote) = cluster_broker("lq");
+    let r = run_experiment_on(&base, remote);
+    assert_eq!(r.label, "liquid-3");
+    assert!(
+        r.total_processed >= total_points,
+        "expected ≥ {total_points} processed through the cluster, got {}",
+        r.total_processed
+    );
+    for (i, b) in brokers.iter().enumerate() {
+        assert_eq!(b.total_lag(), 0, "broker {i} not drained");
+    }
 }

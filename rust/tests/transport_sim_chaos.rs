@@ -458,6 +458,52 @@ fn partition_window_really_dropped_and_healed() {
 }
 
 #[test]
+fn multi_mib_poll_replies_stay_within_max_frame() {
+    // Regression for the count-capped wire poll: 10 one-MiB messages are
+    // >MAX_FRAME in aggregate, so a poll_batch(64) answered by message
+    // count alone would build an un-encodable Batch reply. The server
+    // must clamp replies by encoded bytes — every delivered batch
+    // re-encodes under MAX_FRAME, and trimming never loses messages.
+    use reactive_liquid::transport::frame::batch_to_frame;
+    use reactive_liquid::transport::MAX_FRAME;
+
+    let net = net(99);
+    net.remote.try_create_topic("big", 3).unwrap();
+    let payload = vec![0xAB; 1 << 20];
+    for i in 0..10u64 {
+        let mut msg = payload.clone();
+        msg[0] = i as u8; // distinguishable heads
+        net.remote.try_publish_batch("big", vec![Message::new(Some(i), msg, 0)]).unwrap();
+    }
+
+    let client: SharedBrokerClient = net.remote.clone();
+    let consumer = client.subscribe("big", "g");
+    let mut delivered = 0usize;
+    let mut replies = 0usize;
+    let mut empties = 0;
+    while empties < 2 {
+        let batch = consumer.poll_batch(64);
+        if batch.is_empty() {
+            empties += 1;
+            continue;
+        }
+        empties = 0;
+        delivered += batch.len();
+        replies += 1;
+        consumer.commit_batch(&batch);
+        let encoded = batch_to_frame(batch).encode();
+        assert!(
+            encoded.len() <= MAX_FRAME,
+            "poll reply of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+            encoded.len()
+        );
+    }
+    consumer.close();
+    assert_eq!(delivered, 10, "byte-trimmed polls must redeliver the remainder, not drop it");
+    assert!(replies >= 3, "10 MiB through a {} MiB budget should take several replies", MAX_FRAME / 2 / (1 << 20));
+}
+
+#[test]
 fn dump_fingerprints_for_cross_process_diff() {
     // With RL_TRANSPORT_FP set, write every scenario fingerprint for the
     // CI two-process diff (same pattern as the sim chaos matrix).
