@@ -7,6 +7,7 @@
 //! completion-time-aware policy, on the paper's own workload.
 
 use reactive_liquid::experiment::figures::{ablation_router, FigureOpts};
+use reactive_liquid::util::io::{write_bench_json, Json};
 
 fn main() {
     let opts = FigureOpts::default();
@@ -28,4 +29,22 @@ fn main() {
     let ct = results[2].1.completion.mean().as_secs_f64();
     println!("\ncompletion-time/round-robin mean completion ratio: {:.2}", ct / rr);
     println!("CSV in {}/ablation_router.csv", opts.out_dir.display());
+
+    let points: Vec<Json> = results
+        .iter()
+        .map(|(policy, r)| {
+            Json::obj(vec![
+                ("name", Json::str(policy.label())),
+                ("throughput_msgs_s", Json::num(r.mean_throughput())),
+                ("total_processed", Json::num(r.total_processed as f64)),
+                ("mean_completion_ms", Json::num(r.completion.mean().as_secs_f64() * 1e3)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("ablation_router")),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("ablation_router", &json).expect("write BENCH_ablation_router.json");
+    println!("wrote {}", path.display());
 }

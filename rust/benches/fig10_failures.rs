@@ -6,6 +6,7 @@
 //! supervision service regenerates components on healthy nodes.
 
 use reactive_liquid::experiment::figures::{fig10, FigureOpts};
+use reactive_liquid::util::io::{write_bench_json, Json};
 use std::collections::BTreeMap;
 
 fn main() {
@@ -35,4 +36,22 @@ fn main() {
     }
     println!("\nshape check: reactive retains a larger fraction at high p than liquid.");
     println!("CSV series in {}/fig10_*.csv", opts.out_dir.display());
+
+    let points: Vec<Json> = results
+        .iter()
+        .map(|(label, p, r)| {
+            Json::obj(vec![
+                ("name", Json::str(format!("{label} p={:.0}%", p * 100.0))),
+                ("throughput_msgs_s", Json::num(r.mean_throughput())),
+                ("total_processed", Json::num(r.total_processed as f64)),
+                ("node_failures", Json::num(r.node_failures as f64)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("fig10_failures")),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("fig10_failures", &json).expect("write BENCH_fig10_failures.json");
+    println!("wrote {}", path.display());
 }

@@ -7,6 +7,7 @@
 //! motivation for the completion-time scheduler (see ablation_router).
 
 use reactive_liquid::experiment::figures::{fig11, FigureOpts};
+use reactive_liquid::util::io::{write_bench_json, Json};
 
 fn main() {
     let opts = FigureOpts::default();
@@ -32,4 +33,23 @@ fn main() {
         rl / l3
     );
     println!("CSV in {}/fig11_*.csv", opts.out_dir.display());
+
+    let points: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.label.clone())),
+                ("throughput_msgs_s", Json::num(r.mean_throughput())),
+                ("mean_completion_ms", Json::num(r.completion.mean().as_secs_f64() * 1e3)),
+                ("p99_completion_ms", Json::num(r.completion.quantile(0.99).as_secs_f64() * 1e3)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("fig11_completion_time")),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("fig11_completion_time", &json)
+        .expect("write BENCH_fig11_completion_time.json");
+    println!("wrote {}", path.display());
 }

@@ -9,6 +9,7 @@
 //! RL_BENCH_SECS=<paper-min> to resize.
 
 use reactive_liquid::experiment::figures::{fig8, FigureOpts};
+use reactive_liquid::util::io::{write_bench_json, Json};
 
 fn main() {
     let opts = FigureOpts::default();
@@ -29,4 +30,22 @@ fn main() {
     println!("  reactive/liquid-6 = {:.2} (paper: > 1)", rl / l6);
     println!("  liquid-6/liquid-3 = {:.2} (paper: ≈ 1)", l6 / l3);
     println!("\nCSV series in {}/fig8_*.csv", opts.out_dir.display());
+
+    let points: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.label.clone())),
+                ("throughput_msgs_s", Json::num(r.mean_throughput())),
+                ("total_processed", Json::num(r.total_processed as f64)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("fig8_total_processed")),
+        ("points", Json::Arr(points)),
+    ]);
+    let path =
+        write_bench_json("fig8_total_processed", &json).expect("write BENCH_fig8_total_processed.json");
+    println!("wrote {}", path.display());
 }

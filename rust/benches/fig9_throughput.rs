@@ -8,6 +8,7 @@
 use reactive_liquid::config::Architecture;
 use reactive_liquid::experiment::figures::{fig9_pair, FigureOpts};
 use reactive_liquid::experiment::run_experiment;
+use reactive_liquid::util::io::{write_bench_json, Json};
 
 fn main() {
     let opts = FigureOpts::default();
@@ -21,6 +22,7 @@ fn main() {
     let rl = run_experiment(&opts.cfg(Architecture::Reactive));
     println!("fig9 {}", rl.summary());
 
+    let mut fits: Vec<Json> = Vec::new();
     for (name, base) in [("9a", &l3), ("9b", &l6)] {
         let out = opts.out_dir.join(format!("fig{name}_{}_vs_reactive.csv", base.label));
         let fit = fig9_pair(base, &rl, &out).expect("write fig9 csv");
@@ -38,6 +40,30 @@ fn main() {
             trend_at_mid,
             if trend_at_mid > mid_x { "ABOVE y=x ✓" } else { "below y=x ✗" }
         );
+        fits.push(Json::obj(vec![
+            ("name", Json::str(format!("fig{name} {} vs reactive", base.label))),
+            ("slope", Json::num(fit.slope)),
+            ("intercept", Json::num(fit.intercept)),
+            ("r_squared", Json::num(fit.r_squared)),
+        ]));
     }
     println!("\nCSV series in {}/fig9*.csv", opts.out_dir.display());
+
+    let points: Vec<Json> = [&l3, &l6, &rl]
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.label.clone())),
+                ("throughput_msgs_s", Json::num(r.mean_throughput())),
+                ("total_processed", Json::num(r.total_processed as f64)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("fig9_throughput")),
+        ("fits", Json::Arr(fits)),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("fig9_throughput", &json).expect("write BENCH_fig9_throughput.json");
+    println!("wrote {}", path.display());
 }

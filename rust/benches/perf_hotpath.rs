@@ -217,6 +217,85 @@ fn main() {
         }
     }
 
+    // --- Zero-copy wire path: bytes copied per delivered message on the
+    // poll→encode path. Legacy = materialize a `Frame::Batch` and encode
+    // into a `Vec<u8>` (every payload memcpy'd); shared = poll shared log
+    // slices and encode through `FrameBuf` (payloads ride as `Arc`
+    // segments). The acceptance bar for the zero-copy PR: ≥ 2× fewer
+    // bytes copied per delivered message.
+    let copies_per_msg_legacy;
+    let copies_per_msg_shared;
+    {
+        use reactive_liquid::transport::frame::{batch_to_frame, encode_batch_ref};
+        use reactive_liquid::transport::{
+            copy_counters, reset_copy_counters, FrameBuf, MAX_FRAME,
+        };
+        let n = if smoke() { 512 } else { 8192 };
+        let broker = Broker::new();
+        broker.create_topic("z", 3);
+        let t = broker.topic("z").unwrap();
+        let payload = vec![7u8; 4096];
+        for start in (0..n).step_by(256) {
+            let m = 256.min(n - start);
+            t.publish_batch((0..m).map(|_| Message::new(None, payload.clone(), 0)).collect());
+        }
+
+        let legacy = broker.subscribe("z", "legacy");
+        reset_copy_counters();
+        let started = Instant::now();
+        let mut legacy_msgs = 0u64;
+        let mut sink = 0usize;
+        loop {
+            let batch = legacy.poll_batch_budgeted(64, MAX_FRAME / 2);
+            if batch.is_empty() {
+                break;
+            }
+            legacy_msgs += batch.len() as u64;
+            sink += batch_to_frame(batch).encode().len();
+        }
+        let legacy_secs = started.elapsed().as_secs_f64();
+        let (legacy_copied, _) = copy_counters();
+
+        let shared = broker.subscribe("z", "shared");
+        reset_copy_counters();
+        let started = Instant::now();
+        let mut shared_msgs = 0u64;
+        let mut out = FrameBuf::new();
+        loop {
+            let batch = shared.poll_batch_budgeted_shared(64, MAX_FRAME / 2);
+            if batch.is_empty() {
+                break;
+            }
+            shared_msgs += batch.len() as u64;
+            out.clear();
+            encode_batch_ref(batch.generation, &batch.parts, &batch.next_offsets, 0, &mut out);
+            sink += out.len();
+        }
+        let shared_secs = started.elapsed().as_secs_f64();
+        let (shared_copied, shared_bytes_shared) = copy_counters();
+        assert!(sink > 0 && legacy_msgs == shared_msgs, "both paths drained the same log");
+
+        copies_per_msg_legacy = legacy_copied as f64 / legacy_msgs.max(1) as f64;
+        copies_per_msg_shared = shared_copied as f64 / shared_msgs.max(1) as f64;
+        println!(
+            "\nwire encode bytes-copied/msg (4KiB payloads): legacy {:.0} B, shared {:.0} B \
+             ({:.1}x fewer; {} B/msg rides as shared slices)",
+            copies_per_msg_legacy,
+            copies_per_msg_shared,
+            copies_per_msg_legacy / copies_per_msg_shared.max(1.0),
+            shared_bytes_shared / shared_msgs.max(1),
+        );
+        let mut results = RESULTS.lock().unwrap();
+        results.push((
+            "wire poll+encode legacy (4KiB msgs)".to_string(),
+            legacy_msgs as f64 / legacy_secs,
+        ));
+        results.push((
+            "wire poll+encode shared (4KiB msgs)".to_string(),
+            shared_msgs as f64 / shared_secs,
+        ));
+    }
+
     // Emit the machine-readable record alongside the human output.
     let points: Vec<Json> = RESULTS
         .lock()
@@ -232,6 +311,8 @@ fn main() {
     let json = Json::obj(vec![
         ("bench", Json::str("perf_hotpath")),
         ("smoke", Json::Bool(smoke())),
+        ("bytes_copied_per_msg_legacy", Json::num(copies_per_msg_legacy)),
+        ("bytes_copied_per_msg_shared", Json::num(copies_per_msg_shared)),
         ("points", Json::Arr(points)),
     ]);
     let path = write_bench_json("perf_hotpath", &json).expect("write BENCH_perf_hotpath.json");

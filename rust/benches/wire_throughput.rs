@@ -1,0 +1,164 @@
+//! `wire_throughput` — large-payload publish/poll throughput over the
+//! wire path, with bytes-copied-per-delivered-message accounting from
+//! the codec's copy counters.
+//!
+//! Two transports, same workload:
+//!
+//! - **TCP** (loopback): the real zero-copy path — server replies are
+//!   encoded into a pooled [`FrameBuf`] straight from shared log slices
+//!   and written with vectored I/O. Skipped loudly if loopback binding
+//!   is unavailable in the environment.
+//! - **Sim**: the in-process transport, as a copy-path contrast and so
+//!   the bench always has at least one point to emit.
+//!
+//! Run: `cargo bench --bench wire_throughput`. `RL_BENCH_SMOKE=1`
+//! shrinks the workload ~8× for CI harness validation. Emits
+//! `BENCH_wire_throughput.json` via [`write_bench_json`].
+//!
+//! [`FrameBuf`]: reactive_liquid::transport::FrameBuf
+
+use reactive_liquid::messaging::client::{BrokerClient, ConsumerClient};
+use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::sim::SimScheduler;
+use reactive_liquid::transport::{
+    copy_counters, reset_copy_counters, BrokerService, RemoteBroker, SimTransport, TcpTransport,
+    Transport,
+};
+use reactive_liquid::util::io::{write_bench_json, Json};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const PAYLOAD: usize = 64 * 1024;
+const BATCH: usize = 16;
+const POLL_MAX: usize = 32;
+
+fn smoke() -> bool {
+    std::env::var("RL_BENCH_SMOKE").ok().as_deref() == Some("1")
+}
+
+fn msgs_total() -> usize {
+    if smoke() {
+        64
+    } else {
+        512
+    }
+}
+
+struct PathResult {
+    label: &'static str,
+    publish_mb_s: f64,
+    publish_copied_per_msg: f64,
+    poll_mb_s: f64,
+    poll_copied_per_msg: f64,
+    poll_shared_per_msg: f64,
+}
+
+/// Publish `n` large messages through `remote`, then drain them back
+/// through a wire consumer, timing both phases and reading the copy
+/// counters around each.
+fn run_path(label: &'static str, remote: &RemoteBroker, n: usize) -> PathResult {
+    remote.try_create_topic("wire", 3).expect("create topic over the wire");
+    let payload = vec![0xA5u8; PAYLOAD];
+
+    reset_copy_counters();
+    let started = Instant::now();
+    let mut published = 0usize;
+    while published < n {
+        let m = BATCH.min(n - published);
+        let batch: Vec<Message> =
+            (0..m).map(|_| Message::new(None, payload.clone(), 0)).collect();
+        remote.try_publish_batch("wire", batch).expect("publish over the wire");
+        published += m;
+    }
+    let publish_secs = started.elapsed().as_secs_f64();
+    let (publish_copied, _) = copy_counters();
+
+    let consumer = remote.subscribe("wire", "bench");
+    reset_copy_counters();
+    let started = Instant::now();
+    let deadline = started + Duration::from_secs(120);
+    let mut polled = 0usize;
+    while polled < n {
+        let batch = consumer.poll_batch(POLL_MAX);
+        polled += batch.len();
+        if batch.is_empty() && Instant::now() > deadline {
+            panic!("{label}: poll path stalled at {polled}/{n} messages");
+        }
+    }
+    let poll_secs = started.elapsed().as_secs_f64();
+    let (poll_copied, poll_shared) = copy_counters();
+
+    let mb = (n * PAYLOAD) as f64 / (1024.0 * 1024.0);
+    PathResult {
+        label,
+        publish_mb_s: mb / publish_secs,
+        publish_copied_per_msg: publish_copied as f64 / n as f64,
+        poll_mb_s: mb / poll_secs,
+        poll_copied_per_msg: poll_copied as f64 / n as f64,
+        poll_shared_per_msg: poll_shared as f64 / n as f64,
+    }
+}
+
+fn report(r: &PathResult) -> Vec<Json> {
+    println!(
+        "{:22} publish {:>8.1} MB/s ({:>6.0} B copied/msg)   poll {:>8.1} MB/s ({:>6.0} B copied/msg, {:>6.0} B shared/msg)",
+        r.label,
+        r.publish_mb_s,
+        r.publish_copied_per_msg,
+        r.poll_mb_s,
+        r.poll_copied_per_msg,
+        r.poll_shared_per_msg,
+    );
+    vec![
+        Json::obj(vec![
+            ("name", Json::str(format!("{} publish 64KiB", r.label))),
+            ("throughput_mb_s", Json::num(r.publish_mb_s)),
+            ("bytes_copied_per_msg", Json::num(r.publish_copied_per_msg)),
+        ]),
+        Json::obj(vec![
+            ("name", Json::str(format!("{} poll 64KiB", r.label))),
+            ("throughput_mb_s", Json::num(r.poll_mb_s)),
+            ("bytes_copied_per_msg", Json::num(r.poll_copied_per_msg)),
+            ("bytes_shared_per_msg", Json::num(r.poll_shared_per_msg)),
+        ]),
+    ]
+}
+
+fn main() {
+    let n = msgs_total();
+    println!(
+        "wire_throughput — {n} × {} KiB messages per path{}",
+        PAYLOAD / 1024,
+        if smoke() { " (smoke)" } else { "" },
+    );
+    let mut points: Vec<Json> = Vec::new();
+
+    // --- TCP over loopback: the vectored zero-copy path end to end.
+    let tcp = TcpTransport::default();
+    match tcp.serve("127.0.0.1:0", BrokerService::new(Broker::new())) {
+        Err(e) => eprintln!("SKIP tcp path: cannot bind loopback: {e}"),
+        Ok(server) => {
+            let conn = tcp.connect(server.addr()).expect("connect to loopback server");
+            let remote = RemoteBroker::new(conn);
+            points.extend(report(&run_path("tcp loopback", &remote, n)));
+            server.shutdown();
+        }
+    }
+
+    // --- Sim transport: same protocol, in-process delivery.
+    let sched = Arc::new(SimScheduler::new(17));
+    let sim = SimTransport::new(sched);
+    sim.serve("b1", BrokerService::new(Broker::new())).expect("sim serve");
+    let conn = sim.connect("b1").expect("sim connect");
+    let remote = RemoteBroker::new(conn);
+    points.extend(report(&run_path("sim", &remote, n)));
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("wire_throughput")),
+        ("smoke", Json::Bool(smoke())),
+        ("payload_bytes", Json::num(PAYLOAD as f64)),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("wire_throughput", &json).expect("write BENCH_wire_throughput.json");
+    println!("\nwire_throughput done — wrote {}", path.display());
+}

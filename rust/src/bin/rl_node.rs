@@ -259,7 +259,7 @@ fn run_cluster_seat(
             // peer adopts the highest epoch it hears.
             if tick % 4 == 0 {
                 if let Some(c) = &peer.conn {
-                    let cast = c.cast(Frame::ClusterMapIs {
+                    let cast = c.cast(&Frame::ClusterMapIs {
                         epoch: map.epoch(),
                         nodes: map.nodes().to_vec(),
                     });
@@ -281,7 +281,7 @@ fn run_cluster_seat(
             );
             for peer in &peers {
                 if let Some(c) = &peer.conn {
-                    let _ = c.cast(Frame::ClusterMapIs {
+                    let _ = c.cast(&Frame::ClusterMapIs {
                         epoch: next.epoch(),
                         nodes: next.nodes().to_vec(),
                     });

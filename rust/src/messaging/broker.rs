@@ -35,7 +35,7 @@
 
 use super::group::{GroupState, MemberId};
 use super::message::{Message, OffsetMessage};
-use super::partition::PartitionLog;
+use super::partition::{BatchRef, PartitionLog};
 use super::storage::{Storage, StorageError};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -582,6 +582,60 @@ impl PolledBatch {
     }
 }
 
+/// The zero-copy counterpart of [`PolledBatch`]: per-partition shared
+/// slices into the partition logs instead of cloned messages.
+///
+/// Each [`BatchRef`] pins its log segments alive via `Arc`, so the wire
+/// server can encode a reply straight from log memory — no `Message`
+/// clone, no payload refcount churn — and drop the batch afterwards.
+/// `next_offsets` / `generation` carry the same commit bookkeeping as
+/// `PolledBatch`; [`PolledBatchRef::to_polled_batch`] materializes an
+/// owned batch for callers that need one (commits only read the
+/// bookkeeping fields, so the two forms commit identically).
+pub struct PolledBatchRef {
+    /// `(partition, slices)` in delivery order; empty partitions are
+    /// omitted. Within each partition, messages are in offset order.
+    pub parts: Vec<(usize, BatchRef)>,
+    pub next_offsets: Vec<(usize, u64)>,
+    pub generation: u64,
+}
+
+impl PolledBatchRef {
+    pub fn len(&self) -> usize {
+        self.parts.iter().map(|(_, b)| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.iter().all(|(_, b)| b.is_empty())
+    }
+
+    /// Iterate `(partition, offset, &message)` in delivery order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u64, &Message)> {
+        self.parts
+            .iter()
+            .flat_map(|(p, b)| b.iter().map(move |(o, m)| (*p, o, m)))
+    }
+
+    /// Materialize into an owned [`PolledBatch`] (clones bump payload
+    /// refcounts, not bytes). The compatibility bridge for the in-process
+    /// poll API.
+    pub fn to_polled_batch(&self) -> PolledBatch {
+        let messages = self
+            .iter()
+            .map(|(partition, offset, message)| OffsetMessage {
+                partition,
+                offset,
+                message: message.clone(),
+            })
+            .collect();
+        PolledBatch {
+            messages,
+            next_offsets: self.next_offsets.clone(),
+            generation: self.generation,
+        }
+    }
+}
+
 /// A consumer-group member handle.
 ///
 /// `poll`/`poll_batch` read batches from the member's assigned partitions
@@ -660,42 +714,58 @@ impl Consumer {
     /// alone overruns the budget — a poll can be oversized, but can never
     /// livelock returning empty against a large head-of-line message.
     fn poll_inner(&self, max: usize, max_bytes: usize) -> PolledBatch {
-        let mut messages = Vec::new();
+        self.poll_refs_inner(max, max_bytes).to_polled_batch()
+    }
+
+    /// The zero-copy core behind every poll flavor: identical snapshot /
+    /// rotation / budget / advance semantics to the historical owned
+    /// `poll_inner`, but the messages stay where they are — each
+    /// partition contributes a [`BatchRef`] of shared log slices, trimmed
+    /// with [`BatchRef::truncate`] to the budget-kept prefix.
+    fn poll_refs_inner(&self, max: usize, max_bytes: usize) -> PolledBatchRef {
+        let mut out: Vec<(usize, BatchRef)> = Vec::new();
         let mut next_offsets: Vec<(usize, u64)> = Vec::new();
         let (generation, parts, positions) = self.snapshot();
         if parts.is_empty() || max == 0 {
-            return PolledBatch { messages, next_offsets, generation };
+            return PolledBatchRef { parts: out, next_offsets, generation };
         }
         let mut budget = max_bytes;
+        let mut total = 0usize;
         let start = self.cursor.fetch_add(1, Ordering::Relaxed) % parts.len();
         for k in 0..parts.len() {
-            if messages.len() >= max {
+            if total >= max {
                 break;
             }
             let i = (start + k) % parts.len();
             let (p, from) = (parts[i], positions[i]);
-            let batch = self.topic.partitions[p].read(from, max - messages.len());
+            let mut batch = self.topic.partitions[p].read_ref(from, max - total);
             let mut last: Option<u64> = None;
+            let mut kept = 0usize;
             let mut exhausted = false;
-            for (offset, message) in batch {
-                let cost = wire_cost(&message);
-                if cost > budget && !messages.is_empty() {
+            for (offset, message) in batch.iter() {
+                let cost = wire_cost(message);
+                if cost > budget && total + kept > 0 {
                     exhausted = true;
                     break;
                 }
                 budget = budget.saturating_sub(cost);
                 last = Some(offset);
-                messages.push(OffsetMessage { partition: p, offset, message });
+                kept += 1;
             }
+            batch.truncate(kept);
+            total += kept;
             if let Some(l) = last {
                 next_offsets.push((p, l + 1));
+            }
+            if kept > 0 {
+                out.push((p, batch));
             }
             if exhausted {
                 break;
             }
         }
         self.advance_if_current(generation, &next_offsets);
-        PolledBatch { messages, next_offsets, generation }
+        PolledBatchRef { parts: out, next_offsets, generation }
     }
 
     /// Poll up to `max` messages across owned partitions (rotating the
@@ -728,6 +798,22 @@ impl Consumer {
     /// payload sizes behind the count cap.
     pub fn poll_batch_budgeted(&self, max: usize, max_bytes: usize) -> PolledBatch {
         self.poll_inner(max, max_bytes)
+    }
+
+    /// [`Consumer::poll_batch`] without materializing: returns shared
+    /// slices into the partition logs. Same commit bookkeeping, same
+    /// advance semantics — the messages are just never cloned. Callers
+    /// that encode to the wire hand the result to
+    /// [`encode_batch_ref`](crate::transport::frame::encode_batch_ref).
+    pub fn poll_batch_shared(&self, max: usize) -> PolledBatchRef {
+        self.poll_refs_inner(max, usize::MAX)
+    }
+
+    /// [`Consumer::poll_batch_budgeted`] in shared-slice form — the wire
+    /// server's poll path: byte-budgeted against [`wire_cost`] and
+    /// encoded straight from log memory.
+    pub fn poll_batch_budgeted_shared(&self, max: usize, max_bytes: usize) -> PolledBatchRef {
+        self.poll_refs_inner(max, max_bytes)
     }
 
     /// Commit `next` (the next offset to read) for `partition`.
@@ -956,6 +1042,60 @@ mod tests {
             let (p, _) = t.publish(Message::new(Some(key), vec![], 0));
             assert_eq!(p, partition_for_key(key, 4), "client-side routing agrees");
         }
+    }
+
+    #[test]
+    fn shared_poll_matches_owned_poll_step_for_step() {
+        // Two identical brokers; one consumer polls owned batches, the
+        // other shared slices. Every poll must agree on messages,
+        // watermarks, and generation, and commits must land identically.
+        let mk = || {
+            let b = broker_with_topic(3);
+            let t = b.topic("t").unwrap();
+            t.publish_batch(
+                (0..30u8)
+                    .map(|i| {
+                        Message::new(Some(i as u64 % 5), vec![i; (i as usize * 7) % 60 + 1], i as u64)
+                    })
+                    .collect(),
+            );
+            b
+        };
+        let (b1, b2) = (mk(), mk());
+        let (c1, c2) = (b1.subscribe("t", "g"), b2.subscribe("t", "g"));
+        loop {
+            let owned = c1.poll_batch_budgeted(7, 400);
+            let shared = c2.poll_batch_budgeted_shared(7, 400);
+            assert_eq!(shared.generation, owned.generation);
+            assert_eq!(shared.next_offsets, owned.next_offsets);
+            assert_eq!(shared.len(), owned.len());
+            let materialized = shared.to_polled_batch();
+            assert_eq!(materialized.messages, owned.messages);
+            assert!(c1.commit_batch(&owned));
+            assert!(c2.commit_batch(&materialized));
+            if owned.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(b1.group_lag("t", "g"), 0);
+        assert_eq!(b2.group_lag("t", "g"), 0);
+    }
+
+    #[test]
+    fn shared_poll_first_message_beats_the_budget() {
+        // The progress guarantee survives the refactor: a head-of-line
+        // message larger than the whole budget is still delivered alone.
+        let b = broker_with_topic(1);
+        let t = b.topic("t").unwrap();
+        t.publish(Message::new(None, vec![7; 1000], 0));
+        t.publish(Message::new(None, vec![8; 1000], 0));
+        let c = b.subscribe("t", "g");
+        let batch = c.poll_batch_budgeted_shared(10, 64);
+        assert_eq!(batch.len(), 1, "oversized head still delivered");
+        assert_eq!(batch.next_offsets, vec![(0, 1)]);
+        let second = c.poll_batch_budgeted_shared(10, 64);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second.next_offsets, vec![(0, 2)]);
     }
 
     #[test]

@@ -22,6 +22,12 @@ impl Message {
         Message { key, payload: payload.into(), produced_at_ms }
     }
 
+    /// Build from an already-shared payload without copying it (the wire
+    /// decode path hands its `Arc` straight in here).
+    pub fn with_payload(key: Option<u64>, payload: Arc<[u8]>, produced_at_ms: u64) -> Self {
+        Message { key, payload, produced_at_ms }
+    }
+
     /// Convenience for tests and examples.
     pub fn from_str(s: &str) -> Self {
         Message::new(None, s.as_bytes().to_vec(), 0)

@@ -87,6 +87,10 @@
 //! implements over a wire connection, so the same pipeline runs against
 //! a broker in this process or on another node.
 
+// The zero-copy wire path exists to kill redundant clones on the
+// hot path; keep this layer honest about new ones.
+#![deny(clippy::redundant_clone)]
+
 pub mod broker;
 pub mod client;
 pub mod group;
@@ -102,4 +106,5 @@ pub use message::Message;
 pub use producer::Producer;
 pub use storage::{DiskStorage, FsyncPolicy, MemStorage, Storage, StorageConfig, StorageError};
 
-pub use broker::{Consumer, PolledBatch};
+pub use broker::{Consumer, PolledBatch, PolledBatchRef};
+pub use partition::{BatchRef, MessageSlice};

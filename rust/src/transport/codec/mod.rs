@@ -1,0 +1,489 @@
+//! The codec seam: pluggable payload encoding over pooled frame buffers.
+//!
+//! PR 8's zero-copy wire path splits "what bytes mean" from "where bytes
+//! live":
+//!
+//! - [`Codec`] is the *what*: a trait pairing `encode_into` with
+//!   `decode`. [`wire::WireCodec`] is the default implementation — the
+//!   hand-rolled length-prefixed/CRC'd format of
+//!   [`frame`](super::frame), produced **bit-identically** to
+//!   `Frame::encode`. Alternative backends (postcard, prost) drop in
+//!   behind the same trait without touching the transports (the
+//!   `cellex-rs` `serialization-core`/`-postcard`/`-prost` split is the
+//!   exemplar shape).
+//! - [`FrameBuf`] is the *where*: a reusable encode buffer that holds
+//!   small fields in one contiguous `head` vector and records large
+//!   payloads as `Arc<[u8]>` *references* instead of copying them. The
+//!   logical byte stream interleaves the two; [`FrameBuf::io_slices`]
+//!   exposes it as scatter/gather slices for `write_vectored`, so a
+//!   payload travels `Arc<[u8]>` → socket with **zero** intermediate
+//!   assembly copies. The buffer is owned per connection and cleared
+//!   between frames, so the per-call `Vec<u8>` allocation of the old
+//!   `Frame::encode` path disappears after warm-up.
+//! - [`DecodeBuf`] is the symmetric read-side scratch: an owned byte
+//!   accumulator with a consume cursor, replacing the
+//!   `Vec::drain(..used)` front-shift that memmoved every residual byte
+//!   once per decoded frame.
+//!
+//! The module also hosts the copy accounting ([`note_copied`] /
+//! [`note_shared`]) that `perf_hotpath` and `wire_throughput` read to
+//! report **payload bytes copied per delivered message** — only payload
+//! byte runs are counted (headers are a few dozen bytes and always
+//! copied), so the metric isolates exactly the copies this PR attacks.
+
+pub mod wire;
+
+pub use wire::WireCodec;
+
+use super::frame::{Frame, FrameError};
+use crate::util::crc::{crc32_finish, crc32_init, crc32_update};
+use std::io::{self, IoSlice, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Payloads at or above this many bytes are recorded as shared
+/// `Arc<[u8]>` slices; smaller ones are copied into the contiguous head
+/// (a tiny memcpy beats an extra scatter/gather entry and an Arc bump).
+pub const SHARED_MIN: usize = 256;
+
+// ------------------------------------------------------------- accounting
+
+/// Payload bytes memcpy'd somewhere on the wire path (encode copies of
+/// small payloads, legacy `Vec<u8>` encodes, decode copies into fresh
+/// `Arc` storage).
+static BYTES_COPIED: AtomicU64 = AtomicU64::new(0);
+
+/// Payload bytes that crossed the path by reference (`Arc` clone into a
+/// [`FrameBuf`], handed to `write_vectored` without assembly).
+static BYTES_SHARED: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+pub fn note_copied(n: usize) {
+    BYTES_COPIED.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn note_shared(n: usize) {
+    BYTES_SHARED.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// `(bytes_copied, bytes_shared)` since process start or the last
+/// [`reset_copy_counters`]. Benches snapshot around a measured section.
+pub fn copy_counters() -> (u64, u64) {
+    (BYTES_COPIED.load(Ordering::Relaxed), BYTES_SHARED.load(Ordering::Relaxed))
+}
+
+pub fn reset_copy_counters() {
+    BYTES_COPIED.store(0, Ordering::Relaxed);
+    BYTES_SHARED.store(0, Ordering::Relaxed);
+}
+
+// -------------------------------------------------------------- WireSink
+
+/// Byte sink the frame writer encodes into: either a plain `Vec<u8>`
+/// (the legacy copy-everything path, still used by `Frame::encode` and
+/// by tests that hand-craft frames) or a [`FrameBuf`] (the pooled path
+/// that shares large payloads). Keeping one generic body writer in
+/// `frame.rs` guarantees both sinks produce the same logical bytes.
+pub trait WireSink {
+    fn put_u8(&mut self, v: u8);
+    /// Append bytes by copy (headers, counts, strings, small fields).
+    fn put_copied(&mut self, bytes: &[u8]);
+    /// Append a message payload. A `Vec` sink copies it (and counts the
+    /// copy); a [`FrameBuf`] shares it when it clears [`SHARED_MIN`].
+    fn put_payload(&mut self, payload: &Arc<[u8]>);
+}
+
+impl WireSink for Vec<u8> {
+    #[inline]
+    fn put_u8(&mut self, v: u8) {
+        self.push(v);
+    }
+
+    #[inline]
+    fn put_copied(&mut self, bytes: &[u8]) {
+        self.extend_from_slice(bytes);
+    }
+
+    #[inline]
+    fn put_payload(&mut self, payload: &Arc<[u8]>) {
+        note_copied(payload.len());
+        self.extend_from_slice(payload);
+    }
+}
+
+// -------------------------------------------------------------- FrameBuf
+
+/// Reusable scatter/gather encode buffer.
+///
+/// Logically a byte stream; physically a contiguous `head` vector with
+/// zero or more shared payload slices spliced in at recorded head
+/// positions. `clear()` keeps the head's capacity, so a connection that
+/// owns one `FrameBuf` stops allocating per frame once warm.
+#[derive(Default)]
+pub struct FrameBuf {
+    /// Contiguous copied bytes (length prefix, header, small fields).
+    head: Vec<u8>,
+    /// `(head position, payload)`: the payload's bytes logically sit
+    /// *before* `head[position..]`. Positions are non-decreasing.
+    shared: Vec<(usize, Arc<[u8]>)>,
+    /// Total bytes across `shared` (so `len()` is O(1)).
+    shared_bytes: usize,
+    /// Head index of the in-progress frame's length prefix.
+    frame_start: usize,
+    /// `shared.len()` / `shared_bytes` snapshots at `begin_frame`.
+    frame_shared_start: usize,
+    frame_shared_bytes: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        FrameBuf::default()
+    }
+
+    /// Drop contents, keep the head allocation for reuse.
+    pub fn clear(&mut self) {
+        self.head.clear();
+        self.shared.clear();
+        self.shared_bytes = 0;
+        self.frame_start = 0;
+        self.frame_shared_start = 0;
+        self.frame_shared_bytes = 0;
+    }
+
+    /// Logical length of the byte stream.
+    pub fn len(&self) -> usize {
+        self.head.len() + self.shared_bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Start a frame: reserve the 4-byte length prefix, remember where
+    /// the frame begins so [`finish_frame`](Self::finish_frame) can
+    /// checksum and patch it.
+    pub fn begin_frame(&mut self) {
+        self.frame_start = self.head.len();
+        self.frame_shared_start = self.shared.len();
+        self.frame_shared_bytes = self.shared_bytes;
+        self.head.extend_from_slice(&[0u8; 4]);
+    }
+
+    /// Seal the in-progress frame: stream a CRC-32 over the logical
+    /// bytes after the length prefix (head and shared slices in order),
+    /// append it, and patch the prefix. Produces exactly the bytes of
+    /// `Frame::encode_flags`.
+    pub fn finish_frame(&mut self) {
+        let mut state = crc32_init();
+        let mut pos = self.frame_start + 4;
+        for (at, payload) in &self.shared[self.frame_shared_start..] {
+            state = crc32_update(state, &self.head[pos..*at]);
+            state = crc32_update(state, payload);
+            pos = *at;
+        }
+        state = crc32_update(state, &self.head[pos..]);
+        let crc = crc32_finish(state);
+        self.head.extend_from_slice(&crc.to_le_bytes());
+        let body = (self.head.len() - self.frame_start - 4)
+            + (self.shared_bytes - self.frame_shared_bytes);
+        let prefix = &mut self.head[self.frame_start..self.frame_start + 4];
+        prefix.copy_from_slice(&(body as u32).to_le_bytes());
+    }
+
+    /// Record a payload by reference — zero copy, one `Arc` bump.
+    pub fn put_shared(&mut self, payload: Arc<[u8]>) {
+        note_shared(payload.len());
+        self.shared_bytes += payload.len();
+        self.shared.push((self.head.len(), payload));
+    }
+
+    /// The stream as ordered scatter/gather slices, skipping the first
+    /// `skip` logical bytes — rebuilt per `write_vectored` retry (the
+    /// borrow-free alternative to `IoSlice::advance_slices`).
+    pub fn io_slices<'a>(&'a self, skip: usize) -> Vec<IoSlice<'a>> {
+        let mut out = Vec::with_capacity(self.shared.len() * 2 + 1);
+        let mut skip = skip;
+        for seg in self.segments() {
+            if skip >= seg.len() {
+                skip -= seg.len();
+                continue;
+            }
+            out.push(IoSlice::new(&seg[skip..]));
+            skip = 0;
+        }
+        out
+    }
+
+    /// Write the whole stream to `w` with `write_vectored`, looping on
+    /// partial writes. Shared payloads flow straight from their `Arc`
+    /// storage into the writer — no assembly buffer.
+    pub fn write_all_vectored(&self, w: &mut impl Write) -> io::Result<()> {
+        let total = self.len();
+        let mut written = 0;
+        while written < total {
+            let slices = self.io_slices(written);
+            let n = w.write_vectored(&slices)?;
+            if n == 0 {
+                return Err(io::Error::new(io::ErrorKind::WriteZero, "vectored write stalled"));
+            }
+            written += n;
+        }
+        Ok(())
+    }
+
+    /// Flatten to one contiguous vector (compat paths and tests).
+    pub fn to_vec(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len());
+        for seg in self.segments() {
+            out.extend_from_slice(seg);
+        }
+        out
+    }
+
+    /// The logical stream as in-order segments: head runs split where
+    /// shared payloads splice in.
+    fn segments(&self) -> Vec<&[u8]> {
+        let mut out = Vec::with_capacity(self.shared.len() * 2 + 1);
+        let mut pos = 0;
+        for (at, payload) in &self.shared {
+            if *at > pos {
+                out.push(&self.head[pos..*at]);
+                pos = *at;
+            }
+            out.push(&payload[..]);
+        }
+        if pos < self.head.len() {
+            out.push(&self.head[pos..]);
+        }
+        out
+    }
+}
+
+impl WireSink for FrameBuf {
+    #[inline]
+    fn put_u8(&mut self, v: u8) {
+        self.head.push(v);
+    }
+
+    #[inline]
+    fn put_copied(&mut self, bytes: &[u8]) {
+        self.head.extend_from_slice(bytes);
+    }
+
+    #[inline]
+    fn put_payload(&mut self, payload: &Arc<[u8]>) {
+        if payload.len() >= SHARED_MIN {
+            self.put_shared(payload.clone());
+        } else {
+            note_copied(payload.len());
+            self.head.extend_from_slice(payload);
+        }
+    }
+}
+
+// ------------------------------------------------------------- DecodeBuf
+
+/// Reusable decode scratch: an owned accumulator with a consume cursor.
+///
+/// The transports used to `drain(..used)` the front of a `Vec<u8>` after
+/// every decoded frame — a memmove of all residual bytes. This keeps a
+/// cursor instead, reclaiming space only when the stream fully drains
+/// (the common case: one frame per exchange) or when the dead prefix
+/// grows past a compaction threshold mid-pipeline.
+#[derive(Default)]
+pub struct DecodeBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+/// Compact when at least this many dead bytes sit before the cursor and
+/// they outnumber the live remainder.
+const COMPACT_AT: usize = 64 * 1024;
+
+impl DecodeBuf {
+    pub fn new() -> Self {
+        DecodeBuf::default()
+    }
+
+    /// The unread bytes (what `Frame::decode` should look at).
+    pub fn unread(&self) -> &[u8] {
+        &self.buf[self.pos..]
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Advance past `n` decoded bytes. Resets to empty (keeping the
+    /// allocation) once everything is consumed.
+    pub fn consume(&mut self, n: usize) {
+        self.pos += n;
+        debug_assert!(self.pos <= self.buf.len());
+        if self.pos >= self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+    }
+
+    /// Append freshly read bytes, compacting the dead prefix first when
+    /// it dominates the buffer.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        if self.pos >= COMPACT_AT && self.pos >= self.buf.len() - self.pos {
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(self.buf.len() - self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Drop everything (reconnects start from a clean stream).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+    }
+}
+
+// ----------------------------------------------------------------- Codec
+
+/// What bytes mean: encode a [`Frame`] into a [`FrameBuf`], decode one
+/// frame off the head of a byte stream. Implementations must be wire
+/// self-consistent (`decode ∘ encode = id`); [`WireCodec`] is the
+/// default and matches `Frame::encode`/`Frame::decode` bit for bit.
+pub trait Codec: Send + Sync {
+    /// Append one whole frame (length prefix through checksum) to `out`.
+    fn encode_into(&self, frame: &Frame, flags: u8, out: &mut FrameBuf);
+
+    /// Decode one frame from the head of `buf`: `(frame, flags, bytes
+    /// consumed)`, with [`FrameError::Incomplete`] meaning "feed more".
+    fn decode(&self, buf: &[u8]) -> Result<(Frame, u8, usize), FrameError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framebuf_matches_plain_vec_encoding() {
+        let payload: Arc<[u8]> = vec![7u8; 4096].into(); // well above SHARED_MIN
+        let frame = Frame::PublishBatch {
+            topic: "t".into(),
+            msgs: vec![
+                crate::messaging::Message::with_payload(Some(3), payload, 9),
+                crate::messaging::Message::new(None, vec![1, 2], 0),
+            ],
+        };
+        let legacy = frame.encode();
+        let mut fb = FrameBuf::new();
+        frame.encode_into(0, &mut fb);
+        assert_eq!(fb.to_vec(), legacy, "pooled encoding must be bit-identical");
+        assert_eq!(fb.len(), legacy.len());
+        assert!(!fb.shared.is_empty(), "large payload must be shared, not copied");
+    }
+
+    #[test]
+    fn framebuf_reuse_across_frames() {
+        let mut fb = FrameBuf::new();
+        for lag in [1u64, 2, 3] {
+            fb.clear();
+            Frame::Lag { lag }.encode_into(0, &mut fb);
+            assert_eq!(fb.to_vec(), Frame::Lag { lag }.encode());
+        }
+    }
+
+    #[test]
+    fn two_frames_in_one_framebuf_concatenate() {
+        let mut fb = FrameBuf::new();
+        Frame::TotalLag.encode_into(0, &mut fb);
+        Frame::Lag { lag: 3 }.encode_into(0, &mut fb);
+        let mut expect = Frame::TotalLag.encode();
+        expect.extend_from_slice(&Frame::Lag { lag: 3 }.encode());
+        assert_eq!(fb.to_vec(), expect);
+    }
+
+    #[test]
+    fn io_slices_cover_the_stream_at_any_skip() {
+        let payload: Arc<[u8]> = vec![0xABu8; 1000].into();
+        let frame = Frame::PublishBatch {
+            topic: "big".into(),
+            msgs: vec![crate::messaging::Message::with_payload(None, payload, 1)],
+        };
+        let mut fb = FrameBuf::new();
+        frame.encode_into(0, &mut fb);
+        let flat = fb.to_vec();
+        for skip in [0usize, 1, 4, 9, flat.len() / 2, flat.len() - 1, flat.len()] {
+            let mut got = Vec::new();
+            for s in fb.io_slices(skip) {
+                got.extend_from_slice(&s[..]);
+            }
+            assert_eq!(got, flat[skip..], "skip {skip}");
+        }
+    }
+
+    #[test]
+    fn write_all_vectored_survives_partial_writes() {
+        // A writer that accepts at most 7 bytes per call.
+        struct Dribble(Vec<u8>);
+        impl Write for Dribble {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                let n = buf.len().min(7);
+                self.0.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let payload: Arc<[u8]> = vec![5u8; 600].into();
+        let frame = Frame::PublishBatch {
+            topic: "t".into(),
+            msgs: vec![crate::messaging::Message::with_payload(None, payload, 0)],
+        };
+        let mut fb = FrameBuf::new();
+        frame.encode_into(0, &mut fb);
+        let mut sink = Dribble(Vec::new());
+        fb.write_all_vectored(&mut sink).unwrap();
+        assert_eq!(sink.0, fb.to_vec());
+    }
+
+    #[test]
+    fn decodebuf_consume_and_reset() {
+        let mut db = DecodeBuf::new();
+        let f1 = Frame::TotalLag.encode();
+        let f2 = Frame::Lag { lag: 9 }.encode();
+        db.extend(&f1);
+        db.extend(&f2[..3]); // partial second frame
+        let (frame, _, used) = Frame::decode(db.unread()).unwrap();
+        assert_eq!(frame, Frame::TotalLag);
+        db.consume(used);
+        assert_eq!(db.unread(), &f2[..3]);
+        db.extend(&f2[3..]);
+        let (frame, _, used) = Frame::decode(db.unread()).unwrap();
+        assert_eq!(frame, Frame::Lag { lag: 9 });
+        db.consume(used);
+        assert!(db.is_empty());
+        assert_eq!(db.pos, 0, "fully drained buffer resets its cursor");
+    }
+
+    #[test]
+    fn copy_counters_accumulate() {
+        // Process-global counters: other tests run concurrently, so only
+        // assert monotone growth attributable to this call pattern.
+        let (c0, s0) = copy_counters();
+        let payload: Arc<[u8]> = vec![1u8; 2048].into();
+        let frame = Frame::PublishBatch {
+            topic: "t".into(),
+            msgs: vec![crate::messaging::Message::with_payload(None, payload, 0)],
+        };
+        let mut fb = FrameBuf::new();
+        frame.encode_into(0, &mut fb); // shared
+        let _ = frame.encode(); // legacy copy
+        let (c1, s1) = copy_counters();
+        assert!(s1 >= s0 + 2048, "shared bytes counted");
+        assert!(c1 >= c0 + 2048, "legacy copy counted");
+    }
+}

@@ -1,0 +1,44 @@
+//! [`WireCodec`]: the default [`Codec`] — the hand-rolled frame format
+//! of [`frame`](crate::transport::frame), unchanged on the wire.
+//!
+//! This is the `serialization-core`-style default backend: it delegates
+//! to `Frame::encode_into` / `Frame::decode`, so its bytes are exactly
+//! what every deployed node already speaks. Alternative codecs (a
+//! postcard or prost backend, a compressing codec) implement [`Codec`]
+//! beside it and plug into the transports without touching them.
+
+use super::{Codec, FrameBuf};
+use crate::transport::frame::{Frame, FrameError};
+
+/// The built-in wire format behind the [`Codec`] seam.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WireCodec;
+
+impl Codec for WireCodec {
+    fn encode_into(&self, frame: &Frame, flags: u8, out: &mut FrameBuf) {
+        frame.encode_into(flags, out);
+    }
+
+    fn decode(&self, buf: &[u8]) -> Result<(Frame, u8, usize), FrameError> {
+        Frame::decode(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_round_trips_and_matches_frame_encode() {
+        let codec = WireCodec;
+        let frame = Frame::Subscribe { topic: "t".into(), group: "g".into() };
+        let mut fb = FrameBuf::new();
+        codec.encode_into(&frame, 0, &mut fb);
+        let bytes = fb.to_vec();
+        assert_eq!(bytes, frame.encode());
+        let (back, flags, used) = codec.decode(&bytes).unwrap();
+        assert_eq!(back, frame);
+        assert_eq!(flags, 0);
+        assert_eq!(used, bytes.len());
+    }
+}

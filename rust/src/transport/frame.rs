@@ -36,7 +36,10 @@
 
 use crate::messaging::broker::PolledBatch;
 use crate::messaging::message::{Message, OffsetMessage};
+use crate::messaging::partition::BatchRef;
+use crate::transport::codec::{self, FrameBuf, WireSink};
 use std::fmt;
+use std::sync::Arc;
 
 /// Protocol version carried by every frame.
 pub const WIRE_VERSION: u8 = 1;
@@ -218,44 +221,45 @@ const K_LEAVE_NODE: u8 = 65;
 const K_HEARTBEAT: u8 = 66;
 
 // ---------------------------------------------------------------- writer
+//
+// One generic body writer serves both sinks ([`WireSink`]): `Vec<u8>`
+// (the legacy copy-everything encode, still what `Frame::encode`
+// returns) and [`FrameBuf`] (the pooled scatter/gather encode that
+// shares large payloads). Splitting here would invite byte drift.
 
-fn put_u16(b: &mut Vec<u8>, v: u16) {
-    b.extend_from_slice(&v.to_le_bytes());
+fn put_u16<S: WireSink>(b: &mut S, v: u16) {
+    b.put_copied(&v.to_le_bytes());
 }
 
-fn put_u32(b: &mut Vec<u8>, v: u32) {
-    b.extend_from_slice(&v.to_le_bytes());
+fn put_u32<S: WireSink>(b: &mut S, v: u32) {
+    b.put_copied(&v.to_le_bytes());
 }
 
-fn put_u64(b: &mut Vec<u8>, v: u64) {
-    b.extend_from_slice(&v.to_le_bytes());
+fn put_u64<S: WireSink>(b: &mut S, v: u64) {
+    b.put_copied(&v.to_le_bytes());
 }
 
-fn put_str(b: &mut Vec<u8>, s: &str) {
+fn put_str<S: WireSink>(b: &mut S, s: &str) {
     assert!(s.len() <= u16::MAX as usize, "wire string longer than 64 KiB");
     put_u16(b, s.len() as u16);
-    b.extend_from_slice(s.as_bytes());
+    b.put_copied(s.as_bytes());
 }
 
-fn put_bytes(b: &mut Vec<u8>, bytes: &[u8]) {
-    assert!(bytes.len() <= MAX_FRAME, "wire byte run exceeds the frame cap");
-    put_u32(b, bytes.len() as u32);
-    b.extend_from_slice(bytes);
-}
-
-fn put_msg(b: &mut Vec<u8>, m: &Message) {
+fn put_msg<S: WireSink>(b: &mut S, m: &Message) {
     match m.key {
         Some(k) => {
-            b.push(1);
+            b.put_u8(1);
             put_u64(b, k);
         }
-        None => b.push(0),
+        None => b.put_u8(0),
     }
     put_u64(b, m.produced_at_ms);
-    put_bytes(b, &m.payload);
+    assert!(m.payload.len() <= MAX_FRAME, "wire byte run exceeds the frame cap");
+    put_u32(b, m.payload.len() as u32);
+    b.put_payload(&m.payload);
 }
 
-fn put_pairs(b: &mut Vec<u8>, pairs: &[(u32, u64)]) {
+fn put_pairs<S: WireSink>(b: &mut S, pairs: &[(u32, u64)]) {
     put_u32(b, pairs.len() as u32);
     for &(p, o) in pairs {
         put_u32(b, p);
@@ -303,11 +307,6 @@ impl<'a> Rd<'a> {
         String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::Malformed("invalid utf-8"))
     }
 
-    fn bytes(&mut self) -> Result<Vec<u8>, FrameError> {
-        let n = self.u32()? as usize;
-        Ok(self.take(n)?.to_vec())
-    }
-
     /// Element count for a sequence. Bounded by the bytes actually left
     /// in the body, so a corrupted count can never drive a huge
     /// allocation or a long loop.
@@ -327,8 +326,12 @@ impl<'a> Rd<'a> {
             _ => return Err(FrameError::Malformed("bad key tag")),
         };
         let produced_at_ms = self.u64()?;
-        let payload = self.bytes()?;
-        Ok(Message::new(key, payload, produced_at_ms))
+        // One copy, wire → `Arc` storage. (The old path copied twice:
+        // slice → `Vec`, then `Vec` → `Arc`.)
+        let n = self.u32()? as usize;
+        let payload: Arc<[u8]> = Arc::from(self.take(n)?);
+        codec::note_copied(n);
+        Ok(Message::with_payload(key, payload, produced_at_ms))
     }
 
     fn pairs(&mut self) -> Result<Vec<(u32, u64)>, FrameError> {
@@ -428,7 +431,7 @@ impl Frame {
         )
     }
 
-    fn put_body(&self, b: &mut Vec<u8>) {
+    fn put_body<S: WireSink>(&self, b: &mut S) {
         match self {
             Frame::CreateTopic { topic, partitions } => {
                 put_str(b, topic);
@@ -487,7 +490,7 @@ impl Frame {
                 }
                 put_pairs(b, next_offsets);
             }
-            Frame::Committed { applied } => b.push(u8::from(*applied)),
+            Frame::Committed { applied } => b.put_u8(u8::from(*applied)),
             Frame::AssignmentIs { partitions } => {
                 put_u32(b, partitions.len() as u32);
                 for &p in partitions {
@@ -497,13 +500,13 @@ impl Frame {
             Frame::Lag { lag } => put_u64(b, *lag),
             Frame::Partitions { count } => match count {
                 Some(c) => {
-                    b.push(1);
+                    b.put_u8(1);
                     put_u32(b, *c);
                 }
-                None => b.push(0),
+                None => b.put_u8(0),
             },
             Frame::Error { code, message } => {
-                b.push(code.to_u8());
+                b.put_u8(code.to_u8());
                 put_str(b, message);
             }
             Frame::ClusterMapIs { epoch, nodes } => {
@@ -648,6 +651,19 @@ impl Frame {
         b
     }
 
+    /// Append this frame to a pooled [`FrameBuf`] — same bytes as
+    /// [`encode_flags`](Self::encode_flags), but large payloads are
+    /// recorded as shared `Arc` slices instead of being copied, and the
+    /// buffer (owned per connection) amortizes all allocation.
+    pub fn encode_into(&self, flags: u8, out: &mut FrameBuf) {
+        out.begin_frame();
+        out.put_u8(WIRE_VERSION);
+        out.put_u8(flags);
+        out.put_u8(self.kind());
+        self.put_body(out);
+        out.finish_frame();
+    }
+
     /// Decode one frame from the head of `buf`. Returns the frame, its
     /// flags byte, and the total bytes consumed (length prefix included).
     /// See the module docs for the exact error contract; in particular
@@ -692,6 +708,45 @@ pub fn batch_to_frame(batch: PolledBatch) -> Frame {
         messages: batch.messages,
         next_offsets: batch.next_offsets.iter().map(|&(p, n)| (p as u32, n)).collect(),
     }
+}
+
+/// Encode a [`Frame::Batch`] reply **straight from shared log slices**
+/// — the zero-copy twin of `batch_to_frame(...).encode()`. The bytes
+/// are identical to encoding the equivalent owned `Frame::Batch`; the
+/// difference is that message payloads flow from the partition log's
+/// segments into `out` as `Arc` references, never materializing a
+/// `Vec<OffsetMessage>` or copying payload bytes.
+///
+/// `parts` pairs each partition index with the [`BatchRef`] polled from
+/// it, in delivery order; `next_offsets` matches
+/// [`PolledBatch::next_offsets`].
+pub fn encode_batch_ref(
+    generation: u64,
+    parts: &[(usize, BatchRef)],
+    next_offsets: &[(usize, u64)],
+    flags: u8,
+    out: &mut FrameBuf,
+) {
+    out.begin_frame();
+    out.put_u8(WIRE_VERSION);
+    out.put_u8(flags);
+    out.put_u8(K_BATCH);
+    put_u64(out, generation);
+    let total: usize = parts.iter().map(|(_, b)| b.len()).sum();
+    put_u32(out, total as u32);
+    for (partition, batch) in parts {
+        for (offset, message) in batch.iter() {
+            put_u32(out, *partition as u32);
+            put_u64(out, offset);
+            put_msg(out, message);
+        }
+    }
+    put_u32(out, next_offsets.len() as u32);
+    for &(p, o) in next_offsets {
+        put_u32(out, p as u32);
+        put_u64(out, o);
+    }
+    out.finish_frame();
 }
 
 /// Convert [`Frame::Batch`] fields back into a [`PolledBatch`].
@@ -868,5 +923,49 @@ mod tests {
     fn crc32_known_vector() {
         // The classic check value for CRC-32/IEEE.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn encode_into_matches_encode_for_every_sample_frame() {
+        let mut fb = FrameBuf::new();
+        for f in sample_frames() {
+            fb.clear();
+            f.encode_into(0, &mut fb);
+            assert_eq!(fb.to_vec(), f.encode(), "pooled bytes drifted for {}", f.kind_name());
+        }
+    }
+
+    #[test]
+    fn encode_batch_ref_is_byte_identical_to_owned_batch() {
+        use crate::messaging::partition::PartitionLog;
+        // Two partitions, one with payloads big enough to be shared.
+        let small = PartitionLog::new();
+        let big = PartitionLog::new();
+        for i in 0..5u8 {
+            small.append(Message::new(Some(i as u64), vec![i; 3], i as u64));
+            big.append(Message::new(None, vec![i; 2048], 100 + i as u64));
+        }
+        let parts = vec![(0usize, small.read_ref(1, 3)), (2usize, big.read_ref(0, 4))];
+        let next_offsets = vec![(0usize, 4u64), (2usize, 4u64)];
+        // The equivalent owned frame, assembled the old way.
+        let mut messages = Vec::new();
+        for (p, b) in &parts {
+            for (off, m) in b.iter() {
+                messages.push(OffsetMessage { partition: *p, offset: off, message: m.clone() });
+            }
+        }
+        let owned = Frame::Batch {
+            generation: 9,
+            messages,
+            next_offsets: next_offsets.iter().map(|&(p, n)| (p as u32, n)).collect(),
+        };
+        let mut fb = FrameBuf::new();
+        encode_batch_ref(9, &parts, &next_offsets, 0, &mut fb);
+        assert_eq!(fb.to_vec(), owned.encode(), "slice-sourced Batch bytes must not drift");
+        // And it decodes back to the owned frame.
+        let (back, flags, used) = Frame::decode(&fb.to_vec()).unwrap();
+        assert_eq!(back, owned);
+        assert_eq!(flags, 0);
+        assert_eq!(used, fb.len());
     }
 }

@@ -94,18 +94,18 @@ impl Gossiper {
 
     /// Announce this node (cast; counts as a liveness signal on arrival).
     pub fn join(&self, incarnation: u64) -> Result<(), TransportError> {
-        self.conn.cast(Frame::Join { node: self.node.clone(), incarnation })
+        self.conn.cast(&Frame::Join { node: self.node.clone(), incarnation })
     }
 
     /// One sequence-numbered heartbeat (cast).
     pub fn heartbeat(&self) -> Result<(), TransportError> {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
-        self.conn.cast(Frame::Heartbeat { node: self.node.clone(), seq })
+        self.conn.cast(&Frame::Heartbeat { node: self.node.clone(), seq })
     }
 
     /// Graceful departure (cast).
     pub fn leave(&self) -> Result<(), TransportError> {
-        self.conn.cast(Frame::LeaveNode { node: self.node.clone() })
+        self.conn.cast(&Frame::LeaveNode { node: self.node.clone() })
     }
 
     /// Heartbeats sent so far.
@@ -227,7 +227,7 @@ mod tests {
         );
         transport.serve("n1", GossipService::with_view(view.clone())).unwrap();
         let conn = transport.connect("n1").unwrap();
-        conn.cast(Frame::ClusterMapIs {
+        conn.cast(&Frame::ClusterMapIs {
             epoch: 3,
             nodes: vec![("n1".into(), "sim://n1".into()), ("n2".into(), "sim://n2".into())],
         })
@@ -236,7 +236,7 @@ mod tests {
         assert_eq!(view.epoch(), 3, "higher-epoch map adopted from a cast");
         assert!(view.map().contains("n2"));
         // A stale echo arriving late never regresses the view.
-        conn.cast(Frame::ClusterMapIs { epoch: 2, nodes: vec![] }).unwrap();
+        conn.cast(&Frame::ClusterMapIs { epoch: 2, nodes: vec![] }).unwrap();
         sched.run_for(Duration::ZERO);
         assert_eq!(view.epoch(), 3);
     }

@@ -37,7 +37,12 @@
 //! sessions, and remote consumers transparently resubscribe and resume
 //! from the broker's committed offsets.
 
+// The zero-copy wire path exists to kill redundant clones on the
+// hot path; keep this layer honest about new ones.
+#![deny(clippy::redundant_clone)]
+
 pub mod cluster;
+pub mod codec;
 pub mod frame;
 pub mod gossip;
 pub mod remote;
@@ -46,6 +51,7 @@ pub mod sim;
 pub mod tcp;
 
 pub use cluster::{ClusterClient, ClusterConsumer};
+pub use codec::{copy_counters, reset_copy_counters, Codec, DecodeBuf, FrameBuf, WireCodec};
 pub use frame::{ErrorCode, Frame, FrameError, FLAG_NO_REPLY, MAX_FRAME, WIRE_VERSION};
 pub use gossip::{Gossiper, GossipService};
 pub use remote::{RemoteBroker, RetryPolicy};
@@ -93,6 +99,16 @@ pub trait Service: Send + Sync {
     /// Handle one request frame. One-way casts also pass through here;
     /// their return value is discarded by the transport.
     fn handle(&self, req: Frame) -> Frame;
+
+    /// Handle one request and encode the reply straight into `out`.
+    ///
+    /// The zero-copy seam: transports call this so services that can
+    /// build replies from shared log slices (the broker's `Batch` path)
+    /// skip materializing a `Frame` entirely. The default just encodes
+    /// `handle`'s reply, so plain services need nothing extra.
+    fn handle_into(&self, req: Frame, out: &mut FrameBuf) {
+        self.handle(req).encode_into(0, out);
+    }
 }
 
 /// One logical connection to a peer endpoint.
@@ -100,12 +116,13 @@ pub trait Connection: Send + Sync {
     /// Round trip: send `req`, wait for the peer's response frame. At
     /// most one call is in flight per connection; implementations may
     /// retry transparently across reconnects (at-least-once — see the
-    /// module docs).
-    fn call(&self, req: Frame) -> Result<Frame, TransportError>;
+    /// module docs). Takes the frame by reference: retries re-encode
+    /// (or re-send the encoded bytes) without cloning the frame.
+    fn call(&self, req: &Frame) -> Result<Frame, TransportError>;
 
     /// One-way send (gossip). Fire-and-forget: delivery is not
     /// acknowledged, and a faulted link may drop it silently.
-    fn cast(&self, msg: Frame) -> Result<(), TransportError>;
+    fn cast(&self, msg: &Frame) -> Result<(), TransportError>;
 
     /// Peer address, for diagnostics.
     fn peer(&self) -> String;

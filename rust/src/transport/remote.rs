@@ -63,7 +63,7 @@ pub(super) fn call_retry(
         if attempt > 0 && !retry.backoff.is_zero() {
             std::thread::sleep(retry.backoff);
         }
-        match conn.call(req.clone()) {
+        match conn.call(req) {
             // Rejections are deterministic — retrying cannot help.
             Ok(Frame::Error { code, message }) => {
                 return Err(TransportError::Rejected { code, message })

@@ -25,7 +25,8 @@
 //! decided against the old partition layout can never land on the new
 //! one.
 
-use super::frame::{batch_to_frame, ErrorCode, Frame, MAX_FRAME};
+use super::codec::FrameBuf;
+use super::frame::{batch_to_frame, encode_batch_ref, ErrorCode, Frame, MAX_FRAME};
 use super::Service;
 use crate::cluster::ClusterView;
 use crate::messaging::broker::{Broker, Consumer};
@@ -337,6 +338,42 @@ impl Service for BrokerService {
             ),
         }
     }
+
+    /// The zero-copy poll path. `PollBatch` replies encode straight from
+    /// the partition logs — the shared-slice batch goes through
+    /// [`encode_batch_ref`] without ever materializing the messages into
+    /// a `Frame::Batch`. Every other request takes the default
+    /// materialize-then-encode route; their replies carry no payloads
+    /// worth sharing.
+    fn handle_into(&self, req: Frame, out: &mut FrameBuf) {
+        let Frame::PollBatch { session, max } = req else {
+            return self.handle(req).encode_into(0, out);
+        };
+        let reply_frame = match self.session(session) {
+            None => err(ErrorCode::UnknownSession, format!("unknown session {session}")),
+            Some(s) => {
+                if let Some(fence) = self.fenced(session, &s) {
+                    fence
+                } else {
+                    // Same count + byte budget as the owned path (see
+                    // `handle`); the slices stay pinned in log memory
+                    // only for the duration of this encode.
+                    let batch = s
+                        .consumer
+                        .poll_batch_budgeted_shared((max as usize).min(65_536), MAX_FRAME / 2);
+                    encode_batch_ref(
+                        batch.generation,
+                        &batch.parts,
+                        &batch.next_offsets,
+                        0,
+                        out,
+                    );
+                    return;
+                }
+            }
+        };
+        reply_frame.encode_into(0, out);
+    }
 }
 
 /// A full node endpoint: broker requests to the broker service, gossip
@@ -361,6 +398,16 @@ impl Service for NodeService {
             self.gossip.handle(req)
         } else {
             self.broker.handle(req)
+        }
+    }
+
+    fn handle_into(&self, req: Frame, out: &mut FrameBuf) {
+        if req.is_gossip() {
+            self.gossip.handle(req).encode_into(0, out);
+        } else {
+            // Route through the broker's override so node endpoints keep
+            // the zero-copy poll path.
+            self.broker.handle_into(req, out);
         }
     }
 }
@@ -668,6 +715,48 @@ mod tests {
             }
             other => panic!("unexpected response {other:?}"),
         }
+    }
+
+    #[test]
+    fn handle_into_matches_handle_byte_for_byte() {
+        // Two identical services; the shared-slice poll reply must be
+        // bit-identical to the owned one, and non-poll requests must go
+        // through unchanged.
+        let mk = || {
+            let svc = service_with_topic(2);
+            let t = svc.broker.topic("t").unwrap();
+            t.publish_batch(
+                (0..12u8).map(|i| Message::new(Some(i as u64), vec![i; 500], 3)).collect(),
+            );
+            (subscribe(&svc), svc)
+        };
+        let ((s1, svc1), (s2, svc2)) = (mk(), mk());
+        // Session ids differ across incarnations; drive each service with
+        // its own id but compare reply bodies (sessions don't appear in
+        // replies).
+        loop {
+            let owned = svc1.handle(Frame::PollBatch { session: s1, max: 5 }).encode();
+            let mut fb = FrameBuf::new();
+            svc2.handle_into(Frame::PollBatch { session: s2, max: 5 }, &mut fb);
+            assert_eq!(fb.to_vec(), owned, "shared-slice poll reply diverged");
+            match Frame::decode(&owned).unwrap().0 {
+                Frame::Batch { messages, .. } if messages.is_empty() => break,
+                Frame::Batch { .. } => {}
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        // A non-poll request takes the default route, byte-identical too.
+        let owned = svc1.handle(Frame::TotalLag).encode();
+        let mut fb = FrameBuf::new();
+        svc2.handle_into(Frame::TotalLag, &mut fb);
+        assert_eq!(fb.to_vec(), owned);
+        // Unknown sessions still come back as error frames.
+        let mut fb = FrameBuf::new();
+        svc2.handle_into(Frame::PollBatch { session: 0, max: 1 }, &mut fb);
+        assert!(matches!(
+            Frame::decode(&fb.to_vec()).unwrap().0,
+            Frame::Error { code: ErrorCode::UnknownSession, .. }
+        ));
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! need no pumping, which is what lets a real threaded pipeline run over
 //! `SimTransport` unchanged.
 
+use super::codec::{Codec, FrameBuf, WireCodec};
 use super::frame::Frame;
 use super::{Connection, ServerHandle, Service, Transport, TransportError};
 use crate::sim::SimScheduler;
@@ -197,7 +198,7 @@ struct SimConnection {
 }
 
 impl Connection for SimConnection {
-    fn call(&self, req: Frame) -> Result<Frame, TransportError> {
+    fn call(&self, req: &Frame) -> Result<Frame, TransportError> {
         match self.net.gate(&self.addr) {
             Gate::Drop => Err(TransportError::Unreachable(format!(
                 "link to '{}' dropped the frame",
@@ -206,11 +207,16 @@ impl Connection for SimConnection {
             Gate::Corrupt => {
                 // Put the request through the real codec with one bit
                 // flipped mid-frame: the decode error the peer would
-                // produce is the error the caller sees.
-                let mut bytes = req.encode();
+                // produce is the error the caller sees. Encoding goes
+                // through the codec seam; its bytes are exactly
+                // `req.encode()`, so chaos fingerprints are unchanged.
+                let codec = WireCodec;
+                let mut fb = FrameBuf::new();
+                codec.encode_into(req, 0, &mut fb);
+                let mut bytes = fb.to_vec();
                 let mid = bytes.len() / 2;
                 bytes[mid] ^= 0x10;
-                match Frame::decode(&bytes) {
+                match codec.decode(&bytes) {
                     Err(e) => Err(TransportError::Frame(e)),
                     Ok(_) => Err(TransportError::Io("corrupted frame slipped the crc".into())),
                 }
@@ -220,12 +226,12 @@ impl Connection for SimConnection {
                 if duplicate {
                     let _ = svc.handle(req.clone());
                 }
-                Ok(svc.handle(req))
+                Ok(svc.handle(req.clone()))
             }
         }
     }
 
-    fn cast(&self, msg: Frame) -> Result<(), TransportError> {
+    fn cast(&self, msg: &Frame) -> Result<(), TransportError> {
         match self.net.gate(&self.addr) {
             // Fire-and-forget: a dropped or corrupted cast is invisible
             // to the sender.
@@ -283,7 +289,7 @@ mod tests {
     #[test]
     fn healthy_call_round_trips() {
         let (_t, echo, conn) = network();
-        let resp = conn.call(Frame::TotalLag).unwrap();
+        let resp = conn.call(&Frame::TotalLag).unwrap();
         assert_eq!(resp, Frame::TotalLag);
         assert_eq!(echo.hits.load(Ordering::SeqCst), 1);
         assert_eq!(conn.peer(), "svc");
@@ -293,10 +299,10 @@ mod tests {
     fn partition_drop_and_heal() {
         let (t, echo, conn) = network();
         t.partition("svc", true);
-        assert!(matches!(conn.call(Frame::TotalLag), Err(TransportError::Unreachable(_))));
+        assert!(matches!(conn.call(&Frame::TotalLag), Err(TransportError::Unreachable(_))));
         assert_eq!(echo.hits.load(Ordering::SeqCst), 0);
         t.partition("svc", false);
-        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert!(conn.call(&Frame::TotalLag).is_ok());
         assert_eq!(t.link_stats("svc"), LinkStats { dropped: 1, delivered: 1 });
     }
 
@@ -304,30 +310,30 @@ mod tests {
     fn drop_next_counts_down() {
         let (t, _echo, conn) = network();
         t.drop_next("svc", 2);
-        assert!(conn.call(Frame::TotalLag).is_err());
-        assert!(conn.call(Frame::TotalLag).is_err());
-        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert!(conn.call(&Frame::TotalLag).is_err());
+        assert!(conn.call(&Frame::TotalLag).is_err());
+        assert!(conn.call(&Frame::TotalLag).is_ok());
     }
 
     #[test]
     fn corrupt_next_surfaces_a_codec_error() {
         let (t, echo, conn) = network();
         t.corrupt_next("svc", 1);
-        match conn.call(Frame::PartitionCount { topic: "abcdefg".into() }) {
+        match conn.call(&Frame::PartitionCount { topic: "abcdefg".into() }) {
             Err(TransportError::Frame(_)) => {}
             other => panic!("expected a frame error, got {other:?}"),
         }
         assert_eq!(echo.hits.load(Ordering::SeqCst), 0, "corrupt frame never reaches the service");
-        assert!(conn.call(Frame::TotalLag).is_ok(), "only the next frame was corrupted");
+        assert!(conn.call(&Frame::TotalLag).is_ok(), "only the next frame was corrupted");
     }
 
     #[test]
     fn duplicate_next_applies_twice() {
         let (t, echo, conn) = network();
         t.duplicate_next("svc", 1);
-        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert!(conn.call(&Frame::TotalLag).is_ok());
         assert_eq!(echo.hits.load(Ordering::SeqCst), 2, "request applied twice");
-        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert!(conn.call(&Frame::TotalLag).is_ok());
         assert_eq!(echo.hits.load(Ordering::SeqCst), 3);
     }
 
@@ -339,14 +345,14 @@ mod tests {
         t.serve("svc", echo.clone()).unwrap();
         let conn = t.connect("svc").unwrap();
         t.set_delay("svc", Duration::from_millis(300));
-        conn.cast(Frame::Heartbeat { node: "n".into(), seq: 1 }).unwrap();
+        conn.cast(&Frame::Heartbeat { node: "n".into(), seq: 1 }).unwrap();
         sched.run_until(Duration::from_millis(299));
         assert_eq!(echo.hits.load(Ordering::SeqCst), 0, "still in flight");
         sched.run_until(Duration::from_millis(300));
         assert_eq!(echo.hits.load(Ordering::SeqCst), 1, "arrived after the link delay");
         // Duplicated cast: two deliveries.
         t.duplicate_next("svc", 1);
-        conn.cast(Frame::Heartbeat { node: "n".into(), seq: 2 }).unwrap();
+        conn.cast(&Frame::Heartbeat { node: "n".into(), seq: 2 }).unwrap();
         sched.run_until(Duration::from_secs(1));
         assert_eq!(echo.hits.load(Ordering::SeqCst), 3);
     }
@@ -355,13 +361,13 @@ mod tests {
     fn shutdown_and_reserve_model_a_restart() {
         let (t, echo, conn) = network();
         let handle = t.serve("svc", echo.clone()).unwrap();
-        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert!(conn.call(&Frame::TotalLag).is_ok());
         handle.shutdown();
-        assert!(matches!(conn.call(Frame::TotalLag), Err(TransportError::Unreachable(_))));
+        assert!(matches!(conn.call(&Frame::TotalLag), Err(TransportError::Unreachable(_))));
         // Restart with a fresh service: the same connection works again.
         let echo2 = Arc::new(Echo { hits: AtomicU64::new(0) });
         t.serve("svc", echo2.clone()).unwrap();
-        assert!(conn.call(Frame::TotalLag).is_ok());
+        assert!(conn.call(&Frame::TotalLag).is_ok());
         assert_eq!(echo2.hits.load(Ordering::SeqCst), 1);
     }
 
@@ -370,9 +376,9 @@ mod tests {
         let sched = Arc::new(SimScheduler::new(1));
         let t = SimTransport::new(sched);
         let conn = t.connect("ghost").unwrap();
-        assert!(matches!(conn.call(Frame::TotalLag), Err(TransportError::Unreachable(_))));
+        assert!(matches!(conn.call(&Frame::TotalLag), Err(TransportError::Unreachable(_))));
         // Casts to nowhere are silently fire-and-forget.
-        assert!(conn.cast(Frame::Heartbeat { node: "n".into(), seq: 1 }).is_ok());
+        assert!(conn.cast(&Frame::Heartbeat { node: "n".into(), seq: 1 }).is_ok());
     }
 
     #[test]

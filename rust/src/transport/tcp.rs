@@ -16,9 +16,10 @@
 //! requests may be applied twice, which the protocol's at-least-once
 //! semantics absorb (see the [module docs](super)).
 
+use super::codec::{DecodeBuf, FrameBuf};
 use super::frame::{ErrorCode, Frame, FrameError, FLAG_NO_REPLY, MAX_FRAME};
 use super::{Connection, ServerHandle, Service, Transport, TransportError};
-use std::io::{ErrorKind, Read, Write};
+use std::io::{ErrorKind, Read};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -94,7 +95,11 @@ impl Transport for TcpTransport {
         Ok(Arc::new(TcpConnection {
             addr: addr.to_string(),
             cfg: self.clone(),
-            state: Mutex::new(ConnState { stream: Some(stream), buf: Vec::new() }),
+            state: Mutex::new(ConnState {
+                stream: Some(stream),
+                buf: DecodeBuf::new(),
+                out: FrameBuf::new(),
+            }),
         }))
     }
 }
@@ -105,7 +110,12 @@ fn serve_connection(mut stream: TcpStream, svc: Arc<dyn Service>, stop: Arc<Atom
     let _ = stream.set_nodelay(true);
     // Short read timeout so the thread notices shutdown promptly.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let mut buf: Vec<u8> = Vec::new();
+    // Connection-lifetime scratch: a cursor buffer for inbound bytes (no
+    // per-frame `drain` memmove) and a pooled frame buffer for replies —
+    // the poll path encodes shared log slices into it and the whole reply
+    // goes out as one vectored write, header and payloads uncopied.
+    let mut buf = DecodeBuf::new();
+    let mut out = FrameBuf::new();
     let mut chunk = [0u8; 16 * 1024];
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -113,30 +123,34 @@ fn serve_connection(mut stream: TcpStream, svc: Arc<dyn Service>, stop: Arc<Atom
         }
         // Drain every decodable frame before reading more bytes.
         loop {
-            match Frame::decode(&buf) {
+            match Frame::decode(buf.unread()) {
                 Ok((frame, flags, used)) => {
-                    buf.drain(..used);
-                    let resp = svc.handle(frame);
-                    if flags & FLAG_NO_REPLY == 0 && stream.write_all(&resp.encode()).is_err() {
-                        return;
+                    buf.consume(used);
+                    if flags & FLAG_NO_REPLY == 0 {
+                        out.clear();
+                        svc.handle_into(frame, &mut out);
+                        if out.write_all_vectored(&mut stream).is_err() {
+                            return;
+                        }
+                    } else {
+                        let _ = svc.handle(frame);
                     }
                 }
                 Err(FrameError::Incomplete) => break,
                 Err(e) => {
                     // Corrupt framing: the stream position is untrusted
                     // from here on. Report and hang up.
-                    let resp = Frame::Error {
-                        code: ErrorCode::BadRequest,
-                        message: format!("bad frame: {e}"),
-                    };
-                    let _ = stream.write_all(&resp.encode());
+                    out.clear();
+                    Frame::Error { code: ErrorCode::BadRequest, message: format!("bad frame: {e}") }
+                        .encode_into(0, &mut out);
+                    let _ = out.write_all_vectored(&mut stream);
                     return;
                 }
             }
         }
         match stream.read(&mut chunk) {
             Ok(0) => return, // peer closed
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Ok(n) => buf.extend(&chunk[..n]),
             Err(e) if is_timeout(e.kind()) => continue,
             Err(_) => return,
         }
@@ -174,7 +188,10 @@ struct ConnState {
     /// `None` between a torn-down exchange and the next redial.
     stream: Option<TcpStream>,
     /// Bytes read past the last decoded response.
-    buf: Vec<u8>,
+    buf: DecodeBuf,
+    /// Pooled request-encode buffer: each call encodes once into it and
+    /// retries re-send the same bytes over a redial.
+    out: FrameBuf,
 }
 
 /// Client connection with transparent redial (see the module docs for the
@@ -186,22 +203,24 @@ pub struct TcpConnection {
 }
 
 impl TcpConnection {
-    /// One write + read-until-frame exchange over the live stream.
+    /// One vectored write + read-until-frame exchange over the live
+    /// stream. The request goes out straight from `out`'s segments —
+    /// shared payload `Arc`s are never flattened into a contiguous copy.
     fn exchange(
         stream: &mut TcpStream,
-        buf: &mut Vec<u8>,
-        bytes: &[u8],
+        buf: &mut DecodeBuf,
+        out: &FrameBuf,
         want_reply: bool,
     ) -> Result<Option<Frame>, TransportError> {
-        stream.write_all(bytes).map_err(io_err)?;
+        out.write_all_vectored(stream).map_err(io_err)?;
         if !want_reply {
             return Ok(None);
         }
         let mut chunk = [0u8; 16 * 1024];
         loop {
-            match Frame::decode(buf) {
+            match Frame::decode(buf.unread()) {
                 Ok((frame, _flags, used)) => {
-                    buf.drain(..used);
+                    buf.consume(used);
                     return Ok(Some(frame));
                 }
                 Err(FrameError::Incomplete) => {}
@@ -212,7 +231,7 @@ impl TcpConnection {
             }
             match stream.read(&mut chunk) {
                 Ok(0) => return Err(TransportError::Io("connection closed mid-response".into())),
-                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Ok(n) => buf.extend(&chunk[..n]),
                 Err(e) if is_timeout(e.kind()) => {
                     return Err(TransportError::Io("response timed out".into()))
                 }
@@ -221,8 +240,15 @@ impl TcpConnection {
         }
     }
 
-    fn send(&self, bytes: &[u8], want_reply: bool) -> Result<Option<Frame>, TransportError> {
+    /// Encode `req` once into the pooled buffer, then run the redial /
+    /// retry loop re-sending those same bytes.
+    fn send(&self, req: &Frame, flags: u8, want_reply: bool) -> Result<Option<Frame>, TransportError> {
         let mut st = self.state.lock().unwrap();
+        {
+            let st = &mut *st;
+            st.out.clear();
+            req.encode_into(flags, &mut st.out);
+        }
         let mut last = TransportError::Unreachable(format!("no connection to {}", self.addr));
         for attempt in 0..self.cfg.connect_retries.max(1) {
             if attempt > 0 {
@@ -244,7 +270,7 @@ impl TcpConnection {
             }
             let st = &mut *st;
             let stream = st.stream.as_mut().expect("stream present");
-            match Self::exchange(stream, &mut st.buf, bytes, want_reply) {
+            match Self::exchange(stream, &mut st.buf, &st.out, want_reply) {
                 Ok(resp) => return Ok(resp),
                 Err(e) => {
                     // Desynced or dead: tear down, retry over a redial.
@@ -258,15 +284,15 @@ impl TcpConnection {
 }
 
 impl Connection for TcpConnection {
-    fn call(&self, req: Frame) -> Result<Frame, TransportError> {
-        match self.send(&req.encode(), true)? {
+    fn call(&self, req: &Frame) -> Result<Frame, TransportError> {
+        match self.send(req, 0, true)? {
             Some(frame) => Ok(frame),
             None => Err(TransportError::Io("call produced no response".into())),
         }
     }
 
-    fn cast(&self, msg: Frame) -> Result<(), TransportError> {
-        self.send(&msg.encode_flags(FLAG_NO_REPLY), false).map(|_| ())
+    fn cast(&self, msg: &Frame) -> Result<(), TransportError> {
+        self.send(msg, FLAG_NO_REPLY, false).map(|_| ())
     }
 
     fn peer(&self) -> String {
@@ -307,17 +333,17 @@ mod tests {
         let Some((tcp, handle)) = loopback_transport() else { return };
         let conn = tcp.connect(handle.addr()).expect("connect");
         let placed = conn
-            .call(Frame::PublishBatch {
+            .call(&Frame::PublishBatch {
                 topic: "t".into(),
                 msgs: (0..10u8).map(|i| Message::new(None, vec![i], 0)).collect(),
             })
             .unwrap();
         assert!(matches!(placed, Frame::Placements { ref placements } if placements.len() == 10));
-        let session = match conn.call(Frame::Subscribe { topic: "t".into(), group: "g".into() }) {
+        let session = match conn.call(&Frame::Subscribe { topic: "t".into(), group: "g".into() }) {
             Ok(Frame::Subscribed { session }) => session,
             other => panic!("unexpected {other:?}"),
         };
-        let (generation, n, next) = match conn.call(Frame::PollBatch { session, max: 100 }) {
+        let (generation, n, next) = match conn.call(&Frame::PollBatch { session, max: 100 }) {
             Ok(Frame::Batch { generation, messages, next_offsets }) => {
                 (generation, messages.len(), next_offsets)
             }
@@ -325,10 +351,10 @@ mod tests {
         };
         assert_eq!(n, 10);
         let resp = conn
-            .call(Frame::CommitBatch { session, generation, next_offsets: next })
+            .call(&Frame::CommitBatch { session, generation, next_offsets: next })
             .unwrap();
         assert_eq!(resp, Frame::Committed { applied: true });
-        assert_eq!(conn.call(Frame::TotalLag).unwrap(), Frame::Lag { lag: 0 });
+        assert_eq!(conn.call(&Frame::TotalLag).unwrap(), Frame::Lag { lag: 0 });
         handle.shutdown();
     }
 
@@ -338,17 +364,17 @@ mod tests {
         let producer = tcp.connect(handle.addr()).expect("connect");
         let consumer = tcp.connect(handle.addr()).expect("connect");
         let _ = producer
-            .call(Frame::PublishBatch {
+            .call(&Frame::PublishBatch {
                 topic: "t".into(),
                 msgs: vec![Message::from_str("over the wire")],
             })
             .unwrap();
-        let session = match consumer.call(Frame::Subscribe { topic: "t".into(), group: "g".into() })
+        let session = match consumer.call(&Frame::Subscribe { topic: "t".into(), group: "g".into() })
         {
             Ok(Frame::Subscribed { session }) => session,
             other => panic!("unexpected {other:?}"),
         };
-        match consumer.call(Frame::PollBatch { session, max: 10 }) {
+        match consumer.call(&Frame::PollBatch { session, max: 10 }) {
             Ok(Frame::Batch { messages, .. }) => {
                 assert_eq!(messages.len(), 1);
                 assert_eq!(messages[0].message.payload_str(), Some("over the wire"));

@@ -26,11 +26,28 @@ static CRC_TABLE: [u32; 256] = crc32_table();
 
 /// IEEE CRC-32 over `data`.
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
+    crc32_finish(crc32_update(crc32_init(), data))
+}
+
+/// Start a streaming CRC-32. Feed chunks with [`crc32_update`] and seal
+/// with [`crc32_finish`]; the result equals [`crc32`] over the
+/// concatenation. Lets the wire layer checksum a frame scattered across
+/// a header buffer and shared payload slices without assembling them.
+pub fn crc32_init() -> u32 {
+    0xFFFF_FFFF
+}
+
+/// Fold `data` into a running CRC-32 state from [`crc32_init`].
+pub fn crc32_update(mut state: u32, data: &[u8]) -> u32 {
     for &b in data {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
     }
-    c ^ 0xFFFF_FFFF
+    state
+}
+
+/// Seal a streaming CRC-32 state into the final checksum value.
+pub fn crc32_finish(state: u32) -> u32 {
+    state ^ 0xFFFF_FFFF
 }
 
 #[cfg(test)]
@@ -60,5 +77,16 @@ mod tests {
     #[test]
     fn empty_input() {
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot_for_any_split() {
+        let data = b"streaming crc over scattered frame slices";
+        let whole = crc32(data);
+        for cut in 0..=data.len() {
+            let state = crc32_update(crc32_init(), &data[..cut]);
+            let state = crc32_update(state, &data[cut..]);
+            assert_eq!(crc32_finish(state), whole, "split at {cut}");
+        }
     }
 }

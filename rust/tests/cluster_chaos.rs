@@ -172,7 +172,7 @@ fn cluster(seed: u64) -> ClusterNet {
                 sched.schedule_every(Duration::from_secs(2), move |_| {
                     if up.load(Ordering::SeqCst) && !cut.load(Ordering::SeqCst) {
                         let m = view.map();
-                        let _ = conn.cast(Frame::ClusterMapIs {
+                        let _ = conn.cast(&Frame::ClusterMapIs {
                             epoch: m.epoch(),
                             nodes: m.nodes().to_vec(),
                         });
@@ -196,7 +196,7 @@ fn cluster(seed: u64) -> ClusterNet {
                 trace_t.log(format!("{id} rebalanced to epoch {} {members:?}", next.epoch()));
                 if !cut.load(Ordering::SeqCst) {
                     for conn in &peer_conns {
-                        let _ = conn.cast(Frame::ClusterMapIs {
+                        let _ = conn.cast(&Frame::ClusterMapIs {
                             epoch: next.epoch(),
                             nodes: next.nodes().to_vec(),
                         });
