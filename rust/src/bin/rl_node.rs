@@ -27,9 +27,14 @@
 //! Give a broker `--node-id` and `--peers` and it becomes one seat of a
 //! multi-broker cluster: it serves a [`ClusterView`]-aware broker (PR 7),
 //! heartbeats its peers, and when the φ detector declares a peer dead it
-//! rebalances partition ownership and gossips the new placement map. A
-//! worker pointed at `--seeds` routes through a [`ClusterClient`]
-//! instead of a single [`RemoteBroker`]. Four terminals make a 3-broker
+//! rebalances partition ownership and gossips the new placement map.
+//! Each partition is **replicated** to its top-`--replication` HRW nodes
+//! (default 2): the primary forwards acked publishes to the followers,
+//! the seat loop pulls this node's replica partitions to parity every
+//! tick, and a failover promotes the surviving follower — a dead broker
+//! loses no acked data. `--replication 1` restores the PR-7
+//! primary-only behaviour. A worker pointed at `--seeds` routes through
+//! a [`ClusterClient`] instead of a single [`RemoteBroker`]. Four terminals make a 3-broker
 //! cluster (see the README quickstart):
 //!
 //! ```sh
@@ -50,7 +55,7 @@
 //! pretending they were processed.
 
 use reactive_liquid::cluster::membership::{ClusterView, Membership};
-use reactive_liquid::cluster::PlacementMap;
+use reactive_liquid::cluster::{PlacementMap, DEFAULT_REPLICATION};
 use reactive_liquid::config::cli::Args;
 use reactive_liquid::messaging::client::SharedBrokerClient;
 use reactive_liquid::messaging::{Broker, DiskStorage, FsyncPolicy, Message, StorageConfig};
@@ -82,6 +87,7 @@ fn main() {
                  \x20       [--fsync POLICY]         per-batch (default) | interval:<ms> | off\n\
                  \x20       [--node-id ID --peers id=addr,...]  join a multi-broker cluster\n\
                  \x20       [--advertise ADDR]       address peers/clients should use (default: --listen)\n\
+                 \x20       [--replication K]        replicas per partition in cluster mode (default 2)\n\
                  worker  --broker ADDR | --seeds ADDR,ADDR,...\n\
                  \x20       --messages N [--topic T] [--partitions P]\n\
                  \x20       [--batch B] [--node-id ID] [--group G] [--skip-publish]\n"
@@ -98,6 +104,17 @@ fn cmd_broker(mut args: Args) -> i32 {
     let node_id = args.opt_str("node-id");
     let advertise = args.opt_str("advertise").unwrap_or_else(|| listen.clone());
     let peers_spec = args.opt_str("peers");
+    let replication = match args.opt_or::<usize>("replication", DEFAULT_REPLICATION) {
+        Ok(k) if k >= 1 => k,
+        Ok(_) => {
+            eprintln!("--replication needs >= 1");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let fsync = match args.opt_str("fsync") {
         None => FsyncPolicy::PerBatch,
         Some(s) => match FsyncPolicy::parse(&s) {
@@ -164,7 +181,12 @@ fn cmd_broker(mut args: Args) -> i32 {
         let mut nodes = peers.clone();
         nodes.push((node_id.clone(), advertise.clone()));
         let view = ClusterView::new(&node_id, membership.clone(), PlacementMap::new(1, nodes));
-        let broker_service = BrokerService::with_cluster(broker, view.clone());
+        let broker_service = BrokerService::with_replication(
+            broker,
+            view.clone(),
+            Arc::new(tcp.clone()),
+            replication,
+        );
         let service =
             NodeService::new(broker_service.clone(), GossipService::with_view(view.clone()));
         let handle = match tcp.serve(&listen, service) {
@@ -175,7 +197,7 @@ fn cmd_broker(mut args: Args) -> i32 {
             }
         };
         println!(
-            "rl-node broker {node_id} listening on {} (cluster of {})",
+            "rl-node broker {node_id} listening on {} (cluster of {}, replication={replication})",
             handle.addr(),
             peers.len() + 1
         );
@@ -288,14 +310,31 @@ fn run_cluster_seat(
                 }
             }
         }
+        // Replica catch-up: pull this node's follower partitions to
+        // parity (a fresh restart or a healed partition heals here; the
+        // empty parity pull clears our lagging mark on each primary).
+        let caught_up = broker_service.catch_up_replicas(1024);
+        if caught_up > 0 {
+            eprintln!("replicas caught up {caught_up} message(s)");
+        }
         if tick % 10 == 0 {
             let reaped = broker_service.reap_idle(Duration::from_secs(30));
             if reaped > 0 {
-                eprintln!("reaped {reaped} idle consumer session(s)");
+                eprintln!("reaped {reaped} idle session(s)");
             }
             let suspects = membership.suspects();
             if !suspects.is_empty() {
                 eprintln!("suspected members: {suspects:?}");
+            }
+            // Replication health: which followers of partitions we own
+            // are behind, and by how many messages.
+            let lagging: Vec<(String, u64)> = broker_service
+                .replica_lag()
+                .into_iter()
+                .filter(|(_, behind)| *behind > 0)
+                .collect();
+            if !lagging.is_empty() {
+                eprintln!("lagging replicas: {lagging:?}");
             }
         }
     }

@@ -24,4 +24,4 @@ pub mod placement;
 pub use failure::FailureInjector;
 pub use membership::{ClusterView, Membership};
 pub use node::{Cluster, ComponentHandle, Node};
-pub use placement::{hrw_score, Placement, PlacementMap};
+pub use placement::{hrw_score, Placement, PlacementMap, DEFAULT_REPLICATION};

@@ -52,10 +52,20 @@ pub fn hrw_score(node: &str, topic: &str, partition: usize) -> u64 {
     h ^ (h >> 31)
 }
 
+/// Default replication factor for clustered partitions: the HRW top-2
+/// (primary + one follower) — enough to survive any single broker death
+/// without tripling write amplification.
+pub const DEFAULT_REPLICATION: usize = 2;
+
 /// The deterministic `(topic, partition) → node` map: an epoch plus the
 /// sorted `(node id, address)` set it was computed over. Owners are
 /// *derived* (HRW), never stored — so shipping a map over the wire is
-/// shipping `(epoch, nodes)` and nothing else.
+/// shipping `(epoch, nodes)` and nothing else. The same derivation
+/// yields the ordered **replica set** ([`PlacementMap::replicas_of`]):
+/// the HRW top-`k`, rank 0 being the primary (= [`PlacementMap::owner_of`]),
+/// ranks 1.. the followers — so removing a dead primary from the node
+/// set *is* the failover election: the old rank-1 follower becomes the
+/// new rank 0 in the successor map, with no stored state to repair.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlacementMap {
     epoch: u64,
@@ -113,6 +123,27 @@ impl PlacementMap {
             }
         }
         best.map(|(n, _)| n)
+    }
+
+    /// Ordered replica set for `(topic, partition)`: the `k` nodes with
+    /// the highest rendezvous scores, rank 0 first. Rank 0 is always the
+    /// [`PlacementMap::owner_of`] primary (same scores, same tie-break:
+    /// the node list is sorted by id and the sort is stable, so an equal
+    /// score keeps the lexicographically smaller id in front). With
+    /// fewer than `k` nodes every node is a replica.
+    pub fn replicas_of(&self, topic: &str, partition: usize, k: usize) -> Vec<&(String, String)> {
+        let mut scored: Vec<(&(String, String), u64)> =
+            self.nodes.iter().map(|n| (n, hrw_score(&n.0, topic, partition))).collect();
+        scored.sort_by(|a, b| b.1.cmp(&a.1));
+        scored.truncate(k);
+        scored.into_iter().map(|(n, _)| n).collect()
+    }
+
+    /// Rank of `node` in the replica set of `(topic, partition)` under
+    /// replication factor `k`: `Some(0)` = primary, `Some(1..)` =
+    /// follower, `None` = not a replica.
+    pub fn replica_rank(&self, topic: &str, partition: usize, k: usize, node: &str) -> Option<usize> {
+        self.replicas_of(topic, partition, k).iter().position(|(id, _)| id == node)
     }
 
     /// The partitions of `topic` (out of `partitions` total) this map
@@ -264,6 +295,47 @@ mod tests {
         let a = hrw_score("n1", "trajectories", 7);
         let b = hrw_score("n2", "trajectories", 7);
         assert_ne!(a, b, "distinct nodes must score distinctly");
+    }
+
+    #[test]
+    fn replica_rank_zero_is_the_owner() {
+        let m = three();
+        for p in 0..64 {
+            let replicas = m.replicas_of("t", p, DEFAULT_REPLICATION);
+            assert_eq!(replicas.len(), 2);
+            assert_eq!(replicas[0], m.owner_of("t", p).unwrap(), "rank 0 = primary");
+            assert_ne!(replicas[0].0, replicas[1].0, "replicas are distinct nodes");
+            assert_eq!(m.replica_rank("t", p, 2, &replicas[1].0), Some(1));
+        }
+    }
+
+    #[test]
+    fn replicas_truncate_to_cluster_size_and_k() {
+        let m = three();
+        assert_eq!(m.replicas_of("t", 0, 99).len(), 3, "k beyond the cluster gives everyone");
+        assert_eq!(m.replicas_of("t", 0, 1).len(), 1);
+        assert!(PlacementMap::empty().replicas_of("t", 0, 2).is_empty());
+        // k covering all nodes ranks every node exactly once.
+        let ranked: Vec<&str> = m.replicas_of("t", 5, 3).iter().map(|(id, _)| id.as_str()).collect();
+        let mut sorted = ranked.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec!["n1", "n2", "n3"]);
+    }
+
+    #[test]
+    fn failover_promotes_the_surviving_follower() {
+        // Removing the primary from the node set must promote the old
+        // rank-1 follower to rank 0 in the successor map — derivation is
+        // the election.
+        let m = three();
+        for p in 0..64 {
+            let before = m.replicas_of("t", p, 2);
+            let (dead, follower) = (before[0].0.clone(), before[1].0.clone());
+            let survivors =
+                m.nodes().iter().filter(|(id, _)| *id != dead).cloned().collect::<Vec<_>>();
+            let next = m.advanced(survivors);
+            assert_eq!(next.owner_of("t", p).unwrap().0, follower, "partition {p}");
+        }
     }
 
     #[test]

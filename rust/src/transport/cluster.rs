@@ -38,7 +38,7 @@
 //! attempts crash the caller (let-it-crash).
 
 use super::frame::{ErrorCode, Frame};
-use super::remote::{call_retry, unexpected, RetryPolicy};
+use super::remote::{call_retry, unexpected, Backoff, RetryPolicy, BACKOFF_CAP};
 use super::{Connection, Transport, TransportError};
 use crate::cluster::PlacementMap;
 use crate::messaging::broker::{partition_for_key, PolledBatch};
@@ -74,6 +74,12 @@ struct Core {
     /// Round-robin cursor for keyless publishes (client-side — each
     /// client spreads its own keyless traffic).
     rr: AtomicUsize,
+    /// Paces *failed* map-refresh sweeps: when no node answers
+    /// `GetClusterMap`, consecutive refreshes sleep a jittered
+    /// exponential delay (base = the retry policy's backoff, capped at
+    /// [`BACKOFF_CAP`]) instead of hammering a fully dark cluster; the
+    /// first answered sweep resets the ladder.
+    refresh_backoff: Mutex<Backoff>,
 }
 
 impl Core {
@@ -116,12 +122,23 @@ impl Core {
                 addrs.push(s.clone());
             }
         }
+        let mut answered = false;
         for addr in addrs {
             let Some(conn) = self.conn(&addr) else { continue };
             if let Ok(Frame::ClusterMapIs { epoch, nodes }) =
                 call_retry(&conn, self.retry, &Frame::GetClusterMap)
             {
                 self.adopt(PlacementMap::new(epoch, nodes));
+                answered = true;
+            }
+        }
+        // Pace repeated dead-cluster sweeps; any answer resets the ladder.
+        if answered {
+            self.refresh_backoff.lock().unwrap().reset();
+        } else {
+            let pause = self.refresh_backoff.lock().unwrap().next_delay();
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
             }
         }
     }
@@ -245,6 +262,7 @@ impl ClusterClient {
                 conns: Mutex::new(HashMap::new()),
                 partitions: Mutex::new(HashMap::new()),
                 rr: AtomicUsize::new(0),
+                refresh_backoff: Mutex::new(Backoff::new(retry.backoff, BACKOFF_CAP, 0x5EED_0001)),
             }),
         })
     }
@@ -266,6 +284,7 @@ impl ClusterClient {
                 conns: Mutex::new(HashMap::new()),
                 partitions: Mutex::new(HashMap::new()),
                 rr: AtomicUsize::new(0),
+                refresh_backoff: Mutex::new(Backoff::new(retry.backoff, BACKOFF_CAP, 0x5EED_0002)),
             }),
         });
         client.core.refresh();
@@ -857,6 +876,24 @@ mod tests {
         let again = poll_until_nonempty(&consumer);
         assert!(!again.messages.is_empty());
         Box::new(consumer).close();
+    }
+
+    #[test]
+    fn failed_refresh_sweeps_ride_the_backoff_ladder() {
+        let (_s, transport, _nodes, client) = three_nodes(8);
+        // All nodes dark: every sweep fails, climbing the ladder (base is
+        // zero here, so no real sleep — the counter is the observable).
+        for n in ["n1", "n2", "n3"] {
+            transport.partition(n, true);
+        }
+        for _ in 0..3 {
+            client.refresh();
+        }
+        assert_eq!(client.core.refresh_backoff.lock().unwrap().failures(), 3);
+        // One answered sweep resets the ladder.
+        transport.partition("n2", false);
+        client.refresh();
+        assert_eq!(client.core.refresh_backoff.lock().unwrap().failures(), 0);
     }
 
     fn poll_until_nonempty(consumer: &ClusterConsumer) -> PolledBatch {

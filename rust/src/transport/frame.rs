@@ -116,6 +116,10 @@ pub enum ErrorCode {
     /// this node's; clients respond by refreshing the map (and consumers
     /// by resubscribing — their broker session was retired).
     EpochFenced,
+    /// A [`Frame::Replicate`] / [`Frame::FetchReplica`] addressed a node
+    /// that is not in the partition's replica set under the current map;
+    /// the sender refreshes its map and re-derives the set.
+    NotReplica,
 }
 
 impl ErrorCode {
@@ -127,6 +131,7 @@ impl ErrorCode {
             ErrorCode::BadRequest => 3,
             ErrorCode::NotOwner => 4,
             ErrorCode::EpochFenced => 5,
+            ErrorCode::NotReplica => 6,
         }
     }
 
@@ -138,6 +143,7 @@ impl ErrorCode {
             3 => ErrorCode::BadRequest,
             4 => ErrorCode::NotOwner,
             5 => ErrorCode::EpochFenced,
+            6 => ErrorCode::NotReplica,
             _ => return Err(FrameError::Malformed("unknown error code")),
         })
     }
@@ -172,6 +178,20 @@ pub enum Frame {
     /// Ask a node for its current placement map (answered by
     /// [`Frame::ClusterMapIs`]).
     GetClusterMap,
+    // ---- replication (primary ↔ follower, epoch-fenced)
+    /// Primary → follower: append this acked run at `base_offset`.
+    /// The follower applies idempotently against its local log end
+    /// (duplicates skip, gaps refuse) and answers [`Frame::ReplicaAck`]
+    /// with its replicated high-watermark.
+    Replicate { topic: String, partition: u32, epoch: u64, base_offset: u64, msgs: Vec<Message> },
+    /// Follower → primary catch-up: stream the partition's offsets from
+    /// `from` (the follower's local end), at most `max` messages. `node`
+    /// identifies the puller so the primary can clear its lag mark once
+    /// the pull reaches parity. Answered by [`Frame::ReplicaBatch`].
+    FetchReplica { topic: String, partition: u32, epoch: u64, node: String, from: u64, max: u32 },
+    /// Probe a primary's per-follower replication health (answered by
+    /// [`Frame::ReplicaLagIs`]).
+    ReplicaLag,
     // ---- broker → client responses
     Ok,
     Placements { placements: Vec<(u32, u64)> },
@@ -187,6 +207,15 @@ pub enum Frame {
     /// one-way cast between nodes after a rebalance (anti-entropy — the
     /// receiver adopts it iff it wins the epoch/tie-break order).
     ClusterMapIs { epoch: u64, nodes: Vec<(String, String)> },
+    /// Follower → primary: the run up to `high_watermark` (the follower's
+    /// partition log end) is durably replicated.
+    ReplicaAck { high_watermark: u64 },
+    /// Primary → follower: catch-up messages starting at `base_offset`
+    /// (empty = the follower is at parity).
+    ReplicaBatch { base_offset: u64, msgs: Vec<Message> },
+    /// Per-follower replication health: `(node, messages behind)` pairs,
+    /// sorted by node. `behind == 0` means in sync.
+    ReplicaLagIs { followers: Vec<(String, u64)> },
     // ---- membership gossip (node ↔ node, usually one-way casts)
     Join { node: String, incarnation: u64 },
     LeaveNode { node: String },
@@ -206,6 +235,9 @@ const K_TOTAL_LAG: u8 = 10;
 const K_PARTITION_COUNT: u8 = 11;
 const K_PUBLISH_TO: u8 = 12;
 const K_GET_CLUSTER_MAP: u8 = 13;
+const K_REPLICATE: u8 = 14;
+const K_FETCH_REPLICA: u8 = 15;
+const K_REPLICA_LAG: u8 = 16;
 const K_OK: u8 = 32;
 const K_PLACEMENTS: u8 = 33;
 const K_SUBSCRIBED: u8 = 34;
@@ -216,6 +248,9 @@ const K_LAG: u8 = 38;
 const K_PARTITIONS: u8 = 39;
 const K_ERROR: u8 = 40;
 const K_CLUSTER_MAP_IS: u8 = 41;
+const K_REPLICA_ACK: u8 = 42;
+const K_REPLICA_BATCH: u8 = 43;
+const K_REPLICA_LAG_IS: u8 = 44;
 const K_JOIN: u8 = 64;
 const K_LEAVE_NODE: u8 = 65;
 const K_HEARTBEAT: u8 = 66;
@@ -370,6 +405,9 @@ impl Frame {
             Frame::PartitionCount { .. } => K_PARTITION_COUNT,
             Frame::PublishTo { .. } => K_PUBLISH_TO,
             Frame::GetClusterMap => K_GET_CLUSTER_MAP,
+            Frame::Replicate { .. } => K_REPLICATE,
+            Frame::FetchReplica { .. } => K_FETCH_REPLICA,
+            Frame::ReplicaLag => K_REPLICA_LAG,
             Frame::Ok => K_OK,
             Frame::Placements { .. } => K_PLACEMENTS,
             Frame::Subscribed { .. } => K_SUBSCRIBED,
@@ -380,6 +418,9 @@ impl Frame {
             Frame::Partitions { .. } => K_PARTITIONS,
             Frame::Error { .. } => K_ERROR,
             Frame::ClusterMapIs { .. } => K_CLUSTER_MAP_IS,
+            Frame::ReplicaAck { .. } => K_REPLICA_ACK,
+            Frame::ReplicaBatch { .. } => K_REPLICA_BATCH,
+            Frame::ReplicaLagIs { .. } => K_REPLICA_LAG_IS,
             Frame::Join { .. } => K_JOIN,
             Frame::LeaveNode { .. } => K_LEAVE_NODE,
             Frame::Heartbeat { .. } => K_HEARTBEAT,
@@ -402,6 +443,9 @@ impl Frame {
             Frame::PartitionCount { .. } => "partition-count",
             Frame::PublishTo { .. } => "publish-to",
             Frame::GetClusterMap => "get-cluster-map",
+            Frame::Replicate { .. } => "replicate",
+            Frame::FetchReplica { .. } => "fetch-replica",
+            Frame::ReplicaLag => "replica-lag",
             Frame::Ok => "ok",
             Frame::Placements { .. } => "placements",
             Frame::Subscribed { .. } => "subscribed",
@@ -412,6 +456,9 @@ impl Frame {
             Frame::Partitions { .. } => "partitions",
             Frame::Error { .. } => "error",
             Frame::ClusterMapIs { .. } => "cluster-map-is",
+            Frame::ReplicaAck { .. } => "replica-ack",
+            Frame::ReplicaBatch { .. } => "replica-batch",
+            Frame::ReplicaLagIs { .. } => "replica-lag-is",
             Frame::Join { .. } => "join",
             Frame::LeaveNode { .. } => "leave-node",
             Frame::Heartbeat { .. } => "heartbeat",
@@ -467,7 +514,7 @@ impl Frame {
                 put_str(b, topic);
                 put_str(b, group);
             }
-            Frame::TotalLag | Frame::Ok | Frame::GetClusterMap => {}
+            Frame::TotalLag | Frame::Ok | Frame::GetClusterMap | Frame::ReplicaLag => {}
             Frame::PartitionCount { topic } => put_str(b, topic),
             Frame::PublishTo { topic, partition, epoch, msgs } => {
                 put_str(b, topic);
@@ -476,6 +523,39 @@ impl Frame {
                 put_u32(b, msgs.len() as u32);
                 for m in msgs {
                     put_msg(b, m);
+                }
+            }
+            Frame::Replicate { topic, partition, epoch, base_offset, msgs } => {
+                put_str(b, topic);
+                put_u32(b, *partition);
+                put_u64(b, *epoch);
+                put_u64(b, *base_offset);
+                put_u32(b, msgs.len() as u32);
+                for m in msgs {
+                    put_msg(b, m);
+                }
+            }
+            Frame::FetchReplica { topic, partition, epoch, node, from, max } => {
+                put_str(b, topic);
+                put_u32(b, *partition);
+                put_u64(b, *epoch);
+                put_str(b, node);
+                put_u64(b, *from);
+                put_u32(b, *max);
+            }
+            Frame::ReplicaAck { high_watermark } => put_u64(b, *high_watermark),
+            Frame::ReplicaBatch { base_offset, msgs } => {
+                put_u64(b, *base_offset);
+                put_u32(b, msgs.len() as u32);
+                for m in msgs {
+                    put_msg(b, m);
+                }
+            }
+            Frame::ReplicaLagIs { followers } => {
+                put_u32(b, followers.len() as u32);
+                for (node, behind) in followers {
+                    put_str(b, node);
+                    put_u64(b, *behind);
                 }
             }
             Frame::Placements { placements } => put_pairs(b, placements),
@@ -572,6 +652,27 @@ impl Frame {
                 Frame::PublishTo { topic, partition, epoch, msgs }
             }
             K_GET_CLUSTER_MAP => Frame::GetClusterMap,
+            K_REPLICATE => {
+                let topic = rd.string()?;
+                let partition = rd.u32()?;
+                let epoch = rd.u64()?;
+                let base_offset = rd.u64()?;
+                let n = rd.count(13)?; // tag + produced_at + payload len
+                let mut msgs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    msgs.push(rd.msg()?);
+                }
+                Frame::Replicate { topic, partition, epoch, base_offset, msgs }
+            }
+            K_FETCH_REPLICA => Frame::FetchReplica {
+                topic: rd.string()?,
+                partition: rd.u32()?,
+                epoch: rd.u64()?,
+                node: rd.string()?,
+                from: rd.u64()?,
+                max: rd.u32()?,
+            },
+            K_REPLICA_LAG => Frame::ReplicaLag,
             K_OK => Frame::Ok,
             K_PLACEMENTS => Frame::Placements { placements: rd.pairs()? },
             K_SUBSCRIBED => Frame::Subscribed { session: rd.u64()? },
@@ -624,6 +725,26 @@ impl Frame {
                     nodes.push((id, addr));
                 }
                 Frame::ClusterMapIs { epoch, nodes }
+            }
+            K_REPLICA_ACK => Frame::ReplicaAck { high_watermark: rd.u64()? },
+            K_REPLICA_BATCH => {
+                let base_offset = rd.u64()?;
+                let n = rd.count(13)?; // tag + produced_at + payload len
+                let mut msgs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    msgs.push(rd.msg()?);
+                }
+                Frame::ReplicaBatch { base_offset, msgs }
+            }
+            K_REPLICA_LAG_IS => {
+                let n = rd.count(10)?; // u16 length prefix + u64 behind
+                let mut followers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let node = rd.string()?;
+                    let behind = rd.u64()?;
+                    followers.push((node, behind));
+                }
+                Frame::ReplicaLagIs { followers }
             }
             K_JOIN => Frame::Join { node: rd.string()?, incarnation: rd.u64()? },
             K_LEAVE_NODE => Frame::LeaveNode { node: rd.string()? },
@@ -821,6 +942,40 @@ mod tests {
             Frame::ClusterMapIs { epoch: 0, nodes: vec![] },
             Frame::Error { code: ErrorCode::NotOwner, message: "owner=n2".into() },
             Frame::Error { code: ErrorCode::EpochFenced, message: "epoch=9".into() },
+            Frame::Error { code: ErrorCode::NotReplica, message: "rank=none".into() },
+            Frame::Replicate {
+                topic: "t".into(),
+                partition: 3,
+                epoch: 4,
+                base_offset: 17,
+                msgs: vec![Message::new(Some(2), vec![7, 8], 9), Message::new(None, vec![], 0)],
+            },
+            Frame::Replicate {
+                topic: "t".into(),
+                partition: 0,
+                epoch: 1,
+                base_offset: 0,
+                msgs: vec![],
+            },
+            Frame::FetchReplica {
+                topic: "t".into(),
+                partition: 6,
+                epoch: 4,
+                node: "n2".into(),
+                from: 40,
+                max: 128,
+            },
+            Frame::ReplicaLag,
+            Frame::ReplicaAck { high_watermark: 21 },
+            Frame::ReplicaBatch {
+                base_offset: 40,
+                msgs: vec![Message::new(None, vec![1; 5], 3)],
+            },
+            Frame::ReplicaBatch { base_offset: 0, msgs: vec![] },
+            Frame::ReplicaLagIs {
+                followers: vec![("n2".into(), 0), ("n3".into(), 12)],
+            },
+            Frame::ReplicaLagIs { followers: vec![] },
             Frame::Join { node: "w1".into(), incarnation: 2 },
             Frame::LeaveNode { node: "w1".into() },
             Frame::Heartbeat { node: "w1".into(), seq: 77 },

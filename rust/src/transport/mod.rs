@@ -54,8 +54,8 @@ pub use cluster::{ClusterClient, ClusterConsumer};
 pub use codec::{copy_counters, reset_copy_counters, Codec, DecodeBuf, FrameBuf, WireCodec};
 pub use frame::{ErrorCode, Frame, FrameError, FLAG_NO_REPLY, MAX_FRAME, WIRE_VERSION};
 pub use gossip::{Gossiper, GossipService};
-pub use remote::{RemoteBroker, RetryPolicy};
-pub use server::{BrokerService, NodeService};
+pub use remote::{Backoff, RemoteBroker, RetryPolicy};
+pub use server::{BrokerService, NodeService, Replicator};
 pub use sim::{LinkStats, SimTransport};
 pub use tcp::TcpTransport;
 

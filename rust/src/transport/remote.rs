@@ -53,15 +53,78 @@ impl Default for RetryPolicy {
     }
 }
 
+/// Hard ceiling on any single backoff pause, whatever the base and the
+/// failure streak.
+pub const BACKOFF_CAP: Duration = Duration::from_secs(5);
+
+/// Jittered exponential backoff with a cap and reset-on-success.
+///
+/// The pause before retry `n` is `base · 2ⁿ` clamped to `cap`, then
+/// jittered into `[delay/2, delay]` so a fleet of clients that lost the
+/// same node never redials it in lock-step (the failover thundering
+/// herd). Jitter comes from an internal SplitMix64 stream — pauses are a
+/// pure function of `(seed, failure count)`, never ambient randomness,
+/// so simulated runs stay reproducible. A zero `base` never sleeps
+/// (virtual-time transports). [`Backoff::reset`] on any success starts
+/// the ladder over.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    failures: u32,
+    rng: u64,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Backoff { base, cap, failures: 0, rng: seed | 1 }
+    }
+
+    /// Consecutive failures since the last [`Backoff::reset`].
+    pub fn failures(&self) -> u32 {
+        self.failures
+    }
+
+    /// The pause before the next retry, advancing the failure count.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.failures.min(16);
+        self.failures = self.failures.saturating_add(1);
+        if self.base.is_zero() {
+            return Duration::ZERO;
+        }
+        let full = self.base.saturating_mul(1u32 << exp).min(self.cap);
+        // SplitMix64 step: deterministic jitter in [full/2, full].
+        self.rng = self.rng.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        let nanos = full.as_nanos() as u64;
+        Duration::from_nanos(nanos / 2 + z % (nanos / 2 + 1))
+    }
+
+    /// The remote answered: the next failure starts the ladder over.
+    pub fn reset(&mut self) {
+        self.failures = 0;
+    }
+}
+
 pub(super) fn call_retry(
     conn: &Arc<dyn Connection>,
     retry: RetryPolicy,
     req: &Frame,
 ) -> Result<Frame, TransportError> {
     let mut last = TransportError::Unreachable("no attempts".into());
+    // Fresh ladder per request: a request that succeeds resets implicitly,
+    // and the pause grows across this request's attempts — 1·base, 2·base,
+    // 4·base… (jittered, capped) instead of hammering a fixed interval.
+    let mut backoff = Backoff::new(retry.backoff, BACKOFF_CAP, 0x5EED_CA11);
     for attempt in 0..retry.attempts.max(1) {
-        if attempt > 0 && !retry.backoff.is_zero() {
-            std::thread::sleep(retry.backoff);
+        if attempt > 0 {
+            let pause = backoff.next_delay();
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
         }
         match conn.call(req) {
             // Rejections are deterministic — retrying cannot help.
@@ -453,6 +516,39 @@ mod tests {
         assert_eq!(broker.topic("t").unwrap().total_messages(), 0, "dropped, not applied");
         assert!(remote.try_publish_batch("t", batch).is_ok());
         assert_eq!(broker.topic("t").unwrap().total_messages(), 1);
+    }
+
+    #[test]
+    fn backoff_grows_jitters_caps_and_resets() {
+        let base = Duration::from_millis(100);
+        let cap = Duration::from_millis(1500);
+        let mut b = Backoff::new(base, cap, 42);
+        let mut prev_full = Duration::ZERO;
+        for n in 0..8u32 {
+            let full = base.saturating_mul(1 << n).min(cap);
+            let d = b.next_delay();
+            assert!(d >= full / 2 && d <= full, "attempt {n}: {d:?} outside [{:?}, {full:?}]", full / 2);
+            assert!(full >= prev_full, "the uncapped ladder is monotonic");
+            prev_full = full;
+        }
+        assert!(b.next_delay() <= cap, "capped forever after");
+        b.reset();
+        let after_reset = b.next_delay();
+        assert!(after_reset <= base, "reset restarts the ladder at the base rung");
+        // Determinism: same seed, same failure count → same pause.
+        let mut x = Backoff::new(base, cap, 7);
+        let mut y = Backoff::new(base, cap, 7);
+        for _ in 0..5 {
+            assert_eq!(x.next_delay(), y.next_delay());
+        }
+    }
+
+    #[test]
+    fn zero_base_backoff_never_sleeps() {
+        let mut b = Backoff::new(Duration::ZERO, BACKOFF_CAP, 1);
+        for _ in 0..10 {
+            assert_eq!(b.next_delay(), Duration::ZERO, "sim transports must not real-sleep");
+        }
     }
 
     #[test]

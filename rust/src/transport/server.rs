@@ -24,13 +24,29 @@
 //! bumped the epoch retires the session with `EpochFenced` — so a commit
 //! decided against the old partition layout can never land on the new
 //! one.
+//!
+//! A service built with [`BrokerService::with_replication`] additionally
+//! **replicates**: after the local durable append, the primary forwards
+//! every accepted [`Frame::PublishTo`] batch to the follower replicas the
+//! placement map derives ([`PlacementMap::replicas_of`]). Forwarding is
+//! best-effort by design — an unreachable or short-acking follower is
+//! marked *lagging* and skipped on later publishes, so a dead follower
+//! degrades the partition to primary-only rather than stalling
+//! publishers. A lagging or freshly restarted follower heals itself by
+//! pulling missing offsets with [`Frame::FetchReplica`]
+//! ([`BrokerService::catch_up_replicas`]); the empty parity pull is what
+//! clears its lagging mark on the primary. Follower-side applies are
+//! idempotent on the batch's base offset, so retries, the sim's
+//! duplicate fault, and overlapping catch-up pulls never fork a replica
+//! log.
 
 use super::codec::FrameBuf;
 use super::frame::{batch_to_frame, encode_batch_ref, ErrorCode, Frame, MAX_FRAME};
-use super::Service;
-use crate::cluster::ClusterView;
-use crate::messaging::broker::{Broker, Consumer};
-use std::collections::HashMap;
+use super::{Connection, Service, Transport};
+use crate::cluster::{ClusterView, PlacementMap, DEFAULT_REPLICATION};
+use crate::messaging::broker::{wire_cost, Broker, Consumer, Topic};
+use crate::messaging::Message;
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -83,6 +99,166 @@ pub struct BrokerService {
     /// [`BrokerService::with_cluster`] — drives the owner checks and
     /// epoch fences. `None` = standalone broker, no cluster semantics.
     view: Option<Arc<ClusterView>>,
+    /// Primary→follower forwarding, when built with
+    /// [`BrokerService::with_replication`]. `None` = partitions live on
+    /// their owner only (pre-replication behaviour).
+    replicator: Option<Arc<Replicator>>,
+}
+
+/// Per-follower replication state held by a partition primary.
+#[derive(Default)]
+struct FollowerLag {
+    /// Partitions whose replication stream to this follower has a gap
+    /// (a forward failed or was skipped); the primary stops forwarding
+    /// them until a catch-up pull reaches parity.
+    dirty: BTreeSet<(String, u32)>,
+    /// How many forwarded messages this follower is known to be missing.
+    behind: u64,
+}
+
+/// Streams acked appends from a partition's primary to its follower
+/// replicas, tracking which followers have fallen behind.
+///
+/// Owned by a [`BrokerService`] built with
+/// [`BrokerService::with_replication`]. The replica *set* is never
+/// stored — [`PlacementMap::replicas_of`] derives it per partition, so
+/// failover needs no election: removing a dead node from the map makes
+/// the old rank-1 follower the new rank-0 owner.
+pub struct Replicator {
+    transport: Arc<dyn Transport>,
+    /// Replication factor `k`: each partition lives on its top-`k` HRW
+    /// nodes (rank 0 = primary). Never below 1.
+    factor: usize,
+    conns: Mutex<HashMap<String, Arc<dyn Connection>>>,
+    followers: Mutex<BTreeMap<String, FollowerLag>>,
+}
+
+impl Replicator {
+    pub fn new(transport: Arc<dyn Transport>, factor: usize) -> Arc<Self> {
+        Arc::new(Replicator {
+            transport,
+            factor: factor.max(1),
+            conns: Mutex::new(HashMap::new()),
+            followers: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn factor(&self) -> usize {
+        self.factor
+    }
+
+    /// Known per-follower lag, `(node, messages behind)`, sorted by node.
+    pub fn lag(&self) -> Vec<(String, u64)> {
+        self.followers.lock().unwrap().iter().map(|(n, f)| (n.clone(), f.behind)).collect()
+    }
+
+    fn conn(&self, node: &str, addr: &str) -> Option<Arc<dyn Connection>> {
+        if let Some(c) = self.conns.lock().unwrap().get(node) {
+            return Some(c.clone());
+        }
+        let c = self.transport.connect(addr).ok()?;
+        self.conns.lock().unwrap().insert(node.to_string(), c.clone());
+        Some(c)
+    }
+
+    fn is_dirty(&self, node: &str, topic: &str, partition: u32) -> bool {
+        self.followers
+            .lock()
+            .unwrap()
+            .get(node)
+            .map(|f| f.dirty.contains(&(topic.to_string(), partition)))
+            .unwrap_or(false)
+    }
+
+    fn mark_lagging(&self, node: &str, topic: &str, partition: u32, missed: u64) {
+        let mut followers = self.followers.lock().unwrap();
+        let f = followers.entry(node.to_string()).or_default();
+        f.dirty.insert((topic.to_string(), partition));
+        f.behind = f.behind.saturating_add(missed);
+    }
+
+    /// A catch-up pull from `node` reached parity on this partition:
+    /// forwarding resumes. The `behind` counter resets once no partition
+    /// stream to the follower has a gap.
+    fn clear_lag(&self, node: &str, topic: &str, partition: u32) {
+        let mut followers = self.followers.lock().unwrap();
+        if let Some(f) = followers.get_mut(node) {
+            f.dirty.remove(&(topic.to_string(), partition));
+            if f.dirty.is_empty() {
+                f.behind = 0;
+            }
+        }
+    }
+
+    /// Drop follower state and cached connections for nodes the placement
+    /// map no longer contains — a rebalance declared them dead, so their
+    /// replica sessions must not linger (see [`BrokerService::reap_idle`]).
+    fn retire_missing(&self, map: &PlacementMap) -> usize {
+        let live: HashSet<&str> = map.nodes().iter().map(|(id, _)| id.as_str()).collect();
+        let mut followers = self.followers.lock().unwrap();
+        let before = followers.len();
+        followers.retain(|node, _| live.contains(node.as_str()));
+        self.conns.lock().unwrap().retain(|node, _| live.contains(node.as_str()));
+        before - followers.len()
+    }
+
+    /// Forward an acked append to every follower replica of the
+    /// partition. Best effort: a follower that is unreachable, rejects,
+    /// or acks a high-watermark short of `base + n` is marked lagging
+    /// and skipped until it catches up — the publisher's ack degrades to
+    /// primary-durable rather than stalling on a dead follower.
+    fn forward(&self, view: &ClusterView, topic: &str, partition: u32, base: u64, msgs: Vec<Message>) {
+        let map = view.map();
+        let epoch = map.epoch();
+        let n = msgs.len() as u64;
+        for replica in map.replicas_of(topic, partition as usize, self.factor) {
+            let (node, addr) = replica;
+            if node.as_str() == view.node() {
+                continue;
+            }
+            if self.is_dirty(node, topic, partition) {
+                self.mark_lagging(node, topic, partition, n);
+                continue;
+            }
+            let Some(conn) = self.conn(node, addr) else {
+                self.mark_lagging(node, topic, partition, n);
+                continue;
+            };
+            let req = Frame::Replicate {
+                topic: topic.to_string(),
+                partition,
+                epoch,
+                base_offset: base,
+                msgs: msgs.clone(),
+            };
+            match conn.call(&req) {
+                Ok(Frame::ReplicaAck { high_watermark }) if high_watermark >= base + n => {}
+                _ => self.mark_lagging(node, topic, partition, n),
+            }
+        }
+    }
+}
+
+/// Idempotent follower-side apply of a replicated batch, keyed on the
+/// batch's base offset against the local log end. Returns the partition's
+/// new high watermark (the ack value):
+///
+/// - `base == end` — the contiguous case: append everything;
+/// - `base + n <= end` — a pure duplicate (retry, sim duplicate fault):
+///   no-op;
+/// - `base < end < base + n` — overlap: append only the unseen suffix;
+/// - `base > end` — a gap: refuse the batch. The short high-watermark in
+///   the ack tells the primary this follower is behind; catch-up fills
+///   the hole in order.
+fn apply_replica(t: &Topic, partition: usize, base: u64, msgs: Vec<Message>) -> u64 {
+    let end = t.end_offsets()[partition];
+    let n = msgs.len() as u64;
+    if base > end || base + n <= end {
+        return end;
+    }
+    let fresh: Vec<Message> = msgs.into_iter().skip((end - base) as usize).collect();
+    let appended = fresh.len() as u64;
+    t.publish_to(partition, fresh) + appended
 }
 
 fn err(code: ErrorCode, message: String) -> Frame {
@@ -102,6 +278,15 @@ fn err(code: ErrorCode, message: String) -> Frame {
     Frame::Error { code, message }
 }
 
+/// Replication frames name the derived rank they were refused at, so a
+/// confused peer can see *why* the map disagrees with it.
+fn rank_err(rank: Option<usize>) -> Frame {
+    match rank {
+        Some(r) => err(ErrorCode::NotReplica, format!("rank={r}")),
+        None => err(ErrorCode::NotReplica, "rank=none".into()),
+    }
+}
+
 impl BrokerService {
     pub fn new(broker: Arc<Broker>) -> Arc<Self> {
         Arc::new(BrokerService {
@@ -109,6 +294,7 @@ impl BrokerService {
             sessions: RwLock::new(HashMap::new()),
             next_session: AtomicU64::new(session_seed()),
             view: None,
+            replicator: None,
         })
     }
 
@@ -121,6 +307,27 @@ impl BrokerService {
             sessions: RwLock::new(HashMap::new()),
             next_session: AtomicU64::new(session_seed()),
             view: Some(view),
+            replicator: None,
+        })
+    }
+
+    /// A clustered, replicating service: everything
+    /// [`BrokerService::with_cluster`] does, plus each accepted
+    /// [`Frame::PublishTo`] batch is forwarded to the partition's
+    /// follower replicas (the placement map's top-`factor` HRW nodes)
+    /// over `transport`, so a dead primary loses no acked data.
+    pub fn with_replication(
+        broker: Arc<Broker>,
+        view: Arc<ClusterView>,
+        transport: Arc<dyn Transport>,
+        factor: usize,
+    ) -> Arc<Self> {
+        Arc::new(BrokerService {
+            broker,
+            sessions: RwLock::new(HashMap::new()),
+            next_session: AtomicU64::new(session_seed()),
+            view: Some(view),
+            replicator: Some(Replicator::new(transport, factor)),
         })
     }
 
@@ -161,12 +368,80 @@ impl BrokerService {
     /// loss) eventually mimics the local drop-the-handle crash semantics:
     /// the `rl-node` broker loop calls this periodically. Live consumers
     /// poll far more often than any sane `idle`, so they are never
-    /// reaped. Returns how many sessions were dropped.
+    /// reaped. Also retires **replica sessions** — follower lag state
+    /// and cached replication connections for nodes the placement map no
+    /// longer contains (a rebalance declared them dead). Returns how
+    /// many sessions (consumer + replica) were dropped.
     pub fn reap_idle(&self, idle: Duration) -> usize {
-        let mut sessions = self.sessions.write().unwrap();
-        let before = sessions.len();
-        sessions.retain(|_, s| s.last_used.lock().unwrap().elapsed() <= idle);
-        before - sessions.len()
+        let mut reaped = {
+            let mut sessions = self.sessions.write().unwrap();
+            let before = sessions.len();
+            sessions.retain(|_, s| s.last_used.lock().unwrap().elapsed() <= idle);
+            before - sessions.len()
+        };
+        if let (Some(rep), Some(view)) = (&self.replicator, &self.view) {
+            reaped += rep.retire_missing(&view.map());
+        }
+        reaped
+    }
+
+    /// Per-follower replication lag, `(node, messages known missing)` —
+    /// empty when this service does not replicate. What the
+    /// [`Frame::ReplicaLag`] probe reports and `rl-node` prints as
+    /// replication health.
+    pub fn replica_lag(&self) -> Vec<(String, u64)> {
+        self.replicator.as_ref().map(|r| r.lag()).unwrap_or_default()
+    }
+
+    /// Follower-driven catch-up: for every partition this node
+    /// replicates (rank >= 1 under the current map), pull missing
+    /// offsets from the primary with [`Frame::FetchReplica`] until
+    /// parity. The final empty parity pull per partition is what clears
+    /// this node's lagging mark on the primary, making it
+    /// failover-eligible again. Returns how many messages were appended.
+    pub fn catch_up_replicas(&self, max: u32) -> usize {
+        let (Some(rep), Some(view)) = (&self.replicator, &self.view) else {
+            return 0;
+        };
+        let map = view.map();
+        let epoch = map.epoch();
+        let me = view.node().to_string();
+        let mut applied = 0usize;
+        for name in self.broker.topic_names() {
+            let Some(t) = self.broker.topic(&name) else { continue };
+            for p in 0..t.partition_count() {
+                let replicas = map.replicas_of(&name, p, rep.factor());
+                match replicas.iter().position(|(id, _)| id.as_str() == me) {
+                    Some(rank) if rank > 0 => {}
+                    _ => continue,
+                }
+                let (primary, addr) = replicas[0];
+                let Some(conn) = rep.conn(primary, addr) else { continue };
+                loop {
+                    let from = t.end_offsets()[p];
+                    let req = Frame::FetchReplica {
+                        topic: name.clone(),
+                        partition: p as u32,
+                        epoch,
+                        node: me.clone(),
+                        from,
+                        max,
+                    };
+                    let Ok(Frame::ReplicaBatch { base_offset, msgs }) = conn.call(&req) else {
+                        break;
+                    };
+                    if msgs.is_empty() {
+                        break;
+                    }
+                    let after = apply_replica(&t, p, base_offset, msgs);
+                    if after <= from {
+                        break; // non-advancing reply: bail, retry next tick
+                    }
+                    applied += (after - from) as usize;
+                }
+            }
+        }
+        applied
     }
 }
 
@@ -320,11 +595,107 @@ impl Service for BrokerService {
                     }
                 }
                 let count = msgs.len() as u64;
-                let base = t.publish_to(partition as usize, msgs);
+                let base = match (&self.view, &self.replicator) {
+                    (Some(view), Some(rep)) if count > 0 => {
+                        // Local durable append first, then forward the
+                        // acked batch to the follower replicas. The
+                        // copies are cheap — payloads are `Arc` slices —
+                        // and forwarding never fails the publish.
+                        let copies = msgs.clone();
+                        let base = t.publish_to(partition as usize, msgs);
+                        rep.forward(view, &topic, partition, base, copies);
+                        base
+                    }
+                    _ => t.publish_to(partition as usize, msgs),
+                };
                 Frame::Placements {
                     placements: (0..count).map(|i| (partition, base + i)).collect(),
                 }
             }
+            Frame::Replicate { topic, partition, epoch, base_offset, msgs } => {
+                let Some(view) = &self.view else {
+                    return err(ErrorCode::NotReplica, "not a clustered broker".into());
+                };
+                let now = view.epoch();
+                if epoch != now {
+                    return err(ErrorCode::EpochFenced, format!("cluster epoch is {now}"));
+                }
+                // Same epoch ⇒ same map ⇒ same derived ranks: accept only
+                // if the map really makes this node a follower here.
+                let factor =
+                    self.replicator.as_ref().map(|r| r.factor()).unwrap_or(DEFAULT_REPLICATION);
+                match view.map().replica_rank(&topic, partition as usize, factor, view.node()) {
+                    Some(rank) if rank > 0 => {}
+                    rank => return rank_err(rank),
+                }
+                let Some(t) = self.broker.topic(&topic) else {
+                    return err(ErrorCode::UnknownTopic, format!("unknown topic '{topic}'"));
+                };
+                if partition as usize >= t.partition_count() {
+                    return err(
+                        ErrorCode::BadRequest,
+                        "replicate to out-of-range partition".into(),
+                    );
+                }
+                Frame::ReplicaAck {
+                    high_watermark: apply_replica(&t, partition as usize, base_offset, msgs),
+                }
+            }
+            Frame::FetchReplica { topic, partition, epoch, node, from, max } => {
+                let Some(view) = &self.view else {
+                    return err(ErrorCode::BadRequest, "not a clustered broker".into());
+                };
+                let now = view.epoch();
+                if epoch != now {
+                    return err(ErrorCode::EpochFenced, format!("cluster epoch is {now}"));
+                }
+                let Some(t) = self.broker.topic(&topic) else {
+                    return err(ErrorCode::UnknownTopic, format!("unknown topic '{topic}'"));
+                };
+                if partition as usize >= t.partition_count() {
+                    return err(ErrorCode::BadRequest, "fetch for out-of-range partition".into());
+                }
+                let map = view.map();
+                if let Some((owner, _)) = map.owner_of(&topic, partition as usize) {
+                    if owner != view.node() {
+                        return err(ErrorCode::NotOwner, format!("owner={owner}"));
+                    }
+                }
+                let factor =
+                    self.replicator.as_ref().map(|r| r.factor()).unwrap_or(DEFAULT_REPLICATION);
+                match map.replica_rank(&topic, partition as usize, factor, &node) {
+                    Some(rank) if rank > 0 => {}
+                    rank => return rank_err(rank),
+                }
+                let end = t.end_offsets()[partition as usize];
+                if from >= end {
+                    // Parity: the puller holds everything we do — its
+                    // replication stream is clean again.
+                    if let Some(rep) = &self.replicator {
+                        rep.clear_lag(&node, &topic, partition);
+                    }
+                    return Frame::ReplicaBatch { base_offset: from, msgs: Vec::new() };
+                }
+                // Cap by count *and* encoded bytes (same margin as the
+                // poll path) so the reply always fits one frame; trimmed
+                // messages are re-served by the follower's next pull.
+                let mut rows = t.read(partition as usize, from, (max as usize).min(65_536));
+                let (mut bytes, mut keep) = (0usize, 0usize);
+                for (_, m) in &rows {
+                    bytes += wire_cost(m);
+                    if keep > 0 && bytes > MAX_FRAME / 2 {
+                        break;
+                    }
+                    keep += 1;
+                }
+                rows.truncate(keep);
+                let base_offset = rows.first().map(|(o, _)| *o).unwrap_or(from);
+                Frame::ReplicaBatch {
+                    base_offset,
+                    msgs: rows.into_iter().map(|(_, m)| m).collect(),
+                }
+            }
+            Frame::ReplicaLag => Frame::ReplicaLagIs { followers: self.replica_lag() },
             Frame::GetClusterMap => match &self.view {
                 None => err(ErrorCode::BadRequest, "not a clustered broker".into()),
                 Some(view) => {
@@ -757,6 +1128,230 @@ mod tests {
             Frame::decode(&fb.to_vec()).unwrap().0,
             Frame::Error { code: ErrorCode::UnknownSession, .. }
         ));
+    }
+
+    /// Two replicating nodes on a sim transport, replication factor 2:
+    /// every partition's primary forwards to the other node.
+    fn replicated_pair(
+        partitions: u32,
+    ) -> (
+        crate::transport::SimTransport,
+        Arc<BrokerService>,
+        Arc<BrokerService>,
+        Arc<ClusterView>,
+    ) {
+        use crate::cluster::Membership;
+        use crate::sim::SimScheduler;
+        use crate::transport::SimTransport;
+        use crate::util::clock::ManualClock;
+        let sched = Arc::new(SimScheduler::new(7));
+        let transport = SimTransport::new(sched);
+        let nodes: Vec<(String, String)> =
+            vec![("n1".into(), "sim://n1".into()), ("n2".into(), "sim://n2".into())];
+        let mk = |node: &str| {
+            let clock = Arc::new(ManualClock::new());
+            let membership = Membership::new(clock, 8.0);
+            let view = ClusterView::new(node, membership, PlacementMap::new(1, nodes.clone()));
+            let svc = BrokerService::with_replication(
+                Broker::new(),
+                view.clone(),
+                Arc::new(transport.clone()),
+                2,
+            );
+            assert_eq!(
+                svc.handle(Frame::CreateTopic { topic: "t".into(), partitions }),
+                Frame::Ok
+            );
+            transport.serve(&format!("sim://{node}"), svc.clone()).unwrap();
+            svc
+        };
+        let svc1 = mk("n1");
+        let svc2 = mk("n2");
+        let view1 = svc1.view.clone().unwrap();
+        (transport, svc1, svc2, view1)
+    }
+
+    #[test]
+    fn publish_to_replicates_to_the_follower() {
+        let (_transport, svc1, svc2, view1) = replicated_pair(16);
+        let map = view1.map();
+        let p = map.owned_partitions("t", 16, "n1")[0] as u32;
+        let msgs = vec![Message::new(None, vec![1], 0), Message::new(None, vec![2], 0)];
+        match svc1.handle(Frame::PublishTo { topic: "t".into(), partition: p, epoch: 1, msgs }) {
+            Frame::Placements { placements } => assert_eq!(placements.len(), 2),
+            other => panic!("unexpected response {other:?}"),
+        }
+        // The follower holds the same messages at the same offsets.
+        let t2 = svc2.broker.topic("t").unwrap();
+        assert_eq!(t2.end_offsets()[p as usize], 2);
+        let offsets: Vec<u64> = t2.read(p as usize, 0, 10).iter().map(|(o, _)| *o).collect();
+        assert_eq!(offsets, vec![0, 1]);
+        // Healthy replication records no lag.
+        assert!(svc1.replica_lag().iter().all(|(_, behind)| *behind == 0));
+    }
+
+    #[test]
+    fn dead_follower_degrades_to_primary_only_then_catches_up() {
+        let (transport, svc1, svc2, view1) = replicated_pair(16);
+        let map = view1.map();
+        let p = map.owned_partitions("t", 16, "n1")[0] as u32;
+        let msg = |b: u8| vec![Message::new(None, vec![b], 0)];
+        transport.partition("sim://n2", true);
+        // Publishes still ack (primary-durable) while the follower is dark.
+        for b in 0..3u8 {
+            assert!(matches!(
+                svc1.handle(Frame::PublishTo {
+                    topic: "t".into(),
+                    partition: p,
+                    epoch: 1,
+                    msgs: msg(b)
+                }),
+                Frame::Placements { .. }
+            ));
+        }
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 3)]);
+        // The probe frame reports the same thing over the wire.
+        assert_eq!(
+            svc1.handle(Frame::ReplicaLag),
+            Frame::ReplicaLagIs { followers: vec![("n2".into(), 3)] }
+        );
+        // Nothing reached the follower.
+        assert_eq!(svc2.broker.topic("t").unwrap().end_offsets()[p as usize], 0);
+        // Heal the link; the follower pulls itself to parity and the
+        // primary clears the lagging mark at the empty parity pull.
+        transport.partition("sim://n2", false);
+        assert_eq!(svc2.catch_up_replicas(1024), 3);
+        assert_eq!(svc2.broker.topic("t").unwrap().end_offsets()[p as usize], 3);
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 0)]);
+        // Replication resumes inline on the next publish.
+        assert!(matches!(
+            svc1.handle(Frame::PublishTo { topic: "t".into(), partition: p, epoch: 1, msgs: msg(9) }),
+            Frame::Placements { .. }
+        ));
+        assert_eq!(svc2.broker.topic("t").unwrap().end_offsets()[p as usize], 4);
+    }
+
+    #[test]
+    fn replicate_apply_is_idempotent_and_gap_safe() {
+        let (_transport, _svc1, svc2, view1) = replicated_pair(16);
+        let map = view1.map();
+        let p = map.owned_partitions("t", 16, "n1")[0] as u32;
+        let batch = |b: u64, n: u64| Frame::Replicate {
+            topic: "t".into(),
+            partition: p,
+            epoch: 1,
+            base_offset: b,
+            msgs: (0..n).map(|i| Message::new(None, vec![(b + i) as u8], 0)).collect(),
+        };
+        // Contiguous append, then an exact duplicate (a retry or the
+        // sim's duplicate fault) which must be a no-op.
+        assert_eq!(svc2.handle(batch(0, 3)), Frame::ReplicaAck { high_watermark: 3 });
+        assert_eq!(svc2.handle(batch(0, 3)), Frame::ReplicaAck { high_watermark: 3 });
+        // Overlap appends only the unseen suffix.
+        assert_eq!(svc2.handle(batch(1, 4)), Frame::ReplicaAck { high_watermark: 5 });
+        // A gap is refused; the short ack tells the primary we're behind.
+        assert_eq!(svc2.handle(batch(10, 2)), Frame::ReplicaAck { high_watermark: 5 });
+        assert_eq!(svc2.broker.topic("t").unwrap().end_offsets()[p as usize], 5);
+        // Wrong epoch is fenced before any apply.
+        assert!(matches!(
+            svc2.handle(Frame::Replicate {
+                topic: "t".into(),
+                partition: p,
+                epoch: 9,
+                base_offset: 5,
+                msgs: vec![]
+            }),
+            Frame::Error { code: ErrorCode::EpochFenced, .. }
+        ));
+        // A partition this node *owns* refuses replication (rank 0).
+        let owned = map.owned_partitions("t", 16, "n2")[0] as u32;
+        assert!(matches!(
+            svc2.handle(Frame::Replicate {
+                topic: "t".into(),
+                partition: owned,
+                epoch: 1,
+                base_offset: 0,
+                msgs: vec![]
+            }),
+            Frame::Error { code: ErrorCode::NotReplica, .. }
+        ));
+    }
+
+    #[test]
+    fn fetch_replica_enforces_epoch_ownership_and_rank() {
+        let (_transport, svc1, _svc2, view1) = replicated_pair(16);
+        let map = view1.map();
+        let mine = map.owned_partitions("t", 16, "n1")[0] as u32;
+        let theirs = map.owned_partitions("t", 16, "n2")[0] as u32;
+        let fetch = |partition: u32, epoch: u64, node: &str, from: u64| Frame::FetchReplica {
+            topic: "t".into(),
+            partition,
+            epoch,
+            node: node.into(),
+            from,
+            max: 100,
+        };
+        assert!(matches!(
+            svc1.handle(Frame::PublishTo {
+                topic: "t".into(),
+                partition: mine,
+                epoch: 1,
+                msgs: vec![Message::new(None, vec![7], 0)]
+            }),
+            Frame::Placements { .. }
+        ));
+        assert!(matches!(
+            svc1.handle(fetch(mine, 9, "n2", 0)),
+            Frame::Error { code: ErrorCode::EpochFenced, .. }
+        ));
+        assert!(matches!(
+            svc1.handle(fetch(theirs, 1, "n2", 0)),
+            Frame::Error { code: ErrorCode::NotOwner, .. }
+        ));
+        assert!(matches!(
+            svc1.handle(fetch(mine, 1, "nX", 0)),
+            Frame::Error { code: ErrorCode::NotReplica, .. }
+        ));
+        match svc1.handle(fetch(mine, 1, "n2", 0)) {
+            Frame::ReplicaBatch { base_offset, msgs } => {
+                assert_eq!(base_offset, 0);
+                assert_eq!(msgs.len(), 1);
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        // The parity pull is the empty batch.
+        match svc1.handle(fetch(mine, 1, "n2", 1)) {
+            Frame::ReplicaBatch { base_offset, msgs } => {
+                assert_eq!(base_offset, 1);
+                assert!(msgs.is_empty());
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reap_retires_replica_sessions_for_departed_nodes() {
+        let (transport, svc1, _svc2, view1) = replicated_pair(16);
+        let map = view1.map();
+        let p = map.owned_partitions("t", 16, "n1")[0] as u32;
+        transport.partition("sim://n2", true);
+        assert!(matches!(
+            svc1.handle(Frame::PublishTo {
+                topic: "t".into(),
+                partition: p,
+                epoch: 1,
+                msgs: vec![Message::new(None, vec![1], 0)]
+            }),
+            Frame::Placements { .. }
+        ));
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 1)]);
+        // While n2 is still in the map its replica session survives reaps.
+        assert_eq!(svc1.reap_idle(Duration::from_secs(30)), 0);
+        // A rebalance drops n2 from the map; the reap retires its
+        // replica session alongside idle consumer sessions.
+        assert!(view1.adopt(map.advanced(vec![("n1".into(), "sim://n1".into())])));
+        assert_eq!(svc1.reap_idle(Duration::from_secs(30)), 1);
+        assert!(svc1.replica_lag().is_empty());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use super::codec::{DecodeBuf, FrameBuf};
 use super::frame::{ErrorCode, Frame, FrameError, FLAG_NO_REPLY, MAX_FRAME};
+use super::remote::{Backoff, BACKOFF_CAP};
 use super::{Connection, ServerHandle, Service, Transport, TransportError};
 use std::io::{ErrorKind, Read};
 use std::net::{TcpListener, TcpStream};
@@ -33,7 +34,11 @@ pub struct TcpTransport {
     pub read_timeout: Duration,
     /// Dial attempts per connect/reconnect.
     pub connect_retries: u32,
-    /// Pause between dial attempts.
+    /// Base pause between dial attempts. Each retry ladder doubles it
+    /// (jittered into `[delay/2, delay]`, capped at
+    /// [`BACKOFF_CAP`]) so a dead peer is not hammered at a fixed
+    /// cadence; a successful exchange starts the next ladder from the
+    /// base again.
     pub retry_backoff: Duration,
 }
 
@@ -172,9 +177,13 @@ fn dial_once(addr: &str, cfg: &TcpTransport) -> Result<TcpStream, TransportError
 
 fn dial(addr: &str, cfg: &TcpTransport) -> Result<TcpStream, TransportError> {
     let mut last = TransportError::Unreachable(format!("connect to {addr}: no attempts"));
+    let mut backoff = Backoff::new(cfg.retry_backoff, BACKOFF_CAP, 0xD1A1_5EED);
     for attempt in 0..cfg.connect_retries.max(1) {
         if attempt > 0 {
-            std::thread::sleep(cfg.retry_backoff);
+            let pause = backoff.next_delay();
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
         }
         match dial_once(addr, cfg) {
             Ok(stream) => return Ok(stream),
@@ -250,9 +259,15 @@ impl TcpConnection {
             req.encode_into(flags, &mut st.out);
         }
         let mut last = TransportError::Unreachable(format!("no connection to {}", self.addr));
+        // A fresh ladder per send: a request that succeeds resets the
+        // next one to the base pause (reset-on-success).
+        let mut backoff = Backoff::new(self.cfg.retry_backoff, BACKOFF_CAP, 0x7C9_D1A1);
         for attempt in 0..self.cfg.connect_retries.max(1) {
             if attempt > 0 {
-                std::thread::sleep(self.cfg.retry_backoff);
+                let pause = backoff.next_delay();
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
             }
             if st.stream.is_none() {
                 // Single dial per loop turn: this loop *is* the retry

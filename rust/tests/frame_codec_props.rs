@@ -41,6 +41,7 @@ fn arb_error_code(g: &mut Gen) -> ErrorCode {
         ErrorCode::BadRequest,
         ErrorCode::NotOwner,
         ErrorCode::EpochFenced,
+        ErrorCode::NotReplica,
     ])
 }
 
@@ -51,7 +52,7 @@ fn arb_nodes(g: &mut Gen) -> Vec<(String, String)> {
 
 /// One random frame, covering every variant.
 fn arb_frame(g: &mut Gen) -> Frame {
-    match g.usize(0, 26) {
+    match g.usize(0, 32) {
         0 => Frame::CreateTopic { topic: arb_string(g, 12), partitions: g.u64() as u32 % 16 + 1 },
         1 => Frame::PublishBatch { topic: arb_string(g, 12), msgs: g.vec(6, arb_message) },
         2 => Frame::Subscribe { topic: arb_string(g, 12), group: arb_string(g, 12) },
@@ -96,7 +97,31 @@ fn arb_frame(g: &mut Gen) -> Frame {
             msgs: g.vec(6, arb_message),
         },
         24 => Frame::GetClusterMap,
-        _ => Frame::ClusterMapIs { epoch: g.u64() % 1000, nodes: arb_nodes(g) },
+        25 => Frame::ClusterMapIs { epoch: g.u64() % 1000, nodes: arb_nodes(g) },
+        26 => Frame::Replicate {
+            topic: arb_string(g, 12),
+            partition: g.u64() as u32 % 64,
+            epoch: g.u64() % 1000,
+            base_offset: g.u64() % 100_000,
+            msgs: g.vec(6, arb_message),
+        },
+        27 => Frame::FetchReplica {
+            topic: arb_string(g, 12),
+            partition: g.u64() as u32 % 64,
+            epoch: g.u64() % 1000,
+            node: arb_string(g, 16),
+            from: g.u64() % 100_000,
+            max: g.u64() as u32 % 1024,
+        },
+        28 => Frame::ReplicaLag,
+        29 => Frame::ReplicaAck { high_watermark: g.u64() % 100_000 },
+        30 => Frame::ReplicaBatch {
+            base_offset: g.u64() % 100_000,
+            msgs: g.vec(6, arb_message),
+        },
+        _ => Frame::ReplicaLagIs {
+            followers: g.vec(4, |g| (arb_string(g, 16), g.u64() % 100_000)),
+        },
     }
 }
 

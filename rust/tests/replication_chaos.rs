@@ -1,0 +1,780 @@
+//! Deterministic **replication chaos** suite: a 3-broker SimTransport
+//! cluster with `--replication 2` semantics (every partition mirrored on
+//! its HRW rank-1 follower) driven through scripted failure scenarios
+//! under live traffic. Every scenario runs **twice** per seed and must
+//! produce byte-identical trace fingerprints.
+//!
+//! The moving parts under test are exactly the PR's tentpole:
+//! [`BrokerService::with_replication`] forwarding acked appends inside
+//! the publish path ([`Frame::Replicate`]), degrade-to-primary-only under
+//! follower faults (lagging marks, never publisher stalls), follower
+//! pull-based catch-up ([`Frame::FetchReplica`]) clearing those marks,
+//! and derivation-as-election: removing a dead node from the map promotes
+//! the surviving rank-1 replica to primary with no extra protocol.
+//!
+//! Scenarios (kill targets are derived from the seed map's replica set
+//! for partition 0, so the probes never depend on which node HRW picked):
+//!
+//! - **kill-primary** — a primary dies *for good* while holding acked,
+//!   unconsumed data (the consumer only starts after the kill); the
+//!   promoted follower must serve every acked message — zero loss;
+//! - **replication-lag-window** — the follower is isolated first, so the
+//!   primary degrades to primary-only acks, *then* the primary dies; the
+//!   only acked messages allowed to vanish are those acked inside the
+//!   degraded window, and at least one must actually vanish (the window
+//!   has to bite);
+//! - **rolling-restart-catchup** — every broker restarts in turn with an
+//!   **empty** broker (disk lost, unlike `cluster_chaos`'s durable
+//!   restarts); replica catch-up must refill each revived follower to at
+//!   least its primary's end on every partition, with zero acked loss.
+//!
+//! With `RL_CLUSTER_FP=<path>` set, every scenario's fingerprint is
+//! dumped to `<path>`; CI runs the suite in two separate processes and
+//! diffs the dumps to catch process-level nondeterminism.
+
+use reactive_liquid::cluster::membership::{ClusterView, Membership};
+use reactive_liquid::cluster::PlacementMap;
+use reactive_liquid::messaging::broker::partition_for_key;
+use reactive_liquid::messaging::client::{BrokerClient, ConsumerClient};
+use reactive_liquid::messaging::{Broker, Message};
+use reactive_liquid::sim::SimScheduler;
+use reactive_liquid::transport::cluster::{ClusterClient, ClusterConsumer};
+use reactive_liquid::transport::{
+    BrokerService, Frame, Gossiper, GossipService, NodeService, RetryPolicy, SimTransport,
+    Transport,
+};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ------------------------------------------------------------ harness
+
+/// Virtual-time-stamped event trace with a byte-comparable fingerprint.
+struct TraceLog {
+    sched: Arc<SimScheduler>,
+    events: Mutex<Vec<String>>,
+}
+
+impl TraceLog {
+    fn new(sched: Arc<SimScheduler>) -> Arc<Self> {
+        Arc::new(TraceLog { sched, events: Mutex::new(Vec::new()) })
+    }
+
+    fn log(&self, event: impl Into<String>) {
+        let at = self.sched.now().as_millis();
+        self.events.lock().unwrap().push(format!("t={at:>8}ms {}", event.into()));
+    }
+
+    fn fingerprint(&self, name: &str) -> String {
+        let events = self.events.lock().unwrap();
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for line in events.iter() {
+            for &b in line.as_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            h ^= 0x0A;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        format!("{name} events={} fnv={h:016x}", events.len())
+    }
+
+    fn dump(&self) -> String {
+        self.events.lock().unwrap().join("\n")
+    }
+}
+
+/// What one scenario run produced.
+struct RunReport {
+    fingerprint: String,
+    violations: Vec<String>,
+    trace: String,
+}
+
+/// One broker seat. Unlike `cluster_chaos`, the broker and service live
+/// behind mutable slots: a fresh-revive swaps in an *empty* broker (disk
+/// lost), and the per-seat catch-up tick must target whatever service is
+/// currently serving the seat.
+struct Seat {
+    id: String,
+    broker: Arc<Mutex<Arc<Broker>>>,
+    svc: Arc<Mutex<Arc<BrokerService>>>,
+    view: Arc<ClusterView>,
+    /// Process liveness: `false` while killed — all outbound ticks
+    /// (gossip, rebalance, catch-up) are suppressed and the address is
+    /// partitioned.
+    up: Arc<AtomicBool>,
+    /// Link isolation: the process is alive but nothing it sends gets
+    /// out — this is what makes a primary degrade to primary-only acks.
+    cut: Arc<AtomicBool>,
+}
+
+struct ClusterNet {
+    sched: Arc<SimScheduler>,
+    transport: SimTransport,
+    seats: Vec<Seat>,
+    client: Arc<ClusterClient>,
+    trace: Arc<TraceLog>,
+}
+
+const NODES: [&str; 3] = ["n1", "n2", "n3"];
+const PARTITIONS: usize = 12;
+const REPLICATION: usize = 2;
+const HEARTBEAT: Duration = Duration::from_millis(500);
+
+/// A 3-broker *replicated* cluster at epoch 1: every seat serves a
+/// `with_replication(factor 2)` broker + gossip endpoint, heartbeats its
+/// peers, gossips its map every 2 s, runs a 1 s rebalance tick, and runs
+/// a 1 s follower catch-up tick — all in virtual time.
+fn cluster(seed: u64) -> ClusterNet {
+    let sched = Arc::new(SimScheduler::new(seed));
+    let transport = SimTransport::new(sched.clone());
+    let trace = TraceLog::new(sched.clone());
+    let map = PlacementMap::new(
+        1,
+        NODES.iter().map(|n| (n.to_string(), n.to_string())).collect(),
+    );
+
+    let mut seats = Vec::new();
+    for name in NODES {
+        let membership = Membership::new(sched.clock(), 8.0);
+        let view = ClusterView::new(name, membership, map.clone());
+        let broker = Broker::new();
+        let svc = BrokerService::with_replication(
+            broker.clone(),
+            view.clone(),
+            Arc::new(transport.clone()),
+            REPLICATION,
+        );
+        let service = NodeService::new(svc.clone(), GossipService::with_view(view.clone()));
+        transport.serve(name, service).unwrap();
+        seats.push(Seat {
+            id: name.to_string(),
+            broker: Arc::new(Mutex::new(broker)),
+            svc: Arc::new(Mutex::new(svc)),
+            view,
+            up: Arc::new(AtomicBool::new(true)),
+            cut: Arc::new(AtomicBool::new(false)),
+        });
+    }
+
+    // Gossip mesh: every ordered pair (i -> j) gets a connection carrying
+    // heartbeats (500 ms), map anti-entropy (2 s), and rebalance casts.
+    for i in 0..NODES.len() {
+        let mut peer_conns = Vec::new();
+        for j in 0..NODES.len() {
+            if i == j {
+                continue;
+            }
+            let conn = transport.connect(NODES[j]).unwrap();
+            let gossiper = Gossiper::new(conn.clone(), NODES[i]);
+            gossiper.join(1).unwrap();
+            peer_conns.push(conn.clone());
+            {
+                let up = seats[i].up.clone();
+                let cut = seats[i].cut.clone();
+                sched.schedule_every(HEARTBEAT, move |_| {
+                    if up.load(Ordering::SeqCst) && !cut.load(Ordering::SeqCst) {
+                        let _ = gossiper.heartbeat();
+                    }
+                });
+            }
+            {
+                let up = seats[i].up.clone();
+                let cut = seats[i].cut.clone();
+                let view = seats[i].view.clone();
+                sched.schedule_every(Duration::from_secs(2), move |_| {
+                    if up.load(Ordering::SeqCst) && !cut.load(Ordering::SeqCst) {
+                        let m = view.map();
+                        let _ = conn.cast(&Frame::ClusterMapIs {
+                            epoch: m.epoch(),
+                            nodes: m.nodes().to_vec(),
+                        });
+                    }
+                });
+            }
+        }
+        // Failure-driven rebalance tick.
+        let up = seats[i].up.clone();
+        let cut = seats[i].cut.clone();
+        let view = seats[i].view.clone();
+        let trace_t = trace.clone();
+        let id = seats[i].id.clone();
+        sched.schedule_every(Duration::from_secs(1), move |_| {
+            if !up.load(Ordering::SeqCst) {
+                return;
+            }
+            if let Some(next) = view.rebalance() {
+                let members: Vec<&str> = next.nodes().iter().map(|(n, _)| n.as_str()).collect();
+                trace_t.log(format!("{id} rebalanced to epoch {} {members:?}", next.epoch()));
+                if !cut.load(Ordering::SeqCst) {
+                    for conn in &peer_conns {
+                        let _ = conn.cast(&Frame::ClusterMapIs {
+                            epoch: next.epoch(),
+                            nodes: next.nodes().to_vec(),
+                        });
+                    }
+                }
+            }
+        });
+    }
+
+    // Follower catch-up tick: every second each live, connected seat
+    // pulls whatever its replica partitions are missing and thereby
+    // clears its lagging marks on the primaries.
+    for seat in &seats {
+        let up = seat.up.clone();
+        let cut = seat.cut.clone();
+        let svc = seat.svc.clone();
+        let trace_t = trace.clone();
+        let id = seat.id.clone();
+        sched.schedule_every(Duration::from_secs(1), move |_| {
+            if !up.load(Ordering::SeqCst) || cut.load(Ordering::SeqCst) {
+                return;
+            }
+            let service = svc.lock().unwrap().clone();
+            let n = service.catch_up_replicas(1024);
+            if n > 0 {
+                trace_t.log(format!("{id} caught up {n} replica message(s)"));
+            }
+        });
+    }
+
+    let client = ClusterClient::with_map_retry(
+        Arc::new(transport.clone()),
+        map,
+        RetryPolicy { attempts: 1, backoff: Duration::ZERO },
+    );
+    ClusterNet { sched, transport, seats, client, trace }
+}
+
+/// Kill seat `i` at `at`: the process dies for good unless revived —
+/// address partitioned, all outbound ticks suppressed.
+fn kill_at(net: &ClusterNet, i: usize, at: Duration) {
+    let transport = net.transport.clone();
+    let up = net.seats[i].up.clone();
+    let id = net.seats[i].id.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_at(at, move |_| {
+        up.store(false, Ordering::SeqCst);
+        transport.partition(&id, true);
+        trace.log(format!("{id} killed"));
+    });
+}
+
+/// Restart seat `i` at `at` with an **empty** broker — the disk is lost,
+/// not just the sessions. Everything the seat used to hold survives only
+/// on its replicas; everything it replicates must be pulled back via
+/// [`Frame::FetchReplica`] catch-up.
+fn revive_fresh_at(net: &ClusterNet, i: usize, at: Duration) {
+    let transport = net.transport.clone();
+    let up = net.seats[i].up.clone();
+    let id = net.seats[i].id.clone();
+    let broker_slot = net.seats[i].broker.clone();
+    let svc_slot = net.seats[i].svc.clone();
+    let view = net.seats[i].view.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_at(at, move |_| {
+        transport.partition(&id, false);
+        let broker = Broker::new();
+        let svc = BrokerService::with_replication(
+            broker.clone(),
+            view.clone(),
+            Arc::new(transport.clone()),
+            REPLICATION,
+        );
+        let service = NodeService::new(svc.clone(), GossipService::with_view(view.clone()));
+        transport.serve(&id, service).unwrap();
+        *broker_slot.lock().unwrap() = broker;
+        *svc_slot.lock().unwrap() = svc;
+        up.store(true, Ordering::SeqCst);
+        trace.log(format!("{id} restarted empty"));
+    });
+}
+
+/// Isolate seat `i` (two-way partition): unreachable as a destination,
+/// and its own sends are cut — but the process keeps running.
+fn isolate_at(net: &ClusterNet, i: usize, at: Duration, on: bool) {
+    let transport = net.transport.clone();
+    let cut = net.seats[i].cut.clone();
+    let id = net.seats[i].id.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_at(at, move |_| {
+        cut.store(on, Ordering::SeqCst);
+        transport.partition(&id, on);
+        trace.log(format!("{id} {}", if on { "isolated" } else { "healed" }));
+    });
+}
+
+fn seq_of(m: &Message) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&m.payload);
+    u64::from_le_bytes(b)
+}
+
+type Seen = Arc<Mutex<BTreeMap<u64, u64>>>;
+/// seq → virtual ms at which the publish carrying it was acked.
+type AckTimes = Arc<Mutex<BTreeMap<u64, u64>>>;
+
+/// Producer: `batch` messages every 100 ms until `until`. `next_seq`
+/// advances only on acked publishes, and `acked_at` records *when* each
+/// sequence was acked — the loss probes are phrased entirely in terms of
+/// that acked universe. With `key` set every message pins to one
+/// partition (`partition_for_key`), which is how the lag-window scenario
+/// aims all of its traffic at a known primary/follower pair.
+fn start_producer(
+    net: &ClusterNet,
+    until: Duration,
+    next_seq: Arc<Mutex<u64>>,
+    acked_at: AckTimes,
+    key: Option<u64>,
+    batch: u64,
+) {
+    let client = net.client.clone();
+    let trace = net.trace.clone();
+    net.sched.schedule_every(Duration::from_millis(100), move |sch| {
+        if sch.now() > until {
+            return;
+        }
+        let base = *next_seq.lock().unwrap();
+        let msgs: Vec<Message> =
+            (base..base + batch).map(|s| Message::new(key, s.to_le_bytes().to_vec(), 0)).collect();
+        match client.try_publish_batch("t", msgs) {
+            Ok(placed) => {
+                *next_seq.lock().unwrap() = base + batch;
+                let at = sch.now().as_millis() as u64;
+                let mut acked = acked_at.lock().unwrap();
+                for s in base..base + batch {
+                    acked.insert(s, at);
+                }
+                trace.log(format!("publish ok base={base} n={}", placed.len()));
+            }
+            Err(_) => trace.log(format!("publish stalled base={base} (will retry)")),
+        }
+    });
+}
+
+/// Consumer: poll one rotating node + commit every 150 ms, starting at
+/// `from` — a late start is how the kill scenarios guarantee the victim
+/// still holds *unconsumed* acked data when it dies.
+fn start_consumer(net: &ClusterNet, consumer: Arc<ClusterConsumer>, seen: Seen, from: Duration) {
+    let trace = net.trace.clone();
+    net.sched.schedule_every(Duration::from_millis(150), move |sch| {
+        if sch.now() < from {
+            return;
+        }
+        let batch = consumer.poll_batch(32);
+        if batch.is_empty() {
+            return;
+        }
+        for om in &batch.messages {
+            *seen.lock().unwrap().entry(seq_of(&om.message)).or_insert(0) += 1;
+        }
+        let applied = consumer.commit_batch(&batch);
+        trace.log(format!("poll n={} commit_applied={applied}", batch.len()));
+    });
+}
+
+/// Imperative post-run drain: rotate polls until 8 consecutive empties.
+fn drain(consumer: &ClusterConsumer, seen: &Seen) -> u64 {
+    let mut empties = 0;
+    let mut delivered = 0u64;
+    while empties < 8 {
+        let batch = consumer.poll_batch(64);
+        if batch.is_empty() {
+            empties += 1;
+            continue;
+        }
+        empties = 0;
+        delivered += batch.len() as u64;
+        for om in &batch.messages {
+            *seen.lock().unwrap().entry(seq_of(&om.message)).or_insert(0) += 1;
+        }
+        consumer.commit_batch(&batch);
+    }
+    delivered
+}
+
+/// Every acked sequence was delivered — the tentpole guarantee.
+fn zero_acked_loss(published: u64, seen: &Seen, violations: &mut Vec<String>) {
+    let seen = seen.lock().unwrap();
+    for s in 0..published {
+        if !seen.contains_key(&s) {
+            violations.push(format!("seq {s} acked but never delivered"));
+        }
+    }
+}
+
+/// End-of-run probes over the seats still alive: something was published,
+/// the survivors' views converged, and the group drained to lag 0.
+fn live_probes(net: &ClusterNet, published: u64, live: &[usize], violations: &mut Vec<String>) {
+    if published == 0 {
+        violations.push("nothing was published".into());
+    }
+    let epochs: Vec<u64> = live.iter().map(|&i| net.seats[i].view.epoch()).collect();
+    if epochs.windows(2).any(|w| w[0] != w[1]) {
+        violations.push(format!("live views diverge: epochs {epochs:?}"));
+    }
+    let sets: Vec<Vec<String>> = live
+        .iter()
+        .map(|&i| net.seats[i].view.map().nodes().iter().map(|(id, _)| id.clone()).collect())
+        .collect();
+    if sets.windows(2).any(|w| w[0] != w[1]) {
+        violations.push(format!("live views diverge: members {sets:?}"));
+    }
+    net.client.refresh();
+    let lag = net.client.group_lag("t", "g");
+    if lag != 0 {
+        violations.push(format!("group lag {lag} after drain"));
+    }
+}
+
+/// Seat index of `node` in [`NODES`].
+fn seat_of(node: &str) -> usize {
+    NODES.iter().position(|n| *n == node).unwrap()
+}
+
+// --------------------------------------- scenario: kill the primary
+
+/// The primary of partition 0 dies for good at 5 s while provably holding
+/// acked, unconsumed data (the consumer only starts at 6 s). Derivation
+/// is the election: the surviving rank-1 replica becomes partition 0's
+/// owner in the epoch-2 map and must serve every acked message.
+fn kill_primary_run(seed: u64) -> RunReport {
+    let net = cluster(seed);
+    let trace = net.trace.clone();
+    net.client.try_create_topic("t", PARTITIONS).unwrap();
+
+    // Adaptive kill target: whatever node the seed map made primary of
+    // partition 0. Its rank-1 follower is the expected heir.
+    let map0 = net.seats[0].view.map();
+    let reps = map0.replicas_of("t", 0, REPLICATION);
+    let (primary, follower) = (reps[0].0.clone(), reps[1].0.clone());
+    let victim = seat_of(&primary);
+    trace.log(format!("partition 0 replicas: primary {primary}, follower {follower}"));
+
+    let consumer = Arc::new(net.client.subscribe_cluster("t", "g"));
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Seen = Arc::new(Mutex::new(BTreeMap::new()));
+    let acked_at: AckTimes = Arc::new(Mutex::new(BTreeMap::new()));
+    let violations = Arc::new(Mutex::new(Vec::new()));
+
+    start_producer(&net, Duration::from_secs(8), next_seq.clone(), acked_at, None, 4);
+    start_consumer(&net, consumer.clone(), seen.clone(), Duration::from_secs(6));
+
+    // Bite probe just before the kill: the victim really holds data, and
+    // none of it has been consumed yet (the consumer is not running).
+    {
+        let broker_slot = net.seats[victim].broker.clone();
+        let primary = primary.clone();
+        let trace = trace.clone();
+        let violations = violations.clone();
+        net.sched.schedule_at(Duration::from_millis(4_900), move |_| {
+            let held = broker_slot
+                .lock()
+                .unwrap()
+                .topic("t")
+                .map(|t| t.total_messages())
+                .unwrap_or(0);
+            if held == 0 {
+                violations.lock().unwrap().push("kill window did not bite: primary empty".into());
+            } else {
+                trace.log(format!("{primary} holds {held} unconsumed message(s) at kill"));
+            }
+        });
+    }
+    kill_at(&net, victim, Duration::from_secs(5));
+
+    net.sched.run_until(Duration::from_secs(16));
+    let delivered = drain(&consumer, &seen);
+    let published = *next_seq.lock().unwrap();
+    trace.log(format!("drained published={published} final_drain={delivered}"));
+
+    let mut violations = Arc::try_unwrap(violations).unwrap().into_inner().unwrap();
+    zero_acked_loss(published, &seen, &mut violations);
+    let live: Vec<usize> = (0..NODES.len()).filter(|&i| i != victim).collect();
+    live_probes(&net, published, &live, &mut violations);
+    let m = net.seats[live[0]].view.map();
+    if m.epoch() < 2 || m.contains(&primary) {
+        violations.push(format!(
+            "survivors never rebalanced around the dead primary (epoch {}, {primary} mapped: {})",
+            m.epoch(),
+            m.contains(&primary)
+        ));
+    }
+    match m.owner_of("t", 0) {
+        Some((id, _)) if *id == follower => {}
+        other => violations.push(format!(
+            "rank-1 replica {follower} was not promoted to partition 0 owner (got {other:?})"
+        )),
+    }
+    RunReport { fingerprint: trace.fingerprint("kill-primary"), violations, trace: trace.dump() }
+}
+
+// ----------------------------- scenario: kill inside the lag window
+
+/// Degrade, then die: partition 0's follower is isolated at 3 s (the
+/// primary marks it lagging and keeps acking primary-only), and the
+/// primary dies for good at 4 s — before the follower heals at 6.5 s.
+/// All traffic is keyed to partition 0, so the acked-but-unreplicated
+/// window is guaranteed non-empty. The loss bound under test: a sequence
+/// may vanish **iff** it was acked inside [3 s, 4 s]; everything acked
+/// while replication was healthy must survive the promotion.
+fn replication_lag_window_run(seed: u64) -> RunReport {
+    let net = cluster(seed);
+    let trace = net.trace.clone();
+    net.client.try_create_topic("t", PARTITIONS).unwrap();
+
+    let map0 = net.seats[0].view.map();
+    let reps = map0.replicas_of("t", 0, REPLICATION);
+    let (primary, follower) = (reps[0].0.clone(), reps[1].0.clone());
+    let (p_seat, f_seat) = (seat_of(&primary), seat_of(&follower));
+    trace.log(format!("partition 0 replicas: primary {primary}, follower {follower}"));
+    // Any key that lands on partition 0 pins the whole stream to the
+    // chosen primary/follower pair.
+    let key0 = (0u64..1_000).find(|k| partition_for_key(*k, PARTITIONS) == 0).unwrap();
+
+    let consumer = Arc::new(net.client.subscribe_cluster("t", "g"));
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Seen = Arc::new(Mutex::new(BTreeMap::new()));
+    let acked_at: AckTimes = Arc::new(Mutex::new(BTreeMap::new()));
+    let violations = Arc::new(Mutex::new(Vec::new()));
+
+    start_producer(&net, Duration::from_secs(12), next_seq.clone(), acked_at.clone(), Some(key0), 2);
+    start_consumer(&net, consumer.clone(), seen.clone(), Duration::from_secs(5));
+    isolate_at(&net, f_seat, Duration::from_secs(3), true);
+    kill_at(&net, p_seat, Duration::from_secs(4));
+    isolate_at(&net, f_seat, Duration::from_millis(6_500), false);
+
+    // Bite probe inside the window: the primary must be degraded — still
+    // acking, with the follower marked lagging.
+    {
+        let svc_slot = net.seats[p_seat].svc.clone();
+        let primary = primary.clone();
+        let follower = follower.clone();
+        let trace = trace.clone();
+        let violations = violations.clone();
+        net.sched.schedule_at(Duration::from_millis(3_900), move |_| {
+            let lag = svc_slot.lock().unwrap().clone().replica_lag();
+            match lag.iter().find(|(n, _)| *n == follower) {
+                Some((_, behind)) if *behind > 0 => {
+                    trace.log(format!("{primary} sees {follower} lagging {behind} message(s)"));
+                }
+                _ => violations
+                    .lock()
+                    .unwrap()
+                    .push("lag window did not bite: no lagging mark on the primary".into()),
+            }
+        });
+    }
+
+    net.sched.run_until(Duration::from_secs(16));
+    let delivered = drain(&consumer, &seen);
+    let published = *next_seq.lock().unwrap();
+    trace.log(format!("drained published={published} final_drain={delivered}"));
+
+    let mut violations = Arc::try_unwrap(violations).unwrap().into_inner().unwrap();
+    // Bounded loss: missing sequences are legal iff acked in [3 s, 4 s].
+    let mut lost = 0u64;
+    {
+        let seen = seen.lock().unwrap();
+        let acked = acked_at.lock().unwrap();
+        for s in 0..published {
+            if seen.contains_key(&s) {
+                continue;
+            }
+            lost += 1;
+            match acked.get(&s) {
+                Some(&t) if (3_000..=4_000).contains(&t) => {}
+                Some(&t) => violations.push(format!(
+                    "seq {s} lost but acked at t={t}ms, outside the degraded window"
+                )),
+                None => violations.push(format!("seq {s} counted published but has no ack time")),
+            }
+        }
+    }
+    if lost == 0 {
+        violations.push("lag window did not bite: no acked message was lost".into());
+    }
+    trace.log(format!("lost {lost} message(s), all acked inside the degraded window"));
+
+    let live: Vec<usize> = (0..NODES.len()).filter(|&i| i != p_seat).collect();
+    live_probes(&net, published, &live, &mut violations);
+    let m = net.seats[f_seat].view.map();
+    if !m.contains(&follower) {
+        violations.push("healed follower never rejoined the map".into());
+    }
+    if m.owner_of("t", 0).map(|(id, _)| id.as_str()) != Some(follower.as_str()) {
+        violations.push(format!("{follower} was not promoted to partition 0 owner"));
+    }
+    RunReport {
+        fingerprint: trace.fingerprint("replication-lag-window"),
+        violations,
+        trace: trace.dump(),
+    }
+}
+
+// ----------------------- scenario: rolling restart, disks lost
+
+/// Every broker restarts in turn with an empty broker (disk lost) under
+/// live traffic. Replication is the only thing standing between that and
+/// data loss: every acked message must still be delivered, and after a
+/// final catch-up fixpoint every follower must hold at least its
+/// primary's log on every partition.
+fn rolling_restart_catchup_run(seed: u64) -> RunReport {
+    let net = cluster(seed);
+    let trace = net.trace.clone();
+    net.client.try_create_topic("t", PARTITIONS).unwrap();
+    let consumer = Arc::new(net.client.subscribe_cluster("t", "g"));
+    let next_seq = Arc::new(Mutex::new(0u64));
+    let seen: Seen = Arc::new(Mutex::new(BTreeMap::new()));
+    let acked_at: AckTimes = Arc::new(Mutex::new(BTreeMap::new()));
+
+    start_producer(&net, Duration::from_secs(18), next_seq.clone(), acked_at, None, 4);
+    start_consumer(&net, consumer.clone(), seen.clone(), Duration::ZERO);
+    for (i, (down, up)) in [(4u64, 6u64), (9, 11), (14, 16)].iter().enumerate() {
+        kill_at(&net, i, Duration::from_secs(*down));
+        revive_fresh_at(&net, i, Duration::from_secs(*up));
+    }
+
+    net.sched.run_until(Duration::from_secs(22));
+
+    // Catch-up fixpoint: make sure the last empty revival has the topic,
+    // then let every seat pull until nothing moves.
+    let _ = net.client.try_create_topic("t", PARTITIONS);
+    for round in 0..8 {
+        let moved: usize = net
+            .seats
+            .iter()
+            .map(|s| {
+                let svc = s.svc.lock().unwrap().clone();
+                svc.catch_up_replicas(4096)
+            })
+            .sum();
+        trace.log(format!("final catch-up round {round} applied {moved}"));
+        if moved == 0 {
+            break;
+        }
+    }
+    let delivered = drain(&consumer, &seen);
+    let published = *next_seq.lock().unwrap();
+    trace.log(format!("drained published={published} final_drain={delivered}"));
+
+    let mut violations = Vec::new();
+    zero_acked_loss(published, &seen, &mut violations);
+    live_probes(&net, published, &[0, 1, 2], &mut violations);
+    let map = net.seats[0].view.map();
+    if map.nodes().len() != 3 {
+        violations.push("not every restarted node was re-admitted".into());
+    }
+    // Replica parity: every follower's log reaches at least its primary's
+    // end — the revived-empty brokers were really refilled by catch-up.
+    let brokers: BTreeMap<String, Arc<Broker>> =
+        net.seats.iter().map(|s| (s.id.clone(), s.broker.lock().unwrap().clone())).collect();
+    for p in 0..PARTITIONS {
+        let reps = map.replicas_of("t", p, REPLICATION);
+        let end_of =
+            |node: &str| brokers[node].topic("t").map(|t| t.end_offsets()[p]).unwrap_or(0);
+        let primary_end = end_of(&reps[0].0);
+        for r in &reps[1..] {
+            let fe = end_of(&r.0);
+            if fe < primary_end {
+                violations.push(format!(
+                    "partition {p}: follower {} at offset {fe} behind primary {} at {primary_end} \
+                     after catch-up",
+                    r.0, reps[0].0
+                ));
+            }
+        }
+    }
+    RunReport {
+        fingerprint: trace.fingerprint("rolling-restart-catchup"),
+        violations,
+        trace: trace.dump(),
+    }
+}
+
+// ------------------------------------------------------------- matrix
+
+fn matrix() -> Vec<(&'static str, Box<dyn Fn() -> RunReport>)> {
+    vec![
+        ("kill-primary", Box::new(|| kill_primary_run(42))),
+        ("replication-lag-window", Box::new(|| replication_lag_window_run(7))),
+        ("rolling-restart-catchup", Box::new(|| rolling_restart_catchup_run(11))),
+    ]
+}
+
+#[test]
+fn replication_chaos_matrix_passes_and_is_deterministic() {
+    for (name, run) in matrix() {
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.fingerprint, b.fingerprint,
+            "scenario '{name}' is nondeterministic\nfirst run trace:\n{}",
+            a.trace
+        );
+        assert!(
+            a.violations.is_empty(),
+            "scenario '{name}' violated probes: {:?}\ntrace:\n{}",
+            a.violations,
+            a.trace
+        );
+        assert!(b.violations.is_empty(), "second run of '{name}' diverged: {:?}", b.violations);
+    }
+}
+
+#[test]
+fn kill_primary_really_held_unconsumed_data() {
+    let report = kill_primary_run(42);
+    assert!(report.violations.is_empty(), "{:?}", report.violations);
+    assert!(
+        report.trace.contains("unconsumed message(s) at kill"),
+        "bite probe never saw data on the doomed primary:\n{}",
+        report.trace
+    );
+    assert!(report.trace.contains("killed"), "kill never fired");
+    assert!(report.trace.contains("rebalanced to epoch 2"), "no failure-driven rebalance");
+}
+
+#[test]
+fn lag_window_really_degraded_and_loss_stayed_bounded() {
+    let report = replication_lag_window_run(7);
+    assert!(report.violations.is_empty(), "{:?}", report.violations);
+    assert!(
+        report.trace.contains("lagging"),
+        "the primary never marked its follower lagging:\n{}",
+        report.trace
+    );
+    assert!(
+        !report.trace.contains("lost 0 message(s)"),
+        "no acked message was lost — the window did not bite:\n{}",
+        report.trace
+    );
+}
+
+#[test]
+fn rolling_restart_really_caught_up() {
+    let report = rolling_restart_catchup_run(11);
+    assert!(report.violations.is_empty(), "{:?}", report.violations);
+    assert!(
+        report.trace.contains("caught up"),
+        "no revived follower ever pulled missing replicas:\n{}",
+        report.trace
+    );
+    assert!(report.trace.contains("restarted empty"), "fresh revival never fired");
+}
+
+#[test]
+fn dump_fingerprints_for_cross_process_diff() {
+    // With RL_CLUSTER_FP set, write every scenario fingerprint for the
+    // CI two-process diff (same pattern as the cluster chaos matrix).
+    let Ok(path) = std::env::var("RL_CLUSTER_FP") else { return };
+    let mut out = String::new();
+    for (_name, run) in matrix() {
+        out.push_str(&run().fingerprint);
+        out.push('\n');
+    }
+    std::fs::write(&path, out).expect("write replication fingerprint dump");
+}
