@@ -181,10 +181,19 @@ fn cmd_broker(mut args: Args) -> i32 {
         let mut nodes = peers.clone();
         nodes.push((node_id.clone(), advertise.clone()));
         let view = ClusterView::new(&node_id, membership.clone(), PlacementMap::new(1, nodes));
+        // Replication forwards run inside the publish handler, so their
+        // transport fails fast — one dial, short timeout. A dead follower
+        // costs one failed exchange before the down mark kicks in; the
+        // catch-up tick re-proves it with the same cheap dial.
+        let replication_tcp = TcpTransport {
+            read_timeout: Duration::from_millis(500),
+            connect_retries: 1,
+            retry_backoff: Duration::from_millis(50),
+        };
         let broker_service = BrokerService::with_replication(
             broker,
             view.clone(),
-            Arc::new(tcp.clone()),
+            Arc::new(replication_tcp),
             replication,
         );
         let service =

@@ -284,6 +284,30 @@ impl Topic {
         log.append_batch(msgs)
     }
 
+    /// Replica-side conditional append: apply a batch claimed to start at
+    /// `base`, idempotently against the partition's current end. The
+    /// duplicate/overlap/gap check and the append run under the partition
+    /// log's own writer lock ([`PartitionLog::append_batch_from`]), so
+    /// two concurrent replica streams — a live forward and a catch-up
+    /// pull — can never both pass the check and fork the log. Returns the
+    /// partition's end offset after the call (the replica ack value).
+    pub fn publish_to_at(&self, partition: usize, base: u64, msgs: Vec<Message>) -> u64 {
+        let log = &self.partitions[partition];
+        let n = msgs.len() as u64;
+        if n == 0 {
+            return log.end_offset();
+        }
+        // Count before the append (same over-report-only direction as
+        // `publish`), then give back whatever the log skipped as already
+        // held or gapped — a duplicate apply must not inflate lag.
+        self.published.fetch_add(n, Ordering::Relaxed);
+        let (end, appended) = log.append_batch_from(base, msgs);
+        if appended < n {
+            self.published.fetch_sub(n - appended, Ordering::Relaxed);
+        }
+        end
+    }
+
     /// Read a raw window from one partition (offset-addressed, group-free).
     pub fn read(&self, partition: usize, from: u64, max: usize) -> Vec<(u64, Message)> {
         self.partitions[partition].read(from, max)
@@ -1274,6 +1298,24 @@ mod tests {
         assert_eq!(b.committed("t", "g", 0), 5);
         assert_eq!(b.committed("t", "g", 1), 5);
         assert_eq!(b.group_lag("t", "g"), 0);
+    }
+
+    #[test]
+    fn publish_to_at_skipped_messages_never_inflate_lag() {
+        let b = broker_with_topic(1);
+        let t = b.topic("t").unwrap();
+        let batch = |base: u64, n: u64| -> Vec<Message> {
+            (base..base + n).map(|o| Message::new(None, vec![o as u8], 0)).collect()
+        };
+        assert_eq!(t.publish_to_at(0, 0, batch(0, 3)), 3);
+        // A duplicate apply and a gapped apply append nothing — and must
+        // leave the published count (= lag for a fresh group) untouched.
+        assert_eq!(t.publish_to_at(0, 0, batch(0, 3)), 3);
+        assert_eq!(t.publish_to_at(0, 9, batch(9, 2)), 3);
+        // Overlap counts only the unseen suffix.
+        assert_eq!(t.publish_to_at(0, 1, batch(1, 4)), 5);
+        assert_eq!(t.total_messages(), 5);
+        assert_eq!(b.group_lag("t", "nobody"), 5, "lag == messages actually appended");
     }
 
     #[test]

@@ -47,6 +47,7 @@ use crate::messaging::Message;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Give a publish a few chances to chase a moving owner before giving
 /// up: each failed attempt refreshes the map, so this bounds how many
@@ -74,12 +75,32 @@ struct Core {
     /// Round-robin cursor for keyless publishes (client-side — each
     /// client spreads its own keyless traffic).
     rr: AtomicUsize,
-    /// Paces *failed* map-refresh sweeps: when no node answers
-    /// `GetClusterMap`, consecutive refreshes sleep a jittered
-    /// exponential delay (base = the retry policy's backoff, capped at
-    /// [`BACKOFF_CAP`]) instead of hammering a fully dark cluster; the
-    /// first answered sweep resets the ladder.
-    refresh_backoff: Mutex<Backoff>,
+    /// Paces *failed* map-refresh sweeps without blocking callers.
+    refresh_gate: Mutex<RefreshGate>,
+}
+
+/// Non-blocking pacing for dead-cluster refresh sweeps. `refresh()` is
+/// called from client publish/poll retry paths, so it must never sleep;
+/// instead, a sweep where *no* node answers `GetClusterMap` arms a
+/// jittered exponential "not before" deadline (base = the retry
+/// policy's backoff, capped at [`BACKOFF_CAP`]) and refreshes before
+/// that deadline return immediately without touching the wire. The
+/// first answered sweep resets the ladder and disarms the gate.
+struct RefreshGate {
+    backoff: Backoff,
+    /// Armed by a failed sweep; `None` means a sweep may run now.
+    not_before: Option<Instant>,
+}
+
+impl RefreshGate {
+    fn new(base: Duration, seed: u64) -> Self {
+        RefreshGate { backoff: Backoff::new(base, BACKOFF_CAP, seed), not_before: None }
+    }
+
+    /// Consecutive fully-failed sweeps (tests, diagnostics).
+    fn failures(&self) -> u32 {
+        self.backoff.failures()
+    }
 }
 
 impl Core {
@@ -113,8 +134,16 @@ impl Core {
 
     /// Refresh the routing table: ask every known address (current map ∪
     /// seeds) for its map and adopt the winner. Unreachable nodes are
-    /// skipped — refresh succeeds if *anyone* answers.
+    /// skipped — refresh succeeds if *anyone* answers. When the whole
+    /// cluster is dark, the [`RefreshGate`] turns follow-up refreshes
+    /// into immediate no-ops until its backoff deadline passes — this
+    /// runs on publish/poll retry paths and must never sleep.
     fn refresh(&self) {
+        if let Some(due) = self.refresh_gate.lock().unwrap().not_before {
+            if Instant::now() < due {
+                return;
+            }
+        }
         let mut addrs: Vec<String> =
             self.map().nodes().iter().map(|(_, a)| a.clone()).collect();
         for s in &self.seeds {
@@ -133,13 +162,13 @@ impl Core {
             }
         }
         // Pace repeated dead-cluster sweeps; any answer resets the ladder.
+        let mut gate = self.refresh_gate.lock().unwrap();
         if answered {
-            self.refresh_backoff.lock().unwrap().reset();
+            gate.backoff.reset();
+            gate.not_before = None;
         } else {
-            let pause = self.refresh_backoff.lock().unwrap().next_delay();
-            if !pause.is_zero() {
-                std::thread::sleep(pause);
-            }
+            let delay = gate.backoff.next_delay();
+            gate.not_before = Some(Instant::now() + delay);
         }
     }
 
@@ -262,7 +291,7 @@ impl ClusterClient {
                 conns: Mutex::new(HashMap::new()),
                 partitions: Mutex::new(HashMap::new()),
                 rr: AtomicUsize::new(0),
-                refresh_backoff: Mutex::new(Backoff::new(retry.backoff, BACKOFF_CAP, 0x5EED_0001)),
+                refresh_gate: Mutex::new(RefreshGate::new(retry.backoff, 0x5EED_0001)),
             }),
         })
     }
@@ -284,7 +313,7 @@ impl ClusterClient {
                 conns: Mutex::new(HashMap::new()),
                 partitions: Mutex::new(HashMap::new()),
                 rr: AtomicUsize::new(0),
-                refresh_backoff: Mutex::new(Backoff::new(retry.backoff, BACKOFF_CAP, 0x5EED_0002)),
+                refresh_gate: Mutex::new(RefreshGate::new(retry.backoff, 0x5EED_0002)),
             }),
         });
         client.core.refresh();
@@ -881,19 +910,21 @@ mod tests {
     #[test]
     fn failed_refresh_sweeps_ride_the_backoff_ladder() {
         let (_s, transport, _nodes, client) = three_nodes(8);
-        // All nodes dark: every sweep fails, climbing the ladder (base is
-        // zero here, so no real sleep — the counter is the observable).
+        // All nodes dark: every sweep fails, climbing the ladder. Base is
+        // zero here, so the gate's deadline is always already due and
+        // every call still sweeps — the counter is the observable.
         for n in ["n1", "n2", "n3"] {
             transport.partition(n, true);
         }
         for _ in 0..3 {
             client.refresh();
         }
-        assert_eq!(client.core.refresh_backoff.lock().unwrap().failures(), 3);
-        // One answered sweep resets the ladder.
+        assert_eq!(client.core.refresh_gate.lock().unwrap().failures(), 3);
+        // One answered sweep resets the ladder and disarms the gate.
         transport.partition("n2", false);
         client.refresh();
-        assert_eq!(client.core.refresh_backoff.lock().unwrap().failures(), 0);
+        assert_eq!(client.core.refresh_gate.lock().unwrap().failures(), 0);
+        assert!(client.core.refresh_gate.lock().unwrap().not_before.is_none());
     }
 
     fn poll_until_nonempty(consumer: &ClusterConsumer) -> PolledBatch {

@@ -182,8 +182,18 @@ pub enum Frame {
     /// Primary → follower: append this acked run at `base_offset`.
     /// The follower applies idempotently against its local log end
     /// (duplicates skip, gaps refuse) and answers [`Frame::ReplicaAck`]
-    /// with its replicated high-watermark.
-    Replicate { topic: String, partition: u32, epoch: u64, base_offset: u64, msgs: Vec<Message> },
+    /// with its replicated high-watermark. `partitions` carries the
+    /// topic's cluster-wide partition count so a follower that has never
+    /// heard of the topic (restarted empty, missed the client's
+    /// create broadcast) can create it from the stream itself.
+    Replicate {
+        topic: String,
+        partition: u32,
+        partitions: u32,
+        epoch: u64,
+        base_offset: u64,
+        msgs: Vec<Message>,
+    },
     /// Follower → primary catch-up: stream the partition's offsets from
     /// `from` (the follower's local end), at most `max` messages. `node`
     /// identifies the puller so the primary can clear its lag mark once
@@ -192,6 +202,11 @@ pub enum Frame {
     /// Probe a primary's per-follower replication health (answered by
     /// [`Frame::ReplicaLagIs`]).
     ReplicaLag,
+    /// Ask a node which topics it holds (answered by [`Frame::TopicsAre`]).
+    /// Followers use this during catch-up to learn topics they missed the
+    /// creation of, so a wiped node rebuilds its replica set without any
+    /// client re-broadcasting creates.
+    ListTopics,
     // ---- broker → client responses
     Ok,
     Placements { placements: Vec<(u32, u64)> },
@@ -216,6 +231,9 @@ pub enum Frame {
     /// Per-follower replication health: `(node, messages behind)` pairs,
     /// sorted by node. `behind == 0` means in sync.
     ReplicaLagIs { followers: Vec<(String, u64)> },
+    /// The topics a node holds: `(name, partition count)` pairs, sorted
+    /// by name (the broker's own ordering).
+    TopicsAre { topics: Vec<(String, u32)> },
     // ---- membership gossip (node ↔ node, usually one-way casts)
     Join { node: String, incarnation: u64 },
     LeaveNode { node: String },
@@ -238,6 +256,7 @@ const K_GET_CLUSTER_MAP: u8 = 13;
 const K_REPLICATE: u8 = 14;
 const K_FETCH_REPLICA: u8 = 15;
 const K_REPLICA_LAG: u8 = 16;
+const K_LIST_TOPICS: u8 = 17;
 const K_OK: u8 = 32;
 const K_PLACEMENTS: u8 = 33;
 const K_SUBSCRIBED: u8 = 34;
@@ -251,6 +270,7 @@ const K_CLUSTER_MAP_IS: u8 = 41;
 const K_REPLICA_ACK: u8 = 42;
 const K_REPLICA_BATCH: u8 = 43;
 const K_REPLICA_LAG_IS: u8 = 44;
+const K_TOPICS_ARE: u8 = 45;
 const K_JOIN: u8 = 64;
 const K_LEAVE_NODE: u8 = 65;
 const K_HEARTBEAT: u8 = 66;
@@ -408,6 +428,7 @@ impl Frame {
             Frame::Replicate { .. } => K_REPLICATE,
             Frame::FetchReplica { .. } => K_FETCH_REPLICA,
             Frame::ReplicaLag => K_REPLICA_LAG,
+            Frame::ListTopics => K_LIST_TOPICS,
             Frame::Ok => K_OK,
             Frame::Placements { .. } => K_PLACEMENTS,
             Frame::Subscribed { .. } => K_SUBSCRIBED,
@@ -421,6 +442,7 @@ impl Frame {
             Frame::ReplicaAck { .. } => K_REPLICA_ACK,
             Frame::ReplicaBatch { .. } => K_REPLICA_BATCH,
             Frame::ReplicaLagIs { .. } => K_REPLICA_LAG_IS,
+            Frame::TopicsAre { .. } => K_TOPICS_ARE,
             Frame::Join { .. } => K_JOIN,
             Frame::LeaveNode { .. } => K_LEAVE_NODE,
             Frame::Heartbeat { .. } => K_HEARTBEAT,
@@ -446,6 +468,7 @@ impl Frame {
             Frame::Replicate { .. } => "replicate",
             Frame::FetchReplica { .. } => "fetch-replica",
             Frame::ReplicaLag => "replica-lag",
+            Frame::ListTopics => "list-topics",
             Frame::Ok => "ok",
             Frame::Placements { .. } => "placements",
             Frame::Subscribed { .. } => "subscribed",
@@ -459,6 +482,7 @@ impl Frame {
             Frame::ReplicaAck { .. } => "replica-ack",
             Frame::ReplicaBatch { .. } => "replica-batch",
             Frame::ReplicaLagIs { .. } => "replica-lag-is",
+            Frame::TopicsAre { .. } => "topics-are",
             Frame::Join { .. } => "join",
             Frame::LeaveNode { .. } => "leave-node",
             Frame::Heartbeat { .. } => "heartbeat",
@@ -514,7 +538,11 @@ impl Frame {
                 put_str(b, topic);
                 put_str(b, group);
             }
-            Frame::TotalLag | Frame::Ok | Frame::GetClusterMap | Frame::ReplicaLag => {}
+            Frame::TotalLag
+            | Frame::Ok
+            | Frame::GetClusterMap
+            | Frame::ReplicaLag
+            | Frame::ListTopics => {}
             Frame::PartitionCount { topic } => put_str(b, topic),
             Frame::PublishTo { topic, partition, epoch, msgs } => {
                 put_str(b, topic);
@@ -525,9 +553,10 @@ impl Frame {
                     put_msg(b, m);
                 }
             }
-            Frame::Replicate { topic, partition, epoch, base_offset, msgs } => {
+            Frame::Replicate { topic, partition, partitions, epoch, base_offset, msgs } => {
                 put_str(b, topic);
                 put_u32(b, *partition);
+                put_u32(b, *partitions);
                 put_u64(b, *epoch);
                 put_u64(b, *base_offset);
                 put_u32(b, msgs.len() as u32);
@@ -556,6 +585,13 @@ impl Frame {
                 for (node, behind) in followers {
                     put_str(b, node);
                     put_u64(b, *behind);
+                }
+            }
+            Frame::TopicsAre { topics } => {
+                put_u32(b, topics.len() as u32);
+                for (name, partitions) in topics {
+                    put_str(b, name);
+                    put_u32(b, *partitions);
                 }
             }
             Frame::Placements { placements } => put_pairs(b, placements),
@@ -655,6 +691,7 @@ impl Frame {
             K_REPLICATE => {
                 let topic = rd.string()?;
                 let partition = rd.u32()?;
+                let partitions = rd.u32()?;
                 let epoch = rd.u64()?;
                 let base_offset = rd.u64()?;
                 let n = rd.count(13)?; // tag + produced_at + payload len
@@ -662,7 +699,7 @@ impl Frame {
                 for _ in 0..n {
                     msgs.push(rd.msg()?);
                 }
-                Frame::Replicate { topic, partition, epoch, base_offset, msgs }
+                Frame::Replicate { topic, partition, partitions, epoch, base_offset, msgs }
             }
             K_FETCH_REPLICA => Frame::FetchReplica {
                 topic: rd.string()?,
@@ -673,6 +710,7 @@ impl Frame {
                 max: rd.u32()?,
             },
             K_REPLICA_LAG => Frame::ReplicaLag,
+            K_LIST_TOPICS => Frame::ListTopics,
             K_OK => Frame::Ok,
             K_PLACEMENTS => Frame::Placements { placements: rd.pairs()? },
             K_SUBSCRIBED => Frame::Subscribed { session: rd.u64()? },
@@ -745,6 +783,16 @@ impl Frame {
                     followers.push((node, behind));
                 }
                 Frame::ReplicaLagIs { followers }
+            }
+            K_TOPICS_ARE => {
+                let n = rd.count(6)?; // u16 length prefix + u32 count
+                let mut topics = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = rd.string()?;
+                    let partitions = rd.u32()?;
+                    topics.push((name, partitions));
+                }
+                Frame::TopicsAre { topics }
             }
             K_JOIN => Frame::Join { node: rd.string()?, incarnation: rd.u64()? },
             K_LEAVE_NODE => Frame::LeaveNode { node: rd.string()? },
@@ -946,6 +994,7 @@ mod tests {
             Frame::Replicate {
                 topic: "t".into(),
                 partition: 3,
+                partitions: 8,
                 epoch: 4,
                 base_offset: 17,
                 msgs: vec![Message::new(Some(2), vec![7, 8], 9), Message::new(None, vec![], 0)],
@@ -953,6 +1002,7 @@ mod tests {
             Frame::Replicate {
                 topic: "t".into(),
                 partition: 0,
+                partitions: 1,
                 epoch: 1,
                 base_offset: 0,
                 msgs: vec![],
@@ -976,6 +1026,9 @@ mod tests {
                 followers: vec![("n2".into(), 0), ("n3".into(), 12)],
             },
             Frame::ReplicaLagIs { followers: vec![] },
+            Frame::ListTopics,
+            Frame::TopicsAre { topics: vec![("t".into(), 4), ("u".into(), 1)] },
+            Frame::TopicsAre { topics: vec![] },
             Frame::Join { node: "w1".into(), incarnation: 2 },
             Frame::LeaveNode { node: "w1".into() },
             Frame::Heartbeat { node: "w1".into(), seq: 77 },

@@ -30,15 +30,23 @@
 //! every accepted [`Frame::PublishTo`] batch to the follower replicas the
 //! placement map derives ([`PlacementMap::replicas_of`]). Forwarding is
 //! best-effort by design — an unreachable or short-acking follower is
-//! marked *lagging* and skipped on later publishes, so a dead follower
-//! degrades the partition to primary-only rather than stalling
-//! publishers. A lagging or freshly restarted follower heals itself by
-//! pulling missing offsets with [`Frame::FetchReplica`]
-//! ([`BrokerService::catch_up_replicas`]); the empty parity pull is what
-//! clears its lagging mark on the primary. Follower-side applies are
-//! idempotent on the batch's base offset, so retries, the sim's
-//! duplicate fault, and overlapping catch-up pulls never fork a replica
-//! log.
+//! marked *lagging* (per partition stream) and skipped on later
+//! publishes, and a failed dial or call marks the whole node *down* so
+//! a dead follower costs one failed exchange rather than a dial timeout
+//! per partition — the partition degrades to primary-only instead of
+//! stalling publishers. A lagging or freshly restarted follower heals
+//! itself by pulling missing offsets with [`Frame::FetchReplica`]
+//! ([`BrokerService::catch_up_replicas`]); every pull updates the
+//! primary's per-stream lag count and the empty parity pull clears the
+//! lagging mark. A follower that restarted *empty* first learns which
+//! topics exist — from the [`Frame::Replicate`] stream itself (the frame
+//! carries the topic's partition count) or by asking peers with
+//! [`Frame::ListTopics`] at the top of each catch-up tick — so a wiped
+//! node rebuilds its replica set with no client intervention.
+//! Follower-side applies are idempotent on the batch's base offset and
+//! run the check and the append under the partition log's writer lock
+//! ([`Topic::publish_to_at`]), so retries, the sim's duplicate fault,
+//! and a live forward racing a catch-up pull never fork a replica log.
 
 use super::codec::FrameBuf;
 use super::frame::{batch_to_frame, encode_batch_ref, ErrorCode, Frame, MAX_FRAME};
@@ -46,7 +54,7 @@ use super::{Connection, Service, Transport};
 use crate::cluster::{ClusterView, PlacementMap, DEFAULT_REPLICATION};
 use crate::messaging::broker::{wire_cost, Broker, Consumer, Topic};
 use crate::messaging::Message;
-use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -105,15 +113,27 @@ pub struct BrokerService {
     replicator: Option<Arc<Replicator>>,
 }
 
-/// Per-follower replication state held by a partition primary.
+/// Per-follower replication state held by a partition primary. Every
+/// check-and-update takes the follower book's lock exactly once, so a
+/// concurrent catch-up pull can never interleave between a skip decision
+/// and the count it implies.
 #[derive(Default)]
 struct FollowerLag {
-    /// Partitions whose replication stream to this follower has a gap
-    /// (a forward failed or was skipped); the primary stops forwarding
-    /// them until a catch-up pull reaches parity.
-    dirty: BTreeSet<(String, u32)>,
-    /// How many forwarded messages this follower is known to be missing.
-    behind: u64,
+    /// The node itself is unreachable (a forward's dial or call failed):
+    /// later forwards skip the wire entirely until a catch-up pull
+    /// proves it back. This bounds a dead follower's cost to *one*
+    /// failed exchange, not one per owned partition.
+    down: bool,
+    /// Messages known missing, per partition stream with a gap. The
+    /// primary stops forwarding a stream while it has an entry; catch-up
+    /// pulls shrink the count and the parity pull removes it.
+    missing: BTreeMap<(String, u32), u64>,
+}
+
+impl FollowerLag {
+    fn behind(&self) -> u64 {
+        self.missing.values().sum()
+    }
 }
 
 /// Streams acked appends from a partition's primary to its follower
@@ -149,7 +169,7 @@ impl Replicator {
 
     /// Known per-follower lag, `(node, messages behind)`, sorted by node.
     pub fn lag(&self) -> Vec<(String, u64)> {
-        self.followers.lock().unwrap().iter().map(|(n, f)| (n.clone(), f.behind)).collect()
+        self.followers.lock().unwrap().iter().map(|(n, f)| (n.clone(), f.behind())).collect()
     }
 
     fn conn(&self, node: &str, addr: &str) -> Option<Arc<dyn Connection>> {
@@ -161,32 +181,45 @@ impl Replicator {
         Some(c)
     }
 
-    fn is_dirty(&self, node: &str, topic: &str, partition: u32) -> bool {
-        self.followers
-            .lock()
-            .unwrap()
-            .get(node)
-            .map(|f| f.dirty.contains(&(topic.to_string(), partition)))
-            .unwrap_or(false)
+    /// One locked check-and-count before touching the wire: a down node
+    /// or a gapped stream is skipped, and the skipped run is added to
+    /// the stream's missing count in the same lock acquisition — a
+    /// concurrent pull can't slip between the check and the count.
+    fn skip_or_mark(&self, node: &str, topic: &str, partition: u32, n: u64) -> bool {
+        let mut followers = self.followers.lock().unwrap();
+        let Some(f) = followers.get_mut(node) else { return false };
+        if f.down || f.missing.contains_key(&(topic.to_string(), partition)) {
+            *f.missing.entry((topic.to_string(), partition)).or_insert(0) += n;
+            return true;
+        }
+        false
     }
 
-    fn mark_lagging(&self, node: &str, topic: &str, partition: u32, missed: u64) {
+    /// A forward to `node` failed or came back short: count `missed`
+    /// messages against this stream (forwarding pauses until catch-up).
+    /// `down` additionally marks the *node* unreachable, so forwards for
+    /// every other stream skip the wire too.
+    fn mark_lagging(&self, node: &str, topic: &str, partition: u32, missed: u64, down: bool) {
         let mut followers = self.followers.lock().unwrap();
         let f = followers.entry(node.to_string()).or_default();
-        f.dirty.insert((topic.to_string(), partition));
-        f.behind = f.behind.saturating_add(missed);
+        f.down |= down;
+        *f.missing.entry((topic.to_string(), partition)).or_insert(0) += missed;
     }
 
-    /// A catch-up pull from `node` reached parity on this partition:
-    /// forwarding resumes. The `behind` counter resets once no partition
-    /// stream to the follower has a gap.
-    fn clear_lag(&self, node: &str, topic: &str, partition: u32) {
+    /// A catch-up pull from `node` put its log end for this stream
+    /// `behind` messages short of ours. Parity (`behind == 0`) removes
+    /// the mark and forwarding resumes; partial progress re-points the
+    /// count at what is *actually* still missing, so a half-caught-up
+    /// follower never keeps reporting its full historical backlog. Any
+    /// pull also proves the node reachable again.
+    fn record_progress(&self, node: &str, topic: &str, partition: u32, behind: u64) {
         let mut followers = self.followers.lock().unwrap();
-        if let Some(f) = followers.get_mut(node) {
-            f.dirty.remove(&(topic.to_string(), partition));
-            if f.dirty.is_empty() {
-                f.behind = 0;
-            }
+        let f = followers.entry(node.to_string()).or_default();
+        f.down = false;
+        if behind == 0 {
+            f.missing.remove(&(topic.to_string(), partition));
+        } else {
+            f.missing.insert((topic.to_string(), partition), behind);
         }
     }
 
@@ -206,8 +239,19 @@ impl Replicator {
     /// partition. Best effort: a follower that is unreachable, rejects,
     /// or acks a high-watermark short of `base + n` is marked lagging
     /// and skipped until it catches up — the publisher's ack degrades to
-    /// primary-durable rather than stalling on a dead follower.
-    fn forward(&self, view: &ClusterView, topic: &str, partition: u32, base: u64, msgs: Vec<Message>) {
+    /// primary-durable rather than stalling on a dead follower. A failed
+    /// dial or call marks the whole *node* down, so a freshly dead
+    /// follower costs one failed exchange, not a dial timeout per owned
+    /// partition per publish.
+    fn forward(
+        &self,
+        view: &ClusterView,
+        topic: &str,
+        partition: u32,
+        partitions: u32,
+        base: u64,
+        msgs: Vec<Message>,
+    ) {
         let map = view.map();
         let epoch = map.epoch();
         let n = msgs.len() as u64;
@@ -216,24 +260,31 @@ impl Replicator {
             if node.as_str() == view.node() {
                 continue;
             }
-            if self.is_dirty(node, topic, partition) {
-                self.mark_lagging(node, topic, partition, n);
+            if self.skip_or_mark(node, topic, partition, n) {
                 continue;
             }
             let Some(conn) = self.conn(node, addr) else {
-                self.mark_lagging(node, topic, partition, n);
+                self.mark_lagging(node, topic, partition, n, true);
                 continue;
             };
             let req = Frame::Replicate {
                 topic: topic.to_string(),
                 partition,
+                partitions,
                 epoch,
                 base_offset: base,
                 msgs: msgs.clone(),
             };
             match conn.call(&req) {
                 Ok(Frame::ReplicaAck { high_watermark }) if high_watermark >= base + n => {}
-                _ => self.mark_lagging(node, topic, partition, n),
+                Ok(Frame::ReplicaAck { high_watermark }) => {
+                    // Alive but behind (it refused a gap): count exactly
+                    // what its log end says it is missing.
+                    let missed = (base + n).saturating_sub(high_watermark);
+                    self.mark_lagging(node, topic, partition, missed, false);
+                }
+                Ok(_) => self.mark_lagging(node, topic, partition, n, false),
+                Err(_) => self.mark_lagging(node, topic, partition, n, true),
             }
         }
     }
@@ -250,15 +301,13 @@ impl Replicator {
 /// - `base > end` — a gap: refuse the batch. The short high-watermark in
 ///   the ack tells the primary this follower is behind; catch-up fills
 ///   the hole in order.
+///
+/// The check and the append run under the partition log's writer lock
+/// ([`Topic::publish_to_at`]), so a Replicate frame and a concurrent
+/// catch-up pull applying to the same partition serialize instead of
+/// both passing the duplicate check and double-appending.
 fn apply_replica(t: &Topic, partition: usize, base: u64, msgs: Vec<Message>) -> u64 {
-    let end = t.end_offsets()[partition];
-    let n = msgs.len() as u64;
-    if base > end || base + n <= end {
-        return end;
-    }
-    let fresh: Vec<Message> = msgs.into_iter().skip((end - base) as usize).collect();
-    let appended = fresh.len() as u64;
-    t.publish_to(partition, fresh) + appended
+    t.publish_to_at(partition, base, msgs)
 }
 
 fn err(code: ErrorCode, message: String) -> Frame {
@@ -406,6 +455,23 @@ impl BrokerService {
         let map = view.map();
         let epoch = map.epoch();
         let me = view.node().to_string();
+        // Topic discovery first: a node that restarted empty (or joined
+        // after the topics existed) has no local record of what it
+        // should be replicating, and the pull loop below only walks the
+        // local broker. Ask the other mapped nodes what they hold and
+        // create whatever is missing, so this tick's pulls can reach it.
+        for (node, addr) in map.nodes() {
+            if node.as_str() == me {
+                continue;
+            }
+            let Some(conn) = rep.conn(node, addr) else { continue };
+            let Ok(Frame::TopicsAre { topics }) = conn.call(&Frame::ListTopics) else { continue };
+            for (name, partitions) in topics {
+                if partitions > 0 && self.broker.topic(&name).is_none() {
+                    let _ = self.broker.try_create_topic(&name, partitions as usize);
+                }
+            }
+        }
         let mut applied = 0usize;
         for name in self.broker.topic_names() {
             let Some(t) = self.broker.topic(&name) else { continue };
@@ -603,7 +669,8 @@ impl Service for BrokerService {
                         // and forwarding never fails the publish.
                         let copies = msgs.clone();
                         let base = t.publish_to(partition as usize, msgs);
-                        rep.forward(view, &topic, partition, base, copies);
+                        let partitions = t.partition_count() as u32;
+                        rep.forward(view, &topic, partition, partitions, base, copies);
                         base
                     }
                     _ => t.publish_to(partition as usize, msgs),
@@ -612,7 +679,7 @@ impl Service for BrokerService {
                     placements: (0..count).map(|i| (partition, base + i)).collect(),
                 }
             }
-            Frame::Replicate { topic, partition, epoch, base_offset, msgs } => {
+            Frame::Replicate { topic, partition, partitions, epoch, base_offset, msgs } => {
                 let Some(view) = &self.view else {
                     return err(ErrorCode::NotReplica, "not a clustered broker".into());
                 };
@@ -628,9 +695,33 @@ impl Service for BrokerService {
                     Some(rank) if rank > 0 => {}
                     rank => return rank_err(rank),
                 }
-                let Some(t) = self.broker.topic(&topic) else {
-                    return err(ErrorCode::UnknownTopic, format!("unknown topic '{topic}'"));
+                // An unknown topic is created from the frame's own
+                // partition count (after the rank check, so only a real
+                // primary can create here): a follower that restarted
+                // empty learns topics from the replication stream itself.
+                let t = match self.broker.topic(&topic) {
+                    Some(t) => t,
+                    None => {
+                        if partitions == 0 || partition >= partitions {
+                            return err(
+                                ErrorCode::BadRequest,
+                                "replicate with a bad partition count".into(),
+                            );
+                        }
+                        match self.broker.try_create_topic(&topic, partitions as usize) {
+                            Ok(t) => t,
+                            Err(e) => {
+                                return err(ErrorCode::BadRequest, format!("create '{topic}': {e}"))
+                            }
+                        }
+                    }
                 };
+                if t.partition_count() != partitions as usize {
+                    return err(
+                        ErrorCode::BadRequest,
+                        format!("topic '{topic}' exists with {} partitions", t.partition_count()),
+                    );
+                }
                 if partition as usize >= t.partition_count() {
                     return err(
                         ErrorCode::BadRequest,
@@ -668,12 +759,14 @@ impl Service for BrokerService {
                     rank => return rank_err(rank),
                 }
                 let end = t.end_offsets()[partition as usize];
+                // Every pull reports how far behind the puller really is:
+                // parity clears the stream's lagging mark (forwarding
+                // resumes), partial progress shrinks the reported lag,
+                // and any pull at all proves the node reachable again.
+                if let Some(rep) = &self.replicator {
+                    rep.record_progress(&node, &topic, partition, end.saturating_sub(from));
+                }
                 if from >= end {
-                    // Parity: the puller holds everything we do — its
-                    // replication stream is clean again.
-                    if let Some(rep) = &self.replicator {
-                        rep.clear_lag(&node, &topic, partition);
-                    }
                     return Frame::ReplicaBatch { base_offset: from, msgs: Vec::new() };
                 }
                 // Cap by count *and* encoded bytes (same margin as the
@@ -696,6 +789,17 @@ impl Service for BrokerService {
                 }
             }
             Frame::ReplicaLag => Frame::ReplicaLagIs { followers: self.replica_lag() },
+            Frame::ListTopics => Frame::TopicsAre {
+                topics: self
+                    .broker
+                    .topic_names()
+                    .into_iter()
+                    .filter_map(|name| {
+                        let partitions = self.broker.topic(&name)?.partition_count() as u32;
+                        Some((name, partitions))
+                    })
+                    .collect(),
+            },
             Frame::GetClusterMap => match &self.view {
                 None => err(ErrorCode::BadRequest, "not a clustered broker".into()),
                 Some(view) => {
@@ -1239,6 +1343,7 @@ mod tests {
         let batch = |b: u64, n: u64| Frame::Replicate {
             topic: "t".into(),
             partition: p,
+            partitions: 16,
             epoch: 1,
             base_offset: b,
             msgs: (0..n).map(|i| Message::new(None, vec![(b + i) as u8], 0)).collect(),
@@ -1257,6 +1362,7 @@ mod tests {
             svc2.handle(Frame::Replicate {
                 topic: "t".into(),
                 partition: p,
+                partitions: 16,
                 epoch: 9,
                 base_offset: 5,
                 msgs: vec![]
@@ -1269,6 +1375,7 @@ mod tests {
             svc2.handle(Frame::Replicate {
                 topic: "t".into(),
                 partition: owned,
+                partitions: 16,
                 epoch: 1,
                 base_offset: 0,
                 msgs: vec![]
@@ -1352,6 +1459,151 @@ mod tests {
         assert!(view1.adopt(map.advanced(vec![("n1".into(), "sim://n1".into())])));
         assert_eq!(svc1.reap_idle(Duration::from_secs(30)), 1);
         assert!(svc1.replica_lag().is_empty());
+    }
+
+    #[test]
+    fn replicate_learns_unknown_topics_from_the_stream() {
+        let (_transport, svc1, svc2, view1) = replicated_pair(16);
+        // A topic only the primary knows (the follower missed the
+        // client's create broadcast).
+        assert_eq!(
+            svc1.handle(Frame::CreateTopic { topic: "u".into(), partitions: 16 }),
+            Frame::Ok
+        );
+        let owned = view1.map().owned_partitions("u", 16, "n1");
+        assert!(!owned.is_empty(), "HRW gives n1 some of 16 partitions");
+        let p = owned[0] as u32;
+        assert!(svc2.broker.topic("u").is_none());
+        assert!(matches!(
+            svc1.handle(Frame::PublishTo {
+                topic: "u".into(),
+                partition: p,
+                epoch: 1,
+                msgs: vec![Message::new(None, vec![7], 0)]
+            }),
+            Frame::Placements { .. }
+        ));
+        // The forwarded Replicate carried the partition count: the
+        // follower created the topic and applied the batch in one step.
+        let t2 = svc2.broker.topic("u").expect("follower learned the topic from the stream");
+        assert_eq!(t2.partition_count(), 16);
+        assert_eq!(t2.end_offsets()[p as usize], 1);
+        // A partition-count mismatch is refused, never silently applied.
+        assert!(matches!(
+            svc2.handle(Frame::Replicate {
+                topic: "u".into(),
+                partition: p,
+                partitions: 9,
+                epoch: 1,
+                base_offset: 1,
+                msgs: vec![Message::new(None, vec![8], 0)]
+            }),
+            Frame::Error { code: ErrorCode::BadRequest, .. }
+        ));
+    }
+
+    #[test]
+    fn catch_up_discovers_topics_it_never_heard_of() {
+        let (transport, svc1, svc2, view1) = replicated_pair(16);
+        transport.partition("sim://n2", true);
+        assert_eq!(
+            svc1.handle(Frame::CreateTopic { topic: "v".into(), partitions: 16 }),
+            Frame::Ok
+        );
+        let owned = view1.map().owned_partitions("v", 16, "n1");
+        assert!(!owned.is_empty(), "HRW gives n1 some of 16 partitions");
+        let p = owned[0] as u32;
+        // Published while the follower was dark: the forward fails and
+        // the follower ends up with no record of "v" at all.
+        assert!(matches!(
+            svc1.handle(Frame::PublishTo {
+                topic: "v".into(),
+                partition: p,
+                epoch: 1,
+                msgs: vec![Message::new(None, vec![1], 0), Message::new(None, vec![2], 0)]
+            }),
+            Frame::Placements { .. }
+        ));
+        assert!(svc2.broker.topic("v").is_none());
+        transport.partition("sim://n2", false);
+        // Catch-up asks peers for their topic lists before pulling, so
+        // the wiped follower reaches parity with no client re-create.
+        assert_eq!(svc2.catch_up_replicas(1024), 2);
+        assert_eq!(svc2.broker.topic("v").unwrap().end_offsets()[p as usize], 2);
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 0)]);
+    }
+
+    #[test]
+    fn down_follower_skips_the_wire_until_a_pull_proves_it_back() {
+        let (transport, svc1, svc2, view1) = replicated_pair(16);
+        let owned = view1.map().owned_partitions("t", 16, "n1");
+        assert!(owned.len() >= 2, "need two owned partitions");
+        let (p1, p2) = (owned[0] as u32, owned[1] as u32);
+        let publish = |p: u32, b: u8| {
+            assert!(matches!(
+                svc1.handle(Frame::PublishTo {
+                    topic: "t".into(),
+                    partition: p,
+                    epoch: 1,
+                    msgs: vec![Message::new(None, vec![b], 0)]
+                }),
+                Frame::Placements { .. }
+            ));
+        };
+        // One failed exchange marks the whole *node* down...
+        transport.partition("sim://n2", true);
+        publish(p1, 1);
+        // ...so even with the link healed, a forward on a different
+        // partition skips the wire outright instead of dialing again.
+        transport.partition("sim://n2", false);
+        publish(p2, 2);
+        assert_eq!(
+            svc2.broker.topic("t").unwrap().end_offsets()[p2 as usize],
+            0,
+            "down node is skipped without touching the wire"
+        );
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 2)]);
+        // A catch-up pull proves the node reachable: forwarding resumes.
+        assert_eq!(svc2.catch_up_replicas(1024), 2);
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 0)]);
+        publish(p2, 9);
+        assert_eq!(svc2.broker.topic("t").unwrap().end_offsets()[p2 as usize], 2);
+    }
+
+    #[test]
+    fn partial_catch_up_shrinks_the_reported_lag() {
+        let (transport, svc1, _svc2, view1) = replicated_pair(16);
+        let p = view1.map().owned_partitions("t", 16, "n1")[0] as u32;
+        transport.partition("sim://n2", true);
+        for b in 0..5u8 {
+            assert!(matches!(
+                svc1.handle(Frame::PublishTo {
+                    topic: "t".into(),
+                    partition: p,
+                    epoch: 1,
+                    msgs: vec![Message::new(None, vec![b], 0)]
+                }),
+                Frame::Placements { .. }
+            ));
+        }
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 5)]);
+        // Each pull re-points the count at what is *actually* still
+        // missing — a half-caught-up follower never keeps reporting its
+        // full historical backlog.
+        let fetch = |from: u64| {
+            svc1.handle(Frame::FetchReplica {
+                topic: "t".into(),
+                partition: p,
+                epoch: 1,
+                node: "n2".into(),
+                from,
+                max: 2,
+            })
+        };
+        assert!(matches!(fetch(2), Frame::ReplicaBatch { .. }));
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 3)]);
+        assert!(matches!(fetch(5), Frame::ReplicaBatch { .. }));
+        assert_eq!(svc1.replica_lag(), vec![("n2".into(), 0)]);
     }
 
     #[test]

@@ -52,7 +52,7 @@ fn arb_nodes(g: &mut Gen) -> Vec<(String, String)> {
 
 /// One random frame, covering every variant.
 fn arb_frame(g: &mut Gen) -> Frame {
-    match g.usize(0, 32) {
+    match g.usize(0, 34) {
         0 => Frame::CreateTopic { topic: arb_string(g, 12), partitions: g.u64() as u32 % 16 + 1 },
         1 => Frame::PublishBatch { topic: arb_string(g, 12), msgs: g.vec(6, arb_message) },
         2 => Frame::Subscribe { topic: arb_string(g, 12), group: arb_string(g, 12) },
@@ -101,6 +101,7 @@ fn arb_frame(g: &mut Gen) -> Frame {
         26 => Frame::Replicate {
             topic: arb_string(g, 12),
             partition: g.u64() as u32 % 64,
+            partitions: g.u64() as u32 % 64 + 1,
             epoch: g.u64() % 1000,
             base_offset: g.u64() % 100_000,
             msgs: g.vec(6, arb_message),
@@ -119,8 +120,12 @@ fn arb_frame(g: &mut Gen) -> Frame {
             base_offset: g.u64() % 100_000,
             msgs: g.vec(6, arb_message),
         },
-        _ => Frame::ReplicaLagIs {
+        31 => Frame::ReplicaLagIs {
             followers: g.vec(4, |g| (arb_string(g, 16), g.u64() % 100_000)),
+        },
+        32 => Frame::ListTopics,
+        _ => Frame::TopicsAre {
+            topics: g.vec(4, |g| (arb_string(g, 12), g.u64() as u32 % 64)),
         },
     }
 }

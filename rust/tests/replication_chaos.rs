@@ -640,9 +640,9 @@ fn rolling_restart_catchup_run(seed: u64) -> RunReport {
 
     net.sched.run_until(Duration::from_secs(22));
 
-    // Catch-up fixpoint: make sure the last empty revival has the topic,
-    // then let every seat pull until nothing moves.
-    let _ = net.client.try_create_topic("t", PARTITIONS);
+    // Catch-up fixpoint: let every seat pull until nothing moves. No
+    // topic re-creation here — a revived-empty seat must learn "t" on
+    // its own, from Replicate frames or the ListTopics discovery sweep.
     for round in 0..8 {
         let moved: usize = net
             .seats
