@@ -6,7 +6,7 @@
 //! ```
 
 use reactive_liquid::actor::system::ActorSystem;
-use reactive_liquid::config::{ElasticConfig, RouterPolicy};
+use reactive_liquid::config::{ElasticConfig, PolicyKind, RouterPolicy};
 use reactive_liquid::messaging::{Broker, Producer};
 use reactive_liquid::metrics::PipelineMetrics;
 use reactive_liquid::processing::job::Job;
@@ -41,6 +41,7 @@ fn main() {
         low_watermark: 4,
         check_interval: Duration::from_millis(100),
         cooldown: Duration::from_millis(200),
+        policy: PolicyKind::Threshold,
     };
     let rj = ReactiveJob::start(
         &system, &client, job, &vt, None, &supervisor, elastic,

@@ -1,0 +1,90 @@
+//! Policy race — the Fig. 8–11-style head-to-head of the elastic
+//! policies (threshold / PID / predictive) across every workload shape,
+//! on the deterministic virtual-time sim.
+//!
+//! Each (policy × shape) cell runs the same seeded scenario the chaos
+//! matrix uses and reports virtual-time throughput, end-to-end latency
+//! quantiles, SLO attainment, and the scaling activity (peak workers,
+//! action count). Because every cell shares the seed and the fluid
+//! workload, the offered load is identical across policies — the numbers
+//! compare *policies*, nothing else.
+//!
+//! `cargo bench --bench policy_race` — RL_BENCH_SMOKE=1 shrinks the
+//! scenario windows for CI. Emits BENCH_policy_race.json for
+//! `bench_check`.
+
+use reactive_liquid::sim::chaos::policy_race_matrix;
+use reactive_liquid::util::io::{write_bench_json, Json};
+use std::time::Instant;
+
+fn main() {
+    let smoke = std::env::var("RL_BENCH_SMOKE").is_ok();
+    let mut scenarios = policy_race_matrix();
+    if smoke {
+        for sc in &mut scenarios {
+            sc.duration /= 5;
+            sc.drain /= 5;
+        }
+    }
+
+    println!("== Policy race: elastic policies × workload shapes ==");
+    println!(
+        "{:<12} {:<10} {:>10} {:>8} {:>8} {:>6} {:>5} {:>7}",
+        "policy", "shape", "tput/s", "p50ms", "p99ms", "slo", "peak", "scales"
+    );
+
+    let mut points = Vec::new();
+    let mut violations = 0usize;
+    for sc in &scenarios {
+        let wall = Instant::now();
+        let r = sc.run();
+        let wall_ms = wall.elapsed().as_millis() as f64;
+        let virtual_secs = (sc.duration + sc.drain).as_secs_f64();
+        let tput = r.done as f64 / virtual_secs;
+        let shape = sc.workload.label();
+        let att = r.slo_attainment.unwrap_or(1.0);
+        println!(
+            "{:<12} {:<10} {:>10.1} {:>8} {:>8} {:>6.3} {:>5} {:>7}",
+            r.policy,
+            shape,
+            tput,
+            r.p50_latency_ms.unwrap_or(0),
+            r.p99_latency_ms.unwrap_or(0),
+            att,
+            r.peak_workers,
+            r.scale_changes,
+        );
+        if !r.violations.is_empty() {
+            violations += r.violations.len();
+            println!("  !! probe violations: {:?}", r.violations);
+        }
+        points.push(Json::obj(vec![
+            ("name", Json::str(format!("{}/{}", r.policy, shape))),
+            ("policy", Json::str(r.policy.to_string())),
+            ("shape", Json::str(shape.to_string())),
+            ("throughput_msgs_s", Json::num(tput)),
+            ("done", Json::num(r.done as f64)),
+            ("offered", Json::num(r.offered as f64)),
+            ("p50_latency_ms", Json::num(r.p50_latency_ms.unwrap_or(0) as f64)),
+            ("p99_latency_ms", Json::num(r.p99_latency_ms.unwrap_or(0) as f64)),
+            ("slo_attainment", Json::num(att)),
+            ("peak_workers", Json::num(r.peak_workers as f64)),
+            ("scale_changes", Json::num(r.scale_changes as f64)),
+            ("wall_ms", Json::num(wall_ms)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("policy_race")),
+        ("smoke", Json::num(if smoke { 1.0 } else { 0.0 })),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_bench_json("policy_race", &json).expect("write BENCH_policy_race.json");
+    println!("wrote {}", path.display());
+
+    // At full scale the race probes are part of the contract; smoke-scale
+    // windows are too short for the SLO margins, so only warn there.
+    if violations > 0 && !smoke {
+        panic!("{violations} probe violations in the policy race");
+    }
+}

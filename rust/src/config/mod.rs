@@ -77,6 +77,43 @@ pub enum TcmmBackend {
     Xla,
 }
 
+/// Which scaling-decision rule the elastic controller runs (the taxonomy
+/// of de Assunção et al.: threshold, PID-style, predictive). The policy
+/// implementations live in `reactive::elastic`; this enum is just the
+/// config-level name so TOML files and CLI flags can pick one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Watermark rule: proportional scale-out past the high watermark,
+    /// one-step scale-in under the low one (the original behaviour).
+    Threshold,
+    /// PID controller on the "workers needed" error with anti-windup.
+    Pid,
+    /// Extrapolates the queue-growth derivative and provisions ahead.
+    Predictive,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "threshold" => Some(PolicyKind::Threshold),
+            "pid" => Some(PolicyKind::Pid),
+            "predictive" => Some(PolicyKind::Predictive),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Threshold => "threshold",
+            PolicyKind::Pid => "pid",
+            PolicyKind::Predictive => "predictive",
+        }
+    }
+
+    pub const ALL: [PolicyKind; 3] =
+        [PolicyKind::Threshold, PolicyKind::Pid, PolicyKind::Predictive];
+}
+
 /// Elastic-worker service tuning (reactive processing layer).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ElasticConfig {
@@ -90,6 +127,8 @@ pub struct ElasticConfig {
     pub check_interval: Duration,
     /// Minimum time between scaling actions.
     pub cooldown: Duration,
+    /// Which decision rule drives scaling.
+    pub policy: PolicyKind,
 }
 
 impl Default for ElasticConfig {
@@ -101,6 +140,7 @@ impl Default for ElasticConfig {
             low_watermark: 8,
             check_interval: Duration::from_millis(100),
             cooldown: Duration::from_millis(300),
+            policy: PolicyKind::Threshold,
         }
     }
 }
@@ -329,6 +369,10 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_int("elastic", "low_watermark") {
             self.elastic.low_watermark = v as usize;
         }
+        if let Some(v) = doc.get_str("elastic", "policy") {
+            self.elastic.policy =
+                PolicyKind::parse(&v).ok_or_else(|| format!("unknown elastic policy '{v}'"))?;
+        }
         if let Some(v) = doc.get_int("workload", "taxis") {
             self.workload.taxis = v as usize;
         }
@@ -407,6 +451,20 @@ mod tests {
     fn arch_labels() {
         assert_eq!(Architecture::Liquid { tasks_per_job: 3 }.label(), "liquid-3");
         assert_eq!(Architecture::Reactive.label(), "reactive");
+    }
+
+    #[test]
+    fn elastic_policy_from_toml() {
+        assert_eq!(ExperimentConfig::default().elastic.policy, PolicyKind::Threshold);
+        let doc = toml::parse("[elastic]\npolicy = \"pid\"\n").unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.elastic.policy, PolicyKind::Pid);
+        let bad = toml::parse("[elastic]\npolicy = \"vibes\"\n").unwrap();
+        assert!(ExperimentConfig::default().apply(&bad).is_err());
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(kind.label()), Some(kind));
+        }
     }
 
     #[test]

@@ -334,7 +334,13 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, broker: SharedBrokerClient) -> 
     // count has been stable for a settle window, the pipeline is quiescent
     // and the run ends early — the configured duration stays as a hard
     // upper bound, so a stall can never make this slower than before.
-    log_info!("experiment", "running {} for {:?}", cfg.arch.label(), cfg.duration());
+    log_info!(
+        "experiment",
+        "running {} (elastic policy: {}) for {:?}",
+        cfg.arch.label(),
+        cfg.elastic.policy.label(),
+        cfg.duration()
+    );
     let deadline = std::time::Instant::now() + cfg.duration();
     let drain_mode = cfg.workload.ingest_rate == 0;
     let mut stable_checks = 0u32;

@@ -10,7 +10,7 @@
 //! - `info` — environment/report (artifacts, cores).
 
 use reactive_liquid::config::cli::Args;
-use reactive_liquid::config::{Architecture, ExperimentConfig, RouterPolicy, TcmmBackend};
+use reactive_liquid::config::{Architecture, ExperimentConfig, PolicyKind, RouterPolicy, TcmmBackend};
 use reactive_liquid::experiment::figures::{self, FigureOpts};
 use reactive_liquid::experiment::run_experiment;
 use reactive_liquid::runtime::artifacts_dir;
@@ -34,6 +34,7 @@ fn main() {
                  usage: reactive-liquid <run|figure|gen-data|info> [options]\n\n\
                  run       --config FILE | --arch reactive|liquid --tasks N --secs S\n\
                  \x20         --failure-prob P --rate R --router rr|jsq|ct --backend cpu|xla\n\
+                 \x20         --policy threshold|pid|predictive\n\
                  figure    8 | 9 | 10 | 11 | router   (writes results/*.csv)\n\
                  gen-data  --out FILE --taxis N --points N --seed S\n\
                  info      print environment report\n"
@@ -81,6 +82,15 @@ fn cmd_run(mut args: Args) -> i32 {
             Some(p) => cfg.router = p,
             None => {
                 eprintln!("unknown --router '{r}'");
+                return 2;
+            }
+        }
+    }
+    if let Some(p) = args.opt_str("policy") {
+        match PolicyKind::parse(&p) {
+            Some(k) => cfg.elastic.policy = k,
+            None => {
+                eprintln!("unknown --policy '{p}'");
                 return 2;
             }
         }

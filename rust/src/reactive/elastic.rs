@@ -1,12 +1,29 @@
-//! Elastic worker service (§3.2.2): queue-watermark autoscaling.
+//! Elastic worker service (§3.2.2): queue-watermark autoscaling behind a
+//! pluggable policy seam.
 //!
-//! The service monitors the message queues of a worker pool and changes the
-//! number of instances when load crosses the agreed upper/lower limits. It
-//! is deliberately *mechanism-agnostic*: anything that implements
-//! [`ScalableTarget`] (virtual producer pools, task pools) can be driven by
-//! an [`ElasticController`].
+//! The service monitors the message queues of a worker pool and changes
+//! the number of instances in response. It is deliberately
+//! *mechanism-agnostic*: anything that implements [`ScalableTarget`]
+//! (virtual producer pools, task pools, the sim's fluid pool) can be
+//! driven by an [`ElasticController`]. The *decision* is equally
+//! pluggable: an [`ElasticPolicy`] maps queue observations to a desired
+//! worker count, and the controller enforces the invariants every policy
+//! must respect — the `[min_workers, max_workers]` floor/ceiling clamp
+//! and the action cooldown. Three policies implement the taxonomy of
+//! de Assunção et al. (PAPERS.md, §elasticity):
+//!
+//! - [`ThresholdPolicy`] — the original watermark rule ([`decide`]):
+//!   proportional scale-out past the high watermark, one-step scale-in
+//!   under the low one;
+//! - [`PidPolicy`] — a PID controller on the "workers needed" error with
+//!   conditional-integration anti-windup, so a saturated spike cannot
+//!   charge the integral term and delay the scale-in;
+//! - [`PredictivePolicy`] — extrapolates the EMA-smoothed queue-growth
+//!   derivative over a short horizon and provisions for the *predicted*
+//!   depth; scale-in stays conservative (one step, only when growth is
+//!   non-positive) so sawtooth load cannot make it oscillate.
 
-use crate::config::ElasticConfig;
+use crate::config::{ElasticConfig, PolicyKind};
 use crate::log_debug;
 use crate::sim::runtime::{ThreadTicker, TickHandle, Ticker};
 use crate::util::clock::SharedClock;
@@ -24,7 +41,7 @@ pub trait ScalableTarget: Send + Sync {
     fn scale_to(&self, n: usize);
 }
 
-/// Scaling decision (exposed separately so the policy is unit-testable
+/// Scaling decision (exposed separately so policies are unit-testable
 /// without threads).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScaleDecision {
@@ -33,7 +50,43 @@ pub enum ScaleDecision {
     In(usize),
 }
 
-/// Pure policy: given depth and worker count, decide the next size.
+/// One observation handed to a policy per evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyInput {
+    /// Total queued + in-flight messages the target reports.
+    pub depth: usize,
+    /// Current worker count (may sit below `min_workers` after a crash).
+    pub workers: usize,
+    /// Seconds since the previous evaluation (the check interval in
+    /// steady state) — derivative and integral terms scale by it.
+    pub dt_secs: f64,
+}
+
+/// Pure-ish scaling policy: observations in, desired worker count out.
+///
+/// Policies may keep state (PID integrals, growth estimates) — the
+/// controller calls [`ElasticPolicy::desired_workers`] on *every*
+/// evaluation, including during the cooldown, so state tracks the queue
+/// continuously; only the *action* is cooldown-gated. Policies do not
+/// enforce bounds: the controller clamps the returned count to
+/// `[min_workers, max_workers]`, which is what pins the zero-floor /
+/// ceiling invariants for every policy at once.
+pub trait ElasticPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn desired_workers(&mut self, cfg: &ElasticConfig, inp: &PolicyInput) -> usize;
+}
+
+/// Build the policy a config names.
+pub fn build_policy(kind: PolicyKind) -> Box<dyn ElasticPolicy> {
+    match kind {
+        PolicyKind::Threshold => Box::new(ThresholdPolicy),
+        PolicyKind::Pid => Box::new(PidPolicy::new()),
+        PolicyKind::Predictive => Box::new(PredictivePolicy::new()),
+    }
+}
+
+/// The original watermark rule: given depth and worker count, decide the
+/// next size.
 ///
 /// Scale out when mean depth per worker exceeds the high watermark — by
 /// enough workers to bring it back under (reactive, proportional). Scale in
@@ -53,6 +106,181 @@ pub fn decide(cfg: &ElasticConfig, depth: usize, workers: usize) -> ScaleDecisio
     ScaleDecision::Hold
 }
 
+/// [`decide`] wrapped as a (stateless) policy.
+pub struct ThresholdPolicy;
+
+impl ElasticPolicy for ThresholdPolicy {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn desired_workers(&mut self, cfg: &ElasticConfig, inp: &PolicyInput) -> usize {
+        match decide(cfg, inp.depth, inp.workers) {
+            ScaleDecision::Hold => inp.workers,
+            ScaleDecision::Out(n) | ScaleDecision::In(n) => n,
+        }
+    }
+}
+
+/// PID controller on the "workers needed" error.
+///
+/// The error is `depth / high_watermark − workers`: how many workers the
+/// high watermark says the current queue needs, minus what we have. The
+/// proportional term alone reproduces the threshold rule's proportional
+/// scale-out; the integral trims steady-state error; the derivative
+/// damps fast queue swings. Anti-windup is conditional integration: when
+/// the output saturates against the error's direction (pinned at
+/// `max_workers` while the error still calls for more, or at the floor
+/// while it calls for fewer), the integral does not accumulate — a
+/// sustained spike therefore cannot charge it, and the scale-in after
+/// the spike starts immediately. The integral is additionally clamped so
+/// its contribution never exceeds one full pool of workers. Scale-in is
+/// limited to one step per evaluation (like the threshold rule) to keep
+/// the loop from hunting around its equilibrium.
+pub struct PidPolicy {
+    kp: f64,
+    ki: f64,
+    kd: f64,
+    integral: f64,
+    prev_err: Option<f64>,
+}
+
+impl PidPolicy {
+    pub fn new() -> Self {
+        PidPolicy::with_gains(1.0, 0.05, 0.1)
+    }
+
+    pub fn with_gains(kp: f64, ki: f64, kd: f64) -> Self {
+        assert!(kp >= 0.0 && ki >= 0.0 && kd >= 0.0);
+        PidPolicy { kp, ki, kd, integral: 0.0, prev_err: None }
+    }
+
+    /// Current integral state (worker·seconds) — exposed so the
+    /// anti-windup property is assertable from tests.
+    pub fn integral(&self) -> f64 {
+        self.integral
+    }
+
+    /// Bound on `|integral|` such that `ki × integral` never exceeds one
+    /// full pool of workers.
+    fn integral_limit(&self, cfg: &ElasticConfig) -> f64 {
+        if self.ki <= 0.0 {
+            return 0.0;
+        }
+        cfg.max_workers.max(1) as f64 / self.ki
+    }
+}
+
+impl Default for PidPolicy {
+    fn default() -> Self {
+        PidPolicy::new()
+    }
+}
+
+impl ElasticPolicy for PidPolicy {
+    fn name(&self) -> &'static str {
+        "pid"
+    }
+
+    fn desired_workers(&mut self, cfg: &ElasticConfig, inp: &PolicyInput) -> usize {
+        let dt = inp.dt_secs.max(1e-9);
+        let needed = inp.depth as f64 / cfg.high_watermark.max(1) as f64;
+        let err = needed - inp.workers as f64;
+        let deriv = self.prev_err.map(|p| (err - p) / dt).unwrap_or(0.0);
+        self.prev_err = Some(err);
+
+        let limit = self.integral_limit(cfg);
+        let tentative = (self.integral + err * dt).clamp(-limit, limit);
+        let u = self.kp * err + self.ki * tentative + self.kd * deriv;
+        let desired_f = inp.workers as f64 + u;
+
+        // Conditional integration: commit the integral only when the
+        // output is not saturated in the error's direction.
+        let saturated_hi = desired_f >= cfg.max_workers as f64 && err > 0.0;
+        let saturated_lo = desired_f <= cfg.min_workers as f64 && err < 0.0;
+        if !saturated_hi && !saturated_lo {
+            self.integral = tentative;
+        }
+
+        let desired = desired_f.round().max(0.0) as usize;
+        if desired < inp.workers {
+            // One step at a time on the way down (hunting damper).
+            inp.workers - 1
+        } else {
+            desired
+        }
+    }
+}
+
+/// Provisions for where the queue is *going*, not where it is.
+///
+/// Tracks the queue-growth derivative `dq/dt` (EMA-smoothed), predicts
+/// the depth `horizon_ticks` evaluations ahead, and asks for
+/// `ceil(predicted / high_watermark)` workers when that exceeds the
+/// current count. Scale-in is deliberately conservative — one step per
+/// evaluation, only while smoothed growth is non-positive *and* the
+/// per-worker depth sits under the low watermark — which is what keeps
+/// the policy from oscillating on sawtooth load: inside a rising tooth
+/// growth is positive (only scale-outs), after the drop growth is
+/// negative (only scale-ins), so direction changes at most twice per
+/// tooth.
+pub struct PredictivePolicy {
+    /// EMA weight for new derivative samples, in `(0, 1]`.
+    alpha: f64,
+    /// Prediction horizon in evaluation intervals.
+    horizon_ticks: f64,
+    ema_growth: f64,
+    prev_depth: Option<f64>,
+}
+
+impl PredictivePolicy {
+    pub fn new() -> Self {
+        PredictivePolicy::with_params(0.4, 3.0)
+    }
+
+    pub fn with_params(alpha: f64, horizon_ticks: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        assert!(horizon_ticks >= 0.0);
+        PredictivePolicy { alpha, horizon_ticks, ema_growth: 0.0, prev_depth: None }
+    }
+
+    /// Smoothed queue-growth estimate (messages per second).
+    pub fn growth(&self) -> f64 {
+        self.ema_growth
+    }
+}
+
+impl Default for PredictivePolicy {
+    fn default() -> Self {
+        PredictivePolicy::new()
+    }
+}
+
+impl ElasticPolicy for PredictivePolicy {
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+
+    fn desired_workers(&mut self, cfg: &ElasticConfig, inp: &PolicyInput) -> usize {
+        let dt = inp.dt_secs.max(1e-9);
+        let depth = inp.depth as f64;
+        let growth = self.prev_depth.map(|p| (depth - p) / dt).unwrap_or(0.0);
+        self.prev_depth = Some(depth);
+        self.ema_growth = self.alpha * growth + (1.0 - self.alpha) * self.ema_growth;
+
+        let predicted = (depth + self.ema_growth * self.horizon_ticks * dt).max(0.0);
+        let needed = (predicted / cfg.high_watermark.max(1) as f64).ceil() as usize;
+        if needed > inp.workers {
+            return needed;
+        }
+        let per_worker = inp.depth / inp.workers.max(1);
+        if needed < inp.workers && per_worker < cfg.low_watermark && self.ema_growth <= 0.0 {
+            return inp.workers - 1;
+        }
+        inp.workers
+    }
+}
+
 /// Drives one [`ScalableTarget`] from a periodic tick: a monitor thread in
 /// production ([`ThreadTicker`]), a discrete event on virtual time when
 /// attached to a [`SimScheduler`].
@@ -63,7 +291,10 @@ pub struct ElasticController {
     clock: SharedClock,
     target: Arc<dyn ScalableTarget>,
     name: String,
+    policy: Mutex<Box<dyn ElasticPolicy>>,
+    policy_name: &'static str,
     last_action: Mutex<Option<Duration>>,
+    last_eval: Mutex<Option<Duration>>,
     running: Arc<AtomicBool>,
     tick: Mutex<Option<TickHandle>>,
     /// (time, new_size) history for the scaling-behaviour figures.
@@ -71,28 +302,77 @@ pub struct ElasticController {
 }
 
 impl ElasticController {
+    /// Controller with the policy the config names (`cfg.policy`).
     pub fn new(
         name: &str,
         cfg: ElasticConfig,
         clock: SharedClock,
         target: Arc<dyn ScalableTarget>,
     ) -> Arc<Self> {
+        Self::with_policy(name, cfg, build_policy(cfg.policy), clock, target)
+    }
+
+    /// Controller with an explicit (possibly custom) policy.
+    pub fn with_policy(
+        name: &str,
+        cfg: ElasticConfig,
+        policy: Box<dyn ElasticPolicy>,
+        clock: SharedClock,
+        target: Arc<dyn ScalableTarget>,
+    ) -> Arc<Self> {
+        let policy_name = policy.name();
         Arc::new(ElasticController {
             cfg,
             clock,
             target,
             name: name.to_string(),
+            policy: Mutex::new(policy),
+            policy_name,
             last_action: Mutex::new(None),
+            last_eval: Mutex::new(None),
             running: Arc::new(AtomicBool::new(false)),
             tick: Mutex::new(None),
             history: Mutex::new(Vec::new()),
         })
     }
 
+    pub fn policy_name(&self) -> &'static str {
+        self.policy_name
+    }
+
     /// One evaluation step (deterministic; the monitor thread calls this).
-    /// Returns the applied decision.
+    /// Returns the applied decision. The policy observes every step —
+    /// state keeps tracking the queue — but an action inside the cooldown
+    /// window is held.
     pub fn step(&self) -> ScaleDecision {
         let now = self.clock.now();
+        let dt = {
+            let mut last = self.last_eval.lock().unwrap();
+            let dt = last
+                .map(|t| now.saturating_sub(t))
+                .filter(|d| *d > Duration::ZERO)
+                .unwrap_or(self.cfg.check_interval);
+            *last = Some(now);
+            dt
+        };
+        let depth = self.target.queue_depth();
+        let workers = self.target.worker_count();
+        let input = PolicyInput { depth, workers, dt_secs: dt.as_secs_f64() };
+        let desired = self.policy.lock().unwrap().desired_workers(&self.cfg, &input);
+        // The controller owns the invariants: clamp to [min, max] — but a
+        // policy answering "stay put" stays put even when the pool sits
+        // outside the band (e.g. crashed below the floor; healing is the
+        // supervisor's job, not the autoscaler's).
+        let desired = if desired == workers {
+            workers
+        } else {
+            desired.clamp(self.cfg.min_workers, self.cfg.max_workers)
+        };
+        let decision = match desired.cmp(&workers) {
+            std::cmp::Ordering::Greater => ScaleDecision::Out(desired),
+            std::cmp::Ordering::Less => ScaleDecision::In(desired),
+            std::cmp::Ordering::Equal => return ScaleDecision::Hold,
+        };
         {
             let last = self.last_action.lock().unwrap();
             if let Some(t) = *last {
@@ -101,18 +381,15 @@ impl ElasticController {
                 }
             }
         }
-        let depth = self.target.queue_depth();
-        let workers = self.target.worker_count();
-        let decision = decide(&self.cfg, depth, workers);
-        match decision {
-            ScaleDecision::Hold => {}
-            ScaleDecision::Out(n) | ScaleDecision::In(n) => {
-                log_debug!("elastic", "'{}' depth={depth} workers={workers} -> {n}", self.name);
-                self.target.scale_to(n);
-                *self.last_action.lock().unwrap() = Some(now);
-                self.history.lock().unwrap().push((now, n));
-            }
-        }
+        log_debug!(
+            "elastic",
+            "'{}' [{}] depth={depth} workers={workers} -> {desired}",
+            self.name,
+            self.policy_name
+        );
+        self.target.scale_to(desired);
+        *self.last_action.lock().unwrap() = Some(now);
+        self.history.lock().unwrap().push((now, desired));
         decision
     }
 
@@ -178,6 +455,7 @@ mod tests {
             low_watermark: 2,
             check_interval: Duration::from_millis(5),
             cooldown: Duration::from_millis(50),
+            policy: PolicyKind::Threshold,
         }
     }
 
@@ -209,6 +487,15 @@ mod tests {
         depth: AtomicUsize,
     }
 
+    impl FakePool {
+        fn new(workers: usize, depth: usize) -> Arc<Self> {
+            Arc::new(FakePool {
+                workers: AtomicUsize::new(workers),
+                depth: AtomicUsize::new(depth),
+            })
+        }
+    }
+
     impl ScalableTarget for FakePool {
         fn worker_count(&self) -> usize {
             self.workers.load(Ordering::SeqCst)
@@ -224,7 +511,7 @@ mod tests {
     #[test]
     fn controller_scales_out_then_in_with_cooldown() {
         let clock = Arc::new(ManualClock::new());
-        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(95) });
+        let pool = FakePool::new(1, 95);
         let ctl = ElasticController::new("t", cfg(), clock.clone(), pool.clone());
 
         assert_eq!(ctl.step(), ScaleDecision::Out(8));
@@ -258,7 +545,7 @@ mod tests {
         let mut c = cfg();
         c.min_workers = 0;
         let clock = Arc::new(ManualClock::new());
-        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(0) });
+        let pool = FakePool::new(1, 0);
         let ctl = ElasticController::new("floor", c, clock.clone(), pool.clone());
         assert_eq!(ctl.step(), ScaleDecision::In(0));
         assert_eq!(pool.worker_count(), 0, "zero-worker floor reached");
@@ -272,7 +559,7 @@ mod tests {
     #[test]
     fn cooldown_holds_pending_scale_on_sim_scheduler() {
         let sched = SimScheduler::new(11);
-        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(95) });
+        let pool = FakePool::new(1, 95);
         let ctl = ElasticController::new("sim-cooldown", cfg(), sched.clock(), pool.clone());
         ctl.start_on(&sched);
         // First evaluation at t = 5 ms (one check interval) scales out.
@@ -298,8 +585,7 @@ mod tests {
     fn sim_scheduler_histories_are_deterministic() {
         let run = || {
             let sched = SimScheduler::new(5);
-            let pool =
-                Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(95) });
+            let pool = FakePool::new(1, 95);
             let ctl = ElasticController::new("det", cfg(), sched.clock(), pool.clone());
             ctl.start_on(&sched);
             let p = pool.clone();
@@ -322,12 +608,206 @@ mod tests {
     #[test]
     fn monitor_thread_reacts() {
         let clock = crate::util::clock::real_clock();
-        let pool = Arc::new(FakePool { workers: AtomicUsize::new(1), depth: AtomicUsize::new(500) });
+        let pool = FakePool::new(1, 500);
         let ctl = ElasticController::new("bg", cfg(), clock, pool.clone());
         ctl.start();
         let scaled =
             crate::util::wait_until(|| pool.worker_count() > 1, Duration::from_secs(2));
         ctl.stop();
         assert!(scaled, "scaled out in background");
+    }
+
+    // --- Policy seam -------------------------------------------------
+
+    /// Drive a bare policy over a synthetic depth trajectory, applying
+    /// its (clamped) answer as the next worker count. Returns the worker
+    /// trajectory.
+    fn drive(
+        policy: &mut dyn ElasticPolicy,
+        cfg: &ElasticConfig,
+        depths: impl IntoIterator<Item = usize>,
+        start_workers: usize,
+    ) -> Vec<usize> {
+        let mut workers = start_workers;
+        let mut out = Vec::new();
+        for depth in depths {
+            let desired = policy.desired_workers(
+                cfg,
+                &PolicyInput { depth, workers, dt_secs: 1.0 },
+            );
+            workers = desired.clamp(cfg.min_workers, cfg.max_workers);
+            out.push(workers);
+        }
+        out
+    }
+
+    #[test]
+    fn all_policies_respect_floor_ceiling_and_cooldown() {
+        for kind in [PolicyKind::Threshold, PolicyKind::Pid, PolicyKind::Predictive] {
+            let clock = Arc::new(ManualClock::new());
+            let pool = FakePool::new(1, 0);
+            let ctl = ElasticController::with_policy(
+                &format!("inv-{}", kind.label()),
+                cfg(),
+                build_policy(kind),
+                clock.clone(),
+                pool.clone(),
+            );
+            // Massive sustained load: must never exceed the ceiling, and
+            // consecutive actions must respect the cooldown.
+            pool.depth.store(1_000_000, Ordering::SeqCst);
+            for _ in 0..50 {
+                ctl.step();
+                assert!(
+                    pool.worker_count() <= cfg().max_workers,
+                    "{} exceeded max_workers",
+                    kind.label()
+                );
+                clock.advance(Duration::from_millis(5));
+            }
+            assert_eq!(
+                pool.worker_count(),
+                cfg().max_workers,
+                "{} should reach the ceiling under overload",
+                kind.label()
+            );
+            // Load vanishes: must come back down but never below the floor.
+            pool.depth.store(0, Ordering::SeqCst);
+            for _ in 0..400 {
+                ctl.step();
+                assert!(
+                    pool.worker_count() >= cfg().min_workers,
+                    "{} dropped below min_workers",
+                    kind.label()
+                );
+                clock.advance(Duration::from_millis(60));
+            }
+            assert_eq!(
+                pool.worker_count(),
+                cfg().min_workers,
+                "{} should settle at the floor when idle",
+                kind.label()
+            );
+            let h = ctl.history();
+            for w in h.windows(2) {
+                assert!(
+                    w[1].0.saturating_sub(w[0].0) >= cfg().cooldown,
+                    "{}: actions inside the cooldown window: {h:?}",
+                    kind.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pid_anti_windup_under_sustained_spike() {
+        let c = cfg();
+        let mut pid = PidPolicy::new();
+        // Saturate at max_workers for a long time under a huge spike: the
+        // conditional integration must freeze the integral, not charge it.
+        let mut workers = 1usize;
+        for _ in 0..200 {
+            let desired = pid.desired_workers(
+                &c,
+                &PolicyInput { depth: 500_000, workers, dt_secs: 1.0 },
+            );
+            workers = desired.clamp(c.min_workers, c.max_workers);
+        }
+        assert_eq!(workers, c.max_workers);
+        let limit = c.max_workers as f64 / 0.05; // ki of PidPolicy::new()
+        assert!(
+            pid.integral().abs() <= limit + 1e-9,
+            "integral wound up past its bound: {}",
+            pid.integral()
+        );
+        // Integral must be nowhere near what 200 unsaturated seconds of
+        // this error would have accumulated (~200 × 49_992).
+        assert!(
+            pid.integral() < 500_000.0,
+            "windup: integral {} reflects the saturated phase",
+            pid.integral()
+        );
+        // The moment load vanishes, scale-in starts immediately and
+        // reaches the floor in at most one step per evaluation.
+        let steps = drive(&mut pid, &c, vec![0usize; 20], workers);
+        assert_eq!(*steps.last().unwrap(), c.min_workers, "recovered to the floor: {steps:?}");
+        let down_by = steps.iter().position(|&w| w < c.max_workers).unwrap();
+        assert!(down_by <= 1, "scale-in delayed by windup: {steps:?}");
+    }
+
+    #[test]
+    fn predictive_scales_ahead_of_growth() {
+        let c = cfg();
+        let mut p = PredictivePolicy::new();
+        // Depth growing 40/s against high watermark 10: after a few
+        // observations the prediction must ask for more than the plain
+        // threshold rule would at the same instant.
+        let depths = [0usize, 40, 80, 120, 160];
+        let mut workers = 1usize;
+        let mut last_desired = 1usize;
+        for d in depths {
+            last_desired = p.desired_workers(&c, &PolicyInput { depth: d, workers, dt_secs: 1.0 });
+            workers = last_desired.clamp(c.min_workers, c.max_workers);
+        }
+        // Threshold at depth 160 asks for ceil(160/10) = 16 (clamped 8);
+        // predictive should already be there or beyond via the forecast.
+        assert!(last_desired >= 16, "prediction too timid: {last_desired}");
+        assert!(p.growth() > 20.0, "growth estimate tracks the ramp: {}", p.growth());
+    }
+
+    #[test]
+    fn predictive_never_oscillates_on_sawtooth() {
+        let c = cfg();
+        let mut p = PredictivePolicy::new();
+        // Four sawtooth teeth: depth climbs 0→375 in 25 steps, then
+        // resets. Count worker-trajectory direction changes: tracking the
+        // teeth allows at most two per tooth (up inside, down after the
+        // drop) — anything more is oscillation.
+        let tooth: Vec<usize> = (0..25).map(|i| i * 15).collect();
+        let cycles = 4;
+        let mut depths = Vec::new();
+        for _ in 0..cycles {
+            depths.extend(tooth.iter().copied());
+        }
+        let traj = drive(&mut p, &c, depths, 1);
+        let mut changes = 0;
+        let mut dir = 0i32;
+        for w in traj.windows(2) {
+            let d = match w[1].cmp(&w[0]) {
+                std::cmp::Ordering::Greater => 1,
+                std::cmp::Ordering::Less => -1,
+                std::cmp::Ordering::Equal => continue,
+            };
+            if d != dir && dir != 0 {
+                changes += 1;
+            }
+            dir = d;
+        }
+        assert!(
+            changes <= 2 * cycles,
+            "sawtooth oscillation: {changes} direction changes in {traj:?}"
+        );
+    }
+
+    #[test]
+    fn policy_factory_names_match_kinds() {
+        for (kind, name) in [
+            (PolicyKind::Threshold, "threshold"),
+            (PolicyKind::Pid, "pid"),
+            (PolicyKind::Predictive, "predictive"),
+        ] {
+            assert_eq!(build_policy(kind).name(), name);
+            assert_eq!(kind.label(), name);
+        }
+    }
+
+    #[test]
+    fn controller_reports_policy_name() {
+        let clock = Arc::new(ManualClock::new());
+        let pool = FakePool::new(1, 0);
+        let mut c = cfg();
+        c.policy = PolicyKind::Pid;
+        let ctl = ElasticController::new("named", c, clock, pool);
+        assert_eq!(ctl.policy_name(), "pid");
     }
 }

@@ -14,14 +14,21 @@
 //!   sweeper, and failure injector register periodic ticks that run on a
 //!   real thread ([`ThreadTicker`]) in production and as discrete events
 //!   in simulation;
-//! - [`model`] — a fluid-model worker pool ([`SimPool`]) with an explicit
-//!   at-least-once in-flight window, driven by the *real*
+//! - [`model`] — a fluid-model worker pool ([`SimPool`]) with partitioned
+//!   queues, an explicit at-least-once in-flight window, and an
+//!   end-to-end latency histogram, driven by the *real*
 //!   [`ElasticController`];
-//! - [`scenario`] — the scenario DSL: workload shapes × fault scripts ×
-//!   assertion probes, producing a byte-comparable [`Trace`];
-//! - [`chaos`] — the Fig. 8–11 configurations as a 13-entry deterministic
-//!   chaos matrix (`tests/sim_chaos_matrix.rs` runs it twice and demands
-//!   identical traces).
+//! - [`workload`] — production-shaped load generators: open-loop
+//!   Poisson/MMPP arrivals, Zipf key skew onto partitions, diurnal
+//!   curves, multi-tenant mixes — all pure functions of the scheduler's
+//!   forked RNG;
+//! - [`scenario`] — the scenario DSL: workload shapes × models × fault
+//!   scripts × assertion probes (including latency SLOs), producing a
+//!   byte-comparable [`Trace`];
+//! - [`chaos`] — the Fig. 8–11 configurations as a deterministic chaos
+//!   matrix plus the policy-race matrix (each elastic policy × each
+//!   workload shape; `tests/sim_chaos_matrix.rs` runs both twice and
+//!   demands identical traces).
 //!
 //! The transport layer extends this determinism to *network* faults:
 //! [`SimTransport`](crate::transport::SimTransport) schedules its
@@ -39,10 +46,12 @@ pub mod model;
 pub mod runtime;
 pub mod scenario;
 pub mod scheduler;
+pub mod workload;
 
 pub use clock::SimClock;
 pub use executor::SimExecutor;
 pub use model::{SimPool, Trace};
 pub use runtime::{ThreadTicker, TickHandle, Ticker};
-pub use scenario::{Fault, Probes, Scenario, ScenarioReport, WorkloadShape};
+pub use scenario::{Fault, LatencySlo, Probes, Scenario, ScenarioReport, WorkloadShape};
 pub use scheduler::SimScheduler;
+pub use workload::{ArrivalProcess, KeySkew, TenantSpec, WorkloadGen, WorkloadModel, ZipfSampler};

@@ -1,23 +1,35 @@
 //! The simulated data plane a chaos scenario drives.
 //!
-//! [`SimPool`] is a fluid-model worker pool: a broker-side queue, an
-//! in-flight window (delivered but uncommitted — the at-least-once
+//! [`SimPool`] is a fluid-model worker pool: broker-side partition queues,
+//! an in-flight window (delivered but uncommitted — the at-least-once
 //! exposure), and a completed count. Each scheduler tick commits the
 //! previous tick's in-flight work and takes up to `workers ×
-//! per_worker_per_tick` new messages. A node crash requeues the in-flight
-//! window (redelivery, never loss) and removes that node's worker share;
-//! the elastic controller — the *real*
+//! per_worker_per_tick` new messages, split across partitions. A node
+//! crash requeues the in-flight window (redelivery, never loss) and
+//! removes that node's worker share; the elastic controller — the *real*
 //! [`ElasticController`](crate::reactive::elastic::ElasticController), not
 //! a model of it — observes `queue_depth` and resizes the pool through
 //! [`ScalableTarget`].
 //!
+//! Messages travel in *cohorts* (a partition, an arrival stamp, a count),
+//! so the pool tracks end-to-end latency without per-message allocation:
+//! when a cohort commits, `now − arrived` lands in a latency histogram
+//! that the scenario's SLO probes read. Capacity is per-partition —
+//! workers split `W/P` with the remainder rotating each tick — so a
+//! Zipf-hot partition can backlog even while the pool has spare aggregate
+//! capacity, exactly the skew failure mode the workload layer provokes.
+//! Redelivered cohorts keep their original arrival stamp: a crash shows
+//! up in the latency tail, as it would in production.
+//!
 //! Conservation invariant (checked by every scenario): `offered == queue +
 //! in_flight + done` at all times. `redelivered` counts messages that
 //! re-entered the queue after a crash — duplicates are allowed, loss is
-//! not.
+//! not. With one partition the totals reproduce the original
+//! single-queue fluid model tick for tick.
 
 use crate::reactive::elastic::ScalableTarget;
 use crate::util::clock::SharedClock;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -38,6 +50,11 @@ impl Trace {
     pub fn push(&self, event: impl AsRef<str>) {
         let mut ev = self.events.lock().unwrap();
         ev.push(format!("{:>9}ms {}", self.clock.now_millis(), event.as_ref()));
+    }
+
+    /// Current virtual time in milliseconds (the clock the stamps use).
+    pub fn now_millis(&self) -> u64 {
+        self.clock.now_millis()
     }
 
     pub fn lines(&self) -> Vec<String> {
@@ -63,6 +80,24 @@ impl Trace {
     }
 }
 
+/// A batch of messages that arrived together on one partition.
+#[derive(Clone, Copy, Debug)]
+struct Cohort {
+    arrived_ms: u64,
+    count: u64,
+}
+
+/// Queues + in-flight windows, guarded together so tick/crash/offer stay
+/// atomic with respect to each other.
+struct Lanes {
+    /// Broker-side queue per partition (FIFO of cohorts).
+    queues: Vec<VecDeque<Cohort>>,
+    /// Last tick's uncommitted delivery per partition.
+    in_flight: Vec<Vec<Cohort>>,
+    /// Rotates the capacity remainder across partitions per tick.
+    rot: usize,
+}
+
 /// Fluid-model elastic worker pool (see module docs).
 pub struct SimPool {
     name: String,
@@ -70,9 +105,15 @@ pub struct SimPool {
     max: usize,
     /// Messages one worker completes per scheduler tick.
     per_worker_per_tick: u64,
+    partitions: usize,
     workers: AtomicUsize,
+    lanes: Mutex<Lanes>,
+    /// Completed-message latency histogram: latency_ms → message count.
+    latency: Mutex<BTreeMap<u64, u64>>,
+    // Atomic mirrors of the lane totals, for lock-free reads from monitor
+    // threads (`queue_depth` is on the autoscaler's hot path).
     queue: AtomicU64,
-    in_flight: AtomicU64,
+    in_flight_total: AtomicU64,
     done: AtomicU64,
     offered: AtomicU64,
     redelivered: AtomicU64,
@@ -88,19 +129,28 @@ impl SimPool {
         max: usize,
         per_worker_per_tick: u64,
         initial_workers: usize,
+        partitions: usize,
         trace: Arc<Trace>,
     ) -> Arc<Self> {
         assert!(max >= min.max(1), "SimPool bounds: max {max} < min {min}");
         assert!(per_worker_per_tick > 0);
+        assert!(partitions >= 1);
         let initial = initial_workers.clamp(min.max(1), max);
         Arc::new(SimPool {
             name: name.to_string(),
             min,
             max,
             per_worker_per_tick,
+            partitions,
             workers: AtomicUsize::new(initial),
+            lanes: Mutex::new(Lanes {
+                queues: (0..partitions).map(|_| VecDeque::new()).collect(),
+                in_flight: (0..partitions).map(|_| Vec::new()).collect(),
+                rot: 0,
+            }),
+            latency: Mutex::new(BTreeMap::new()),
             queue: AtomicU64::new(0),
-            in_flight: AtomicU64::new(0),
+            in_flight_total: AtomicU64::new(0),
             done: AtomicU64::new(0),
             offered: AtomicU64::new(0),
             redelivered: AtomicU64::new(0),
@@ -110,35 +160,122 @@ impl SimPool {
         })
     }
 
-    /// Enqueue `n` new messages (workload arrivals).
+    pub fn partitions(&self) -> usize {
+        self.partitions
+    }
+
+    /// Enqueue `n` new messages on partition 0 (workload arrivals for the
+    /// single-partition scenarios).
     pub fn offer(&self, n: u64) {
+        self.offer_to(0, n);
+    }
+
+    /// Enqueue `n` new messages on one partition, stamped with the
+    /// current virtual time.
+    pub fn offer_to(&self, partition: usize, n: u64) {
         if n == 0 {
             return;
         }
+        assert!(partition < self.partitions, "partition {partition} of {}", self.partitions);
+        let arrived_ms = self.trace.now_millis();
+        let mut lanes = self.lanes.lock().unwrap();
+        let q = &mut lanes.queues[partition];
+        // Coalesce with the tail cohort when the stamp matches — arrivals
+        // within one tick form one cohort, keeping the queues compact.
+        match q.back_mut() {
+            Some(tail) if tail.arrived_ms == arrived_ms => tail.count += n,
+            _ => q.push_back(Cohort { arrived_ms, count: n }),
+        }
+        drop(lanes);
         self.offered.fetch_add(n, Ordering::SeqCst);
         self.queue.fetch_add(n, Ordering::SeqCst);
     }
 
-    /// One processing tick: commit last tick's in-flight batch, then take
-    /// up to capacity into flight. Driven by the scenario's scheduler.
+    /// One processing tick: commit last tick's in-flight batches
+    /// (recording their end-to-end latency), then take up to capacity
+    /// into flight, partition by partition. Driven by the scenario's
+    /// scheduler.
     pub fn tick(&self) {
-        let finished = self.in_flight.swap(0, Ordering::SeqCst);
-        self.done.fetch_add(finished, Ordering::SeqCst);
-        let cap = self.workers.load(Ordering::SeqCst) as u64 * self.per_worker_per_tick;
-        let take = self.queue.load(Ordering::SeqCst).min(cap);
-        if take > 0 {
-            self.queue.fetch_sub(take, Ordering::SeqCst);
-            self.in_flight.store(take, Ordering::SeqCst);
+        let now_ms = self.trace.now_millis();
+        let mut lanes = self.lanes.lock().unwrap();
+        // Commit phase: everything delivered last tick completes now.
+        let mut finished = 0u64;
+        {
+            let mut hist = self.latency.lock().unwrap();
+            for lane in lanes.in_flight.iter_mut() {
+                for c in lane.drain(..) {
+                    finished += c.count;
+                    *hist.entry(now_ms.saturating_sub(c.arrived_ms)).or_insert(0) += c.count;
+                }
+            }
+        }
+        if finished > 0 {
+            self.done.fetch_add(finished, Ordering::SeqCst);
+            self.in_flight_total.fetch_sub(finished, Ordering::SeqCst);
+        }
+        // Delivery phase: split capacity per partition; the remainder
+        // rotates so no partition is systematically starved. Unused
+        // capacity is *not* reassigned across partitions — a hot
+        // partition backlogs even when the pool has aggregate headroom.
+        let total_cap = self.workers.load(Ordering::SeqCst) as u64 * self.per_worker_per_tick;
+        let p = self.partitions as u64;
+        let base = total_cap / p;
+        let rem = total_cap % p;
+        let rot = lanes.rot;
+        lanes.rot = (rot + 1) % self.partitions;
+        let mut taken = 0u64;
+        for i in 0..self.partitions {
+            let extra = u64::from((((i + self.partitions - rot) % self.partitions) as u64) < rem);
+            let mut cap = base + extra;
+            let (queues, in_flight) = {
+                let Lanes { queues, in_flight, .. } = &mut *lanes;
+                (&mut queues[i], &mut in_flight[i])
+            };
+            while cap > 0 {
+                match queues.front_mut() {
+                    None => break,
+                    Some(head) if head.count <= cap => {
+                        cap -= head.count;
+                        taken += head.count;
+                        let c = queues.pop_front().unwrap();
+                        in_flight.push(c);
+                    }
+                    Some(head) => {
+                        head.count -= cap;
+                        taken += cap;
+                        in_flight.push(Cohort { arrived_ms: head.arrived_ms, count: cap });
+                        cap = 0;
+                    }
+                }
+            }
+        }
+        drop(lanes);
+        if taken > 0 {
+            self.queue.fetch_sub(taken, Ordering::SeqCst);
+            self.in_flight_total.fetch_add(taken, Ordering::SeqCst);
         }
         self.max_outstanding.fetch_max(self.outstanding(), Ordering::SeqCst);
     }
 
     /// Node crash touching this pool: the in-flight window is uncommitted,
     /// so it goes *back to the queue* (redelivery), and the node's worker
-    /// share disappears until healed or re-scaled.
+    /// share disappears until healed or re-scaled. Requeued cohorts keep
+    /// their original arrival stamps and rejoin at the *front* of their
+    /// partition — the crash widens the latency tail, it never loses.
     pub fn crash_workers(&self, share: usize) {
-        let lost = self.in_flight.swap(0, Ordering::SeqCst);
+        let mut lanes = self.lanes.lock().unwrap();
+        let mut lost = 0u64;
+        for i in 0..self.partitions {
+            let Lanes { queues, in_flight, .. } = &mut *lanes;
+            let lane = &mut in_flight[i];
+            for c in lane.drain(..).rev() {
+                lost += c.count;
+                queues[i].push_front(c);
+            }
+        }
+        drop(lanes);
         if lost > 0 {
+            self.in_flight_total.fetch_sub(lost, Ordering::SeqCst);
             self.queue.fetch_add(lost, Ordering::SeqCst);
             self.redelivered.fetch_add(lost, Ordering::SeqCst);
             self.trace.push(format!("redeliver {lost} ({})", self.name));
@@ -160,8 +297,13 @@ impl SimPool {
         self.queue.load(Ordering::SeqCst)
     }
 
+    /// Queued messages on one partition (skew probes read this).
+    pub fn partition_queue(&self, partition: usize) -> u64 {
+        self.lanes.lock().unwrap().queues[partition].iter().map(|c| c.count).sum()
+    }
+
     pub fn in_flight(&self) -> u64 {
-        self.in_flight.load(Ordering::SeqCst)
+        self.in_flight_total.load(Ordering::SeqCst)
     }
 
     pub fn done(&self) -> u64 {
@@ -178,7 +320,7 @@ impl SimPool {
 
     /// Messages not yet completed (broker queue + in-flight window).
     pub fn outstanding(&self) -> u64 {
-        self.queue.load(Ordering::SeqCst) + self.in_flight.load(Ordering::SeqCst)
+        self.queue.load(Ordering::SeqCst) + self.in_flight_total.load(Ordering::SeqCst)
     }
 
     pub fn is_drained(&self) -> bool {
@@ -191,6 +333,38 @@ impl SimPool {
 
     pub fn max_outstanding(&self) -> u64 {
         self.max_outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Fraction of completed messages whose end-to-end latency was at
+    /// most `bound_ms`. `1.0` when nothing has completed yet (an empty
+    /// run violates no SLO).
+    pub fn latency_attainment(&self, bound_ms: u64) -> f64 {
+        let hist = self.latency.lock().unwrap();
+        let total: u64 = hist.values().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let within: u64 = hist.range(..=bound_ms).map(|(_, n)| n).sum();
+        within as f64 / total as f64
+    }
+
+    /// Latency quantile in milliseconds over completed messages
+    /// (`q` in `[0, 1]`); `None` before anything completes.
+    pub fn latency_quantile(&self, q: f64) -> Option<u64> {
+        let hist = self.latency.lock().unwrap();
+        let total: u64 = hist.values().sum();
+        if total == 0 {
+            return None;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (ms, n) in hist.iter() {
+            seen += n;
+            if seen >= rank {
+                return Some(*ms);
+            }
+        }
+        hist.keys().next_back().copied()
     }
 
     /// Conservation residue: nonzero means the model lost or invented
@@ -229,7 +403,7 @@ mod tests {
     fn fixture() -> (Arc<SimClock>, Arc<Trace>, Arc<SimPool>) {
         let clock = Arc::new(SimClock::new());
         let trace = Trace::new(clock.clone());
-        let pool = SimPool::new("p", 1, 8, 10, 2, trace.clone());
+        let pool = SimPool::new("p", 1, 8, 10, 2, 1, trace.clone());
         (clock, trace, pool)
     }
 
@@ -302,5 +476,105 @@ mod tests {
         let lines = trace.lines();
         assert_eq!(lines.len(), 1);
         assert!(lines[0].contains("1234ms hello"), "got: {}", lines[0]);
+    }
+
+    #[test]
+    fn latency_histogram_tracks_commit_times() {
+        let (clock, _t, pool) = fixture();
+        pool.offer(25); // arrives at t = 0
+        clock.advance_to(Duration::from_millis(500));
+        pool.tick(); // 20 into flight
+        clock.advance_to(Duration::from_millis(1000));
+        pool.tick(); // commits 20 @ 1000 ms latency, takes remaining 5
+        clock.advance_to(Duration::from_millis(1500));
+        pool.tick(); // commits 5 @ 1500 ms latency
+        assert_eq!(pool.done(), 25);
+        assert_eq!(pool.latency_quantile(0.5), Some(1000));
+        assert_eq!(pool.latency_quantile(1.0), Some(1500));
+        let att = pool.latency_attainment(1000);
+        assert!((att - 0.8).abs() < 1e-9, "20 of 25 within 1s, got {att}");
+        assert_eq!(pool.latency_attainment(1500), 1.0);
+        assert_eq!(pool.latency_attainment(10), 0.0);
+    }
+
+    #[test]
+    fn attainment_is_vacuous_before_any_completion() {
+        let (_c, _t, pool) = fixture();
+        assert_eq!(pool.latency_attainment(1), 1.0);
+        assert_eq!(pool.latency_quantile(0.99), None);
+    }
+
+    #[test]
+    fn hot_partition_backlogs_despite_aggregate_headroom() {
+        let clock = Arc::new(SimClock::new());
+        let trace = Trace::new(clock.clone());
+        // 4 partitions, 4 workers × 10/tick = 40 total, 10 per partition.
+        let pool = SimPool::new("skew", 1, 8, 10, 4, 4, trace);
+        for _ in 0..5 {
+            pool.offer_to(0, 30); // hot partition: 3× its per-tick share
+            pool.offer_to(1, 2);
+            pool.tick();
+        }
+        assert!(
+            pool.partition_queue(0) >= 30,
+            "hot partition backlog despite idle partitions 2/3: {}",
+            pool.partition_queue(0)
+        );
+        assert_eq!(pool.partition_queue(1), 0, "cold partition keeps up");
+        assert_eq!(pool.conservation_residue(), 0);
+    }
+
+    #[test]
+    fn capacity_remainder_rotates_across_partitions() {
+        let clock = Arc::new(SimClock::new());
+        let trace = Trace::new(clock.clone());
+        // 1 worker × 10/tick over 3 partitions: base 3, remainder 1.
+        let pool = SimPool::new("rot", 1, 1, 10, 1, 3, trace);
+        for p in 0..3 {
+            pool.offer_to(p, 100);
+        }
+        for _ in 0..6 {
+            pool.tick();
+        }
+        // After 6 ticks each partition got the +1 remainder exactly twice:
+        // 6 × 3 base + 2 extra = 20 messages dequeued per partition.
+        for p in 0..3 {
+            assert_eq!(pool.partition_queue(p), 100 - 20, "partition {p}");
+        }
+        assert_eq!(pool.conservation_residue(), 0);
+    }
+
+    #[test]
+    fn crash_preserves_arrival_stamps_for_latency() {
+        let (clock, _t, pool) = fixture();
+        pool.offer(20); // arrives at t = 0
+        clock.advance_to(Duration::from_millis(500));
+        pool.tick(); // all 20 in flight
+        pool.crash_workers(1); // redelivered, stamp still 0
+        pool.heal_workers(1);
+        clock.advance_to(Duration::from_millis(1000));
+        pool.tick(); // 20 back into flight
+        clock.advance_to(Duration::from_millis(1500));
+        pool.tick(); // commits with latency 1500, not 500
+        assert_eq!(pool.done(), 20);
+        assert_eq!(
+            pool.latency_quantile(0.5),
+            Some(1500),
+            "redelivery counts from original arrival"
+        );
+        assert_eq!(pool.redelivered(), 20);
+        assert_eq!(pool.conservation_residue(), 0);
+    }
+
+    #[test]
+    fn offers_within_one_stamp_coalesce() {
+        let (clock, _t, pool) = fixture();
+        pool.offer(5);
+        pool.offer(5);
+        assert_eq!(pool.lanes.lock().unwrap().queues[0].len(), 1, "same-stamp coalesce");
+        clock.advance_to(Duration::from_millis(1));
+        pool.offer(5);
+        assert_eq!(pool.lanes.lock().unwrap().queues[0].len(), 2);
+        assert_eq!(pool.queue(), 15);
     }
 }

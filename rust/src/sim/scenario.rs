@@ -13,10 +13,16 @@
 //! the Fig. 10 failure grid becomes [`Fault::EpochFailures`] at the
 //! paper's 0/30/60/90 % probabilities with epoch/restart windows; and the
 //! probes encode the claims the figures make — bounded queues, a sensible
-//! worker-count trajectory, and redelivery-but-never-loss.
+//! worker-count trajectory, redelivery-but-never-loss, and (via
+//! [`LatencySlo`]) end-to-end latency service levels. How the load itself
+//! is generated — open-loop Poisson/MMPP arrivals, Zipf key skew,
+//! multi-tenant mixes over partitioned queues — is the scenario's
+//! [`WorkloadModel`]; the default model reproduces the original
+//! closed-loop fluid behaviour exactly.
 
 use super::model::{SimPool, Trace};
 use super::scheduler::SimScheduler;
+use super::workload::{WorkloadGen, WorkloadModel};
 use crate::cluster::failure::FailureInjector;
 use crate::cluster::node::{Cluster, ComponentHandle};
 use crate::config::ElasticConfig;
@@ -39,6 +45,9 @@ pub enum WorkloadShape {
     Ramp { from: f64, to: f64 },
     /// `cycles` rising teeth between `low` and `high`.
     Sawtooth { low: f64, high: f64, cycles: u32 },
+    /// Smooth day/night cosine wave: `cycles` full periods between `low`
+    /// (at the start of each period) and `high` (mid-period).
+    Diurnal { low: f64, high: f64, cycles: u32 },
 }
 
 impl WorkloadShape {
@@ -59,6 +68,10 @@ impl WorkloadShape {
                 let pos = (frac * cycles.max(1) as f64).fract();
                 low + (high - low) * pos
             }
+            WorkloadShape::Diurnal { low, high, cycles } => {
+                let phase = std::f64::consts::TAU * cycles.max(1) as f64 * frac;
+                low + (high - low) * (0.5 - 0.5 * phase.cos())
+            }
         }
     }
 
@@ -69,6 +82,7 @@ impl WorkloadShape {
             WorkloadShape::Spike { .. } => "spike",
             WorkloadShape::Ramp { .. } => "ramp",
             WorkloadShape::Sawtooth { .. } => "sawtooth",
+            WorkloadShape::Diurnal { .. } => "diurnal",
         }
     }
 }
@@ -105,6 +119,17 @@ impl Fault {
     }
 }
 
+/// End-to-end latency service-level objective: at least `min_attainment`
+/// of all completed messages must commit within `bound` of arriving.
+/// Redelivered messages count from their *original* arrival, so crashes
+/// show up here.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySlo {
+    pub bound: Duration,
+    /// Required fraction in `[0, 1]`.
+    pub min_attainment: f64,
+}
+
 /// Assertions evaluated after the run. Every failed probe becomes a
 /// violation string in the report (the chaos matrix requires zero).
 #[derive(Clone, Copy, Debug)]
@@ -123,6 +148,8 @@ pub struct Probes {
     pub expect_suspects: bool,
     /// The detector must never have suspected anyone.
     pub forbid_suspects: bool,
+    /// End-to-end latency SLO over all completed messages.
+    pub latency_slo: Option<LatencySlo>,
 }
 
 impl Default for Probes {
@@ -135,6 +162,7 @@ impl Default for Probes {
             expect_redelivery: false,
             expect_suspects: false,
             forbid_suspects: false,
+            latency_slo: None,
         }
     }
 }
@@ -156,6 +184,9 @@ pub struct Scenario {
     pub per_worker_rate: f64,
     pub elastic: ElasticConfig,
     pub workload: WorkloadShape,
+    /// How the load is generated: arrival process, key skew, partitions,
+    /// extra tenants. `WorkloadModel::default()` = legacy fluid behaviour.
+    pub model: WorkloadModel,
     pub fault: Fault,
     pub probes: Probes,
 }
@@ -165,6 +196,8 @@ pub struct Scenario {
 pub struct ScenarioReport {
     pub name: String,
     pub seed: u64,
+    /// Which elastic policy drove scaling (from the scenario config).
+    pub policy: &'static str,
     pub offered: u64,
     pub done: u64,
     pub redelivered: u64,
@@ -174,6 +207,12 @@ pub struct ScenarioReport {
     pub final_workers: usize,
     pub scale_changes: usize,
     pub suspect_events: usize,
+    /// Median end-to-end latency over completed messages (ms).
+    pub p50_latency_ms: Option<u64>,
+    /// 99th-percentile end-to-end latency over completed messages (ms).
+    pub p99_latency_ms: Option<u64>,
+    /// Attainment of the probe SLO bound, when one was set.
+    pub slo_attainment: Option<f64>,
     pub trace: Vec<String>,
     pub violations: Vec<String>,
 }
@@ -187,11 +226,16 @@ impl ScenarioReport {
     /// event trace. Identical fingerprints ⇒ identical scale/failure
     /// event sequences.
     pub fn fingerprint(&self) -> String {
+        let att = match self.slo_attainment {
+            Some(a) => format!("{a:.6}"),
+            None => "-".into(),
+        };
         format!(
-            "{} seed={} offered={} done={} redelivered={} outstanding={} \
-             peak={} final={} scales={} suspects={}\n{}",
+            "{} seed={} policy={} offered={} done={} redelivered={} outstanding={} \
+             peak={} final={} scales={} suspects={} p50={:?} p99={:?} slo={att}\n{}",
             self.name,
             self.seed,
+            self.policy,
             self.offered,
             self.done,
             self.redelivered,
@@ -200,6 +244,8 @@ impl ScenarioReport {
             self.final_workers,
             self.scale_changes,
             self.suspect_events,
+            self.p50_latency_ms,
+            self.p99_latency_ms,
             self.trace.join("\n")
         )
     }
@@ -221,6 +267,7 @@ impl Scenario {
             self.elastic.max_workers,
             per_tick,
             self.elastic.min_workers.max(1),
+            self.model.partitions,
             trace.clone(),
         );
 
@@ -279,22 +326,23 @@ impl Scenario {
             });
         }
 
-        // --- Workload arrivals (fractional rates carry across ticks).
+        // --- Workload arrivals, generated by the seeded model (the
+        // default model reproduces the old closed-loop fluid carry).
         {
             let pool = pool.clone();
-            let shape = self.workload;
             let window = self.duration;
-            let mut carry = 0.0f64;
+            let mut gen =
+                WorkloadGen::new(self.model.clone(), self.workload, sched.fork_rng());
             sched.schedule_every(self.tick, move |s| {
                 let now = s.now();
                 if now > window {
                     return;
                 }
                 let frac = now.as_secs_f64() / window.as_secs_f64();
-                let amount = shape.rate_at(frac) * tick_secs + carry;
-                let n = amount.floor() as u64;
-                carry = amount - n as f64;
-                pool.offer(n);
+                let arrivals = gen.tick(frac, tick_secs);
+                for (p, n) in arrivals.per_partition.iter().enumerate() {
+                    pool.offer_to(p, *n);
+                }
             });
         }
 
@@ -373,9 +421,14 @@ impl Scenario {
 
         // --- Report + probes.
         let suspect_events = trace.count_matching("suspect ");
+        let slo_attainment = self
+            .probes
+            .latency_slo
+            .map(|slo| pool.latency_attainment(slo.bound.as_millis() as u64));
         let report = ScenarioReport {
             name: self.name.clone(),
             seed: self.seed,
+            policy: self.elastic.policy.label(),
             offered: pool.offered(),
             done: pool.done(),
             redelivered: pool.redelivered(),
@@ -385,6 +438,9 @@ impl Scenario {
             final_workers: pool.worker_count(),
             scale_changes: trace.count_matching("scale "),
             suspect_events,
+            p50_latency_ms: pool.latency_quantile(0.5),
+            p99_latency_ms: pool.latency_quantile(0.99),
+            slo_attainment,
             trace: trace.lines(),
             violations: Vec::new(),
         };
@@ -427,6 +483,20 @@ impl Scenario {
         if self.probes.forbid_suspects && report.suspect_events > 0 {
             v.push(format!("false suspicion: {} suspect events", report.suspect_events));
         }
+        if let Some(slo) = self.probes.latency_slo {
+            let att = report.slo_attainment.unwrap_or(1.0);
+            if att < slo.min_attainment {
+                v.push(format!(
+                    "latency SLO missed: {:.4} of messages within {}ms, need {:.4} \
+                     (p50={:?}ms p99={:?}ms)",
+                    att,
+                    slo.bound.as_millis(),
+                    slo.min_attainment,
+                    report.p50_latency_ms,
+                    report.p99_latency_ms,
+                ));
+            }
+        }
         report.violations = v;
         report
     }
@@ -435,6 +505,8 @@ impl Scenario {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PolicyKind;
+    use crate::sim::workload::{ArrivalProcess, KeySkew};
 
     fn elastic() -> ElasticConfig {
         ElasticConfig {
@@ -444,6 +516,7 @@ mod tests {
             low_watermark: 5,
             check_interval: Duration::from_secs(1),
             cooldown: Duration::from_secs(5),
+            policy: PolicyKind::Threshold,
         }
     }
 
@@ -458,6 +531,7 @@ mod tests {
             per_worker_rate: 40.0,
             elastic: elastic(),
             workload,
+            model: WorkloadModel::default(),
             fault,
             probes: Probes::default(),
         }
@@ -538,5 +612,73 @@ mod tests {
         assert!(saw.rate_at(0.124) > 30.0, "rising within the first tooth");
         assert!(saw.rate_at(0.26) < 20.0, "reset at the second tooth");
         assert_eq!(WorkloadShape::Silence.rate_at(0.5), 0.0);
+    }
+
+    #[test]
+    fn diurnal_shape_is_smooth_and_periodic() {
+        let d = WorkloadShape::Diurnal { low: 20.0, high: 220.0, cycles: 2 };
+        assert!((d.rate_at(0.0) - 20.0).abs() < 1e-9, "starts at the trough");
+        assert!((d.rate_at(0.25) - 220.0).abs() < 1e-9, "mid-cycle peak");
+        assert!((d.rate_at(0.5) - 20.0).abs() < 1e-9, "back to the trough");
+        assert!((d.rate_at(0.75) - 220.0).abs() < 1e-9, "second peak");
+        // Smooth: quarter-phase sits exactly between trough and peak.
+        assert!((d.rate_at(0.125) - 120.0).abs() < 1e-9);
+        assert_eq!(d.label(), "diurnal");
+    }
+
+    #[test]
+    fn latency_slo_probe_passes_on_tracked_latencies() {
+        let mut sc =
+            base("unit-slo", WorkloadShape::Constant { rate: 300.0 }, Fault::None);
+        sc.probes.latency_slo = Some(LatencySlo {
+            bound: Duration::from_secs(20),
+            min_attainment: 0.75,
+        });
+        let r = sc.run();
+        assert!(r.ok(), "violations: {:?}", r.violations);
+        assert!(r.p50_latency_ms.is_some() && r.p99_latency_ms.is_some());
+        assert!(r.slo_attainment.unwrap() >= 0.75);
+        assert!(
+            r.p50_latency_ms.unwrap() <= r.p99_latency_ms.unwrap(),
+            "quantiles ordered"
+        );
+    }
+
+    #[test]
+    fn latency_slo_violation_is_reported() {
+        // Impossible SLO: everything must finish within one tick, but the
+        // commit lag alone is a full tick.
+        let mut sc =
+            base("unit-slo-miss", WorkloadShape::Constant { rate: 300.0 }, Fault::None);
+        sc.probes.latency_slo = Some(LatencySlo {
+            bound: Duration::from_millis(1),
+            min_attainment: 0.99,
+        });
+        let r = sc.run();
+        assert!(!r.ok(), "1ms SLO cannot hold against a 500ms tick");
+        assert!(r.violations.iter().any(|v| v.contains("latency SLO missed")), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn skewed_partitioned_model_conserves_and_fingerprints() {
+        // 180 msg/s over 6 partitions: even if the hash co-locates the
+        // hottest Zipf keys, the worst-case hot partition stays under its
+        // per-partition capacity share at full scale-out (16 × 20 / 6 ≈
+        // 53 msgs/tick vs ≈ 45 worst-case hot load).
+        let mut sc =
+            base("unit-zipf", WorkloadShape::Constant { rate: 180.0 }, Fault::None);
+        sc.model = WorkloadModel {
+            arrivals: ArrivalProcess::Poisson,
+            keys: 256,
+            skew: KeySkew::Zipf { s: 1.2 },
+            partitions: 6,
+            ..WorkloadModel::default()
+        };
+        sc.probes.min_peak_workers = Some(4);
+        let a = sc.run();
+        assert!(a.ok(), "violations: {:?}", a.violations);
+        assert_eq!(a.done, a.offered);
+        let b = sc.run();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "seeded model is deterministic");
     }
 }

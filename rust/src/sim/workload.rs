@@ -1,0 +1,445 @@
+//! Production-shaped workload models for the deterministic sim.
+//!
+//! The chaos matrix originally drove the fluid pool with closed-loop
+//! shapes over uniform keys — every tick offered exactly `rate × dt`
+//! messages. Real traffic is open-loop and skewed (Fragkoulis et al.'s
+//! stream-systems survey, PAPERS.md): arrivals are Poisson or bursty,
+//! keys follow a Zipf law that concentrates load on a few hot
+//! partitions, day-scale rates follow diurnal curves, and one pool
+//! serves a mix of tenants. This module generates all of that as a pure
+//! function of a [`Pcg32`] forked from the scenario's
+//! [`SimScheduler`](super::SimScheduler) seed, so traces stay
+//! byte-identical per seed while the *load* finally looks like the
+//! "millions of users" regime the paper's Figs. 8–11 argue about.
+//!
+//! The pieces compose:
+//!
+//! - [`ArrivalProcess`] — how a per-tick mean becomes a message count:
+//!   closed-loop fluid (the legacy behaviour), open-loop Poisson, or a
+//!   two-state MMPP whose burst state multiplies the rate;
+//! - [`KeySkew`] + [`ZipfSampler`] — how messages pick keys, and
+//!   therefore which partition queue they land on;
+//! - [`TenantSpec`] — extra tenants with their own shape, key space, and
+//!   skew, summed onto the same pool (multi-tenant topic mix);
+//! - [`WorkloadModel`] — the scenario-facing bundle, defaulting to the
+//!   legacy fluid/uniform/unpartitioned configuration so existing
+//!   scenarios reproduce their behaviour exactly;
+//! - [`WorkloadGen`] — the seeded generator: one [`WorkloadGen::tick`]
+//!   per scheduler tick returns per-partition arrival counts.
+
+use super::scenario::WorkloadShape;
+use crate::util::prng::{splitmix64, Pcg32};
+
+/// How a per-tick mean arrival count becomes an integer message count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Closed-loop fluid arrivals: exactly `rate × dt` per tick, with the
+    /// fractional remainder carried — deterministic even across seeds.
+    Fluid,
+    /// Open-loop Poisson arrivals with mean `rate × dt` per tick.
+    Poisson,
+    /// Two-state Markov-modulated Poisson process: a background Poisson
+    /// stream whose rate is multiplied by `burst` while the hidden state
+    /// is "bursting". Per tick, a quiet generator enters the burst state
+    /// with probability `p_enter` and a bursting one leaves it with
+    /// probability `p_exit`.
+    Mmpp { burst: f64, p_enter: f64, p_exit: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Fluid => "fluid",
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Mmpp { .. } => "mmpp",
+        }
+    }
+}
+
+/// How messages pick keys within a tenant's key space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeySkew {
+    Uniform,
+    /// Zipf law with exponent `s > 0`: the rank-`k` key (1-based) has
+    /// probability proportional to `1 / k^s`. `s ≈ 1` matches classic
+    /// web-object popularity; larger `s` concentrates harder.
+    Zipf { s: f64 },
+}
+
+impl KeySkew {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KeySkew::Uniform => "uniform",
+            KeySkew::Zipf { .. } => "zipf",
+        }
+    }
+}
+
+/// One extra tenant sharing the pool: its own rate curve over the same
+/// scenario window, its own key space and skew.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: &'static str,
+    pub shape: WorkloadShape,
+    pub keys: usize,
+    pub skew: KeySkew,
+}
+
+/// The scenario-facing workload model. The default reproduces the legacy
+/// matrix exactly: closed-loop fluid arrivals, uniform keys, a single
+/// partition, no extra tenants.
+#[derive(Clone, Debug)]
+pub struct WorkloadModel {
+    pub arrivals: ArrivalProcess,
+    /// Primary tenant's key-space size.
+    pub keys: usize,
+    pub skew: KeySkew,
+    /// Partition queues keys hash onto (1 = the unpartitioned fluid pool).
+    pub partitions: usize,
+    /// Extra tenants summed onto the same pool.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Default for WorkloadModel {
+    fn default() -> Self {
+        WorkloadModel {
+            arrivals: ArrivalProcess::Fluid,
+            keys: 1024,
+            skew: KeySkew::Uniform,
+            partitions: 1,
+            tenants: Vec::new(),
+        }
+    }
+}
+
+impl WorkloadModel {
+    /// Short label for scenario/bench point names, e.g. `poisson/zipf/p6`.
+    pub fn label(&self) -> String {
+        let mut s = self.arrivals.label().to_string();
+        if self.skew != KeySkew::Uniform {
+            s.push('/');
+            s.push_str(self.skew.label());
+        }
+        if self.partitions > 1 {
+            s.push_str(&format!("/p{}", self.partitions));
+        }
+        if !self.tenants.is_empty() {
+            s.push_str(&format!("/+{}t", self.tenants.len()));
+        }
+        s
+    }
+}
+
+/// Draw a Poisson-distributed count with the given mean. Knuth's product
+/// method below 32 (exact), a rounded normal approximation above (the
+/// product method's `exp(-mean)` underflows and its cost is linear in the
+/// mean). Deterministic per RNG state.
+pub fn poisson(rng: &mut Pcg32, mean: f64) -> u64 {
+    if mean <= 0.0 {
+        return 0;
+    }
+    if mean < 32.0 {
+        let l = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0f64;
+        loop {
+            p *= rng.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    (mean + mean.sqrt() * rng.normal()).round().max(0.0) as u64
+}
+
+/// Inverse-CDF sampler for the Zipf law over `keys` ranks.
+#[derive(Clone, Debug)]
+pub struct ZipfSampler {
+    /// Cumulative probabilities, one entry per rank (ascending to 1.0).
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(keys: usize, s: f64) -> Self {
+        assert!(keys > 0, "Zipf needs a non-empty key space");
+        assert!(s > 0.0, "Zipf exponent must be positive");
+        let mut cdf = Vec::with_capacity(keys);
+        let mut total = 0.0f64;
+        for k in 1..=keys {
+            total += (k as f64).powf(-s);
+            cdf.push(total);
+        }
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Sample a key rank in `[0, keys)`; rank 0 is the hottest key.
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// The law's probability for rank `k` (0-based) — what the property
+    /// tests compare empirical frequencies against.
+    pub fn theoretical_freq(&self, k: usize) -> f64 {
+        let prev = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - prev
+    }
+}
+
+/// Per-tenant generator state: the fluid carry, the MMPP hidden state,
+/// and the key sampler.
+struct TenantState {
+    shape: WorkloadShape,
+    keys: usize,
+    /// Disjoint key-space offset so tenants never collide on a key.
+    key_offset: u64,
+    zipf: Option<ZipfSampler>,
+    carry: f64,
+    bursting: bool,
+}
+
+/// Per-tick arrivals, already mapped onto partition queues.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TickArrivals {
+    pub per_partition: Vec<u64>,
+}
+
+impl TickArrivals {
+    pub fn total(&self) -> u64 {
+        self.per_partition.iter().sum()
+    }
+}
+
+/// The seeded workload generator. Construct once per scenario run from
+/// the scheduler's forked RNG; call [`WorkloadGen::tick`] once per
+/// scheduler tick.
+pub struct WorkloadGen {
+    model: WorkloadModel,
+    rng: Pcg32,
+    tenants: Vec<TenantState>,
+}
+
+impl WorkloadGen {
+    /// `primary` is the scenario's main rate curve; the model's tenants
+    /// add on top of it.
+    pub fn new(model: WorkloadModel, primary: WorkloadShape, rng: Pcg32) -> Self {
+        assert!(model.partitions > 0, "workload model needs at least one partition");
+        let mut tenants = Vec::new();
+        let mut push = |idx: usize, shape: WorkloadShape, keys: usize, skew: KeySkew| {
+            let keys = keys.max(1);
+            tenants.push(TenantState {
+                shape,
+                keys,
+                key_offset: (idx as u64) << 32,
+                zipf: match skew {
+                    KeySkew::Uniform => None,
+                    KeySkew::Zipf { s } => Some(ZipfSampler::new(keys, s)),
+                },
+                carry: 0.0,
+                bursting: false,
+            });
+        };
+        push(0, primary, model.keys, model.skew);
+        for (i, t) in model.tenants.iter().enumerate() {
+            push(i + 1, t.shape, t.keys, t.skew);
+        }
+        WorkloadGen { model, rng, tenants }
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.model.partitions
+    }
+
+    /// Generate one tick of arrivals. `frac` is elapsed scenario time as a
+    /// fraction of the workload window, `tick_secs` the tick length.
+    pub fn tick(&mut self, frac: f64, tick_secs: f64) -> TickArrivals {
+        let mut per_partition = vec![0u64; self.model.partitions];
+        for t in &mut self.tenants {
+            let mut mean = t.shape.rate_at(frac) * tick_secs;
+            let n = match self.model.arrivals {
+                ArrivalProcess::Fluid => {
+                    let amount = mean + t.carry;
+                    let n = amount.floor() as u64;
+                    t.carry = amount - n as f64;
+                    n
+                }
+                ArrivalProcess::Poisson => poisson(&mut self.rng, mean),
+                ArrivalProcess::Mmpp { burst, p_enter, p_exit } => {
+                    // Advance the hidden state first so a tick's draw uses
+                    // the state it is in, then draw from the modulated rate.
+                    if t.bursting {
+                        if self.rng.chance(p_exit) {
+                            t.bursting = false;
+                        }
+                    } else if self.rng.chance(p_enter) {
+                        t.bursting = true;
+                    }
+                    if t.bursting {
+                        mean *= burst.max(1.0);
+                    }
+                    poisson(&mut self.rng, mean)
+                }
+            };
+            if n == 0 {
+                continue;
+            }
+            if self.model.partitions == 1 {
+                // Keys are irrelevant to a single queue — skip sampling so
+                // the legacy fluid configuration costs what it used to.
+                per_partition[0] += n;
+                continue;
+            }
+            for _ in 0..n {
+                let key = match &t.zipf {
+                    Some(z) => z.sample(&mut self.rng),
+                    None => self.rng.gen_range(0, t.keys),
+                };
+                let mut h = t.key_offset | key as u64;
+                let part = (splitmix64(&mut h) % self.model.partitions as u64) as usize;
+                per_partition[part] += 1;
+            }
+        }
+        TickArrivals { per_partition }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen_with(model: WorkloadModel, rate: f64, seed: u64) -> WorkloadGen {
+        WorkloadGen::new(model, WorkloadShape::Constant { rate }, Pcg32::new(seed))
+    }
+
+    #[test]
+    fn fluid_matches_the_legacy_carry_exactly() {
+        // 3.7 msgs/tick: the carry must reproduce 3,4,3,4,... with no drift.
+        let mut g = gen_with(WorkloadModel::default(), 7.4, 1);
+        let counts: Vec<u64> = (0..10).map(|_| g.tick(0.5, 0.5).total()).collect();
+        assert_eq!(counts.iter().sum::<u64>(), 37, "10 ticks × 3.7 = 37 exactly");
+        assert!(counts.iter().all(|&c| c == 3 || c == 4), "{counts:?}");
+    }
+
+    #[test]
+    fn poisson_mean_tracks_rate() {
+        let mut rng = Pcg32::new(42);
+        let n = 4000;
+        let mean = 12.0;
+        let total: u64 = (0..n).map(|_| poisson(&mut rng, mean)).sum();
+        let empirical = total as f64 / n as f64;
+        // sd of the sample mean = sqrt(mean/n) ≈ 0.055; allow 5σ.
+        assert!((empirical - mean).abs() < 0.3, "empirical mean {empirical}");
+    }
+
+    #[test]
+    fn poisson_large_mean_uses_normal_branch_sanely() {
+        let mut rng = Pcg32::new(7);
+        let n = 2000;
+        let mean = 400.0;
+        let total: u64 = (0..n).map(|_| poisson(&mut rng, mean)).sum();
+        let empirical = total as f64 / n as f64;
+        assert!((empirical - mean).abs() < 3.0, "empirical mean {empirical}");
+    }
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_normalised() {
+        let z = ZipfSampler::new(100, 1.1);
+        assert!((z.cdf.last().unwrap() - 1.0).abs() < 1e-12);
+        assert!(z.cdf.windows(2).all(|w| w[1] > w[0]));
+        assert!(z.theoretical_freq(0) > z.theoretical_freq(10));
+        let total: f64 = (0..100).map(|k| z.theoretical_freq(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zipf_sampling_prefers_low_ranks() {
+        let z = ZipfSampler::new(50, 1.2);
+        let mut rng = Pcg32::new(9);
+        let mut counts = [0u64; 50];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10], "{} vs {}", counts[0], counts[10]);
+        assert!(counts[0] > counts[49] * 5);
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        let dispersion = |arrivals: ArrivalProcess, seed: u64| {
+            let model = WorkloadModel { arrivals, ..WorkloadModel::default() };
+            let mut g = gen_with(model, 40.0, seed);
+            let xs: Vec<f64> = (0..2000).map(|_| g.tick(0.5, 0.5).total() as f64).collect();
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+            var / mean
+        };
+        let p = dispersion(ArrivalProcess::Poisson, 3);
+        let m = dispersion(
+            ArrivalProcess::Mmpp { burst: 6.0, p_enter: 0.05, p_exit: 0.2 },
+            3,
+        );
+        assert!(p < 1.5, "Poisson index of dispersion ≈ 1, got {p}");
+        assert!(m > 2.0, "MMPP must be overdispersed, got {m}");
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let model = WorkloadModel {
+            arrivals: ArrivalProcess::Mmpp { burst: 4.0, p_enter: 0.1, p_exit: 0.3 },
+            skew: KeySkew::Zipf { s: 1.1 },
+            partitions: 6,
+            ..WorkloadModel::default()
+        };
+        let run = || {
+            let mut g = gen_with(model.clone(), 120.0, 77);
+            (0..200).map(|i| g.tick(i as f64 / 200.0, 0.5)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "byte-identical arrival streams per seed");
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_on_a_hot_partition() {
+        let model = WorkloadModel {
+            arrivals: ArrivalProcess::Fluid,
+            keys: 64,
+            skew: KeySkew::Zipf { s: 1.4 },
+            partitions: 8,
+            ..WorkloadModel::default()
+        };
+        let mut g = gen_with(model, 200.0, 5);
+        let mut per = vec![0u64; 8];
+        for i in 0..400 {
+            for (p, n) in g.tick(i as f64 / 400.0, 0.5).per_partition.iter().enumerate() {
+                per[p] += n;
+            }
+        }
+        let total: u64 = per.iter().sum();
+        let hottest = *per.iter().max().unwrap();
+        assert!(
+            hottest as f64 > total as f64 / 8.0 * 2.0,
+            "hot partition must take ≥ 2× its fair share: {per:?}"
+        );
+    }
+
+    #[test]
+    fn tenants_add_load_on_disjoint_keys() {
+        let model = WorkloadModel {
+            partitions: 4,
+            tenants: vec![TenantSpec {
+                name: "batch",
+                shape: WorkloadShape::Constant { rate: 100.0 },
+                keys: 16,
+                skew: KeySkew::Uniform,
+            }],
+            ..WorkloadModel::default()
+        };
+        let mut g = gen_with(model, 100.0, 11);
+        let total: u64 = (0..100).map(|_| g.tick(0.5, 0.5).total()).sum();
+        // Two 100 msg/s tenants × 50 s of ticks = 10_000 fluid messages.
+        assert_eq!(total, 10_000);
+    }
+}

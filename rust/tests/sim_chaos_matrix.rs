@@ -4,21 +4,31 @@
 //! tens of minutes of simulated behaviour and completes in a few seconds
 //! of wall time — this is the repo's cheapest full elasticity/resilience
 //! regression gate.
+//!
+//! The policy-race matrix gets the same treatment: every elastic policy
+//! (threshold / PID / predictive) against every workload shape, each run
+//! twice with identical fingerprints demanded, plus a cross-policy sanity
+//! pass (all policies process the same offered load, none violates a
+//! probe). `RL_CHAOS_FP` dumps both matrices' fingerprints for the CI
+//! two-process diff.
 
-use reactive_liquid::sim::chaos::chaos_matrix;
-use reactive_liquid::sim::{Fault, Probes, Scenario, WorkloadShape};
-use std::collections::BTreeSet;
+use reactive_liquid::config::PolicyKind;
+use reactive_liquid::sim::chaos::{chaos_matrix, policy_race_matrix};
+use reactive_liquid::sim::{Fault, Probes, Scenario, WorkloadModel, WorkloadShape};
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
 #[test]
 fn matrix_is_broad_enough() {
     let m = chaos_matrix();
-    assert!(m.len() >= 12, "matrix has {} scenarios", m.len());
-    let combos: BTreeSet<(String, String)> =
-        m.iter().map(|s| (s.workload.label().to_string(), s.fault.label())).collect();
+    assert!(m.len() >= 17, "matrix has {} scenarios", m.len());
+    let combos: BTreeSet<(String, String, String)> = m
+        .iter()
+        .map(|s| (s.workload.label().to_string(), s.model.label(), s.fault.label()))
+        .collect();
     assert!(
-        combos.len() >= 10,
-        "need ≥ 10 distinct workload × fault combos, got {}: {combos:?}",
+        combos.len() >= 14,
+        "need ≥ 14 distinct workload × model × fault combos, got {}: {combos:?}",
         combos.len()
     );
     let names: BTreeSet<&str> = m.iter().map(|s| s.name.as_str()).collect();
@@ -30,6 +40,22 @@ fn matrix_is_broad_enough() {
             "no scenario exercises fault class '{class}'"
         );
     }
+    // Every arrival process and the skew/multi-tenant/partitioned models
+    // appear somewhere too.
+    for model in ["poisson", "mmpp", "zipf", "/p", "/+"] {
+        assert!(
+            m.iter().any(|s| s.model.label().contains(model)),
+            "no scenario exercises workload model '{model}'"
+        );
+    }
+    assert!(
+        m.iter().any(|s| matches!(s.workload, WorkloadShape::Diurnal { .. })),
+        "no diurnal scenario"
+    );
+    assert!(
+        m.iter().any(|s| s.probes.latency_slo.is_some()),
+        "no scenario carries a latency SLO probe"
+    );
 }
 
 #[test]
@@ -70,15 +96,61 @@ fn healthy_scenarios_process_everything_exactly() {
 }
 
 #[test]
+fn policy_race_is_broad_and_passes_deterministically() {
+    let m = policy_race_matrix();
+    // Full cross product: every policy races every shape.
+    let mut shapes_per_policy: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for sc in &m {
+        shapes_per_policy
+            .entry(sc.elastic.policy.label())
+            .or_default()
+            .insert(sc.workload.label());
+    }
+    assert_eq!(shapes_per_policy.len(), PolicyKind::ALL.len(), "{shapes_per_policy:?}");
+    let shape_sets: BTreeSet<_> = shapes_per_policy.values().collect();
+    assert_eq!(shape_sets.len(), 1, "every policy must race the same shapes");
+    assert!(shapes_per_policy.values().next().unwrap().len() >= 5);
+
+    // Every race cell: runs twice identically, passes its probes
+    // (including the latency SLO), conserves messages, drains fully.
+    let mut offered_per_shape: BTreeMap<&str, BTreeSet<u64>> = BTreeMap::new();
+    for sc in &m {
+        let a = sc.run();
+        let b = sc.run();
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "race cell '{}' is nondeterministic",
+            sc.name
+        );
+        assert!(
+            a.violations.is_empty(),
+            "race cell '{}' violated probes: {:?}",
+            sc.name,
+            a.violations
+        );
+        assert_eq!(a.done, a.offered, "race cell '{}' must drain", sc.name);
+        assert!(a.slo_attainment.is_some(), "race cell '{}' must measure its SLO", sc.name);
+        offered_per_shape.entry(sc.workload.label()).or_default().insert(a.offered);
+    }
+    // Same seed + same (fluid) workload shape ⇒ every policy faced the
+    // exact same offered load: the race compares policies, not dice.
+    for (shape, offered) in offered_per_shape {
+        assert_eq!(offered.len(), 1, "shape '{shape}' offered different loads: {offered:?}");
+    }
+}
+
+#[test]
 fn dump_fingerprints_for_cross_process_diff() {
     // When RL_CHAOS_FP names a path, write every scenario's fingerprint to
-    // it. CI runs this suite in two separate processes and diffs the two
-    // dumps — that is what catches *process-level* nondeterminism (e.g.
-    // hash-order leaking into traces), which the in-process double-run
-    // above cannot see. A no-op without the env var.
+    // it — the chaos matrix and the policy race. CI runs this suite in two
+    // separate processes and diffs the two dumps — that is what catches
+    // *process-level* nondeterminism (e.g. hash-order leaking into
+    // traces), which the in-process double-run above cannot see. A no-op
+    // without the env var.
     let Ok(path) = std::env::var("RL_CHAOS_FP") else { return };
     let mut out = String::new();
-    for sc in chaos_matrix() {
+    for sc in chaos_matrix().into_iter().chain(policy_race_matrix()) {
         out.push_str(&sc.run().fingerprint());
         out.push('\n');
     }
@@ -104,8 +176,10 @@ fn seeds_steer_the_dice_without_breaking_invariants() {
             low_watermark: 5,
             check_interval: Duration::from_secs(1),
             cooldown: Duration::from_secs(5),
+            policy: PolicyKind::Threshold,
         },
         workload: WorkloadShape::Constant { rate: 250.0 },
+        model: WorkloadModel::default(),
         fault: Fault::EpochFailures {
             prob: 0.5,
             epoch: Duration::from_secs(60),

@@ -1,0 +1,210 @@
+//! Statistical property suite for the workload generators
+//! (`sim/workload.rs`): the generated load must actually follow the laws
+//! it claims — Zipf frequencies near the theoretical mass function,
+//! Poisson counts whose (inter)arrival means sit inside confidence
+//! bounds, diurnal curves that are truly periodic — and every stream
+//! must be a pure function of its seed.
+//!
+//! Tolerances are set at ≥ 6 standard deviations of the relevant
+//! estimator, so the suite stays safe at the nightly
+//! `RL_PROPCHECK_CASES=2000` depth (per-case failure odds ≈ 1e-9; the
+//! harness seeds are fixed anyway, so a pass is reproducible).
+
+use reactive_liquid::prop_assert;
+use reactive_liquid::sim::workload::{
+    poisson, ArrivalProcess, KeySkew, TenantSpec, WorkloadGen, WorkloadModel, ZipfSampler,
+};
+use reactive_liquid::sim::WorkloadShape;
+use reactive_liquid::util::prng::Pcg32;
+use reactive_liquid::util::propcheck::check;
+
+#[test]
+fn zipf_empirical_tracks_theoretical_law() {
+    check("zipf-law", 40, |g| {
+        let keys = g.usize(2, 65);
+        let s = 0.5 + 1.5 * g.f64();
+        let z = ZipfSampler::new(keys, s);
+        let n = 20_000u64;
+        let mut counts = vec![0u64; keys];
+        for _ in 0..n {
+            counts[z.sample(g.rng())] += 1;
+        }
+        // Head ranks: each within 7σ of its theoretical frequency
+        // (σ = sqrt(p(1-p)/n) ≤ 0.0035 at n = 20k).
+        for k in 0..keys.min(5) {
+            let emp = counts[k] as f64 / n as f64;
+            let theo = z.theoretical_freq(k);
+            prop_assert!(
+                (emp - theo).abs() < 0.025,
+                "rank {k}: empirical {emp:.4} vs theoretical {theo:.4} (keys={keys}, s={s:.2})"
+            );
+        }
+        // Whole distribution: total-variation distance far under its
+        // concentration bound (typical TV ≈ 0.02 here; McDiarmid puts
+        // exceeding 0.08 at ~exp(-100)).
+        let tv: f64 = (0..keys)
+            .map(|k| (counts[k] as f64 / n as f64 - z.theoretical_freq(k)).abs())
+            .sum::<f64>()
+            / 2.0;
+        prop_assert!(tv < 0.08, "TV distance {tv:.4} (keys={keys}, s={s:.2})");
+        Ok(())
+    });
+}
+
+#[test]
+fn poisson_count_mean_within_confidence_bounds() {
+    check("poisson-mean", 40, |g| {
+        // Means straddle the exact-Knuth (< 32) and normal-approx (≥ 32)
+        // branches.
+        let mean = 1.0 + 49.0 * g.f64();
+        let n = 3000u64;
+        let total: u64 = (0..n).map(|_| poisson(g.rng(), mean)).sum();
+        let emp = total as f64 / n as f64;
+        let sigma = (mean / n as f64).sqrt();
+        prop_assert!(
+            (emp - mean).abs() < 7.0 * sigma + 0.1,
+            "mean {mean:.2}: empirical {emp:.3}, allowed ±{:.3}",
+            7.0 * sigma + 0.1
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn poisson_interarrival_mean_matches_rate() {
+    check("poisson-interarrival", 30, |g| {
+        // Open-loop arrivals at rate λ: over N ticks of dt seconds the
+        // mean interarrival time (elapsed / arrivals) must approach 1/λ.
+        let rate = 20.0 + 180.0 * g.f64();
+        let dt = 0.5;
+        let ticks = 2000usize;
+        let model =
+            WorkloadModel { arrivals: ArrivalProcess::Poisson, ..WorkloadModel::default() };
+        let mut gen = WorkloadGen::new(
+            model,
+            WorkloadShape::Constant { rate },
+            Pcg32::new(g.u64()),
+        );
+        let total: u64 = (0..ticks).map(|_| gen.tick(0.5, dt).total()).sum();
+        prop_assert!(total > 0, "no arrivals at rate {rate:.1}");
+        let interarrival = ticks as f64 * dt / total as f64;
+        let relative = (interarrival * rate - 1.0).abs();
+        // σ of total/(N·λ·dt) = 1/sqrt(N·λ·dt) ≤ 1/sqrt(20000) ≈ 0.007.
+        prop_assert!(
+            relative < 0.06,
+            "rate {rate:.1}: interarrival {interarrival:.5}s vs 1/λ {:.5}s ({relative:.4} rel)",
+            1.0 / rate
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn diurnal_curve_is_periodic_and_bounded() {
+    check("diurnal-periodicity", 60, |g| {
+        let low = 10.0 + 90.0 * g.f64();
+        let high = low + 10.0 + 400.0 * g.f64();
+        let cycles = g.usize(1, 7) as u32;
+        let d = WorkloadShape::Diurnal { low, high, cycles };
+        let period = 1.0 / cycles as f64;
+        // Troughs at every period boundary, peaks mid-period.
+        for c in 0..cycles as usize {
+            let start = c as f64 * period;
+            prop_assert!(
+                (d.rate_at(start) - low).abs() < 1e-6,
+                "trough at cycle {c}: {}",
+                d.rate_at(start)
+            );
+            prop_assert!(
+                (d.rate_at(start + period / 2.0) - high).abs() < 1e-6,
+                "peak at cycle {c}: {}",
+                d.rate_at(start + period / 2.0)
+            );
+        }
+        // Shifting by one full period is the identity; the curve never
+        // leaves [low, high].
+        for _ in 0..50 {
+            let f = g.f64() * (1.0 - period);
+            let a = d.rate_at(f);
+            let b = d.rate_at(f + period);
+            prop_assert!((a - b).abs() < 1e-6, "not periodic at {f:.4}: {a} vs {b}");
+            prop_assert!(
+                (low - 1e-9..=high + 1e-9).contains(&a),
+                "rate {a} outside [{low}, {high}]"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_seed_yields_byte_identical_streams() {
+    check("seed-determinism", 40, |g| {
+        // A randomized model — arrival process, skew, partitions, tenant
+        // count — replayed from the same seed must reproduce the exact
+        // per-partition arrival sequence.
+        let arrivals = *g.pick(&[
+            ArrivalProcess::Fluid,
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Mmpp { burst: 5.0, p_enter: 0.08, p_exit: 0.25 },
+        ]);
+        let skew = *g.pick(&[KeySkew::Uniform, KeySkew::Zipf { s: 1.1 }]);
+        let partitions = g.usize(1, 9);
+        let tenants = if g.bool() {
+            vec![TenantSpec {
+                name: "extra",
+                shape: WorkloadShape::Sawtooth { low: 0.0, high: 120.0, cycles: 3 },
+                keys: 32,
+                skew,
+            }]
+        } else {
+            Vec::new()
+        };
+        let model = WorkloadModel { arrivals, keys: 128, skew, partitions, tenants };
+        let seed = g.u64();
+        let rate = 30.0 + 300.0 * g.f64();
+        let run = || {
+            let mut gen = WorkloadGen::new(
+                model.clone(),
+                WorkloadShape::Constant { rate },
+                Pcg32::new(seed),
+            );
+            (0..300).map(|i| gen.tick(i as f64 / 300.0, 0.5)).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        prop_assert!(a == b, "same seed produced different streams ({})", model.label());
+        let total: u64 = a.iter().map(|t| t.total()).sum();
+        prop_assert!(total > 0, "stream generated nothing at rate {rate:.1}");
+        Ok(())
+    });
+}
+
+#[test]
+fn fluid_arrivals_are_seed_independent_and_exact() {
+    check("fluid-exactness", 40, |g| {
+        // The closed-loop fluid process must not consume randomness at
+        // all: two *different* seeds produce identical streams, and the
+        // total equals rate × time exactly (integer part).
+        let rate = 10.0 + 200.0 * g.f64();
+        let ticks = g.usize(50, 400);
+        let run = |seed: u64| {
+            let mut gen = WorkloadGen::new(
+                WorkloadModel::default(),
+                WorkloadShape::Constant { rate },
+                Pcg32::new(seed),
+            );
+            (0..ticks).map(|_| gen.tick(0.5, 0.5)).collect::<Vec<_>>()
+        };
+        let a = run(g.u64());
+        let b = run(g.u64());
+        prop_assert!(a == b, "fluid stream depends on the seed");
+        let total: u64 = a.iter().map(|t| t.total()).sum();
+        let expected = (rate * 0.5 * ticks as f64).floor() as u64;
+        prop_assert!(
+            total == expected,
+            "fluid total {total} != floor(rate × time) {expected}"
+        );
+        Ok(())
+    });
+}
